@@ -1,0 +1,202 @@
+//! END-TO-END driver: a multi-commit continuous-benchmarking campaign on
+//! a real (small) workload, proving all layers compose —
+//!
+//!   vcs commits → CI trigger (incl. proxy-repo flow) → Slurm job matrix
+//!   over the simulated Testcluster → real benchmark execution (FE2TI
+//!   nested Newton with real sparse solvers; waLBerla LBM — including the
+//!   **JAX/Pallas AOT kernel executed through PJRT** on this host) →
+//!   likwid-style parsing → TSDB + Kadi-style records → dashboards →
+//!   automatic regression detection.
+//!
+//! The campaign plants two code events the paper describes:
+//!   * commit 3 on walberla introduces a kernel regression (-15% MLUP/s)
+//!     — CB must flag it (paper §3/§7);
+//!   * commit 2 on fe2ti links the gcc build against BLIS — CB must show
+//!     the UMFPACK TTS drop (paper Fig. 10b).
+//!
+//! Run: `cargo run --release --example e2e_cb_run`
+//! Results are recorded in EXPERIMENTS.md §End-to-end.
+
+use cbench::apps::walberla::collision::CollisionOp;
+use cbench::apps::walberla::grid::Block;
+use cbench::apps::walberla::lattice::d3q19;
+use cbench::coordinator::{
+    detect_regressions, fe2ti_pipeline::fe2ti_pipeline_jobs,
+    walberla_pipeline::walberla_pipeline_jobs, CbSystem,
+};
+use cbench::dashboard::{fe2ti_dashboard, walberla_dashboard};
+use cbench::tsdb::{Aggregate, Query};
+use cbench::vcs::{ProxyRepo, Repository};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let t_start = Instant::now();
+    let mut cb = CbSystem::new();
+
+    // ------------------------------------------------------------------
+    // Layer check first: the AOT Pallas kernel through PJRT vs the native
+    // rust kernel on the same lattice — the lbmpy-analogue code path.
+    // ------------------------------------------------------------------
+    println!("=== PJRT artifact validation (L1/L2 -> L3 bridge) ===");
+    match cbench::runtime::Engine::open("artifacts") {
+        Ok(mut engine) => {
+            let n = 16usize;
+            let mut block = Block::new(d3q19(), n, n, n);
+            block.init_equilibrium(1.0, [0.02, -0.01, 0.005]);
+            // native step
+            let mut native = Block::new(d3q19(), n, n, n);
+            native.init_equilibrium(1.0, [0.02, -0.01, 0.005]);
+            native.step(CollisionOp::Srt, 0.6);
+            // artifact step (collide+stream fused in the HLO)
+            let f = block.to_artifact_layout();
+            let t0 = Instant::now();
+            let out = engine.lbm_step("lbm_d3q19_srt_16", &f)?;
+            let dt = t0.elapsed().as_secs_f64();
+            block.from_artifact_layout(&out);
+            // compare macroscopic fields
+            let mut max_du = 0.0f64;
+            for x in 1..=n {
+                for y in 1..=n {
+                    for z in 1..=n {
+                        let (r1, u1) = native.cell_moments(x, y, z);
+                        let (r2, u2) = block.cell_moments(x, y, z);
+                        max_du = max_du.max((r1 - r2).abs());
+                        for i in 0..3 {
+                            max_du = max_du.max((u1[i] - u2[i]).abs());
+                        }
+                    }
+                }
+            }
+            let mlups = (n * n * n) as f64 / dt / 1e6;
+            println!(
+                "pallas-artifact vs native rust kernel: max moment deviation {max_du:.2e} \
+                 (f32 vs f64 tolerance), PJRT step {:.2} ms = {mlups:.2} MLUP/s host-measured",
+                dt * 1e3
+            );
+            anyhow::ensure!(max_du < 1e-4, "artifact and native kernels disagree");
+        }
+        Err(e) => println!("artifacts not built ({e}); run `make artifacts` — continuing"),
+    }
+
+    // ------------------------------------------------------------------
+    // FE2TI campaign: 2 commits; the second is the BLAS fix.
+    // ------------------------------------------------------------------
+    println!("\n=== FE2TI campaign (direct-push pipeline) ===");
+    let mut fe2ti = Repository::new("fe2ti");
+    let commits = [
+        ("baseline solvers", "# defaults\n"),
+        ("link gcc build against BLIS (fixes UMFPACK)", "umfpack_blas = blis\n"),
+    ];
+    for (i, (msg, cfg)) in commits.iter().enumerate() {
+        let ev = fe2ti.commit_change("master", "alice", msg, i as f64 * 3600.0, "benchmark.cfg", cfg);
+        let jobs = fe2ti_pipeline_jobs(&fe2ti, &ev.commit_id);
+        let r = cb.execute_pipeline(&ev, false, jobs, "fe2ti")?;
+        println!(
+            "commit {} ({msg}): {} jobs, {} points, cluster time {}",
+            &ev.commit_id[..8],
+            r.jobs_total,
+            r.points_uploaded,
+            cbench::util::fmt_secs(r.duration)
+        );
+    }
+    // the Fig. 10b signal: UMFPACK/gcc TTS must have dropped sharply
+    let improvements: Vec<_> = Query::new("fe2ti", "tts")
+        .where_tag("solver", "umfpack")
+        .where_tag("compiler", "gcc")
+        .where_tag("node", "skylakesp2")
+        .where_tag("parallelization", "mpi")
+        .where_tag("case", "fe2ti216")
+        .run(&cb.db);
+    let s = &improvements[0];
+    let (before, after) = (s.points[0].1, s.points[s.points.len() - 1].1);
+    println!(
+        "UMFPACK/gcc TTS on skylakesp2: {before:.4} s -> {after:.4} s ({:.1}x speedup from the BLAS fix)",
+        before / after
+    );
+    anyhow::ensure!(after < 0.5 * before, "BLAS fix must show in the TSDB");
+
+    // ------------------------------------------------------------------
+    // waLBerla campaign via the proxy repository: baseline, regression,
+    // fix — CB must catch the regression.
+    // ------------------------------------------------------------------
+    println!("\n=== waLBerla campaign (proxy-repo trigger) ===");
+    let mut upstream = Repository::new("walberla");
+    let mut proxy = ProxyRepo::new("walberla", "walberla-cb-proxy", &["carol"]);
+    let commits = [
+        ("baseline kernels", "# defaults\n"),
+        ("refactor kernel generation (hides a regression)", "lbm_efficiency_penalty = 0.15\n"),
+        ("fix kernel generation regression", "lbm_efficiency_penalty = 0.0\n"),
+    ];
+    for (i, (msg, cfg)) in commits.iter().enumerate() {
+        let up_ev = upstream.commit_change("master", "dev", msg, i as f64 * 3600.0, "benchmark.cfg", cfg);
+        let ev = proxy
+            .trigger(&upstream, &up_ev.commit_id, "master", "carol")
+            .map_err(|e| anyhow::anyhow!(e))?;
+        let jobs = walberla_pipeline_jobs(&proxy.proxy, &ev.commit_id);
+        let r = cb.execute_pipeline(&ev, true, jobs, "lbm")?;
+        println!(
+            "commit {} ({msg}): {} jobs, {} points",
+            &ev.commit_id[..8],
+            r.jobs_total,
+            r.points_uploaded
+        );
+        // CB's core promise: immediate feedback after every pipeline
+        let regs = detect_regressions(&cb.db, "lbm", "mlups", &["node", "collision_op"], 0.10, true);
+        if regs.is_empty() {
+            println!("  regression check: clean");
+        } else {
+            println!("  regression check: {} series degraded, e.g.:", regs.len());
+            for r in regs.iter().take(3) {
+                println!(
+                    "    {}: {:.0} -> {:.0} MLUP/s ({:+.1}%)",
+                    r.series,
+                    r.before,
+                    r.after,
+                    100.0 * r.rel_change
+                );
+            }
+            anyhow::ensure!(i == 1, "regression flagged on a clean commit!");
+        }
+    }
+    // after the fix, the check must be clean again and throughput restored
+    let regs = detect_regressions(&cb.db, "lbm", "mlups", &["node", "collision_op"], 0.10, true);
+    anyhow::ensure!(regs.is_empty(), "fix commit should clear the regression");
+
+    // ------------------------------------------------------------------
+    // Headline numbers + dashboards.
+    // ------------------------------------------------------------------
+    println!("\n=== campaign summary ===");
+    println!(
+        "pipelines executed: {}   total jobs: {}   TSDB points: {}   records: {}   links: {}",
+        cb.executed.len(),
+        cb.executed.iter().map(|r| r.jobs_total).sum::<usize>(),
+        cb.db.len(),
+        cb.store.n_records(),
+        cb.store.n_links(),
+    );
+    let busy: f64 = cb.executed.iter().map(|r| r.duration).sum();
+    println!(
+        "simulated cluster time: {}   real host time: {}",
+        cbench::util::fmt_secs(busy),
+        cbench::util::fmt_secs(t_start.elapsed().as_secs_f64())
+    );
+    println!("\nbest LBM throughput per node (last pipeline):");
+    for (label, v) in Query::new("lbm", "mlups")
+        .where_tag("collision_op", "srt")
+        .group_by(&["node"])
+        .run_agg(&cb.db, Aggregate::Last)
+    {
+        println!("  {label:<18} {v:>9.0} MLUP/s");
+    }
+    let mut fdash = fe2ti_dashboard();
+    fdash.select("node", &["icx36"]);
+    fdash.select("parallelization", &["mpi"]);
+    println!("\n{}", fdash.render_text(&cb.db));
+    let mut wdash = walberla_dashboard();
+    wdash.select("node", &["icx36"]);
+    println!("{}", wdash.render_text(&cb.db));
+
+    cb.db.save(std::path::Path::new("e2e_tsdb.lp"))?;
+    println!("TSDB saved to e2e_tsdb.lp — rerun dashboards with `cbench dashboard --tsdb e2e_tsdb.lp`");
+    Ok(())
+}

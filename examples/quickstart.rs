@@ -1,0 +1,60 @@
+//! Quickstart: push one commit through the full CB pipeline and look at
+//! the results — the 60-second tour of the system.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use cbench::coordinator::{walberla_pipeline::walberla_pipeline_jobs, CbSystem};
+use cbench::dashboard::walberla_dashboard;
+use cbench::tsdb::{Aggregate, Query};
+use cbench::vcs::Repository;
+
+fn main() -> anyhow::Result<()> {
+    // 1. a repository with one commit (the thing CB watches)
+    let mut repo = Repository::new("walberla");
+    let event = repo.commit_change(
+        "master",
+        "you",
+        "quickstart: initial kernels",
+        0.0,
+        "benchmark.cfg",
+        "# no special flags\n",
+    );
+    println!("committed {} to {}/master", &event.commit_id[..8], event.repo);
+
+    // 2. the CB installation: simulated Testcluster + scheduler + TSDB +
+    //    record store + dashboards
+    let mut cb = CbSystem::new();
+
+    // 3. the push triggers the pipeline: job matrix over every node ×
+    //    collision operator, submitted via the Slurm-like scheduler
+    let jobs = walberla_pipeline_jobs(&repo, &event.commit_id);
+    println!("pipeline generated {} benchmark jobs", jobs.len());
+    let report = cb.execute_pipeline(&event, true, jobs, "lbm")?;
+    println!(
+        "pipeline #{}: {}/{} jobs completed, {} metric points uploaded, {} records archived, \
+         cluster busy for {}",
+        report.pipeline_id,
+        report.jobs_completed,
+        report.jobs_total,
+        report.points_uploaded,
+        report.records_created,
+        cbench::util::fmt_secs(report.duration),
+    );
+
+    // 4. query like a developer: who is fastest per node?
+    println!("\nlatest MLUP/s per node (srt):");
+    for (label, v) in Query::new("lbm", "mlups")
+        .where_tag("collision_op", "srt")
+        .group_by(&["node"])
+        .run_agg(&cb.db, Aggregate::Last)
+    {
+        println!("  {label:<16} {v:>9.0}");
+    }
+
+    // 5. the dashboard view (with the collision-operator filter)
+    let mut dash = walberla_dashboard();
+    dash.select("collision_op", &["srt", "trt"]);
+    dash.select("node", &["icx36", "genoa2"]);
+    println!("\n{}", dash.render_text(&cb.db));
+    Ok(())
+}

@@ -1,0 +1,166 @@
+"""AOT lowering: JAX graphs -> HLO *text* artifacts for the rust runtime.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the interchange
+format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (from python/).
+Writes one ``<name>.hlo.txt`` per variant plus ``manifest.json`` describing
+shapes/dtypes/constants so the rust side can build input literals without
+re-deriving them.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.lbm_pallas import flops_per_cell, vmem_bytes_per_block
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lbm_variants():
+    """(name, fn, example-arg shapes, metadata) for each LBM artifact.
+
+    Three lowering families per operator (§Perf L2):
+    * ``lbm_d3q19_<op>_<n>`` — the Pallas kernel (interpret=True), the
+      TPU-structured reference path;
+    * ``lbm_d3q19_<op>_ref_<n>`` — the same math lowered from pure jnp,
+      which XLA:CPU fuses better (preferred CPU execution variant);
+    * ``lbm_d3q19_srt_x4_<n>`` — four steps fused in one executable to
+      amortize PJRT dispatch.
+    """
+    out = []
+    for operator in ("srt", "trt"):
+        for size in (8, 16, 32):
+            tile_z = min(8, size)
+            name = f"lbm_d3q19_{operator}_{size}"
+            fn = functools.partial(
+                model.lbm_step, operator=operator, tau=0.6, steps=1, tile_z=tile_z
+            )
+            spec = jax.ShapeDtypeStruct((19, size, size, size), jnp.float32)
+            meta = {
+                "kind": "lbm_step",
+                "operator": operator,
+                "shape": [19, size, size, size],
+                "dtype": "f32",
+                "tau": 0.6,
+                "tile_z": tile_z,
+                "flops_per_cell": flops_per_cell(operator),
+                "vmem_bytes_per_block": vmem_bytes_per_block(size, size, tile_z),
+                "cells": size**3,
+            }
+            out.append((name, fn, (spec,), meta))
+    # pure-jnp lowering (CPU-preferred) and fused-steps variants
+    for size in (16, 32):
+        spec = jax.ShapeDtypeStruct((19, size, size, size), jnp.float32)
+        base_meta = {
+            "kind": "lbm_step",
+            "operator": "srt",
+            "shape": [19, size, size, size],
+            "dtype": "f32",
+            "tau": 0.6,
+            "flops_per_cell": flops_per_cell("srt"),
+            "cells": size**3,
+        }
+        out.append(
+            (
+                f"lbm_d3q19_srt_ref_{size}",
+                functools.partial(model.lbm_step_ref_variant, operator="srt", tau=0.6),
+                (spec,),
+                dict(base_meta, lowering="jnp"),
+            )
+        )
+        out.append(
+            (
+                f"lbm_d3q19_srt_x4_{size}",
+                functools.partial(
+                    model.lbm_step_ref_variant, operator="srt", tau=0.6, steps=4
+                ),
+                (spec,),
+                dict(base_meta, lowering="jnp", steps=4),
+            )
+        )
+    return out
+
+
+def rve_variants():
+    out = []
+    for n, iters in ((8, 24), (12, 32), (16, 48)):
+        name = f"rve_cg_{n}_{iters}"
+        fn = functools.partial(model.rve_cg, iters=iters)
+        b = jax.ShapeDtypeStruct((n, n, n), jnp.float32)
+        kappa = jax.ShapeDtypeStruct((n, n, n), jnp.float32)
+        meta = {
+            "kind": "rve_cg",
+            "shape": [n, n, n],
+            "dtype": "f32",
+            "iters": iters,
+            "dofs": n**3,
+        }
+        out.append((name, fn, (b, kappa), meta))
+    return out
+
+
+def macroscopic_variants():
+    out = []
+    for size in (16,):
+        name = f"lbm_macroscopic_{size}"
+        spec = jax.ShapeDtypeStruct((19, size, size, size), jnp.float32)
+        meta = {
+            "kind": "lbm_macroscopic",
+            "shape": [19, size, size, size],
+            "dtype": "f32",
+        }
+        out.append((name, model.lbm_macroscopic, (spec,), meta))
+    return out
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    p.add_argument("--only", default=None, help="substring filter on names")
+    args = p.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    # merge into an existing manifest so `--only` doesn't clobber entries
+    man_path = os.path.join(args.out_dir, "manifest.json")
+    manifest = {}
+    if os.path.exists(man_path):
+        with open(man_path) as f:
+            manifest = json.load(f)
+    variants = lbm_variants() + rve_variants() + macroscopic_variants()
+    for name, fn, specs, meta in variants:
+        if args.only and args.only not in name:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        meta["file"] = f"{name}.hlo.txt"
+        meta["hlo_chars"] = len(text)
+        manifest[name] = meta
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {man_path} ({len(manifest)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""D3Q19 lattice constants shared by the Pallas kernel and the jnp oracle.
+
+Velocity set ordering follows the common lbmpy/waLBerla convention:
+index 0 is the rest velocity, 1..6 the axis-aligned directions, 7..18 the
+diagonal (two-axis) directions. ``OPPOSITE[q]`` gives the index of ``-c_q``
+(needed by TRT and by bounce-back boundaries).
+"""
+
+import numpy as np
+
+# fmt: off
+C = np.array([
+    [ 0,  0,  0],
+    [ 1,  0,  0], [-1,  0,  0],
+    [ 0,  1,  0], [ 0, -1,  0],
+    [ 0,  0,  1], [ 0,  0, -1],
+    [ 1,  1,  0], [-1, -1,  0], [ 1, -1,  0], [-1,  1,  0],
+    [ 1,  0,  1], [-1,  0, -1], [ 1,  0, -1], [-1,  0,  1],
+    [ 0,  1,  1], [ 0, -1, -1], [ 0,  1, -1], [ 0, -1,  1],
+], dtype=np.int32)
+# fmt: on
+
+Q = C.shape[0]  # 19
+
+W = np.array(
+    [1.0 / 3.0]
+    + [1.0 / 18.0] * 6
+    + [1.0 / 36.0] * 12,
+    dtype=np.float64,
+)
+
+CS2 = 1.0 / 3.0  # speed of sound squared (lattice units)
+
+# OPPOSITE[q] = index of -C[q]
+OPPOSITE = np.array(
+    [int(np.where((C == -C[q]).all(axis=1))[0][0]) for q in range(Q)],
+    dtype=np.int32,
+)
+
+# TRT magic parameter Lambda = (tau_plus - 1/2)(tau_minus - 1/2)
+TRT_MAGIC = 3.0 / 16.0
+
+
+def trt_tau_minus(tau_plus: float) -> float:
+    """Second relaxation time from the magic-parameter relation."""
+    return TRT_MAGIC / (tau_plus - 0.5) + 0.5
+
+
+def checks() -> None:
+    assert Q == 19
+    assert abs(W.sum() - 1.0) < 1e-14
+    # lattice isotropy: sum_q w_q c_q c_q = cs^2 * I
+    m2 = np.einsum("q,qi,qj->ij", W, C.astype(np.float64), C.astype(np.float64))
+    assert np.allclose(m2, CS2 * np.eye(3), atol=1e-14)
+    assert (C[OPPOSITE] == -C).all()
+
+
+checks()

@@ -1,0 +1,125 @@
+"""L1: Pallas D3Q19 collision kernels (SRT and TRT).
+
+Hardware adaptation (DESIGN.md §3): the paper's waLBerla/lbmpy kernels are
+CPU/GPU sweeps where collision is the FLOP-dense part and streaming is pure
+data movement. On a TPU-like memory hierarchy we tile the (Q, X, Y, Z) PDF
+field along Z with a ``BlockSpec`` so one block — all 19 PDFs of an
+(X, Y, TZ) slab — fits VMEM; the collision is a fused register computation
+per block (moments -> equilibrium -> relaxation), reading each PDF once and
+writing it once. Streaming stays in the surrounding L2 graph as lattice
+shifts (XLA lowers them to copies), exactly how lbmpy separates "collide"
+and "stream" pattern-wise.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO, which is what the rust
+runtime loads. Real-TPU lowering is a compile-only target.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import lattice
+
+# VMEM budget check happens in aot.py; default tile covers full XY plane.
+DEFAULT_TILE_Z = 8
+
+
+def _moments(f_block):
+    """rho, u from a (Q, X, Y, TZ) block; returns (rho, ux, uy, uz)."""
+    rho = f_block[0]
+    for q in range(1, lattice.Q):
+        rho = rho + f_block[q]
+    zeros = jnp.zeros_like(rho)
+    ux, uy, uz = zeros, zeros, zeros
+    for q in range(lattice.Q):
+        cx, cy, cz = (float(v) for v in lattice.C[q])
+        if cx:
+            ux = ux + cx * f_block[q]
+        if cy:
+            uy = uy + cy * f_block[q]
+        if cz:
+            uz = uz + cz * f_block[q]
+    inv_rho = 1.0 / rho
+    return rho, ux * inv_rho, uy * inv_rho, uz * inv_rho
+
+
+def _equilibrium_q(q, rho, ux, uy, uz, uu):
+    cx, cy, cz = (float(v) for v in lattice.C[q])
+    w = float(lattice.W[q])
+    cu = cx * ux + cy * uy + cz * uz
+    return w * rho * (1.0 + 3.0 * cu + 4.5 * cu * cu - 1.5 * uu)
+
+
+def _srt_kernel(tau, f_ref, out_ref):
+    f = f_ref[...]
+    rho, ux, uy, uz = _moments(f)
+    uu = ux * ux + uy * uy + uz * uz
+    omega = 1.0 / tau
+    out = []
+    for q in range(lattice.Q):
+        feq = _equilibrium_q(q, rho, ux, uy, uz, uu)
+        out.append(f[q] - omega * (f[q] - feq))
+    out_ref[...] = jnp.stack(out, axis=0)
+
+
+def _trt_kernel(tau_plus, f_ref, out_ref):
+    tau_minus = lattice.trt_tau_minus(tau_plus)
+    om_p = 1.0 / tau_plus
+    om_m = 1.0 / tau_minus
+    f = f_ref[...]
+    rho, ux, uy, uz = _moments(f)
+    uu = ux * ux + uy * uy + uz * uz
+    feq = [
+        _equilibrium_q(q, rho, ux, uy, uz, uu) for q in range(lattice.Q)
+    ]
+    out = []
+    for q in range(lattice.Q):
+        qb = int(lattice.OPPOSITE[q])
+        f_p = 0.5 * (f[q] + f[qb])
+        f_m = 0.5 * (f[q] - f[qb])
+        feq_p = 0.5 * (feq[q] + feq[qb])
+        feq_m = 0.5 * (feq[q] - feq[qb])
+        out.append(f[q] - om_p * (f_p - feq_p) - om_m * (f_m - feq_m))
+    out_ref[...] = jnp.stack(out, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("operator", "tau", "tile_z"))
+def collide_pallas(f, operator="srt", tau=0.6, tile_z=DEFAULT_TILE_Z):
+    """Collision over a (Q, X, Y, Z) field, z-tiled through 'VMEM'."""
+    q, x, y, z = f.shape
+    assert q == lattice.Q, f"expected {lattice.Q} PDFs, got {q}"
+    tz = min(tile_z, z)
+    assert z % tz == 0, f"Z={z} not divisible by tile {tz}"
+    kernel = {
+        "srt": functools.partial(_srt_kernel, float(tau)),
+        "trt": functools.partial(_trt_kernel, float(tau)),
+    }[operator]
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(f.shape, f.dtype),
+        grid=(z // tz,),
+        in_specs=[pl.BlockSpec((q, x, y, tz), lambda i: (0, 0, 0, i))],
+        out_specs=pl.BlockSpec((q, x, y, tz), lambda i: (0, 0, 0, i)),
+        interpret=True,
+    )(f)
+
+
+def vmem_bytes_per_block(x, y, tile_z, dtype_bytes=4):
+    """VMEM footprint estimate: in + out block (2x) of Q PDFs."""
+    return 2 * lattice.Q * x * y * tile_z * dtype_bytes
+
+
+def flops_per_cell(operator="srt"):
+    """Exact FLOP count of the collision per lattice cell.
+
+    Counted from the kernel structure: moments (rho: Q-1 adds; momentum:
+    ~30 mul-adds; 3 divides), uu (5), per-q equilibrium (~12 each) and
+    relaxation (3 each for SRT / 10 for TRT including the +/- splits).
+    Used by the likwid-like counters and the roofline projection.
+    """
+    base = (lattice.Q - 1) + 30 + 3 + 5 + lattice.Q * 12
+    relax = lattice.Q * (3 if operator == "srt" else 10)
+    return float(base + relax)

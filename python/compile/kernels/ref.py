@@ -1,0 +1,157 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the ground truth the Pallas implementations are tested against
+(pytest + hypothesis) and the reference the paper-level MLUP/s roofline is
+computed from. Everything is plain ``jnp`` — no pallas, no custom calls.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import lattice
+
+
+def macroscopic(f):
+    """Density and velocity moments of a (Q, X, Y, Z) PDF field."""
+    c = jnp.asarray(lattice.C, dtype=f.dtype)  # (Q, 3)
+    rho = jnp.sum(f, axis=0)
+    mom = jnp.einsum("qxyz,qi->ixyz", f, c)
+    u = mom / rho[None]
+    return rho, u
+
+
+def equilibrium(rho, u):
+    """D3Q19 second-order equilibrium, eq. (4) of the paper."""
+    c = jnp.asarray(lattice.C, dtype=u.dtype)  # (Q, 3)
+    w = jnp.asarray(lattice.W, dtype=u.dtype)  # (Q,)
+    cu = jnp.einsum("qi,ixyz->qxyz", c, u)  # c_q . u
+    uu = jnp.sum(u * u, axis=0)  # |u|^2
+    return (
+        w[:, None, None, None]
+        * rho[None]
+        * (1.0 + 3.0 * cu + 4.5 * cu * cu - 1.5 * uu[None])
+    )
+
+
+def collide_srt_ref(f, tau):
+    """Single-relaxation-time (BGK) collision, eq. (3)."""
+    rho, u = macroscopic(f)
+    feq = equilibrium(rho, u)
+    omega = 1.0 / tau
+    return f - omega * (f - feq)
+
+
+def collide_trt_ref(f, tau_plus):
+    """Two-relaxation-time collision with magic parameter 3/16."""
+    opp = jnp.asarray(lattice.OPPOSITE)
+    tau_minus = lattice.trt_tau_minus(tau_plus)
+    rho, u = macroscopic(f)
+    feq = equilibrium(rho, u)
+    f_opp = f[opp]
+    feq_opp = feq[opp]
+    f_plus = 0.5 * (f + f_opp)
+    f_minus = 0.5 * (f - f_opp)
+    feq_plus = 0.5 * (feq + feq_opp)
+    feq_minus = 0.5 * (feq - feq_opp)
+    return (
+        f
+        - (1.0 / tau_plus) * (f_plus - feq_plus)
+        - (1.0 / tau_minus) * (f_minus - feq_minus)
+    )
+
+
+def stream_ref(f):
+    """Periodic streaming, eq. (2): push f*_q along c_q."""
+    out = []
+    for q in range(lattice.Q):
+        cx, cy, cz = (int(v) for v in lattice.C[q])
+        out.append(jnp.roll(f[q], shift=(cx, cy, cz), axis=(0, 1, 2)))
+    return jnp.stack(out, axis=0)
+
+
+def lbm_step_ref(f, tau, operator="srt"):
+    """One full stream-collide update (periodic box)."""
+    if operator == "srt":
+        f_star = collide_srt_ref(f, tau)
+    elif operator == "trt":
+        f_star = collide_trt_ref(f, tau)
+    else:
+        raise ValueError(f"unknown operator {operator}")
+    return stream_ref(f_star)
+
+
+def init_equilibrium(shape, rho0=1.0, u0=(0.0, 0.0, 0.0), dtype=jnp.float32):
+    """PDF field at equilibrium for constant density/velocity."""
+    x, y, z = shape
+    rho = jnp.full((x, y, z), rho0, dtype=dtype)
+    u = jnp.stack(
+        [jnp.full((x, y, z), u0[i], dtype=dtype) for i in range(3)], axis=0
+    )
+    return equilibrium(rho, u)
+
+
+# ---------------------------------------------------------------------------
+# RVE structured-grid operator + CG (oracle for the rve_cg artifact)
+# ---------------------------------------------------------------------------
+
+def _axis_flux_term(u, kappa, axis):
+    """Flux-form contribution of one axis: symmetric, Dirichlet walls."""
+    uu = jnp.moveaxis(u, axis, 0)
+    ku = jnp.moveaxis(kappa, axis, 0)
+    # interior faces: arithmetic-mean coefficient, flux from i to i+1
+    kf = 0.5 * (ku[1:] + ku[:-1])
+    flux = kf * (uu[:-1] - uu[1:])
+    out = jnp.zeros_like(uu)
+    out = out.at[:-1].add(flux)
+    out = out.at[1:].add(-flux)
+    # Dirichlet walls: face to zero-valued ghost with the cell coefficient
+    out = out.at[0].add(ku[0] * uu[0])
+    out = out.at[-1].add(ku[-1] * uu[-1])
+    return jnp.moveaxis(out, 0, axis)
+
+
+def rve_apply_ref(u, kappa):
+    """7-point variable-coefficient Laplacian with Dirichlet walls.
+
+    ``u`` is (N, N, N); ``kappa`` is the per-cell stiffness (two-phase
+    microstructure: martensite inclusion in ferrite matrix). Written in
+    flux form with face-averaged coefficients so the operator is SPD —
+    the structured stand-in for the RVE tangent operator.
+    """
+    return (
+        _axis_flux_term(u, kappa, 0)
+        + _axis_flux_term(u, kappa, 1)
+        + _axis_flux_term(u, kappa, 2)
+    )
+
+
+def rve_cg_ref(b, kappa, iters):
+    """Fixed-iteration CG on the RVE operator. Returns (x, rel_res)."""
+    x = jnp.zeros_like(b)
+    r = b - rve_apply_ref(x, kappa)
+    p = r
+    rs = jnp.sum(r * r)
+    b_norm = jnp.sqrt(jnp.sum(b * b))
+    tiny = jnp.asarray(1e-30, dtype=b.dtype)
+    for _ in range(iters):
+        ap = rve_apply_ref(p, kappa)
+        pap = jnp.sum(p * ap)
+        # guard against exact convergence (0/0) under fixed iteration count
+        alpha = jnp.where(pap > tiny, rs / jnp.maximum(pap, tiny), 0.0)
+        x = x + alpha * p
+        r = r - alpha * ap
+        rs_new = jnp.sum(r * r)
+        beta = jnp.where(rs > tiny, rs_new / jnp.maximum(rs, tiny), 0.0)
+        p = r + beta * p
+        rs = rs_new
+    return x, jnp.sqrt(rs) / b_norm
+
+
+def two_phase_kappa(n, radius_frac=0.3, k_matrix=1.0, k_inclusion=10.0):
+    """Spherical martensite inclusion in a ferrite matrix (paper §2.1.3)."""
+    axis = np.arange(n) - (n - 1) / 2.0
+    xx, yy, zz = np.meshgrid(axis, axis, axis, indexing="ij")
+    r2 = xx**2 + yy**2 + zz**2
+    inside = r2 <= (radius_frac * n) ** 2
+    kappa = np.where(inside, k_inclusion, k_matrix)
+    return jnp.asarray(kappa, dtype=jnp.float32)

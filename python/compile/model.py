@@ -1,0 +1,60 @@
+"""L2: the JAX compute graphs AOT-lowered to HLO artifacts.
+
+Two graph families:
+
+* ``lbm_step`` — one (or ``steps`` fused) D3Q19 stream-collide update:
+  the Pallas collision kernel (L1) + periodic streaming as lattice rolls.
+  This is the analogue of an lbmpy-generated compute kernel: authored and
+  optimized outside the framework, loaded by the rust framework at run
+  time via PJRT.
+* ``rve_cg`` — fixed-iteration matrix-free CG on the structured two-phase
+  RVE operator: the accelerator path for FE2TI's micro solves.
+
+Python only runs at build time (``make artifacts``); the rust coordinator
+executes the lowered HLO through the PJRT CPU client.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import lattice
+from .kernels import ref
+from .kernels.lbm_pallas import collide_pallas
+
+
+def stream(f):
+    """Periodic streaming as lattice shifts; XLA fuses these to copies."""
+    out = []
+    for q in range(lattice.Q):
+        cx, cy, cz = (int(v) for v in lattice.C[q])
+        out.append(jnp.roll(f[q], shift=(cx, cy, cz), axis=(0, 1, 2)))
+    return jnp.stack(out, axis=0)
+
+
+def lbm_step(f, operator="srt", tau=0.6, steps=1, tile_z=8):
+    """``steps`` fused stream-collide updates on a periodic box."""
+    for _ in range(steps):
+        f = stream(collide_pallas(f, operator=operator, tau=tau, tile_z=tile_z))
+    return (f,)
+
+
+def lbm_step_ref_variant(f, operator="srt", tau=0.6, steps=1):
+    """Same update lowered from pure jnp (no pallas_call): XLA:CPU fuses
+    this variant into far fewer kernels — the preferred artifact for CPU
+    execution (§Perf L2); the Pallas variant remains the TPU-structured
+    path. Numerics are identical (same oracle)."""
+    for _ in range(steps):
+        f = ref.lbm_step_ref(f, tau, operator)
+    return (f,)
+
+
+def rve_cg(b, kappa, iters=32):
+    """Fixed-iteration CG; returns (x, rel_residual)."""
+    x, rel = ref.rve_cg_ref(b, kappa, iters)
+    return (x, rel)
+
+
+def lbm_macroscopic(f):
+    """Density/velocity output graph (dashboard verification panels)."""
+    rho, u = ref.macroscopic(f)
+    return (rho, u)

@@ -1,0 +1,126 @@
+"""L1 correctness: Pallas collision kernels vs the pure-jnp oracle.
+
+This is the core build-time correctness signal (DESIGN.md §4): the HLO
+artifacts the rust runtime executes embed exactly these kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lattice, ref
+from compile.kernels.lbm_pallas import (
+    collide_pallas,
+    flops_per_cell,
+    vmem_bytes_per_block,
+)
+
+
+def perturbed_field(shape, seed=0, amp=1e-3, u0=(0.02, -0.01, 0.005)):
+    f = ref.init_equilibrium(shape, rho0=1.0, u0=u0)
+    noise = np.random.default_rng(seed).normal(0.0, amp, f.shape)
+    return f + jnp.asarray(noise, dtype=jnp.float32)
+
+
+@pytest.mark.parametrize("operator", ["srt", "trt"])
+@pytest.mark.parametrize("shape", [(8, 8, 8), (16, 8, 8), (8, 4, 16)])
+def test_collide_matches_ref(operator, shape):
+    f = perturbed_field(shape)
+    got = collide_pallas(f, operator=operator, tau=0.6, tile_z=4)
+    want = (
+        ref.collide_srt_ref(f, 0.6)
+        if operator == "srt"
+        else ref.collide_trt_ref(f, 0.6)
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=5e-7)
+
+
+@pytest.mark.parametrize("operator", ["srt", "trt"])
+def test_collision_conserves_mass_and_momentum(operator):
+    f = perturbed_field((8, 8, 8), seed=3)
+    out = collide_pallas(f, operator=operator, tau=0.8)
+    rho0, u0 = ref.macroscopic(f)
+    rho1, u1 = ref.macroscopic(out)
+    np.testing.assert_allclose(np.asarray(rho1), np.asarray(rho0), atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(u1 * rho1[None]), np.asarray(u0 * rho0[None]), atol=1e-5
+    )
+
+
+def test_equilibrium_is_fixed_point():
+    f = ref.init_equilibrium((8, 8, 8), rho0=1.2, u0=(0.05, 0.0, -0.02))
+    out = collide_pallas(f, operator="srt", tau=0.7)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(f), atol=1e-5)
+
+
+def test_tiling_is_transparent():
+    f = perturbed_field((8, 8, 16), seed=5)
+    full = collide_pallas(f, operator="srt", tau=0.6, tile_z=16)
+    tiled = collide_pallas(f, operator="srt", tau=0.6, tile_z=2)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(tiled), atol=1e-7)
+
+
+def test_indivisible_tile_rejected():
+    f = perturbed_field((4, 4, 6))
+    with pytest.raises(AssertionError):
+        collide_pallas(f, operator="srt", tau=0.6, tile_z=4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    nx=st.sampled_from([4, 8]),
+    nz=st.sampled_from([4, 8, 12]),
+    tau=st.floats(min_value=0.52, max_value=1.8),
+    operator=st.sampled_from(["srt", "trt"]),
+)
+def test_collide_hypothesis_sweep(nx, nz, tau, operator):
+    """Property sweep over shapes and relaxation times."""
+    f = perturbed_field((nx, 4, nz), seed=nx * 100 + nz)
+    got = collide_pallas(f, operator=operator, tau=tau, tile_z=4)
+    want = (
+        ref.collide_srt_ref(f, tau)
+        if operator == "srt"
+        else ref.collide_trt_ref(f, tau)
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+    assert bool(jnp.all(jnp.isfinite(got)))
+
+
+def test_trt_equals_srt_when_taus_match():
+    """With tau_minus == tau_plus TRT degenerates to SRT; our magic-
+    parameter TRT must NOT equal SRT for generic tau (sanity that the two
+    operators genuinely differ)."""
+    f = perturbed_field((8, 8, 8), seed=9)
+    srt = collide_pallas(f, operator="srt", tau=0.6)
+    trt = collide_pallas(f, operator="trt", tau=0.6)
+    assert np.max(np.abs(np.asarray(srt) - np.asarray(trt))) > 1e-9
+
+
+def test_stream_is_permutation():
+    f = perturbed_field((6, 6, 6), seed=2)
+    g = ref.stream_ref(f)
+    # streaming only moves values around: sorted multiset is preserved
+    np.testing.assert_allclose(
+        np.sort(np.asarray(f).ravel()), np.sort(np.asarray(g).ravel()), atol=0
+    )
+
+
+def test_full_step_conserves_mass():
+    f = perturbed_field((8, 8, 8), seed=4)
+    g = ref.lbm_step_ref(f, 0.6, "srt")
+    assert abs(float(jnp.sum(g) - jnp.sum(f))) < 1e-3
+
+
+def test_lattice_constants():
+    assert lattice.Q == 19
+    assert abs(lattice.W.sum() - 1.0) < 1e-14
+    assert (lattice.C[lattice.OPPOSITE] == -lattice.C).all()
+    assert lattice.trt_tau_minus(1.0) == pytest.approx(3.0 / 16.0 / 0.5 + 0.5)
+
+
+def test_flops_and_vmem_models():
+    assert flops_per_cell("trt") > flops_per_cell("srt") > 200
+    # 32x32 XY plane, tile_z=8, f32: 2 * 19 * 32*32*8 * 4 B ≈ 1.24 MB << 16 MiB VMEM
+    assert vmem_bytes_per_block(32, 32, 8) < 16 * 2**20

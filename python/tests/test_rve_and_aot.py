@@ -1,0 +1,124 @@
+"""L2 correctness: RVE CG graph, model shapes, and AOT lowering."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.aot import lbm_variants, macroscopic_variants, rve_variants, to_hlo_text
+from compile.kernels import ref
+
+
+def test_rve_operator_is_spd_like():
+    n = 6
+    kappa = ref.two_phase_kappa(n)
+    rng = np.random.default_rng(0)
+    u = jnp.asarray(rng.normal(size=(n, n, n)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(n, n, n)), jnp.float32)
+    au = ref.rve_apply_ref(u, kappa)
+    av = ref.rve_apply_ref(v, kappa)
+    # symmetry: <Au, v> == <u, Av>
+    assert float(jnp.sum(au * v)) == pytest.approx(float(jnp.sum(u * av)), rel=1e-4)
+    # positive definiteness on a random vector
+    assert float(jnp.sum(au * u)) > 0.0
+
+
+def test_rve_cg_converges():
+    n = 8
+    kappa = ref.two_phase_kappa(n)
+    b = jnp.ones((n, n, n), jnp.float32)
+    x, rel = ref.rve_cg_ref(b, kappa, iters=60)
+    assert float(rel) < 1e-4
+    r = b - ref.rve_apply_ref(x, kappa)
+    assert float(jnp.max(jnp.abs(r))) < 1e-3
+
+
+def test_rve_two_phase_kappa_geometry():
+    n = 16
+    kappa = np.asarray(ref.two_phase_kappa(n, radius_frac=0.3))
+    assert kappa[n // 2, n // 2, n // 2] == 10.0  # inclusion center
+    assert kappa[0, 0, 0] == 1.0  # matrix corner
+    frac = (kappa == 10.0).mean()
+    # sphere of r=0.3n in unit cube: 4/3 pi 0.027 ≈ 0.113
+    assert 0.05 < frac < 0.2
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n=st.sampled_from([4, 6, 8]),
+    k_inc=st.floats(min_value=1.0, max_value=100.0),
+)
+def test_rve_cg_reduces_residual_hypothesis(n, k_inc):
+    kappa = ref.two_phase_kappa(n, k_inclusion=k_inc)
+    b = jnp.ones((n, n, n), jnp.float32)
+    _, rel8 = ref.rve_cg_ref(b, kappa, iters=8)
+    _, rel32 = ref.rve_cg_ref(b, kappa, iters=32)
+    assert float(rel32) <= float(rel8) + 1e-6
+    assert np.isfinite(float(rel32))
+
+
+def test_model_lbm_step_shapes_and_physics():
+    f = ref.init_equilibrium((8, 8, 8), u0=(0.03, 0.0, 0.0))
+    (out,) = model.lbm_step(f, operator="srt", tau=0.6, steps=2, tile_z=4)
+    assert out.shape == f.shape
+    # advecting uniform equilibrium stays equilibrium
+    np.testing.assert_allclose(np.asarray(out), np.asarray(f), atol=1e-5)
+
+
+def test_model_macroscopic():
+    f = ref.init_equilibrium((4, 4, 4), rho0=1.1, u0=(0.01, 0.02, 0.03))
+    rho, u = model.lbm_macroscopic(f)
+    np.testing.assert_allclose(np.asarray(rho), 1.1, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(u[0]), 0.01, atol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "variant",
+    [lbm_variants()[0], rve_variants()[0], macroscopic_variants()[0]],
+    ids=lambda v: v[0],
+)
+def test_aot_lowering_produces_hlo_text(variant):
+    name, fn, specs, meta = variant
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    assert text.startswith("HloModule"), f"{name}: not HLO text"
+    assert "ENTRY" in text
+    assert len(text) > 500
+
+
+def test_variant_registry_complete():
+    names = [v[0] for v in lbm_variants() + rve_variants() + macroscopic_variants()]
+    assert len(names) == len(set(names))
+    assert any("srt" in n for n in names)
+    assert any("trt" in n for n in names)
+    assert any("rve_cg" in n for n in names)
+    for name, _, _, meta in lbm_variants():
+        assert meta["flops_per_cell"] > 0
+        if "vmem_bytes_per_block" in meta:  # pallas-lowered variants only
+            assert meta["vmem_bytes_per_block"] < 16 * 2**20, "block must fit VMEM"
+        else:
+            assert meta.get("lowering") == "jnp", name
+
+
+def test_ref_variant_matches_pallas_lowering():
+    """The CPU-preferred jnp lowering and the Pallas lowering are the same
+    update (§Perf L2): one step on a perturbed field must agree."""
+    import numpy as np
+    f = ref.init_equilibrium((8, 8, 8), u0=(0.02, -0.01, 0.0))
+    noise = np.random.default_rng(1).normal(0, 1e-3, f.shape)
+    f = f + jnp.asarray(noise, jnp.float32)
+    (a,) = model.lbm_step(f, operator="srt", tau=0.6, steps=1, tile_z=4)
+    (b,) = model.lbm_step_ref_variant(f, operator="srt", tau=0.6, steps=1)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-7)
+
+
+def test_fused_steps_equal_sequential_steps():
+    import numpy as np
+    f = ref.init_equilibrium((8, 8, 8), u0=(0.01, 0.02, 0.0))
+    (a,) = model.lbm_step_ref_variant(f, operator="srt", tau=0.7, steps=4)
+    b = f
+    for _ in range(4):
+        (b,) = model.lbm_step_ref_variant(b, operator="srt", tau=0.7, steps=1)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)

@@ -1,0 +1,112 @@
+//! Infrastructure benchmarks: the CB substrate hot paths — TSDB ingest +
+//! query, scheduler throughput, datastore, JSON, FSLBM step.
+//!
+//! `cargo bench --bench bench_infra`
+
+use cbench::apps::walberla::collision::CollisionOp;
+use cbench::apps::walberla::fslbm::FsBlock;
+use cbench::cluster::nodes::catalogue;
+use cbench::datastore::DataStore;
+use cbench::slurm::{JobOutcome, JobSpec, Scheduler};
+use cbench::tsdb::{Aggregate, Db, Point, Query};
+use cbench::util::json::Json;
+use cbench::util::stats::Bench;
+
+fn main() {
+    println!("== bench_infra ==\n");
+
+    // TSDB ingest
+    let mk_point = |i: i64| {
+        Point::new("lbm", i)
+            .tag("node", if i % 2 == 0 { "icx36" } else { "rome1" })
+            .tag("collision_op", ["srt", "trt", "mrt", "cumulant"][(i % 4) as usize])
+            .field("mlups", 1000.0 + i as f64)
+            .field("runtime", 1.0 / (1.0 + i as f64))
+    };
+    let mut b = Bench::new("tsdb_insert_1k");
+    let r = b.run(|| {
+        let mut db = Db::new();
+        for i in 0..1000 {
+            db.insert(mk_point(i));
+        }
+        db
+    });
+    println!("{}", r.report_throughput(1000.0, "point"));
+
+    // line-protocol encode+parse roundtrip
+    let p = mk_point(42);
+    let mut b = Bench::new("line_protocol_roundtrip");
+    let r = b.run(|| Point::parse_line(&p.to_line()).unwrap());
+    println!("{}", r.report());
+
+    // query with grouping over 10k points
+    let mut db = Db::new();
+    for i in 0..10_000 {
+        db.insert(mk_point(i));
+    }
+    let mut b = Bench::new("tsdb_query_group_10k");
+    let r = b.run(|| {
+        Query::new("lbm", "mlups")
+            .group_by(&["node", "collision_op"])
+            .run_agg(&db, Aggregate::Last)
+    });
+    println!("{}", r.report_throughput(10_000.0, "point"));
+
+    // scheduler: 200 trivial jobs over the 11-node cluster
+    let mut b = Bench::new("slurm_200_jobs");
+    b.budget_secs = 1.5;
+    let r = b.run(|| {
+        let mut s = Scheduler::new(catalogue().into_iter().filter(|n| n.testcluster).collect());
+        let hosts: Vec<String> = s.nodes().map(|n| n.host.to_string()).collect();
+        for i in 0..200 {
+            s.sbatch(
+                JobSpec {
+                    name: format!("j{i}"),
+                    nodelist: hosts[i % hosts.len()].clone(),
+                    timelimit_min: 10.0,
+                },
+                Box::new(|_n, _t| JobOutcome {
+                    duration: 1.0,
+                    stdout: String::new(),
+                    exit_code: 0,
+                }),
+            )
+            .unwrap();
+        }
+        s.wait_all().len()
+    });
+    println!("{}", r.report_throughput(200.0, "job"));
+
+    // datastore: 300 records + links (one pipeline's worth)
+    let mut b = Bench::new("datastore_300_records");
+    let r = b.run(|| {
+        let mut ds = DataStore::new();
+        let coll = ds.create_collection("p", "pipeline");
+        let mut prev = None;
+        for i in 0..300 {
+            let id = ds.create_record(&format!("r{i}"), "rec", "job-log").unwrap();
+            ds.add_to_collection(coll, id).unwrap();
+            if let Some(p) = prev {
+                ds.link(id, p, "belongs to").unwrap();
+            }
+            prev = Some(id);
+        }
+        ds.n_records()
+    });
+    println!("{}", r.report_throughput(300.0, "record"));
+
+    // JSON parse of a machinestate-sized doc
+    let node = catalogue().into_iter().next().unwrap();
+    let ms = cbench::cluster::machinestate::machine_state(&node, "bench", 0.0).to_string_pretty();
+    let mut b = Bench::new("json_parse_machinestate");
+    let r = b.run(|| Json::parse(&ms).unwrap());
+    println!("{}", r.report_throughput(ms.len() as f64, "byte"));
+
+    // FSLBM full step (the Fig. 13 compute phase, real physics)
+    let mut blk = FsBlock::new(16, 16, 8);
+    blk.init_gravity_wave(0.1);
+    let mut b = Bench::new("fslbm_step_16x16x8");
+    b.budget_secs = 1.5;
+    let r = b.run(|| blk.step(CollisionOp::Srt));
+    println!("{}", r.report_throughput((16 * 16 * 8) as f64, "cell"));
+}

@@ -1,0 +1,69 @@
+//! LBM kernel benchmarks (Fig. 6/8 workloads): native rust sweep per
+//! collision operator + stencil, host stream roofline comparison, and the
+//! PJRT-artifact kernel.
+//!
+//! `cargo bench --bench bench_lbm`
+
+use cbench::apps::walberla::collision::CollisionOp;
+use cbench::apps::walberla::grid::Block;
+use cbench::apps::walberla::lattice::{d3q19, d3q27};
+use cbench::cluster::microbench::{run_host_microbench, MicrobenchKind};
+use cbench::util::stats::Bench;
+
+fn main() {
+    println!("== bench_lbm: uniform-grid sweeps (one sweep = collide+ghost+stream) ==\n");
+
+    // host roofline context: what would a pure-bandwidth LBM bound be here?
+    let stream = run_host_microbench(MicrobenchKind::Stream, 1 << 22, 3);
+    let pmax_d3q19 = stream.value * 1e9 / 304.0 / 1e6;
+    println!(
+        "host stream: {:.2} GB/s  ->  P_max(D3Q19,f64) = {:.1} MLUP/s\n",
+        stream.value, pmax_d3q19
+    );
+
+    let n = 24usize;
+    let cells = (n * n * n) as f64;
+    for (lat, lname) in [(d3q19(), "d3q19"), (d3q27(), "d3q27")] {
+        for op in CollisionOp::all() {
+            let mut block = Block::new(lat.clone(), n, n, n);
+            block.init_equilibrium(1.0, [0.02, 0.01, 0.0]);
+            let mut b = Bench::new(&format!("lbm_{}_{}_{}", lname, op.name(), n));
+            b.budget_secs = 1.0;
+            let r = b.run(|| block.step(op, 0.6));
+            println!("{}", r.report_throughput(cells, "cell"));
+            let mlups = cells / r.secs_per_iter.p50 / 1e6;
+            println!(
+                "{:<40}   {:>8.2} MLUP/s  ({:.1}% of host stream P_max)",
+                "",
+                mlups,
+                100.0 * mlups / pmax_d3q19
+            );
+        }
+    }
+
+    // the AOT Pallas kernel through PJRT (build artifacts first)
+    println!("\n== PJRT artifact kernel ==\n");
+    match cbench::runtime::Engine::open("artifacts") {
+        Ok(mut engine) => {
+            // pallas-lowered vs jnp-lowered vs 4-step-fused (§Perf L2)
+            for name in [
+                "lbm_d3q19_srt_16",
+                "lbm_d3q19_trt_16",
+                "lbm_d3q19_srt_ref_16",
+                "lbm_d3q19_srt_x4_16",
+            ] {
+                let meta = engine.meta(name).cloned();
+                let Some(meta) = meta else { continue };
+                let len: usize = meta.shape.iter().product();
+                let f = vec![1.0f32 / 19.0; len];
+                engine.load(name).unwrap();
+                let mut b = Bench::quick(&format!("pjrt_{name}"));
+                b.budget_secs = 2.0;
+                let cells: f64 = meta.shape[1..].iter().product::<usize>() as f64;
+                let r = b.run(|| engine.lbm_step(name, &f).unwrap());
+                println!("{}", r.report_throughput(cells, "cell"));
+            }
+        }
+        Err(e) => println!("(skipping: {e})"),
+    }
+}

@@ -1,0 +1,61 @@
+//! End-to-end pipeline benchmarks: one per paper benchmark case (Tab. 3),
+//! measuring the full coordinator path (matrix → scheduler → parse →
+//! TSDB → records) plus per-figure generator latency.
+//!
+//! `cargo bench --bench bench_pipeline`
+
+use cbench::coordinator::{
+    fe2ti_pipeline::fe2ti_job_matrix, walberla_pipeline::walberla_job_matrix, BenchConfig,
+    CbSystem,
+};
+use cbench::util::stats::Bench;
+use cbench::vcs::Repository;
+
+fn main() {
+    println!("== bench_pipeline: coordinator end-to-end ==\n");
+
+    // fe2ti216/fe2ti1728 full 100-job pipeline
+    let mut b = Bench::quick("fe2ti_pipeline_100_jobs");
+    b.budget_secs = 30.0;
+    b.max_iters = 5;
+    let r = b.run(|| {
+        let mut repo = Repository::new("fe2ti");
+        let ev = repo.commit_change("master", "a", "c", 0.0, "benchmark.cfg", "");
+        let mut cb = CbSystem::new();
+        let jobs = fe2ti_job_matrix(&BenchConfig::default(), 5, 1);
+        cb.execute_pipeline(&ev, false, jobs, "fe2ti").unwrap().jobs_total
+    });
+    println!("{}", r.report_throughput(100.0, "job"));
+
+    // walberla 48-job pipeline (UniformGridCPU × 11 nodes + FSLBM × 4)
+    let mut b = Bench::quick("walberla_pipeline_48_jobs");
+    b.budget_secs = 10.0;
+    let r = b.run(|| {
+        let mut repo = Repository::new("walberla");
+        let ev = repo.commit_change("master", "a", "c", 0.0, "benchmark.cfg", "");
+        let mut cb = CbSystem::new();
+        let jobs = walberla_job_matrix(&BenchConfig::default());
+        cb.execute_pipeline(&ev, true, jobs, "lbm").unwrap().jobs_total
+    });
+    println!("{}", r.report_throughput(48.0, "job"));
+
+    // per-figure generator latency (each regenerates a paper artifact)
+    println!("\n== report generators ==\n");
+    for id in ["tab2", "fig8", "fig13", "fig14"] {
+        let mut b = Bench::quick(&format!("report_{id}"));
+        b.budget_secs = 5.0;
+        let r = b.run(|| cbench::report::run_report(id, None).unwrap().len());
+        println!("{}", r.report());
+    }
+    // the heavy ones, once each
+    for id in ["fig9", "fig11", "fig12"] {
+        let t = std::time::Instant::now();
+        let len = cbench::report::run_report(id, None).unwrap().len();
+        println!(
+            "{:<40} single run: {} ({} chars)",
+            format!("report_{id}"),
+            cbench::util::fmt_secs(t.elapsed().as_secs_f64()),
+            len
+        );
+    }
+}

@@ -1,0 +1,71 @@
+//! Sparse-solver benchmarks (Fig. 9/10 workloads): the four FE2TI solver
+//! packages on the real nonlinear RVE problem, plus raw kernel benches.
+//!
+//! `cargo bench --bench bench_solvers`
+
+use cbench::apps::fe2ti::rve::{Material, Rve};
+use cbench::apps::fe2ti::solvers::{Compiler, SolverConfig, SolverKind};
+use cbench::sparse::{cg, gmres, testmat::laplacian2d, Csr, Ilu0, SparseLu, Work};
+use cbench::util::stats::Bench;
+
+fn main() {
+    println!("== bench_solvers: full nonlinear RVE solves (n=8, 512 dof) ==\n");
+    for kind in SolverKind::paper_set() {
+        let cfg = SolverConfig::new(kind, Compiler::Intel);
+        let mut b = Bench::new(&format!("rve_solve_{}", kind.name()));
+        b.budget_secs = 1.5;
+        let r = b.run(|| {
+            let mut rve = Rve::new(8, Material::default());
+            rve.solve(0.125, &cfg, 1e-7)
+        });
+        println!("{}", r.report());
+        // counted work of one solve (exact)
+        let mut rve = Rve::new(8, Material::default());
+        let stats = rve.solve(0.125, &cfg, 1e-7);
+        println!(
+            "{:<40}   counted: {:.3e} FLOP, {:.3e} B, {} newton / {} inner iters",
+            "", stats.work.flops, stats.work.bytes, stats.newton_iters, stats.inner_iters
+        );
+    }
+
+    println!("\n== raw kernels on the 2-D Laplacian (m=40, 1600 dof) ==\n");
+    let a: Csr = laplacian2d(40);
+    let rhs = vec![1.0; a.n];
+
+    let mut b = Bench::new("sparse_lu_factor");
+    let r = b.run(|| SparseLu::factor(&a).unwrap());
+    println!("{}", r.report());
+
+    let lu = SparseLu::factor(&a).unwrap();
+    let mut b = Bench::new("sparse_lu_solve");
+    let r = b.run(|| {
+        let mut w = Work::default();
+        lu.solve(&rhs, &mut w)
+    });
+    println!("{}", r.report());
+
+    let mut b = Bench::new("ilu0_factor");
+    let r = b.run(|| Ilu0::factor(&a).unwrap());
+    println!("{}", r.report());
+
+    let ilu = Ilu0::factor(&a).unwrap();
+    let mut b = Bench::new("gmres_ilu_1e-8");
+    let r = b.run(|| gmres(&a, &rhs, Some(&ilu), 1e-8, 40, 2000));
+    println!("{}", r.report());
+
+    let mut b = Bench::new("gmres_ilu_1e-4");
+    let r = b.run(|| gmres(&a, &rhs, Some(&ilu), 1e-4, 40, 2000));
+    println!("{}", r.report());
+
+    let mut b = Bench::new("cg_1e-8");
+    let r = b.run(|| cg(&a, &rhs, 1e-8, 2000));
+    println!("{}", r.report());
+
+    let mut y = vec![0.0; a.n];
+    let mut b = Bench::new("spmv");
+    let r = b.run(|| {
+        let mut w = Work::default();
+        a.matvec(&rhs, &mut y, &mut w);
+    });
+    println!("{}", r.report_throughput(2.0 * a.nnz() as f64, "flop"));
+}

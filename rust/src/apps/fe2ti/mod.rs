@@ -1,0 +1,23 @@
+//! FE2TI stand-in: FE² computational homogenization (paper §2.1).
+//!
+//! Scale-bridging solver: a macroscopic finite-element problem whose
+//! constitutive response at every integration point comes from solving a
+//! representative-volume-element (RVE) problem with a two-phase
+//! microstructure (spherical martensite inclusion in a ferrite matrix).
+//! The algorithmic structure is the paper's three nested loops: pseudo-time
+//! load stepping → macroscopic Newton → parallel RVE Newton solves.
+//!
+//! Solver options mirror the paper's packages: MKL-PARDISO and UMFPACK
+//! (sparse direct; same numerics here, different kernel-efficiency
+//! personalities — the paper's UMFPACK finding is purely about the linked
+//! BLAS), and GMRES+ILU(0) with strict/relaxed tolerances (the "inexact
+//! option").
+
+pub mod bench;
+pub mod macroscale;
+pub mod rve;
+pub mod solvers;
+
+pub use bench::{run_fe2ti_benchmark, Fe2tiCase, Fe2tiRunResult};
+pub use rve::{Rve, RveSolveStats};
+pub use solvers::{Compiler, SolverKind};

@@ -1,0 +1,373 @@
+//! The RVE problem: nonlinear two-phase microstructure solve (paper §2.1).
+//!
+//! Structured stand-in for the paper's tetrahedral RVE FEM: a 3-D
+//! structured grid with a spherical martensite inclusion in a ferrite
+//! matrix and a J2-plasticity-like *secant softening* nonlinearity — the
+//! effective stiffness decreases as the local solution gradient grows,
+//! which produces the genuine nested-Newton structure (macro Newton
+//! around many micro Newton solves) the paper benchmarks. The grid matches
+//! `python/compile/kernels/ref.py::rve_apply_ref` (flux form, SPD), so the
+//! PJRT `rve_cg` artifact can serve as an accelerated linear solve.
+
+use super::solvers::{SolveOutcome, SolverConfig};
+use crate::sparse::{Csr, Work};
+
+/// Two-phase material parameters (paper: dual-phase steel, §2.1.3).
+#[derive(Debug, Clone, Copy)]
+pub struct Material {
+    pub k_ferrite: f64,
+    pub k_martensite: f64,
+    /// inclusion radius as a fraction of the RVE edge
+    pub radius_frac: f64,
+    /// J2-like softening coefficient: k_eff = k / (1 + beta |grad u|^2)
+    pub beta: f64,
+}
+
+impl Default for Material {
+    fn default() -> Material {
+        Material {
+            k_ferrite: 1.0,
+            k_martensite: 10.0,
+            radius_frac: 0.3,
+            beta: 5.0,
+        }
+    }
+}
+
+/// One representative volume element.
+#[derive(Debug, Clone)]
+pub struct Rve {
+    /// Cells per edge.
+    pub n: usize,
+    pub mat: Material,
+    /// Per-cell base stiffness (two-phase geometry).
+    pub kappa: Vec<f64>,
+    /// Current solution (cell-centered scalar displacement-like field).
+    pub u: Vec<f64>,
+}
+
+/// Statistics of one RVE solve.
+#[derive(Debug, Clone, Default)]
+pub struct RveSolveStats {
+    pub newton_iters: usize,
+    pub inner_iters: usize,
+    pub work: Work,
+    pub residual: f64,
+    pub converged: bool,
+    /// Homogenized stress (volume-averaged flux), the P̄ the macro scale
+    /// consumes.
+    pub stress: f64,
+}
+
+impl Rve {
+    pub fn new(n: usize, mat: Material) -> Rve {
+        let mut kappa = vec![0.0; n * n * n];
+        let c = (n as f64 - 1.0) / 2.0;
+        let r2 = (mat.radius_frac * n as f64).powi(2);
+        for x in 0..n {
+            for y in 0..n {
+                for z in 0..n {
+                    let d2 = (x as f64 - c).powi(2) + (y as f64 - c).powi(2) + (z as f64 - c).powi(2);
+                    kappa[(x * n + y) * n + z] = if d2 <= r2 {
+                        mat.k_martensite
+                    } else {
+                        mat.k_ferrite
+                    };
+                }
+            }
+        }
+        Rve {
+            n,
+            mat,
+            kappa,
+            u: vec![0.0; n * n * n],
+        }
+    }
+
+    #[inline]
+    fn idx(&self, x: usize, y: usize, z: usize) -> usize {
+        (x * self.n + y) * self.n + z
+    }
+
+    pub fn dofs(&self) -> usize {
+        self.n * self.n * self.n
+    }
+
+    /// Effective per-cell stiffness at the current state (secant softening
+    /// on the local gradient magnitude).
+    fn kappa_eff(&self) -> Vec<f64> {
+        let n = self.n;
+        let mut ke = vec![0.0; self.dofs()];
+        for x in 0..n {
+            for y in 0..n {
+                for z in 0..n {
+                    let i = self.idx(x, y, z);
+                    let gx = if x + 1 < n {
+                        self.u[self.idx(x + 1, y, z)] - self.u[i]
+                    } else {
+                        0.0
+                    };
+                    let gy = if y + 1 < n {
+                        self.u[self.idx(x, y + 1, z)] - self.u[i]
+                    } else {
+                        0.0
+                    };
+                    let gz = if z + 1 < n {
+                        self.u[self.idx(x, y, z + 1)] - self.u[i]
+                    } else {
+                        0.0
+                    };
+                    let g2 = gx * gx + gy * gy + gz * gz;
+                    ke[i] = self.kappa[i] / (1.0 + self.mat.beta * g2);
+                }
+            }
+        }
+        ke
+    }
+
+    /// Assemble the flux-form operator on the *effective* stiffness plus
+    /// the Dirichlet boundary load from the macroscopic strain: ghost
+    /// values follow the affine field `strain · x` (periodic-BC stand-in,
+    /// paper §2.1.1). Returns (A, b).
+    pub fn assemble(&self, strain: f64) -> (Csr, Vec<f64>) {
+        let n = self.n;
+        let ke = self.kappa_eff();
+        let mut t = Vec::with_capacity(7 * self.dofs());
+        let mut b = vec![0.0; self.dofs()];
+        let face = |a: f64, bk: f64| 0.5 * (a + bk);
+        for x in 0..n {
+            for y in 0..n {
+                for z in 0..n {
+                    let i = self.idx(x, y, z);
+                    let mut diag = 0.0;
+                    let mut neigh = |t: &mut Vec<(usize, usize, f64)>,
+                                     b: &mut Vec<f64>,
+                                     inside: Option<usize>,
+                                     kf: f64,
+                                     ghost: f64| {
+                        diag += kf;
+                        match inside {
+                            Some(j) => t.push((i, j, -kf)),
+                            None => b[i] += kf * ghost,
+                        }
+                    };
+                    // x faces: Dirichlet ghost = strain * x_ghost
+                    let kf = if x + 1 < n {
+                        face(ke[i], ke[self.idx(x + 1, y, z)])
+                    } else {
+                        ke[i]
+                    };
+                    neigh(
+                        &mut t,
+                        &mut b,
+                        (x + 1 < n).then(|| self.idx(x + 1, y, z)),
+                        kf,
+                        strain * (n as f64),
+                    );
+                    let kf = if x > 0 {
+                        face(ke[i], ke[self.idx(x - 1, y, z)])
+                    } else {
+                        ke[i]
+                    };
+                    neigh(
+                        &mut t,
+                        &mut b,
+                        (x > 0).then(|| self.idx(x - 1, y, z)),
+                        kf,
+                        0.0,
+                    );
+                    // y, z faces: homogeneous Dirichlet walls
+                    let kf = if y + 1 < n {
+                        face(ke[i], ke[self.idx(x, y + 1, z)])
+                    } else {
+                        ke[i]
+                    };
+                    neigh(&mut t, &mut b, (y + 1 < n).then(|| self.idx(x, y + 1, z)), kf, 0.0);
+                    let kf = if y > 0 {
+                        face(ke[i], ke[self.idx(x, y - 1, z)])
+                    } else {
+                        ke[i]
+                    };
+                    neigh(&mut t, &mut b, (y > 0).then(|| self.idx(x, y - 1, z)), kf, 0.0);
+                    let kf = if z + 1 < n {
+                        face(ke[i], ke[self.idx(x, y, z + 1)])
+                    } else {
+                        ke[i]
+                    };
+                    neigh(&mut t, &mut b, (z + 1 < n).then(|| self.idx(x, y, z + 1)), kf, 0.0);
+                    let kf = if z > 0 {
+                        face(ke[i], ke[self.idx(x, y, z - 1)])
+                    } else {
+                        ke[i]
+                    };
+                    neigh(&mut t, &mut b, (z > 0).then(|| self.idx(x, y, z - 1)), kf, 0.0);
+                    t.push((i, i, diag));
+                }
+            }
+        }
+        (Csr::from_triplets(self.dofs(), &t), b)
+    }
+
+    /// Residual norm ||A(u)·u − b|| at the current state.
+    pub fn residual(&self, strain: f64) -> f64 {
+        let (a, b) = self.assemble(strain);
+        a.residual_norm(&self.u, &b)
+    }
+
+    /// Homogenized stress: volume-averaged x-flux at the current state.
+    pub fn homogenized_stress(&self) -> f64 {
+        let n = self.n;
+        let ke = self.kappa_eff();
+        let mut flux = 0.0;
+        let mut count = 0usize;
+        for x in 0..n - 1 {
+            for y in 0..n {
+                for z in 0..n {
+                    let i = self.idx(x, y, z);
+                    let j = self.idx(x + 1, y, z);
+                    flux += 0.5 * (ke[i] + ke[j]) * (self.u[j] - self.u[i]);
+                    count += 1;
+                }
+            }
+        }
+        flux / count as f64
+    }
+
+    /// Nonlinear RVE solve: damped Newton(-secant) iteration driven by the
+    /// chosen solver package. This is the paper's innermost loop.
+    pub fn solve(&mut self, strain: f64, cfg: &SolverConfig, newton_tol: f64) -> RveSolveStats {
+        let mut stats = RveSolveStats::default();
+        let b_scale = (self.dofs() as f64).sqrt() * strain.abs().max(1e-12);
+        // adaptive damping stabilizes the secant (Picard-type) iteration
+        // under strong softening: back off when the residual grows
+        let mut damping = 1.0f64;
+        let mut prev_res = f64::MAX;
+        for _ in 0..80 {
+            let (a, b) = self.assemble(strain);
+            // account assembly traffic
+            stats.work.add(10.0 * a.nnz() as f64, 20.0 * a.nnz() as f64);
+            let mut r = vec![0.0; self.dofs()];
+            a.matvec(&self.u, &mut r, &mut stats.work);
+            for (ri, bi) in r.iter_mut().zip(&b) {
+                *ri = bi - *ri;
+            }
+            let rnorm = r.iter().map(|v| v * v).sum::<f64>().sqrt();
+            stats.residual = rnorm / b_scale;
+            if stats.residual < newton_tol {
+                stats.converged = true;
+                break;
+            }
+            if stats.residual > prev_res {
+                damping = (damping * 0.5).max(0.05);
+            } else {
+                damping = (damping * 1.3).min(1.0);
+            }
+            prev_res = stats.residual;
+            stats.newton_iters += 1;
+            let out: SolveOutcome = match cfg.solve(&a, &r) {
+                Ok(o) => o,
+                Err(_) => break,
+            };
+            stats.inner_iters += out.inner_iters;
+            stats.work.merge(out.work);
+            for (ui, di) in self.u.iter_mut().zip(&out.x) {
+                *ui += damping * di;
+            }
+        }
+        stats.stress = self.homogenized_stress();
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::fe2ti::solvers::{Compiler, SolverKind};
+
+    fn cfg(kind: SolverKind) -> SolverConfig {
+        SolverConfig::new(kind, Compiler::Intel)
+    }
+
+    #[test]
+    fn linear_limit_solves_in_one_newton() {
+        // beta = 0 -> problem is linear; Newton converges in 1 iteration
+        let mat = Material {
+            beta: 0.0,
+            ..Material::default()
+        };
+        let mut rve = Rve::new(6, mat);
+        let stats = rve.solve(0.01, &cfg(SolverKind::Pardiso), 1e-10);
+        assert!(stats.converged, "res={}", stats.residual);
+        assert_eq!(stats.newton_iters, 1);
+    }
+
+    #[test]
+    fn nonlinear_needs_multiple_newton_iters() {
+        let mut rve = Rve::new(6, Material::default());
+        let stats = rve.solve(0.25, &cfg(SolverKind::Pardiso), 1e-8);
+        assert!(stats.converged);
+        assert!(stats.newton_iters >= 2, "iters={}", stats.newton_iters);
+    }
+
+    #[test]
+    fn all_solvers_reach_same_state() {
+        let strain = 0.2;
+        let mut stress = Vec::new();
+        for kind in SolverKind::paper_set() {
+            let mut rve = Rve::new(5, Material::default());
+            let s = rve.solve(strain, &cfg(kind), 1e-7);
+            assert!(s.converged, "{:?}", kind);
+            stress.push(s.stress);
+        }
+        for s in &stress[1..] {
+            assert!(
+                (s - stress[0]).abs() < 1e-4 * stress[0].abs().max(1e-12),
+                "stress mismatch {stress:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn relaxed_tolerance_still_converges_newton() {
+        // the paper's point: inexact micro solves suffice for Newton
+        let mut strict = Rve::new(6, Material::default());
+        let mut relaxed = Rve::new(6, Material::default());
+        let s1 = strict.solve(0.3, &cfg(SolverKind::Ilu { tol: 1e-8 }), 1e-7);
+        let s2 = relaxed.solve(0.3, &cfg(SolverKind::Ilu { tol: 1e-4 }), 1e-7);
+        assert!(s1.converged && s2.converged);
+        assert!(s2.newton_iters <= s1.newton_iters + 2);
+        assert!(s2.work.flops < s1.work.flops, "relaxed must be cheaper");
+        assert!((s1.stress - s2.stress).abs() < 1e-4 * s1.stress.abs());
+    }
+
+    #[test]
+    fn stress_increases_with_strain() {
+        let mut stress = Vec::new();
+        for strain in [0.05, 0.1, 0.2] {
+            let mut rve = Rve::new(5, Material::default());
+            let s = rve.solve(strain, &cfg(SolverKind::Pardiso), 1e-8);
+            stress.push(s.stress);
+        }
+        assert!(stress[0] < stress[1] && stress[1] < stress[2], "{stress:?}");
+    }
+
+    #[test]
+    fn softening_reduces_secant_stiffness() {
+        // at larger strain the effective stress/strain ratio drops
+        let ratio = |strain: f64| {
+            let mut rve = Rve::new(5, Material::default());
+            let s = rve.solve(strain, &cfg(SolverKind::Pardiso), 1e-8);
+            s.stress / strain
+        };
+        assert!(ratio(0.5) < ratio(0.05), "secant stiffness should soften");
+    }
+
+    #[test]
+    fn inclusion_geometry() {
+        let rve = Rve::new(8, Material::default());
+        let mid = rve.idx(4, 4, 4);
+        let corner = rve.idx(0, 0, 0);
+        assert_eq!(rve.kappa[mid], 10.0);
+        assert_eq!(rve.kappa[corner], 1.0);
+    }
+}

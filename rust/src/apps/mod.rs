@@ -1,0 +1,15 @@
+//! The two instrumented HPC applications the paper benchmarks.
+//!
+//! * [`fe2ti`] — FE² computational homogenization (implicit, PETSc-style
+//!   solver stack): nested Newton, per-integration-point RVE solves,
+//!   pluggable direct/iterative solvers.
+//! * [`walberla`] — block-structured LBM framework (explicit, generated
+//!   kernels): uniform-grid benchmarks with several collision operators
+//!   and the free-surface LBM gravity-wave case.
+//!
+//! Both report exact likwid-style counters (`perf::`) and workload
+//! profiles that the cluster node models project to per-architecture
+//! timings (DESIGN.md §2).
+
+pub mod fe2ti;
+pub mod walberla;

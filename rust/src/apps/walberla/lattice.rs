@@ -1,0 +1,168 @@
+//! D3Q19 and D3Q27 lattice models (velocity sets, weights, opposites).
+//!
+//! Mirrors `python/compile/kernels/lattice.py`; the D3Q19 ordering is
+//! byte-identical so PDF fields can round-trip through the PJRT artifacts.
+
+/// A DdQq lattice model.
+#[derive(Debug, Clone)]
+pub struct Lattice {
+    pub name: &'static str,
+    pub q: usize,
+    pub c: Vec<[i32; 3]>,
+    /// Velocity components as f64 (precomputed — the collision hot loop
+    /// must not pay per-cell int->float conversions, §Perf).
+    pub cf: Vec<[f64; 3]>,
+    pub w: Vec<f64>,
+    pub opposite: Vec<usize>,
+}
+
+pub const CS2: f64 = 1.0 / 3.0;
+
+fn build(name: &'static str, c: Vec<[i32; 3]>, w: Vec<f64>) -> Lattice {
+    let q = c.len();
+    let opposite = (0..q)
+        .map(|i| {
+            let neg = [-c[i][0], -c[i][1], -c[i][2]];
+            c.iter().position(|v| *v == neg).expect("opposite exists")
+        })
+        .collect();
+    let cf = c
+        .iter()
+        .map(|v| [v[0] as f64, v[1] as f64, v[2] as f64])
+        .collect();
+    Lattice {
+        name,
+        q,
+        c,
+        cf,
+        w,
+        opposite,
+    }
+}
+
+/// D3Q19 — same ordering as the python kernel.
+pub fn d3q19() -> Lattice {
+    let c = vec![
+        [0, 0, 0],
+        [1, 0, 0], [-1, 0, 0],
+        [0, 1, 0], [0, -1, 0],
+        [0, 0, 1], [0, 0, -1],
+        [1, 1, 0], [-1, -1, 0], [1, -1, 0], [-1, 1, 0],
+        [1, 0, 1], [-1, 0, -1], [1, 0, -1], [-1, 0, 1],
+        [0, 1, 1], [0, -1, -1], [0, 1, -1], [0, -1, 1],
+    ];
+    let mut w = vec![1.0 / 3.0];
+    w.extend(std::iter::repeat(1.0 / 18.0).take(6));
+    w.extend(std::iter::repeat(1.0 / 36.0).take(12));
+    build("D3Q19", c, w)
+}
+
+/// D3Q27 — the stencil the paper's UniformGrid benchmark uses (Tab. 3).
+pub fn d3q27() -> Lattice {
+    let mut c = Vec::with_capacity(27);
+    // ordering: rest, axis, planar diagonals, cube corners
+    c.push([0, 0, 0]);
+    let axis = [
+        [1, 0, 0], [-1, 0, 0], [0, 1, 0], [0, -1, 0], [0, 0, 1], [0, 0, -1],
+    ];
+    c.extend(axis);
+    let planar = [
+        [1, 1, 0], [-1, -1, 0], [1, -1, 0], [-1, 1, 0],
+        [1, 0, 1], [-1, 0, -1], [1, 0, -1], [-1, 0, 1],
+        [0, 1, 1], [0, -1, -1], [0, 1, -1], [0, -1, 1],
+    ];
+    c.extend(planar);
+    let corners = [
+        [1, 1, 1], [-1, -1, -1], [1, 1, -1], [-1, -1, 1],
+        [1, -1, 1], [-1, 1, -1], [1, -1, -1], [-1, 1, 1],
+    ];
+    c.extend(corners);
+    let mut w = vec![8.0 / 27.0];
+    w.extend(std::iter::repeat(2.0 / 27.0).take(6));
+    w.extend(std::iter::repeat(1.0 / 54.0).take(12));
+    w.extend(std::iter::repeat(1.0 / 216.0).take(8));
+    build("D3Q27", c, w)
+}
+
+impl Lattice {
+    /// Second-order equilibrium (paper eq. 4) for one cell.
+    pub fn equilibrium(&self, rho: f64, u: [f64; 3], out: &mut [f64]) {
+        let uu = u[0] * u[0] + u[1] * u[1] + u[2] * u[2];
+        let base = 1.0 - 1.5 * uu;
+        for ((o, cf), w) in out[..self.q].iter_mut().zip(&self.cf).zip(&self.w) {
+            let cu = cf[0] * u[0] + cf[1] * u[1] + cf[2] * u[2];
+            *o = w * rho * (base + 3.0 * cu + 4.5 * cu * cu);
+        }
+    }
+
+    /// Density and velocity moments of one cell's PDFs (eqs. 5–6, no force).
+    pub fn moments(&self, f: &[f64]) -> (f64, [f64; 3]) {
+        let mut rho = 0.0;
+        let mut m = [0.0f64; 3];
+        for (fq, cf) in f[..self.q].iter().zip(&self.cf) {
+            rho += fq;
+            m[0] += cf[0] * fq;
+            m[1] += cf[1] * fq;
+            m[2] += cf[2] * fq;
+        }
+        (rho, [m[0] / rho, m[1] / rho, m[2] / rho])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weights_sum_to_one() {
+        for l in [d3q19(), d3q27()] {
+            let s: f64 = l.w.iter().sum();
+            assert!((s - 1.0).abs() < 1e-14, "{}: {s}", l.name);
+            assert_eq!(l.c.len(), l.q);
+        }
+    }
+
+    #[test]
+    fn opposites_are_negations() {
+        for l in [d3q19(), d3q27()] {
+            for q in 0..l.q {
+                let o = l.opposite[q];
+                assert_eq!(l.c[o][0], -l.c[q][0]);
+                assert_eq!(l.c[o][1], -l.c[q][1]);
+                assert_eq!(l.c[o][2], -l.c[q][2]);
+                assert_eq!(l.opposite[o], q);
+            }
+        }
+    }
+
+    #[test]
+    fn isotropy_second_moment() {
+        for l in [d3q19(), d3q27()] {
+            for (i, j) in [(0, 0), (1, 1), (2, 2), (0, 1), (0, 2), (1, 2)] {
+                let m: f64 = (0..l.q)
+                    .map(|q| l.w[q] * l.c[q][i] as f64 * l.c[q][j] as f64)
+                    .sum();
+                let want = if i == j { CS2 } else { 0.0 };
+                assert!((m - want).abs() < 1e-14, "{} m[{i}{j}]={m}", l.name);
+            }
+        }
+    }
+
+    #[test]
+    fn equilibrium_moments_roundtrip() {
+        let l = d3q19();
+        let mut f = vec![0.0; l.q];
+        l.equilibrium(1.1, [0.05, -0.02, 0.01], &mut f);
+        let (rho, u) = l.moments(&f);
+        assert!((rho - 1.1).abs() < 1e-12);
+        assert!((u[0] - 0.05).abs() < 1e-12);
+        assert!((u[1] + 0.02).abs() < 1e-12);
+        assert!((u[2] - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn q_counts() {
+        assert_eq!(d3q19().q, 19);
+        assert_eq!(d3q27().q, 27);
+    }
+}

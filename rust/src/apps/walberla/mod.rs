@@ -1,0 +1,23 @@
+//! waLBerla stand-in: block-structured lattice Boltzmann framework.
+//!
+//! Mirrors the parts of waLBerla the paper benchmarks (§2.2): a uniform
+//! block grid, D3Q19/D3Q27 stencils, exchangeable collision operators
+//! (SRT/TRT/MRT/cumulant — the lbmpy-generated-kernel matrix), the
+//! `UniformGridCPU` benchmark reporting MLUP/s, and the free-surface LBM
+//! (volume-of-fluid fill levels, mass flux, cell conversion, curvature)
+//! with the gravity-wave benchmark and its compute/sync/comm phase timers.
+//!
+//! The "code generation" axis of waLBerla (lbmpy) maps to our JAX/Pallas →
+//! HLO artifact path: `runtime::Engine::lbm_step` executes the same
+//! stream-collide update through PJRT, and `uniform::UniformGrid` can run
+//! either the native rust kernels or the AOT artifact.
+
+pub mod collision;
+pub mod fslbm;
+pub mod grid;
+pub mod lattice;
+pub mod uniform;
+
+pub use collision::CollisionOp;
+pub use grid::Block;
+pub use uniform::UniformGrid;

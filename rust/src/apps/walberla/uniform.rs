@@ -1,0 +1,183 @@
+//! The `UniformGridCPU` / `UniformGridGPU` benchmark (paper Tab. 3):
+//! plain LBM on a uniform grid with exchangeable collision operators,
+//! reporting MLUP/s and roofline-relative performance.
+
+use super::collision::CollisionOp;
+use super::grid::Block;
+use super::lattice::{d3q19, d3q27, Lattice};
+use crate::cluster::nodes::NodeModel;
+use crate::cluster::WorkProfile;
+use crate::perf::PerfMonitor;
+use std::time::Instant;
+
+/// Which lattice the benchmark uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stencil {
+    D3Q19,
+    D3Q27,
+}
+
+impl Stencil {
+    pub fn lattice(self) -> Lattice {
+        match self {
+            Stencil::D3Q19 => d3q19(),
+            Stencil::D3Q27 => d3q27(),
+        }
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            Stencil::D3Q19 => "d3q19",
+            Stencil::D3Q27 => "d3q27",
+        }
+    }
+}
+
+/// One benchmark configuration.
+#[derive(Debug, Clone)]
+pub struct UniformGrid {
+    pub stencil: Stencil,
+    pub op: CollisionOp,
+    pub block: usize,
+    pub tau: f64,
+    pub steps: usize,
+}
+
+/// Result of one benchmark run.
+#[derive(Debug, Clone)]
+pub struct UniformGridResult {
+    /// Really measured on this host.
+    pub host_mlups: f64,
+    pub host_secs: f64,
+    /// Exact per-step work of the sweep.
+    pub work_per_step: WorkProfile,
+    pub cells: usize,
+    pub steps: usize,
+}
+
+impl UniformGrid {
+    pub fn new(stencil: Stencil, op: CollisionOp, block: usize) -> UniformGrid {
+        UniformGrid {
+            stencil,
+            op,
+            block,
+            tau: 0.6,
+            steps: 5,
+        }
+    }
+
+    /// Exact work of one full sweep over the block.
+    pub fn work_per_step(&self) -> WorkProfile {
+        let lat = self.stencil.lattice();
+        let cells = (self.block * self.block * self.block) as f64;
+        WorkProfile::new(
+            cells * self.op.flops_per_cell(lat.q),
+            cells * self.op.bytes_per_cell(lat.q),
+        )
+        .efficiency(self.op.efficiency())
+    }
+
+    /// Run on the host (real execution, real wall time) and report.
+    pub fn run(&self, mon: &mut PerfMonitor) -> UniformGridResult {
+        let lat = self.stencil.lattice();
+        let mut b = Block::new(lat, self.block, self.block, self.block);
+        b.init_equilibrium(1.0, [0.01, 0.005, 0.0]);
+        let work = self.work_per_step();
+        let t0 = Instant::now();
+        for _ in 0..self.steps {
+            b.step(self.op, self.tau);
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let cells = b.cells();
+        let updates = (cells * self.steps) as f64;
+        mon.record(
+            "lbm_sweep",
+            secs,
+            work.flops * self.steps as f64,
+            work.bytes * self.steps as f64,
+            work.flops * self.steps as f64 * 0.85, // sweep is SIMD-friendly
+        );
+        UniformGridResult {
+            host_mlups: updates / secs / 1e6,
+            host_secs: secs,
+            work_per_step: work,
+            cells,
+            steps: self.steps,
+        }
+    }
+
+    /// Projected MLUP/s on a catalogue node running one block per core
+    /// with the domain scaled to the core count (the paper's setup).
+    pub fn projected_mlups(&self, node: &NodeModel) -> f64 {
+        let lat = self.stencil.lattice();
+        // bandwidth-bound projection: P = BW_eff / bytes_per_update,
+        // capped by the compute roofline for heavy operators
+        let bpc = self.op.bytes_per_cell(lat.q);
+        let fpc = self.op.flops_per_cell(lat.q);
+        let t_mem = bpc / (node.stream_bw_gbs * 1e9);
+        let t_comp = fpc / (node.peak_gflops() * 1e9);
+        let t = t_mem.max(t_comp) / self.op.efficiency();
+        1.0 / t / 1e6
+    }
+
+    /// Roofline maximum (paper §4.5.2: `P_max = BW / bytes per update`).
+    pub fn pmax_mlups(&self, node: &NodeModel) -> f64 {
+        node.lbm_pmax_mlups(self.op.bytes_per_cell(self.stencil.lattice().q))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::nodes::node;
+
+    #[test]
+    fn run_reports_positive_mlups_and_counters() {
+        let mut mon = PerfMonitor::new();
+        let mut cfg = UniformGrid::new(Stencil::D3Q19, CollisionOp::Srt, 8);
+        cfg.steps = 2;
+        let r = cfg.run(&mut mon);
+        assert!(r.host_mlups > 0.0);
+        assert_eq!(r.cells, 512);
+        let region = mon.region("lbm_sweep").unwrap();
+        assert!(region.flops > 0.0 && region.bytes > 0.0);
+    }
+
+    #[test]
+    fn projection_hits_about_80_percent_of_stream() {
+        // paper §5.2: UniformGridCPU reaches ≈80% of stream-based P_max
+        let icx = node("icx36").unwrap();
+        let cfg = UniformGrid::new(Stencil::D3Q27, CollisionOp::Srt, 32);
+        let frac = cfg.projected_mlups(&icx) / cfg.pmax_mlups(&icx);
+        assert!((0.7..0.9).contains(&frac), "frac={frac}");
+    }
+
+    #[test]
+    fn heavier_operators_slower_or_equal() {
+        let icx = node("icx36").unwrap();
+        let mut last = f64::MAX;
+        for op in CollisionOp::all() {
+            let cfg = UniformGrid::new(Stencil::D3Q27, op, 32);
+            let p = cfg.projected_mlups(&icx);
+            assert!(p <= last * 1.001, "{:?}: {p} vs {last}", op);
+            last = p;
+        }
+    }
+
+    #[test]
+    fn cumulant_clearly_slower_than_srt_on_weak_nodes() {
+        // ivyep1 (8 flop/cy, 85 GB/s): the cumulant operator's extra
+        // arithmetic + lower kernel efficiency costs real MLUP/s there
+        let ivy = node("ivyep1").unwrap();
+        let srt = UniformGrid::new(Stencil::D3Q27, CollisionOp::Srt, 32).projected_mlups(&ivy);
+        let cum =
+            UniformGrid::new(Stencil::D3Q27, CollisionOp::Cumulant, 32).projected_mlups(&ivy);
+        assert!(cum < 0.9 * srt, "cumulant {cum} vs srt {srt}");
+    }
+
+    #[test]
+    fn d3q27_moves_more_bytes_than_d3q19() {
+        let a = UniformGrid::new(Stencil::D3Q19, CollisionOp::Srt, 16).work_per_step();
+        let b = UniformGrid::new(Stencil::D3Q27, CollisionOp::Srt, 16).work_per_step();
+        assert!(b.bytes > a.bytes);
+    }
+}

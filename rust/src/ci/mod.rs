@@ -1,0 +1,251 @@
+//! GitLab-CI stand-in: pipeline specifications, job templating and the
+//! custom HPC runner contract.
+//!
+//! The paper specifies CI jobs in YAML (Listing 1): a job carries runner
+//! `tags` (must include `testcluster` to reach the HPC runner), `variables`
+//! (`HOST`, `SCRIPT`, `SLURM_TIMELIMIT`, `NO_SLURM_SUBMIT`) and a script
+//! that assembles a batch job file from a cluster-specific base part
+//! (`base_config.sh`) plus a benchmark-specific part, then submits it via
+//! `sbatch --parsable --wait`. This module models that structure:
+//!
+//! * [`CiJob`] — one job spec (the `.submit_job` template, instantiated
+//!   per host × benchmark),
+//! * [`Pipeline`] — ordered stages of jobs, triggered by a VCS push event,
+//! * [`assemble_job_script`] — the Listing-1 concatenation,
+//! * [`Runner`] — the custom GitLab-runner: picks up jobs whose tags it
+//!   serves and hands them to the Slurm scheduler (done by the
+//!   coordinator, which owns both ends).
+
+use crate::vcs::PushEvent;
+use std::collections::BTreeMap;
+
+/// One CI job, i.e. an instantiated `.submit_job` template.
+#[derive(Debug, Clone)]
+pub struct CiJob {
+    pub name: String,
+    pub stage: String,
+    /// Runner tags; the HPC runner serves `testcluster`.
+    pub tags: Vec<String>,
+    /// CI variables (HOST, SCRIPT, SLURM_TIMELIMIT, ...).
+    pub variables: BTreeMap<String, String>,
+}
+
+impl CiJob {
+    pub fn new(name: &str, stage: &str) -> CiJob {
+        CiJob {
+            name: name.to_string(),
+            stage: stage.to_string(),
+            tags: vec!["testcluster".to_string()],
+            variables: BTreeMap::new(),
+        }
+    }
+    pub fn var(mut self, k: &str, v: &str) -> CiJob {
+        self.variables.insert(k.to_string(), v.to_string());
+        self
+    }
+    pub fn get(&self, k: &str) -> Option<&str> {
+        self.variables.get(k).map(|s| s.as_str())
+    }
+    /// `SLURM_TIMELIMIT` in minutes (default 120, as in Listing 1).
+    pub fn timelimit_min(&self) -> f64 {
+        self.get("SLURM_TIMELIMIT")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(120.0)
+    }
+}
+
+/// A pipeline: the set of jobs generated for one commit.
+#[derive(Debug, Clone)]
+pub struct Pipeline {
+    pub id: u64,
+    /// The push event that triggered it.
+    pub trigger: PushEvent,
+    /// Whether it came through the trigger API (proxy-repo flow) rather
+    /// than a direct push.
+    pub via_trigger_api: bool,
+    pub jobs: Vec<CiJob>,
+}
+
+impl Pipeline {
+    /// Stages in declaration order (deduplicated).
+    pub fn stages(&self) -> Vec<&str> {
+        let mut out: Vec<&str> = Vec::new();
+        for j in &self.jobs {
+            if !out.contains(&j.stage.as_str()) {
+                out.push(&j.stage);
+            }
+        }
+        out
+    }
+    pub fn jobs_in_stage(&self, stage: &str) -> Vec<&CiJob> {
+        self.jobs.iter().filter(|j| j.stage == stage).collect()
+    }
+}
+
+/// The Listing-1 job-script assembly: cluster-specific `base_config.sh`
+/// prologue + benchmark-specific script body, with `${VAR}` substitution
+/// from the job's CI variables.
+pub fn assemble_job_script(base_config: &str, benchmark_script: &str, job: &CiJob) -> String {
+    let mut script = String::new();
+    script.push_str("#!/bin/bash\n");
+    script.push_str(&format!("#SBATCH --job-name {}\n", job.name));
+    if let Some(host) = job.get("HOST") {
+        script.push_str(&format!("#SBATCH --nodelist={host}\n"));
+    }
+    script.push_str(&format!("#SBATCH --time={}\n", job.timelimit_min() as u64));
+    script.push_str(base_config);
+    if !base_config.ends_with('\n') {
+        script.push('\n');
+    }
+    script.push_str(benchmark_script);
+    if !benchmark_script.ends_with('\n') {
+        script.push('\n');
+    }
+    substitute_vars(&script, &job.variables)
+}
+
+/// `${NAME}` substitution (unknown variables are left untouched, like a
+/// shell with `set +u` would under templating).
+pub fn substitute_vars(text: &str, vars: &BTreeMap<String, String>) -> String {
+    let mut out = String::with_capacity(text.len());
+    let bytes = text.as_bytes();
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] == b'$' && i + 1 < bytes.len() && bytes[i + 1] == b'{' {
+            if let Some(end) = text[i + 2..].find('}') {
+                let name = &text[i + 2..i + 2 + end];
+                if let Some(v) = vars.get(name) {
+                    out.push_str(v);
+                } else {
+                    out.push_str(&text[i..i + 3 + end]);
+                }
+                i += 3 + end;
+                continue;
+            }
+        }
+        // advance one UTF-8 scalar
+        let c = text[i..].chars().next().unwrap();
+        out.push(c);
+        i += c.len_utf8();
+    }
+    out
+}
+
+/// The custom GitLab runner: serves jobs whose tags it covers.
+#[derive(Debug, Clone)]
+pub struct Runner {
+    pub name: String,
+    pub serves_tags: Vec<String>,
+}
+
+impl Runner {
+    pub fn hpc() -> Runner {
+        Runner {
+            name: "nhr-testcluster-runner".to_string(),
+            serves_tags: vec!["testcluster".to_string()],
+        }
+    }
+    /// Can this runner pick up the job? (All job tags must be served.)
+    pub fn accepts(&self, job: &CiJob) -> bool {
+        job.tags.iter().all(|t| self.serves_tags.contains(t))
+    }
+}
+
+/// Counter for pipeline ids.
+#[derive(Debug, Default)]
+pub struct PipelineFactory {
+    next_id: u64,
+}
+
+impl PipelineFactory {
+    pub fn new() -> PipelineFactory {
+        PipelineFactory { next_id: 1 }
+    }
+    pub fn create(&mut self, trigger: PushEvent, via_trigger_api: bool, jobs: Vec<CiJob>) -> Pipeline {
+        let id = self.next_id;
+        self.next_id += 1;
+        Pipeline {
+            id,
+            trigger,
+            via_trigger_api,
+            jobs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn event() -> PushEvent {
+        PushEvent {
+            repo: "fe2ti".into(),
+            branch: "master".into(),
+            commit_id: "abc123".into(),
+        }
+    }
+
+    #[test]
+    fn job_variables_and_timelimit() {
+        let j = CiJob::new("bench-icx36", "benchmark")
+            .var("HOST", "icx36")
+            .var("SLURM_TIMELIMIT", "60");
+        assert_eq!(j.get("HOST"), Some("icx36"));
+        assert_eq!(j.timelimit_min(), 60.0);
+        assert_eq!(CiJob::new("x", "s").timelimit_min(), 120.0);
+    }
+
+    #[test]
+    fn assemble_concatenates_and_substitutes() {
+        let j = CiJob::new("fe2ti216-icx36-mpi", "benchmark")
+            .var("HOST", "icx36")
+            .var("SOLVER", "ilu");
+        let script = assemble_job_script(
+            "module load petsc\nexport OMP_NUM_THREADS=1\n",
+            "./fe2ti --solver ${SOLVER} --host ${HOST}\n",
+            &j,
+        );
+        assert!(script.starts_with("#!/bin/bash\n"));
+        assert!(script.contains("#SBATCH --nodelist=icx36"));
+        assert!(script.contains("module load petsc"));
+        assert!(script.contains("./fe2ti --solver ilu --host icx36"));
+    }
+
+    #[test]
+    fn unknown_vars_left_intact() {
+        let vars: BTreeMap<String, String> = BTreeMap::new();
+        assert_eq!(substitute_vars("echo ${UNSET} done", &vars), "echo ${UNSET} done");
+        let mut vars = BTreeMap::new();
+        vars.insert("A".to_string(), "x".to_string());
+        assert_eq!(substitute_vars("${A}${A}", &vars), "xx");
+        assert_eq!(substitute_vars("tail ${", &vars), "tail ${");
+    }
+
+    #[test]
+    fn runner_tag_matching() {
+        let r = Runner::hpc();
+        assert!(r.accepts(&CiJob::new("a", "s")));
+        let mut gpu_job = CiJob::new("b", "s");
+        gpu_job.tags.push("gpu-farm".to_string());
+        assert!(!r.accepts(&gpu_job));
+    }
+
+    #[test]
+    fn pipeline_stages_ordered_dedup() {
+        let mut f = PipelineFactory::new();
+        let p = f.create(
+            event(),
+            false,
+            vec![
+                CiJob::new("build", "build"),
+                CiJob::new("b1", "benchmark"),
+                CiJob::new("b2", "benchmark"),
+                CiJob::new("plot", "visualize"),
+            ],
+        );
+        assert_eq!(p.stages(), vec!["build", "benchmark", "visualize"]);
+        assert_eq!(p.jobs_in_stage("benchmark").len(), 2);
+        assert_eq!(p.id, 1);
+        assert_eq!(f.create(event(), true, vec![]).id, 2);
+    }
+}

@@ -1,0 +1,83 @@
+//! machinestate stand-in: snapshot the hardware/software state of a node.
+//!
+//! The paper archives a `machinestate` dump with every benchmark job for
+//! reproducibility (§4.3) and uploads it to Kadi4Mat. We snapshot the
+//! simulated node's model plus the real host environment the simulation
+//! ran on, as a JSON document.
+
+use super::nodes::NodeModel;
+use crate::util::json::Json;
+
+/// Produce the machine-state document for `node` as used by job `job_name`.
+pub fn machine_state(node: &NodeModel, job_name: &str, sim_time: f64) -> Json {
+    let mut accels = Vec::new();
+    for a in &node.accelerators {
+        accels.push(
+            Json::obj()
+                .set("name", a.name)
+                .set("mem_bw_gbs", a.mem_bw_gbs)
+                .set("peak_fp32_gflops", a.peak_fp32_gflops),
+        );
+    }
+    Json::obj()
+        .set("tool", "machinestate-sim")
+        .set("version", "0.4.1")
+        .set("job", job_name)
+        .set("sim_time", sim_time)
+        .set(
+            "hostname",
+            node.host,
+        )
+        .set(
+            "cpu",
+            Json::obj()
+                .set("model", node.cpu)
+                .set("sockets", node.sockets)
+                .set("cores_per_socket", node.cores_per_socket)
+                .set("total_cores", node.cores())
+                .set("frequency_ghz", node.freq_ghz)
+                .set("frequency_governor", if node.testcluster { "pinned" } else { "turbo" })
+                .set("flops_per_cycle_dp", node.flops_per_cycle),
+        )
+        .set(
+            "memory",
+            Json::obj().set("stream_bw_gbs", node.stream_bw_gbs),
+        )
+        .set("accelerators", Json::Arr(accels))
+        .set(
+            "host_environment",
+            Json::obj()
+                .set("os", std::env::consts::OS)
+                .set("arch", std::env::consts::ARCH)
+                .set("simulated", true),
+        )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::nodes::node;
+
+    #[test]
+    fn snapshot_contains_node_facts() {
+        let n = node("icx36").unwrap();
+        let ms = machine_state(&n, "fe2ti216-icx36-mpi", 12.5);
+        assert_eq!(ms.get("hostname").unwrap().as_str(), Some("icx36"));
+        let cpu = ms.get("cpu").unwrap();
+        assert_eq!(cpu.get("total_cores").unwrap().as_f64(), Some(72.0));
+        assert_eq!(cpu.get("frequency_governor").unwrap().as_str(), Some("pinned"));
+        // round-trips through JSON
+        let parsed = Json::parse(&ms.to_string_pretty()).unwrap();
+        assert_eq!(parsed, ms);
+    }
+
+    #[test]
+    fn production_node_is_turbo() {
+        let n = node("fritz").unwrap();
+        let ms = machine_state(&n, "weakscale", 0.0);
+        assert_eq!(
+            ms.get("cpu").unwrap().get("frequency_governor").unwrap().as_str(),
+            Some("turbo")
+        );
+    }
+}

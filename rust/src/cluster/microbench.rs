@@ -1,0 +1,212 @@
+//! likwid-bench stand-in: stream / copy / load / peakflops microbenchmarks.
+//!
+//! The paper measures per-node memory bandwidth and peak FLOP/s with
+//! `likwid-bench` and stores them in the TSDB as the roofline ceilings
+//! (§4.4). Here the kernels are **really executed on the host** (so the
+//! numbers are honest measurements of this machine) and additionally
+//! **projected per node model** for the simulated cluster's dashboards.
+
+use super::nodes::NodeModel;
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MicrobenchKind {
+    /// triad: a[i] = b[i] + s*c[i]  (3 streams)
+    Stream,
+    /// copy: a[i] = b[i]            (2 streams)
+    Copy,
+    /// load: s += a[i]              (1 stream)
+    Load,
+    /// peakflops: fused multiply-add chain, cache-resident
+    PeakFlops,
+}
+
+impl MicrobenchKind {
+    pub fn all() -> [MicrobenchKind; 4] {
+        [
+            MicrobenchKind::Stream,
+            MicrobenchKind::Copy,
+            MicrobenchKind::Load,
+            MicrobenchKind::PeakFlops,
+        ]
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            MicrobenchKind::Stream => "stream",
+            MicrobenchKind::Copy => "copy",
+            MicrobenchKind::Load => "load",
+            MicrobenchKind::PeakFlops => "peakflops",
+        }
+    }
+    /// Ratio of this benchmark's attainable bandwidth to stream triad —
+    /// calibration constants reflecting typical likwid-bench spreads.
+    pub fn bw_ratio(self) -> f64 {
+        match self {
+            MicrobenchKind::Stream => 1.0,
+            MicrobenchKind::Copy => 0.92,
+            MicrobenchKind::Load => 1.08,
+            MicrobenchKind::PeakFlops => 0.0,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct MicrobenchResult {
+    pub kind: MicrobenchKind,
+    /// GB/s for the bandwidth kernels, GFLOP/s for peakflops.
+    pub value: f64,
+    pub unit: &'static str,
+    /// true if really measured on the host, false if projected from model.
+    pub measured: bool,
+}
+
+/// Really run the microbenchmark kernel on the host and report the
+/// measured number. `n` is the working-set length in f64 elements.
+pub fn run_host_microbench(kind: MicrobenchKind, n: usize, reps: usize) -> MicrobenchResult {
+    match kind {
+        MicrobenchKind::Stream => {
+            let b = vec![1.0f64; n];
+            let c = vec![2.0f64; n];
+            let mut a = vec![0.0f64; n];
+            let s = 1.5f64;
+            let t = Instant::now();
+            for _ in 0..reps {
+                for i in 0..n {
+                    a[i] = b[i] + s * c[i];
+                }
+                std::hint::black_box(&mut a);
+            }
+            let secs = t.elapsed().as_secs_f64();
+            let bytes = (3 * 8 * n * reps) as f64;
+            MicrobenchResult {
+                kind,
+                value: bytes / secs / 1e9,
+                unit: "GB/s",
+                measured: true,
+            }
+        }
+        MicrobenchKind::Copy => {
+            let b = vec![1.0f64; n];
+            let mut a = vec![0.0f64; n];
+            let t = Instant::now();
+            for _ in 0..reps {
+                a.copy_from_slice(&b);
+                std::hint::black_box(&mut a);
+            }
+            let secs = t.elapsed().as_secs_f64();
+            let bytes = (2 * 8 * n * reps) as f64;
+            MicrobenchResult {
+                kind,
+                value: bytes / secs / 1e9,
+                unit: "GB/s",
+                measured: true,
+            }
+        }
+        MicrobenchKind::Load => {
+            let a = vec![1.0f64; n];
+            let mut acc = 0.0f64;
+            let t = Instant::now();
+            for _ in 0..reps {
+                let mut s0 = 0.0;
+                let mut s1 = 0.0;
+                let mut s2 = 0.0;
+                let mut s3 = 0.0;
+                let mut i = 0;
+                while i + 4 <= n {
+                    s0 += a[i];
+                    s1 += a[i + 1];
+                    s2 += a[i + 2];
+                    s3 += a[i + 3];
+                    i += 4;
+                }
+                acc += s0 + s1 + s2 + s3;
+            }
+            std::hint::black_box(acc);
+            let secs = t.elapsed().as_secs_f64();
+            let bytes = (8 * n * reps) as f64;
+            MicrobenchResult {
+                kind,
+                value: bytes / secs / 1e9,
+                unit: "GB/s",
+                measured: true,
+            }
+        }
+        MicrobenchKind::PeakFlops => {
+            // cache-resident FMA chains, 8 accumulators
+            let m = n.min(4096);
+            let a = vec![1.000000001f64; m];
+            let mut acc = [1.0f64; 8];
+            let t = Instant::now();
+            for _ in 0..reps {
+                for i in (0..m).step_by(8) {
+                    for (k, acc_k) in acc.iter_mut().enumerate() {
+                        let x = a[(i + k) % m];
+                        *acc_k = acc_k.mul_add(x, 0.5);
+                    }
+                }
+            }
+            std::hint::black_box(acc);
+            let secs = t.elapsed().as_secs_f64();
+            let flops = (2 * m * reps) as f64; // each FMA = 2 flops
+            MicrobenchResult {
+                kind,
+                value: flops / secs / 1e9,
+                unit: "GFLOP/s",
+                measured: true,
+            }
+        }
+    }
+}
+
+/// Project the microbenchmark result for a catalogue node (what
+/// likwid-bench would report on that machine). Used to fill the roofline
+/// ceilings for all 11 Testcluster architectures.
+pub fn project_node_microbench(node: &NodeModel, kind: MicrobenchKind) -> MicrobenchResult {
+    let value = match kind {
+        MicrobenchKind::PeakFlops => node.peak_gflops(),
+        bw => node.stream_bw_gbs * bw.bw_ratio(),
+    };
+    MicrobenchResult {
+        kind,
+        value,
+        unit: if kind == MicrobenchKind::PeakFlops {
+            "GFLOP/s"
+        } else {
+            "GB/s"
+        },
+        measured: false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::nodes::node;
+
+    #[test]
+    fn host_microbenches_produce_positive_numbers() {
+        for kind in MicrobenchKind::all() {
+            let r = run_host_microbench(kind, 1 << 16, 4);
+            assert!(r.value > 0.0, "{:?} -> {}", kind, r.value);
+            assert!(r.measured);
+        }
+    }
+
+    #[test]
+    fn projection_uses_node_model() {
+        let n = node("icx36").unwrap();
+        let s = project_node_microbench(&n, MicrobenchKind::Stream);
+        assert_eq!(s.value, 237.0);
+        let p = project_node_microbench(&n, MicrobenchKind::PeakFlops);
+        assert_eq!(p.value, n.peak_gflops());
+        assert!(!s.measured);
+    }
+
+    #[test]
+    fn load_beats_copy_in_projection() {
+        let n = node("skylakesp2").unwrap();
+        let load = project_node_microbench(&n, MicrobenchKind::Load).value;
+        let copy = project_node_microbench(&n, MicrobenchKind::Copy).value;
+        assert!(load > copy);
+    }
+}

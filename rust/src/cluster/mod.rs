@@ -1,0 +1,92 @@
+//! Simulated NHR@FAU Testcluster (+ Fritz and JUWELS production nodes).
+//!
+//! The paper runs its CB pipeline on a heterogeneous single-node test
+//! cluster (Tab. 2): every node is a different CPU/GPU architecture. That
+//! hardware is not available here, so this module provides:
+//!
+//! * a **node catalogue** ([`catalogue`]) with per-node machine models
+//!   (cores, pinned frequency, DP FLOP/cycle, STREAM-class memory
+//!   bandwidth) calibrated from the public specs of the Tab. 2 hardware;
+//! * an **execution model** ([`NodeModel::exec_time`]): a roofline-based
+//!   time projection for a workload characterized by exact FLOP and
+//!   traffic counts (counted, not sampled, by `perf::`);
+//! * **microbenchmarks** ([`microbench`]) standing in for `likwid-bench`:
+//!   stream/copy/load/peakflops really executed on the host, plus the
+//!   catalogue projection used by the roofline dashboards;
+//! * a **machine-state snapshot** ([`machinestate`]) standing in for the
+//!   `machinestate` tool the paper archives for reproducibility.
+
+pub mod machinestate;
+pub mod microbench;
+pub mod nodes;
+
+pub use machinestate::machine_state;
+pub use microbench::{run_host_microbench, MicrobenchKind, MicrobenchResult};
+pub use nodes::{catalogue, Accelerator, NodeModel, Vendor};
+
+/// A workload characterization: exact operation/traffic counts plus how
+/// parallel the phase is. Produced by the instrumented applications.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WorkProfile {
+    /// Double-precision floating point operations.
+    pub flops: f64,
+    /// Bytes moved to/from main memory.
+    pub bytes: f64,
+    /// Fraction of the work that parallelizes across cores (Amdahl).
+    pub parallel_fraction: f64,
+    /// Kernel efficiency relative to roofline (0..1]: how close this code
+    /// gets to the machine limit (direct solvers ≈ high flop efficiency,
+    /// sparse triangular solves ≈ low).
+    pub efficiency: f64,
+}
+
+impl WorkProfile {
+    pub fn new(flops: f64, bytes: f64) -> WorkProfile {
+        WorkProfile {
+            flops,
+            bytes,
+            parallel_fraction: 1.0,
+            efficiency: 1.0,
+        }
+    }
+    pub fn parallel(mut self, f: f64) -> Self {
+        self.parallel_fraction = f;
+        self
+    }
+    pub fn efficiency(mut self, e: f64) -> Self {
+        self.efficiency = e;
+        self
+    }
+    /// Operational intensity in FLOP/byte.
+    pub fn intensity(&self) -> f64 {
+        if self.bytes <= 0.0 {
+            f64::INFINITY
+        } else {
+            self.flops / self.bytes
+        }
+    }
+    pub fn add(&mut self, other: &WorkProfile) {
+        self.flops += other.flops;
+        self.bytes += other.bytes;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn work_profile_intensity() {
+        let w = WorkProfile::new(100.0, 50.0);
+        assert_eq!(w.intensity(), 2.0);
+        assert!(WorkProfile::new(1.0, 0.0).intensity().is_infinite());
+    }
+
+    #[test]
+    fn work_profile_accumulates() {
+        let mut w = WorkProfile::new(1.0, 2.0);
+        w.add(&WorkProfile::new(3.0, 4.0));
+        assert_eq!(w.flops, 4.0);
+        assert_eq!(w.bytes, 6.0);
+    }
+}

@@ -1,0 +1,371 @@
+//! The node catalogue: machine models for the Tab. 2 Testcluster nodes plus
+//! the Fritz and JUWELS production nodes used in §5's scaling runs.
+//!
+//! Calibration: peak DP FLOP/s = cores × frequency × FLOP/cycle (SIMD width
+//! × 2 FMA pipes where present); memory bandwidth is the STREAM-class
+//! attainable number for the platform (not theoretical DDR peak). The CB
+//! pipeline pins clocks to 2.0 GHz on the Testcluster (paper §5.1); Fritz
+//! runs unpinned, which is why the paper's Fritz numbers are slightly
+//! better — the model captures that through `freq_ghz`.
+
+use super::WorkProfile;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Vendor {
+    Intel,
+    Amd,
+}
+
+/// An accelerator attached to a node (GPU). Only modeled (no execution):
+/// used for the projected `UniformGridGPU` dashboard columns.
+#[derive(Debug, Clone)]
+pub struct Accelerator {
+    pub name: &'static str,
+    /// Device memory bandwidth (GB/s), the LBM-relevant ceiling.
+    pub mem_bw_gbs: f64,
+    pub peak_fp32_gflops: f64,
+}
+
+/// Machine model for one node type.
+#[derive(Debug, Clone)]
+pub struct NodeModel {
+    /// Slurm hostname, e.g. `icx36`.
+    pub host: &'static str,
+    pub cpu: &'static str,
+    pub vendor: Vendor,
+    pub sockets: usize,
+    pub cores_per_socket: usize,
+    /// Clock the CB pipeline pins (GHz); production nodes keep turbo.
+    pub freq_ghz: f64,
+    /// DP FLOP per cycle per core (SIMD width × FMA pipes × 2).
+    pub flops_per_cycle: f64,
+    /// Attainable STREAM triad bandwidth, full node (GB/s).
+    pub stream_bw_gbs: f64,
+    /// copy/load variants measured by likwid-bench differ from triad;
+    /// modelled as fixed ratios of stream (copy slightly lower, load higher).
+    pub accelerators: Vec<Accelerator>,
+    /// Whether this node is part of the single-node Testcluster partition.
+    pub testcluster: bool,
+}
+
+impl NodeModel {
+    pub fn cores(&self) -> usize {
+        self.sockets * self.cores_per_socket
+    }
+
+    /// Peak DP GFLOP/s of the full node.
+    pub fn peak_gflops(&self) -> f64 {
+        self.cores() as f64 * self.freq_ghz * self.flops_per_cycle
+    }
+
+    /// Peak GFLOP/s using only `cores` cores.
+    pub fn peak_gflops_cores(&self, cores: usize) -> f64 {
+        cores.min(self.cores()) as f64 * self.freq_ghz * self.flops_per_cycle
+    }
+
+    /// Bandwidth attainable from `cores` cores: saturates at ~1/4 of the
+    /// cores (typical for modern multi-socket machines).
+    pub fn bw_gbs_cores(&self, cores: usize) -> f64 {
+        let sat = (self.cores() as f64 / 4.0).max(1.0);
+        let frac = (cores as f64 / sat).min(1.0);
+        self.stream_bw_gbs * frac
+    }
+
+    /// Roofline execution-time projection for a counted workload on
+    /// `cores` cores. Amdahl-corrected for the serial fraction.
+    ///
+    /// `t = max(flops / peak, bytes / bw) / efficiency`, with the parallel
+    /// part using `cores` and the serial part one core.
+    pub fn exec_time(&self, w: &WorkProfile, cores: usize) -> f64 {
+        let cores = cores.clamp(1, self.cores());
+        let eff = w.efficiency.clamp(1e-3, 1.0);
+        let par = w.parallel_fraction.clamp(0.0, 1.0);
+
+        let t_at = |c: usize, flops: f64, bytes: f64| -> f64 {
+            let t_comp = flops / (self.peak_gflops_cores(c) * 1e9);
+            let t_mem = bytes / (self.bw_gbs_cores(c) * 1e9);
+            t_comp.max(t_mem)
+        };
+        let t_par = t_at(cores, w.flops * par, w.bytes * par);
+        let t_ser = t_at(1, w.flops * (1.0 - par), w.bytes * (1.0 - par));
+        (t_par + t_ser) / eff
+    }
+
+    /// Max LBM performance in MLUP/s given bytes moved per cell update
+    /// (paper §4.5.2, after Holzer et al.: `P_max = BW / bytes_per_update`).
+    pub fn lbm_pmax_mlups(&self, bytes_per_update: f64) -> f64 {
+        self.stream_bw_gbs * 1e9 / bytes_per_update / 1e6
+    }
+}
+
+/// Build the full catalogue: Tab. 2 Testcluster + Fritz + JUWELS.
+pub fn catalogue() -> Vec<NodeModel> {
+    let acc = |name: &'static str, bw: f64, pf: f64| Accelerator {
+        name,
+        mem_bw_gbs: bw,
+        peak_fp32_gflops: pf,
+    };
+    vec![
+        NodeModel {
+            host: "casclakesp2",
+            cpu: "Dual Intel Xeon Cascade Lake Gold 6248",
+            vendor: Vendor::Intel,
+            sockets: 2,
+            cores_per_socket: 20,
+            freq_ghz: 2.0,
+            flops_per_cycle: 32.0, // AVX-512, 2 FMA
+            stream_bw_gbs: 205.0,
+            accelerators: vec![],
+            testcluster: true,
+        },
+        NodeModel {
+            host: "euryale",
+            cpu: "Dual Intel Xeon Broadwell E5-2620 v4",
+            vendor: Vendor::Intel,
+            sockets: 2,
+            cores_per_socket: 8,
+            freq_ghz: 2.0,
+            flops_per_cycle: 16.0, // AVX2, 2 FMA
+            stream_bw_gbs: 105.0,
+            accelerators: vec![acc("AMD RX 6900 XT", 512.0, 23040.0)],
+            testcluster: true,
+        },
+        NodeModel {
+            host: "genoa2",
+            cpu: "Dual AMD EPYC 9354 Genoa",
+            vendor: Vendor::Amd,
+            sockets: 2,
+            cores_per_socket: 32,
+            freq_ghz: 2.0,
+            flops_per_cycle: 16.0, // Zen4: AVX-512 on 2×256b datapaths
+            stream_bw_gbs: 460.0,
+            accelerators: vec![
+                acc("Nvidia A40", 696.0, 37400.0),
+                acc("Nvidia L40s", 864.0, 91600.0),
+            ],
+            testcluster: true,
+        },
+        NodeModel {
+            host: "hasep1",
+            cpu: "Dual Intel Xeon Haswell E5-2695 v3",
+            vendor: Vendor::Intel,
+            sockets: 2,
+            cores_per_socket: 14,
+            freq_ghz: 2.0,
+            flops_per_cycle: 16.0,
+            stream_bw_gbs: 112.0,
+            accelerators: vec![],
+            testcluster: true,
+        },
+        NodeModel {
+            host: "icx36",
+            cpu: "Dual Intel Xeon Ice Lake Platinum 8360Y",
+            vendor: Vendor::Intel,
+            sockets: 2,
+            cores_per_socket: 36,
+            freq_ghz: 2.0,
+            flops_per_cycle: 32.0,
+            stream_bw_gbs: 237.0, // paper §5.2 quotes ≈237 GB/s stream
+            accelerators: vec![],
+            testcluster: true,
+        },
+        NodeModel {
+            host: "ivyep1",
+            cpu: "Dual Intel Xeon Ivy Bridge E5-2690 v2",
+            vendor: Vendor::Intel,
+            sockets: 2,
+            cores_per_socket: 10,
+            freq_ghz: 2.0,
+            flops_per_cycle: 8.0, // AVX, no FMA
+            stream_bw_gbs: 85.0,
+            accelerators: vec![],
+            testcluster: true,
+        },
+        NodeModel {
+            host: "medusa",
+            cpu: "Dual Intel Xeon Cascade Lake Gold 6246",
+            vendor: Vendor::Intel,
+            sockets: 2,
+            cores_per_socket: 12,
+            freq_ghz: 2.0,
+            flops_per_cycle: 32.0,
+            stream_bw_gbs: 200.0,
+            accelerators: vec![
+                acc("Nvidia Geforce RTX 2070 SUPER", 448.0, 9060.0),
+                acc("Nvidia Geforce RTX 2080 SUPER", 496.0, 11150.0),
+                acc("Nvidia Quadro RTX 5000", 448.0, 11150.0),
+                acc("Nvidia Quadro RTX 6000", 672.0, 16300.0),
+            ],
+            testcluster: true,
+        },
+        NodeModel {
+            host: "naples1",
+            cpu: "Dual AMD EPYC 7451 Naples",
+            vendor: Vendor::Amd,
+            sockets: 2,
+            cores_per_socket: 24,
+            freq_ghz: 2.0,
+            flops_per_cycle: 8.0, // Zen1: 2×128b FMA
+            stream_bw_gbs: 230.0,
+            accelerators: vec![],
+            testcluster: true,
+        },
+        NodeModel {
+            host: "optane1",
+            cpu: "Dual Intel Xeon Ice Lake Platinum 8362",
+            vendor: Vendor::Intel,
+            sockets: 2,
+            cores_per_socket: 32,
+            freq_ghz: 2.0,
+            flops_per_cycle: 32.0,
+            stream_bw_gbs: 230.0,
+            accelerators: vec![],
+            testcluster: true,
+        },
+        NodeModel {
+            host: "rome1",
+            cpu: "Single AMD EPYC 7452 Rome",
+            vendor: Vendor::Amd,
+            sockets: 1,
+            cores_per_socket: 32,
+            freq_ghz: 2.0,
+            flops_per_cycle: 16.0, // Zen2: 2×256b FMA
+            stream_bw_gbs: 120.0,
+            accelerators: vec![],
+            testcluster: true,
+        },
+        NodeModel {
+            host: "skylakesp2",
+            cpu: "Intel Xeon Skylake Gold 6148",
+            vendor: Vendor::Intel,
+            sockets: 2,
+            cores_per_socket: 20,
+            freq_ghz: 2.0,
+            flops_per_cycle: 32.0,
+            stream_bw_gbs: 180.0,
+            accelerators: vec![],
+            testcluster: true,
+        },
+        // ---- production systems for the §5 scaling runs ----
+        NodeModel {
+            host: "fritz",
+            cpu: "Dual Intel Xeon Ice Lake Platinum 8360Y (Fritz @ NHR@FAU)",
+            vendor: Vendor::Intel,
+            sockets: 2,
+            cores_per_socket: 36,
+            freq_ghz: 2.3, // not pinned → slightly faster than icx36 (paper §5.1)
+            flops_per_cycle: 32.0,
+            stream_bw_gbs: 250.0,
+            accelerators: vec![],
+            testcluster: false,
+        },
+        NodeModel {
+            host: "juwels",
+            cpu: "Dual Intel Xeon Skylake Platinum 8168 (JUWELS @ JSC)",
+            vendor: Vendor::Intel,
+            sockets: 2,
+            cores_per_socket: 24,
+            freq_ghz: 2.2,
+            flops_per_cycle: 32.0,
+            stream_bw_gbs: 190.0,
+            accelerators: vec![],
+            testcluster: false,
+        },
+    ]
+}
+
+/// Look up a node model by hostname.
+pub fn node(host: &str) -> Option<NodeModel> {
+    catalogue().into_iter().find(|n| n.host == host)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalogue_covers_table2_plus_production() {
+        let cat = catalogue();
+        let hosts: Vec<&str> = cat.iter().map(|n| n.host).collect();
+        for h in [
+            "casclakesp2", "euryale", "genoa2", "hasep1", "icx36", "ivyep1",
+            "medusa", "naples1", "optane1", "rome1", "skylakesp2",
+        ] {
+            assert!(hosts.contains(&h), "missing Tab.2 host {h}");
+        }
+        assert!(hosts.contains(&"fritz") && hosts.contains(&"juwels"));
+        assert_eq!(cat.iter().filter(|n| n.testcluster).count(), 11);
+    }
+
+    #[test]
+    fn icx36_matches_paper_quotes() {
+        let n = node("icx36").unwrap();
+        assert_eq!(n.cores(), 72);
+        // paper: ≈237 GB/s stream on the Icelake node
+        assert!((n.stream_bw_gbs - 237.0).abs() < 1.0);
+        // 72 cores × 2.0 GHz × 32 flop/cy = 4608 GF
+        assert!((n.peak_gflops() - 4608.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn exec_time_respects_roofline() {
+        let n = node("icx36").unwrap();
+        // pure-compute workload: 4.608e12 flops at peak = 1 s on full node
+        let w = WorkProfile::new(4.608e12, 0.0);
+        let t = n.exec_time(&w, 72);
+        assert!((t - 1.0).abs() < 1e-9, "t={t}");
+        // memory-bound workload: 237 GB at full BW = 1 s
+        let w = WorkProfile::new(0.0, 237e9);
+        assert!((n.exec_time(&w, 72) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn exec_time_scales_with_cores_and_efficiency() {
+        let n = node("icx36").unwrap();
+        let w = WorkProfile::new(1e12, 0.0);
+        let t72 = n.exec_time(&w, 72);
+        let t36 = n.exec_time(&w, 36);
+        assert!((t36 / t72 - 2.0).abs() < 1e-9);
+        let w_half = WorkProfile::new(1e12, 0.0).efficiency(0.5);
+        assert!((n.exec_time(&w_half, 72) / t72 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn serial_fraction_dominates_amdahl() {
+        let n = node("icx36").unwrap();
+        let w = WorkProfile::new(1e12, 0.0).parallel(0.5);
+        let t = n.exec_time(&w, 72);
+        // serial half on 1 core ≈ 0.5e12/64e9 = 7.8 s >> parallel half
+        assert!(t > 7.0, "t={t}");
+    }
+
+    #[test]
+    fn bandwidth_saturates() {
+        let n = node("icx36").unwrap();
+        // 18 cores (= cores/4) already saturate
+        assert_eq!(n.bw_gbs_cores(18), n.bw_gbs_cores(72));
+        assert!(n.bw_gbs_cores(1) < n.bw_gbs_cores(18));
+    }
+
+    #[test]
+    fn lbm_pmax_matches_formula() {
+        let n = node("icx36").unwrap();
+        // D3Q19 AA-even-ish: 19 reads + 19 writes × 8 B = 304 B/update
+        let p = n.lbm_pmax_mlups(304.0);
+        assert!((p - 237e9 / 304.0 / 1e6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fritz_faster_than_pinned_icx36() {
+        let f = node("fritz").unwrap();
+        let i = node("icx36").unwrap();
+        assert!(f.peak_gflops() > i.peak_gflops());
+    }
+
+    #[test]
+    fn gpu_nodes_have_accelerators() {
+        assert_eq!(node("medusa").unwrap().accelerators.len(), 4);
+        assert_eq!(node("genoa2").unwrap().accelerators.len(), 2);
+        assert!(node("icx36").unwrap().accelerators.is_empty());
+    }
+}

@@ -1,0 +1,560 @@
+//! The continuous-benchmarking coordinator: the paper's system
+//! contribution (§3–§4), wired end to end.
+//!
+//! On every push to a watched repository the coordinator:
+//!
+//! 1. creates a CI pipeline (GitLab analogue, [`crate::ci`]),
+//! 2. instantiates the benchmark job matrix — node × compiler × solver ×
+//!   parallelization for FE2TI, node × collision operator for waLBerla
+//!   (>80 jobs per FE2TI pipeline, like the paper),
+//! 3. assembles per-job batch scripts (Listing 1) and submits them to the
+//!   Slurm-like scheduler over the simulated Testcluster,
+//! 4. parses each job's output (likwid-style counters), uploads metric
+//!   points to the TSDB (fields) tagged with the run parameters (tags)
+//!   and the pipeline trigger time (timestamp),
+//! 5. archives raw artifacts as linked records in the Kadi4Mat-like store
+//!   (one collection per pipeline execution, Fig. 5),
+//! 6. refreshes the Grafana-like dashboards and the roofline plots.
+//!
+//! Build configuration lives in the repository tree (`benchmark.cfg`), so
+//! *commits change measured performance* — the mechanism behind the
+//! paper's Fig. 10b BLAS-fix story and the regression-detection example.
+
+pub mod fe2ti_pipeline;
+pub mod scaling_pipeline;
+pub mod walberla_pipeline;
+
+use crate::ci::{CiJob, Pipeline, PipelineFactory, Runner};
+use crate::cluster::machinestate::machine_state;
+use crate::cluster::nodes::catalogue;
+use crate::datastore::{DataStore, Id};
+use crate::slurm::{JobSpec, Payload, Scheduler};
+use crate::tsdb::{Db, Point};
+use crate::vcs::{PushEvent, Repository};
+use std::collections::BTreeMap;
+
+/// Repository-side benchmark configuration (parsed from `benchmark.cfg`
+/// in the commit tree). Line format: `key = value`.
+#[derive(Debug, Clone, Default)]
+pub struct BenchConfig {
+    pub entries: BTreeMap<String, String>,
+}
+
+impl BenchConfig {
+    pub fn parse(text: &str) -> BenchConfig {
+        let mut entries = BTreeMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some((k, v)) = line.split_once('=') {
+                entries.insert(k.trim().to_string(), v.trim().to_string());
+            }
+        }
+        BenchConfig { entries }
+    }
+    pub fn from_commit(repo: &Repository, commit_id: &str) -> BenchConfig {
+        repo.get(commit_id)
+            .and_then(|c| c.tree.get("benchmark.cfg"))
+            .map(|t| BenchConfig::parse(t))
+            .unwrap_or_default()
+    }
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.entries.get(key).map(|s| s.as_str())
+    }
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+/// One executed benchmark job's parsed metrics.
+#[derive(Debug, Clone)]
+pub struct JobMetrics {
+    pub job_name: String,
+    pub node: String,
+    /// Tag → value.
+    pub tags: BTreeMap<String, String>,
+    /// Field → value.
+    pub fields: BTreeMap<String, f64>,
+    pub raw_log: String,
+}
+
+/// Parse `METRIC key=value` and `TAG key=value` lines from a job log —
+/// the §4.3 "collected and parsed" step.
+pub fn parse_job_output(job_name: &str, node: &str, log: &str) -> JobMetrics {
+    let mut tags = BTreeMap::new();
+    let mut fields = BTreeMap::new();
+    for line in log.lines() {
+        if let Some(rest) = line.strip_prefix("METRIC ") {
+            if let Some((k, v)) = rest.split_once('=') {
+                if let Ok(v) = v.trim().parse::<f64>() {
+                    fields.insert(k.trim().to_string(), v);
+                }
+            }
+        } else if let Some(rest) = line.strip_prefix("TAG ") {
+            if let Some((k, v)) = rest.split_once('=') {
+                tags.insert(k.trim().to_string(), v.trim().to_string());
+            }
+        }
+    }
+    JobMetrics {
+        job_name: job_name.to_string(),
+        node: node.to_string(),
+        tags,
+        fields,
+        raw_log: log.to_string(),
+    }
+}
+
+/// A job ready for submission: CI spec + the closure that runs it.
+pub struct PreparedJob {
+    pub ci: CiJob,
+    pub payload: Payload,
+}
+
+/// Summary of one pipeline execution.
+#[derive(Debug, Clone)]
+pub struct PipelineReport {
+    pub pipeline_id: u64,
+    pub commit_id: String,
+    pub jobs_total: usize,
+    pub jobs_completed: usize,
+    pub jobs_failed: usize,
+    pub points_uploaded: usize,
+    pub records_created: usize,
+    pub collection: Id,
+    /// Simulated wall time the whole pipeline took on the cluster.
+    pub duration: f64,
+}
+
+/// The whole CB installation.
+pub struct CbSystem {
+    pub scheduler: Scheduler,
+    pub db: Db,
+    pub store: DataStore,
+    pub runner: Runner,
+    pub pipelines: PipelineFactory,
+    pub executed: Vec<PipelineReport>,
+    root_collection: Id,
+    /// Simulated "trigger time" counter: advances per pipeline (ns).
+    trigger_clock: i64,
+}
+
+impl Default for CbSystem {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CbSystem {
+    pub fn new() -> CbSystem {
+        let mut store = DataStore::new();
+        let root_collection = store.create_collection("cb-project", "CB project-level collection");
+        CbSystem {
+            scheduler: Scheduler::new(catalogue().into_iter().filter(|n| n.testcluster).collect()),
+            db: Db::new(),
+            store,
+            runner: Runner::hpc(),
+            pipelines: PipelineFactory::new(),
+            executed: Vec::new(),
+            root_collection,
+            trigger_clock: 0,
+        }
+    }
+
+    /// Execute a pipeline: submit all jobs, wait, parse, upload, archive.
+    pub fn execute_pipeline(
+        &mut self,
+        event: &PushEvent,
+        via_trigger_api: bool,
+        jobs: Vec<PreparedJob>,
+        measurement: &str,
+    ) -> anyhow::Result<PipelineReport> {
+        self.trigger_clock += 1_000_000_000; // pipelines 1 s apart
+        let trigger_ts = self.trigger_clock;
+
+        let mut ci_jobs = Vec::new();
+        let mut submitted = Vec::new();
+        let start = self.scheduler.now();
+        for j in jobs {
+            anyhow::ensure!(
+                self.runner.accepts(&j.ci),
+                "no runner serves job `{}` tags {:?}",
+                j.ci.name,
+                j.ci.tags
+            );
+            let host = j
+                .ci
+                .get("HOST")
+                .ok_or_else(|| anyhow::anyhow!("job `{}` missing HOST", j.ci.name))?
+                .to_string();
+            let spec = JobSpec {
+                name: j.ci.name.clone(),
+                nodelist: host,
+                timelimit_min: j.ci.timelimit_min(),
+            };
+            let id = self
+                .scheduler
+                .sbatch(spec, j.payload)
+                .map_err(|e| anyhow::anyhow!(e))?;
+            submitted.push((id, j.ci.clone()));
+            ci_jobs.push(j.ci);
+        }
+        let pipeline: Pipeline = self.pipelines.create(event.clone(), via_trigger_api, ci_jobs);
+
+        // sbatch --wait
+        self.scheduler.wait_all();
+
+        // per-execution collection (Fig. 5)
+        let coll = self.store.create_collection(
+            &format!("pipeline-{}", pipeline.id),
+            &format!(
+                "{} pipeline #{} @ {}",
+                event.repo,
+                pipeline.id,
+                &event.commit_id[..8.min(event.commit_id.len())]
+            ),
+        );
+        self.store
+            .add_child_collection(self.root_collection, coll)
+            .ok();
+
+        let mut completed = 0;
+        let mut failed = 0;
+        let mut points = 0;
+        let mut records = 0;
+        for (slurm_id, ci) in &submitted {
+            let job = self.scheduler.job(*slurm_id).expect("job exists");
+            let state = job.state;
+            let log = job.log.clone();
+            let node_host = job.spec.nodelist.clone();
+            let node = self.scheduler.node(&node_host).unwrap().clone();
+            if state == crate::slurm::JobState::Completed {
+                completed += 1;
+            } else {
+                failed += 1;
+            }
+
+            // --- parse + upload (fields & tags, trigger time as ts) ---
+            let metrics = parse_job_output(&ci.name, &node_host, &log);
+            if !metrics.fields.is_empty() {
+                let mut p = Point::new(measurement, trigger_ts);
+                p.tags.insert("node".into(), node_host.clone());
+                p.tags.insert("commit".into(), event.commit_id[..8].to_string());
+                p.tags.insert("repo".into(), event.repo.clone());
+                p.tags.insert("branch".into(), event.branch.clone());
+                for (k, v) in &metrics.tags {
+                    p.tags.insert(k.clone(), v.clone());
+                }
+                for (k, v) in &metrics.fields {
+                    p.fields.insert(k.clone(), *v);
+                }
+                self.db.insert(p);
+                points += 1;
+            }
+
+            // --- archive records: job log + likwid + machinestate ---
+            let rid_job = self
+                .store
+                .create_record(
+                    &format!("p{}-job-{}", pipeline.id, ci.name),
+                    &format!("job log {}", ci.name),
+                    "job-log",
+                )
+                .map_err(|e| anyhow::anyhow!(e))?;
+            self.store.attach_file(rid_job, "slurm.log", &log).ok();
+            self.store.set_meta(rid_job, "node", &node_host).ok();
+            self.store.set_meta(rid_job, "state", &format!("{state:?}")).ok();
+            let rid_perf = self
+                .store
+                .create_record(
+                    &format!("p{}-perf-{}", pipeline.id, ci.name),
+                    &format!("likwid output {}", ci.name),
+                    "likwid-output",
+                )
+                .map_err(|e| anyhow::anyhow!(e))?;
+            self.store.attach_file(rid_perf, "perfctr.txt", &metrics.raw_log).ok();
+            let rid_ms = self
+                .store
+                .create_record(
+                    &format!("p{}-ms-{}", pipeline.id, ci.name),
+                    &format!("machinestate {}", ci.name),
+                    "machinestate",
+                )
+                .map_err(|e| anyhow::anyhow!(e))?;
+            let ms = machine_state(&node, &ci.name, self.scheduler.now());
+            self.store
+                .attach_file(rid_ms, "machinestate.json", &ms.to_string_pretty())
+                .ok();
+            for rid in [rid_job, rid_perf, rid_ms] {
+                self.store.add_to_collection(coll, rid).ok();
+                records += 1;
+            }
+            self.store.link(rid_perf, rid_job, "belongs to").ok();
+            self.store.link(rid_ms, rid_job, "recorded on").ok();
+        }
+
+        let report = PipelineReport {
+            pipeline_id: pipeline.id,
+            commit_id: event.commit_id.clone(),
+            jobs_total: submitted.len(),
+            jobs_completed: completed,
+            jobs_failed: failed,
+            points_uploaded: points,
+            records_created: records,
+            collection: coll,
+            duration: self.scheduler.now() - start,
+        };
+        self.executed.push(report.clone());
+        Ok(report)
+    }
+
+    /// Current trigger timestamp (ns) of the most recent pipeline.
+    pub fn last_trigger_ts(&self) -> i64 {
+        self.trigger_clock
+    }
+
+    /// Execute a multi-node scaling pipeline on a *production* partition
+    /// (Fritz/JUWELS node models, not part of the single-node Testcluster;
+    /// paper §7 future work). Jobs run on their own scheduler domain; the
+    /// parsed metrics land in the shared TSDB, and one summary record per
+    /// campaign is archived.
+    pub fn execute_scaling_pipeline(
+        &mut self,
+        event: &PushEvent,
+        host: &str,
+        jobs: Vec<PreparedJob>,
+        measurement: &str,
+    ) -> anyhow::Result<usize> {
+        self.trigger_clock += 1_000_000_000;
+        let trigger_ts = self.trigger_clock;
+        let node = catalogue()
+            .into_iter()
+            .find(|n| n.host == host && !n.testcluster)
+            .ok_or_else(|| anyhow::anyhow!("`{host}` is not a production partition"))?;
+        let mut sched = crate::slurm::Scheduler::new(vec![node.clone()]);
+        let mut ids = Vec::new();
+        for j in jobs {
+            let spec = JobSpec {
+                name: j.ci.name.clone(),
+                nodelist: host.to_string(),
+                timelimit_min: j.ci.timelimit_min(),
+            };
+            ids.push((sched.sbatch(spec, j.payload).map_err(|e| anyhow::anyhow!(e))?, j.ci));
+        }
+        sched.wait_all();
+        let mut points = 0;
+        let mut summary = String::new();
+        for (id, ci) in &ids {
+            let job = sched.job(*id).expect("job exists");
+            let metrics = parse_job_output(&ci.name, host, &job.log);
+            if !metrics.fields.is_empty() {
+                let mut p = Point::new(measurement, trigger_ts);
+                p.tags.insert("node".into(), host.to_string());
+                p.tags.insert("commit".into(), event.commit_id[..8].to_string());
+                for (k, v) in &metrics.tags {
+                    p.tags.insert(k.clone(), v.clone());
+                }
+                for (k, v) in &metrics.fields {
+                    p.fields.insert(k.clone(), *v);
+                }
+                self.db.insert(p);
+                points += 1;
+            }
+            summary.push_str(&job.log);
+            summary.push('\n');
+        }
+        let rid = self
+            .store
+            .create_record(
+                &format!("scaling-{measurement}-{trigger_ts}"),
+                &format!("weak-scaling campaign {measurement} on {host}"),
+                "scaling-campaign",
+            )
+            .map_err(|e| anyhow::anyhow!(e))?;
+        self.store.attach_file(rid, "campaign.log", &summary).ok();
+        Ok(points)
+    }
+}
+
+/// A detected performance change between consecutive pipeline executions
+/// of one tagged series.
+#[derive(Debug, Clone)]
+pub struct PerfChange {
+    pub series: String,
+    pub before: f64,
+    pub after: f64,
+    /// Relative change of the metric ((after-before)/before).
+    pub rel_change: f64,
+}
+
+/// Compare the last two points of every grouped series of
+/// `measurement.field` and report changes beyond `threshold` (relative).
+/// `higher_is_better` controls the sign convention for *regressions*:
+/// for MLUP/s a drop is a regression; for TTS a rise is.
+///
+/// This is CB's raison d'être: "reveals performance degradation introduced
+/// by code changes immediately" (paper §7).
+pub fn detect_regressions(
+    db: &Db,
+    measurement: &str,
+    field: &str,
+    group_by: &[&str],
+    threshold: f64,
+    higher_is_better: bool,
+) -> Vec<PerfChange> {
+    let mut out = Vec::new();
+    for s in crate::tsdb::Query::new(measurement, field)
+        .group_by(group_by)
+        .run(db)
+    {
+        if s.points.len() < 2 {
+            continue;
+        }
+        let before = s.points[s.points.len() - 2].1;
+        let after = s.points[s.points.len() - 1].1;
+        if before.abs() < 1e-300 {
+            continue;
+        }
+        let rel = (after - before) / before;
+        let is_regression = if higher_is_better { rel < -threshold } else { rel > threshold };
+        if is_regression {
+            out.push(PerfChange {
+                series: s.label(),
+                before,
+                after,
+                rel_change: rel,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::slurm::JobOutcome;
+
+    fn dummy_job(name: &str, host: &str, metrics: &str) -> PreparedJob {
+        let out = metrics.to_string();
+        PreparedJob {
+            ci: CiJob::new(name, "benchmark").var("HOST", host),
+            payload: Box::new(move |_n, _t| JobOutcome {
+                duration: 10.0,
+                stdout: out,
+                exit_code: 0,
+            }),
+        }
+    }
+
+    fn event() -> PushEvent {
+        PushEvent {
+            repo: "fe2ti".into(),
+            branch: "master".into(),
+            commit_id: "abcdef1234567890".into(),
+        }
+    }
+
+    #[test]
+    fn bench_config_parses() {
+        let cfg = BenchConfig::parse("# comment\numfpack_blas = blis\nlbm_penalty = 0.15\n");
+        assert_eq!(cfg.get("umfpack_blas"), Some("blis"));
+        assert_eq!(cfg.get_f64("lbm_penalty", 0.0), 0.15);
+        assert_eq!(cfg.get_f64("missing", 1.0), 1.0);
+    }
+
+    #[test]
+    fn parse_job_output_extracts_metrics_and_tags() {
+        let log = "noise\nMETRIC tts=40.5\nMETRIC gflops=25\nTAG solver=ilu\nother\n";
+        let m = parse_job_output("j", "icx36", log);
+        assert_eq!(m.fields["tts"], 40.5);
+        assert_eq!(m.tags["solver"], "ilu");
+        assert_eq!(m.fields.len(), 2);
+    }
+
+    #[test]
+    fn pipeline_executes_uploads_and_archives() {
+        let mut cb = CbSystem::new();
+        let jobs = vec![
+            dummy_job("bench-icx36", "icx36", "METRIC tts=40\nTAG solver=ilu\n"),
+            dummy_job("bench-rome1", "rome1", "METRIC tts=80\nTAG solver=ilu\n"),
+        ];
+        let r = cb.execute_pipeline(&event(), false, jobs, "fe2ti").unwrap();
+        assert_eq!(r.jobs_total, 2);
+        assert_eq!(r.jobs_completed, 2);
+        assert_eq!(r.points_uploaded, 2);
+        assert_eq!(r.records_created, 6); // 3 records per job
+        assert_eq!(cb.db.len(), 2);
+        // points tagged with commit + node
+        let pts = cb.db.points("fe2ti");
+        assert_eq!(pts[0].tags["commit"], "abcdef12");
+        assert!(cb.store.n_links() >= 4);
+    }
+
+    #[test]
+    fn successive_pipelines_get_increasing_timestamps() {
+        let mut cb = CbSystem::new();
+        let r1 = cb
+            .execute_pipeline(&event(), false, vec![dummy_job("a", "icx36", "METRIC x=1\n")], "m")
+            .unwrap();
+        let r2 = cb
+            .execute_pipeline(&event(), false, vec![dummy_job("a2", "icx36", "METRIC x=2\n")], "m")
+            .unwrap();
+        assert!(r2.pipeline_id > r1.pipeline_id);
+        let pts = cb.db.points("m");
+        assert!(pts[1].ts > pts[0].ts);
+    }
+
+    #[test]
+    fn job_without_host_rejected() {
+        let mut cb = CbSystem::new();
+        let j = PreparedJob {
+            ci: CiJob::new("nohost", "benchmark"),
+            payload: Box::new(|_n, _t| JobOutcome {
+                duration: 1.0,
+                stdout: String::new(),
+                exit_code: 0,
+            }),
+        };
+        assert!(cb.execute_pipeline(&event(), false, vec![j], "m").is_err());
+    }
+
+    #[test]
+    fn regression_detection_flags_drops_only() {
+        let mut db = Db::new();
+        for (ts, op, v) in [(1, "srt", 1000.0), (2, "srt", 800.0), (1, "trt", 900.0), (2, "trt", 910.0)] {
+            db.insert(
+                Point::new("lbm", ts)
+                    .tag("collision_op", op)
+                    .field("mlups", v),
+            );
+        }
+        let regs = detect_regressions(&db, "lbm", "mlups", &["collision_op"], 0.1, true);
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].series, "collision_op=srt");
+        assert!((regs[0].rel_change + 0.2).abs() < 1e-12);
+        // TTS convention: a rise is a regression
+        let mut db2 = Db::new();
+        db2.insert(Point::new("fe2ti", 1).tag("s", "x").field("tts", 10.0));
+        db2.insert(Point::new("fe2ti", 2).tag("s", "x").field("tts", 13.0));
+        let regs2 = detect_regressions(&db2, "fe2ti", "tts", &["s"], 0.1, false);
+        assert_eq!(regs2.len(), 1);
+    }
+
+    #[test]
+    fn failed_jobs_counted() {
+        let mut cb = CbSystem::new();
+        let j = PreparedJob {
+            ci: CiJob::new("bad", "benchmark").var("HOST", "icx36"),
+            payload: Box::new(|_n, _t| JobOutcome {
+                duration: 1.0,
+                stdout: "METRIC x=1\n".into(),
+                exit_code: 1,
+            }),
+        };
+        let r = cb.execute_pipeline(&event(), false, vec![j], "m").unwrap();
+        assert_eq!(r.jobs_failed, 1);
+        assert_eq!(r.jobs_completed, 0);
+    }
+}

@@ -1,0 +1,312 @@
+//! Grafana stand-in: programmatic dashboards over the TSDB (paper §4.4).
+//!
+//! Dashboards are specified in code (the grafanalib analogue), carry
+//! template variables (the interactive filter dropdowns, e.g. the
+//! "collision Setup menu" of Fig. 6), and render to text/CSV for the
+//! terminal and to a simple SVG for files. Panels query the TSDB with
+//! group-by-tags, exactly how the paper's dashboards connect data points
+//! with equal parameter values.
+
+use crate::tsdb::{Aggregate, Db, Query};
+use crate::util::table::{bar_chart, Table};
+
+/// Panel flavor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PanelKind {
+    /// Time series per group (runtime-over-commits panels).
+    TimeSeries,
+    /// Latest value per group as bars (Fig. 8's per-node latest results).
+    LatestBars,
+    /// Single aggregated number.
+    Stat,
+}
+
+/// One dashboard panel.
+#[derive(Debug, Clone)]
+pub struct Panel {
+    pub title: String,
+    pub kind: PanelKind,
+    pub measurement: String,
+    pub field: String,
+    pub group_by: Vec<String>,
+    pub unit: String,
+}
+
+impl Panel {
+    pub fn new(title: &str, kind: PanelKind, measurement: &str, field: &str) -> Panel {
+        Panel {
+            title: title.to_string(),
+            kind,
+            measurement: measurement.to_string(),
+            field: field.to_string(),
+            group_by: Vec::new(),
+            unit: String::new(),
+        }
+    }
+    pub fn group_by(mut self, tags: &[&str]) -> Panel {
+        self.group_by = tags.iter().map(|s| s.to_string()).collect();
+        self
+    }
+    pub fn unit(mut self, u: &str) -> Panel {
+        self.unit = u.to_string();
+        self
+    }
+}
+
+/// A template variable: an interactive filter over a tag.
+#[derive(Debug, Clone)]
+pub struct TemplateVar {
+    pub tag: String,
+    /// Selected values; empty = all.
+    pub selected: Vec<String>,
+}
+
+/// A dashboard: panels + filters.
+#[derive(Debug, Clone)]
+pub struct Dashboard {
+    pub title: String,
+    pub panels: Vec<Panel>,
+    pub variables: Vec<TemplateVar>,
+}
+
+impl Dashboard {
+    pub fn new(title: &str) -> Dashboard {
+        Dashboard {
+            title: title.to_string(),
+            panels: Vec::new(),
+            variables: Vec::new(),
+        }
+    }
+    pub fn panel(mut self, p: Panel) -> Dashboard {
+        self.panels.push(p);
+        self
+    }
+    pub fn variable(mut self, tag: &str) -> Dashboard {
+        self.variables.push(TemplateVar {
+            tag: tag.to_string(),
+            selected: Vec::new(),
+        });
+        self
+    }
+
+    /// Set a filter (like picking entries in a Grafana dropdown).
+    pub fn select(&mut self, tag: &str, values: &[&str]) {
+        for v in &mut self.variables {
+            if v.tag == tag {
+                v.selected = values.iter().map(|s| s.to_string()).collect();
+            }
+        }
+    }
+
+    fn apply_filters(&self, mut q: Query) -> Query {
+        for v in &self.variables {
+            if !v.selected.is_empty() {
+                let refs: Vec<&str> = v.selected.iter().map(|s| s.as_str()).collect();
+                q = q.where_tag_in(&v.tag, &refs);
+            }
+        }
+        q
+    }
+
+    /// Render the dashboard against a TSDB as terminal text.
+    pub fn render_text(&self, db: &Db) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        for v in &self.variables {
+            let opts = db_options(db, &self.panels, &v.tag);
+            let sel = if v.selected.is_empty() {
+                "all".to_string()
+            } else {
+                v.selected.join(",")
+            };
+            out.push_str(&format!("filter {}: [{}] selected: {}\n", v.tag, opts.join(" "), sel));
+        }
+        for p in &self.panels {
+            out.push('\n');
+            out.push_str(&format!("-- {} ({}) --\n", p.title, p.unit));
+            let q = self.apply_filters(
+                Query::new(&p.measurement, &p.field)
+                    .group_by(&p.group_by.iter().map(|s| s.as_str()).collect::<Vec<_>>()),
+            );
+            match p.kind {
+                PanelKind::TimeSeries => {
+                    let mut t = Table::new(&["series", "points", "first", "last", "mean"]);
+                    for s in q.run(db) {
+                        let mean = s.aggregate(Aggregate::Mean);
+                        t.row(&[
+                            s.label(),
+                            s.points.len().to_string(),
+                            format!("{:.4}", s.points.first().map(|p| p.1).unwrap_or(f64::NAN)),
+                            format!("{:.4}", s.points.last().map(|p| p.1).unwrap_or(f64::NAN)),
+                            format!("{mean:.4}"),
+                        ]);
+                    }
+                    out.push_str(&t.render());
+                }
+                PanelKind::LatestBars => {
+                    let entries = q.run_agg(db, Aggregate::Last);
+                    out.push_str(&bar_chart(&entries, 40));
+                }
+                PanelKind::Stat => {
+                    let entries = q.run_agg(db, Aggregate::Last);
+                    for (label, v) in entries {
+                        out.push_str(&format!("{label}: {v:.4} {}\n", p.unit));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// CSV export of every panel (one header line per panel block).
+    pub fn render_csv(&self, db: &Db) -> String {
+        let mut out = String::new();
+        for p in &self.panels {
+            out.push_str(&format!("# panel: {}\n", p.title));
+            let q = self.apply_filters(
+                Query::new(&p.measurement, &p.field)
+                    .group_by(&p.group_by.iter().map(|s| s.as_str()).collect::<Vec<_>>()),
+            );
+            out.push_str("series,ts,value\n");
+            for s in q.run(db) {
+                for (ts, v) in &s.points {
+                    out.push_str(&format!("{},{ts},{v}\n", s.label()));
+                }
+            }
+        }
+        out
+    }
+}
+
+fn db_options(db: &Db, panels: &[Panel], tag: &str) -> Vec<String> {
+    let mut opts = Vec::new();
+    for p in panels {
+        for v in db.tag_values(&p.measurement, tag) {
+            if !opts.contains(&v) {
+                opts.push(v);
+            }
+        }
+    }
+    opts.sort();
+    opts
+}
+
+/// The paper's two project dashboards, specified programmatically
+/// (the grafanalib step of §4.5).
+pub fn fe2ti_dashboard() -> Dashboard {
+    Dashboard::new("FE2TI benchmarks")
+        .variable("solver")
+        .variable("node")
+        .variable("parallelization")
+        .variable("compiler")
+        .panel(
+            Panel::new("Time to solution", PanelKind::TimeSeries, "fe2ti", "tts")
+                .group_by(&["solver", "compiler"])
+                .unit("s"),
+        )
+        .panel(
+            Panel::new("FLOP rate", PanelKind::TimeSeries, "fe2ti", "gflops")
+                .group_by(&["solver", "compiler"])
+                .unit("GFLOP/s"),
+        )
+        .panel(
+            Panel::new("Operational intensity", PanelKind::TimeSeries, "fe2ti", "oi")
+                .group_by(&["solver"])
+                .unit("FLOP/byte"),
+        )
+        .panel(
+            Panel::new("Verification error", PanelKind::Stat, "fe2ti", "verification_error")
+                .group_by(&["solver"])
+                .unit("rel"),
+        )
+}
+
+pub fn walberla_dashboard() -> Dashboard {
+    Dashboard::new("waLBerla benchmarks")
+        .variable("case")
+        .variable("collision_op")
+        .variable("node")
+        .variable("repo")
+        .variable("branch")
+        .panel(
+            Panel::new("Runtime", PanelKind::TimeSeries, "lbm", "runtime")
+                .group_by(&["collision_op", "node"])
+                .unit("s"),
+        )
+        .panel(
+            Panel::new("MLUP/s per process", PanelKind::TimeSeries, "lbm", "mlups_per_process")
+                .group_by(&["collision_op", "node"])
+                .unit("MLUP/s"),
+        )
+        .panel(
+            Panel::new("Relative to P_max", PanelKind::LatestBars, "lbm", "rel_to_pmax")
+                .group_by(&["node"])
+                .unit("fraction"),
+        )
+        .panel(
+            Panel::new("Vectorized FLOP ratio", PanelKind::LatestBars, "lbm", "vec_ratio")
+                .group_by(&["collision_op"])
+                .unit("fraction"),
+        )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tsdb::Point;
+
+    fn db() -> Db {
+        let mut db = Db::new();
+        for (ts, op, node, mlups) in [
+            (1, "srt", "icx36", 1500.0),
+            (2, "srt", "icx36", 1510.0),
+            (1, "trt", "icx36", 1400.0),
+            (1, "srt", "rome1", 600.0),
+        ] {
+            db.insert(
+                Point::new("lbm", ts)
+                    .tag("collision_op", op)
+                    .tag("node", node)
+                    .field("mlups_per_process", mlups)
+                    .field("runtime", 1000.0 / mlups)
+                    .field("rel_to_pmax", 0.8)
+                    .field("vec_ratio", 0.9),
+            );
+        }
+        db
+    }
+
+    #[test]
+    fn render_text_contains_all_panels() {
+        let d = walberla_dashboard();
+        let txt = d.render_text(&db());
+        assert!(txt.contains("MLUP/s per process"));
+        assert!(txt.contains("Relative to P_max"));
+        assert!(txt.contains("collision_op=srt,node=icx36"));
+        assert!(txt.contains("filter collision_op: [srt trt]"));
+    }
+
+    #[test]
+    fn template_filter_limits_series() {
+        let mut d = walberla_dashboard();
+        d.select("collision_op", &["srt"]);
+        let txt = d.render_text(&db());
+        assert!(txt.contains("collision_op=srt"));
+        assert!(!txt.contains("collision_op=trt"));
+    }
+
+    #[test]
+    fn csv_export_parses_back() {
+        let d = walberla_dashboard();
+        let csv = d.render_csv(&db());
+        assert!(csv.contains("# panel: Runtime"));
+        assert!(csv.lines().any(|l| l.starts_with("collision_op=srt,node=icx36,")));
+    }
+
+    #[test]
+    fn fe2ti_dashboard_has_verification_panel() {
+        let d = fe2ti_dashboard();
+        assert!(d.panels.iter().any(|p| p.title.contains("Verification")));
+        assert_eq!(d.variables.len(), 4);
+    }
+}

@@ -1,0 +1,361 @@
+//! Kadi4Mat stand-in: FAIR research-data store with records, collections
+//! and typed links.
+//!
+//! The paper archives every pipeline execution's raw artifacts (likwid
+//! output, machinestate dumps, scheduler logs) as *records* grouped into a
+//! per-execution *collection*, with named links relating the records
+//! (§4.3, Fig. 5). This module implements that model: records carry
+//! descriptive metadata + attached files, collections group records (and
+//! child collections), links are directed and named, and everything
+//! exports to JSON following the FAIR findability/accessibility spirit
+//! (stable IDs, rich metadata, explicit relations).
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Identifier type for records/collections.
+pub type Id = u64;
+
+/// A record: arbitrary data + descriptive metadata (Kadi4Mat's basic unit).
+#[derive(Debug, Clone)]
+pub struct Record {
+    pub id: Id,
+    pub identifier: String, // human-readable unique slug
+    pub title: String,
+    pub record_type: String, // e.g. "likwid-output", "machinestate", "job-log"
+    pub meta: BTreeMap<String, String>,
+    /// Attached files: name → content.
+    pub files: BTreeMap<String, String>,
+}
+
+/// A directed, named link between two records ("belongs to job",
+/// "measured on", ...).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Link {
+    pub from: Id,
+    pub to: Id,
+    pub name: String,
+}
+
+/// A collection: a logical grouping of records; may nest child collections.
+#[derive(Debug, Clone)]
+pub struct Collection {
+    pub id: Id,
+    pub identifier: String,
+    pub title: String,
+    pub records: Vec<Id>,
+    pub children: Vec<Id>,
+}
+
+/// The store.
+#[derive(Debug, Default)]
+pub struct DataStore {
+    next_id: Id,
+    records: BTreeMap<Id, Record>,
+    collections: BTreeMap<Id, Collection>,
+    links: Vec<Link>,
+}
+
+impl DataStore {
+    pub fn new() -> DataStore {
+        DataStore::default()
+    }
+
+    fn fresh(&mut self) -> Id {
+        self.next_id += 1;
+        self.next_id
+    }
+
+    pub fn create_record(
+        &mut self,
+        identifier: &str,
+        title: &str,
+        record_type: &str,
+    ) -> Result<Id, String> {
+        if self.records.values().any(|r| r.identifier == identifier) {
+            return Err(format!("record identifier `{identifier}` already exists"));
+        }
+        let id = self.fresh();
+        self.records.insert(
+            id,
+            Record {
+                id,
+                identifier: identifier.to_string(),
+                title: title.to_string(),
+                record_type: record_type.to_string(),
+                meta: BTreeMap::new(),
+                files: BTreeMap::new(),
+            },
+        );
+        Ok(id)
+    }
+
+    pub fn create_collection(&mut self, identifier: &str, title: &str) -> Id {
+        let id = self.fresh();
+        self.collections.insert(
+            id,
+            Collection {
+                id,
+                identifier: identifier.to_string(),
+                title: title.to_string(),
+                records: Vec::new(),
+                children: Vec::new(),
+            },
+        );
+        id
+    }
+
+    pub fn set_meta(&mut self, record: Id, key: &str, value: &str) -> Result<(), String> {
+        self.records
+            .get_mut(&record)
+            .ok_or_else(|| format!("no record {record}"))?
+            .meta
+            .insert(key.to_string(), value.to_string());
+        Ok(())
+    }
+
+    pub fn attach_file(&mut self, record: Id, name: &str, content: &str) -> Result<(), String> {
+        self.records
+            .get_mut(&record)
+            .ok_or_else(|| format!("no record {record}"))?
+            .files
+            .insert(name.to_string(), content.to_string());
+        Ok(())
+    }
+
+    pub fn add_to_collection(&mut self, coll: Id, record: Id) -> Result<(), String> {
+        if !self.records.contains_key(&record) {
+            return Err(format!("no record {record}"));
+        }
+        let c = self
+            .collections
+            .get_mut(&coll)
+            .ok_or_else(|| format!("no collection {coll}"))?;
+        if !c.records.contains(&record) {
+            c.records.push(record);
+        }
+        Ok(())
+    }
+
+    pub fn add_child_collection(&mut self, parent: Id, child: Id) -> Result<(), String> {
+        if !self.collections.contains_key(&child) {
+            return Err(format!("no collection {child}"));
+        }
+        let p = self
+            .collections
+            .get_mut(&parent)
+            .ok_or_else(|| format!("no collection {parent}"))?;
+        if !p.children.contains(&child) {
+            p.children.push(child);
+        }
+        Ok(())
+    }
+
+    /// Create a named directed link between two records.
+    pub fn link(&mut self, from: Id, to: Id, name: &str) -> Result<(), String> {
+        if !self.records.contains_key(&from) || !self.records.contains_key(&to) {
+            return Err(format!("link endpoints must exist ({from} -> {to})"));
+        }
+        let l = Link {
+            from,
+            to,
+            name: name.to_string(),
+        };
+        if !self.links.contains(&l) {
+            self.links.push(l);
+        }
+        Ok(())
+    }
+
+    pub fn record(&self, id: Id) -> Option<&Record> {
+        self.records.get(&id)
+    }
+    pub fn record_by_identifier(&self, identifier: &str) -> Option<&Record> {
+        self.records.values().find(|r| r.identifier == identifier)
+    }
+    pub fn collection(&self, id: Id) -> Option<&Collection> {
+        self.collections.get(&id)
+    }
+    pub fn links_of(&self, record: Id) -> Vec<&Link> {
+        self.links
+            .iter()
+            .filter(|l| l.from == record || l.to == record)
+            .collect()
+    }
+    pub fn n_records(&self) -> usize {
+        self.records.len()
+    }
+    pub fn n_collections(&self) -> usize {
+        self.collections.len()
+    }
+    pub fn n_links(&self) -> usize {
+        self.links.len()
+    }
+
+    /// FAIR JSON export of everything (Fig. 5's data, serialized).
+    pub fn export_json(&self) -> Json {
+        let mut records = Vec::new();
+        for r in self.records.values() {
+            let mut meta = Json::obj();
+            for (k, v) in &r.meta {
+                meta = meta.set(k, v.as_str());
+            }
+            let files: Vec<String> = r.files.keys().cloned().collect();
+            records.push(
+                Json::obj()
+                    .set("id", r.id as i64)
+                    .set("identifier", r.identifier.as_str())
+                    .set("title", r.title.as_str())
+                    .set("type", r.record_type.as_str())
+                    .set("meta", meta)
+                    .set("files", files),
+            );
+        }
+        let mut colls = Vec::new();
+        for c in self.collections.values() {
+            colls.push(
+                Json::obj()
+                    .set("id", c.id as i64)
+                    .set("identifier", c.identifier.as_str())
+                    .set("title", c.title.as_str())
+                    .set(
+                        "records",
+                        Json::Arr(c.records.iter().map(|r| Json::Num(*r as f64)).collect()),
+                    )
+                    .set(
+                        "children",
+                        Json::Arr(c.children.iter().map(|r| Json::Num(*r as f64)).collect()),
+                    ),
+            );
+        }
+        let mut links = Vec::new();
+        for l in &self.links {
+            links.push(
+                Json::obj()
+                    .set("from", l.from as i64)
+                    .set("to", l.to as i64)
+                    .set("name", l.name.as_str()),
+            );
+        }
+        Json::obj()
+            .set("records", Json::Arr(records))
+            .set("collections", Json::Arr(colls))
+            .set("links", Json::Arr(links))
+    }
+
+    /// Graphviz DOT export of the record/link graph of one collection —
+    /// regenerates the Fig. 5 visualization.
+    pub fn to_dot(&self, coll: Id) -> String {
+        let mut out = String::from("digraph collection {\n  rankdir=LR;\n");
+        if let Some(c) = self.collections.get(&coll) {
+            out.push_str(&format!(
+                "  label=\"{} ({})\";\n",
+                c.title, c.identifier
+            ));
+            for rid in &c.records {
+                if let Some(r) = self.records.get(rid) {
+                    out.push_str(&format!(
+                        "  r{} [label=\"{}\\n[{}]\"];\n",
+                        r.id, r.identifier, r.record_type
+                    ));
+                }
+            }
+            for l in &self.links {
+                if c.records.contains(&l.from) && c.records.contains(&l.to) {
+                    out.push_str(&format!(
+                        "  r{} -> r{} [label=\"{}\"];\n",
+                        l.from, l.to, l.name
+                    ));
+                }
+            }
+        }
+        out.push_str("}\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_collections_links() {
+        let mut ds = DataStore::new();
+        let coll = ds.create_collection("pipeline-42", "FE2TI pipeline #42");
+        let job = ds.create_record("job-icx36-ilu", "benchmark job", "job-log").unwrap();
+        let likwid = ds.create_record("likwid-icx36-ilu", "likwid output", "likwid-output").unwrap();
+        let ms = ds.create_record("ms-icx36-ilu", "machinestate", "machinestate").unwrap();
+        for r in [job, likwid, ms] {
+            ds.add_to_collection(coll, r).unwrap();
+        }
+        ds.link(likwid, job, "belongs to").unwrap();
+        ds.link(ms, job, "belongs to").unwrap();
+        ds.set_meta(job, "node", "icx36").unwrap();
+        ds.attach_file(likwid, "perfctr.txt", "REGION rve ...").unwrap();
+
+        assert_eq!(ds.n_records(), 3);
+        assert_eq!(ds.n_links(), 2);
+        assert_eq!(ds.links_of(job).len(), 2);
+        assert_eq!(ds.collection(coll).unwrap().records.len(), 3);
+        assert_eq!(
+            ds.record_by_identifier("job-icx36-ilu").unwrap().meta["node"],
+            "icx36"
+        );
+    }
+
+    #[test]
+    fn duplicate_identifier_rejected() {
+        let mut ds = DataStore::new();
+        ds.create_record("x", "a", "t").unwrap();
+        assert!(ds.create_record("x", "b", "t").is_err());
+    }
+
+    #[test]
+    fn link_requires_existing_endpoints() {
+        let mut ds = DataStore::new();
+        let a = ds.create_record("a", "a", "t").unwrap();
+        assert!(ds.link(a, 999, "x").is_err());
+        assert!(ds.link(999, a, "x").is_err());
+    }
+
+    #[test]
+    fn nested_collections() {
+        let mut ds = DataStore::new();
+        let root = ds.create_collection("project", "project-level");
+        let child = ds.create_collection("pipeline-1", "one execution");
+        ds.add_child_collection(root, child).unwrap();
+        assert_eq!(ds.collection(root).unwrap().children, vec![child]);
+    }
+
+    #[test]
+    fn idempotent_membership_and_links() {
+        let mut ds = DataStore::new();
+        let c = ds.create_collection("c", "c");
+        let r = ds.create_record("r", "r", "t").unwrap();
+        let r2 = ds.create_record("r2", "r2", "t").unwrap();
+        ds.add_to_collection(c, r).unwrap();
+        ds.add_to_collection(c, r).unwrap();
+        ds.link(r, r2, "l").unwrap();
+        ds.link(r, r2, "l").unwrap();
+        assert_eq!(ds.collection(c).unwrap().records.len(), 1);
+        assert_eq!(ds.n_links(), 1);
+    }
+
+    #[test]
+    fn export_json_parses_and_dot_renders() {
+        let mut ds = DataStore::new();
+        let coll = ds.create_collection("p", "pipeline");
+        let a = ds.create_record("a", "A", "job-log").unwrap();
+        let b = ds.create_record("b", "B", "likwid-output").unwrap();
+        ds.add_to_collection(coll, a).unwrap();
+        ds.add_to_collection(coll, b).unwrap();
+        ds.link(b, a, "belongs to").unwrap();
+        let j = ds.export_json();
+        assert_eq!(j.get("records").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(j.get("links").unwrap().as_arr().unwrap().len(), 1);
+        let dot = ds.to_dot(coll);
+        // ids: collection=1, a=2, b=3; link b->a
+        assert!(dot.contains("r3 -> r2"));
+        assert!(dot.contains("belongs to"));
+    }
+}

@@ -1,0 +1,38 @@
+//! # cbench — Continuous Benchmarking Infrastructure for HPC Applications
+//!
+//! A reproduction of Alt et al., *"A Continuous Benchmarking Infrastructure
+//! for High-Performance Computing Applications"* (2024), as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the continuous-benchmarking coordinator:
+//!   a git-like VCS, a GitLab-CI-like pipeline engine, a Slurm-like batch
+//!   scheduler over a simulated heterogeneous test cluster, a likwid-like
+//!   hardware-counter harness, an InfluxDB-like time-series database, a
+//!   Kadi4Mat-like FAIR record store, Grafana-like dashboards and roofline
+//!   analysis — plus the two instrumented HPC applications the paper
+//!   benchmarks (FE2TI and waLBerla).
+//! * **Layer 2 (python/compile/model.py)** — JAX compute graphs for the
+//!   performance-critical kernels (LBM stream-collide, RVE CG solver),
+//!   AOT-lowered to HLO text artifacts.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels called from the
+//!   L2 graphs (interpret=True on CPU), validated against pure-jnp oracles.
+//!
+//! Python never runs on the benchmarking path: `make artifacts` lowers the
+//! kernels once, and [`runtime`] loads and executes them through PJRT.
+
+pub mod apps;
+pub mod ci;
+pub mod cluster;
+pub mod coordinator;
+pub mod dashboard;
+pub mod datastore;
+pub mod mpisim;
+pub mod perf;
+pub mod report;
+pub mod roofline;
+pub mod runtime;
+pub mod slurm;
+pub mod sparse;
+pub mod tsdb;
+pub mod util;
+pub mod vcs;

@@ -1,0 +1,249 @@
+//! `cbench` launcher — CLI entry point for the continuous-benchmarking
+//! infrastructure.
+
+use cbench::cluster::microbench::{run_host_microbench, MicrobenchKind};
+use cbench::cluster::nodes::{catalogue, node};
+use cbench::coordinator::{fe2ti_pipeline, walberla_pipeline, CbSystem};
+use cbench::dashboard::{fe2ti_dashboard, walberla_dashboard};
+use cbench::report;
+use cbench::tsdb::{Aggregate, Query};
+use cbench::util::cli::Args;
+use cbench::vcs::Repository;
+use std::path::PathBuf;
+
+fn main() {
+    // die quietly when piped into `head` etc. instead of panicking
+    #[cfg(unix)]
+    unsafe {
+        libc::signal(libc::SIGPIPE, libc::SIG_DFL);
+    }
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match cbench_main(argv) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn cbench_main(argv: Vec<String>) -> anyhow::Result<()> {
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let args = Args::parse(argv.iter().skip(1).cloned());
+    match cmd {
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        "report" => cmd_report(&args),
+        "pipeline" => cmd_pipeline(&args),
+        "cluster" => cmd_cluster(&args),
+        "microbench" => cmd_microbench(&args),
+        "dashboard" => cmd_dashboard(&args),
+        "artifacts" => cmd_artifacts(&args),
+        other => anyhow::bail!("unknown command `{other}` — see `cbench help`"),
+    }
+}
+
+/// `cbench report <id>|all [--out DIR]` — regenerate paper tables/figures.
+fn cmd_report(args: &Args) -> anyhow::Result<()> {
+    let out = args.get("out").map(PathBuf::from);
+    let ids: Vec<String> = match args.positional.first().map(|s| s.as_str()) {
+        Some("all") | None => report::all_reports().iter().map(|s| s.to_string()).collect(),
+        Some(id) => vec![id.to_string()],
+    };
+    for id in ids {
+        println!("{}", report::run_report(&id, out.as_deref())?);
+        println!();
+    }
+    Ok(())
+}
+
+/// `cbench pipeline <fe2ti|walberla|describe> [--commits N]` — run the CB
+/// pipeline end to end on simulated commits.
+fn cmd_pipeline(args: &Args) -> anyhow::Result<()> {
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("describe");
+    if which == "describe" {
+        println!("{PIPELINE_DESCRIPTION}");
+        return Ok(());
+    }
+    let commits = args.get_usize("commits", 1);
+    let mut cb = CbSystem::new();
+    let mut repo = Repository::new(which);
+    for i in 0..commits {
+        let ev = repo.commit_change(
+            "master",
+            "dev",
+            &format!("change #{i}"),
+            i as f64 * 60.0,
+            "src/kernel.c",
+            &format!("// rev {i}\n"),
+        );
+        let jobs = match which {
+            "fe2ti" => fe2ti_pipeline::fe2ti_pipeline_jobs(&repo, &ev.commit_id),
+            "walberla" => walberla_pipeline::walberla_pipeline_jobs(&repo, &ev.commit_id),
+            other => anyhow::bail!("unknown pipeline `{other}` (fe2ti|walberla)"),
+        };
+        let measurement = if which == "fe2ti" { "fe2ti" } else { "lbm" };
+        let r = cb.execute_pipeline(&ev, which == "walberla", jobs, measurement)?;
+        println!(
+            "pipeline #{} commit {} jobs={} completed={} failed={} points={} records={} cluster-time={}",
+            r.pipeline_id,
+            &r.commit_id[..8],
+            r.jobs_total,
+            r.jobs_completed,
+            r.jobs_failed,
+            r.points_uploaded,
+            r.records_created,
+            cbench::util::fmt_secs(r.duration),
+        );
+    }
+    if let Some(path) = args.get("save-tsdb") {
+        cb.db.save(std::path::Path::new(path))?;
+        println!("tsdb saved to {path} ({} points)", cb.db.len());
+    }
+    // render the project dashboard
+    let dash = if which == "fe2ti" {
+        fe2ti_dashboard()
+    } else {
+        walberla_dashboard()
+    };
+    println!("\n{}", dash.render_text(&cb.db));
+    Ok(())
+}
+
+/// `cbench cluster [--node HOST]` — show the Testcluster catalogue.
+fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
+    match args.get("node") {
+        Some(host) => {
+            let n = node(host).ok_or_else(|| anyhow::anyhow!("unknown node `{host}`"))?;
+            let ms = cbench::cluster::machinestate::machine_state(&n, "inspect", 0.0);
+            println!("{}", ms.to_string_pretty());
+        }
+        None => println!("{}", report::tables::tab2_testcluster()),
+    }
+    Ok(())
+}
+
+/// `cbench microbench [--n SIZE] [--reps R]` — really run the
+/// likwid-bench-class kernels on this host.
+fn cmd_microbench(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_usize("n", 1 << 22);
+    let reps = args.get_usize("reps", 5);
+    println!("host microbenchmarks (n={n}, reps={reps}):");
+    for kind in MicrobenchKind::all() {
+        let r = run_host_microbench(kind, n, reps);
+        println!("  {:<10} {:>10.2} {}", kind.name(), r.value, r.unit);
+    }
+    println!("\nper-node projections (likwid-bench stand-in):");
+    for nm in catalogue() {
+        let s = cbench::cluster::microbench::project_node_microbench(&nm, MicrobenchKind::Stream);
+        let p = cbench::cluster::microbench::project_node_microbench(&nm, MicrobenchKind::PeakFlops);
+        println!("  {:<12} stream {:>7.0} GB/s   peak {:>7.0} GFLOP/s", nm.host, s.value, p.value);
+    }
+    Ok(())
+}
+
+/// `cbench dashboard <fe2ti|walberla> --tsdb FILE [--select tag=v,v]`.
+fn cmd_dashboard(args: &Args) -> anyhow::Result<()> {
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("walberla");
+    let tsdb = args
+        .get("tsdb")
+        .ok_or_else(|| anyhow::anyhow!("--tsdb FILE required (see `cbench pipeline --save-tsdb`)"))?;
+    let db = cbench::tsdb::Db::load(std::path::Path::new(tsdb))?;
+    let mut dash = if which == "fe2ti" {
+        fe2ti_dashboard()
+    } else {
+        walberla_dashboard()
+    };
+    if let Some(sel) = args.get("select") {
+        if let Some((tag, vals)) = sel.split_once('=') {
+            let v: Vec<&str> = vals.split(',').collect();
+            dash.select(tag, &v);
+        }
+    }
+    println!("{}", dash.render_text(&db));
+    if let Some(field) = args.get("agg") {
+        let m = if which == "fe2ti" { "fe2ti" } else { "lbm" };
+        for (label, v) in Query::new(m, field)
+            .group_by(&["node"])
+            .run_agg(&db, Aggregate::Last)
+        {
+            println!("{label}: {v:.4}");
+        }
+    }
+    Ok(())
+}
+
+/// `cbench artifacts [--dir DIR]` — list + smoke the PJRT artifacts.
+fn cmd_artifacts(args: &Args) -> anyhow::Result<()> {
+    let dir = args.get_or("dir", "artifacts");
+    let mut engine = cbench::runtime::Engine::open(dir)?;
+    println!("PJRT platform: {}", engine.platform());
+    let names: Vec<String> = engine.artifact_names().iter().map(|s| s.to_string()).collect();
+    for name in &names {
+        let meta = engine.meta(name).unwrap();
+        println!(
+            "  {:<24} kind={:<16} shape={:?}{}",
+            name,
+            meta.kind,
+            meta.shape,
+            meta.vmem_bytes_per_block
+                .map(|v| format!(" vmem/block={}", cbench::util::fmt_bytes(v)))
+                .unwrap_or_default()
+        );
+    }
+    if args.flag("smoke") {
+        let n = 8usize;
+        let cells = 19 * n * n * n;
+        let f = vec![1.0f32 / 19.0; cells];
+        let t = std::time::Instant::now();
+        let out = engine.lbm_step("lbm_d3q19_srt_8", &f)?;
+        println!(
+            "\nsmoke: lbm_d3q19_srt_8 executed in {} ({} values, mass drift {:.2e})",
+            cbench::util::fmt_secs(t.elapsed().as_secs_f64()),
+            out.len(),
+            (out.iter().sum::<f32>() - f.iter().sum::<f32>()).abs()
+        );
+    }
+    Ok(())
+}
+
+const HELP: &str = "\
+cbench — continuous benchmarking infrastructure for HPC applications
+(reproduction of Alt et al. 2024, DOI 10.1080/17445760.2024.2360190)
+
+USAGE: cbench <command> [options]
+
+COMMANDS:
+  report <id>|all [--out DIR]   regenerate a paper table/figure
+                                (tab1..3, fig5..fig14; side CSV/SVG with --out)
+  pipeline <fe2ti|walberla>     run the CB pipeline on simulated commits
+           [--commits N] [--save-tsdb FILE]
+  pipeline describe             explain the pipeline wiring (Figs. 3-4)
+  cluster [--node HOST]         Testcluster catalogue / machinestate dump
+  microbench [--n N] [--reps R] run stream/copy/load/peakflops on this host
+  dashboard <fe2ti|walberla> --tsdb FILE [--select tag=v1,v2]
+                                render a dashboard from a saved TSDB
+  artifacts [--dir DIR] [--smoke]
+                                list + smoke-test the AOT PJRT artifacts
+  help                          this help
+";
+
+const PIPELINE_DESCRIPTION: &str = "\
+CB pipeline wiring (paper Figs. 3-4):
+
+  commit pushed to repo (vcs::)
+    -> pipeline triggered (ci::, proxy-repo trigger API for walberla)
+    -> job matrix generated (coordinator::fe2ti_pipeline: >80 jobs =
+       nodes x compilers x solvers x parallelization;
+       coordinator::walberla_pipeline: 11 nodes x 4 collision ops + FSLBM)
+    -> job scripts assembled (ci::assemble_job_script, Listing 1)
+    -> submitted via sbatch --wait (slurm:: over cluster:: node models)
+    -> benchmarks execute (apps::fe2ti / apps::walberla; LBM kernels
+       optionally through the JAX/Pallas PJRT artifacts, runtime::)
+    -> output parsed (likwid-style counters, perf::)
+    -> metrics uploaded to the TSDB (tsdb::, fields+tags+trigger-time)
+    -> raw files archived as linked records (datastore::, Fig. 5)
+    -> dashboards + roofline plots refreshed (dashboard::, roofline::)
+";

@@ -1,0 +1,268 @@
+//! Simulated MPI / hybrid MPI+OpenMP execution geometry and communication
+//! cost model.
+//!
+//! The paper's multi-node results (Figs. 11, 12, 14) run on Fritz and
+//! JUWELS with pure-MPI and hybrid MPI/OpenMP parallelization. No
+//! interconnect exists here, so communication is modelled with the
+//! standard **alpha–beta (latency–bandwidth) model** plus the effects the
+//! paper observes:
+//!
+//! * intra-node messages are much cheaper than inter-node ones,
+//! * collectives over `p` ranks pay `O(log p)` latency terms — the reason
+//!   pure-MPI macro solves degrade beyond ~16 nodes while hybrid (fewer,
+//!   fatter ranks) wins (§5.1, Fig. 12),
+//! * an optional **topology penalty** models non-optimal node allocations
+//!   (the paper blames the 4→8-node communication jump in Fig. 14b on
+//!   allocation topology),
+//! * an **OpenMP runtime overhead** per parallel region models the paper's
+//!   finding that the micro solves are slightly slower under hybrid
+//!   parallelization (§5.1: "might be an overhead introduced by the OpenMP
+//!   runtime", plus higher data volume in hybrid jobs).
+
+/// Process geometry of a run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Geometry {
+    pub nodes: usize,
+    pub ranks_per_node: usize,
+    pub threads_per_rank: usize,
+}
+
+impl Geometry {
+    /// Pure MPI: one rank per core.
+    pub fn pure_mpi(nodes: usize, cores_per_node: usize) -> Geometry {
+        Geometry {
+            nodes,
+            ranks_per_node: cores_per_node,
+            threads_per_rank: 1,
+        }
+    }
+    /// The paper's hybrid setup: 2 ranks per node (one per socket), the
+    /// rest OpenMP threads.
+    pub fn hybrid(nodes: usize, cores_per_node: usize) -> Geometry {
+        Geometry {
+            nodes,
+            ranks_per_node: 2,
+            threads_per_rank: cores_per_node / 2,
+        }
+    }
+    pub fn total_ranks(&self) -> usize {
+        self.nodes * self.ranks_per_node
+    }
+    pub fn cores_per_node(&self) -> usize {
+        self.ranks_per_node * self.threads_per_rank
+    }
+    pub fn is_hybrid(&self) -> bool {
+        self.threads_per_rank > 1
+    }
+}
+
+/// Interconnect + runtime cost model.
+#[derive(Debug, Clone)]
+pub struct CommModel {
+    /// Inter-node latency per message (s). InfiniBand-class: ~1.5 µs.
+    pub alpha_inter: f64,
+    /// Intra-node latency per message (s) (shared memory): ~0.3 µs.
+    pub alpha_intra: f64,
+    /// Inter-node inverse bandwidth (s/byte). 12.5 GB/s HDR-ish.
+    pub beta_inter: f64,
+    /// Intra-node inverse bandwidth (s/byte).
+    pub beta_intra: f64,
+    /// OpenMP parallel-region fork/join overhead per region (s).
+    pub omp_region_overhead: f64,
+    /// Extra data-volume factor observed for hybrid jobs (paper §5.1 "we
+    /// see slightly higher data volume transferred during these hybrid
+    /// jobs"). Multiplies message sizes under hybrid geometry.
+    pub hybrid_volume_factor: f64,
+    /// Topology penalty: multiplies inter-node beta when the allocation
+    /// spans more than `topology_threshold_nodes` (non-adjacent switches).
+    pub topology_penalty: f64,
+    pub topology_threshold_nodes: usize,
+}
+
+impl Default for CommModel {
+    fn default() -> CommModel {
+        // Betas are *effective per-rank MPI message* rates, including
+        // pack/unpack of strided ghost layers and on-node contention —
+        // much lower than raw link/memcpy bandwidth, calibrated so the
+        // single-node FSLBM phase shares land in the paper's Fig. 13
+        // ranges (DESIGN.md §2).
+        CommModel {
+            alpha_inter: 1.5e-6,
+            alpha_intra: 1.0e-6,
+            beta_inter: 1.0 / 2.0e9,
+            beta_intra: 1.0 / 3.0e9,
+            omp_region_overhead: 4.0e-6,
+            hybrid_volume_factor: 1.08,
+            topology_penalty: 1.35,
+            topology_threshold_nodes: 4,
+        }
+    }
+}
+
+impl CommModel {
+    fn beta_inter_eff(&self, nodes: usize) -> f64 {
+        if nodes > self.topology_threshold_nodes {
+            self.beta_inter * self.topology_penalty
+        } else {
+            self.beta_inter
+        }
+    }
+
+    /// Point-to-point message time.
+    pub fn p2p(&self, bytes: f64, inter_node: bool, nodes: usize) -> f64 {
+        if inter_node {
+            self.alpha_inter + bytes * self.beta_inter_eff(nodes)
+        } else {
+            self.alpha_intra + bytes * self.beta_intra
+        }
+    }
+
+    /// Allreduce over the geometry: recursive-doubling,
+    /// `2·log2(p)` message steps of `bytes` each. Ranks on the same node
+    /// use intra-node links for the first `log2(ranks_per_node)` steps.
+    pub fn allreduce(&self, g: &Geometry, bytes: f64) -> f64 {
+        let p = g.total_ranks().max(1);
+        if p == 1 {
+            return 0.0;
+        }
+        let bytes = self.volume(g, bytes);
+        let steps = (p as f64).log2().ceil() as usize;
+        let intra_steps = (g.ranks_per_node.max(1) as f64).log2().floor() as usize;
+        let mut t = 0.0;
+        for s in 0..steps {
+            let inter = s >= intra_steps;
+            t += 2.0 * self.p2p(bytes, inter, g.nodes);
+        }
+        t
+    }
+
+    /// Gather of `bytes` from every rank to a root (linearized tree).
+    pub fn gather(&self, g: &Geometry, bytes_per_rank: f64) -> f64 {
+        let p = g.total_ranks().max(1);
+        if p == 1 {
+            return 0.0;
+        }
+        let b = self.volume(g, bytes_per_rank);
+        let steps = (p as f64).log2().ceil();
+        // binomial tree: log p steps, message size grows toward root
+        steps * self.alpha_inter + (p as f64 - 1.0) * b * self.beta_inter_eff(g.nodes)
+    }
+
+    /// Halo exchange: each rank exchanges `bytes` with `neighbors`
+    /// neighbors; the fraction of neighbors that are off-node depends on
+    /// the decomposition (supplied by the app).
+    pub fn halo_exchange(
+        &self,
+        g: &Geometry,
+        bytes_per_neighbor: f64,
+        neighbors: usize,
+        off_node_fraction: f64,
+    ) -> f64 {
+        let b = self.volume(g, bytes_per_neighbor);
+        let off = off_node_fraction.clamp(0.0, 1.0);
+        let n_off = neighbors as f64 * off;
+        let n_on = neighbors as f64 - n_off;
+        n_off * self.p2p(b, true, g.nodes) + n_on * self.p2p(b, false, g.nodes)
+    }
+
+    /// OpenMP fork/join cost for `regions` parallel regions.
+    pub fn omp_overhead(&self, g: &Geometry, regions: usize) -> f64 {
+        if g.is_hybrid() {
+            regions as f64 * self.omp_region_overhead
+        } else {
+            0.0
+        }
+    }
+
+    fn volume(&self, g: &Geometry, bytes: f64) -> f64 {
+        if g.is_hybrid() {
+            bytes * self.hybrid_volume_factor
+        } else {
+            bytes
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_helpers() {
+        let g = Geometry::pure_mpi(4, 72);
+        assert_eq!(g.total_ranks(), 288);
+        assert!(!g.is_hybrid());
+        let h = Geometry::hybrid(4, 72);
+        assert_eq!(h.total_ranks(), 8);
+        assert_eq!(h.threads_per_rank, 36);
+        assert_eq!(h.cores_per_node(), 72);
+        assert!(h.is_hybrid());
+    }
+
+    #[test]
+    fn single_rank_collectives_free() {
+        let m = CommModel::default();
+        let g = Geometry { nodes: 1, ranks_per_node: 1, threads_per_rank: 1 };
+        assert_eq!(m.allreduce(&g, 1e6), 0.0);
+        assert_eq!(m.gather(&g, 1e6), 0.0);
+    }
+
+    #[test]
+    fn allreduce_grows_with_ranks() {
+        let m = CommModel::default();
+        let t_small = m.allreduce(&Geometry::pure_mpi(2, 48), 8.0);
+        let t_big = m.allreduce(&Geometry::pure_mpi(64, 48), 8.0);
+        assert!(t_big > t_small);
+    }
+
+    #[test]
+    fn hybrid_allreduce_cheaper_at_scale() {
+        // the Fig. 12 mechanism: fewer ranks → fewer latency terms
+        let m = CommModel::default();
+        let nodes = 64;
+        let t_mpi = m.allreduce(&Geometry::pure_mpi(nodes, 48), 64.0);
+        let t_hyb = m.allreduce(&Geometry::hybrid(nodes, 48), 64.0);
+        assert!(
+            t_hyb < t_mpi,
+            "hybrid {t_hyb} should beat pure-MPI {t_mpi} at {nodes} nodes"
+        );
+    }
+
+    #[test]
+    fn pure_mpi_cheaper_at_small_scale_for_micro() {
+        // at 1 node the hybrid OpenMP overhead dominates (Fig. 11 micro solves)
+        let m = CommModel::default();
+        let g_h = Geometry::hybrid(1, 72);
+        assert!(m.omp_overhead(&g_h, 1000) > 0.0);
+        assert_eq!(m.omp_overhead(&Geometry::pure_mpi(1, 72), 1000), 0.0);
+    }
+
+    #[test]
+    fn topology_penalty_kicks_in_beyond_threshold() {
+        let m = CommModel::default();
+        let t4 = m.p2p(1e6, true, 4);
+        let t8 = m.p2p(1e6, true, 8);
+        assert!(t8 > t4 * 1.2, "t8={t8} t4={t4}");
+    }
+
+    #[test]
+    fn halo_off_node_fraction_matters() {
+        let m = CommModel::default();
+        let g = Geometry::pure_mpi(8, 48);
+        let all_on = m.halo_exchange(&g, 1e5, 4, 0.0);
+        let all_off = m.halo_exchange(&g, 1e5, 4, 1.0);
+        assert!(all_off > all_on);
+    }
+
+    #[test]
+    fn hybrid_moves_more_volume() {
+        let m = CommModel::default();
+        let g_m = Geometry::pure_mpi(2, 48);
+        let g_h = Geometry::hybrid(2, 48);
+        // same message, hybrid pays the volume factor (paper's observation)
+        let b = 1e6;
+        let t_m = m.halo_exchange(&g_m, b, 1, 1.0);
+        let t_h = m.halo_exchange(&g_h, b, 1, 1.0);
+        assert!(t_h > t_m);
+    }
+}

@@ -1,0 +1,264 @@
+//! likwid-perfctr stand-in: exact operation/traffic counting with region
+//! markers and derived metrics.
+//!
+//! The paper gathers FLOP counts, data-traffic volumes and timings with the
+//! likwid tool-suite (§4.2) and derives operational intensity / GFLOP/s for
+//! the roofline dashboards (§4.4). Our applications are instrumented at the
+//! source level: every kernel reports the FLOPs it executed and the bytes
+//! it moved, so the "counters" here are exact by construction rather than
+//! sampled from PMU registers. The same `Region` API shape as
+//! `LIKWID_MARKER_START/STOP` is kept so application code reads naturally.
+
+use crate::cluster::WorkProfile;
+use std::collections::BTreeMap;
+
+/// Counter state for one marker region.
+#[derive(Debug, Clone, Default)]
+pub struct RegionStats {
+    /// Number of start/stop visits.
+    pub calls: usize,
+    /// Accumulated (simulated) runtime in seconds.
+    pub time: f64,
+    /// Exact DP FLOP count.
+    pub flops: f64,
+    /// Exact main-memory traffic in bytes.
+    pub bytes: f64,
+    /// FLOPs executed through vector (SIMD) units — the paper's dashboard
+    /// has a "ratio of vectorized to total FLOP count" panel (Fig. 6).
+    pub vector_flops: f64,
+}
+
+impl RegionStats {
+    /// Operational intensity (FLOP/byte).
+    pub fn intensity(&self) -> f64 {
+        if self.bytes <= 0.0 {
+            f64::INFINITY
+        } else {
+            self.flops / self.bytes
+        }
+    }
+    /// Achieved GFLOP/s over the accumulated time.
+    pub fn gflops(&self) -> f64 {
+        if self.time <= 0.0 {
+            0.0
+        } else {
+            self.flops / self.time / 1e9
+        }
+    }
+    /// Achieved memory bandwidth in GB/s.
+    pub fn bandwidth_gbs(&self) -> f64 {
+        if self.time <= 0.0 {
+            0.0
+        } else {
+            self.bytes / self.time / 1e9
+        }
+    }
+    /// Fraction of FLOPs that were vectorized.
+    pub fn vector_ratio(&self) -> f64 {
+        if self.flops <= 0.0 {
+            0.0
+        } else {
+            self.vector_flops / self.flops
+        }
+    }
+    pub fn as_profile(&self) -> WorkProfile {
+        WorkProfile::new(self.flops, self.bytes)
+    }
+}
+
+/// A likwid-like measurement context: named regions with exact counters.
+#[derive(Debug, Default, Clone)]
+pub struct PerfMonitor {
+    regions: BTreeMap<String, RegionStats>,
+    open: BTreeMap<String, f64>, // region -> start time
+    clock: f64,
+}
+
+impl PerfMonitor {
+    pub fn new() -> PerfMonitor {
+        PerfMonitor::default()
+    }
+
+    /// Advance the monitor's clock (simulated seconds).
+    pub fn tick(&mut self, dt: f64) {
+        debug_assert!(dt >= 0.0);
+        self.clock += dt;
+    }
+    pub fn now(&self) -> f64 {
+        self.clock
+    }
+
+    /// `LIKWID_MARKER_START`.
+    pub fn start(&mut self, region: &str) {
+        self.open.insert(region.to_string(), self.clock);
+        self.regions.entry(region.to_string()).or_default().calls += 1;
+    }
+
+    /// `LIKWID_MARKER_STOP` — accounts elapsed simulated time since start.
+    pub fn stop(&mut self, region: &str) {
+        if let Some(t0) = self.open.remove(region) {
+            let r = self.regions.entry(region.to_string()).or_default();
+            r.time += self.clock - t0;
+        }
+    }
+
+    /// Count work inside the currently-open (or any) region.
+    pub fn count(&mut self, region: &str, flops: f64, bytes: f64, vector_flops: f64) {
+        let r = self.regions.entry(region.to_string()).or_default();
+        r.flops += flops;
+        r.bytes += bytes;
+        r.vector_flops += vector_flops;
+    }
+
+    /// Convenience: run a region of `dur` seconds with the given counts.
+    pub fn record(&mut self, region: &str, dur: f64, flops: f64, bytes: f64, vector_flops: f64) {
+        self.start(region);
+        self.tick(dur);
+        self.count(region, flops, bytes, vector_flops);
+        self.stop(region);
+    }
+
+    pub fn region(&self, name: &str) -> Option<&RegionStats> {
+        self.regions.get(name)
+    }
+
+    pub fn regions(&self) -> impl Iterator<Item = (&String, &RegionStats)> {
+        self.regions.iter()
+    }
+
+    /// Total over all regions.
+    pub fn total(&self) -> RegionStats {
+        let mut t = RegionStats::default();
+        for r in self.regions.values() {
+            t.calls += r.calls;
+            t.time += r.time;
+            t.flops += r.flops;
+            t.bytes += r.bytes;
+            t.vector_flops += r.vector_flops;
+        }
+        t
+    }
+
+    /// Render the likwid-style text report the pipeline parses and uploads.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        out.push_str("--- perfctr report (likwid-sim) ---\n");
+        for (name, r) in &self.regions {
+            out.push_str(&format!(
+                "REGION {name} calls={} time={:.6} flops={:.6e} bytes={:.6e} oi={:.4} gflops={:.3} bw_gbs={:.3} vec_ratio={:.3}\n",
+                r.calls,
+                r.time,
+                r.flops,
+                r.bytes,
+                r.intensity(),
+                r.gflops(),
+                r.bandwidth_gbs(),
+                r.vector_ratio(),
+            ));
+        }
+        out
+    }
+
+    /// Parse a report produced by [`PerfMonitor::report`] back into region
+    /// stats — the pipeline's output-parsing step (§4.3).
+    pub fn parse_report(text: &str) -> BTreeMap<String, RegionStats> {
+        let mut out = BTreeMap::new();
+        for line in text.lines() {
+            let Some(rest) = line.strip_prefix("REGION ") else {
+                continue;
+            };
+            let mut name = String::new();
+            let mut stats = RegionStats::default();
+            for (i, tok) in rest.split_whitespace().enumerate() {
+                if i == 0 {
+                    name = tok.to_string();
+                    continue;
+                }
+                if let Some((k, v)) = tok.split_once('=') {
+                    let v: f64 = v.parse().unwrap_or(0.0);
+                    match k {
+                        "calls" => stats.calls = v as usize,
+                        "time" => stats.time = v,
+                        "flops" => stats.flops = v,
+                        "bytes" => stats.bytes = v,
+                        "vec_ratio" => stats.vector_flops = v, // fixed up below
+                        _ => {}
+                    }
+                }
+            }
+            stats.vector_flops *= stats.flops; // vec_ratio -> absolute
+            out.insert(name, stats);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn region_accumulates_time_and_counts() {
+        let mut m = PerfMonitor::new();
+        m.start("rve_solve");
+        m.tick(2.0);
+        m.count("rve_solve", 4e9, 1e9, 3e9);
+        m.stop("rve_solve");
+        m.record("rve_solve", 2.0, 4e9, 1e9, 3e9);
+
+        let r = m.region("rve_solve").unwrap();
+        assert_eq!(r.calls, 2);
+        assert_eq!(r.time, 4.0);
+        assert_eq!(r.flops, 8e9);
+        assert_eq!(r.intensity(), 4.0);
+        assert_eq!(r.gflops(), 2.0);
+        assert!((r.vector_ratio() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nested_regions_dont_interfere() {
+        let mut m = PerfMonitor::new();
+        m.start("outer");
+        m.tick(1.0);
+        m.start("inner");
+        m.tick(2.0);
+        m.stop("inner");
+        m.tick(1.0);
+        m.stop("outer");
+        assert_eq!(m.region("outer").unwrap().time, 4.0);
+        assert_eq!(m.region("inner").unwrap().time, 2.0);
+    }
+
+    #[test]
+    fn report_roundtrips_through_parser() {
+        let mut m = PerfMonitor::new();
+        m.record("collide", 0.5, 1e9, 2e9, 0.8e9);
+        m.record("stream", 0.25, 0.0, 3e9, 0.0);
+        let text = m.report();
+        let parsed = PerfMonitor::parse_report(&text);
+        let c = &parsed["collide"];
+        assert_eq!(c.calls, 1);
+        assert!((c.time - 0.5).abs() < 1e-9);
+        assert!((c.flops - 1e9).abs() / 1e9 < 1e-5);
+        assert!((c.vector_flops - 0.8e9).abs() / 1e9 < 1e-3);
+        assert!(parsed.contains_key("stream"));
+    }
+
+    #[test]
+    fn total_sums_regions() {
+        let mut m = PerfMonitor::new();
+        m.record("a", 1.0, 1e9, 1e9, 0.0);
+        m.record("b", 2.0, 3e9, 1e9, 0.0);
+        let t = m.total();
+        assert_eq!(t.time, 3.0);
+        assert_eq!(t.flops, 4e9);
+    }
+
+    #[test]
+    fn zero_time_region_has_zero_rates() {
+        let r = RegionStats::default();
+        assert_eq!(r.gflops(), 0.0);
+        assert_eq!(r.bandwidth_gbs(), 0.0);
+        assert!(r.intensity().is_infinite());
+    }
+}

@@ -1,0 +1,71 @@
+//! Report generators: one per table and figure of the paper's evaluation
+//! (DESIGN.md §5 experiment index).
+//!
+//! Every generator returns the rendered text (tables/ASCII charts matching
+//! the paper's rows and series) and optionally writes CSV/SVG/DOT files
+//! when given an output directory. `cbench report <id> [--out dir]` is the
+//! CLI entry point.
+
+pub mod fe2ti_figs;
+pub mod pipeline_figs;
+pub mod tables;
+pub mod walberla_figs;
+
+use std::path::Path;
+
+/// All report ids in paper order.
+pub fn all_reports() -> Vec<&'static str> {
+    vec![
+        "tab1", "tab2", "tab3", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10a", "fig10b",
+        "fig11", "fig12", "fig13", "fig14",
+    ]
+}
+
+/// Run one report by id. `out` receives CSV/SVG side files if set.
+pub fn run_report(id: &str, out: Option<&Path>) -> anyhow::Result<String> {
+    match id {
+        "tab1" => Ok(tables::tab1_code_comparison()),
+        "tab2" => Ok(tables::tab2_testcluster()),
+        "tab3" => Ok(tables::tab3_benchmark_cases()),
+        "fig5" => pipeline_figs::fig5_kadi_collection(out),
+        "fig6" => pipeline_figs::fig6_lbm_dashboard(out),
+        "fig7" => fe2ti_figs::fig7_roofline(out),
+        "fig8" => walberla_figs::fig8_relative_performance(out),
+        "fig9" => fe2ti_figs::fig9_tts_all_solvers(out),
+        "fig10a" => fe2ti_figs::fig10a_flop_rates(out),
+        "fig10b" => fe2ti_figs::fig10b_umfpack_blas_fix(out),
+        "fig11" => fe2ti_figs::fig11_weak_scaling_fritz(out),
+        "fig12" => fe2ti_figs::fig12_macro_solver_scaling(out),
+        "fig13" => walberla_figs::fig13_fslbm_distribution(out),
+        "fig14" => walberla_figs::fig14_fslbm_weak_scaling(out),
+        other => anyhow::bail!("unknown report `{other}` — ids: {:?}", all_reports()),
+    }
+}
+
+/// Helper: write a side file when an output directory is given.
+pub(crate) fn side_file(out: Option<&Path>, name: &str, content: &str) -> anyhow::Result<()> {
+    if let Some(dir) = out {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(name), content)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_report_id_runs() {
+        // smoke: each generator produces non-empty output (no side files)
+        for id in all_reports() {
+            let txt = run_report(id, None).unwrap_or_else(|e| panic!("{id}: {e}"));
+            assert!(txt.len() > 100, "{id}: output too short");
+        }
+    }
+
+    #[test]
+    fn unknown_report_errors() {
+        assert!(run_report("fig99", None).is_err());
+    }
+}

@@ -1,0 +1,223 @@
+//! Roofline model and plot generation (paper §4.4, Figs. 7–8).
+//!
+//! The pipeline measures per-node ceilings with likwid-bench-class
+//! microbenchmarks (peak FLOP/s + stream/copy/load bandwidths), stores
+//! them in the TSDB, and relates every benchmark result to them: a run is
+//! a point (operational intensity, achieved GFLOP/s) under the ceilings.
+//! The plotting script's output (Fig. 7) is regenerated here as SVG.
+
+use crate::cluster::microbench::{project_node_microbench, MicrobenchKind};
+use crate::cluster::nodes::NodeModel;
+
+/// The machine ceilings of one node.
+#[derive(Debug, Clone)]
+pub struct Ceilings {
+    pub peak_gflops: f64,
+    /// (name, GB/s) per measured bandwidth variant.
+    pub bandwidths: Vec<(String, f64)>,
+}
+
+impl Ceilings {
+    pub fn of(node: &NodeModel) -> Ceilings {
+        let mut bandwidths = Vec::new();
+        for kind in [MicrobenchKind::Stream, MicrobenchKind::Copy, MicrobenchKind::Load] {
+            let r = project_node_microbench(node, kind);
+            bandwidths.push((kind.name().to_string(), r.value));
+        }
+        Ceilings {
+            peak_gflops: project_node_microbench(node, MicrobenchKind::PeakFlops).value,
+            bandwidths,
+        }
+    }
+
+    /// Attainable GFLOP/s at operational intensity `oi` using bandwidth
+    /// variant `bw_name` (default stream).
+    pub fn attainable(&self, oi: f64, bw_name: &str) -> f64 {
+        let bw = self
+            .bandwidths
+            .iter()
+            .find(|(n, _)| n == bw_name)
+            .map(|(_, v)| *v)
+            .unwrap_or(self.bandwidths[0].1);
+        (oi * bw).min(self.peak_gflops)
+    }
+
+    /// The ridge point: OI where the machine turns compute-bound.
+    pub fn ridge(&self) -> f64 {
+        self.peak_gflops / self.bandwidths[0].1
+    }
+}
+
+/// One measured run in the roofline plane.
+#[derive(Debug, Clone)]
+pub struct RooflinePoint {
+    pub label: String,
+    /// Group for coloring (e.g. solver name — Fig. 7's green/yellow/blue).
+    pub group: String,
+    pub oi: f64,
+    pub gflops: f64,
+}
+
+impl RooflinePoint {
+    /// Fraction of the attainable performance at this OI.
+    pub fn efficiency(&self, ceil: &Ceilings) -> f64 {
+        self.gflops / ceil.attainable(self.oi, "stream")
+    }
+}
+
+/// Render a log-log roofline SVG: ceilings + scatter points.
+pub fn roofline_svg(node: &NodeModel, points: &[RooflinePoint], title: &str) -> String {
+    let ceil = Ceilings::of(node);
+    let (w, h) = (760.0, 520.0);
+    let (ml, mr, mt, mb) = (70.0, 160.0, 40.0, 50.0);
+    let (pw, ph) = (w - ml - mr, h - mt - mb);
+    // log ranges
+    let oi_min: f64 = 0.01;
+    let oi_max: f64 = 100.0;
+    let gf_min: f64 = 0.1;
+    let gf_max = ceil.peak_gflops * 2.0;
+    let x = |oi: f64| ml + (oi.max(oi_min).log10() - oi_min.log10()) / (oi_max / oi_min).log10() * pw;
+    let y = |gf: f64| mt + ph - (gf.max(gf_min).log10() - gf_min.log10()) / (gf_max / gf_min).log10() * ph;
+
+    let mut s = String::new();
+    s.push_str(&format!(
+        r#"<svg xmlns="http://www.w3.org/2000/svg" width="{w}" height="{h}" font-family="monospace">"#
+    ));
+    s.push_str(&format!(
+        r#"<rect width="{w}" height="{h}" fill="white"/><text x="{ml}" y="24" font-size="15">{title} — {} </text>"#,
+        node.host
+    ));
+    // axes box
+    s.push_str(&format!(
+        r#"<rect x="{ml}" y="{mt}" width="{pw}" height="{ph}" fill="none" stroke="black"/>"#
+    ));
+    // bandwidth ceilings (diagonals) + peak (horizontal)
+    let colors = ["#888", "#bbb", "#555"];
+    for (i, (name, bw)) in ceil.bandwidths.iter().enumerate() {
+        let oi_ridge = ceil.peak_gflops / bw;
+        s.push_str(&format!(
+            r#"<line x1="{:.1}" y1="{:.1}" x2="{:.1}" y2="{:.1}" stroke="{}" stroke-dasharray="4 2"/>"#,
+            x(oi_min),
+            y(oi_min * bw),
+            x(oi_ridge.min(oi_max)),
+            y((oi_ridge.min(oi_max)) * bw),
+            colors[i % colors.len()]
+        ));
+        s.push_str(&format!(
+            r#"<text x="{:.1}" y="{:.1}" font-size="10" fill="{}">{name} {bw:.0} GB/s</text>"#,
+            x(oi_min) + 4.0,
+            y(oi_min * bw) - 4.0,
+            colors[i % colors.len()]
+        ));
+    }
+    s.push_str(&format!(
+        r#"<line x1="{:.1}" y1="{:.1}" x2="{:.1}" y2="{:.1}" stroke="black"/>"#,
+        x(ceil.ridge()),
+        y(ceil.peak_gflops),
+        x(oi_max),
+        y(ceil.peak_gflops)
+    ));
+    s.push_str(&format!(
+        r#"<text x="{:.1}" y="{:.1}" font-size="11">peak {:.0} GFLOP/s</text>"#,
+        x(ceil.ridge()),
+        y(ceil.peak_gflops) - 6.0,
+        ceil.peak_gflops
+    ));
+    // points, colored by group (Fig. 7: PARDISO green / UMFPACK yellow / ILU blue)
+    let group_colors = ["#2a9d2a", "#e0b000", "#2a5fd0", "#d04a2a", "#8a2ad0"];
+    let mut groups: Vec<&str> = Vec::new();
+    for p in points {
+        if !groups.contains(&p.group.as_str()) {
+            groups.push(&p.group);
+        }
+    }
+    for p in points {
+        let gi = groups.iter().position(|g| *g == p.group).unwrap();
+        s.push_str(&format!(
+            r#"<circle cx="{:.1}" cy="{:.1}" r="5" fill="{}" fill-opacity="0.8"><title>{}: oi={:.3} gf={:.2}</title></circle>"#,
+            x(p.oi),
+            y(p.gflops),
+            group_colors[gi % group_colors.len()],
+            p.label,
+            p.oi,
+            p.gflops
+        ));
+    }
+    // legend
+    for (i, g) in groups.iter().enumerate() {
+        let ly = mt + 16.0 * i as f64 + 10.0;
+        s.push_str(&format!(
+            r#"<circle cx="{:.1}" cy="{ly:.1}" r="5" fill="{}"/><text x="{:.1}" y="{:.1}" font-size="11">{g}</text>"#,
+            w - mr + 14.0,
+            group_colors[i % group_colors.len()],
+            w - mr + 24.0,
+            ly + 4.0
+        ));
+    }
+    // axis labels
+    s.push_str(&format!(
+        r#"<text x="{:.1}" y="{:.1}" font-size="12">operational intensity [FLOP/byte]</text>"#,
+        ml + pw / 2.0 - 100.0,
+        h - 12.0
+    ));
+    s.push_str(&format!(
+        r#"<text x="16" y="{:.1}" font-size="12" transform="rotate(-90 16 {:.1})">GFLOP/s</text>"#,
+        mt + ph / 2.0,
+        mt + ph / 2.0
+    ));
+    s.push_str("</svg>");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::nodes::node;
+
+    #[test]
+    fn ceilings_and_ridge() {
+        let n = node("icx36").unwrap();
+        let c = Ceilings::of(&n);
+        assert_eq!(c.peak_gflops, n.peak_gflops());
+        assert_eq!(c.bandwidths.len(), 3);
+        // memory-bound region
+        assert!((c.attainable(0.1, "stream") - 0.1 * 237.0).abs() < 1e-9);
+        // compute-bound region
+        assert_eq!(c.attainable(1000.0, "stream"), c.peak_gflops);
+        assert!((c.ridge() - c.peak_gflops / 237.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unknown_bw_falls_back_to_first() {
+        let c = Ceilings::of(&node("rome1").unwrap());
+        assert_eq!(c.attainable(0.5, "nosuch"), c.attainable(0.5, "stream"));
+    }
+
+    #[test]
+    fn point_efficiency() {
+        let n = node("icx36").unwrap();
+        let c = Ceilings::of(&n);
+        let p = RooflinePoint {
+            label: "ilu".into(),
+            group: "ilu".into(),
+            oi: 0.12,
+            gflops: 0.12 * 237.0 * 0.75,
+        };
+        assert!((p.efficiency(&c) - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn svg_renders_groups_and_ceilings() {
+        let n = node("icx36").unwrap();
+        let pts = vec![
+            RooflinePoint { label: "a".into(), group: "pardiso".into(), oi: 2.0, gflops: 150.0 },
+            RooflinePoint { label: "b".into(), group: "ilu".into(), oi: 0.12, gflops: 22.0 },
+        ];
+        let svg = roofline_svg(&n, &pts, "fe2ti216");
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.contains("peak"));
+        assert!(svg.contains("pardiso") && svg.contains("ilu"));
+        assert!(svg.contains("stream"));
+        assert!(svg.ends_with("</svg>"));
+    }
+}

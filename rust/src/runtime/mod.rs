@@ -1,0 +1,299 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! This is the rust side of the three-layer bridge (DESIGN.md §6): python
+//! lowers the L2/L1 compute graphs once (`make artifacts`), and this module
+//! loads `artifacts/*.hlo.txt` with `HloModuleProto::from_text_file`,
+//! compiles each on the PJRT CPU client **once**, and executes from the
+//! benchmark hot path. Python never runs at benchmark time.
+//!
+//! The waLBerla-analogue framing: the artifacts play the role of
+//! lbmpy-generated kernels — authored/optimized outside the framework,
+//! loaded as opaque optimized compute objects by the framework.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Parsed entry of `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: String,
+    pub file: PathBuf,
+    pub shape: Vec<usize>,
+    /// LBM: exact collision FLOPs per lattice cell (from the L1 kernel).
+    pub flops_per_cell: Option<f64>,
+    /// LBM: VMEM footprint of one BlockSpec block (TPU estimate).
+    pub vmem_bytes_per_block: Option<f64>,
+    pub operator: Option<String>,
+    pub iters: Option<usize>,
+}
+
+/// The artifact registry: manifest + lazily compiled executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    meta: BTreeMap<String, ArtifactMeta>,
+    compiled: BTreeMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Open the artifacts directory (reads `manifest.json`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Engine> {
+        let dir = dir.as_ref().to_path_buf();
+        let man_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&man_path)
+            .with_context(|| format!("reading {man_path:?} — run `make artifacts` first"))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let mut meta = BTreeMap::new();
+        let obj = json.as_obj().ok_or_else(|| anyhow!("manifest not an object"))?;
+        for (name, m) in obj {
+            let shape = m
+                .get("shape")
+                .and_then(|s| s.as_arr())
+                .map(|a| a.iter().filter_map(|v| v.as_f64()).map(|v| v as usize).collect())
+                .unwrap_or_default();
+            meta.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name: name.clone(),
+                    kind: m
+                        .get("kind")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or("unknown")
+                        .to_string(),
+                    file: dir.join(m.get("file").and_then(|v| v.as_str()).unwrap_or("")),
+                    shape,
+                    flops_per_cell: m.get("flops_per_cell").and_then(|v| v.as_f64()),
+                    vmem_bytes_per_block: m.get("vmem_bytes_per_block").and_then(|v| v.as_f64()),
+                    operator: m.get("operator").and_then(|v| v.as_str()).map(String::from),
+                    iters: m.get("iters").and_then(|v| v.as_f64()).map(|v| v as usize),
+                },
+            );
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Engine {
+            client,
+            dir,
+            meta,
+            compiled: BTreeMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+    pub fn artifact_names(&self) -> Vec<&str> {
+        self.meta.keys().map(|s| s.as_str()).collect()
+    }
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.meta.get(name)
+    }
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Compile (once) and cache the named artifact.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.compiled.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self
+            .meta
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?;
+        let path = meta
+            .file
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 path"))?
+            .to_string();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {path}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        self.compiled.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute the named artifact on f32 input buffers (shapes from the
+    /// manifest or caller-provided). Returns the flattened f32 outputs of
+    /// the result tuple. Host wall time is measured by the caller.
+    pub fn execute_f32(
+        &mut self,
+        name: &str,
+        inputs: &[(&[f32], &[usize])],
+    ) -> Result<Vec<Vec<f32>>> {
+        self.load(name)?;
+        let exe = self.compiled.get(name).unwrap();
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape to {dims:?}: {e:?}"))?;
+            literals.push(lit);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let first = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("no output buffer"))?;
+        let lit = first
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True
+        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            let v = p.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+            out.push(v);
+        }
+        if out.is_empty() {
+            bail!("empty result tuple from {name}");
+        }
+        Ok(out)
+    }
+
+    /// Run one LBM step artifact: `f` is the flattened (19, N, N, N) PDF
+    /// field; returns the updated field.
+    pub fn lbm_step(&mut self, name: &str, f: &[f32]) -> Result<Vec<f32>> {
+        let shape = self
+            .meta(name)
+            .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?
+            .shape
+            .clone();
+        let expect: usize = shape.iter().product();
+        if f.len() != expect {
+            bail!("lbm_step {name}: field has {} values, artifact expects {expect}", f.len());
+        }
+        let mut out = self.execute_f32(name, &[(f, &shape)])?;
+        Ok(out.remove(0))
+    }
+
+    /// Run an RVE CG artifact: returns (x, relative residual).
+    pub fn rve_cg(&mut self, name: &str, b: &[f32], kappa: &[f32]) -> Result<(Vec<f32>, f32)> {
+        let shape = self
+            .meta(name)
+            .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?
+            .shape
+            .clone();
+        let expect: usize = shape.iter().product();
+        if b.len() != expect || kappa.len() != expect {
+            bail!("rve_cg {name}: input sizes {} / {} != {expect}", b.len(), kappa.len());
+        }
+        let out = self.execute_f32(name, &[(b, &shape), (kappa, &shape)])?;
+        if out.len() != 2 {
+            bail!("rve_cg {name}: expected (x, rel), got {} outputs", out.len());
+        }
+        let rel = out[1].first().copied().unwrap_or(f32::NAN);
+        Ok((out[0].clone(), rel))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn manifest_parses_and_lists() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let e = Engine::open(artifacts_dir()).unwrap();
+        assert!(e.artifact_names().len() >= 10);
+        let m = e.meta("lbm_d3q19_srt_16").unwrap();
+        assert_eq!(m.shape, vec![19, 16, 16, 16]);
+        assert_eq!(m.operator.as_deref(), Some("srt"));
+        assert!(m.flops_per_cell.unwrap() > 200.0);
+    }
+
+    #[test]
+    fn lbm_step_executes_and_preserves_mass() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut e = Engine::open(artifacts_dir()).unwrap();
+        let n = 8usize;
+        let cells = 19 * n * n * n;
+        // equilibrium at rest: w_q replicated per cell
+        let w = [
+            1.0 / 3.0,
+            1.0 / 18.0, 1.0 / 18.0, 1.0 / 18.0, 1.0 / 18.0, 1.0 / 18.0, 1.0 / 18.0,
+            1.0 / 36.0, 1.0 / 36.0, 1.0 / 36.0, 1.0 / 36.0, 1.0 / 36.0, 1.0 / 36.0,
+            1.0 / 36.0, 1.0 / 36.0, 1.0 / 36.0, 1.0 / 36.0, 1.0 / 36.0, 1.0 / 36.0,
+        ];
+        let mut f = vec![0f32; cells];
+        for q in 0..19 {
+            for c in 0..n * n * n {
+                f[q * n * n * n + c] = w[q] as f32;
+            }
+        }
+        let mass0: f32 = f.iter().sum();
+        let out = e.lbm_step("lbm_d3q19_srt_8", &f).unwrap();
+        let mass1: f32 = out.iter().sum();
+        assert_eq!(out.len(), cells);
+        assert!((mass0 - mass1).abs() < 1e-2, "mass {mass0} -> {mass1}");
+        // equilibrium at rest is a fixed point
+        let max_diff = f
+            .iter()
+            .zip(&out)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(max_diff < 1e-5, "max_diff={max_diff}");
+    }
+
+    #[test]
+    fn rve_cg_executes_and_converges() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut e = Engine::open(artifacts_dir()).unwrap();
+        let n = 8usize;
+        let b = vec![1f32; n * n * n];
+        let kappa = vec![1f32; n * n * n];
+        let (x, rel) = e.rve_cg("rve_cg_8_24", &b, &kappa).unwrap();
+        assert_eq!(x.len(), n * n * n);
+        assert!(rel < 1e-2, "rel={rel}");
+        assert!(x.iter().all(|v| v.is_finite()));
+        // interior of the solution should be positive (Poisson with b>0)
+        assert!(x[(n * n * n) / 2] > 0.0);
+    }
+
+    #[test]
+    fn unknown_artifact_is_error() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut e = Engine::open(artifacts_dir()).unwrap();
+        assert!(e.load("nope").is_err());
+        assert!(e.lbm_step("nope", &[]).is_err());
+    }
+
+    #[test]
+    fn wrong_input_size_is_error() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut e = Engine::open(artifacts_dir()).unwrap();
+        assert!(e.lbm_step("lbm_d3q19_srt_8", &[0.0; 3]).is_err());
+    }
+}

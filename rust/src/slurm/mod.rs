@@ -1,0 +1,365 @@
+//! Slurm stand-in: single-node batch scheduling over the simulated
+//! Testcluster.
+//!
+//! The paper's pipeline assembles job scripts and submits them with
+//! `sbatch --parsable --wait --nodelist=$HOST` (Listing 1); the Testcluster
+//! partition only allows single-node jobs (§4.1). This module implements
+//! exactly that contract in simulated time:
+//!
+//! * [`Scheduler::sbatch`] queues a job targeting one node (FIFO per node),
+//! * job payloads are closures that "run" on the node model and return
+//!   their stdout plus the simulated duration,
+//! * `SLURM_TIMELIMIT` (minutes) kills overrunning jobs (`Timeout` state),
+//! * [`Scheduler::wait_all`] advances simulated time until the queue
+//!   drains (the `--wait` behaviour),
+//! * completed jobs leave a log file content (`$CI_JOB_NAME.o$JOBID.log`).
+
+use crate::cluster::nodes::NodeModel;
+use std::collections::BTreeMap;
+
+/// Outcome a job payload reports back.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    /// Simulated runtime in seconds.
+    pub duration: f64,
+    /// Captured stdout (the benchmark's output the pipeline parses).
+    pub stdout: String,
+    /// Nonzero = job failed.
+    pub exit_code: i32,
+}
+
+/// The payload executed when the job starts: gets the node model and the
+/// simulated start time.
+pub type Payload = Box<dyn FnOnce(&NodeModel, f64) -> JobOutcome + Send>;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Pending,
+    Running,
+    Completed,
+    Failed,
+    Timeout,
+    Cancelled,
+}
+
+/// Submission parameters (the `sbatch` flags the pipeline uses).
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub name: String,
+    /// `--nodelist`: the single target host (Testcluster is single-node).
+    pub nodelist: String,
+    /// `SLURM_TIMELIMIT` in minutes.
+    pub timelimit_min: f64,
+}
+
+/// Scheduler-side job record.
+pub struct Job {
+    pub id: u64,
+    pub spec: JobSpec,
+    pub state: JobState,
+    pub submit_time: f64,
+    pub start_time: Option<f64>,
+    pub end_time: Option<f64>,
+    pub log: String,
+    payload: Option<Payload>,
+}
+
+impl std::fmt::Debug for Job {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Job")
+            .field("id", &self.id)
+            .field("name", &self.spec.name)
+            .field("node", &self.spec.nodelist)
+            .field("state", &self.state)
+            .finish()
+    }
+}
+
+/// The cluster scheduler: one FIFO queue per node, simulated clock.
+pub struct Scheduler {
+    nodes: BTreeMap<String, NodeModel>,
+    jobs: Vec<Job>,
+    /// Per-node: sim time at which the node becomes free.
+    node_free_at: BTreeMap<String, f64>,
+    clock: f64,
+    next_id: u64,
+}
+
+impl Scheduler {
+    /// Build a scheduler over the given nodes.
+    pub fn new(nodes: Vec<NodeModel>) -> Scheduler {
+        let node_free_at = nodes.iter().map(|n| (n.host.to_string(), 0.0)).collect();
+        Scheduler {
+            nodes: nodes.into_iter().map(|n| (n.host.to_string(), n)).collect(),
+            jobs: Vec::new(),
+            node_free_at,
+            clock: 0.0,
+            next_id: 1000,
+        }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.clock
+    }
+    pub fn nodes(&self) -> impl Iterator<Item = &NodeModel> {
+        self.nodes.values()
+    }
+    pub fn node(&self, host: &str) -> Option<&NodeModel> {
+        self.nodes.get(host)
+    }
+
+    /// `sbatch --parsable`: queue a job, return its id. Errors if the
+    /// nodelist names an unknown host (sbatch would reject it).
+    pub fn sbatch(&mut self, spec: JobSpec, payload: Payload) -> Result<u64, String> {
+        if !self.nodes.contains_key(&spec.nodelist) {
+            return Err(format!(
+                "sbatch: invalid nodelist `{}` (unknown host)",
+                spec.nodelist
+            ));
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.jobs.push(Job {
+            id,
+            spec,
+            state: JobState::Pending,
+            submit_time: self.clock,
+            start_time: None,
+            end_time: None,
+            log: String::new(),
+            payload: Some(payload),
+        });
+        Ok(id)
+    }
+
+    /// `squeue`: all jobs in the given state.
+    pub fn squeue(&self, state: JobState) -> Vec<&Job> {
+        self.jobs.iter().filter(|j| j.state == state).collect()
+    }
+
+    pub fn job(&self, id: u64) -> Option<&Job> {
+        self.jobs.iter().find(|j| j.id == id)
+    }
+
+    /// `scancel`.
+    pub fn scancel(&mut self, id: u64) -> bool {
+        for j in &mut self.jobs {
+            if j.id == id && j.state == JobState::Pending {
+                j.state = JobState::Cancelled;
+                j.payload = None;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Run every pending job to completion in FIFO order per node,
+    /// advancing the simulated clock (the `--wait` semantics the pipeline
+    /// relies on). Returns ids of jobs executed this call.
+    pub fn wait_all(&mut self) -> Vec<u64> {
+        let mut executed = Vec::new();
+        // FIFO per node: process in submission order
+        let order: Vec<usize> = (0..self.jobs.len())
+            .filter(|&i| self.jobs[i].state == JobState::Pending)
+            .collect();
+        for i in order {
+            let node_host = self.jobs[i].spec.nodelist.clone();
+            let node = self.nodes[&node_host].clone();
+            let free_at = self.node_free_at[&node_host].max(self.jobs[i].submit_time);
+            let start = free_at;
+            let payload = self.jobs[i].payload.take().expect("pending job has payload");
+            self.jobs[i].state = JobState::Running;
+            self.jobs[i].start_time = Some(start);
+
+            let outcome = payload(&node, start);
+            let limit = self.jobs[i].spec.timelimit_min * 60.0;
+            let (dur, state) = if outcome.duration > limit {
+                (limit, JobState::Timeout)
+            } else if outcome.exit_code != 0 {
+                (outcome.duration, JobState::Failed)
+            } else {
+                (outcome.duration, JobState::Completed)
+            };
+            let end = start + dur;
+            self.node_free_at.insert(node_host.clone(), end);
+            self.clock = self.clock.max(end);
+
+            let j = &mut self.jobs[i];
+            j.end_time = Some(end);
+            j.state = state;
+            j.log = format!(
+                "== slurm job {} ({}) on {} ==\nsubmit={:.3} start={:.3} end={:.3} state={:?}\n{}{}",
+                j.id,
+                j.spec.name,
+                j.spec.nodelist,
+                j.submit_time,
+                start,
+                end,
+                state,
+                outcome.stdout,
+                if state == JobState::Timeout {
+                    format!("\nslurmstepd: *** JOB {} CANCELLED DUE TO TIME LIMIT ***\n", j.id)
+                } else {
+                    String::new()
+                }
+            );
+            executed.push(j.id);
+        }
+        executed
+    }
+
+    /// The log-file content the CI job `cat`s after `--wait` returns
+    /// (`${CI_JOB_NAME}.o${job_id}.log` in Listing 1).
+    pub fn job_log(&self, id: u64) -> Option<&str> {
+        self.job(id).map(|j| j.log.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::nodes::catalogue;
+
+    fn sched() -> Scheduler {
+        Scheduler::new(catalogue().into_iter().filter(|n| n.testcluster).collect())
+    }
+
+    fn ok_payload(dur: f64, out: &str) -> Payload {
+        let out = out.to_string();
+        Box::new(move |_n, _t| JobOutcome {
+            duration: dur,
+            stdout: out,
+            exit_code: 0,
+        })
+    }
+
+    #[test]
+    fn sbatch_queues_and_wait_completes() {
+        let mut s = sched();
+        let id = s
+            .sbatch(
+                JobSpec {
+                    name: "fe2ti216-icx36".into(),
+                    nodelist: "icx36".into(),
+                    timelimit_min: 120.0,
+                },
+                ok_payload(40.0, "TTS=40.0\n"),
+            )
+            .unwrap();
+        assert_eq!(s.squeue(JobState::Pending).len(), 1);
+        s.wait_all();
+        let j = s.job(id).unwrap();
+        assert_eq!(j.state, JobState::Completed);
+        assert_eq!(j.end_time, Some(40.0));
+        assert!(s.job_log(id).unwrap().contains("TTS=40.0"));
+    }
+
+    #[test]
+    fn unknown_node_rejected() {
+        let mut s = sched();
+        let r = s.sbatch(
+            JobSpec {
+                name: "x".into(),
+                nodelist: "nonexistent".into(),
+                timelimit_min: 1.0,
+            },
+            ok_payload(1.0, ""),
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn fifo_per_node_serializes_same_node_jobs() {
+        let mut s = sched();
+        let a = s
+            .sbatch(
+                JobSpec { name: "a".into(), nodelist: "icx36".into(), timelimit_min: 10.0 },
+                ok_payload(10.0, ""),
+            )
+            .unwrap();
+        let b = s
+            .sbatch(
+                JobSpec { name: "b".into(), nodelist: "icx36".into(), timelimit_min: 10.0 },
+                ok_payload(5.0, ""),
+            )
+            .unwrap();
+        // different node runs in parallel (starts at t=0)
+        let c = s
+            .sbatch(
+                JobSpec { name: "c".into(), nodelist: "rome1".into(), timelimit_min: 10.0 },
+                ok_payload(7.0, ""),
+            )
+            .unwrap();
+        s.wait_all();
+        assert_eq!(s.job(a).unwrap().end_time, Some(10.0));
+        assert_eq!(s.job(b).unwrap().start_time, Some(10.0));
+        assert_eq!(s.job(b).unwrap().end_time, Some(15.0));
+        assert_eq!(s.job(c).unwrap().start_time, Some(0.0));
+        assert_eq!(s.job(c).unwrap().end_time, Some(7.0));
+    }
+
+    #[test]
+    fn timelimit_kills_job() {
+        let mut s = sched();
+        let id = s
+            .sbatch(
+                JobSpec { name: "slow".into(), nodelist: "icx36".into(), timelimit_min: 1.0 },
+                ok_payload(3600.0, "partial output\n"),
+            )
+            .unwrap();
+        s.wait_all();
+        let j = s.job(id).unwrap();
+        assert_eq!(j.state, JobState::Timeout);
+        assert_eq!(j.end_time, Some(60.0));
+        assert!(j.log.contains("CANCELLED DUE TO TIME LIMIT"));
+    }
+
+    #[test]
+    fn failing_job_marked_failed() {
+        let mut s = sched();
+        let id = s
+            .sbatch(
+                JobSpec { name: "bad".into(), nodelist: "icx36".into(), timelimit_min: 10.0 },
+                Box::new(|_n, _t| JobOutcome {
+                    duration: 1.0,
+                    stdout: "segfault".into(),
+                    exit_code: 139,
+                }),
+            )
+            .unwrap();
+        s.wait_all();
+        assert_eq!(s.job(id).unwrap().state, JobState::Failed);
+    }
+
+    #[test]
+    fn scancel_pending_only() {
+        let mut s = sched();
+        let id = s
+            .sbatch(
+                JobSpec { name: "x".into(), nodelist: "icx36".into(), timelimit_min: 1.0 },
+                ok_payload(1.0, ""),
+            )
+            .unwrap();
+        assert!(s.scancel(id));
+        assert!(!s.scancel(id)); // already cancelled
+        s.wait_all();
+        assert_eq!(s.job(id).unwrap().state, JobState::Cancelled);
+    }
+
+    #[test]
+    fn payload_sees_node_model() {
+        let mut s = sched();
+        let id = s
+            .sbatch(
+                JobSpec { name: "probe".into(), nodelist: "icx36".into(), timelimit_min: 10.0 },
+                Box::new(|n, _t| JobOutcome {
+                    duration: 1.0,
+                    stdout: format!("cores={}", n.cores()),
+                    exit_code: 0,
+                }),
+            )
+            .unwrap();
+        s.wait_all();
+        assert!(s.job_log(id).unwrap().contains("cores=72"));
+    }
+}

@@ -1,0 +1,150 @@
+//! ILU(0): incomplete LU on the sparsity pattern of A — the preconditioner
+//! for the paper's "inexact option" (GMRES + ILU, §2.1.3).
+
+use super::{Csr, Work};
+
+/// ILU(0) factors stored on A's pattern: one CSR holding L (strict lower,
+/// unit diagonal implicit) and U (diagonal + upper) interleaved, as usual.
+#[derive(Debug, Clone)]
+pub struct Ilu0 {
+    lu: Csr,
+    /// position of the diagonal entry in each row of `lu`
+    diag: Vec<usize>,
+    pub factor_work: Work,
+}
+
+impl Ilu0 {
+    /// Compute ILU(0) of `a`. Requires a structurally-present, nonzero
+    /// diagonal.
+    pub fn factor(a: &Csr) -> Result<Ilu0, String> {
+        let n = a.n;
+        let mut lu = a.clone();
+        let mut w = Work::default();
+        // locate diagonals
+        let mut diag = vec![usize::MAX; n];
+        for i in 0..n {
+            for k in lu.indptr[i]..lu.indptr[i + 1] {
+                if lu.indices[k] == i {
+                    diag[i] = k;
+                }
+            }
+            if diag[i] == usize::MAX {
+                return Err(format!("missing diagonal in row {i}"));
+            }
+        }
+        // IKJ variant restricted to the pattern
+        for i in 1..n {
+            let row_start = lu.indptr[i];
+            let row_end = lu.indptr[i + 1];
+            for kk in row_start..row_end {
+                let k = lu.indices[kk];
+                if k >= i {
+                    break;
+                }
+                let pivot = lu.data[diag[k]];
+                if pivot.abs() < 1e-300 {
+                    return Err(format!("zero pivot in ILU at row {k}"));
+                }
+                let factor = lu.data[kk] / pivot;
+                lu.data[kk] = factor;
+                w.add(1.0, 24.0);
+                // subtract factor * U[k, j] for j in row i's pattern, j > k
+                let mut jj = kk + 1;
+                let (k_start, k_end) = (diag[k] + 1, lu.indptr[k + 1]);
+                let mut uk = k_start;
+                while jj < row_end && uk < k_end {
+                    let cj = lu.indices[jj];
+                    let ck = lu.indices[uk];
+                    match cj.cmp(&ck) {
+                        std::cmp::Ordering::Less => jj += 1,
+                        std::cmp::Ordering::Greater => uk += 1,
+                        std::cmp::Ordering::Equal => {
+                            lu.data[jj] -= factor * lu.data[uk];
+                            w.add(2.0, 24.0);
+                            jj += 1;
+                            uk += 1;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(Ilu0 {
+            lu,
+            diag,
+            factor_work: w,
+        })
+    }
+
+    /// Apply M⁻¹: solve L·U·z = r on the incomplete factors.
+    pub fn apply(&self, r: &[f64], w: &mut Work) -> Vec<f64> {
+        let n = self.lu.n;
+        let mut z = r.to_vec();
+        // forward (unit lower)
+        for i in 0..n {
+            let mut s = z[i];
+            for k in self.lu.indptr[i]..self.diag[i] {
+                s -= self.lu.data[k] * z[self.lu.indices[k]];
+            }
+            z[i] = s;
+        }
+        // backward
+        for i in (0..n).rev() {
+            let mut s = z[i];
+            for k in self.diag[i] + 1..self.lu.indptr[i + 1] {
+                s -= self.lu.data[k] * z[self.lu.indices[k]];
+            }
+            z[i] = s / self.lu.data[self.diag[i]];
+        }
+        let nnz = self.lu.nnz() as f64;
+        w.add(2.0 * nnz + n as f64, 12.0 * nnz + 16.0 * n as f64);
+        z
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::testmat::laplacian2d;
+
+    #[test]
+    fn ilu_exact_for_tridiagonal() {
+        // for a tridiagonal matrix ILU(0) == full LU, so apply() solves exactly
+        let n = 10;
+        let mut t = Vec::new();
+        for i in 0..n {
+            t.push((i, i, 2.5));
+            if i > 0 {
+                t.push((i, i - 1, -1.0));
+            }
+            if i + 1 < n {
+                t.push((i, i + 1, -1.0));
+            }
+        }
+        let a = Csr::from_triplets(n, &t);
+        let ilu = Ilu0::factor(&a).unwrap();
+        let b = vec![1.0; n];
+        let mut w = Work::default();
+        let x = ilu.apply(&b, &mut w);
+        assert!(a.residual_norm(&x, &b) < 1e-10);
+    }
+
+    #[test]
+    fn ilu_is_contraction_for_laplacian() {
+        let a = laplacian2d(8);
+        let ilu = Ilu0::factor(&a).unwrap();
+        let b = vec![1.0; a.n];
+        let mut w = Work::default();
+        let z = ilu.apply(&b, &mut w);
+        // not exact (fill discarded) but should reduce the residual strongly
+        let r0: f64 = (a.n as f64).sqrt(); // ||b|| with x=0
+        let r1 = a.residual_norm(&z, &b);
+        assert!(r1 < 0.7 * r0, "r1={r1} r0={r0}");
+        assert!(w.flops > 0.0);
+    }
+
+    #[test]
+    fn missing_diagonal_rejected() {
+        let a = Csr::from_triplets(2, &[(0, 1, 1.0), (1, 0, 1.0)]);
+        assert!(Ilu0::factor(&a).is_err());
+    }
+}

@@ -1,0 +1,105 @@
+//! Reverse Cuthill–McKee ordering: bandwidth/fill reduction before the
+//! direct factorization (what PARDISO/UMFPACK's analysis phase does with
+//! far fancier orderings; RCM is enough to make fill realistic).
+
+use super::Csr;
+
+/// Compute the RCM permutation (`perm[new] = old`) of the symmetrized
+/// pattern of `a`.
+pub fn rcm(a: &Csr) -> Vec<usize> {
+    let n = a.n;
+    // build symmetric adjacency (pattern of A + Aᵀ, no diagonal)
+    let mut adj: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for i in 0..n {
+        for &j in a.row(i).0 {
+            if i != j {
+                adj[i].push(j);
+                adj[j].push(i);
+            }
+        }
+    }
+    for l in adj.iter_mut() {
+        l.sort_unstable();
+        l.dedup();
+    }
+    let degree: Vec<usize> = adj.iter().map(|l| l.len()).collect();
+
+    let mut visited = vec![false; n];
+    let mut order = Vec::with_capacity(n);
+    // process all connected components
+    loop {
+        // pick unvisited vertex of minimal degree as start
+        let start = match (0..n)
+            .filter(|&v| !visited[v])
+            .min_by_key(|&v| degree[v])
+        {
+            Some(s) => s,
+            None => break,
+        };
+        // BFS, neighbors by increasing degree
+        let mut queue = std::collections::VecDeque::new();
+        queue.push_back(start);
+        visited[start] = true;
+        while let Some(v) = queue.pop_front() {
+            order.push(v);
+            let mut nb: Vec<usize> = adj[v].iter().copied().filter(|&u| !visited[u]).collect();
+            nb.sort_by_key(|&u| degree[u]);
+            for u in nb {
+                visited[u] = true;
+                queue.push_back(u);
+            }
+        }
+    }
+    order.reverse(); // the "reverse" in RCM
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Csr;
+    use crate::util::rng::Rng;
+
+    /// 1-D Laplacian with a random symmetric permutation applied — RCM
+    /// should recover a small bandwidth.
+    #[test]
+    fn rcm_reduces_bandwidth() {
+        let n = 64;
+        let mut t = Vec::new();
+        for i in 0..n {
+            t.push((i, i, 2.0));
+            if i > 0 {
+                t.push((i, i - 1, -1.0));
+            }
+            if i + 1 < n {
+                t.push((i, i + 1, -1.0));
+            }
+        }
+        let a = Csr::from_triplets(n, &t);
+        // scramble
+        let mut perm: Vec<usize> = (0..n).collect();
+        let mut rng = Rng::new(11);
+        rng.shuffle(&mut perm);
+        let scrambled = a.permute(&perm);
+        assert!(scrambled.bandwidth() > 8, "scramble should blow up bandwidth");
+        let r = rcm(&scrambled);
+        let restored = scrambled.permute(&r);
+        assert!(
+            restored.bandwidth() <= 2,
+            "rcm bandwidth = {}",
+            restored.bandwidth()
+        );
+    }
+
+    #[test]
+    fn rcm_is_permutation_even_disconnected() {
+        // two disconnected blocks
+        let a = Csr::from_triplets(
+            4,
+            &[(0, 0, 1.0), (1, 1, 1.0), (0, 1, 0.5), (2, 2, 1.0), (3, 3, 1.0), (2, 3, 0.5)],
+        );
+        let mut p = rcm(&a);
+        p.sort_unstable();
+        assert_eq!(p, vec![0, 1, 2, 3]);
+    }
+}

@@ -1,0 +1,328 @@
+//! InfluxDB stand-in: a time-series database with tags, fields and a
+//! line-protocol wire format.
+//!
+//! The paper stores every benchmark result in InfluxDB (§4.3): *fields*
+//! carry the runtime metrics (TTS, FLOP count, traffic), *tags* carry the
+//! metadata (domain size, solver, compute node), and the pipeline trigger
+//! time is the timestamp. Grafana then queries grouped-by-tag series.
+//! This module implements that data model from scratch:
+//!
+//! * [`Point`] — measurement + tags + fields + nanosecond timestamp,
+//! * line protocol encode/parse ([`Point::to_line`], [`Point::parse_line`]),
+//! * [`Db`] — an in-memory engine with optional file persistence,
+//! * [`Query`] — tag filters, time range, field selection, group-by-tags,
+//!   and the aggregations the dashboards use (last/mean/min/max).
+
+pub mod query;
+
+pub use query::{Aggregate, GroupedSeries, Query};
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+/// One data point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Point {
+    pub measurement: String,
+    pub tags: BTreeMap<String, String>,
+    pub fields: BTreeMap<String, f64>,
+    /// Nanoseconds since campaign epoch.
+    pub ts: i64,
+}
+
+impl Point {
+    pub fn new(measurement: &str, ts: i64) -> Point {
+        Point {
+            measurement: measurement.to_string(),
+            tags: BTreeMap::new(),
+            fields: BTreeMap::new(),
+            ts,
+        }
+    }
+    pub fn tag(mut self, k: &str, v: &str) -> Point {
+        self.tags.insert(k.to_string(), v.to_string());
+        self
+    }
+    pub fn field(mut self, k: &str, v: f64) -> Point {
+        self.fields.insert(k.to_string(), v);
+        self
+    }
+
+    /// Influx line protocol: `measurement,tag=v,... field=v,... ts`.
+    /// Spaces/commas in tag values are escaped with `\`.
+    pub fn to_line(&self) -> String {
+        let esc = |s: &str| s.replace('\\', "\\\\").replace(',', "\\,").replace(' ', "\\ ").replace('=', "\\=");
+        let mut line = esc(&self.measurement);
+        for (k, v) in &self.tags {
+            line.push(',');
+            line.push_str(&esc(k));
+            line.push('=');
+            line.push_str(&esc(v));
+        }
+        line.push(' ');
+        let fields: Vec<String> = self
+            .fields
+            .iter()
+            .map(|(k, v)| format!("{}={v}", esc(k)))
+            .collect();
+        line.push_str(&fields.join(","));
+        line.push(' ');
+        line.push_str(&self.ts.to_string());
+        line
+    }
+
+    /// Parse one line-protocol line.
+    pub fn parse_line(line: &str) -> Result<Point, String> {
+        // split into 3 sections on unescaped spaces
+        let mut sections: Vec<String> = Vec::new();
+        let mut cur = String::new();
+        let mut esc = false;
+        for c in line.chars() {
+            if esc {
+                cur.push(c);
+                esc = false;
+            } else if c == '\\' {
+                cur.push(c);
+                esc = true;
+            } else if c == ' ' && sections.len() < 2 {
+                sections.push(std::mem::take(&mut cur));
+            } else {
+                cur.push(c);
+            }
+        }
+        sections.push(cur);
+        if sections.len() != 3 {
+            return Err(format!("expected 3 sections, got {}", sections.len()));
+        }
+        let unesc = |s: &str| -> String {
+            let mut out = String::new();
+            let mut esc = false;
+            for c in s.chars() {
+                if esc {
+                    out.push(c);
+                    esc = false;
+                } else if c == '\\' {
+                    esc = true;
+                } else {
+                    out.push(c);
+                }
+            }
+            out
+        };
+        // measurement + tags: split on unescaped commas
+        let split_unescaped = |s: &str, sep: char| -> Vec<String> {
+            let mut parts = Vec::new();
+            let mut cur = String::new();
+            let mut esc = false;
+            for c in s.chars() {
+                if esc {
+                    cur.push(c);
+                    esc = false;
+                } else if c == '\\' {
+                    cur.push(c);
+                    esc = true;
+                } else if c == sep {
+                    parts.push(std::mem::take(&mut cur));
+                } else {
+                    cur.push(c);
+                }
+            }
+            parts.push(cur);
+            parts
+        };
+        let head = split_unescaped(&sections[0], ',');
+        let mut p = Point::new(&unesc(&head[0]), 0);
+        for t in &head[1..] {
+            let kv = split_unescaped(t, '=');
+            if kv.len() != 2 {
+                return Err(format!("bad tag `{t}`"));
+            }
+            p.tags.insert(unesc(&kv[0]), unesc(&kv[1]));
+        }
+        for f in split_unescaped(&sections[1], ',') {
+            let kv = split_unescaped(&f, '=');
+            if kv.len() != 2 {
+                return Err(format!("bad field `{f}`"));
+            }
+            let v: f64 = kv[1].parse().map_err(|_| format!("bad field value `{}`", kv[1]))?;
+            p.fields.insert(unesc(&kv[0]), v);
+        }
+        p.ts = sections[2]
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad timestamp `{}`", sections[2]))?;
+        if p.fields.is_empty() {
+            return Err("point has no fields".into());
+        }
+        Ok(p)
+    }
+}
+
+/// The storage engine: points per measurement, kept time-ordered.
+#[derive(Debug, Default)]
+pub struct Db {
+    measurements: BTreeMap<String, Vec<Point>>,
+}
+
+impl Db {
+    pub fn new() -> Db {
+        Db::default()
+    }
+
+    /// Insert one point (keeps the measurement time-sorted).
+    pub fn insert(&mut self, p: Point) {
+        let v = self.measurements.entry(p.measurement.clone()).or_default();
+        // common case: appended in time order
+        if v.last().map(|l| l.ts <= p.ts).unwrap_or(true) {
+            v.push(p);
+        } else {
+            let idx = v.partition_point(|q| q.ts <= p.ts);
+            v.insert(idx, p);
+        }
+    }
+
+    /// Ingest a batch of line-protocol text (the pipeline's upload step).
+    pub fn ingest_lines(&mut self, text: &str) -> Result<usize, String> {
+        let mut n = 0;
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            self.insert(Point::parse_line(line)?);
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    pub fn measurements(&self) -> impl Iterator<Item = &String> {
+        self.measurements.keys()
+    }
+
+    pub fn len(&self) -> usize {
+        self.measurements.values().map(|v| v.len()).sum()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn points(&self, measurement: &str) -> &[Point] {
+        self.measurements
+            .get(measurement)
+            .map(|v| v.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// All distinct values of `tag` within a measurement — powers the
+    /// dashboard template-variable dropdowns (the "collision Setup menu").
+    pub fn tag_values(&self, measurement: &str, tag: &str) -> Vec<String> {
+        let mut vals: Vec<String> = self
+            .points(measurement)
+            .iter()
+            .filter_map(|p| p.tags.get(tag).cloned())
+            .collect();
+        vals.sort();
+        vals.dedup();
+        vals
+    }
+
+    /// Persist as line protocol.
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        for pts in self.measurements.values() {
+            for p in pts {
+                writeln!(f, "{}", p.to_line())?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Load from a line-protocol file.
+    pub fn load(path: &Path) -> std::io::Result<Db> {
+        let text = std::fs::read_to_string(path)?;
+        let mut db = Db::new();
+        db.ingest_lines(&text)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+        Ok(db)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Point {
+        Point::new("fe2ti", 1_000_000_000)
+            .tag("node", "icx36")
+            .tag("solver", "ilu")
+            .field("tts", 40.5)
+            .field("gflops", 25.0)
+    }
+
+    #[test]
+    fn line_protocol_roundtrip() {
+        let p = sample();
+        let line = p.to_line();
+        assert!(line.starts_with("fe2ti,node=icx36,solver=ilu "));
+        let q = Point::parse_line(&line).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn line_protocol_escapes_specials() {
+        let p = Point::new("m x", 5)
+            .tag("k,1", "v 2=3")
+            .field("f", 1.0);
+        let q = Point::parse_line(&p.to_line()).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(Point::parse_line("nofields 123").is_err());
+        assert!(Point::parse_line("m f=1 notanumber").is_err());
+        assert!(Point::parse_line("m f=x 1").is_err());
+        assert!(Point::parse_line("m").is_err());
+    }
+
+    #[test]
+    fn db_keeps_time_order() {
+        let mut db = Db::new();
+        for ts in [5, 1, 3, 2, 4] {
+            db.insert(Point::new("m", ts).field("v", ts as f64));
+        }
+        let ts: Vec<i64> = db.points("m").iter().map(|p| p.ts).collect();
+        assert_eq!(ts, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn ingest_and_tag_values() {
+        let mut db = Db::new();
+        let text = "\
+# comment
+lbm,node=icx36,op=srt mlups=1200 1
+lbm,node=icx36,op=trt mlups=1100 2
+
+lbm,node=rome1,op=srt mlups=400 3
+";
+        assert_eq!(db.ingest_lines(text).unwrap(), 3);
+        assert_eq!(db.len(), 3);
+        assert_eq!(db.tag_values("lbm", "op"), vec!["srt", "trt"]);
+        assert_eq!(db.tag_values("lbm", "node"), vec!["icx36", "rome1"]);
+        assert!(db.tag_values("lbm", "missing").is_empty());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut db = Db::new();
+        db.insert(sample());
+        db.insert(Point::new("lbm", 7).tag("op", "srt").field("mlups", 900.0));
+        let path = std::env::temp_dir().join("cbench_tsdb_test.lp");
+        db.save(&path).unwrap();
+        let back = Db::load(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.points("fe2ti")[0], sample());
+        std::fs::remove_file(&path).ok();
+    }
+}

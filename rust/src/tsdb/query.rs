@@ -1,0 +1,246 @@
+//! Query layer over [`super::Db`]: tag filters, time ranges, group-by-tags
+//! and aggregations — the subset of InfluxQL the paper's Grafana dashboards
+//! use ("data ... is queried and grouped by the different parameter values
+//! to connect data points with the same parameter values", §4.4).
+
+use super::{Db, Point};
+use std::collections::BTreeMap;
+
+/// Aggregation over a field within a group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Aggregate {
+    /// The most recent value (Grafana "last") — used by the per-node
+    /// "latest benchmark results" panels (Fig. 8).
+    Last,
+    Mean,
+    Min,
+    Max,
+    Count,
+}
+
+/// A query against one measurement.
+#[derive(Debug, Clone, Default)]
+pub struct Query {
+    pub measurement: String,
+    pub field: String,
+    /// Exact-match tag filters (AND).
+    pub where_tags: BTreeMap<String, String>,
+    /// Multi-value tag filter (tag IN [values]) — dashboard dropdowns with
+    /// several selected entries.
+    pub where_tag_in: BTreeMap<String, Vec<String>>,
+    /// Inclusive time range in ns; None = unbounded.
+    pub t_min: Option<i64>,
+    pub t_max: Option<i64>,
+    /// Tags to group the series by.
+    pub group_by: Vec<String>,
+}
+
+/// One grouped series: the group's tag values and its (ts, value) points.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GroupedSeries {
+    pub group: BTreeMap<String, String>,
+    pub points: Vec<(i64, f64)>,
+}
+
+impl GroupedSeries {
+    pub fn aggregate(&self, agg: Aggregate) -> f64 {
+        let vals: Vec<f64> = self.points.iter().map(|(_, v)| *v).collect();
+        if vals.is_empty() {
+            return f64::NAN;
+        }
+        match agg {
+            Aggregate::Last => *vals.last().unwrap(),
+            Aggregate::Mean => vals.iter().sum::<f64>() / vals.len() as f64,
+            Aggregate::Min => vals.iter().copied().fold(f64::MAX, f64::min),
+            Aggregate::Max => vals.iter().copied().fold(f64::MIN, f64::max),
+            Aggregate::Count => vals.len() as f64,
+        }
+    }
+
+    /// Human-readable group label, e.g. `solver=ilu,node=icx36`.
+    pub fn label(&self) -> String {
+        if self.group.is_empty() {
+            return "all".to_string();
+        }
+        self.group
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+impl Query {
+    pub fn new(measurement: &str, field: &str) -> Query {
+        Query {
+            measurement: measurement.to_string(),
+            field: field.to_string(),
+            ..Query::default()
+        }
+    }
+    pub fn where_tag(mut self, k: &str, v: &str) -> Query {
+        self.where_tags.insert(k.to_string(), v.to_string());
+        self
+    }
+    pub fn where_tag_in(mut self, k: &str, vals: &[&str]) -> Query {
+        self.where_tag_in
+            .insert(k.to_string(), vals.iter().map(|s| s.to_string()).collect());
+        self
+    }
+    pub fn range(mut self, t_min: i64, t_max: i64) -> Query {
+        self.t_min = Some(t_min);
+        self.t_max = Some(t_max);
+        self
+    }
+    pub fn group_by(mut self, tags: &[&str]) -> Query {
+        self.group_by = tags.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    fn matches(&self, p: &Point) -> bool {
+        if let Some(t0) = self.t_min {
+            if p.ts < t0 {
+                return false;
+            }
+        }
+        if let Some(t1) = self.t_max {
+            if p.ts > t1 {
+                return false;
+            }
+        }
+        for (k, v) in &self.where_tags {
+            if p.tags.get(k) != Some(v) {
+                return false;
+            }
+        }
+        for (k, vals) in &self.where_tag_in {
+            match p.tags.get(k) {
+                Some(v) if vals.contains(v) => {}
+                _ => return false,
+            }
+        }
+        p.fields.contains_key(&self.field)
+    }
+
+    /// Execute against a DB, returning one series per group (sorted by
+    /// group label for stable output).
+    pub fn run(&self, db: &Db) -> Vec<GroupedSeries> {
+        let mut groups: BTreeMap<Vec<(String, String)>, GroupedSeries> = BTreeMap::new();
+        for p in db.points(&self.measurement) {
+            if !self.matches(p) {
+                continue;
+            }
+            let key: Vec<(String, String)> = self
+                .group_by
+                .iter()
+                .map(|t| {
+                    (
+                        t.clone(),
+                        p.tags.get(t).cloned().unwrap_or_else(|| "<none>".to_string()),
+                    )
+                })
+                .collect();
+            let entry = groups.entry(key.clone()).or_insert_with(|| GroupedSeries {
+                group: key.into_iter().collect(),
+                points: Vec::new(),
+            });
+            entry.points.push((p.ts, p.fields[&self.field]));
+        }
+        groups.into_values().collect()
+    }
+
+    /// Execute and aggregate each group to a single value.
+    pub fn run_agg(&self, db: &Db, agg: Aggregate) -> Vec<(String, f64)> {
+        self.run(db)
+            .into_iter()
+            .map(|s| (s.label(), s.aggregate(agg)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_db() -> Db {
+        let mut db = Db::new();
+        let mut add = |ts: i64, node: &str, solver: &str, tts: f64| {
+            db.insert(
+                Point::new("fe2ti", ts)
+                    .tag("node", node)
+                    .tag("solver", solver)
+                    .field("tts", tts),
+            );
+        };
+        add(1, "icx36", "ilu", 40.0);
+        add(2, "icx36", "ilu", 41.0);
+        add(1, "icx36", "pardiso", 60.0);
+        add(2, "icx36", "pardiso", 61.0);
+        add(1, "rome1", "ilu", 80.0);
+        db
+    }
+
+    #[test]
+    fn group_by_tag_produces_series() {
+        let db = test_db();
+        let series = Query::new("fe2ti", "tts")
+            .where_tag("node", "icx36")
+            .group_by(&["solver"])
+            .run(&db);
+        assert_eq!(series.len(), 2);
+        assert_eq!(series[0].group["solver"], "ilu");
+        assert_eq!(series[0].points, vec![(1, 40.0), (2, 41.0)]);
+        assert_eq!(series[1].label(), "solver=pardiso");
+    }
+
+    #[test]
+    fn aggregates() {
+        let db = test_db();
+        let s = &Query::new("fe2ti", "tts")
+            .where_tag("node", "icx36")
+            .where_tag("solver", "ilu")
+            .run(&db)[0];
+        assert_eq!(s.aggregate(Aggregate::Last), 41.0);
+        assert_eq!(s.aggregate(Aggregate::Mean), 40.5);
+        assert_eq!(s.aggregate(Aggregate::Min), 40.0);
+        assert_eq!(s.aggregate(Aggregate::Max), 41.0);
+        assert_eq!(s.aggregate(Aggregate::Count), 2.0);
+    }
+
+    #[test]
+    fn time_range_filters() {
+        let db = test_db();
+        let series = Query::new("fe2ti", "tts")
+            .where_tag("node", "icx36")
+            .where_tag("solver", "ilu")
+            .range(2, 2)
+            .run(&db);
+        assert_eq!(series[0].points, vec![(2, 41.0)]);
+    }
+
+    #[test]
+    fn tag_in_filter() {
+        let db = test_db();
+        let series = Query::new("fe2ti", "tts")
+            .where_tag_in("solver", &["ilu"])
+            .group_by(&["node"])
+            .run(&db);
+        assert_eq!(series.len(), 2); // icx36 + rome1, pardiso filtered out
+    }
+
+    #[test]
+    fn missing_field_or_measurement_empty() {
+        let db = test_db();
+        assert!(Query::new("fe2ti", "nosuch").run(&db).is_empty());
+        assert!(Query::new("nosuch", "tts").run(&db).is_empty());
+    }
+
+    #[test]
+    fn ungrouped_is_single_series() {
+        let db = test_db();
+        let series = Query::new("fe2ti", "tts").run(&db);
+        assert_eq!(series.len(), 1);
+        assert_eq!(series[0].label(), "all");
+        assert_eq!(series[0].points.len(), 5);
+    }
+}

@@ -1,0 +1,92 @@
+//! Tiny argv parser (clap stand-in) for the `cbench` launcher.
+//!
+//! Grammar: `cbench <command> [<subcommand>] [--flag] [--key value] [positional...]`
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// Positional arguments in order (after the command words).
+    pub positional: Vec<String>,
+    /// `--key value` pairs; bare `--flag` maps to "true".
+    pub options: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse a raw argv tail (everything after the command words).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.options.insert(key.to_string(), v);
+                } else {
+                    out.options.insert(key.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.options.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_positional_and_options() {
+        let a = args("fig9 --node icx36 --ranks 72 extra");
+        assert_eq!(a.positional, vec!["fig9", "extra"]);
+        assert_eq!(a.get("node"), Some("icx36"));
+        assert_eq!(a.get_usize("ranks", 1), 72);
+    }
+
+    #[test]
+    fn parses_flags_and_eq_syntax() {
+        let a = args("--verbose --out=/tmp/x --n 3");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("out"), Some("/tmp/x"));
+        assert_eq!(a.get_usize("n", 0), 3);
+        assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = args("--a --b v");
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("v"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = args("");
+        assert_eq!(a.get_or("x", "d"), "d");
+        assert_eq!(a.get_f64("y", 1.5), 1.5);
+    }
+}

@@ -1,0 +1,92 @@
+//! Hand-rolled substrates.
+//!
+//! The build environment vendors only the `xla` crate's dependency tree, so
+//! everything a normal project would pull from crates.io (serde, rand, clap,
+//! criterion, a table printer) is implemented here from scratch.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+/// Simulated-time clock used across the stack.
+///
+/// The coordinator, scheduler and TSDB all share one notion of time: the
+/// *simulated* wall clock in seconds since campaign start. Real host wall
+/// time is only used by the bench harness (`stats::Bench`).
+#[derive(Debug, Clone, Copy, PartialEq, PartialOrd, Default)]
+pub struct SimTime(pub f64);
+
+impl SimTime {
+    pub fn secs(self) -> f64 {
+        self.0
+    }
+    pub fn advance(&mut self, dt: f64) {
+        debug_assert!(dt >= 0.0, "time cannot go backwards (dt={dt})");
+        self.0 += dt;
+    }
+    /// Nanoseconds since epoch — the TSDB timestamp unit (influx-style).
+    pub fn nanos(self) -> i64 {
+        (self.0 * 1e9) as i64
+    }
+    pub fn from_nanos(n: i64) -> Self {
+        SimTime(n as f64 / 1e9)
+    }
+}
+
+/// Format seconds human-readably (`1h02m`, `3.2s`, `450ms`).
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 3600.0 {
+        format!("{}h{:02}m", (s / 3600.0) as u64, ((s % 3600.0) / 60.0) as u64)
+    } else if s >= 60.0 {
+        format!("{}m{:02}s", (s / 60.0) as u64, (s % 60.0) as u64)
+    } else if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}us", s * 1e6)
+    }
+}
+
+/// Format a byte count (`1.5 GB`, `320 MB`).
+pub fn fmt_bytes(b: f64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = b;
+    let mut u = 0;
+    while v >= 1000.0 && u < UNITS.len() - 1 {
+        v /= 1000.0;
+        u += 1;
+    }
+    format!("{v:.2} {}", UNITS[u])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simtime_advances_and_converts() {
+        let mut t = SimTime::default();
+        t.advance(1.5);
+        assert_eq!(t.secs(), 1.5);
+        assert_eq!(t.nanos(), 1_500_000_000);
+        assert_eq!(SimTime::from_nanos(t.nanos()).secs(), 1.5);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert_eq!(fmt_secs(3725.0), "1h02m");
+        assert_eq!(fmt_secs(62.0), "1m02s");
+        assert_eq!(fmt_secs(1.25), "1.25s");
+        assert_eq!(fmt_secs(0.0025), "2.50ms");
+        assert_eq!(fmt_secs(2.5e-6), "2.50us");
+    }
+
+    #[test]
+    fn fmt_bytes_ranges() {
+        assert_eq!(fmt_bytes(512.0), "512.00 B");
+        assert_eq!(fmt_bytes(1.5e9), "1.50 GB");
+    }
+}

@@ -1,0 +1,200 @@
+//! Descriptive statistics + a small measurement harness.
+//!
+//! `criterion` is not available in the vendored crate set, so the
+//! `rust/benches/*` targets (built with `harness = false`) use
+//! [`Bench`] for warmup / timed iterations / outlier-robust reporting.
+
+use std::time::Instant;
+
+/// Summary statistics over a sample.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub sd: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "empty sample");
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let mut s = xs.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            sd: var.sqrt(),
+            min: s[0],
+            max: s[n - 1],
+            p50: percentile_sorted(&s, 50.0),
+            p95: percentile_sorted(&s, 95.0),
+        }
+    }
+}
+
+/// Percentile (linear interpolation) of a pre-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Least-squares slope+intercept for (x, y) pairs — used by report code to
+/// check scaling trends ("time grows with nodes").
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    let sx: f64 = xs.iter().sum();
+    let sy: f64 = ys.iter().sum();
+    let sxx: f64 = xs.iter().map(|x| x * x).sum();
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| x * y).sum();
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-300 {
+        return (0.0, sy / n);
+    }
+    let slope = (n * sxy - sx * sy) / denom;
+    (slope, (sy - slope * sx) / n)
+}
+
+/// Wall-clock measurement harness (criterion stand-in).
+///
+/// Usage (in a `harness = false` bench binary):
+/// ```ignore
+/// let mut b = Bench::new("lbm_srt_32");
+/// let r = b.run(|| lattice.step());
+/// println!("{}", r.report());
+/// ```
+pub struct Bench {
+    pub name: String,
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    /// Stop once total measured time exceeds this many seconds.
+    pub budget_secs: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub secs_per_iter: Summary,
+}
+
+impl BenchResult {
+    /// One-line criterion-style report.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} time: [{} {} {}]  n={}",
+            self.name,
+            crate::util::fmt_secs(self.secs_per_iter.min),
+            crate::util::fmt_secs(self.secs_per_iter.p50),
+            crate::util::fmt_secs(self.secs_per_iter.max),
+            self.iters,
+        )
+    }
+    /// Throughput report when each iteration processes `units` items.
+    pub fn report_throughput(&self, units: f64, unit_name: &str) -> String {
+        let per_sec = units / self.secs_per_iter.p50;
+        format!("{}  thrpt: {:.3e} {unit_name}/s", self.report(), per_sec)
+    }
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Bench {
+        Bench {
+            name: name.to_string(),
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 500,
+            budget_secs: 2.0,
+        }
+    }
+
+    pub fn quick(name: &str) -> Bench {
+        Bench {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 50,
+            budget_secs: 0.5,
+            ..Bench::new(name)
+        }
+    }
+
+    pub fn run<T>(&mut self, mut f: impl FnMut() -> T) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.min_iters
+            || (samples.len() < self.max_iters
+                && start.elapsed().as_secs_f64() < self.budget_secs)
+        {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        BenchResult {
+            name: self.name.clone(),
+            iters: samples.len(),
+            secs_per_iter: Summary::of(&samples),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+        assert!((s.sd - (2.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let s = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile_sorted(&s, 0.0), 10.0);
+        assert_eq!(percentile_sorted(&s, 100.0), 40.0);
+        assert!((percentile_sorted(&s, 50.0) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linear_fit_recovers_line() {
+        let xs: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 * x + 1.0).collect();
+        let (m, b) = linear_fit(&xs, &ys);
+        assert!((m - 3.0).abs() < 1e-9 && (b - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut b = Bench::quick("noop");
+        let r = b.run(|| 1 + 1);
+        assert!(r.iters >= 3);
+        assert!(r.report().contains("noop"));
+        assert!(r.report_throughput(100.0, "elem").contains("elem/s"));
+    }
+}

@@ -1,0 +1,234 @@
+//! Aligned text tables and ASCII charts for terminal reports.
+//!
+//! The report generators (`cbench report figN`) print the same rows/series
+//! the paper's figures show; these helpers render them readably.
+
+/// A simple text table with a header row and auto-sized columns.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_str(&mut self, cells: &[&str]) -> &mut Self {
+        let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
+        self.row(&owned)
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.chars().count();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                width[i] = width[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let line = |out: &mut String, cells: &[String]| {
+            for (i, c) in cells.iter().enumerate() {
+                out.push_str("| ");
+                out.push_str(c);
+                for _ in c.chars().count()..width[i] {
+                    out.push(' ');
+                }
+                out.push(' ');
+            }
+            out.push_str("|\n");
+        };
+        line(&mut out, &self.header);
+        for (i, w) in width.iter().enumerate() {
+            out.push_str(if i == 0 { "|" } else { "|" });
+            out.push_str(&"-".repeat(w + 2));
+        }
+        out.push_str("|\n");
+        for r in &self.rows {
+            line(&mut out, r);
+        }
+        out
+    }
+
+    /// CSV export (comma-separated; cells containing commas get quoted).
+    pub fn to_csv(&self) -> String {
+        let esc = |c: &str| {
+            if c.contains(',') || c.contains('"') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(&self.header.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Horizontal ASCII bar chart: one labelled bar per entry, scaled to `width`.
+pub fn bar_chart(entries: &[(String, f64)], width: usize) -> String {
+    if entries.is_empty() {
+        return String::new();
+    }
+    let maxv = entries.iter().map(|(_, v)| *v).fold(f64::MIN, f64::max);
+    let label_w = entries.iter().map(|(l, _)| l.chars().count()).max().unwrap();
+    let mut out = String::new();
+    for (label, v) in entries {
+        let n = if maxv > 0.0 {
+            ((v / maxv) * width as f64).round() as usize
+        } else {
+            0
+        };
+        out.push_str(&format!(
+            "{:<label_w$}  {:<width$}  {v:.4}\n",
+            label,
+            "#".repeat(n),
+        ));
+    }
+    out
+}
+
+/// Stacked 100%-bar (Fig. 13 style): segments as (name, share) where shares
+/// sum to ~1. Each bar is `width` chars of the segment letters.
+pub fn stacked_bar(label: &str, segments: &[(&str, f64)], width: usize) -> String {
+    let mut bar = String::new();
+    let total: f64 = segments.iter().map(|(_, s)| s).sum();
+    for (name, share) in segments {
+        let n = ((share / total) * width as f64).round() as usize;
+        let c = name.chars().next().unwrap_or('?').to_ascii_uppercase();
+        for _ in 0..n {
+            bar.push(c);
+        }
+    }
+    bar.truncate(width);
+    while bar.chars().count() < width {
+        bar.push(' ');
+    }
+    let pct: Vec<String> = segments
+        .iter()
+        .map(|(n, s)| format!("{n}={:.1}%", 100.0 * s / total))
+        .collect();
+    format!("{label:<14} [{bar}]  {}", pct.join(" "))
+}
+
+/// Simple x/y ASCII scatter-line for scaling plots (log-ish x handled by
+/// caller passing already-spaced points).
+pub fn series_plot(series: &[(String, Vec<(f64, f64)>)], height: usize, width: usize) -> String {
+    let all: Vec<(f64, f64)> = series.iter().flat_map(|(_, pts)| pts.iter().copied()).collect();
+    if all.is_empty() {
+        return String::new();
+    }
+    let (xmin, xmax) = all
+        .iter()
+        .fold((f64::MAX, f64::MIN), |(lo, hi), (x, _)| (lo.min(*x), hi.max(*x)));
+    let (ymin, ymax) = all
+        .iter()
+        .fold((f64::MAX, f64::MIN), |(lo, hi), (_, y)| (lo.min(*y), hi.max(*y)));
+    let xspan = (xmax - xmin).max(1e-12);
+    let yspan = (ymax - ymin).max(1e-12);
+    let mut grid = vec![vec![' '; width]; height];
+    let marks = ['*', 'o', '+', 'x', '@', '%'];
+    for (si, (_, pts)) in series.iter().enumerate() {
+        for (x, y) in pts {
+            let cx = (((x - xmin) / xspan) * (width - 1) as f64).round() as usize;
+            let cy = (((y - ymin) / yspan) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - cy][cx] = marks[si % marks.len()];
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("y: {ymin:.3} .. {ymax:.3}\n"));
+    for row in &grid {
+        out.push('|');
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push('+');
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    out.push_str(&format!("x: {xmin:.3} .. {xmax:.3}   "));
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("[{}]={} ", marks[si % marks.len()], name));
+    }
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["solver", "tts"]);
+        t.row_str(&["PARDISO", "60.1"]);
+        t.row_str(&["ILU", "40.0"]);
+        let r = t.render();
+        assert!(r.contains("| solver  | tts  |"));
+        assert!(r.lines().count() == 4);
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row_str(&["x,y", "q\"z"]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"q\"\"z\""));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row_str(&["only-one"]);
+    }
+
+    #[test]
+    fn bar_chart_scales() {
+        let c = bar_chart(
+            &[("a".into(), 1.0), ("b".into(), 2.0)],
+            10,
+        );
+        let lines: Vec<&str> = c.lines().collect();
+        assert!(lines[0].matches('#').count() == 5);
+        assert!(lines[1].matches('#').count() == 10);
+    }
+
+    #[test]
+    fn stacked_bar_shares() {
+        let s = stacked_bar("icx36", &[("compute", 0.5), ("sync", 0.15), ("comm", 0.35)], 20);
+        assert!(s.contains("compute=50.0%"));
+        // 10 compute chars, 3 sync chars, 7 comm chars in order
+        assert!(s.contains("[CCCCCCCCCCSSSCCCCCCC]"));
+        assert!(s.starts_with("icx36"));
+    }
+
+    #[test]
+    fn series_plot_renders() {
+        let p = series_plot(
+            &[("ilu".into(), vec![(1.0, 40.0), (64.0, 45.0)])],
+            8,
+            40,
+        );
+        assert!(p.contains("[*]=ilu"));
+    }
+}

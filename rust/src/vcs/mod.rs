@@ -1,0 +1,286 @@
+//! Git-like version control substrate.
+//!
+//! The paper's CB pipeline triggers on every commit pushed to a GitLab
+//! repository (§3, §4.5). GitLab/Git are not available here, so this module
+//! implements the minimal content-addressed model the pipeline contracts
+//! on: commits (hash, parent, author, message, tree snapshot), branches,
+//! and a "push" event stream the CI engine subscribes to. It also supports
+//! the paper's *proxy repository* flow (§4.5.2): a second repository that
+//! mirrors commits of an upstream one and runs its own pipeline.
+
+use std::collections::BTreeMap;
+
+/// FNV-1a based content hash, hex-encoded. Not cryptographic — stands in
+/// for git's SHA-1 as a stable content address.
+pub fn content_hash(parts: &[&str]) -> String {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut h2: u64 = 0x9e3779b97f4a7c15;
+    for p in parts {
+        for b in p.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+            h2 = h2.rotate_left(9) ^ h;
+        }
+        h ^= 0xff;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    format!("{h:016x}{h2:016x}")
+}
+
+/// A tree snapshot: path → file content. Small because only benchmark-
+/// relevant files are modelled (source of the hot kernels, build config).
+pub type Tree = BTreeMap<String, String>;
+
+/// One commit in a repository.
+#[derive(Debug, Clone)]
+pub struct Commit {
+    pub id: String,
+    pub parent: Option<String>,
+    pub author: String,
+    pub message: String,
+    /// Simulated commit time (secs since campaign start).
+    pub time: f64,
+    pub tree: Tree,
+}
+
+/// A push event delivered to CI subscribers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PushEvent {
+    pub repo: String,
+    pub branch: String,
+    pub commit_id: String,
+}
+
+/// An in-memory repository with branches and a commit DAG.
+#[derive(Debug, Clone)]
+pub struct Repository {
+    pub name: String,
+    pub default_branch: String,
+    commits: BTreeMap<String, Commit>,
+    branches: BTreeMap<String, String>, // branch -> head commit id
+}
+
+impl Repository {
+    pub fn new(name: &str) -> Repository {
+        Repository {
+            name: name.to_string(),
+            default_branch: "master".to_string(),
+            commits: BTreeMap::new(),
+            branches: BTreeMap::new(),
+        }
+    }
+
+    /// Commit `tree` onto `branch` (creating the branch if needed) and
+    /// return the push event a hosting platform would emit.
+    pub fn commit(
+        &mut self,
+        branch: &str,
+        author: &str,
+        message: &str,
+        time: f64,
+        tree: Tree,
+    ) -> PushEvent {
+        let parent = self.branches.get(branch).cloned();
+        let tree_repr: Vec<String> = tree
+            .iter()
+            .map(|(p, c)| format!("{p}\0{c}"))
+            .collect();
+        let mut parts: Vec<&str> = vec![author, message];
+        let parent_s = parent.clone().unwrap_or_default();
+        parts.push(&parent_s);
+        for t in &tree_repr {
+            parts.push(t);
+        }
+        let id = content_hash(&parts);
+        let c = Commit {
+            id: id.clone(),
+            parent,
+            author: author.to_string(),
+            message: message.to_string(),
+            time,
+            tree,
+        };
+        self.commits.insert(id.clone(), c);
+        self.branches.insert(branch.to_string(), id.clone());
+        PushEvent {
+            repo: self.name.clone(),
+            branch: branch.to_string(),
+            commit_id: id,
+        }
+    }
+
+    /// Convenience: amend the head tree of `branch` with one file change
+    /// and commit.
+    pub fn commit_change(
+        &mut self,
+        branch: &str,
+        author: &str,
+        message: &str,
+        time: f64,
+        path: &str,
+        content: &str,
+    ) -> PushEvent {
+        let mut tree = self
+            .head(branch)
+            .map(|c| c.tree.clone())
+            .unwrap_or_default();
+        tree.insert(path.to_string(), content.to_string());
+        self.commit(branch, author, message, time, tree)
+    }
+
+    pub fn get(&self, id: &str) -> Option<&Commit> {
+        self.commits.get(id)
+    }
+
+    pub fn head(&self, branch: &str) -> Option<&Commit> {
+        self.branches.get(branch).and_then(|id| self.commits.get(id))
+    }
+
+    pub fn branches(&self) -> impl Iterator<Item = (&String, &String)> {
+        self.branches.iter()
+    }
+
+    /// Walk history from `branch` head to root (newest first).
+    pub fn log(&self, branch: &str) -> Vec<&Commit> {
+        let mut out = Vec::new();
+        let mut cur = self.branches.get(branch).cloned();
+        while let Some(id) = cur {
+            match self.commits.get(&id) {
+                Some(c) => {
+                    cur = c.parent.clone();
+                    out.push(c);
+                }
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// Short (8-char) id for display.
+    pub fn short(id: &str) -> &str {
+        &id[..8.min(id.len())]
+    }
+}
+
+/// The proxy-repository flow (§4.5.2): WALBERLA's public repo has no HPC
+/// runner access, so a proxy repo pulls the upstream source and runs the CB
+/// pipeline there, triggered over the platform's trigger API.
+#[derive(Debug)]
+pub struct ProxyRepo {
+    pub proxy: Repository,
+    pub upstream_name: String,
+    /// Only "trusted developers with access to the credentials" may trigger
+    /// for non-default branches (paper §4.5.2).
+    pub trusted: Vec<String>,
+}
+
+impl ProxyRepo {
+    pub fn new(upstream: &str, proxy_name: &str, trusted: &[&str]) -> ProxyRepo {
+        ProxyRepo {
+            proxy: Repository::new(proxy_name),
+            upstream_name: upstream.to_string(),
+            trusted: trusted.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    /// Mirror `commit` of the upstream into the proxy and emit the push
+    /// event that triggers the proxy's pipeline. Non-default branches
+    /// require a trusted user.
+    pub fn trigger(
+        &mut self,
+        upstream: &Repository,
+        commit_id: &str,
+        branch: &str,
+        user: &str,
+    ) -> Result<PushEvent, String> {
+        if branch != upstream.default_branch && !self.trusted.iter().any(|t| t == user) {
+            return Err(format!(
+                "user `{user}` is not trusted to trigger branch `{branch}` on proxy `{}`",
+                self.proxy.name
+            ));
+        }
+        let c = upstream
+            .get(commit_id)
+            .ok_or_else(|| format!("unknown upstream commit {commit_id}"))?;
+        let msg = format!("mirror {}@{}: {}", self.upstream_name, branch, c.message);
+        Ok(self
+            .proxy
+            .commit(branch, &c.author, &msg, c.time, c.tree.clone()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tree(kv: &[(&str, &str)]) -> Tree {
+        kv.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect()
+    }
+
+    #[test]
+    fn hash_is_stable_and_content_sensitive() {
+        let a = content_hash(&["x", "y"]);
+        assert_eq!(a, content_hash(&["x", "y"]));
+        assert_ne!(a, content_hash(&["xy"])); // boundary matters
+        assert_ne!(a, content_hash(&["x", "z"]));
+        assert_eq!(a.len(), 32);
+    }
+
+    #[test]
+    fn commit_chain_and_log() {
+        let mut r = Repository::new("fe2ti");
+        let e1 = r.commit("master", "alice", "init", 0.0, tree(&[("solver.c", "v1")]));
+        let e2 = r.commit_change("master", "bob", "tune ilu", 10.0, "solver.c", "v2");
+        assert_ne!(e1.commit_id, e2.commit_id);
+        let log = r.log("master");
+        assert_eq!(log.len(), 2);
+        assert_eq!(log[0].message, "tune ilu");
+        assert_eq!(log[1].message, "init");
+        assert_eq!(log[0].parent.as_deref(), Some(e1.commit_id.as_str()));
+        assert_eq!(r.head("master").unwrap().tree["solver.c"], "v2");
+    }
+
+    #[test]
+    fn identical_content_same_parent_same_id() {
+        let mut r1 = Repository::new("a");
+        let mut r2 = Repository::new("b");
+        let t = tree(&[("f", "x")]);
+        let e1 = r1.commit("master", "a", "m", 0.0, t.clone());
+        let e2 = r2.commit("master", "a", "m", 5.0, t);
+        // time is not part of identity; content+parent+author+msg are
+        assert_eq!(e1.commit_id, e2.commit_id);
+    }
+
+    #[test]
+    fn branches_are_independent() {
+        let mut r = Repository::new("walberla");
+        r.commit("master", "a", "base", 0.0, tree(&[("k", "1")]));
+        r.commit_change("feature/gpu", "b", "gpu wip", 1.0, "k", "2");
+        assert_eq!(r.head("master").unwrap().tree["k"], "1");
+        assert_eq!(r.head("feature/gpu").unwrap().tree["k"], "2");
+        assert_eq!(r.branches().count(), 2);
+    }
+
+    #[test]
+    fn proxy_trigger_respects_trust() {
+        let mut up = Repository::new("walberla");
+        let e = up.commit("master", "a", "base", 0.0, tree(&[("k", "1")]));
+        let mut proxy = ProxyRepo::new("walberla", "walberla-cb-proxy", &["carol"]);
+
+        // default branch: anyone may trigger
+        let ev = proxy.trigger(&up, &e.commit_id, "master", "mallory").unwrap();
+        assert_eq!(ev.repo, "walberla-cb-proxy");
+
+        // non-default branch: only trusted
+        let e2 = up.commit_change("fork/x", "dev", "exp", 1.0, "k", "3");
+        assert!(proxy.trigger(&up, &e2.commit_id, "fork/x", "mallory").is_err());
+        assert!(proxy.trigger(&up, &e2.commit_id, "fork/x", "carol").is_ok());
+    }
+
+    #[test]
+    fn proxy_trigger_unknown_commit_errors() {
+        let up = Repository::new("u");
+        let mut proxy = ProxyRepo::new("u", "p", &[]);
+        assert!(proxy.trigger(&up, "deadbeef", "master", "x").is_err());
+    }
+}

@@ -1,0 +1,154 @@
+//! Failure-injection tests: the CB pipeline must stay coherent when jobs
+//! time out, crash, or produce garbage output — exactly the situations a
+//! production CI system on shared HPC resources hits routinely.
+
+use cbench::ci::CiJob;
+use cbench::coordinator::{CbSystem, PreparedJob};
+use cbench::slurm::{JobOutcome, JobState};
+use cbench::tsdb::Point;
+use cbench::vcs::PushEvent;
+
+fn event() -> PushEvent {
+    PushEvent {
+        repo: "fe2ti".into(),
+        branch: "master".into(),
+        commit_id: "feedfacecafebeef".into(),
+    }
+}
+
+fn job(name: &str, timelimit: &str, payload: impl FnOnce(&cbench::cluster::nodes::NodeModel, f64) -> JobOutcome + Send + 'static) -> PreparedJob {
+    PreparedJob {
+        ci: CiJob::new(name, "benchmark")
+            .var("HOST", "icx36")
+            .var("SLURM_TIMELIMIT", timelimit),
+        payload: Box::new(payload),
+    }
+}
+
+#[test]
+fn timeout_job_is_archived_but_not_completed() {
+    let mut cb = CbSystem::new();
+    let jobs = vec![
+        job("slow", "1", |_n, _t| JobOutcome {
+            duration: 3600.0, // >> 1 min limit
+            stdout: "METRIC tts=3600\n".into(),
+            exit_code: 0,
+        }),
+        job("ok", "120", |_n, _t| JobOutcome {
+            duration: 5.0,
+            stdout: "METRIC tts=5\n".into(),
+            exit_code: 0,
+        }),
+    ];
+    let r = cb.execute_pipeline(&event(), false, jobs, "m").unwrap();
+    assert_eq!(r.jobs_completed, 1);
+    assert_eq!(r.jobs_failed, 1);
+    // the timeout job still leaves records (log + perf + machinestate)
+    assert_eq!(r.records_created, 6);
+    let log = cb
+        .store
+        .record_by_identifier("p1-job-slow")
+        .unwrap()
+        .files
+        .get("slurm.log")
+        .unwrap()
+        .clone();
+    assert!(log.contains("CANCELLED DUE TO TIME LIMIT"));
+    // scheduler agrees
+    let slow = cb.scheduler.squeue(JobState::Timeout);
+    assert_eq!(slow.len(), 1);
+}
+
+#[test]
+fn crashing_job_does_not_poison_the_pipeline() {
+    let mut cb = CbSystem::new();
+    let jobs = vec![
+        job("segfault", "10", |_n, _t| JobOutcome {
+            duration: 0.5,
+            stdout: "Segmentation fault (core dumped)\n".into(),
+            exit_code: 139,
+        }),
+        job("fine", "10", |_n, _t| JobOutcome {
+            duration: 1.0,
+            stdout: "METRIC tts=1\nTAG solver=ilu\n".into(),
+            exit_code: 0,
+        }),
+    ];
+    let r = cb.execute_pipeline(&event(), false, jobs, "m").unwrap();
+    assert_eq!(r.jobs_failed, 1);
+    assert_eq!(r.jobs_completed, 1);
+    // only the good job uploads a point; the crash log has no METRIC lines
+    assert_eq!(r.points_uploaded, 1);
+    assert_eq!(cb.db.points("m").len(), 1);
+}
+
+#[test]
+fn garbage_output_yields_no_points_but_keeps_raw_log() {
+    let mut cb = CbSystem::new();
+    let jobs = vec![job("garbage", "10", |_n, _t| JobOutcome {
+        duration: 1.0,
+        stdout: "METRIC =\nMETRIC x=notanumber\nTAG =v\nMETRICtts=1\n∆∆∆\n".into(),
+        exit_code: 0,
+    })];
+    let r = cb.execute_pipeline(&event(), false, jobs, "m").unwrap();
+    assert_eq!(r.points_uploaded, 0);
+    assert!(cb.db.is_empty());
+    // raw output still archived for forensics (FAIR principle)
+    let rec = cb.store.record_by_identifier("p1-perf-garbage").unwrap();
+    assert!(rec.files["perfctr.txt"].contains("∆∆∆"));
+}
+
+#[test]
+fn malformed_tsdb_ingest_rejected_atomically_per_line() {
+    let mut db = cbench::tsdb::Db::new();
+    let text = "good v=1 1\nbad line without fields\n";
+    // the second line errors; the caller decides what to do — nothing
+    // before the error is lost
+    let err = db.ingest_lines(text);
+    assert!(err.is_err());
+    assert_eq!(db.points("good").len(), 1);
+}
+
+#[test]
+fn scheduler_rejects_unknown_host_before_running_anything() {
+    let mut cb = CbSystem::new();
+    let jobs = vec![PreparedJob {
+        ci: CiJob::new("bad-host", "benchmark").var("HOST", "cray-1"),
+        payload: Box::new(|_n, _t| JobOutcome {
+            duration: 1.0,
+            stdout: String::new(),
+            exit_code: 0,
+        }),
+    }];
+    assert!(cb.execute_pipeline(&event(), false, jobs, "m").is_err());
+    assert!(cb.db.is_empty());
+}
+
+#[test]
+fn duplicate_job_names_in_two_pipelines_do_not_collide_in_store() {
+    // record identifiers embed the pipeline id: the same job name across
+    // pipelines must create distinct records
+    let mut cb = CbSystem::new();
+    for _ in 0..2 {
+        let jobs = vec![job("same-name", "10", |_n, _t| JobOutcome {
+            duration: 1.0,
+            stdout: "METRIC tts=1\n".into(),
+            exit_code: 0,
+        })];
+        cb.execute_pipeline(&event(), false, jobs, "m").unwrap();
+    }
+    assert!(cb.store.record_by_identifier("p1-job-same-name").is_some());
+    assert!(cb.store.record_by_identifier("p2-job-same-name").is_some());
+    assert_eq!(cb.db.points("m").len(), 2);
+}
+
+#[test]
+fn regression_detector_ignores_short_series_and_zero_baselines() {
+    let mut db = cbench::tsdb::Db::new();
+    db.insert(Point::new("m", 1).tag("s", "single").field("v", 5.0));
+    db.insert(Point::new("m", 1).tag("s", "zero").field("v", 0.0));
+    db.insert(Point::new("m", 2).tag("s", "zero").field("v", 1.0));
+    let regs =
+        cbench::coordinator::detect_regressions(&db, "m", "v", &["s"], 0.1, true);
+    assert!(regs.is_empty());
+}

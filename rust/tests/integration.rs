@@ -1,0 +1,166 @@
+//! Integration tests: cross-module flows over the real public API.
+
+use cbench::coordinator::{
+    detect_regressions, fe2ti_pipeline::fe2ti_pipeline_jobs,
+    walberla_pipeline::walberla_pipeline_jobs, BenchConfig, CbSystem,
+};
+use cbench::dashboard::{fe2ti_dashboard, walberla_dashboard};
+use cbench::tsdb::{Aggregate, Db, Query};
+use cbench::vcs::{ProxyRepo, Repository};
+
+/// Full FE2TI pipeline over the scheduler with a reduced matrix: points
+/// land in the TSDB with the right tags, records + links in the store.
+#[test]
+fn fe2ti_pipeline_end_to_end_reduced() {
+    let mut repo = Repository::new("fe2ti");
+    let ev = repo.commit_change("master", "a", "init", 0.0, "benchmark.cfg", "# defaults\n");
+    let mut cb = CbSystem::new();
+    let jobs: Vec<_> = fe2ti_pipeline_jobs(&repo, &ev.commit_id)
+        .into_iter()
+        .filter(|j| j.ci.name.contains("icx36") && j.ci.name.contains("mpi"))
+        .collect();
+    assert!(jobs.len() >= 8, "matrix slice too small: {}", jobs.len());
+    let r = cb.execute_pipeline(&ev, false, jobs, "fe2ti").unwrap();
+    assert_eq!(r.jobs_failed, 0);
+    assert_eq!(r.points_uploaded, r.jobs_total);
+
+    // solver ordering visible through the TSDB (the paper's Fig. 9 read)
+    let tts = |solver: &str, compiler: &str| -> f64 {
+        let series = Query::new("fe2ti", "tts")
+            .where_tag("solver", solver)
+            .where_tag("compiler", compiler)
+            .where_tag("case", "fe2ti216")
+            .where_tag("parallelization", "mpi")
+            .run(&cb.db);
+        series[0].aggregate(Aggregate::Last)
+    };
+    assert!(tts("ilu1e-4", "intel") < tts("ilu1e-8", "intel"));
+    assert!(tts("ilu1e-8", "intel") < tts("pardiso", "intel"));
+    assert!(tts("pardiso", "intel") < tts("umfpack", "gcc"));
+
+    // records: 3 per job, linked
+    assert_eq!(cb.store.n_records(), 3 * r.jobs_total);
+    assert_eq!(cb.store.n_links(), 2 * r.jobs_total);
+}
+
+/// waLBerla proxy-repo flow: untrusted users cannot trigger branches; the
+/// regression planted in a commit is detected and cleared.
+#[test]
+fn walberla_proxy_regression_cycle() {
+    let mut upstream = Repository::new("walberla");
+    let mut proxy = ProxyRepo::new("walberla", "proxy", &["trusted"]);
+    let mut cb = CbSystem::new();
+
+    let run = |cb: &mut CbSystem, proxy: &mut ProxyRepo, upstream: &Repository, cid: &str| {
+        let ev = proxy.trigger(upstream, cid, "master", "trusted").unwrap();
+        let jobs: Vec<_> = walberla_pipeline_jobs(&proxy.proxy, &ev.commit_id)
+            .into_iter()
+            .filter(|j| j.ci.get("HOST") == Some("icx36"))
+            .collect();
+        cb.execute_pipeline(&ev, true, jobs, "lbm").unwrap();
+    };
+
+    let c1 = upstream.commit_change("master", "d", "base", 0.0, "benchmark.cfg", "");
+    run(&mut cb, &mut proxy, &upstream, &c1.commit_id);
+    let c2 = upstream.commit_change(
+        "master",
+        "d",
+        "bad",
+        1.0,
+        "benchmark.cfg",
+        "lbm_efficiency_penalty = 0.2\n",
+    );
+    run(&mut cb, &mut proxy, &upstream, &c2.commit_id);
+    let regs = detect_regressions(&cb.db, "lbm", "mlups", &["collision_op"], 0.1, true);
+    assert_eq!(regs.len(), 4, "all four operators degraded");
+    // untrusted trigger on a fork branch is denied
+    let c3 = upstream.commit_change("fork/x", "d", "wip", 2.0, "benchmark.cfg", "");
+    assert!(proxy
+        .trigger(&upstream, &c3.commit_id, "fork/x", "mallory")
+        .is_err());
+}
+
+/// TSDB persistence across "sessions": the dashboard renders identically
+/// from a saved+reloaded database.
+#[test]
+fn tsdb_roundtrip_preserves_dashboard() {
+    let mut repo = Repository::new("walberla");
+    let ev = repo.commit_change("master", "d", "c", 0.0, "benchmark.cfg", "");
+    let mut cb = CbSystem::new();
+    let jobs: Vec<_> = walberla_pipeline_jobs(&repo, &ev.commit_id)
+        .into_iter()
+        .filter(|j| j.ci.get("HOST") == Some("rome1"))
+        .collect();
+    cb.execute_pipeline(&ev, true, jobs, "lbm").unwrap();
+
+    let path = std::env::temp_dir().join("cbench_integration_tsdb.lp");
+    cb.db.save(&path).unwrap();
+    let reloaded = Db::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    let dash = walberla_dashboard();
+    assert_eq!(dash.render_text(&cb.db), dash.render_text(&reloaded));
+    assert_eq!(cb.db.len(), reloaded.len());
+}
+
+/// The BLAS-fix story through the full stack: two commits, queryable drop.
+#[test]
+fn blas_fix_detected_across_commits() {
+    let mut repo = Repository::new("fe2ti");
+    let mut cb = CbSystem::new();
+    for cfg in ["# defaults\n", "umfpack_blas = blis\n"] {
+        let ev = repo.commit_change("master", "a", "c", 0.0, "benchmark.cfg", cfg);
+        let jobs: Vec<_> = fe2ti_pipeline_jobs(&repo, &ev.commit_id)
+            .into_iter()
+            .filter(|j| j.ci.name.contains("umfpack-gcc-mpi-skylakesp2"))
+            .collect();
+        assert_eq!(jobs.len(), 1); // fe2ti216 only (fe2ti1728 has no pure-MPI mode)
+        cb.execute_pipeline(&ev, false, jobs, "fe2ti").unwrap();
+    }
+    let improved = detect_regressions(&cb.db, "fe2ti", "tts", &["case"], 0.1, false);
+    assert!(improved.is_empty(), "a fix is not a regression");
+    let series = Query::new("fe2ti", "tts")
+        .where_tag("case", "fe2ti216")
+        .run(&cb.db);
+    let pts = &series[0].points;
+    assert!(pts[1].1 < 0.5 * pts[0].1, "BLAS fix halves TTS at least");
+}
+
+/// Config parsing from the commit tree drives the job payloads.
+#[test]
+fn bench_config_flows_from_tree_to_jobs() {
+    let mut repo = Repository::new("fe2ti");
+    let ev = repo.commit_change(
+        "master",
+        "a",
+        "cfg",
+        0.0,
+        "benchmark.cfg",
+        "umfpack_blas = blis\nsome_other = 1\n",
+    );
+    let cfg = BenchConfig::from_commit(&repo, &ev.commit_id);
+    assert_eq!(cfg.get("umfpack_blas"), Some("blis"));
+    // absent file -> defaults
+    let ev2 = repo.commit_change("clean", "a", "c", 0.0, "src.c", "x");
+    assert!(BenchConfig::from_commit(&repo, &ev2.commit_id).entries.is_empty());
+}
+
+/// Dashboards render every panel against a populated DB without panicking
+/// and respect combined filters.
+#[test]
+fn dashboards_render_with_combined_filters() {
+    let mut repo = Repository::new("fe2ti");
+    let ev = repo.commit_change("master", "a", "c", 0.0, "benchmark.cfg", "");
+    let mut cb = CbSystem::new();
+    let jobs: Vec<_> = fe2ti_pipeline_jobs(&repo, &ev.commit_id)
+        .into_iter()
+        .filter(|j| j.ci.name.contains("rome1"))
+        .collect();
+    cb.execute_pipeline(&ev, false, jobs, "fe2ti").unwrap();
+    let mut d = fe2ti_dashboard();
+    d.select("solver", &["ilu1e-4", "pardiso"]);
+    d.select("parallelization", &["hybrid"]);
+    let txt = d.render_text(&cb.db);
+    assert!(txt.contains("solver=ilu1e-4") || txt.contains("solver=pardiso"));
+    assert!(!txt.contains("solver=umfpack,"));
+}

@@ -1,0 +1,219 @@
+//! Property-based tests over randomized inputs (seeded `util::rng` —
+//! the vendored crate set has no proptest, so generation is explicit and
+//! every case is reproducible from its seed).
+
+use cbench::apps::walberla::collision::{collide_cell, CollisionOp};
+use cbench::apps::walberla::fslbm::FsBlock;
+use cbench::apps::walberla::lattice::{d3q19, d3q27};
+use cbench::ci::substitute_vars;
+use cbench::sparse::{cg, gmres, Csr, Ilu0, SparseLu, Work};
+use cbench::tsdb::{Db, Point, Query};
+use cbench::util::json::Json;
+use cbench::util::rng::Rng;
+use std::collections::BTreeMap;
+
+/// Random SPD matrix: diagonally-dominant with random symmetric pattern.
+fn random_spd(rng: &mut Rng, n: usize, extra: usize) -> Csr {
+    let mut t = Vec::new();
+    let mut diag = vec![1.0f64; n];
+    for _ in 0..extra {
+        let i = rng.below(n);
+        let j = rng.below(n);
+        if i == j {
+            continue;
+        }
+        let v = rng.range(-1.0, 1.0);
+        t.push((i, j, v));
+        t.push((j, i, v));
+        diag[i] += v.abs();
+        diag[j] += v.abs();
+    }
+    for (i, d) in diag.iter().enumerate() {
+        t.push((i, i, d + 0.5));
+    }
+    Csr::from_triplets(n, &t)
+}
+
+#[test]
+fn prop_direct_and_iterative_solvers_agree() {
+    // 20 random SPD systems: LU, GMRES+ILU and CG must produce the same x
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(seed);
+        let n = 20 + rng.below(60);
+        let a = random_spd(&mut rng, n, 3 * n);
+        let b: Vec<f64> = (0..n).map(|_| rng.range(-1.0, 1.0)).collect();
+
+        let lu = SparseLu::factor(&a).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let mut w = Work::default();
+        let x_lu = lu.solve(&b, &mut w);
+        let ilu = Ilu0::factor(&a).unwrap();
+        let x_gm = gmres(&a, &b, Some(&ilu), 1e-12, 30, 5000);
+        let x_cg = cg(&a, &b, 1e-12, 5000);
+        assert!(x_gm.converged && x_cg.converged, "seed {seed}");
+        for i in 0..n {
+            assert!(
+                (x_lu[i] - x_gm.x[i]).abs() < 1e-6,
+                "seed {seed} lu vs gmres at {i}: {} vs {}",
+                x_lu[i],
+                x_gm.x[i]
+            );
+            assert!(
+                (x_lu[i] - x_cg.x[i]).abs() < 1e-6,
+                "seed {seed} lu vs cg at {i}"
+            );
+        }
+        assert!(a.residual_norm(&x_lu, &b) < 1e-8, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_permutation_preserves_lu_solution() {
+    for seed in 100..110u64 {
+        let mut rng = Rng::new(seed);
+        let n = 30 + rng.below(30);
+        let a = random_spd(&mut rng, n, 2 * n);
+        let b: Vec<f64> = (0..n).map(|_| rng.range(-1.0, 1.0)).collect();
+        let x = SparseLu::factor(&a).unwrap().solve(&b, &mut Work::default());
+
+        let mut perm: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut perm);
+        let ap = a.permute(&perm);
+        let bp: Vec<f64> = perm.iter().map(|&o| b[o]).collect();
+        let xp = SparseLu::factor(&ap).unwrap().solve(&bp, &mut Work::default());
+        for (new, &old) in perm.iter().enumerate() {
+            assert!((xp[new] - x[old]).abs() < 1e-8, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_collision_invariants_random_states() {
+    // random positive PDF states: mass/momentum conserved, result finite
+    for seed in 0..30u64 {
+        let mut rng = Rng::new(seed);
+        let lat = if seed % 2 == 0 { d3q19() } else { d3q27() };
+        let op = CollisionOp::all()[rng.below(4)];
+        let tau = rng.range(0.51, 2.0);
+        let mut f: Vec<f64> = (0..lat.q).map(|q| lat.w[q] * rng.range(0.5, 1.5)).collect();
+        let (rho0, u0) = lat.moments(&f);
+        let mut scratch = vec![0.0; lat.q];
+        collide_cell(op, &lat, tau, &mut f, &mut scratch);
+        let (rho1, u1) = lat.moments(&f);
+        assert!((rho0 - rho1).abs() < 1e-10, "seed {seed} {op:?} rho");
+        for i in 0..3 {
+            assert!(
+                (rho0 * u0[i] - rho1 * u1[i]).abs() < 1e-10,
+                "seed {seed} {op:?} mom"
+            );
+        }
+        assert!(f.iter().all(|v| v.is_finite()));
+    }
+}
+
+#[test]
+fn prop_fslbm_mass_conserved_random_waves() {
+    for seed in 0..5u64 {
+        let mut rng = Rng::new(seed);
+        let mut b = FsBlock::new(8 + rng.below(6), 8 + rng.below(6), 4);
+        b.gravity = rng.range(1e-6, 3e-4);
+        b.init_gravity_wave(rng.range(0.05, 0.2));
+        let m0 = b.total_mass();
+        for _ in 0..10 {
+            b.step(CollisionOp::Srt);
+        }
+        let m1 = b.total_mass();
+        assert!(
+            (m1 - m0).abs() / m0 < 0.03,
+            "seed {seed}: mass {m0} -> {m1}"
+        );
+        let (g, i, l) = b.state_counts();
+        assert!(g > 0 && i > 0 && l > 0, "seed {seed}: {g}/{i}/{l}");
+    }
+}
+
+#[test]
+fn prop_tsdb_query_partitions_points() {
+    // group-by over any tag partitions exactly the matching points
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(seed);
+        let mut db = Db::new();
+        let nodes = ["a", "b", "c"];
+        let total = 50 + rng.below(100);
+        for i in 0..total {
+            db.insert(
+                Point::new("m", i as i64)
+                    .tag("node", nodes[rng.below(3)])
+                    .tag("op", if rng.uniform() < 0.5 { "x" } else { "y" })
+                    .field("v", rng.range(0.0, 10.0)),
+            );
+        }
+        let series = Query::new("m", "v").group_by(&["node", "op"]).run(&db);
+        let sum: usize = series.iter().map(|s| s.points.len()).sum();
+        assert_eq!(sum, total, "seed {seed}");
+        // every series is time-ordered
+        for s in &series {
+            assert!(s.points.windows(2).all(|w| w[0].0 <= w[1].0));
+        }
+    }
+}
+
+#[test]
+fn prop_line_protocol_roundtrip_random_points() {
+    for seed in 0..50u64 {
+        let mut rng = Rng::new(seed);
+        let weird = ["plain", "with space", "co,mma", "eq=uals", "back\\slash"];
+        let mut p = Point::new(weird[rng.below(weird.len())], rng.next_u64() as i64 / 2);
+        for _ in 0..1 + rng.below(4) {
+            let k = format!("t{}", rng.below(5));
+            p.tags.insert(k, weird[rng.below(weird.len())].to_string());
+        }
+        for _ in 0..1 + rng.below(4) {
+            let k = format!("f{}", rng.below(5));
+            p.fields.insert(k, rng.gauss(0.0, 100.0));
+        }
+        let q = Point::parse_line(&p.to_line()).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(p, q, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_documents() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.uniform() < 0.5),
+            2 => Json::Num((rng.gauss(0.0, 1000.0) * 100.0).round() / 100.0),
+            3 => Json::Str(format!("s{}\"\\\n{}", rng.below(100), rng.below(100))),
+            4 => Json::Arr((0..rng.below(4)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for _ in 0..rng.below(4) {
+                    m.insert(format!("k{}", rng.below(10)), random_json(rng, depth - 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+    for seed in 0..80u64 {
+        let mut rng = Rng::new(seed);
+        let doc = random_json(&mut rng, 3);
+        for text in [doc.to_string_compact(), doc.to_string_pretty()] {
+            let back = Json::parse(&text).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{text}"));
+            assert_eq!(back, doc, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_ci_substitution_never_panics_and_is_idempotent_without_vars() {
+    let empty: BTreeMap<String, String> = BTreeMap::new();
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed);
+        let tokens = ["${A}", "$", "{", "}", "x", "€", "${", "}${B", "\n"];
+        let s: String = (0..rng.below(20))
+            .map(|_| tokens[rng.below(tokens.len())])
+            .collect();
+        // without variables the text must come back unchanged
+        assert_eq!(substitute_vars(&s, &empty), s, "seed {seed}: {s:?}");
+    }
+}
