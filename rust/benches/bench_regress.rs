@@ -1,0 +1,91 @@
+//! Regression-detection benchmarks: the detector runs inside
+//! `coordinator::execute_pipeline` after every upload, so it must stay
+//! off the pipeline's hot-path budget even on a production-sized TSDB.
+//!
+//! `cargo bench --bench bench_regress`
+
+use cbench::regress::{cusum_changepoint, mann_whitney, welch_t, Detector, Policy};
+use cbench::regress::detector::Direction;
+use cbench::tsdb::{Db, Point};
+use cbench::util::rng::Rng;
+use cbench::util::stats::Bench;
+
+/// Synthetic production-shaped TSDB: `series` series × `per_series`
+/// pipeline executions, ~8% of series carrying a planted 15% drop.
+fn synthetic_db(series: usize, per_series: usize, seed: u64) -> Db {
+    let mut rng = Rng::new(seed);
+    let mut db = Db::new();
+    let ops = ["srt", "trt", "mrt", "cumulant"];
+    for s in 0..series {
+        let node = format!("node{:02}", s / ops.len());
+        let op = ops[s % ops.len()];
+        let base = 400.0 + 50.0 * (s % 17) as f64;
+        let planted = rng.uniform() < 0.08;
+        let cp = per_series / 2 + rng.below(per_series / 3);
+        for t in 0..per_series {
+            let level = if planted && t >= cp { base * 0.85 } else { base };
+            db.insert(
+                Point::new("lbm", (s * per_series + t) as i64 * 1_000_000)
+                    .tag("case", "uniformgridcpu")
+                    .tag("node", &node)
+                    .tag("collision_op", op)
+                    .tag("commit", &format!("c{s:03}x{t:04}"))
+                    .field("mlups", level * rng.jitter(0.01)),
+            );
+        }
+    }
+    db
+}
+
+fn main() {
+    println!("== bench_regress ==\n");
+
+    // full detector sweep over a 10k-point TSDB (500 series x 20 runs)
+    let db = synthetic_db(500, 20, 42);
+    assert_eq!(db.len(), 10_000);
+    let det = Detector::new().policy(
+        Policy::new("lbm-mlups", "lbm", "mlups")
+            .group_by(&["case", "node", "collision_op"])
+            .direction(Direction::HigherIsBetter)
+            .thresholds(0.08, 0.05, 0.5),
+    );
+    let mut found = 0usize;
+    let mut b = Bench::new("detector_10k_points_500_series");
+    let r = b.run(|| {
+        let f = det.detect(&db);
+        found = f.len();
+        f.len()
+    });
+    println!("{}   ({found} findings)", r.report_throughput(10_000.0, "point"));
+
+    // deep-history variant: few series, long windows
+    let db_deep = synthetic_db(20, 500, 7);
+    let mut b = Bench::new("detector_10k_points_20_series");
+    let r = b.run(|| det.detect(&db_deep).len());
+    println!("{}", r.report_throughput(10_000.0, "point"));
+
+    // statistical primitives on window-sized samples
+    let mut rng = Rng::new(1);
+    let a: Vec<f64> = (0..100).map(|_| rng.gauss(1000.0, 10.0)).collect();
+    let c: Vec<f64> = (0..100).map(|_| rng.gauss(950.0, 10.0)).collect();
+    let mut b = Bench::new("welch_t_100v100");
+    let r = b.run(|| welch_t(&a, &c).unwrap().p);
+    println!("{}", r.report());
+
+    let mut b = Bench::new("mann_whitney_100v100");
+    let r = b.run(|| mann_whitney(&a, &c).unwrap().p);
+    println!("{}", r.report());
+
+    let long: Vec<f64> = (0..1000)
+        .map(|i| {
+            if i < 600 {
+                rng.gauss(100.0, 2.0)
+            } else {
+                rng.gauss(90.0, 2.0)
+            }
+        })
+        .collect();
+    let mut b = Bench::new("cusum_changepoint_1k");
+    let r = b.run(|| cusum_changepoint(&long).index);
+    println!("{}", r.report_throughput(1000.0, "point"));
+}

@@ -28,6 +28,7 @@ use crate::ci::{CiJob, Pipeline, PipelineFactory, Runner};
 use crate::cluster::machinestate::machine_state;
 use crate::cluster::nodes::catalogue;
 use crate::datastore::{DataStore, Id};
+use crate::regress::{AlertBook, Detector, Direction, IngestSummary, Policy};
 use crate::slurm::{JobSpec, Payload, Scheduler};
 use crate::tsdb::{Db, Point};
 use crate::vcs::{PushEvent, Repository};
@@ -126,6 +127,9 @@ pub struct PipelineReport {
     pub collection: Id,
     /// Simulated wall time the whole pipeline took on the cluster.
     pub duration: f64,
+    /// Outcome of the post-upload regression check (alerts opened /
+    /// re-confirmed / auto-resolved by this execution).
+    pub regressions: IngestSummary,
 }
 
 /// The whole CB installation.
@@ -136,7 +140,13 @@ pub struct CbSystem {
     pub runner: Runner,
     pub pipelines: PipelineFactory,
     pub executed: Vec<PipelineReport>,
+    /// Statistical regression detector run after every upload.
+    pub detector: Detector,
+    /// Durable alert lifecycle fed by the detector.
+    pub alerts: AlertBook,
     root_collection: Id,
+    /// Collection grouping the archived regression alerts (lazy).
+    alerts_collection: Option<Id>,
     /// Simulated "trigger time" counter: advances per pipeline (ns).
     trigger_clock: i64,
 }
@@ -158,9 +168,61 @@ impl CbSystem {
             runner: Runner::hpc(),
             pipelines: PipelineFactory::new(),
             executed: Vec::new(),
+            detector: Detector::with_default_policies(),
+            alerts: AlertBook::new(),
             root_collection,
+            alerts_collection: None,
             trigger_clock: 0,
         }
+    }
+
+    /// Adopt an existing TSDB (e.g. reloaded from the file a previous
+    /// `cbench pipeline` run saved) and fast-forward the trigger clock
+    /// past its newest point, so this run's pipelines append strictly
+    /// increasing timestamps to the carried-over history instead of
+    /// overwriting it.
+    pub fn adopt_db(&mut self, db: Db) {
+        let mut max_ts = 0i64;
+        for m in db.measurements() {
+            if let Some(p) = db.points(m).last() {
+                max_ts = max_ts.max(p.ts);
+            }
+        }
+        self.db = db;
+        self.trigger_clock = self.trigger_clock.max(max_ts);
+    }
+
+    /// Run the regression detector for `measurement` against the current
+    /// TSDB, fold the findings into the alert book, and archive any newly
+    /// opened alerts as datastore records linked to `collection` (the
+    /// pipeline execution that surfaced them). Called by
+    /// [`CbSystem::execute_pipeline`] after every upload.
+    pub fn check_regressions(&mut self, measurement: &str, collection: Id) -> IngestSummary {
+        let (findings, evaluated) = self.detector.detect_measurement(&self.db, measurement);
+        let now = self.trigger_clock;
+        let summary = self.alerts.ingest(&findings, &evaluated, now);
+        // attribute exactly the alerts this execution opened to its
+        // collection (the Fig. 5 provenance link)
+        for id in &summary.opened_ids {
+            if let Some(a) = self.alerts.get_mut(*id) {
+                a.pipeline_collection = Some(collection);
+            }
+        }
+        if summary.opened > 0 || summary.auto_resolved > 0 {
+            let coll = match self.alerts_collection {
+                Some(c) => c,
+                None => {
+                    let c = self
+                        .store
+                        .create_collection("regression-alerts", "regression alert archive");
+                    self.store.add_child_collection(self.root_collection, c).ok();
+                    self.alerts_collection = Some(c);
+                    c
+                }
+            };
+            self.alerts.archive(&mut self.store, coll);
+        }
+        summary
     }
 
     /// Execute a pipeline: submit all jobs, wait, parse, upload, archive.
@@ -295,6 +357,9 @@ impl CbSystem {
             self.store.link(rid_ms, rid_job, "recorded on").ok();
         }
 
+        // --- §4.4 closing the loop: statistical regression check ---
+        let regressions = self.check_regressions(measurement, coll);
+
         let report = PipelineReport {
             pipeline_id: pipeline.id,
             commit_id: event.commit_id.clone(),
@@ -305,6 +370,7 @@ impl CbSystem {
             records_created: records,
             collection: coll,
             duration: self.scheduler.now() - start,
+            regressions,
         };
         self.executed.push(report.clone());
         Ok(report)
@@ -395,7 +461,12 @@ pub struct PerfChange {
 /// for MLUP/s a drop is a regression; for TTS a rise is.
 ///
 /// This is CB's raison d'être: "reveals performance degradation introduced
-/// by code changes immediately" (paper §7).
+/// by code changes immediately" (paper §7). Since the `regress::`
+/// subsystem landed this is a thin shim over
+/// [`crate::regress::detector`]: a policy with a 1-point baseline window,
+/// no change-point splitting and no statistical gate reproduces the
+/// legacy last-vs-previous semantics exactly, while new callers should
+/// use [`Detector`] with real windows.
 pub fn detect_regressions(
     db: &Db,
     measurement: &str,
@@ -404,31 +475,25 @@ pub fn detect_regressions(
     threshold: f64,
     higher_is_better: bool,
 ) -> Vec<PerfChange> {
-    let mut out = Vec::new();
-    for s in crate::tsdb::Query::new(measurement, field)
+    let policy = Policy::new("legacy-last-vs-prev", measurement, field)
         .group_by(group_by)
-        .run(db)
-    {
-        if s.points.len() < 2 {
-            continue;
-        }
-        let before = s.points[s.points.len() - 2].1;
-        let after = s.points[s.points.len() - 1].1;
-        if before.abs() < 1e-300 {
-            continue;
-        }
-        let rel = (after - before) / before;
-        let is_regression = if higher_is_better { rel < -threshold } else { rel > threshold };
-        if is_regression {
-            out.push(PerfChange {
-                series: s.label(),
-                before,
-                after,
-                rel_change: rel,
-            });
-        }
-    }
-    out
+        .direction(if higher_is_better {
+            Direction::HigherIsBetter
+        } else {
+            Direction::LowerIsBetter
+        })
+        .windows(1, 1)
+        .thresholds(threshold, 1.0, 0.0)
+        .changepoint(false);
+    crate::regress::detector::evaluate_policy(&policy, db)
+        .into_iter()
+        .map(|f| PerfChange {
+            series: f.series,
+            before: f.baseline.mean,
+            after: f.current,
+            rel_change: f.rel_change,
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -540,6 +605,49 @@ mod tests {
         db2.insert(Point::new("fe2ti", 2).tag("s", "x").field("tts", 13.0));
         let regs2 = detect_regressions(&db2, "fe2ti", "tts", &["s"], 0.1, false);
         assert_eq!(regs2.len(), 1);
+    }
+
+    #[test]
+    fn pipeline_regression_check_opens_and_resolves_alerts() {
+        let mut cb = CbSystem::new();
+        let run = |cb: &mut CbSystem, mlups: f64| {
+            let j = PreparedJob {
+                ci: CiJob::new("uniform-srt-icx36", "benchmark").var("HOST", "icx36"),
+                payload: Box::new(move |_n, _t| JobOutcome {
+                    duration: 1.0,
+                    stdout: format!(
+                        "TAG case=uniformgridcpu\nTAG collision_op=srt\nMETRIC mlups={mlups}\n"
+                    ),
+                    exit_code: 0,
+                }),
+            };
+            cb.execute_pipeline(&event(), false, vec![j], "lbm").unwrap()
+        };
+        for _ in 0..4 {
+            let r = run(&mut cb, 1000.0);
+            assert_eq!(r.regressions, crate::regress::IngestSummary::default());
+        }
+        assert!(cb.alerts.active().is_empty());
+
+        // an 18% drop on the watched series opens an alert immediately
+        let r = run(&mut cb, 820.0);
+        assert_eq!(r.regressions.opened, 1);
+        let open = cb.alerts.active();
+        assert_eq!(open.len(), 1);
+        assert!(open[0].confidence > 0.8);
+        assert!(open[0].series.contains("collision_op=srt"));
+        assert_eq!(open[0].suspect_commit.as_deref(), Some("abcdef12"));
+        // ... and is archived as a linked datastore record
+        let rec = cb.store.record_by_identifier("regress-alert-1").unwrap();
+        assert_eq!(rec.record_type, "regression-alert");
+        assert_eq!(rec.meta["state"], "open");
+
+        // recovery on the next pipeline auto-resolves it
+        let r = run(&mut cb, 1000.0);
+        assert_eq!(r.regressions.auto_resolved, 1);
+        assert!(cb.alerts.active().is_empty());
+        let rec = cb.store.record_by_identifier("regress-alert-1").unwrap();
+        assert_eq!(rec.meta["state"], "resolved");
     }
 
     #[test]

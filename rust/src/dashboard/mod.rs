@@ -7,6 +7,7 @@
 //! group-by-tags, exactly how the paper's dashboards connect data points
 //! with equal parameter values.
 
+use crate::regress::{Alert, AlertState};
 use crate::tsdb::{Aggregate, Db, Query};
 use crate::util::table::{bar_chart, Table};
 
@@ -110,6 +111,14 @@ impl Dashboard {
 
     /// Render the dashboard against a TSDB as terminal text.
     pub fn render_text(&self, db: &Db) -> String {
+        self.render_text_with_alerts(db, &[])
+    }
+
+    /// Render with regression-alert annotations: every panel whose
+    /// measurement/field carries an unresolved alert gets a `!!` line —
+    /// the Grafana alert-banner analogue (paper §4.4's "track how each
+    /// code change affects the performance", surfaced where people look).
+    pub fn render_text_with_alerts(&self, db: &Db, alerts: &[&Alert]) -> String {
         let mut out = String::new();
         out.push_str(&format!("== {} ==\n", self.title));
         for v in &self.variables {
@@ -153,6 +162,28 @@ impl Dashboard {
                         out.push_str(&format!("{label}: {v:.4} {}\n", p.unit));
                     }
                 }
+            }
+            for a in alerts
+                .iter()
+                .filter(|a| {
+                    a.state != AlertState::Resolved
+                        && a.measurement == p.measurement
+                        && a.field == p.field
+                })
+            {
+                out.push_str(&format!(
+                    "  !! {} alert #{}: {} {:+.1}% vs baseline {:.3} (confidence {:.2}{})\n",
+                    a.state.name(),
+                    a.id,
+                    a.series,
+                    100.0 * a.rel_change,
+                    a.baseline_mean,
+                    a.confidence,
+                    a.suspect_commit
+                        .as_deref()
+                        .map(|c| format!(", suspect commit {c}"))
+                        .unwrap_or_default(),
+                ));
             }
         }
         out
@@ -234,6 +265,13 @@ pub fn walberla_dashboard() -> Dashboard {
                 .unit("s"),
         )
         .panel(
+            // total node throughput — the series the stock lbm-mlups
+            // regression policy watches, so its alerts annotate here
+            Panel::new("MLUP/s", PanelKind::TimeSeries, "lbm", "mlups")
+                .group_by(&["collision_op", "node"])
+                .unit("MLUP/s"),
+        )
+        .panel(
             Panel::new("MLUP/s per process", PanelKind::TimeSeries, "lbm", "mlups_per_process")
                 .group_by(&["collision_op", "node"])
                 .unit("MLUP/s"),
@@ -267,6 +305,7 @@ mod tests {
                 Point::new("lbm", ts)
                     .tag("collision_op", op)
                     .tag("node", node)
+                    .field("mlups", mlups * 36.0)
                     .field("mlups_per_process", mlups)
                     .field("runtime", 1000.0 / mlups)
                     .field("rel_to_pmax", 0.8)
@@ -274,6 +313,26 @@ mod tests {
             );
         }
         db
+    }
+
+    #[test]
+    fn stock_mlups_alert_annotates_walberla_dashboard() {
+        // the default lbm-mlups policy's alerts must land on a real panel
+        use crate::regress::{Detector, Direction};
+        let d = walberla_dashboard();
+        let det = Detector::with_default_policies();
+        let p = det
+            .policies
+            .iter()
+            .find(|p| p.measurement == "lbm" && p.direction == Direction::HigherIsBetter)
+            .expect("stock lbm policy");
+        assert!(
+            d.panels.iter().any(|panel| panel.measurement == p.measurement
+                && panel.field == p.field),
+            "no waLBerla panel shows `{}.{}`",
+            p.measurement,
+            p.field
+        );
     }
 
     #[test]
@@ -301,6 +360,46 @@ mod tests {
         let csv = d.render_csv(&db());
         assert!(csv.contains("# panel: Runtime"));
         assert!(csv.lines().any(|l| l.starts_with("collision_op=srt,node=icx36,")));
+    }
+
+    #[test]
+    fn alerts_annotate_matching_panels_only() {
+        use crate::regress::Direction;
+        let alert = Alert {
+            id: 3,
+            fingerprint: "p/collision_op=srt,node=icx36".into(),
+            policy: "p".into(),
+            measurement: "lbm".into(),
+            field: "runtime".into(),
+            series: "collision_op=srt,node=icx36".into(),
+            group: Default::default(),
+            direction: Direction::LowerIsBetter,
+            state: AlertState::Open,
+            opened_ts: 1,
+            last_seen_ts: 2,
+            resolved_ts: None,
+            times_seen: 2,
+            confidence: 0.91,
+            baseline_mean: 1.0,
+            baseline_sd: 0.0,
+            current: 1.2,
+            rel_change: 0.2,
+            change_ts: 2,
+            suspect_commit: Some("deadbeef".into()),
+            first_bad_commit: None,
+            archive_record: None,
+            pipeline_collection: None,
+        };
+        let txt = walberla_dashboard().render_text_with_alerts(&db(), &[&alert]);
+        assert!(txt.contains("!! open alert #3"));
+        assert!(txt.contains("suspect commit deadbeef"));
+        // annotated under the Runtime panel only
+        assert_eq!(txt.matches("!!").count(), 1);
+        // resolved alerts no longer annotate
+        let mut resolved = alert.clone();
+        resolved.state = AlertState::Resolved;
+        let txt = walberla_dashboard().render_text_with_alerts(&db(), &[&resolved]);
+        assert_eq!(txt.matches("!!").count(), 0);
     }
 
     #[test]

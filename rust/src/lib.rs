@@ -28,6 +28,7 @@ pub mod dashboard;
 pub mod datastore;
 pub mod mpisim;
 pub mod perf;
+pub mod regress;
 pub mod report;
 pub mod roofline;
 pub mod runtime;

@@ -3,13 +3,15 @@
 
 use cbench::cluster::microbench::{run_host_microbench, MicrobenchKind};
 use cbench::cluster::nodes::{catalogue, node};
-use cbench::coordinator::{fe2ti_pipeline, walberla_pipeline, CbSystem};
+use cbench::coordinator::{fe2ti_pipeline, walberla_pipeline, CbSystem, PreparedJob};
 use cbench::dashboard::{fe2ti_dashboard, walberla_dashboard};
+use cbench::regress::{bisect_pipeline, AlertBook, AlertState, Detector};
 use cbench::report;
-use cbench::tsdb::{Aggregate, Query};
+use cbench::tsdb::{Aggregate, Db, Query};
 use cbench::util::cli::Args;
-use cbench::vcs::Repository;
-use std::path::PathBuf;
+use cbench::util::table::Table;
+use cbench::vcs::{PushEvent, Repository};
+use std::path::{Path, PathBuf};
 
 fn main() {
     // die quietly when piped into `head` etc. instead of panicking
@@ -41,6 +43,7 @@ fn cbench_main(argv: Vec<String>) -> anyhow::Result<()> {
         "microbench" => cmd_microbench(&args),
         "dashboard" => cmd_dashboard(&args),
         "artifacts" => cmd_artifacts(&args),
+        "regress" => cmd_regress(&args),
         other => anyhow::bail!("unknown command `{other}` — see `cbench help`"),
     }
 }
@@ -59,35 +62,97 @@ fn cmd_report(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `cbench pipeline <fe2ti|walberla|describe> [--commits N]` — run the CB
-/// pipeline end to end on simulated commits.
+/// Deterministic simulated commit history shared by `cbench pipeline` and
+/// `cbench regress bisect`: commit ids depend only on (author, message,
+/// parent, tree), so rebuilding with the same arguments reproduces the
+/// exact chain the pipeline benchmarked. `inject_at` (1-based, 0 = none)
+/// plants the waLBerla kernel-generation regression by committing a
+/// `benchmark.cfg` with `lbm_efficiency_penalty = <penalty>` — the knob
+/// the pipeline's whole purpose is to catch (paper §1, §3).
+fn simulated_history(
+    which: &str,
+    commits: usize,
+    inject_at: usize,
+    penalty: f64,
+) -> (Repository, Vec<PushEvent>) {
+    let mut repo = Repository::new(which);
+    let mut events = Vec::with_capacity(commits);
+    for i in 0..commits {
+        let ev = if inject_at > 0 && i + 1 == inject_at {
+            repo.commit_change(
+                "master",
+                "dev",
+                &format!("change #{i} (kernel regen, perf bug)"),
+                i as f64 * 60.0,
+                "benchmark.cfg",
+                &format!("lbm_efficiency_penalty = {penalty}\n"),
+            )
+        } else {
+            repo.commit_change(
+                "master",
+                "dev",
+                &format!("change #{i}"),
+                i as f64 * 60.0,
+                "src/kernel.c",
+                &format!("// rev {i}\n"),
+            )
+        };
+        events.push(ev);
+    }
+    (repo, events)
+}
+
+fn pipeline_jobs_for(which: &str, repo: &Repository, commit_id: &str) -> Vec<PreparedJob> {
+    match which {
+        "fe2ti" => fe2ti_pipeline::fe2ti_pipeline_jobs(repo, commit_id),
+        _ => walberla_pipeline::walberla_pipeline_jobs(repo, commit_id),
+    }
+}
+
+/// `cbench pipeline <fe2ti|walberla|describe> [--commits N]
+/// [--inject-regression K] [--penalty P]` — run the CB pipeline end to
+/// end on simulated commits; state persists to `--save-tsdb` /
+/// `--save-alerts` (defaults `cbench_tsdb.lp` / `cbench_alerts.json`) so
+/// `cbench regress` can pick up where the pipeline left off.
 fn cmd_pipeline(args: &Args) -> anyhow::Result<()> {
     let which = args.positional.first().map(|s| s.as_str()).unwrap_or("describe");
     if which == "describe" {
         println!("{PIPELINE_DESCRIPTION}");
         return Ok(());
     }
+    anyhow::ensure!(
+        which == "fe2ti" || which == "walberla",
+        "unknown pipeline `{which}` (fe2ti|walberla)"
+    );
     let commits = args.get_usize("commits", 1);
+    let inject_at = args.get_usize("inject-regression", 0);
+    let penalty = args.get_f64("penalty", 0.15);
+    if inject_at > commits {
+        anyhow::bail!("--inject-regression {inject_at} is past the last commit ({commits})");
+    }
     let mut cb = CbSystem::new();
-    let mut repo = Repository::new(which);
-    for i in 0..commits {
-        let ev = repo.commit_change(
-            "master",
-            "dev",
-            &format!("change #{i}"),
-            i as f64 * 60.0,
-            "src/kernel.c",
-            &format!("// rev {i}\n"),
-        );
-        let jobs = match which {
-            "fe2ti" => fe2ti_pipeline::fe2ti_pipeline_jobs(&repo, &ev.commit_id),
-            "walberla" => walberla_pipeline::walberla_pipeline_jobs(&repo, &ev.commit_id),
-            other => anyhow::bail!("unknown pipeline `{other}` (fe2ti|walberla)"),
-        };
-        let measurement = if which == "fe2ti" { "fe2ti" } else { "lbm" };
-        let r = cb.execute_pipeline(&ev, which == "walberla", jobs, measurement)?;
+    // carry the campaign across runs: the TSDB accumulates (new pipelines
+    // append after the saved history — alerts resolve only on real
+    // evidence), and the alert lifecycle survives (acknowledgements,
+    // bisection results, resolution history; ids keep counting,
+    // fingerprints deduplicate)
+    let tsdb_path = args.get_or("save-tsdb", "cbench_tsdb.lp");
+    if Path::new(tsdb_path).exists() {
+        cb.adopt_db(Db::load(Path::new(tsdb_path))?);
+        println!("resuming TSDB {tsdb_path} ({} points)", cb.db.len());
+    }
+    let alerts_path = args.get_or("save-alerts", "cbench_alerts.json");
+    cb.alerts = AlertBook::load(Path::new(alerts_path))?;
+    // the loaded book references a previous process's datastore; ids are
+    // per-store, so drop them before this run archives anything
+    cb.alerts.detach_store();
+    let (repo, events) = simulated_history(which, commits, inject_at, penalty);
+    let measurement = if which == "fe2ti" { "fe2ti" } else { "lbm" };
+    for ev in &events {
+        let jobs = pipeline_jobs_for(which, &repo, &ev.commit_id);
+        let r = cb.execute_pipeline(ev, which == "walberla", jobs, measurement)?;
         println!(
-            "pipeline #{} commit {} jobs={} completed={} failed={} points={} records={} cluster-time={}",
+            "pipeline #{} commit {} jobs={} completed={} failed={} points={} records={} cluster-time={}{}",
             r.pipeline_id,
             &r.commit_id[..8],
             r.jobs_total,
@@ -96,19 +161,29 @@ fn cmd_pipeline(args: &Args) -> anyhow::Result<()> {
             r.points_uploaded,
             r.records_created,
             cbench::util::fmt_secs(r.duration),
+            if r.regressions.opened > 0 {
+                format!("  !! {} regression alert(s) OPENED", r.regressions.opened)
+            } else if r.regressions.auto_resolved > 0 {
+                format!("  ok: {} alert(s) auto-resolved", r.regressions.auto_resolved)
+            } else {
+                String::new()
+            },
         );
     }
-    if let Some(path) = args.get("save-tsdb") {
-        cb.db.save(std::path::Path::new(path))?;
-        println!("tsdb saved to {path} ({} points)", cb.db.len());
-    }
-    // render the project dashboard
+    cb.db.save(Path::new(tsdb_path))?;
+    println!("tsdb saved to {tsdb_path} ({} points)", cb.db.len());
+    cb.alerts.save(Path::new(alerts_path))?;
+    println!(
+        "alerts saved to {alerts_path} ({} active) — inspect with `cbench regress alerts`",
+        cb.alerts.active().len()
+    );
+    // render the project dashboard, annotated with open alerts
     let dash = if which == "fe2ti" {
         fe2ti_dashboard()
     } else {
         walberla_dashboard()
     };
-    println!("\n{}", dash.render_text(&cb.db));
+    println!("\n{}", dash.render_text_with_alerts(&cb.db, &cb.alerts.active()));
     Ok(())
 }
 
@@ -162,7 +237,9 @@ fn cmd_dashboard(args: &Args) -> anyhow::Result<()> {
             dash.select(tag, &v);
         }
     }
-    println!("{}", dash.render_text(&db));
+    // annotate panels with any saved, still-active regression alerts
+    let book = AlertBook::load(Path::new(args.get_or("alerts", "cbench_alerts.json")))?;
+    println!("{}", dash.render_text_with_alerts(&db, &book.active()));
     if let Some(field) = args.get("agg") {
         let m = if which == "fe2ti" { "fe2ti" } else { "lbm" };
         for (label, v) in Query::new(m, field)
@@ -209,6 +286,240 @@ fn cmd_artifacts(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Latest timestamp across every measurement — the "now" for alert
+/// bookkeeping when working from a saved TSDB.
+fn db_now(db: &Db) -> i64 {
+    let measurements: Vec<String> = db.measurements().cloned().collect();
+    measurements
+        .iter()
+        .filter_map(|m| db.points(m).last().map(|p| p.ts))
+        .max()
+        .unwrap_or(0)
+}
+
+/// `cbench regress <detect|alerts|bisect>` — the detect → alert → bisect
+/// loop over the state a `cbench pipeline` run saved.
+fn cmd_regress(args: &Args) -> anyhow::Result<()> {
+    let sub = args.positional.first().map(|s| s.as_str()).unwrap_or("alerts");
+    let alerts_path = args.get_or("alerts", "cbench_alerts.json");
+    match sub {
+        "detect" => cmd_regress_detect(args, alerts_path),
+        "alerts" => cmd_regress_alerts(args, alerts_path),
+        "bisect" => cmd_regress_bisect(args, alerts_path),
+        other => anyhow::bail!("unknown subcommand `regress {other}` (detect|alerts|bisect)"),
+    }
+}
+
+/// `cbench regress detect [--tsdb FILE] [--alerts FILE]` — run the
+/// statistical detector over a saved TSDB and fold findings into the
+/// alert book.
+fn cmd_regress_detect(args: &Args, alerts_path: &str) -> anyhow::Result<()> {
+    let tsdb = args.get_or("tsdb", "cbench_tsdb.lp");
+    let db = Db::load(Path::new(tsdb))?;
+    let det = Detector::with_default_policies();
+    let (findings, evaluated) = det.detect_full(&db);
+    if findings.is_empty() {
+        println!("no regressions detected across {} points", db.len());
+    } else {
+        let mut t = Table::new(&[
+            "series", "baseline", "current", "change", "p-value", "confidence", "suspect commit",
+        ]);
+        for f in &findings {
+            t.row(&[
+                format!("{}.{} {}", f.measurement, f.field, f.series),
+                format!("{:.3} ±{:.3}", f.baseline.mean, f.baseline.sd),
+                format!("{:.3}", f.current),
+                format!("{:+.1}%", 100.0 * f.rel_change),
+                f.best_p().map(|p| format!("{p:.2e}")).unwrap_or_else(|| "-".into()),
+                format!("{:.2}", f.confidence),
+                f.suspect_commit.clone().unwrap_or_else(|| "?".into()),
+            ]);
+        }
+        println!("{}", t.render());
+    }
+    let mut book = AlertBook::load(Path::new(alerts_path))?;
+    let s = book.ingest(&findings, &evaluated, db_now(&db));
+    book.save(Path::new(alerts_path))?;
+    println!(
+        "alerts: {} opened, {} re-confirmed, {} auto-resolved ({} active) -> {alerts_path}",
+        s.opened,
+        s.updated,
+        s.auto_resolved,
+        book.active().len()
+    );
+    Ok(())
+}
+
+/// `cbench regress alerts [--ack ID] [--resolve ID] [--all]` — list and
+/// manage the alert lifecycle.
+fn cmd_regress_alerts(args: &Args, alerts_path: &str) -> anyhow::Result<()> {
+    let mut book = AlertBook::load(Path::new(alerts_path))?;
+    let mut dirty = false;
+    if let Some(id) = args.get("ack").and_then(|v| v.parse::<u64>().ok()) {
+        book.acknowledge(id).map_err(|e| anyhow::anyhow!(e))?;
+        println!("alert #{id} acknowledged");
+        dirty = true;
+    }
+    if let Some(id) = args.get("resolve").and_then(|v| v.parse::<u64>().ok()) {
+        let now = book.alerts.iter().map(|a| a.last_seen_ts).max().unwrap_or(0);
+        book.resolve(id, now).map_err(|e| anyhow::anyhow!(e))?;
+        println!("alert #{id} resolved");
+        dirty = true;
+    }
+    if dirty {
+        book.save(Path::new(alerts_path))?;
+    }
+    let show_all = args.flag("all");
+    let mut t = Table::new(&[
+        "id", "state", "series", "change", "confidence", "seen", "suspect", "first-bad",
+    ]);
+    let mut shown = 0;
+    for a in &book.alerts {
+        if !show_all && a.state == AlertState::Resolved {
+            continue;
+        }
+        t.row(&[
+            format!("{}", a.id),
+            a.state.name().to_string(),
+            format!("{}.{} {}", a.measurement, a.field, a.series),
+            format!("{:+.1}%", 100.0 * a.rel_change),
+            format!("{:.2}", a.confidence),
+            format!("{}x", a.times_seen),
+            a.suspect_commit.clone().unwrap_or_else(|| "?".into()),
+            a.first_bad_commit.clone().unwrap_or_else(|| "-".into()),
+        ]);
+        shown += 1;
+    }
+    if shown == 0 {
+        println!(
+            "no {} alerts in {alerts_path}",
+            if show_all { "recorded" } else { "active" }
+        );
+    } else {
+        println!("{}", t.render());
+    }
+    Ok(())
+}
+
+/// `cbench regress bisect [--pipeline walberla] [--commits N]
+/// [--inject-regression K] [--penalty P] [--alert ID]` — rebuild the
+/// deterministic commit chain the pipeline benchmarked (same arguments!)
+/// and binary-search the first bad commit for the highest-confidence
+/// active alert (or `--alert ID`).
+fn cmd_regress_bisect(args: &Args, alerts_path: &str) -> anyhow::Result<()> {
+    let which = args.get_or("pipeline", "walberla").to_string();
+    anyhow::ensure!(
+        which == "fe2ti" || which == "walberla",
+        "unknown pipeline `{which}` (fe2ti|walberla)"
+    );
+    let commits = args.get_usize("commits", 8);
+    let inject_at = args.get_usize("inject-regression", 0);
+    let penalty = args.get_f64("penalty", 0.15);
+    let measurement = if which == "fe2ti" { "fe2ti" } else { "lbm" };
+
+    let mut book = AlertBook::load(Path::new(alerts_path))?;
+    let candidates: Vec<u64> = book
+        .active()
+        .iter()
+        .filter(|a| a.measurement == measurement)
+        .map(|a| a.id)
+        .collect();
+    anyhow::ensure!(
+        !candidates.is_empty(),
+        "no active `{measurement}` alerts in {alerts_path} — run `cbench regress detect` first"
+    );
+    let alert_id = match args.get("alert").and_then(|v| v.parse::<u64>().ok()) {
+        Some(id) => {
+            anyhow::ensure!(candidates.contains(&id), "alert #{id} is not an active {measurement} alert");
+            id
+        }
+        None => {
+            // highest confidence first
+            let mut best = candidates[0];
+            for &id in &candidates {
+                if book.get(id).unwrap().confidence > book.get(best).unwrap().confidence {
+                    best = id;
+                }
+            }
+            best
+        }
+    };
+    let alert = book.get(alert_id).unwrap().clone();
+    println!(
+        "bisecting alert #{}: {}.{} {} ({:+.1}%)",
+        alert.id,
+        alert.measurement,
+        alert.field,
+        alert.series,
+        100.0 * alert.rel_change
+    );
+
+    let (repo, events) = simulated_history(&which, commits, inject_at, penalty);
+    anyhow::ensure!(
+        events.len() >= 2,
+        "need at least 2 commits to bisect (--commits {commits})"
+    );
+    let good = events.first().unwrap().commit_id.clone();
+    let bad = events.last().unwrap().commit_id.clone();
+    // classify probes with the same sensitivity the alert's policy used
+    let threshold = Detector::with_default_policies()
+        .policies
+        .iter()
+        .find(|p| p.name == alert.policy)
+        .map(|p| p.min_rel_change)
+        .unwrap_or(0.08);
+    let mut cb = CbSystem::new();
+    let report = bisect_pipeline(
+        &mut cb,
+        &repo,
+        "master",
+        &good,
+        &bad,
+        measurement,
+        &alert.field,
+        &alert.group,
+        alert.direction,
+        threshold,
+        |repo, commit| pipeline_jobs_for(&which, repo, commit),
+    )?;
+    for (cid, v, is_bad) in &report.tested {
+        let idx = events.iter().position(|e| &e.commit_id == cid);
+        println!(
+            "  probe commit {} (#{}) -> {:.3} [{}]",
+            &cid[..8],
+            idx.map(|i| (i + 1).to_string()).unwrap_or_else(|| "?".into()),
+            v,
+            if *is_bad { "BAD" } else { "good" }
+        );
+    }
+    match &report.first_bad {
+        Some(cid) => {
+            let idx = events.iter().position(|e| &e.commit_id == cid);
+            let msg = repo.get(cid).map(|c| c.message.clone()).unwrap_or_default();
+            println!(
+                "first bad commit: {} (#{}) \"{}\"",
+                &cid[..8],
+                idx.map(|i| (i + 1).to_string()).unwrap_or_else(|| "?".into()),
+                msg
+            );
+            println!(
+                "pipeline re-runs: {} (linear scan would need {})",
+                report.pipeline_runs, report.linear_runs
+            );
+            if let Some(a) = book.get_mut(alert_id) {
+                a.first_bad_commit = Some(cid[..8.min(cid.len())].to_string());
+                if a.state == AlertState::Open {
+                    a.state = AlertState::Acknowledged;
+                }
+            }
+            book.save(Path::new(alerts_path))?;
+            println!("alert #{alert_id} updated with first-bad commit -> {alerts_path}");
+        }
+        None => println!("bisection inconclusive"),
+    }
+    Ok(())
+}
+
 const HELP: &str = "\
 cbench — continuous benchmarking infrastructure for HPC applications
 (reproduction of Alt et al. 2024, DOI 10.1080/17445760.2024.2360190)
@@ -219,15 +530,39 @@ COMMANDS:
   report <id>|all [--out DIR]   regenerate a paper table/figure
                                 (tab1..3, fig5..fig14; side CSV/SVG with --out)
   pipeline <fe2ti|walberla>     run the CB pipeline on simulated commits
-           [--commits N] [--save-tsdb FILE]
+           [--commits N] [--inject-regression K] [--penalty P]
+           [--save-tsdb FILE] [--save-alerts FILE]
+                                K plants the waLBerla kernel regression at
+                                commit #K (penalty P, default 0.15); state
+                                persists to cbench_tsdb.lp / cbench_alerts.json
   pipeline describe             explain the pipeline wiring (Figs. 3-4)
+  regress detect [--tsdb FILE] [--alerts FILE]
+                                statistical regression scan of a saved TSDB
+                                (baseline windows, Welch t / Mann-Whitney /
+                                CUSUM change-point location)
+  regress alerts [--ack ID] [--resolve ID] [--all]
+                                list + manage the alert lifecycle
+                                (open -> acknowledged -> resolved)
+  regress bisect [--pipeline P] [--commits N] [--inject-regression K]
+                 [--penalty P] [--alert ID]
+                                binary-search the first bad commit for an
+                                active alert by re-running the pipeline on
+                                midpoint commits (same args as `pipeline`
+                                rebuild the identical commit chain)
   cluster [--node HOST]         Testcluster catalogue / machinestate dump
   microbench [--n N] [--reps R] run stream/copy/load/peakflops on this host
-  dashboard <fe2ti|walberla> --tsdb FILE [--select tag=v1,v2]
-                                render a dashboard from a saved TSDB
+  dashboard <fe2ti|walberla> --tsdb FILE [--select tag=v1,v2] [--alerts FILE]
+                                render a dashboard from a saved TSDB,
+                                annotated with active regression alerts
   artifacts [--dir DIR] [--smoke]
                                 list + smoke-test the AOT PJRT artifacts
   help                          this help
+
+THE CB LOOP (end-to-end demo):
+  cbench pipeline walberla --commits 8 --inject-regression 5
+  cbench regress detect         # flags the drop, opens alerts w/ confidence
+  cbench regress bisect --commits 8 --inject-regression 5
+                                # pins commit #5 in O(log n) pipeline re-runs
 ";
 
 const PIPELINE_DESCRIPTION: &str = "\
@@ -246,4 +581,14 @@ CB pipeline wiring (paper Figs. 3-4):
     -> metrics uploaded to the TSDB (tsdb::, fields+tags+trigger-time)
     -> raw files archived as linked records (datastore::, Fig. 5)
     -> dashboards + roofline plots refreshed (dashboard::, roofline::)
+    -> regression check (regress::detector): every watched series is
+       tested against a baseline window (Welch t, Mann-Whitney U, CUSUM
+       change-point location) instead of the old last-vs-previous diff
+    -> findings become alerts (regress::alerts): deduplicated per series,
+       open -> acknowledged -> resolved, persisted as JSON next to the
+       TSDB, archived as datastore records linked to the offending
+       pipeline's collection, surfaced on the dashboards
+    -> open alerts can be bisected (regress::bisect): the pipeline is
+       re-run on midpoint commits to pin the first bad commit in
+       O(log n) re-runs (cbench regress bisect)
 ";

@@ -1,0 +1,582 @@
+//! Alert lifecycle over detector findings.
+//!
+//! Findings are ephemeral (recomputed on every detection run); alerts are
+//! durable. The [`AlertBook`] deduplicates findings per series fingerprint,
+//! tracks each alert through open → acknowledged → resolved, auto-resolves
+//! alerts whose series recovered, persists itself as JSON next to the TSDB
+//! file, and archives alerts as [`crate::datastore`] records linked into
+//! the offending pipeline's collection (the Fig. 5 FAIR graph gains the
+//! "this run regressed" node).
+
+use super::detector::{series_fingerprint, Direction, Finding};
+use crate::datastore::{DataStore, Id};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Lifecycle state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AlertState {
+    Open,
+    Acknowledged,
+    Resolved,
+}
+
+impl AlertState {
+    pub fn name(self) -> &'static str {
+        match self {
+            AlertState::Open => "open",
+            AlertState::Acknowledged => "acknowledged",
+            AlertState::Resolved => "resolved",
+        }
+    }
+    pub fn from_name(s: &str) -> Option<AlertState> {
+        match s {
+            "open" => Some(AlertState::Open),
+            "acknowledged" => Some(AlertState::Acknowledged),
+            "resolved" => Some(AlertState::Resolved),
+            _ => None,
+        }
+    }
+}
+
+/// One durable alert.
+#[derive(Debug, Clone)]
+pub struct Alert {
+    pub id: u64,
+    /// `policy/series` — the dedup key.
+    pub fingerprint: String,
+    pub policy: String,
+    pub measurement: String,
+    pub field: String,
+    pub series: String,
+    pub group: BTreeMap<String, String>,
+    pub direction: Direction,
+    pub state: AlertState,
+    pub opened_ts: i64,
+    pub last_seen_ts: i64,
+    pub resolved_ts: Option<i64>,
+    /// How many detection runs re-confirmed it.
+    pub times_seen: usize,
+    pub confidence: f64,
+    pub baseline_mean: f64,
+    pub baseline_sd: f64,
+    pub current: f64,
+    pub rel_change: f64,
+    pub change_ts: i64,
+    /// Commit tag at the located change point (detection-time guess).
+    pub suspect_commit: Option<String>,
+    /// First bad commit confirmed by bisection.
+    pub first_bad_commit: Option<String>,
+    /// Datastore record archiving this alert, once archived.
+    pub archive_record: Option<Id>,
+    /// Collection of the pipeline execution that triggered the alert.
+    pub pipeline_collection: Option<Id>,
+}
+
+/// Counters returned by one [`AlertBook::ingest`] run.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct IngestSummary {
+    pub opened: usize,
+    pub updated: usize,
+    pub auto_resolved: usize,
+    /// Ids of the alerts this ingest opened (for attribution: the caller
+    /// knows which pipeline execution surfaced exactly these).
+    pub opened_ids: Vec<u64>,
+}
+
+/// The durable alert store.
+#[derive(Debug, Clone, Default)]
+pub struct AlertBook {
+    next_id: u64,
+    pub alerts: Vec<Alert>,
+}
+
+impl AlertBook {
+    pub fn new() -> AlertBook {
+        AlertBook {
+            next_id: 1,
+            alerts: Vec::new(),
+        }
+    }
+
+    /// Fold one detection run into the book. `evaluated_fingerprints`
+    /// names every `policy/series` the detector had enough data to judge
+    /// (see `detector::evaluate_policy_run`): active alerts among those
+    /// that no longer produce a finding are auto-resolved (recovered).
+    /// Alerts whose series were *not* evaluated — different measurement,
+    /// or a fresh TSDB without history — are left untouched.
+    pub fn ingest(
+        &mut self,
+        findings: &[Finding],
+        evaluated_fingerprints: &[String],
+        now_ts: i64,
+    ) -> IngestSummary {
+        let mut summary = IngestSummary::default();
+        let mut seen: Vec<String> = Vec::with_capacity(findings.len());
+        for f in findings {
+            let fp = series_fingerprint(&f.policy, &f.series);
+            seen.push(fp.clone());
+            if let Some(a) = self
+                .alerts
+                .iter_mut()
+                .find(|a| a.fingerprint == fp && a.state != AlertState::Resolved)
+            {
+                a.last_seen_ts = now_ts;
+                a.times_seen += 1;
+                a.confidence = a.confidence.max(f.confidence);
+                a.current = f.current;
+                a.rel_change = f.rel_change;
+                if a.suspect_commit.is_none() {
+                    a.suspect_commit = f.suspect_commit.clone();
+                }
+                summary.updated += 1;
+            } else {
+                if self.next_id == 0 {
+                    self.next_id = 1;
+                }
+                let id = self.next_id;
+                self.next_id += 1;
+                self.alerts.push(Alert {
+                    id,
+                    fingerprint: fp,
+                    policy: f.policy.clone(),
+                    measurement: f.measurement.clone(),
+                    field: f.field.clone(),
+                    series: f.series.clone(),
+                    group: f.group.clone(),
+                    direction: f.direction,
+                    state: AlertState::Open,
+                    opened_ts: now_ts,
+                    last_seen_ts: now_ts,
+                    resolved_ts: None,
+                    times_seen: 1,
+                    confidence: f.confidence,
+                    baseline_mean: f.baseline.mean,
+                    baseline_sd: f.baseline.sd,
+                    current: f.current,
+                    rel_change: f.rel_change,
+                    change_ts: f.change_ts,
+                    suspect_commit: f.suspect_commit.clone(),
+                    first_bad_commit: None,
+                    archive_record: None,
+                    pipeline_collection: None,
+                });
+                summary.opened += 1;
+                summary.opened_ids.push(id);
+            }
+        }
+        // recovered series: evaluated again and no longer found
+        for a in &mut self.alerts {
+            if a.state != AlertState::Resolved
+                && evaluated_fingerprints.iter().any(|fp| *fp == a.fingerprint)
+                && !seen.iter().any(|fp| *fp == a.fingerprint)
+            {
+                a.state = AlertState::Resolved;
+                a.resolved_ts = Some(now_ts);
+                summary.auto_resolved += 1;
+            }
+        }
+        summary
+    }
+
+    /// Forget datastore-scoped ids (archive records, pipeline
+    /// collections). Call after loading a book into a *different*
+    /// datastore than the one it was built against — ids are sequential
+    /// per store, so stale ones would address unrelated records.
+    pub fn detach_store(&mut self) {
+        for a in &mut self.alerts {
+            a.archive_record = None;
+            a.pipeline_collection = None;
+        }
+    }
+
+    /// Alerts still needing attention (open or acknowledged).
+    pub fn active(&self) -> Vec<&Alert> {
+        self.alerts.iter().filter(|a| a.state != AlertState::Resolved).collect()
+    }
+
+    pub fn get(&self, id: u64) -> Option<&Alert> {
+        self.alerts.iter().find(|a| a.id == id)
+    }
+    pub fn get_mut(&mut self, id: u64) -> Option<&mut Alert> {
+        self.alerts.iter_mut().find(|a| a.id == id)
+    }
+
+    pub fn acknowledge(&mut self, id: u64) -> Result<(), String> {
+        let a = self.get_mut(id).ok_or_else(|| format!("no alert #{id}"))?;
+        if a.state == AlertState::Resolved {
+            return Err(format!("alert #{id} is already resolved"));
+        }
+        a.state = AlertState::Acknowledged;
+        Ok(())
+    }
+
+    pub fn resolve(&mut self, id: u64, now_ts: i64) -> Result<(), String> {
+        let a = self.get_mut(id).ok_or_else(|| format!("no alert #{id}"))?;
+        a.state = AlertState::Resolved;
+        a.resolved_ts = Some(now_ts);
+        Ok(())
+    }
+
+    /// Archive alerts as datastore records: one `regression-alert` record
+    /// per alert (created once, refreshed on state changes), added to
+    /// `alerts_coll` and — when known — to the offending pipeline's
+    /// collection. Returns how many records were newly created.
+    ///
+    /// Runs on the coordinator's per-upload path, so alerts whose
+    /// archived state already matches are skipped — a book full of
+    /// long-resolved history costs one metadata lookup each, not a
+    /// re-serialization.
+    pub fn archive(&mut self, store: &mut DataStore, alerts_coll: Id) -> usize {
+        let mut created = 0;
+        for a in &mut self.alerts {
+            let rid = match a.archive_record {
+                Some(rid) => {
+                    let unchanged = store
+                        .record(rid)
+                        .and_then(|r| r.meta.get("state"))
+                        .map(|s| s == a.state.name())
+                        .unwrap_or(false);
+                    if unchanged {
+                        continue;
+                    }
+                    rid
+                }
+                None => {
+                    let Ok(rid) = store.create_record(
+                        &format!("regress-alert-{}", a.id),
+                        &format!("regression alert: {} {}.{}", a.series, a.measurement, a.field),
+                        "regression-alert",
+                    ) else {
+                        continue;
+                    };
+                    a.archive_record = Some(rid);
+                    store.add_to_collection(alerts_coll, rid).ok();
+                    if let Some(pc) = a.pipeline_collection {
+                        store.add_to_collection(pc, rid).ok();
+                    }
+                    created += 1;
+                    rid
+                }
+            };
+            store.attach_file(rid, "alert.json", &alert_to_json(a).to_string_pretty()).ok();
+            store.set_meta(rid, "state", a.state.name()).ok();
+            store.set_meta(rid, "series", &a.series).ok();
+            store.set_meta(rid, "confidence", &format!("{:.3}", a.confidence)).ok();
+            if let Some(c) = &a.suspect_commit {
+                store.set_meta(rid, "suspect_commit", c).ok();
+            }
+            if let Some(c) = &a.first_bad_commit {
+                store.set_meta(rid, "first_bad_commit", c).ok();
+            }
+        }
+        created
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("next_id", self.next_id as i64)
+            .set(
+                "alerts",
+                Json::Arr(self.alerts.iter().map(alert_to_json).collect()),
+            )
+    }
+
+    pub fn from_json(j: &Json) -> Result<AlertBook, String> {
+        let mut book = AlertBook::new();
+        book.next_id = j
+            .get("next_id")
+            .and_then(|v| v.as_f64())
+            .map(|v| v as u64)
+            .unwrap_or(1)
+            .max(1);
+        for a in j
+            .get("alerts")
+            .and_then(|v| v.as_arr())
+            .unwrap_or(&[])
+            .iter()
+        {
+            book.alerts.push(alert_from_json(a)?);
+        }
+        Ok(book)
+    }
+
+    /// Persist as pretty JSON (convention: next to the TSDB file).
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+    }
+
+    /// Load a previously saved book; a missing file is an empty book.
+    pub fn load(path: &Path) -> std::io::Result<AlertBook> {
+        if !path.exists() {
+            return Ok(AlertBook::new());
+        }
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+        AlertBook::from_json(&j)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))
+    }
+}
+
+fn opt_str(j: &Json, key: &str) -> Option<String> {
+    j.get(key).and_then(|v| v.as_str()).map(String::from)
+}
+fn opt_num(j: &Json, key: &str) -> Option<f64> {
+    j.get(key).and_then(|v| v.as_f64())
+}
+
+fn alert_to_json(a: &Alert) -> Json {
+    let mut group = Json::obj();
+    for (k, v) in &a.group {
+        group = group.set(k, v.as_str());
+    }
+    let mut j = Json::obj()
+        .set("id", a.id as i64)
+        .set("fingerprint", a.fingerprint.as_str())
+        .set("policy", a.policy.as_str())
+        .set("measurement", a.measurement.as_str())
+        .set("field", a.field.as_str())
+        .set("series", a.series.as_str())
+        .set("group", group)
+        .set("direction", a.direction.name())
+        .set("state", a.state.name())
+        .set("opened_ts", a.opened_ts as f64)
+        .set("last_seen_ts", a.last_seen_ts as f64)
+        .set("times_seen", a.times_seen)
+        .set("confidence", a.confidence)
+        .set("baseline_mean", a.baseline_mean)
+        .set("baseline_sd", a.baseline_sd)
+        .set("current", a.current)
+        .set("rel_change", a.rel_change)
+        .set("change_ts", a.change_ts as f64);
+    if let Some(ts) = a.resolved_ts {
+        j = j.set("resolved_ts", ts as f64);
+    }
+    if let Some(c) = &a.suspect_commit {
+        j = j.set("suspect_commit", c.as_str());
+    }
+    if let Some(c) = &a.first_bad_commit {
+        j = j.set("first_bad_commit", c.as_str());
+    }
+    if let Some(r) = a.archive_record {
+        j = j.set("archive_record", r as i64);
+    }
+    if let Some(c) = a.pipeline_collection {
+        j = j.set("pipeline_collection", c as i64);
+    }
+    j
+}
+
+fn alert_from_json(j: &Json) -> Result<Alert, String> {
+    let mut group = BTreeMap::new();
+    if let Some(obj) = j.get("group").and_then(|v| v.as_obj()) {
+        for (k, v) in obj {
+            if let Some(s) = v.as_str() {
+                group.insert(k.clone(), s.to_string());
+            }
+        }
+    }
+    Ok(Alert {
+        id: opt_num(j, "id").ok_or("alert missing id")? as u64,
+        fingerprint: opt_str(j, "fingerprint").ok_or("alert missing fingerprint")?,
+        policy: opt_str(j, "policy").unwrap_or_default(),
+        measurement: opt_str(j, "measurement").unwrap_or_default(),
+        field: opt_str(j, "field").unwrap_or_default(),
+        series: opt_str(j, "series").unwrap_or_default(),
+        group,
+        direction: opt_str(j, "direction")
+            .and_then(|s| Direction::from_name(&s))
+            .unwrap_or(Direction::HigherIsBetter),
+        state: opt_str(j, "state")
+            .and_then(|s| AlertState::from_name(&s))
+            .ok_or("alert missing state")?,
+        opened_ts: opt_num(j, "opened_ts").unwrap_or(0.0) as i64,
+        last_seen_ts: opt_num(j, "last_seen_ts").unwrap_or(0.0) as i64,
+        resolved_ts: opt_num(j, "resolved_ts").map(|v| v as i64),
+        times_seen: opt_num(j, "times_seen").unwrap_or(1.0) as usize,
+        confidence: opt_num(j, "confidence").unwrap_or(0.0),
+        baseline_mean: opt_num(j, "baseline_mean").unwrap_or(f64::NAN),
+        baseline_sd: opt_num(j, "baseline_sd").unwrap_or(f64::NAN),
+        current: opt_num(j, "current").unwrap_or(f64::NAN),
+        rel_change: opt_num(j, "rel_change").unwrap_or(0.0),
+        change_ts: opt_num(j, "change_ts").unwrap_or(0.0) as i64,
+        suspect_commit: opt_str(j, "suspect_commit"),
+        first_bad_commit: opt_str(j, "first_bad_commit"),
+        archive_record: opt_num(j, "archive_record").map(|v| v as Id),
+        pipeline_collection: opt_num(j, "pipeline_collection").map(|v| v as Id),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::regress::stats::BaselineStats;
+
+    fn finding(policy: &str, series: &str, conf: f64) -> Finding {
+        let mut group = BTreeMap::new();
+        for kv in series.split(',') {
+            if let Some((k, v)) = kv.split_once('=') {
+                group.insert(k.to_string(), v.to_string());
+            }
+        }
+        Finding {
+            policy: policy.to_string(),
+            measurement: "lbm".into(),
+            field: "mlups".into(),
+            series: series.to_string(),
+            group,
+            direction: Direction::HigherIsBetter,
+            baseline: BaselineStats::of(&[1000.0, 1000.0, 1000.0]),
+            current: 850.0,
+            rel_change: -0.15,
+            p_welch: Some(0.001),
+            p_mann_whitney: None,
+            p_z: None,
+            change_ts: 5_000_000_000,
+            suspect_commit: Some("abcd1234".into()),
+            confidence: conf,
+        }
+    }
+
+    #[test]
+    fn ingest_opens_updates_and_resolves() {
+        let mut book = AlertBook::new();
+        let evaluated = vec!["lbm-mlups/node=icx36".to_string()];
+        let f = finding("lbm-mlups", "node=icx36", 0.9);
+
+        let s1 = book.ingest(&[f.clone()], &evaluated, 1);
+        assert_eq!(
+            s1,
+            IngestSummary { opened: 1, updated: 0, auto_resolved: 0, opened_ids: vec![1] }
+        );
+        assert_eq!(book.active().len(), 1);
+        assert_eq!(book.alerts[0].suspect_commit.as_deref(), Some("abcd1234"));
+
+        // same finding again: dedup, not a second alert
+        let s2 = book.ingest(&[f.clone()], &evaluated, 2);
+        assert_eq!(
+            s2,
+            IngestSummary { opened: 0, updated: 1, auto_resolved: 0, opened_ids: vec![] }
+        );
+        assert_eq!(book.alerts.len(), 1);
+        assert_eq!(book.alerts[0].times_seen, 2);
+        assert_eq!(book.alerts[0].last_seen_ts, 2);
+
+        // series evaluated healthy: auto-resolve
+        let s3 = book.ingest(&[], &evaluated, 3);
+        assert_eq!(s3.auto_resolved, 1);
+        assert_eq!(book.alerts[0].state, AlertState::Resolved);
+        assert_eq!(book.alerts[0].resolved_ts, Some(3));
+        assert!(book.active().is_empty());
+
+        // regression recurs: a *new* alert opens
+        let s4 = book.ingest(&[f], &evaluated, 4);
+        assert_eq!(s4.opened, 1);
+        assert_eq!(s4.opened_ids, vec![2]);
+        assert_eq!(book.alerts.len(), 2);
+        assert_ne!(book.alerts[1].id, book.alerts[0].id);
+    }
+
+    #[test]
+    fn unevaluated_series_do_not_resolve() {
+        let mut book = AlertBook::new();
+        book.ingest(
+            &[finding("lbm-mlups", "node=a", 0.8)],
+            &["lbm-mlups/node=a".to_string()],
+            1,
+        );
+        // a run that evaluated other series (or nothing at all — e.g. a
+        // fresh TSDB) must not touch this alert
+        let s = book.ingest(&[], &["fe2ti-tts/case=fe2ti216".to_string()], 2);
+        assert_eq!(s.auto_resolved, 0);
+        let s = book.ingest(&[], &[], 3);
+        assert_eq!(s.auto_resolved, 0);
+        assert_eq!(book.active().len(), 1);
+    }
+
+    #[test]
+    fn ack_and_manual_resolve() {
+        let mut book = AlertBook::new();
+        let evaluated = vec!["p/node=a".to_string()];
+        book.ingest(&[finding("p", "node=a", 0.8)], &evaluated, 1);
+        let id = book.alerts[0].id;
+        book.acknowledge(id).unwrap();
+        assert_eq!(book.alerts[0].state, AlertState::Acknowledged);
+        // acknowledged alerts still update
+        let s = book.ingest(&[finding("p", "node=a", 0.95)], &evaluated, 2);
+        assert_eq!(s.updated, 1);
+        assert_eq!(book.alerts[0].confidence, 0.95);
+        book.resolve(id, 3).unwrap();
+        assert_eq!(book.alerts[0].state, AlertState::Resolved);
+        assert!(book.acknowledge(id).is_err());
+        assert!(book.acknowledge(999).is_err());
+    }
+
+    #[test]
+    fn detach_store_clears_stale_ids() {
+        let mut book = AlertBook::new();
+        book.ingest(&[finding("p", "node=a", 0.8)], &["p/node=a".to_string()], 1);
+        book.alerts[0].archive_record = Some(7);
+        book.alerts[0].pipeline_collection = Some(3);
+        book.detach_store();
+        assert_eq!(book.alerts[0].archive_record, None);
+        assert_eq!(book.alerts[0].pipeline_collection, None);
+        // a fresh store archives them cleanly instead of clobbering id 7
+        let mut store = DataStore::new();
+        let coll = store.create_collection("alerts", "alerts");
+        assert_eq!(book.archive(&mut store, coll), 1);
+        assert_eq!(store.n_records(), 1);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_alerts() {
+        let mut book = AlertBook::new();
+        book.ingest(
+            &[finding("lbm-mlups", "collision_op=srt,node=icx36", 0.9)],
+            &["lbm-mlups".to_string()],
+            7,
+        );
+        book.alerts[0].first_bad_commit = Some("feedface".into());
+        book.acknowledge(book.alerts[0].id).unwrap();
+
+        let j = book.to_json();
+        let back = AlertBook::from_json(&Json::parse(&j.to_string_pretty()).unwrap()).unwrap();
+        assert_eq!(back.alerts.len(), 1);
+        let a = &back.alerts[0];
+        assert_eq!(a.state, AlertState::Acknowledged);
+        assert_eq!(a.series, "collision_op=srt,node=icx36");
+        assert_eq!(a.group["node"], "icx36");
+        assert_eq!(a.first_bad_commit.as_deref(), Some("feedface"));
+        assert_eq!(a.opened_ts, 7);
+        assert!((a.rel_change + 0.15).abs() < 1e-12);
+        // ids keep counting after reload
+        let f2 = finding("lbm-mlups", "node=rome1", 0.7);
+        let mut back = back;
+        back.ingest(&[f2], &["lbm-mlups".to_string()], 8);
+        assert_eq!(back.alerts[1].id, a.id + 1);
+    }
+
+    #[test]
+    fn archive_creates_linked_records_once() {
+        let mut store = DataStore::new();
+        let coll = store.create_collection("alerts", "regression alerts");
+        let pipe = store.create_collection("pipeline-9", "pipeline");
+        let mut book = AlertBook::new();
+        book.ingest(&[finding("p", "node=a", 0.8)], &["p".to_string()], 1);
+        book.alerts[0].pipeline_collection = Some(pipe);
+
+        assert_eq!(book.archive(&mut store, coll), 1);
+        // second archive refreshes, does not duplicate
+        assert_eq!(book.archive(&mut store, coll), 0);
+        assert_eq!(store.n_records(), 1);
+        let rid = book.alerts[0].archive_record.unwrap();
+        let rec = store.record(rid).unwrap();
+        assert_eq!(rec.record_type, "regression-alert");
+        assert!(rec.files["alert.json"].contains("node=a"));
+        assert_eq!(rec.meta["suspect_commit"], "abcd1234");
+        assert!(store.collection(coll).unwrap().records.contains(&rid));
+        assert!(store.collection(pipe).unwrap().records.contains(&rid));
+    }
+}

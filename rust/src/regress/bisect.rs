@@ -1,0 +1,341 @@
+//! Automatic first-bad-commit search for an open alert.
+//!
+//! `git bisect` for the CB loop: given a commit chain with a known-good
+//! start and a known-bad end, re-run the benchmark pipeline on midpoint
+//! commits (through the real [`crate::coordinator::CbSystem`], so every
+//! probe schedules, parses, uploads and archives like a normal pipeline)
+//! and binary-search the first commit whose series value is adversely
+//! shifted against the good baseline. O(log n) pipeline re-runs instead
+//! of the O(n) a linear replay would need — on real clusters each re-run
+//! costs node-hours, so this is the difference between "we bisect every
+//! alert automatically" and "someone does it by hand next week".
+
+use super::detector::Direction;
+use crate::coordinator::{CbSystem, PreparedJob};
+use crate::tsdb::Query;
+use crate::vcs::{PushEvent, Repository};
+use std::collections::BTreeMap;
+
+/// Outcome of one bisection.
+#[derive(Debug, Clone)]
+pub struct BisectReport {
+    /// Commits strictly after the good anchor up to and including the bad
+    /// anchor (the search space).
+    pub candidates: usize,
+    /// Every probed commit: (id, measured value, classified bad?).
+    pub tested: Vec<(String, f64, bool)>,
+    /// First commit classified bad; `None` when the trusted-bad anchor
+    /// measured clean (no regression on this chain — wrong chain
+    /// arguments, or the alert is stale).
+    pub first_bad: Option<String>,
+    /// Pipeline executions spent (anchor re-runs + probes).
+    pub pipeline_runs: usize,
+    /// Pipeline executions a linear front-to-back replay would spend.
+    pub linear_runs: usize,
+}
+
+/// The linear commit chain on `branch` from `good` (inclusive) to `bad`
+/// (inclusive), oldest first.
+pub fn chain_between(
+    repo: &Repository,
+    branch: &str,
+    good: &str,
+    bad: &str,
+) -> anyhow::Result<Vec<String>> {
+    let ids: Vec<String> = repo.log(branch).iter().rev().map(|c| c.id.clone()).collect();
+    let gi = ids
+        .iter()
+        .position(|i| i == good)
+        .ok_or_else(|| anyhow::anyhow!("good commit {good} not on branch `{branch}`"))?;
+    let bi = ids
+        .iter()
+        .position(|i| i == bad)
+        .ok_or_else(|| anyhow::anyhow!("bad commit {bad} not on branch `{branch}`"))?;
+    anyhow::ensure!(
+        gi < bi,
+        "good commit must be an ancestor of the bad commit ({gi} vs {bi})"
+    );
+    Ok(ids[gi..=bi].to_vec())
+}
+
+/// Resolve a short (8-char TSDB tag) commit id against a branch history.
+pub fn resolve_short(repo: &Repository, branch: &str, short: &str) -> Option<String> {
+    repo.log(branch)
+        .iter()
+        .find(|c| c.id.starts_with(short))
+        .map(|c| c.id.clone())
+}
+
+/// Binary-search the first bad commit over `chain` (oldest first;
+/// `chain[0]` is trusted good, the last element trusted bad) with an
+/// arbitrary classifier. Returns (first_bad_index, probes).
+pub fn bisect_chain(
+    chain_len: usize,
+    mut is_bad: impl FnMut(usize) -> anyhow::Result<bool>,
+) -> anyhow::Result<(usize, usize)> {
+    anyhow::ensure!(chain_len >= 2, "need at least a good and a bad commit");
+    let mut lo = 0usize;
+    let mut hi = chain_len - 1;
+    let mut probes = 0usize;
+    while hi - lo > 1 {
+        let mid = (lo + hi) / 2;
+        probes += 1;
+        if is_bad(mid)? {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    Ok((hi, probes))
+}
+
+/// Bisect a regressed series by re-running the benchmark pipeline on
+/// midpoint commits.
+///
+/// * `series_tags` — the alert's group tags identifying the series
+///   (`<none>` values are ignored, matching absent tags loosely);
+/// * `threshold` — the policy's `min_rel_change`; a probe is *bad* when
+///   its adverse relative change vs the good baseline exceeds half of it
+///   (midpoint rule, robust to partial regressions);
+/// * `jobs_for` — the pipeline's job matrix for a commit (the same
+///   function the coordinator uses on push events).
+#[allow(clippy::too_many_arguments)]
+pub fn bisect_pipeline(
+    cb: &mut CbSystem,
+    repo: &Repository,
+    branch: &str,
+    good: &str,
+    bad: &str,
+    measurement: &str,
+    field: &str,
+    series_tags: &BTreeMap<String, String>,
+    direction: Direction,
+    threshold: f64,
+    mut jobs_for: impl FnMut(&Repository, &str) -> Vec<PreparedJob>,
+) -> anyhow::Result<BisectReport> {
+    let chain = chain_between(repo, branch, good, bad)?;
+    let candidates = chain.len() - 1;
+    let mut runs = 0usize;
+    let mut tested: Vec<(String, f64, bool)> = Vec::new();
+
+    let mut measure = |cb: &mut CbSystem, commit: &str| -> anyhow::Result<f64> {
+        let ev = PushEvent {
+            repo: repo.name.clone(),
+            branch: branch.to_string(),
+            commit_id: commit.to_string(),
+        };
+        let jobs = jobs_for(repo, commit);
+        anyhow::ensure!(!jobs.is_empty(), "pipeline produced no jobs for {commit}");
+        cb.execute_pipeline(&ev, false, jobs, measurement)?;
+        let ts = cb.last_trigger_ts();
+        let mut q = Query::new(measurement, field).range(ts, ts);
+        for (k, v) in series_tags {
+            if v != "<none>" {
+                q = q.where_tag(k, v);
+            }
+        }
+        let vals: Vec<f64> = q
+            .run(&cb.db)
+            .iter()
+            .flat_map(|s| s.points.iter().map(|p| p.1))
+            .collect();
+        anyhow::ensure!(
+            !vals.is_empty(),
+            "probe of {commit} produced no `{measurement}.{field}` point for the series"
+        );
+        Ok(vals.iter().sum::<f64>() / vals.len() as f64)
+    };
+
+    let baseline = measure(cb, &chain[0])?;
+    runs += 1;
+    anyhow::ensure!(
+        baseline.abs() > 1e-300,
+        "good-commit baseline is zero; cannot form relative changes"
+    );
+    let is_bad_value =
+        |v: f64| direction.adverse((v - baseline) / baseline) > 0.5 * threshold;
+
+    // sanity-probe the trusted-bad anchor: if this chain shows no
+    // regression at its tip (stale alert, or the chain was rebuilt with
+    // different arguments), report that instead of walking the search to
+    // a confidently wrong "first bad" commit
+    let bad_val = measure(cb, chain.last().unwrap())?;
+    runs += 1;
+    let anchor_bad = is_bad_value(bad_val);
+    tested.push((chain.last().unwrap().clone(), bad_val, anchor_bad));
+    if !anchor_bad {
+        return Ok(BisectReport {
+            candidates,
+            tested,
+            first_bad: None,
+            pipeline_runs: runs,
+            linear_runs: candidates,
+        });
+    }
+
+    let (first_bad_idx, _probes) = bisect_chain(chain.len(), |mid| {
+        let v = measure(cb, &chain[mid])?;
+        runs += 1;
+        let bad = is_bad_value(v);
+        tested.push((chain[mid].clone(), v, bad));
+        Ok(bad)
+    })?;
+
+    Ok(BisectReport {
+        candidates,
+        tested,
+        first_bad: Some(chain[first_bad_idx].clone()),
+        pipeline_runs: runs,
+        linear_runs: candidates,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_with_chain(n: usize, bad_at: usize) -> (Repository, Vec<String>) {
+        let mut repo = Repository::new("r");
+        let mut ids = Vec::new();
+        for i in 0..n {
+            let content = if i + 1 >= bad_at { "slow" } else { "fast" };
+            let ev = repo.commit_change(
+                "master",
+                "dev",
+                &format!("c{i}"),
+                i as f64,
+                "perf.cfg",
+                &format!("{content} {i}\n"),
+            );
+            ids.push(ev.commit_id);
+        }
+        (repo, ids)
+    }
+
+    #[test]
+    fn chain_between_slices_history() {
+        let (repo, ids) = repo_with_chain(6, 4);
+        let chain = chain_between(&repo, "master", &ids[1], &ids[4]).unwrap();
+        assert_eq!(chain, ids[1..=4].to_vec());
+        assert!(chain_between(&repo, "master", &ids[4], &ids[1]).is_err());
+        assert!(chain_between(&repo, "master", "nope", &ids[1]).is_err());
+    }
+
+    #[test]
+    fn resolve_short_matches_prefix() {
+        let (repo, ids) = repo_with_chain(3, 99);
+        let short = &ids[1][..8];
+        assert_eq!(resolve_short(&repo, "master", short).as_deref(), Some(ids[1].as_str()));
+        assert!(resolve_short(&repo, "master", "zzzzzzzz").is_none());
+    }
+
+    #[test]
+    fn bisect_chain_finds_every_position_with_log_probes() {
+        for n in [2usize, 3, 5, 8, 16, 33] {
+            for bad in 1..n {
+                let (idx, probes) = bisect_chain(n, |i| Ok(i >= bad)).unwrap();
+                assert_eq!(idx, bad, "n={n} bad={bad}");
+                // strictly fewer probes than a linear scan for n > 3
+                let log2 = (n as f64).log2().ceil() as usize;
+                assert!(probes <= log2, "n={n} bad={bad}: {probes} > {log2}");
+            }
+        }
+        assert!(bisect_chain(1, |_| Ok(true)).is_err());
+    }
+
+    #[test]
+    fn bisect_pipeline_locates_first_bad_commit() {
+        use crate::ci::CiJob;
+        use crate::slurm::JobOutcome;
+
+        let n = 8;
+        let bad_at = 5; // 1-based commit #5
+        let (repo, ids) = repo_with_chain(n, bad_at);
+        let mut cb = CbSystem::new();
+        let jobs_for = |repo: &Repository, commit: &str| -> Vec<PreparedJob> {
+            let slow = repo
+                .get(commit)
+                .map(|c| c.tree.get("perf.cfg").map(|t| t.contains("slow")).unwrap_or(false))
+                .unwrap_or(false);
+            let mlups = if slow { 850.0 } else { 1000.0 };
+            vec![PreparedJob {
+                ci: CiJob::new("probe-icx36", "benchmark").var("HOST", "icx36"),
+                payload: Box::new(move |_n, _t| JobOutcome {
+                    duration: 10.0,
+                    stdout: format!("TAG collision_op=srt\nMETRIC mlups={mlups}\n"),
+                    exit_code: 0,
+                }),
+            }]
+        };
+        let mut tags = BTreeMap::new();
+        tags.insert("collision_op".to_string(), "srt".to_string());
+        tags.insert("node".to_string(), "icx36".to_string());
+        let report = bisect_pipeline(
+            &mut cb,
+            &repo,
+            "master",
+            &ids[0],
+            &ids[n - 1],
+            "lbm",
+            "mlups",
+            &tags,
+            Direction::HigherIsBetter,
+            0.08,
+            jobs_for,
+        )
+        .unwrap();
+        assert_eq!(report.first_bad.as_deref(), Some(ids[bad_at - 1].as_str()));
+        assert_eq!(report.candidates, n - 1);
+        assert!(
+            report.pipeline_runs < report.linear_runs,
+            "{} probes vs {} linear",
+            report.pipeline_runs,
+            report.linear_runs
+        );
+        // every probe classified consistently with the plant
+        for (cid, _v, bad) in &report.tested {
+            let idx = ids.iter().position(|i| i == cid).unwrap();
+            assert_eq!(*bad, idx + 1 >= bad_at, "commit {idx}");
+        }
+    }
+
+    #[test]
+    fn clean_chain_reports_inconclusive_not_a_scapegoat() {
+        use crate::ci::CiJob;
+        use crate::slurm::JobOutcome;
+
+        // no regression anywhere: the bad-anchor sanity probe must catch
+        // it and return None instead of blaming the last commit
+        let (repo, ids) = repo_with_chain(6, 99);
+        let mut cb = CbSystem::new();
+        let jobs_for = |_repo: &Repository, _commit: &str| -> Vec<PreparedJob> {
+            vec![PreparedJob {
+                ci: CiJob::new("probe-icx36", "benchmark").var("HOST", "icx36"),
+                payload: Box::new(|_n, _t| JobOutcome {
+                    duration: 10.0,
+                    stdout: "TAG collision_op=srt\nMETRIC mlups=1000\n".into(),
+                    exit_code: 0,
+                }),
+            }]
+        };
+        let mut tags = BTreeMap::new();
+        tags.insert("collision_op".to_string(), "srt".to_string());
+        let report = bisect_pipeline(
+            &mut cb,
+            &repo,
+            "master",
+            &ids[0],
+            &ids[5],
+            "lbm",
+            "mlups",
+            &tags,
+            Direction::HigherIsBetter,
+            0.08,
+            jobs_for,
+        )
+        .unwrap();
+        assert_eq!(report.first_bad, None);
+        // only the two anchors were spent
+        assert_eq!(report.pipeline_runs, 2);
+    }
+}

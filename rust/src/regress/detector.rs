@@ -1,0 +1,570 @@
+//! Policy-driven regression detection over the TSDB.
+//!
+//! A [`Policy`] names one measurement/field, how to group it into series
+//! (the MLUP/s-up vs TTS-down convention lives in [`Direction`]), and the
+//! statistical knobs: baseline/recent window sizes, the minimum relative
+//! change worth flagging, and the significance level. [`Detector::detect`]
+//! evaluates every policy against the database and emits confidence-scored
+//! [`Finding`]s — the input to the alert lifecycle
+//! ([`crate::regress::alerts`]) and the bisection driver
+//! ([`crate::regress::bisect`]).
+//!
+//! Unlike the seed's last-vs-previous check, a series is split into a
+//! *baseline* regime and a *recent* regime — by CUSUM change-point
+//! location when the series carries a visible level shift, by trailing
+//! windows otherwise — and the regimes are compared with Welch's t-test
+//! and Mann–Whitney U (or a z-score when the recent regime is a single
+//! pipeline execution).
+
+use super::stats::{
+    cusum_changepoint, mann_whitney, mean, normal_two_sided_p, welch_t, BaselineStats,
+};
+use crate::tsdb::{Db, Query};
+use std::collections::BTreeMap;
+
+/// Sign convention for "worse": throughput-like metrics regress when they
+/// drop, time-like metrics when they rise.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    HigherIsBetter,
+    LowerIsBetter,
+}
+
+impl Direction {
+    /// Map a relative change onto an "adverse" magnitude: positive values
+    /// mean the metric moved the wrong way.
+    pub fn adverse(self, rel: f64) -> f64 {
+        match self {
+            Direction::HigherIsBetter => -rel,
+            Direction::LowerIsBetter => rel,
+        }
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            Direction::HigherIsBetter => "higher-is-better",
+            Direction::LowerIsBetter => "lower-is-better",
+        }
+    }
+    pub fn from_name(s: &str) -> Option<Direction> {
+        match s {
+            "higher-is-better" => Some(Direction::HigherIsBetter),
+            "lower-is-better" => Some(Direction::LowerIsBetter),
+            _ => None,
+        }
+    }
+}
+
+/// One detection policy: which series to watch and how suspicious to be.
+#[derive(Debug, Clone)]
+pub struct Policy {
+    pub name: String,
+    pub measurement: String,
+    pub field: String,
+    pub group_by: Vec<String>,
+    pub direction: Direction,
+    /// Maximum number of points forming the baseline regime.
+    pub baseline_window: usize,
+    /// Number of trailing points forming the recent regime when no change
+    /// point is located (1 = the latest pipeline execution).
+    pub recent_window: usize,
+    /// Minimum adverse relative change (vs the baseline mean) to flag.
+    pub min_rel_change: f64,
+    /// Significance level: findings whose best p-value exceeds this are
+    /// suppressed as noise (set to 1.0 to disable the statistical gate).
+    pub alpha: f64,
+    /// Findings below this confidence are dropped.
+    pub min_confidence: f64,
+    /// Split the series at a located CUSUM change point instead of a
+    /// fixed trailing window when the shift is clear enough.
+    pub use_changepoint: bool,
+}
+
+impl Policy {
+    pub fn new(name: &str, measurement: &str, field: &str) -> Policy {
+        Policy {
+            name: name.to_string(),
+            measurement: measurement.to_string(),
+            field: field.to_string(),
+            group_by: Vec::new(),
+            direction: Direction::HigherIsBetter,
+            baseline_window: 8,
+            recent_window: 1,
+            min_rel_change: 0.05,
+            alpha: 0.05,
+            min_confidence: 0.5,
+            use_changepoint: true,
+        }
+    }
+    pub fn group_by(mut self, tags: &[&str]) -> Policy {
+        self.group_by = tags.iter().map(|s| s.to_string()).collect();
+        self
+    }
+    pub fn direction(mut self, d: Direction) -> Policy {
+        self.direction = d;
+        self
+    }
+    pub fn windows(mut self, baseline: usize, recent: usize) -> Policy {
+        self.baseline_window = baseline.max(1);
+        self.recent_window = recent.max(1);
+        self
+    }
+    pub fn thresholds(mut self, min_rel_change: f64, alpha: f64, min_confidence: f64) -> Policy {
+        self.min_rel_change = min_rel_change;
+        self.alpha = alpha;
+        self.min_confidence = min_confidence;
+        self
+    }
+    pub fn changepoint(mut self, on: bool) -> Policy {
+        self.use_changepoint = on;
+        self
+    }
+}
+
+/// Minimum normalized CUSUM excursion for a change-point split to be
+/// trusted over the plain trailing window.
+const CUSUM_MIN_STAT: f64 = 0.9;
+
+/// A confidence-scored regression finding on one series.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub policy: String,
+    pub measurement: String,
+    pub field: String,
+    /// Group label, e.g. `collision_op=srt,node=icx36`.
+    pub series: String,
+    pub group: BTreeMap<String, String>,
+    pub direction: Direction,
+    pub baseline: BaselineStats,
+    /// Mean of the recent regime.
+    pub current: f64,
+    /// (current - baseline.mean) / baseline.mean.
+    pub rel_change: f64,
+    /// Welch's t-test p-value (baseline vs recent), when both regimes
+    /// carry at least 2 points.
+    pub p_welch: Option<f64>,
+    /// Mann–Whitney U p-value, same requirement.
+    pub p_mann_whitney: Option<f64>,
+    /// z-score p-value of the recent mean against the baseline spread,
+    /// when the recent regime is a single point.
+    pub p_z: Option<f64>,
+    /// Timestamp of the first point of the degraded regime.
+    pub change_ts: i64,
+    /// `commit` tag of the point at `change_ts`, when present.
+    pub suspect_commit: Option<String>,
+    /// Combined score in [0, 1].
+    pub confidence: f64,
+}
+
+impl Finding {
+    /// Best available p-value across the tests that ran.
+    pub fn best_p(&self) -> Option<f64> {
+        [self.p_welch, self.p_mann_whitney, self.p_z]
+            .into_iter()
+            .flatten()
+            .min_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal))
+    }
+}
+
+/// Evaluate one already-grouped series against a policy.
+///
+/// `points` must be time-ordered (the TSDB guarantees this). Returns a
+/// finding when the recent regime is adversely shifted beyond the policy
+/// thresholds; `suspect_commit` is left empty for the caller to fill.
+pub fn evaluate_series(
+    policy: &Policy,
+    series_label: &str,
+    group: &BTreeMap<String, String>,
+    points: &[(i64, f64)],
+) -> Option<Finding> {
+    if points.len() < 2 {
+        return None;
+    }
+    // Rolling-baseline horizon: only the trailing baseline_window +
+    // recent_window points participate. This keeps the check O(window)
+    // on the per-pipeline hot path and, more importantly, stops an *old*
+    // level shift deep in the history from anchoring the CUSUM split and
+    // masking a fresh regression — shifts older than the horizon have
+    // aged into the baseline (the rolling-threshold model CB suites use).
+    let lookback = (policy.baseline_window + policy.recent_window).max(2);
+    let points = &points[points.len().saturating_sub(lookback)..];
+    let values: Vec<f64> = points.iter().map(|p| p.1).collect();
+
+    // --- split into baseline / recent regimes ---
+    let mut split = values.len() - policy.recent_window.min(values.len() - 1);
+    if policy.use_changepoint {
+        let c = cusum_changepoint(&values);
+        if let Some(idx) = c.index {
+            if c.stat >= CUSUM_MIN_STAT && idx >= 1 && idx < values.len() {
+                split = idx;
+            }
+        }
+    }
+    let base_start = split.saturating_sub(policy.baseline_window);
+    let baseline_vals = &values[base_start..split];
+    let recent_vals = &values[split..];
+    if baseline_vals.is_empty() || recent_vals.is_empty() {
+        return None;
+    }
+
+    let baseline = BaselineStats::of(baseline_vals);
+    if baseline.mean.abs() < 1e-300 {
+        return None;
+    }
+    let current = mean(recent_vals);
+    let rel_change = (current - baseline.mean) / baseline.mean;
+    let adverse = policy.direction.adverse(rel_change);
+    if !(adverse > policy.min_rel_change) {
+        return None;
+    }
+    // the *latest* point must still be adverse — a regression that a later
+    // commit already fixed should not stay flagged
+    let last = *values.last().unwrap();
+    let last_adverse = policy.direction.adverse((last - baseline.mean) / baseline.mean);
+    if !(last_adverse > 0.5 * policy.min_rel_change) {
+        return None;
+    }
+
+    // --- statistical evidence ---
+    let p_welch = welch_t(baseline_vals, recent_vals).map(|t| t.p);
+    let p_mann_whitney = mann_whitney(baseline_vals, recent_vals).map(|t| t.p);
+    let p_z = if recent_vals.len() == 1 && baseline.n >= 2 {
+        Some(if baseline.sd > 0.0 {
+            normal_two_sided_p((current - baseline.mean) / baseline.sd)
+        } else if current == baseline.mean {
+            1.0
+        } else {
+            0.0
+        })
+    } else {
+        None
+    };
+    let best_p = [p_welch, p_mann_whitney, p_z]
+        .into_iter()
+        .flatten()
+        .min_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    if let Some(p) = best_p {
+        if p > policy.alpha {
+            return None;
+        }
+    }
+
+    // --- confidence: how far past the threshold + how significant ---
+    let c_rel = (adverse / (2.0 * policy.min_rel_change)).clamp(0.0, 1.0);
+    let c_stat = best_p.map(|p| 1.0 - p.clamp(0.0, 1.0)).unwrap_or(c_rel);
+    let confidence = 0.5 * c_rel + 0.5 * c_stat;
+    if confidence < policy.min_confidence {
+        return None;
+    }
+
+    Some(Finding {
+        policy: policy.name.clone(),
+        measurement: policy.measurement.clone(),
+        field: policy.field.clone(),
+        series: series_label.to_string(),
+        group: group.clone(),
+        direction: policy.direction,
+        baseline,
+        current,
+        rel_change,
+        p_welch,
+        p_mann_whitney,
+        p_z,
+        change_ts: points[split].0,
+        suspect_commit: None,
+        confidence,
+    })
+}
+
+/// Canonical `policy/series` fingerprint — the alert-dedup key shared by
+/// the detector (which reports what it *evaluated*) and the alert book
+/// (which auto-resolves only series that were evaluated and came back
+/// healthy).
+pub fn series_fingerprint(policy: &str, series: &str) -> String {
+    format!("{policy}/{series}")
+}
+
+/// Look up the `commit` tag of the point of `measurement` at timestamp
+/// `ts` whose tags agree with `group` (group values of `<none>` match an
+/// absent tag) — maps a located change point back to the offending commit.
+pub fn commit_at(
+    db: &Db,
+    measurement: &str,
+    group: &BTreeMap<String, String>,
+    ts: i64,
+) -> Option<String> {
+    db.points(measurement)
+        .iter()
+        .filter(|p| p.ts == ts)
+        .find(|p| {
+            group.iter().all(|(k, v)| match p.tags.get(k) {
+                Some(t) => t == v,
+                None => v == "<none>",
+            })
+        })
+        .and_then(|p| p.tags.get("commit").cloned())
+}
+
+/// Evaluate one policy over the database, reporting both the findings
+/// and the fingerprints of every series that carried enough data to
+/// judge (the absence of a finding for an *evaluated* series means
+/// "healthy"; for an unevaluated one it means nothing — e.g. a fresh
+/// TSDB must not auto-resolve carried-over alerts).
+pub fn evaluate_policy_run(policy: &Policy, db: &Db) -> (Vec<Finding>, Vec<String>) {
+    let refs: Vec<&str> = policy.group_by.iter().map(|s| s.as_str()).collect();
+    let mut findings = Vec::new();
+    let mut evaluated = Vec::new();
+    for s in Query::new(&policy.measurement, &policy.field)
+        .group_by(&refs)
+        .run(db)
+    {
+        if s.points.len() < 2 {
+            continue;
+        }
+        let label = s.label();
+        evaluated.push(series_fingerprint(&policy.name, &label));
+        if let Some(mut f) = evaluate_series(policy, &label, &s.group, &s.points) {
+            f.suspect_commit = commit_at(db, &policy.measurement, &s.group, f.change_ts);
+            findings.push(f);
+        }
+    }
+    (findings, evaluated)
+}
+
+/// Evaluate one policy over the database.
+pub fn evaluate_policy(policy: &Policy, db: &Db) -> Vec<Finding> {
+    evaluate_policy_run(policy, db).0
+}
+
+/// The detector: a set of policies evaluated together.
+#[derive(Debug, Clone, Default)]
+pub struct Detector {
+    pub policies: Vec<Policy>,
+}
+
+impl Detector {
+    pub fn new() -> Detector {
+        Detector::default()
+    }
+
+    /// The stock policies for the two instrumented applications: waLBerla
+    /// throughput (MLUP/s, higher is better) and FE2TI time-to-solution
+    /// (lower is better), grouped exactly like the dashboards.
+    pub fn with_default_policies() -> Detector {
+        Detector::new()
+            .policy(
+                Policy::new("lbm-mlups", "lbm", "mlups")
+                    .group_by(&["case", "node", "collision_op", "gpu"])
+                    .direction(Direction::HigherIsBetter)
+                    .thresholds(0.08, 0.05, 0.5),
+            )
+            .policy(
+                Policy::new("fe2ti-tts", "fe2ti", "tts")
+                    .group_by(&["case", "node", "solver", "compiler", "parallelization"])
+                    .direction(Direction::LowerIsBetter)
+                    .thresholds(0.10, 0.05, 0.5),
+            )
+    }
+
+    pub fn policy(mut self, p: Policy) -> Detector {
+        self.policies.push(p);
+        self
+    }
+
+    /// Evaluate every policy.
+    pub fn detect(&self, db: &Db) -> Vec<Finding> {
+        self.detect_full(db).0
+    }
+
+    /// Evaluate every policy, also returning the fingerprints of every
+    /// series with enough data to judge (see [`evaluate_policy_run`]).
+    pub fn detect_full(&self, db: &Db) -> (Vec<Finding>, Vec<String>) {
+        let mut findings = Vec::new();
+        let mut evaluated = Vec::new();
+        for p in &self.policies {
+            let (f, e) = evaluate_policy_run(p, db);
+            findings.extend(f);
+            evaluated.extend(e);
+        }
+        (findings, evaluated)
+    }
+
+    /// Evaluate only the policies watching `measurement` (the post-upload
+    /// hook of `coordinator::execute_pipeline`). Returns the findings and
+    /// the evaluated-series fingerprints, so the alert book knows which
+    /// absent findings mean "recovered" (and which series simply were
+    /// not measurable).
+    pub fn detect_measurement(&self, db: &Db, measurement: &str) -> (Vec<Finding>, Vec<String>) {
+        let mut findings = Vec::new();
+        let mut evaluated = Vec::new();
+        for p in self.policies.iter().filter(|p| p.measurement == measurement) {
+            let (f, e) = evaluate_policy_run(p, db);
+            findings.extend(f);
+            evaluated.extend(e);
+        }
+        (findings, evaluated)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tsdb::Point;
+    use crate::util::rng::Rng;
+
+    fn series(vals: &[f64]) -> Vec<(i64, f64)> {
+        vals.iter().enumerate().map(|(i, &v)| (i as i64, v)).collect()
+    }
+
+    fn policy() -> Policy {
+        Policy::new("t", "m", "v").thresholds(0.08, 0.05, 0.5)
+    }
+
+    #[test]
+    fn clean_series_yields_no_finding() {
+        let mut rng = Rng::new(1);
+        let vals: Vec<f64> = (0..20).map(|_| rng.gauss(1000.0, 5.0)).collect();
+        let g = BTreeMap::new();
+        assert!(evaluate_series(&policy(), "all", &g, &series(&vals)).is_none());
+    }
+
+    #[test]
+    fn step_drop_is_found_with_high_confidence() {
+        // the drop is 4 pipelines old: still inside the rolling horizon
+        // (baseline_window 8 + recent 1), with enough baseline points in
+        // the tail for the two-sample tests to run
+        let mut rng = Rng::new(2);
+        let vals: Vec<f64> = (0..20)
+            .map(|i| {
+                if i < 16 {
+                    rng.gauss(1000.0, 5.0)
+                } else {
+                    rng.gauss(820.0, 5.0)
+                }
+            })
+            .collect();
+        let g = BTreeMap::new();
+        let f = evaluate_series(&policy(), "all", &g, &series(&vals)).expect("finding");
+        assert!(f.rel_change < -0.15, "rel={}", f.rel_change);
+        assert!(f.confidence > 0.8, "conf={}", f.confidence);
+        // change located at the step (timestamps are indices here)
+        assert!((f.change_ts - 16).abs() <= 2, "change_ts={}", f.change_ts);
+        assert!(f.best_p().unwrap() < 0.01);
+        assert!(f.baseline.n >= 2, "two-sample tests had a real baseline");
+    }
+
+    #[test]
+    fn old_shift_outside_horizon_does_not_mask_fresh_regression() {
+        // an ancient optimization (500 -> 1000) followed much later by a
+        // fresh -10% drop: the rolling horizon must anchor on the fresh
+        // drop, not the big historical jump
+        let mut vals = vec![500.0; 10];
+        vals.extend(vec![1000.0; 10]);
+        vals.extend(vec![900.0; 2]);
+        let g = BTreeMap::new();
+        let f = evaluate_series(&policy(), "all", &g, &series(&vals)).expect("finding");
+        assert!((f.rel_change + 0.10).abs() < 1e-9, "rel={}", f.rel_change);
+        assert_eq!(f.baseline.mean, 1000.0);
+        // located at the fresh drop (index 20), not the old jump (10)
+        assert_eq!(f.change_ts, 20);
+    }
+
+    #[test]
+    fn improvement_is_not_a_regression() {
+        let vals: Vec<f64> = (0..12).map(|i| if i < 8 { 1000.0 } else { 1300.0 }).collect();
+        let g = BTreeMap::new();
+        assert!(evaluate_series(&policy(), "all", &g, &series(&vals)).is_none());
+        // but the same shape on a lower-is-better metric is one
+        let p = policy().direction(Direction::LowerIsBetter);
+        assert!(evaluate_series(&p, "all", &g, &series(&vals)).is_some());
+    }
+
+    #[test]
+    fn fixed_regression_is_not_flagged() {
+        // bad regime in the middle, last commits recovered
+        let vals: Vec<f64> =
+            [1000.0, 1000.0, 1000.0, 800.0, 800.0, 800.0, 1000.0, 1000.0].to_vec();
+        let g = BTreeMap::new();
+        assert!(evaluate_series(&policy(), "all", &g, &series(&vals)).is_none());
+    }
+
+    #[test]
+    fn small_drift_below_threshold_is_suppressed() {
+        // a clean 3% step: located by CUSUM, but below min_rel_change=8%
+        let vals: Vec<f64> = (0..20).map(|i| if i < 15 { 1000.0 } else { 970.0 }).collect();
+        let g = BTreeMap::new();
+        assert!(evaluate_series(&policy(), "all", &g, &series(&vals)).is_none());
+    }
+
+    #[test]
+    fn single_new_point_uses_z_test() {
+        let vals = [1000.0, 1001.0, 999.0, 1000.5, 999.5, 800.0];
+        let g = BTreeMap::new();
+        let p = policy().changepoint(false);
+        let f = evaluate_series(&p, "all", &g, &series(&vals)).expect("finding");
+        assert!(f.p_z.is_some());
+        assert!(f.p_welch.is_none());
+        assert!(f.p_z.unwrap() < 1e-6);
+        assert_eq!(f.baseline.n, 5);
+        assert_eq!(f.current, 800.0);
+    }
+
+    #[test]
+    fn detector_finds_injected_commit_in_db() {
+        let mut db = Db::new();
+        for i in 0..8i64 {
+            let v = if i < 4 { 1000.0 } else { 850.0 };
+            db.insert(
+                Point::new("lbm", i * 1_000_000_000)
+                    .tag("case", "uniformgridcpu")
+                    .tag("node", "icx36")
+                    .tag("collision_op", "srt")
+                    .tag("commit", &format!("c{i:07}"))
+                    .field("mlups", v),
+            );
+        }
+        let det = Detector::with_default_policies();
+        let findings = det.detect(&db);
+        assert_eq!(findings.len(), 1);
+        let f = &findings[0];
+        assert_eq!(f.suspect_commit.as_deref(), Some("c0000004"));
+        assert_eq!(f.change_ts, 4_000_000_000);
+        assert!(f.confidence > 0.8);
+        assert!(f.series.contains("collision_op=srt"));
+        // gpu tag absent -> grouped as <none>
+        assert!(f.group["gpu"] == "<none>");
+        let (fs, evaluated) = det.detect_measurement(&db, "lbm");
+        assert_eq!(fs.len(), 1);
+        // evaluated fingerprints name the concrete series, not the policy
+        assert_eq!(evaluated.len(), 1);
+        assert!(evaluated[0].starts_with("lbm-mlups/"), "{}", evaluated[0]);
+        assert!(evaluated[0].contains("collision_op=srt"));
+        assert!(det.detect_measurement(&db, "fe2ti").0.is_empty());
+        assert!(det.detect_measurement(&db, "fe2ti").1.is_empty());
+    }
+
+    #[test]
+    fn commit_at_respects_group_and_none() {
+        let mut db = Db::new();
+        db.insert(
+            Point::new("m", 5)
+                .tag("node", "a")
+                .tag("commit", "abc")
+                .field("v", 1.0),
+        );
+        db.insert(
+            Point::new("m", 5)
+                .tag("node", "b")
+                .tag("gpu", "h100")
+                .tag("commit", "def")
+                .field("v", 2.0),
+        );
+        let mut g = BTreeMap::new();
+        g.insert("node".to_string(), "b".to_string());
+        assert_eq!(commit_at(&db, "m", &g, 5).as_deref(), Some("def"));
+        g.insert("gpu".to_string(), "<none>".to_string());
+        assert_eq!(commit_at(&db, "m", &g, 5), None);
+        g.insert("gpu".to_string(), "h100".to_string());
+        assert_eq!(commit_at(&db, "m", &g, 5).as_deref(), Some("def"));
+        assert_eq!(commit_at(&db, "m", &g, 6), None);
+    }
+}

@@ -1,0 +1,36 @@
+//! `regress::` — statistical regression detection, alerting, and
+//! automatic commit bisection.
+//!
+//! The paper's whole point is that continuous benchmarking "reveals
+//! performance degradation introduced by code changes immediately" (§7);
+//! this subsystem closes that loop over the rest of the stack:
+//!
+//! 1. [`stats`] — noise-aware change-detection primitives: baseline
+//!    windows, Welch's t-test, Mann–Whitney U, CUSUM change-point
+//!    location (from scratch; the vendored crate set has no statrs).
+//! 2. [`detector`] — per-series policies (measurement + field + group-by
+//!    tags + direction) evaluated against a baseline window instead of a
+//!    single prior point, emitting confidence-scored [`Finding`]s.
+//! 3. [`alerts`] — findings get a lifecycle (open → acknowledged →
+//!    resolved), deduplicated per series, persisted as JSON next to the
+//!    TSDB and archived as datastore records linked to the offending
+//!    pipeline's collection.
+//! 4. [`bisect`] — re-runs the pipeline on intermediate commits through
+//!    [`crate::coordinator::CbSystem`] and binary-searches the first bad
+//!    commit for an open alert.
+//!
+//! `coordinator::execute_pipeline` runs the detector after every upload;
+//! `coordinator::detect_regressions` is now a thin shim over
+//! [`detector::Policy`] with a 1-point window (API and semantics
+//! preserved); `cbench regress <detect|alerts|bisect>` drives the loop
+//! from the CLI.
+
+pub mod alerts;
+pub mod bisect;
+pub mod detector;
+pub mod stats;
+
+pub use alerts::{Alert, AlertBook, AlertState, IngestSummary};
+pub use bisect::{bisect_chain, bisect_pipeline, chain_between, resolve_short, BisectReport};
+pub use detector::{Detector, Direction, Finding, Policy};
+pub use stats::{cusum_changepoint, mann_whitney, welch_t, BaselineStats, Cusum, TwoSampleTest};

@@ -1,0 +1,488 @@
+//! Noise-aware change-detection primitives.
+//!
+//! The naive last-vs-previous comparison the seed shipped is blind to run-
+//! to-run noise; real CB suites (Bencher's thresholds, the ROOT framework)
+//! test a candidate window against a *baseline* window with proper
+//! statistics. This module provides the numerical kernel for that:
+//!
+//! * [`BaselineStats`] — mean/stddev/median/IQR over a window,
+//! * [`welch_t`] — Welch's unequal-variance t-test (two-sided p),
+//! * [`mann_whitney`] — Mann–Whitney U with tie-corrected normal
+//!   approximation (robust to non-normal timing noise),
+//! * [`cusum_changepoint`] — offline CUSUM change-point *location*,
+//! * special functions ([`ln_gamma`], [`betai`], [`erf`], [`normal_cdf`])
+//!   implemented from scratch — the vendored crate set has no statrs.
+
+use crate::util::stats::percentile_sorted;
+
+/// Sample mean.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Unbiased sample variance (n-1 denominator); 0 for n < 2.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+/// Robust summary of a baseline window.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BaselineStats {
+    pub n: usize,
+    pub mean: f64,
+    pub sd: f64,
+    pub median: f64,
+    /// Interquartile range (p75 - p25) — outlier-robust spread.
+    pub iqr: f64,
+}
+
+impl BaselineStats {
+    pub fn of(xs: &[f64]) -> BaselineStats {
+        if xs.is_empty() {
+            return BaselineStats {
+                n: 0,
+                mean: f64::NAN,
+                sd: f64::NAN,
+                median: f64::NAN,
+                iqr: f64::NAN,
+            };
+        }
+        let mut s = xs.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        BaselineStats {
+            n: xs.len(),
+            mean: mean(xs),
+            sd: variance(xs).sqrt(),
+            median: percentile_sorted(&s, 50.0),
+            iqr: percentile_sorted(&s, 75.0) - percentile_sorted(&s, 25.0),
+        }
+    }
+}
+
+/// Result of a two-sample test: the test statistic and a two-sided p-value.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TwoSampleTest {
+    pub stat: f64,
+    pub p: f64,
+}
+
+const LG_COEF: [f64; 9] = [
+    0.99999999999980993,
+    676.5203681218851,
+    -1259.1392167224028,
+    771.32342877765313,
+    -176.61502916214059,
+    12.507343278686905,
+    -0.13857109526572012,
+    9.9843695780195716e-6,
+    1.5056327351493116e-7,
+];
+
+/// Natural log of the gamma function (Lanczos approximation, g = 7).
+pub fn ln_gamma(x: f64) -> f64 {
+    let pi = std::f64::consts::PI;
+    if x < 0.5 {
+        // reflection formula
+        (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x)
+    } else {
+        let x = x - 1.0;
+        let mut a = LG_COEF[0];
+        let t = x + 7.5;
+        for (i, &c) in LG_COEF.iter().enumerate().skip(1) {
+            a += c / (x + i as f64);
+        }
+        0.5 * (2.0 * pi).ln() + (x + 0.5) * t.ln() - t + a.ln()
+    }
+}
+
+/// Continued-fraction kernel for the incomplete beta function.
+fn betacf(a: f64, b: f64, x: f64) -> f64 {
+    const MAXIT: usize = 300;
+    const EPS: f64 = 3e-14;
+    const FPMIN: f64 = 1e-300;
+    let qab = a + b;
+    let qap = a + 1.0;
+    let qam = a - 1.0;
+    let mut c = 1.0;
+    let mut d = 1.0 - qab * x / qap;
+    if d.abs() < FPMIN {
+        d = FPMIN;
+    }
+    d = 1.0 / d;
+    let mut h = d;
+    for m in 1..=MAXIT {
+        let m = m as f64;
+        let m2 = 2.0 * m;
+        let aa = m * (b - m) * x / ((qam + m2) * (a + m2));
+        d = 1.0 + aa * d;
+        if d.abs() < FPMIN {
+            d = FPMIN;
+        }
+        c = 1.0 + aa / c;
+        if c.abs() < FPMIN {
+            c = FPMIN;
+        }
+        d = 1.0 / d;
+        h *= d * c;
+        let aa = -(a + m) * (qab + m) * x / ((a + m2) * (qap + m2));
+        d = 1.0 + aa * d;
+        if d.abs() < FPMIN {
+            d = FPMIN;
+        }
+        c = 1.0 + aa / c;
+        if c.abs() < FPMIN {
+            c = FPMIN;
+        }
+        d = 1.0 / d;
+        let del = d * c;
+        h *= del;
+        if (del - 1.0).abs() < EPS {
+            break;
+        }
+    }
+    h
+}
+
+/// Regularized incomplete beta function I_x(a, b).
+pub fn betai(a: f64, b: f64, x: f64) -> f64 {
+    if x <= 0.0 {
+        return 0.0;
+    }
+    if x >= 1.0 {
+        return 1.0;
+    }
+    let bt =
+        (ln_gamma(a + b) - ln_gamma(a) - ln_gamma(b) + a * x.ln() + b * (1.0 - x).ln()).exp();
+    if x < (a + 1.0) / (a + b + 2.0) {
+        bt * betacf(a, b, x) / a
+    } else {
+        1.0 - bt * betacf(b, a, 1.0 - x) / b
+    }
+}
+
+/// Error function (Abramowitz & Stegun 7.1.26, |err| < 1.5e-7).
+pub fn erf(x: f64) -> f64 {
+    let s = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - ((((1.061405429 * t - 1.453152027) * t + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    s * y
+}
+
+/// Standard normal CDF.
+pub fn normal_cdf(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+/// Two-sided p-value for a z-statistic under the standard normal.
+pub fn normal_two_sided_p(z: f64) -> f64 {
+    (2.0 * (1.0 - normal_cdf(z.abs()))).clamp(0.0, 1.0)
+}
+
+/// Two-sided p-value for a t-statistic with `df` degrees of freedom,
+/// via the identity p = I_{df/(df+t^2)}(df/2, 1/2).
+pub fn student_t_two_sided_p(t: f64, df: f64) -> f64 {
+    if !t.is_finite() {
+        return 0.0;
+    }
+    if df <= 0.0 {
+        return 1.0;
+    }
+    betai(df / 2.0, 0.5, df / (df + t * t)).clamp(0.0, 1.0)
+}
+
+/// Welch's unequal-variance t-test between samples `a` and `b`.
+/// Returns `None` when either sample has fewer than 2 points.
+pub fn welch_t(a: &[f64], b: &[f64]) -> Option<TwoSampleTest> {
+    if a.len() < 2 || b.len() < 2 {
+        return None;
+    }
+    let (na, nb) = (a.len() as f64, b.len() as f64);
+    let (ma, mb) = (mean(a), mean(b));
+    let (va, vb) = (variance(a), variance(b));
+    let se2 = va / na + vb / nb;
+    if se2 <= 0.0 {
+        // both samples are constant: identical means are indistinguishable,
+        // different means are a certain shift
+        return Some(if ma == mb {
+            TwoSampleTest { stat: 0.0, p: 1.0 }
+        } else {
+            TwoSampleTest {
+                stat: f64::INFINITY,
+                p: 0.0,
+            }
+        });
+    }
+    let t = (ma - mb) / se2.sqrt();
+    let df = se2 * se2
+        / ((va / na) * (va / na) / (na - 1.0) + (vb / nb) * (vb / nb) / (nb - 1.0));
+    Some(TwoSampleTest {
+        stat: t,
+        p: student_t_two_sided_p(t, df),
+    })
+}
+
+/// Mann–Whitney U test (tie-corrected normal approximation with
+/// continuity correction). Returns `None` when the pooled sample is too
+/// small for the approximation (either side empty, or fewer than 4 total).
+pub fn mann_whitney(a: &[f64], b: &[f64]) -> Option<TwoSampleTest> {
+    if a.is_empty() || b.is_empty() || a.len() + b.len() < 4 {
+        return None;
+    }
+    let (na, nb) = (a.len() as f64, b.len() as f64);
+    let mut all: Vec<(f64, u8)> = a
+        .iter()
+        .map(|&x| (x, 0u8))
+        .chain(b.iter().map(|&x| (x, 1u8)))
+        .collect();
+    all.sort_by(|p, q| p.0.partial_cmp(&q.0).unwrap_or(std::cmp::Ordering::Equal));
+    let n = all.len();
+    let mut ranks = vec![0.0f64; n];
+    let mut tie_term = 0.0;
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && all[j + 1].0 == all[i].0 {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for r in ranks.iter_mut().take(j + 1).skip(i) {
+            *r = avg;
+        }
+        let t = (j - i + 1) as f64;
+        if t > 1.0 {
+            tie_term += t * t * t - t;
+        }
+        i = j + 1;
+    }
+    let ra: f64 = all
+        .iter()
+        .zip(&ranks)
+        .filter(|((_, g), _)| *g == 0)
+        .map(|(_, r)| *r)
+        .sum();
+    let u = ra - na * (na + 1.0) / 2.0;
+    let mu = na * nb / 2.0;
+    let nt = na + nb;
+    let sigma2 = na * nb / 12.0 * ((nt + 1.0) - tie_term / (nt * (nt - 1.0)));
+    if sigma2 <= 0.0 {
+        // every pooled value identical
+        return Some(TwoSampleTest { stat: 0.0, p: 1.0 });
+    }
+    let z = if u > mu {
+        (u - mu - 0.5) / sigma2.sqrt()
+    } else if u < mu {
+        (u - mu + 0.5) / sigma2.sqrt()
+    } else {
+        0.0
+    };
+    Some(TwoSampleTest {
+        stat: z,
+        p: normal_two_sided_p(z),
+    })
+}
+
+/// Offline CUSUM change-point estimate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Cusum {
+    /// Index of the *first point of the new regime* (series is split as
+    /// `xs[..index]` / `xs[index..]`), when a shift is located.
+    pub index: Option<usize>,
+    /// Normalized excursion max|S_t| / (sd * sqrt(n)) — larger means a
+    /// cleaner step; values above ~0.9 indicate a real level shift.
+    pub stat: f64,
+}
+
+/// Locate a mean shift with the classic cumulative-sum estimator:
+/// S_t = sum_{i<=t}(x_i - mean); the change is right after argmax |S_t|.
+/// Needs at least 4 points and non-degenerate spread.
+pub fn cusum_changepoint(xs: &[f64]) -> Cusum {
+    if xs.len() < 4 {
+        return Cusum {
+            index: None,
+            stat: 0.0,
+        };
+    }
+    let m = mean(xs);
+    let sd = variance(xs).sqrt();
+    if sd < 1e-300 {
+        return Cusum {
+            index: None,
+            stat: 0.0,
+        };
+    }
+    let mut s = 0.0;
+    let mut best = 0.0;
+    let mut best_t = 0usize;
+    // the last prefix is the full sum (== 0); stop one short so the split
+    // always leaves a non-empty tail
+    for (t, &x) in xs.iter().enumerate().take(xs.len() - 1) {
+        s += x - m;
+        if s.abs() > best {
+            best = s.abs();
+            best_t = t;
+        }
+    }
+    let stat = best / (sd * (xs.len() as f64).sqrt());
+    if best == 0.0 {
+        return Cusum {
+            index: None,
+            stat: 0.0,
+        };
+    }
+    Cusum {
+        index: Some(best_t + 1),
+        stat,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn gamma_and_beta_reference_values() {
+        assert!(ln_gamma(1.0).abs() < 1e-10);
+        assert!(ln_gamma(2.0).abs() < 1e-10);
+        // Γ(0.5) = sqrt(pi)
+        assert!((ln_gamma(0.5) - std::f64::consts::PI.sqrt().ln()).abs() < 1e-10);
+        // Γ(5) = 24
+        assert!((ln_gamma(5.0) - 24f64.ln()).abs() < 1e-10);
+        // I_x(1,1) = x
+        assert!((betai(1.0, 1.0, 0.3) - 0.3).abs() < 1e-10);
+        // symmetry: I_x(a,b) = 1 - I_{1-x}(b,a)
+        let lhs = betai(2.5, 1.5, 0.4);
+        let rhs = 1.0 - betai(1.5, 2.5, 0.6);
+        assert!((lhs - rhs).abs() < 1e-10);
+    }
+
+    #[test]
+    fn normal_cdf_reference_values() {
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-7);
+        assert!((normal_cdf(1.959964) - 0.975).abs() < 1e-4);
+        assert!((normal_cdf(-1.959964) - 0.025).abs() < 1e-4);
+        assert!((erf(1.0) - 0.8427007929).abs() < 1e-6);
+    }
+
+    #[test]
+    fn t_distribution_reference_p() {
+        // t=1, df=8 -> two-sided p = 0.34659 (tables)
+        assert!((student_t_two_sided_p(1.0, 8.0) - 0.34659).abs() < 1e-3);
+        // t=2.306, df=8 -> p = 0.05
+        assert!((student_t_two_sided_p(2.306, 8.0) - 0.05).abs() < 2e-3);
+        assert_eq!(student_t_two_sided_p(0.0, 8.0), 1.0);
+    }
+
+    #[test]
+    fn welch_separates_shifted_samples() {
+        let a = [100.0, 101.0, 99.0, 100.5, 99.5, 100.2];
+        let b = [90.0, 91.0, 89.5, 90.2, 90.8, 89.9];
+        let r = welch_t(&a, &b).unwrap();
+        assert!(r.p < 1e-4, "p={}", r.p);
+        assert!(r.stat > 0.0);
+        // same sample against itself: p = 1 territory
+        let r2 = welch_t(&a, &a).unwrap();
+        assert!(r2.p > 0.99, "p={}", r2.p);
+        // textbook check: a=[1..5], b=[2..6] -> t=-1, df=8, p~0.347
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let y = [2.0, 3.0, 4.0, 5.0, 6.0];
+        let r3 = welch_t(&x, &y).unwrap();
+        assert!((r3.stat + 1.0).abs() < 1e-12);
+        assert!((r3.p - 0.34659).abs() < 1e-3);
+        assert!(welch_t(&[1.0], &y).is_none());
+    }
+
+    #[test]
+    fn welch_constant_samples() {
+        let r = welch_t(&[5.0, 5.0, 5.0], &[5.0, 5.0]).unwrap();
+        assert_eq!(r.p, 1.0);
+        let r = welch_t(&[5.0, 5.0, 5.0], &[4.0, 4.0]).unwrap();
+        assert_eq!(r.p, 0.0);
+    }
+
+    #[test]
+    fn mann_whitney_separates_shifted_samples() {
+        let mut rng = Rng::new(11);
+        let a: Vec<f64> = (0..30).map(|_| rng.gauss(100.0, 2.0)).collect();
+        let b: Vec<f64> = (0..30).map(|_| rng.gauss(92.0, 2.0)).collect();
+        let r = mann_whitney(&a, &b).unwrap();
+        assert!(r.p < 1e-4, "p={}", r.p);
+        // a sample against itself: U sits exactly at its mean, p = 1
+        let r2 = mann_whitney(&a, &a).unwrap();
+        assert!(r2.stat.abs() < 1e-12 && r2.p > 0.999, "p={}", r2.p);
+        // ties collapse to p=1 when everything is identical
+        let r3 = mann_whitney(&[1.0, 1.0, 1.0], &[1.0, 1.0]).unwrap();
+        assert_eq!(r3.p, 1.0);
+        assert!(mann_whitney(&[1.0], &[2.0]).is_none());
+    }
+
+    #[test]
+    fn cusum_locates_step_in_noise() {
+        let mut rng = Rng::new(7);
+        for &cp in &[20usize, 35, 50] {
+            let xs: Vec<f64> = (0..70)
+                .map(|i| {
+                    if i < cp {
+                        rng.gauss(100.0, 2.0)
+                    } else {
+                        rng.gauss(88.0, 2.0)
+                    }
+                })
+                .collect();
+            let c = cusum_changepoint(&xs);
+            let idx = c.index.expect("change point found");
+            assert!(
+                (idx as i64 - cp as i64).abs() <= 2,
+                "cp={cp} located at {idx}"
+            );
+            assert!(c.stat > 0.9, "stat={}", c.stat);
+        }
+    }
+
+    #[test]
+    fn cusum_quiet_series_has_low_stat() {
+        // For pure noise the normalized stat follows the Brownian-bridge
+        // sup distribution: P(stat > 2.0) ~ 3e-4, while a clean 6-sigma
+        // step lands well above 3. Assert the comfortable margins only.
+        let mut rng = Rng::new(3);
+        let quiet: Vec<f64> = (0..60).map(|_| rng.gauss(100.0, 2.0)).collect();
+        let cq = cusum_changepoint(&quiet);
+        assert!(cq.stat < 2.0, "stat={}", cq.stat);
+        let stepped: Vec<f64> = (0..60)
+            .map(|i| if i < 30 { rng.gauss(100.0, 2.0) } else { rng.gauss(86.0, 2.0) })
+            .collect();
+        assert!(cusum_changepoint(&stepped).stat > cq.stat + 0.5);
+        // degenerate inputs
+        assert_eq!(cusum_changepoint(&[1.0, 2.0]).index, None);
+        assert_eq!(cusum_changepoint(&[5.0; 10]).index, None);
+    }
+
+    #[test]
+    fn cusum_step_without_noise_is_exact() {
+        let xs: Vec<f64> = (0..8).map(|i| if i < 4 { 10.0 } else { 8.0 }).collect();
+        let c = cusum_changepoint(&xs);
+        assert_eq!(c.index, Some(4));
+        assert!(c.stat > 0.9);
+    }
+
+    #[test]
+    fn baseline_stats_summary() {
+        let b = BaselineStats::of(&[1.0, 2.0, 3.0, 4.0, 100.0]);
+        assert_eq!(b.n, 5);
+        assert_eq!(b.median, 3.0);
+        assert!(b.iqr < b.sd); // IQR shrugs off the outlier
+        assert_eq!(BaselineStats::of(&[]).n, 0);
+    }
+}

@@ -9,6 +9,13 @@
 //! The waLBerla-analogue framing: the artifacts play the role of
 //! lbmpy-generated kernels — authored/optimized outside the framework,
 //! loaded as opaque optimized compute objects by the framework.
+//!
+//! **Feature gate:** actual PJRT execution needs the `xla` crate, which
+//! only the rust_pallas image vendors. The default build compiles without
+//! it — manifests still parse and list, but [`Engine::load`] /
+//! [`Engine::execute_f32`] return an error directing to
+//! `--features pjrt`. This keeps the CB stack (whose benchmark payloads
+//! are modeled) buildable everywhere.
 
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Context, Result};
@@ -30,59 +37,85 @@ pub struct ArtifactMeta {
     pub iters: Option<usize>,
 }
 
+/// Parse `manifest.json` of an artifacts directory.
+fn read_manifest(dir: &Path) -> Result<BTreeMap<String, ArtifactMeta>> {
+    let man_path = dir.join("manifest.json");
+    let text = std::fs::read_to_string(&man_path)
+        .with_context(|| format!("reading {man_path:?} — run `make artifacts` first"))?;
+    let json = Json::parse(&text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+    let mut meta = BTreeMap::new();
+    let obj = json.as_obj().ok_or_else(|| anyhow!("manifest not an object"))?;
+    for (name, m) in obj {
+        let shape = m
+            .get("shape")
+            .and_then(|s| s.as_arr())
+            .map(|a| a.iter().filter_map(|v| v.as_f64()).map(|v| v as usize).collect())
+            .unwrap_or_default();
+        meta.insert(
+            name.clone(),
+            ArtifactMeta {
+                name: name.clone(),
+                kind: m
+                    .get("kind")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("unknown")
+                    .to_string(),
+                file: dir.join(m.get("file").and_then(|v| v.as_str()).unwrap_or("")),
+                shape,
+                flops_per_cell: m.get("flops_per_cell").and_then(|v| v.as_f64()),
+                vmem_bytes_per_block: m.get("vmem_bytes_per_block").and_then(|v| v.as_f64()),
+                operator: m.get("operator").and_then(|v| v.as_str()).map(String::from),
+                iters: m.get("iters").and_then(|v| v.as_f64()).map(|v| v as usize),
+            },
+        );
+    }
+    Ok(meta)
+}
+
 /// The artifact registry: manifest + lazily compiled executables.
 pub struct Engine {
-    client: xla::PjRtClient,
     dir: PathBuf,
     meta: BTreeMap<String, ArtifactMeta>,
+    #[cfg(feature = "pjrt")]
+    client: xla::PjRtClient,
+    #[cfg(feature = "pjrt")]
     compiled: BTreeMap<String, xla::PjRtLoadedExecutable>,
 }
 
 impl Engine {
     /// Open the artifacts directory (reads `manifest.json`).
+    #[cfg(feature = "pjrt")]
     pub fn open(dir: impl AsRef<Path>) -> Result<Engine> {
         let dir = dir.as_ref().to_path_buf();
-        let man_path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&man_path)
-            .with_context(|| format!("reading {man_path:?} — run `make artifacts` first"))?;
-        let json = Json::parse(&text).map_err(|e| anyhow!("manifest.json: {e}"))?;
-        let mut meta = BTreeMap::new();
-        let obj = json.as_obj().ok_or_else(|| anyhow!("manifest not an object"))?;
-        for (name, m) in obj {
-            let shape = m
-                .get("shape")
-                .and_then(|s| s.as_arr())
-                .map(|a| a.iter().filter_map(|v| v.as_f64()).map(|v| v as usize).collect())
-                .unwrap_or_default();
-            meta.insert(
-                name.clone(),
-                ArtifactMeta {
-                    name: name.clone(),
-                    kind: m
-                        .get("kind")
-                        .and_then(|v| v.as_str())
-                        .unwrap_or("unknown")
-                        .to_string(),
-                    file: dir.join(m.get("file").and_then(|v| v.as_str()).unwrap_or("")),
-                    shape,
-                    flops_per_cell: m.get("flops_per_cell").and_then(|v| v.as_f64()),
-                    vmem_bytes_per_block: m.get("vmem_bytes_per_block").and_then(|v| v.as_f64()),
-                    operator: m.get("operator").and_then(|v| v.as_str()).map(String::from),
-                    iters: m.get("iters").and_then(|v| v.as_f64()).map(|v| v as usize),
-                },
-            );
-        }
+        let meta = read_manifest(&dir)?;
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
         Ok(Engine {
-            client,
             dir,
             meta,
+            client,
             compiled: BTreeMap::new(),
         })
     }
 
+    /// Open the artifacts directory (reads `manifest.json`). Without the
+    /// `pjrt` feature the registry lists and inspects artifacts but
+    /// cannot execute them.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn open(dir: impl AsRef<Path>) -> Result<Engine> {
+        let dir = dir.as_ref().to_path_buf();
+        let meta = read_manifest(&dir)?;
+        Ok(Engine { dir, meta })
+    }
+
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        #[cfg(feature = "pjrt")]
+        {
+            self.client.platform_name()
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            "unavailable (rebuild with --features pjrt)".to_string()
+        }
     }
     pub fn artifact_names(&self) -> Vec<&str> {
         self.meta.keys().map(|s| s.as_str()).collect()
@@ -95,6 +128,7 @@ impl Engine {
     }
 
     /// Compile (once) and cache the named artifact.
+    #[cfg(feature = "pjrt")]
     pub fn load(&mut self, name: &str) -> Result<()> {
         if self.compiled.contains_key(name) {
             return Ok(());
@@ -119,9 +153,20 @@ impl Engine {
         Ok(())
     }
 
+    /// Compile (once) and cache the named artifact — unavailable without
+    /// the `pjrt` feature.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        self.meta
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?;
+        bail!("artifact `{name}` cannot be executed: built without the `pjrt` feature")
+    }
+
     /// Execute the named artifact on f32 input buffers (shapes from the
     /// manifest or caller-provided). Returns the flattened f32 outputs of
     /// the result tuple. Host wall time is measured by the caller.
+    #[cfg(feature = "pjrt")]
     pub fn execute_f32(
         &mut self,
         name: &str,
@@ -158,6 +203,18 @@ impl Engine {
             bail!("empty result tuple from {name}");
         }
         Ok(out)
+    }
+
+    /// Execute the named artifact — unavailable without the `pjrt`
+    /// feature; fails with the same artifact-existence checks.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn execute_f32(
+        &mut self,
+        name: &str,
+        _inputs: &[(&[f32], &[usize])],
+    ) -> Result<Vec<Vec<f32>>> {
+        self.load(name)?;
+        unreachable!("load always errors without the pjrt feature")
     }
 
     /// Run one LBM step artifact: `f` is the flattened (19, N, N, N) PDF
@@ -223,6 +280,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg(feature = "pjrt")]
     fn lbm_step_executes_and_preserves_mass() {
         if !have_artifacts() {
             eprintln!("skipping: artifacts not built");
@@ -259,6 +317,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg(feature = "pjrt")]
     fn rve_cg_executes_and_converges() {
         if !have_artifacts() {
             eprintln!("skipping: artifacts not built");

@@ -279,6 +279,59 @@ mod tests {
     }
 
     #[test]
+    fn line_protocol_negative_timestamp_roundtrip() {
+        // timestamps are ns relative to the campaign epoch; pre-epoch
+        // imports (e.g. backfilled history) are legitimately negative
+        let p = Point::new("m", -1_500_000_000).field("v", 1.0);
+        let line = p.to_line();
+        assert!(line.ends_with(" -1500000000"));
+        assert_eq!(Point::parse_line(&line).unwrap(), p);
+        assert_eq!(Point::parse_line("m v=1 -1").unwrap().ts, -1);
+    }
+
+    #[test]
+    fn line_protocol_escaped_commas_spaces_equals_everywhere() {
+        // every syntactic position that the wire format delimits:
+        // measurement, tag key, tag value, field key — with every special
+        let p = Point::new("mea,su re=ment", 7)
+            .tag("tag,key with=all", "va,l ue=x")
+            .tag("plain", "v")
+            .field("fie,ld key=f", -2.5)
+            .field("g", 1e-7);
+        let q = Point::parse_line(&p.to_line())
+            .unwrap_or_else(|e| panic!("{e}: {}", p.to_line()));
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn line_protocol_backslash_tails_roundtrip() {
+        // trailing and doubled backslashes must survive the escape layer
+        let p = Point::new("m\\", 1)
+            .tag("k\\\\", "v\\")
+            .field("f\\", 3.0);
+        let q = Point::parse_line(&p.to_line()).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn line_protocol_extreme_field_values_roundtrip() {
+        // Rust's f64 Display prints the shortest representation that
+        // parses back exactly, so numeric round-trips must be lossless
+        for v in [
+            0.1,
+            -0.30000000000000004,
+            1.7976931348623157e308,
+            5e-324,
+            -1234567890.123456,
+            0.0,
+        ] {
+            let p = Point::new("m", 9).field("v", v);
+            let q = Point::parse_line(&p.to_line()).unwrap();
+            assert_eq!(p, q, "value {v:e}");
+        }
+    }
+
+    #[test]
     fn parse_rejects_malformed() {
         assert!(Point::parse_line("nofields 123").is_err());
         assert!(Point::parse_line("m f=1 notanumber").is_err());

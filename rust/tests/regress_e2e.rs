@@ -1,0 +1,219 @@
+//! End-to-end tests of the regress:: loop: a planted waLBerla regression
+//! flows commit -> pipeline -> TSDB -> detector -> alert -> bisection,
+//! exactly the path `cbench pipeline --inject-regression` +
+//! `cbench regress <detect|bisect>` drives from the CLI.
+
+use cbench::coordinator::{
+    detect_regressions, walberla_pipeline::walberla_pipeline_jobs, CbSystem, PreparedJob,
+};
+use cbench::regress::{bisect_pipeline, AlertBook, Detector, Direction, Policy};
+use cbench::tsdb::{Db, Point};
+use cbench::vcs::{PushEvent, Repository};
+
+const N_COMMITS: usize = 8;
+const BAD_AT: usize = 5; // 1-based: commit #5 plants the regression
+
+/// The same deterministic history `cbench pipeline --commits 8
+/// --inject-regression 5` builds.
+fn history() -> (Repository, Vec<PushEvent>) {
+    let mut repo = Repository::new("walberla");
+    let mut events = Vec::new();
+    for i in 0..N_COMMITS {
+        let ev = if i + 1 == BAD_AT {
+            repo.commit_change(
+                "master",
+                "dev",
+                &format!("change #{i} (kernel regen, perf bug)"),
+                i as f64 * 60.0,
+                "benchmark.cfg",
+                "lbm_efficiency_penalty = 0.15\n",
+            )
+        } else {
+            repo.commit_change(
+                "master",
+                "dev",
+                &format!("change #{i}"),
+                i as f64 * 60.0,
+                "src/kernel.c",
+                &format!("// rev {i}\n"),
+            )
+        };
+        events.push(ev);
+    }
+    (repo, events)
+}
+
+/// The icx36 slice of the waLBerla matrix — 4 collision operators +
+/// FSLBM, enough to exercise detection without the full 55-job fan-out.
+fn icx36_jobs(repo: &Repository, commit: &str) -> Vec<PreparedJob> {
+    walberla_pipeline_jobs(repo, commit)
+        .into_iter()
+        .filter(|j| j.ci.get("HOST") == Some("icx36"))
+        .collect()
+}
+
+#[test]
+fn injected_regression_detected_with_confidence_and_suspect_commit() {
+    let (repo, events) = history();
+    let mut cb = CbSystem::new();
+    for (i, ev) in events.iter().enumerate() {
+        let r = cb
+            .execute_pipeline(ev, true, icx36_jobs(&repo, &ev.commit_id), "lbm")
+            .unwrap();
+        // the coordinator's post-upload hook opens the alerts exactly at
+        // the injected commit, not before
+        if i + 1 < BAD_AT {
+            assert_eq!(r.regressions.opened, 0, "pipeline {}", i + 1);
+        } else if i + 1 == BAD_AT {
+            assert_eq!(r.regressions.opened, 4, "one alert per collision operator");
+        }
+    }
+    let bad_short = &events[BAD_AT - 1].commit_id[..8];
+
+    // detector over the final TSDB: all four series still flagged, each
+    // locating the injected commit via the CUSUM split
+    let findings = Detector::with_default_policies().detect(&cb.db);
+    assert_eq!(findings.len(), 4);
+    for f in &findings {
+        assert!(f.rel_change < -0.10, "{}: rel {}", f.series, f.rel_change);
+        assert!(f.confidence > 0.8, "{}: conf {}", f.series, f.confidence);
+        assert!(f.best_p().unwrap() < 0.05, "{}", f.series);
+        assert_eq!(
+            f.suspect_commit.as_deref(),
+            Some(bad_short),
+            "{} suspects the wrong commit",
+            f.series
+        );
+    }
+
+    // alert book round-trips through JSON with the suspect commit intact
+    let path = std::env::temp_dir().join("cbench_regress_e2e_alerts.json");
+    cb.alerts.save(&path).unwrap();
+    let book = AlertBook::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(book.active().len(), 4);
+    assert!(book
+        .active()
+        .iter()
+        .all(|a| a.suspect_commit.as_deref() == Some(bad_short)));
+
+    // the legacy API still answers over the same data (older window=1
+    // semantics: by commit 8 the drop is 3 pipelines old, so clean)
+    let legacy = detect_regressions(&cb.db, "lbm", "mlups", &["case", "collision_op"], 0.1, true);
+    assert!(legacy.is_empty());
+}
+
+#[test]
+fn bisection_pins_injected_commit_with_log_runs() {
+    let (repo, events) = history();
+    // an alert for the srt series, as detection would produce it
+    let mut cb_hist = CbSystem::new();
+    for ev in &events {
+        cb_hist
+            .execute_pipeline(ev, true, icx36_jobs(&repo, &ev.commit_id), "lbm")
+            .unwrap();
+    }
+    let alert = cb_hist
+        .alerts
+        .active()
+        .into_iter()
+        .find(|a| a.series.contains("collision_op=srt"))
+        .expect("srt alert open")
+        .clone();
+
+    let mut cb = CbSystem::new();
+    let report = bisect_pipeline(
+        &mut cb,
+        &repo,
+        "master",
+        &events.first().unwrap().commit_id,
+        &events.last().unwrap().commit_id,
+        "lbm",
+        "mlups",
+        &alert.group,
+        Direction::HigherIsBetter,
+        0.08,
+        |r, c| icx36_jobs(r, c),
+    )
+    .unwrap();
+
+    assert_eq!(
+        report.first_bad.as_deref(),
+        Some(events[BAD_AT - 1].commit_id.as_str()),
+        "bisection must pin commit #{BAD_AT}"
+    );
+    assert_eq!(report.candidates, N_COMMITS - 1);
+    assert!(
+        report.pipeline_runs < report.linear_runs,
+        "binary search used {} runs, linear needs {}",
+        report.pipeline_runs,
+        report.linear_runs
+    );
+}
+
+#[test]
+fn shim_keeps_legacy_semantics_while_detector_sees_history() {
+    // series where the drop happened one pipeline *before* the latest:
+    // the legacy last-vs-prev check is blind, the windowed detector not
+    let mut db = Db::new();
+    for (i, v) in [1000.0, 1000.0, 1000.0, 1000.0, 840.0, 842.0].iter().enumerate() {
+        db.insert(
+            Point::new("lbm", i as i64 * 1_000_000_000)
+                .tag("case", "uniformgridcpu")
+                .tag("node", "icx36")
+                .tag("collision_op", "srt")
+                .field("mlups", *v),
+        );
+    }
+    let legacy = detect_regressions(&db, "lbm", "mlups", &["collision_op"], 0.1, true);
+    assert!(legacy.is_empty(), "legacy semantics: prev->last is only -0.2%");
+
+    let findings = Detector::with_default_policies().detect(&db);
+    assert_eq!(findings.len(), 1, "windowed detector sees the regime change");
+    assert!(findings[0].rel_change < -0.15);
+
+    // and the shim still fires on a fresh last-point drop, exactly like
+    // the seed behavior it wraps
+    db.insert(
+        Point::new("lbm", 6_000_000_000)
+            .tag("case", "uniformgridcpu")
+            .tag("node", "icx36")
+            .tag("collision_op", "srt")
+            .field("mlups", 600.0),
+    );
+    let legacy = detect_regressions(&db, "lbm", "mlups", &["collision_op"], 0.1, true);
+    assert_eq!(legacy.len(), 1);
+    assert_eq!(legacy[0].before, 842.0);
+    assert_eq!(legacy[0].after, 600.0);
+}
+
+#[test]
+fn custom_policy_watches_runtime_with_opposite_direction() {
+    // the UniformGrid jobs also report runtime (∝ 1/MLUPs, lower is
+    // better) — a custom policy over the time-like metric catches the
+    // same planted penalty with the opposite sign convention
+    let (repo, events) = history();
+    let mut cb = CbSystem::new();
+    for ev in &events {
+        cb.execute_pipeline(ev, true, icx36_jobs(&repo, &ev.commit_id), "lbm")
+            .unwrap();
+    }
+    let det = Detector::new().policy(
+        Policy::new("uniform-runtime", "lbm", "runtime")
+            .group_by(&["case", "node", "collision_op"])
+            .direction(Direction::LowerIsBetter)
+            .thresholds(0.05, 0.05, 0.5),
+    );
+    let findings = det.detect(&cb.db);
+    let uniform: Vec<_> = findings
+        .iter()
+        .filter(|f| f.series.contains("uniformgridcpu"))
+        .collect();
+    assert_eq!(uniform.len(), 4, "all four operators slowed down");
+    for f in uniform {
+        // 15% throughput penalty = 1/0.85 - 1 ≈ +17.6% runtime
+        assert!(f.rel_change > 0.15, "runtime rose: {}", f.rel_change);
+        assert_eq!(f.direction, Direction::LowerIsBetter);
+        assert!(f.confidence > 0.8);
+    }
+}
