@@ -12,22 +12,34 @@ use cbench::util::stats::Bench;
 
 /// Synthetic production-shaped TSDB: `series` series × `per_series`
 /// pipeline executions, ~8% of series carrying a planted 15% drop.
+/// Every live series reports at every pipeline trigger timestamp — the
+/// shape `coordinator::collect_pipeline` uploads, and the one the
+/// detector's `tail(n)` pushdown is bounded against.
 fn synthetic_db(series: usize, per_series: usize, seed: u64) -> Db {
     let mut rng = Rng::new(seed);
     let mut db = Db::new();
     let ops = ["srt", "trt", "mrt", "cumulant"];
-    for s in 0..series {
-        let node = format!("node{:02}", s / ops.len());
-        let op = ops[s % ops.len()];
-        let base = 400.0 + 50.0 * (s % 17) as f64;
-        let planted = rng.uniform() < 0.08;
-        let cp = per_series / 2 + rng.below(per_series / 3);
-        for t in 0..per_series {
-            let level = if planted && t >= cp { base * 0.85 } else { base };
+    // per-series personalities first ...
+    let params: Vec<(String, &str, f64, bool, usize)> = (0..series)
+        .map(|s| {
+            (
+                format!("node{:02}", s / ops.len()),
+                ops[s % ops.len()],
+                400.0 + 50.0 * (s % 17) as f64,
+                rng.uniform() < 0.08,
+                per_series / 2 + rng.below(per_series / 3),
+            )
+        })
+        .collect();
+    // ... then one upload wave per trigger, in time order (the appends hit
+    // the TSDB's fast path, like real pipeline uploads do)
+    for t in 0..per_series {
+        for (s, (node, op, base, planted, cp)) in params.iter().enumerate() {
+            let level = if *planted && t >= *cp { base * 0.85 } else { *base };
             db.insert(
-                Point::new("lbm", (s * per_series + t) as i64 * 1_000_000)
+                Point::new("lbm", t as i64 * 1_000_000_000)
                     .tag("case", "uniformgridcpu")
-                    .tag("node", &node)
+                    .tag("node", node)
                     .tag("collision_op", op)
                     .tag("commit", &format!("c{s:03}x{t:04}"))
                     .field("mlups", level * rng.jitter(0.01)),
@@ -63,6 +75,19 @@ fn main() {
     let mut b = Bench::new("detector_10k_points_20_series");
     let r = b.run(|| det.detect(&db_deep).len());
     println!("{}", r.report_throughput(10_000.0, "point"));
+
+    // tail(n) pushdown: the per-pipeline check must not grow with history
+    // length. Same series count, deepening history — since the detector
+    // queries `.tail(baseline+recent)` the cost per detect() stays flat
+    // instead of scaling with the full series (pre-pushdown behaviour).
+    println!("\n== detector cost vs history depth (tail pushdown) ==\n");
+    for per_series in [20usize, 200, 1000] {
+        let db = synthetic_db(100, per_series, 11);
+        let mut b = Bench::new(&format!("detect_100_series_x{per_series}_history"));
+        b.budget_secs = 2.0;
+        let r = b.run(|| det.detect(&db).len());
+        println!("{}   ({} points total)", r.report(), db.len());
+    }
 
     // statistical primitives on window-sized samples
     let mut rng = Rng::new(1);

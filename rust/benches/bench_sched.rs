@@ -1,0 +1,122 @@
+//! Scheduler + campaign benchmarks: the event engine's throughput, and
+//! the tentpole number — overlapped pipelines vs back-to-back sequential
+//! on the shared Testcluster, including the 80-job FE2TI matrix.
+//!
+//! `cargo bench --bench bench_sched`
+
+use cbench::cluster::nodes::catalogue;
+use cbench::coordinator::campaign::{
+    default_projects, run_campaign, CampaignConfig, CampaignProject, ProjectKind,
+};
+use cbench::coordinator::CbSystem;
+use cbench::sched::{JobOutcome, SimScheduler, SubmitSpec};
+use cbench::util::stats::Bench;
+
+fn main() {
+    println!("== bench_sched: event-driven scheduler + campaign overlap ==\n");
+
+    // event-engine throughput: 2000 jobs, 2 owners, mixed priorities
+    let mut b = Bench::new("sched_2000_jobs_event_engine");
+    b.budget_secs = 2.0;
+    let r = b.run(|| {
+        let mut s =
+            SimScheduler::new(catalogue().into_iter().filter(|n| n.testcluster).collect());
+        let hosts: Vec<String> = s.nodes().map(|n| n.host.to_string()).collect();
+        for i in 0..2000 {
+            s.submit(
+                SubmitSpec::new(&format!("j{i}"), &hosts[i % hosts.len()])
+                    .owner(if i % 2 == 0 { "repo-a" } else { "repo-b" })
+                    .priority((i % 3) as i64),
+                Box::new(|_n, _t| JobOutcome {
+                    duration: 1.0,
+                    stdout: String::new(),
+                    exit_code: 0,
+                }),
+            )
+            .unwrap();
+        }
+        s.run_until_idle().len()
+    });
+    println!("{}", r.report_throughput(2000.0, "job"));
+
+    // the tentpole: 2 repos (waLBerla 55-job + FE2TI 100-job matrices) x
+    // 2 pushes, every pipeline overlapped on one scheduler — simulated
+    // makespan vs the back-to-back sequential baseline
+    println!("\n== campaign overlap vs sequential (simulated time) ==\n");
+    let t = std::time::Instant::now();
+    let mut cb = CbSystem::new();
+    let mut projects = default_projects(2); // walberla-0 + fe2ti-1
+    let out = run_campaign(
+        &mut cb,
+        &mut projects,
+        &CampaignConfig { pushes: 2, inject_at: 0, penalty: 0.0, seed: 1 },
+    )
+    .unwrap();
+    println!(
+        "2 repos x 2 pushes: {} pipelines / {} jobs (host time {})",
+        out.reports.len(),
+        out.total_jobs(),
+        cbench::util::fmt_secs(t.elapsed().as_secs_f64())
+    );
+    println!(
+        "  overlapped makespan   : {}",
+        cbench::util::fmt_secs(out.makespan)
+    );
+    println!(
+        "  sequential baseline   : {}",
+        cbench::util::fmt_secs(out.sequential_baseline)
+    );
+    println!(
+        "  overlap speedup       : {:.2}x {}",
+        out.overlap_speedup(),
+        if out.makespan < out.sequential_baseline {
+            "(makespan BELOW sequential)"
+        } else {
+            "(no win on this job set)"
+        }
+    );
+
+    // scaling the fleet: more repos sharing the same cluster
+    for repos in [4usize, 6] {
+        let mut cb = CbSystem::new();
+        let mut projects = default_projects(repos);
+        let out = run_campaign(
+            &mut cb,
+            &mut projects,
+            &CampaignConfig { pushes: 1, inject_at: 0, penalty: 0.0, seed: 1 },
+        )
+        .unwrap();
+        println!(
+            "{repos} repos x 1 push : makespan {} vs sequential {} ({:.2}x)",
+            cbench::util::fmt_secs(out.makespan),
+            cbench::util::fmt_secs(out.sequential_baseline),
+            out.overlap_speedup()
+        );
+    }
+
+    // priority lanes: a high-priority repo pushes into a busy cluster
+    let mut cb = CbSystem::new();
+    let mut projects = vec![
+        CampaignProject::new("bulk-0", ProjectKind::Walberla),
+        CampaignProject::new("bulk-1", ProjectKind::Walberla),
+        CampaignProject::new("urgent", ProjectKind::Walberla).priority(10),
+    ];
+    let out = run_campaign(
+        &mut cb,
+        &mut projects,
+        &CampaignConfig { pushes: 1, inject_at: 0, penalty: 0.0, seed: 2 },
+    )
+    .unwrap();
+    let urgent = out.reports.iter().find(|r| r.repo == "urgent").unwrap();
+    let bulk_wall: f64 = out
+        .reports
+        .iter()
+        .filter(|r| r.repo != "urgent")
+        .map(|r| r.duration)
+        .fold(0.0, f64::max);
+    println!(
+        "priority lane        : urgent pipeline wall {} vs slowest bulk {}",
+        cbench::util::fmt_secs(urgent.duration),
+        cbench::util::fmt_secs(bulk_wall)
+    );
+}

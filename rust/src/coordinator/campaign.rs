@@ -1,0 +1,382 @@
+//! Multi-repo campaign driver: many repositories, one Testcluster.
+//!
+//! The paper runs one pipeline at a time; exaCB (Badwaik et al.) and the
+//! NEST CB study (Vogelsang et al.) both show that continuous
+//! benchmarking at scale means *many* projects sharing one execution
+//! backend concurrently. This module is that coordinator:
+//!
+//! * a [`CampaignProject`] wraps a watched [`Repository`] plus its
+//!   pipeline flavour ([`ProjectKind`]) and scheduling priority;
+//! * [`run_campaign`] generates push events for every project, submits
+//!   **all** resulting pipelines onto the shared event-driven scheduler
+//!   (they interleave job-by-job as simulated time advances), then
+//!   collects them one at a time in completion order — TSDB upload +
+//!   regression detection stay serialized per pipeline, so alert
+//!   bookkeeping and TSDB contents are deterministic;
+//! * each pipeline's triggering commit gets to tune its own detection
+//!   (`regress.*` overrides in `benchmark.cfg`,
+//!   [`super::detector_with_config`]) before its results are judged;
+//! * the [`CampaignOutcome`] reports the overlapped **makespan** against
+//!   the *sequential back-to-back baseline* (the sum of every pipeline's
+//!   idle-cluster standalone duration — what the pre-`sched::` FIFO world
+//!   would have taken), plus one `campaign` TSDB point per pipeline for
+//!   the dashboards.
+
+use super::{BenchConfig, CbSystem, PipelineReport, PreparedJob};
+use crate::tsdb::Point;
+use crate::vcs::{PushEvent, Repository};
+
+/// Which benchmark pipeline a project runs on push.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProjectKind {
+    Fe2ti,
+    Walberla,
+}
+
+impl ProjectKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ProjectKind::Fe2ti => "fe2ti",
+            ProjectKind::Walberla => "walberla",
+        }
+    }
+    pub fn from_name(s: &str) -> Option<ProjectKind> {
+        match s {
+            "fe2ti" => Some(ProjectKind::Fe2ti),
+            "walberla" => Some(ProjectKind::Walberla),
+            _ => None,
+        }
+    }
+    /// TSDB measurement this pipeline uploads into.
+    pub fn measurement(self) -> &'static str {
+        match self {
+            ProjectKind::Fe2ti => "fe2ti",
+            ProjectKind::Walberla => "lbm",
+        }
+    }
+    /// The job matrix for one commit of `repo`.
+    pub fn jobs_for(self, repo: &Repository, commit_id: &str) -> Vec<PreparedJob> {
+        match self {
+            ProjectKind::Fe2ti => super::fe2ti_pipeline::fe2ti_pipeline_jobs(repo, commit_id),
+            ProjectKind::Walberla => {
+                super::walberla_pipeline::walberla_pipeline_jobs(repo, commit_id)
+            }
+        }
+    }
+    /// waLBerla reaches the HPC runner through the proxy-repo trigger API
+    /// (paper §4.5.2); FE2TI pushes directly.
+    pub fn via_trigger_api(self) -> bool {
+        matches!(self, ProjectKind::Walberla)
+    }
+}
+
+/// One watched repository in a campaign.
+#[derive(Debug)]
+pub struct CampaignProject {
+    /// Display/repo name; doubles as the fair-share owner and the `repo`
+    /// tag on every uploaded point.
+    pub name: String,
+    pub kind: ProjectKind,
+    /// Scheduling priority of this project's jobs (higher first).
+    pub priority: i64,
+    pub repo: Repository,
+}
+
+impl CampaignProject {
+    pub fn new(name: &str, kind: ProjectKind) -> CampaignProject {
+        CampaignProject {
+            name: name.to_string(),
+            kind,
+            priority: 0,
+            repo: Repository::new(name),
+        }
+    }
+    pub fn priority(mut self, p: i64) -> CampaignProject {
+        self.priority = p;
+        self
+    }
+}
+
+/// The stock campaign roster: `n` projects alternating waLBerla / FE2TI
+/// (two repos already mix an 11-node LBM matrix with the 3-node 100-job
+/// FE2TI matrix — the disjoint bottlenecks overlap scheduling feeds on).
+pub fn default_projects(n: usize) -> Vec<CampaignProject> {
+    (0..n)
+        .map(|i| {
+            let kind = if i % 2 == 0 {
+                ProjectKind::Walberla
+            } else {
+                ProjectKind::Fe2ti
+            };
+            CampaignProject::new(&format!("{}-{}", kind.name(), i), kind)
+        })
+        .collect()
+}
+
+/// Campaign parameters.
+#[derive(Debug, Clone)]
+pub struct CampaignConfig {
+    /// Push rounds: every project pushes once per round.
+    pub pushes: usize,
+    /// 1-based push round that plants the waLBerla kernel-regen
+    /// regression (`lbm_efficiency_penalty` in `benchmark.cfg`) into
+    /// every project; 0 = none. FE2TI pipelines ignore the knob, so in a
+    /// mixed campaign only the LBM series regress — the realistic shape.
+    pub inject_at: usize,
+    pub penalty: f64,
+    /// Salts the simulated commit contents: same seed + same projects →
+    /// identical commit chain, timeline and TSDB, byte for byte.
+    pub seed: u64,
+}
+
+impl Default for CampaignConfig {
+    fn default() -> CampaignConfig {
+        CampaignConfig {
+            pushes: 2,
+            inject_at: 0,
+            penalty: 0.15,
+            seed: 42,
+        }
+    }
+}
+
+/// Outcome of one campaign run.
+#[derive(Debug, Clone)]
+pub struct CampaignOutcome {
+    /// Per-pipeline reports, in collection (= completion) order.
+    pub reports: Vec<PipelineReport>,
+    /// Simulated wall-clock from first submission to last completion with
+    /// pipelines overlapped on the shared scheduler.
+    pub makespan: f64,
+    /// What the same job set costs run back-to-back, one pipeline at a
+    /// time on an idle cluster (Σ standalone durations) — the
+    /// pre-`sched::` execution model.
+    pub sequential_baseline: f64,
+}
+
+impl CampaignOutcome {
+    /// Sequential-over-overlapped ratio; > 1 means overlap won.
+    pub fn overlap_speedup(&self) -> f64 {
+        if self.makespan > 0.0 {
+            self.sequential_baseline / self.makespan
+        } else {
+            1.0
+        }
+    }
+    pub fn total_jobs(&self) -> usize {
+        self.reports.iter().map(|r| r.jobs_total).sum()
+    }
+    pub fn alerts_opened(&self) -> usize {
+        self.reports.iter().map(|r| r.regressions.opened).sum()
+    }
+}
+
+/// Run a campaign with the stock per-kind job matrices.
+pub fn run_campaign(
+    cb: &mut CbSystem,
+    projects: &mut [CampaignProject],
+    cfg: &CampaignConfig,
+) -> anyhow::Result<CampaignOutcome> {
+    run_campaign_with(cb, projects, cfg, |p, commit_id| {
+        p.kind.jobs_for(&p.repo, commit_id)
+    })
+}
+
+/// Run a campaign with a custom job-matrix provider (tests, downsized
+/// smoke runs). `jobs_for(project, commit_id)` is called once per push
+/// event, at submit time.
+pub fn run_campaign_with(
+    cb: &mut CbSystem,
+    projects: &mut [CampaignProject],
+    cfg: &CampaignConfig,
+    mut jobs_for: impl FnMut(&CampaignProject, &str) -> Vec<PreparedJob>,
+) -> anyhow::Result<CampaignOutcome> {
+    anyhow::ensure!(!projects.is_empty(), "campaign needs at least one project");
+    anyhow::ensure!(cfg.pushes > 0, "campaign needs at least one push round");
+    anyhow::ensure!(
+        cfg.inject_at <= cfg.pushes,
+        "--inject-regression {} is past the last push round ({})",
+        cfg.inject_at,
+        cfg.pushes
+    );
+    let t0 = cb.scheduler.now();
+
+    // --- push rounds: every project commits once per round ---
+    let mut events: Vec<(usize, PushEvent)> = Vec::new();
+    for r in 0..cfg.pushes {
+        for (pi, p) in projects.iter_mut().enumerate() {
+            let t = r as f64 * 60.0;
+            let ev = if cfg.inject_at > 0 && r + 1 == cfg.inject_at {
+                p.repo.commit_change(
+                    "master",
+                    "dev",
+                    &format!("push #{r} (kernel regen, perf bug)"),
+                    t,
+                    "benchmark.cfg",
+                    &format!("lbm_efficiency_penalty = {}\n", cfg.penalty),
+                )
+            } else {
+                p.repo.commit_change(
+                    "master",
+                    "dev",
+                    &format!("push #{r}"),
+                    t,
+                    "src/kernel.c",
+                    &format!("// seed {} rev {r}\n", cfg.seed),
+                )
+            };
+            events.push((pi, ev));
+        }
+    }
+
+    // --- submit phase: every pipeline goes onto the shared scheduler ---
+    let mut submitted: Vec<(u64, usize, PushEvent)> = Vec::new();
+    for (pi, ev) in &events {
+        let p = &projects[*pi];
+        let jobs = jobs_for(p, &ev.commit_id);
+        anyhow::ensure!(
+            !jobs.is_empty(),
+            "project `{}` produced no jobs for {}",
+            p.name,
+            &ev.commit_id[..8.min(ev.commit_id.len())]
+        );
+        let pid = cb.submit_pipeline(
+            ev,
+            p.kind.via_trigger_api(),
+            jobs,
+            p.kind.measurement(),
+            p.priority,
+        )?;
+        submitted.push((pid, *pi, ev.clone()));
+    }
+
+    // --- the overlap: one event queue drains all pipelines at once ---
+    cb.scheduler.run_until_idle();
+
+    // --- collect phase, serialized per pipeline in completion order ---
+    let mut order: Vec<(f64, u64, usize, PushEvent)> = submitted
+        .into_iter()
+        .map(|(pid, pi, ev)| {
+            (
+                cb.pipeline_finished_at(pid).unwrap_or(f64::MAX),
+                pid,
+                pi,
+                ev,
+            )
+        })
+        .collect();
+    order.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+
+    let mut reports = Vec::with_capacity(order.len());
+    for (_, pid, pi, ev) in order {
+        // the triggering commit tunes its own detection
+        let commit_cfg = BenchConfig::from_commit(&projects[pi].repo, &ev.commit_id);
+        cb.apply_regress_config(&commit_cfg);
+        let r = cb.collect_pipeline(pid)?;
+        // one campaign meta-point per pipeline for the dashboards
+        cb.db.insert(
+            Point::new("campaign", r.trigger_ts)
+                .tag("repo", &r.repo)
+                .tag("kind", projects[pi].kind.name())
+                .tag("commit", &r.commit_id[..8.min(r.commit_id.len())])
+                .field("duration", r.duration)
+                .field("standalone", r.standalone_duration)
+                .field("jobs", r.jobs_total as f64)
+                .field("failed", r.jobs_failed as f64)
+                .field("points", r.points_uploaded as f64),
+        );
+        reports.push(r);
+    }
+
+    let makespan = cb.scheduler.now() - t0;
+    let sequential_baseline = reports.iter().map(|r| r.standalone_duration).sum();
+    Ok(CampaignOutcome {
+        reports,
+        makespan,
+        sequential_baseline,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ci::CiJob;
+    use crate::sched::JobOutcome;
+
+    fn toy_jobs(tag: &str, spec: &[(&str, f64, usize)]) -> Vec<PreparedJob> {
+        let mut jobs = Vec::new();
+        for (host, dur, count) in spec {
+            for i in 0..*count {
+                let dur = *dur;
+                jobs.push(PreparedJob {
+                    ci: CiJob::new(&format!("{tag}-{host}-{i}"), "benchmark").var("HOST", host),
+                    payload: Box::new(move |_n, _t| JobOutcome {
+                        duration: dur,
+                        stdout: format!("TAG op=x\nMETRIC v={dur}\n"),
+                        exit_code: 0,
+                    }),
+                });
+            }
+        }
+        jobs
+    }
+
+    #[test]
+    fn campaign_overlaps_disjoint_bottlenecks() {
+        // alpha bottlenecks on icx36 (30 s), beta on rome1 (40 s):
+        // back-to-back = 70 s/push, overlapped = max(30, 45) per wave
+        let mut cb = CbSystem::new();
+        let mut projects = vec![
+            CampaignProject::new("alpha", ProjectKind::Walberla),
+            CampaignProject::new("beta", ProjectKind::Walberla),
+        ];
+        let cfg = CampaignConfig { pushes: 1, inject_at: 0, penalty: 0.0, seed: 1 };
+        let out = run_campaign_with(&mut cb, &mut projects, &cfg, |p, _c| {
+            if p.name == "alpha" {
+                toy_jobs("a", &[("icx36", 10.0, 3), ("rome1", 5.0, 1)])
+            } else {
+                toy_jobs("b", &[("rome1", 20.0, 2), ("skylakesp2", 8.0, 1)])
+            }
+        })
+        .unwrap();
+        assert_eq!(out.reports.len(), 2);
+        assert_eq!(out.total_jobs(), 7);
+        // standalone: alpha max(30, 5) = 30; beta max(40, 8) = 40
+        assert_eq!(out.sequential_baseline, 70.0);
+        // overlapped: rome1 carries 5 + 40 = 45, icx36 carries 30
+        assert_eq!(out.makespan, 45.0);
+        assert!(out.overlap_speedup() > 1.5);
+        // both repos tagged in the shared TSDB + campaign meta-points
+        assert_eq!(cb.db.tag_values("lbm", "repo"), vec!["alpha", "beta"]);
+        assert_eq!(cb.db.points("campaign").len(), 2);
+    }
+
+    #[test]
+    fn campaign_rejects_degenerate_configs() {
+        let mut cb = CbSystem::new();
+        let cfg = CampaignConfig::default();
+        let mut empty: Vec<CampaignProject> = Vec::new();
+        assert!(run_campaign(&mut cb, &mut empty, &cfg).is_err());
+        let mut projects = vec![CampaignProject::new("a", ProjectKind::Walberla)];
+        let bad = CampaignConfig { pushes: 0, ..CampaignConfig::default() };
+        assert!(run_campaign(&mut cb, &mut projects, &bad).is_err());
+        let bad = CampaignConfig { pushes: 2, inject_at: 3, ..CampaignConfig::default() };
+        assert!(run_campaign(&mut cb, &mut projects, &bad).is_err());
+    }
+
+    #[test]
+    fn default_projects_alternate_kinds() {
+        let ps = default_projects(4);
+        assert_eq!(ps.len(), 4);
+        assert_eq!(ps[0].kind, ProjectKind::Walberla);
+        assert_eq!(ps[1].kind, ProjectKind::Fe2ti);
+        assert_eq!(ps[2].kind, ProjectKind::Walberla);
+        assert_eq!(ps[0].name, "walberla-0");
+        assert_eq!(ps[1].name, "fe2ti-1");
+        // names are unique — they double as repo/owner identities
+        let mut names: Vec<&str> = ps.iter().map(|p| p.name.as_str()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), 4);
+    }
+}

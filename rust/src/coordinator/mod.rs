@@ -1,5 +1,7 @@
 //! The continuous-benchmarking coordinator: the paper's system
-//! contribution (§3–§4), wired end to end.
+//! contribution (§3–§4), wired end to end — and, since the `sched::`
+//! refactor, *overlapped*: many pipelines from many repositories share
+//! one Testcluster through a single event-driven scheduler.
 //!
 //! On every push to a watched repository the coordinator:
 //!
@@ -7,19 +9,34 @@
 //! 2. instantiates the benchmark job matrix — node × compiler × solver ×
 //!   parallelization for FE2TI, node × collision operator for waLBerla
 //!   (>80 jobs per FE2TI pipeline, like the paper),
-//! 3. assembles per-job batch scripts (Listing 1) and submits them to the
-//!   Slurm-like scheduler over the simulated Testcluster,
-//! 4. parses each job's output (likwid-style counters), uploads metric
-//!   points to the TSDB (fields) tagged with the run parameters (tags)
-//!   and the pipeline trigger time (timestamp),
-//! 5. archives raw artifacts as linked records in the Kadi4Mat-like store
-//!   (one collection per pipeline execution, Fig. 5),
-//! 6. refreshes the Grafana-like dashboards and the roofline plots.
+//! 3. **submit phase** ([`CbSystem::submit_pipeline`]): assembles per-job
+//!   batch scripts (Listing 1) and queues them on the event-driven
+//!   [`crate::sched::SimScheduler`], tagged with the pipeline id (batch),
+//!   the repository (fair-share owner) and a priority — jobs of *other*
+//!   in-flight pipelines interleave on the same nodes as simulated time
+//!   advances,
+//! 4. **collect phase** ([`CbSystem::collect_pipeline`]): consumes the
+//!   pipeline's completion events, parses each job's output (likwid-style
+//!   counters), uploads metric points to the TSDB (fields) tagged with
+//!   the run parameters + repository (tags) and the pipeline trigger time
+//!   (timestamp), archives raw artifacts as linked records in the
+//!   Kadi4Mat-like store (one collection per pipeline execution, Fig. 5),
+//!   and runs the statistical regression check — upload + detection are
+//!   serialized per pipeline, which keeps alert bookkeeping and TSDB
+//!   ordering deterministic even when execution overlapped,
+//! 5. refreshes the Grafana-like dashboards and the roofline plots.
 //!
-//! Build configuration lives in the repository tree (`benchmark.cfg`), so
-//! *commits change measured performance* — the mechanism behind the
-//! paper's Fig. 10b BLAS-fix story and the regression-detection example.
+//! [`CbSystem::execute_pipeline`] remains as the submit-then-collect
+//! shim (the old synchronous single-pipeline call); the multi-repo
+//! campaign driver ([`campaign::run_campaign`]) keeps several pipelines
+//! in flight at once and collects them in completion order.
+//!
+//! Build *and detection* configuration live in the repository tree
+//! (`benchmark.cfg`), so commits change both measured performance (the
+//! Fig. 10b BLAS-fix story) and how suspicious their own pipelines are
+//! (`regress.<policy>.<knob>` overrides, [`detector_with_config`]).
 
+pub mod campaign;
 pub mod fe2ti_pipeline;
 pub mod scaling_pipeline;
 pub mod walberla_pipeline;
@@ -29,7 +46,8 @@ use crate::cluster::machinestate::machine_state;
 use crate::cluster::nodes::catalogue;
 use crate::datastore::{DataStore, Id};
 use crate::regress::{AlertBook, Detector, Direction, IngestSummary, Policy};
-use crate::slurm::{JobSpec, Payload, Scheduler};
+use crate::sched::{JobState, Payload, SimScheduler, SubmitSpec};
+use crate::slurm::JobSpec;
 use crate::tsdb::{Db, Point};
 use crate::vcs::{PushEvent, Repository};
 use std::collections::BTreeMap;
@@ -67,6 +85,53 @@ impl BenchConfig {
     pub fn get_f64(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
+}
+
+/// Per-policy detection overrides from a commit's `benchmark.cfg`
+/// (ROADMAP: "thresholds/windows in-repo, so commits can tune their own
+/// detection"). Recognized keys, all optional, per policy name:
+///
+/// ```text
+/// regress.<policy>.min_rel_change  = 0.12
+/// regress.<policy>.alpha           = 0.01
+/// regress.<policy>.min_confidence  = 0.6
+/// regress.<policy>.baseline_window = 6
+/// regress.<policy>.recent_window   = 2
+/// regress.<policy>.changepoint     = false
+/// regress.<policy>.direction       = lower-is-better
+/// ```
+///
+/// Returns a detector cloned from `base` with the overrides applied —
+/// the base stays pristine, so the next commit without overrides reverts
+/// to stock sensitivity.
+pub fn detector_with_config(base: &Detector, cfg: &BenchConfig) -> Detector {
+    let mut det = base.clone();
+    for p in &mut det.policies {
+        let name = p.name.clone();
+        let key = move |knob: &str| format!("regress.{name}.{knob}");
+        if let Some(v) = cfg.get(&key("min_rel_change")).and_then(|s| s.parse::<f64>().ok()) {
+            p.min_rel_change = v;
+        }
+        if let Some(v) = cfg.get(&key("alpha")).and_then(|s| s.parse::<f64>().ok()) {
+            p.alpha = v;
+        }
+        if let Some(v) = cfg.get(&key("min_confidence")).and_then(|s| s.parse::<f64>().ok()) {
+            p.min_confidence = v;
+        }
+        if let Some(v) = cfg.get(&key("baseline_window")).and_then(|s| s.parse::<usize>().ok()) {
+            p.baseline_window = v.max(1);
+        }
+        if let Some(v) = cfg.get(&key("recent_window")).and_then(|s| s.parse::<usize>().ok()) {
+            p.recent_window = v.max(1);
+        }
+        if let Some(v) = cfg.get(&key("changepoint")) {
+            p.use_changepoint = matches!(v, "true" | "on" | "1");
+        }
+        if let Some(d) = cfg.get(&key("direction")).and_then(Direction::from_name) {
+            p.direction = d;
+        }
+    }
+    det
 }
 
 /// One executed benchmark job's parsed metrics.
@@ -118,6 +183,8 @@ pub struct PreparedJob {
 #[derive(Debug, Clone)]
 pub struct PipelineReport {
     pub pipeline_id: u64,
+    /// Repository the pipeline ran for (the fair-share owner).
+    pub repo: String,
     pub commit_id: String,
     pub jobs_total: usize,
     pub jobs_completed: usize,
@@ -125,25 +192,56 @@ pub struct PipelineReport {
     pub points_uploaded: usize,
     pub records_created: usize,
     pub collection: Id,
-    /// Simulated wall time the whole pipeline took on the cluster.
+    /// TSDB timestamp (ns) this pipeline's points were uploaded under.
+    pub trigger_ts: i64,
+    /// Simulated wall time from submission to the last job's completion —
+    /// under overlap this includes time spent interleaved with other
+    /// pipelines' jobs.
     pub duration: f64,
+    /// What this pipeline would have taken alone on an idle cluster: the
+    /// heaviest per-node sum of its own job runtimes. The back-to-back
+    /// sequential baseline of a campaign is the sum of these.
+    pub standalone_duration: f64,
+    /// Simulated time the pipeline's last job finished.
+    pub finished_at: f64,
     /// Outcome of the post-upload regression check (alerts opened /
     /// re-confirmed / auto-resolved by this execution).
     pub regressions: IngestSummary,
 }
 
+/// A pipeline whose jobs are on the scheduler but whose results have not
+/// been collected yet (between the submit and collect phases).
+pub struct PendingPipeline {
+    pub pipeline_id: u64,
+    pub event: PushEvent,
+    pub via_trigger_api: bool,
+    pub measurement: String,
+    pub trigger_ts: i64,
+    pub submitted_at: f64,
+    /// (scheduler job id, CI job spec) per submitted job.
+    pub jobs: Vec<(u64, CiJob)>,
+}
+
 /// The whole CB installation.
 pub struct CbSystem {
-    pub scheduler: Scheduler,
+    /// The shared event-driven scheduler all pipelines interleave on.
+    pub scheduler: SimScheduler,
     pub db: Db,
     pub store: DataStore,
     pub runner: Runner,
     pub pipelines: PipelineFactory,
     pub executed: Vec<PipelineReport>,
-    /// Statistical regression detector run after every upload.
+    /// Statistical regression detector run after every upload. To add or
+    /// change policies durably use [`CbSystem::install_detector`] —
+    /// direct assignment is overwritten by the next per-commit
+    /// [`CbSystem::apply_regress_config`].
     pub detector: Detector,
     /// Durable alert lifecycle fed by the detector.
     pub alerts: AlertBook,
+    /// Pristine policies that per-commit `regress.*` overrides derive from.
+    base_detector: Detector,
+    /// Pipelines submitted but not yet collected.
+    in_flight: Vec<PendingPipeline>,
     root_collection: Id,
     /// Collection grouping the archived regression alerts (lazy).
     alerts_collection: Option<Id>,
@@ -161,15 +259,20 @@ impl CbSystem {
     pub fn new() -> CbSystem {
         let mut store = DataStore::new();
         let root_collection = store.create_collection("cb-project", "CB project-level collection");
+        let detector = Detector::with_default_policies();
         CbSystem {
-            scheduler: Scheduler::new(catalogue().into_iter().filter(|n| n.testcluster).collect()),
+            scheduler: SimScheduler::new(
+                catalogue().into_iter().filter(|n| n.testcluster).collect(),
+            ),
             db: Db::new(),
             store,
             runner: Runner::hpc(),
             pipelines: PipelineFactory::new(),
             executed: Vec::new(),
-            detector: Detector::with_default_policies(),
+            base_detector: detector.clone(),
+            detector,
             alerts: AlertBook::new(),
+            in_flight: Vec::new(),
             root_collection,
             alerts_collection: None,
             trigger_clock: 0,
@@ -192,13 +295,46 @@ impl CbSystem {
         self.trigger_clock = self.trigger_clock.max(max_ts);
     }
 
+    /// Install a new detector as the *base* policy set: per-commit
+    /// `regress.*` overrides ([`CbSystem::apply_regress_config`]) are
+    /// derived from it, so custom policies installed here survive
+    /// campaign/pipeline collects. (Assigning to the `detector` field
+    /// directly is transient — the next `apply_regress_config` replaces
+    /// it with a fresh derivation from the base.)
+    pub fn install_detector(&mut self, det: Detector) {
+        self.base_detector = det.clone();
+        self.detector = det;
+    }
+
+    /// Swap in the base policies overridden by a commit's
+    /// `regress.<policy>.<knob>` entries (see [`detector_with_config`]).
+    /// Call with the triggering commit's [`BenchConfig`] before collecting
+    /// its pipeline; a config without overrides restores the base
+    /// sensitivity ([`CbSystem::install_detector`] sets the base).
+    pub fn apply_regress_config(&mut self, cfg: &BenchConfig) {
+        self.detector = detector_with_config(&self.base_detector, cfg);
+    }
+
     /// Run the regression detector for `measurement` against the current
     /// TSDB, fold the findings into the alert book, and archive any newly
     /// opened alerts as datastore records linked to `collection` (the
     /// pipeline execution that surfaced them). Called by
-    /// [`CbSystem::execute_pipeline`] after every upload.
-    pub fn check_regressions(&mut self, measurement: &str, collection: Id) -> IngestSummary {
-        let (findings, evaluated) = self.detector.detect_measurement(&self.db, measurement);
+    /// [`CbSystem::collect_pipeline`] after every upload.
+    ///
+    /// `owner_repo` scopes the check to that repository's series (for
+    /// policies grouped by `repo`): on a shared Testcluster a commit's
+    /// tuned `regress.*` config judges only its own repo, and co-tenant
+    /// trigger timestamps don't shrink its detection window.
+    pub fn check_regressions(
+        &mut self,
+        measurement: &str,
+        collection: Id,
+        owner_repo: Option<&str>,
+    ) -> IngestSummary {
+        let scope: Vec<(&str, &str)> = owner_repo.iter().map(|r| ("repo", *r)).collect();
+        let (findings, evaluated) =
+            self.detector
+                .detect_measurement_scoped(&self.db, measurement, &scope);
         let now = self.trigger_clock;
         let summary = self.alerts.ingest(&findings, &evaluated, now);
         // attribute exactly the alerts this execution opened to its
@@ -225,21 +361,25 @@ impl CbSystem {
         summary
     }
 
-    /// Execute a pipeline: submit all jobs, wait, parse, upload, archive.
-    pub fn execute_pipeline(
+    /// **Submit phase**: validate and queue a pipeline's jobs on the
+    /// shared event scheduler without waiting for them. Jobs carry the
+    /// pipeline id as their batch, the repository as their fair-share
+    /// owner, and `priority` for inter-repository precedence. Returns the
+    /// pipeline id to pass to [`CbSystem::collect_pipeline`].
+    pub fn submit_pipeline(
         &mut self,
         event: &PushEvent,
         via_trigger_api: bool,
         jobs: Vec<PreparedJob>,
         measurement: &str,
-    ) -> anyhow::Result<PipelineReport> {
+        priority: i64,
+    ) -> anyhow::Result<u64> {
         self.trigger_clock += 1_000_000_000; // pipelines 1 s apart
         let trigger_ts = self.trigger_clock;
 
-        let mut ci_jobs = Vec::new();
-        let mut submitted = Vec::new();
-        let start = self.scheduler.now();
-        for j in jobs {
+        // validate the whole matrix before anything is queued: a rejected
+        // job must not leave half a pipeline on the cluster
+        for j in &jobs {
             anyhow::ensure!(
                 self.runner.accepts(&j.ci),
                 "no runner serves job `{}` tags {:?}",
@@ -249,32 +389,88 @@ impl CbSystem {
             let host = j
                 .ci
                 .get("HOST")
-                .ok_or_else(|| anyhow::anyhow!("job `{}` missing HOST", j.ci.name))?
-                .to_string();
-            let spec = JobSpec {
-                name: j.ci.name.clone(),
-                nodelist: host,
-                timelimit_min: j.ci.timelimit_min(),
-            };
+                .ok_or_else(|| anyhow::anyhow!("job `{}` missing HOST", j.ci.name))?;
+            anyhow::ensure!(
+                self.scheduler.has_node(host),
+                "sbatch: invalid nodelist `{host}` (unknown host)"
+            );
+        }
+
+        let ci_jobs: Vec<CiJob> = jobs.iter().map(|j| j.ci.clone()).collect();
+        let pipeline: Pipeline = self.pipelines.create(event.clone(), via_trigger_api, ci_jobs);
+        let submitted_at = self.scheduler.now();
+        let mut submitted = Vec::with_capacity(jobs.len());
+        for j in jobs {
+            let host = j.ci.get("HOST").expect("validated above").to_string();
+            let spec = SubmitSpec::new(&j.ci.name, &host)
+                .timelimit(j.ci.timelimit_min())
+                .priority(priority)
+                .owner(&event.repo)
+                .batch(pipeline.id);
             let id = self
                 .scheduler
-                .sbatch(spec, j.payload)
+                .submit(spec, j.payload)
                 .map_err(|e| anyhow::anyhow!(e))?;
-            submitted.push((id, j.ci.clone()));
-            ci_jobs.push(j.ci);
+            submitted.push((id, j.ci));
         }
-        let pipeline: Pipeline = self.pipelines.create(event.clone(), via_trigger_api, ci_jobs);
+        self.in_flight.push(PendingPipeline {
+            pipeline_id: pipeline.id,
+            event: event.clone(),
+            via_trigger_api,
+            measurement: measurement.to_string(),
+            trigger_ts,
+            submitted_at,
+            jobs: submitted,
+        });
+        Ok(pipeline.id)
+    }
 
-        // sbatch --wait
-        self.scheduler.wait_all();
+    /// Pipelines submitted but not yet collected.
+    pub fn in_flight(&self) -> &[PendingPipeline] {
+        &self.in_flight
+    }
+
+    /// Simulated time an in-flight pipeline's last job finished (its jobs
+    /// may still be queued/running: unfinished jobs don't count). `None`
+    /// for ids that are not in flight.
+    pub fn pipeline_finished_at(&self, pipeline_id: u64) -> Option<f64> {
+        self.in_flight
+            .iter()
+            .find(|p| p.pipeline_id == pipeline_id)
+            .map(|p| {
+                p.jobs
+                    .iter()
+                    .filter_map(|(id, _)| self.scheduler.job(*id).and_then(|j| j.end_time))
+                    .fold(p.submitted_at, f64::max)
+            })
+    }
+
+    /// **Collect phase**: advance the shared scheduler until every job of
+    /// this pipeline completed (other pipelines' events are processed as
+    /// simulated time passes them), then parse, upload, archive and run
+    /// the regression check. Upload + detection are serialized per
+    /// pipeline — callers collecting several overlapped pipelines do so
+    /// one at a time, in any order.
+    pub fn collect_pipeline(&mut self, pipeline_id: u64) -> anyhow::Result<PipelineReport> {
+        let pos = self
+            .in_flight
+            .iter()
+            .position(|p| p.pipeline_id == pipeline_id)
+            .ok_or_else(|| anyhow::anyhow!("pipeline #{pipeline_id} is not in flight"))?;
+        let pending = self.in_flight.remove(pos);
+        let ids: Vec<u64> = pending.jobs.iter().map(|(id, _)| *id).collect();
+        self.scheduler.run_until_done(&ids);
+
+        let event = &pending.event;
+        let trigger_ts = pending.trigger_ts;
 
         // per-execution collection (Fig. 5)
         let coll = self.store.create_collection(
-            &format!("pipeline-{}", pipeline.id),
+            &format!("pipeline-{}", pending.pipeline_id),
             &format!(
                 "{} pipeline #{} @ {}",
                 event.repo,
-                pipeline.id,
+                pending.pipeline_id,
                 &event.commit_id[..8.min(event.commit_id.len())]
             ),
         );
@@ -286,13 +482,19 @@ impl CbSystem {
         let mut failed = 0;
         let mut points = 0;
         let mut records = 0;
-        for (slurm_id, ci) in &submitted {
-            let job = self.scheduler.job(*slurm_id).expect("job exists");
+        let mut last_end = pending.submitted_at;
+        let mut node_load: BTreeMap<String, f64> = BTreeMap::new();
+        for (sched_id, ci) in &pending.jobs {
+            let job = self.scheduler.job(*sched_id).expect("job exists");
             let state = job.state;
             let log = job.log.clone();
             let node_host = job.spec.nodelist.clone();
+            if let (Some(start), Some(end)) = (job.start_time, job.end_time) {
+                last_end = last_end.max(end);
+                *node_load.entry(node_host.clone()).or_insert(0.0) += end - start;
+            }
             let node = self.scheduler.node(&node_host).unwrap().clone();
-            if state == crate::slurm::JobState::Completed {
+            if state == JobState::Completed {
                 completed += 1;
             } else {
                 failed += 1;
@@ -301,9 +503,12 @@ impl CbSystem {
             // --- parse + upload (fields & tags, trigger time as ts) ---
             let metrics = parse_job_output(&ci.name, &node_host, &log);
             if !metrics.fields.is_empty() {
-                let mut p = Point::new(measurement, trigger_ts);
+                let mut p = Point::new(&pending.measurement, trigger_ts);
                 p.tags.insert("node".into(), node_host.clone());
-                p.tags.insert("commit".into(), event.commit_id[..8].to_string());
+                p.tags.insert(
+                    "commit".into(),
+                    event.commit_id[..8.min(event.commit_id.len())].to_string(),
+                );
                 p.tags.insert("repo".into(), event.repo.clone());
                 p.tags.insert("branch".into(), event.branch.clone());
                 for (k, v) in &metrics.tags {
@@ -320,7 +525,7 @@ impl CbSystem {
             let rid_job = self
                 .store
                 .create_record(
-                    &format!("p{}-job-{}", pipeline.id, ci.name),
+                    &format!("p{}-job-{}", pending.pipeline_id, ci.name),
                     &format!("job log {}", ci.name),
                     "job-log",
                 )
@@ -331,7 +536,7 @@ impl CbSystem {
             let rid_perf = self
                 .store
                 .create_record(
-                    &format!("p{}-perf-{}", pipeline.id, ci.name),
+                    &format!("p{}-perf-{}", pending.pipeline_id, ci.name),
                     &format!("likwid output {}", ci.name),
                     "likwid-output",
                 )
@@ -340,7 +545,7 @@ impl CbSystem {
             let rid_ms = self
                 .store
                 .create_record(
-                    &format!("p{}-ms-{}", pipeline.id, ci.name),
+                    &format!("p{}-ms-{}", pending.pipeline_id, ci.name),
                     &format!("machinestate {}", ci.name),
                     "machinestate",
                 )
@@ -357,23 +562,45 @@ impl CbSystem {
             self.store.link(rid_ms, rid_job, "recorded on").ok();
         }
 
-        // --- §4.4 closing the loop: statistical regression check ---
-        let regressions = self.check_regressions(measurement, coll);
+        // --- §4.4 closing the loop: statistical regression check,
+        // scoped to the triggering repository's series ---
+        let regressions =
+            self.check_regressions(&pending.measurement, coll, Some(&pending.event.repo));
 
+        let standalone_duration = node_load.values().copied().fold(0.0, f64::max);
         let report = PipelineReport {
-            pipeline_id: pipeline.id,
+            pipeline_id: pending.pipeline_id,
+            repo: event.repo.clone(),
             commit_id: event.commit_id.clone(),
-            jobs_total: submitted.len(),
+            jobs_total: pending.jobs.len(),
             jobs_completed: completed,
             jobs_failed: failed,
             points_uploaded: points,
             records_created: records,
             collection: coll,
-            duration: self.scheduler.now() - start,
+            trigger_ts,
+            duration: (last_end - pending.submitted_at).max(0.0),
+            standalone_duration,
+            finished_at: last_end,
             regressions,
         };
         self.executed.push(report.clone());
         Ok(report)
+    }
+
+    /// Execute a pipeline synchronously: submit, run to completion,
+    /// collect. The single-tenant path (and the pre-`sched::` API) —
+    /// overlapping callers use [`CbSystem::submit_pipeline`] +
+    /// [`CbSystem::collect_pipeline`] directly.
+    pub fn execute_pipeline(
+        &mut self,
+        event: &PushEvent,
+        via_trigger_api: bool,
+        jobs: Vec<PreparedJob>,
+        measurement: &str,
+    ) -> anyhow::Result<PipelineReport> {
+        let pid = self.submit_pipeline(event, via_trigger_api, jobs, measurement, 0)?;
+        self.collect_pipeline(pid)
     }
 
     /// Current trigger timestamp (ns) of the most recent pipeline.
@@ -418,7 +645,10 @@ impl CbSystem {
             if !metrics.fields.is_empty() {
                 let mut p = Point::new(measurement, trigger_ts);
                 p.tags.insert("node".into(), host.to_string());
-                p.tags.insert("commit".into(), event.commit_id[..8].to_string());
+                p.tags.insert(
+                    "commit".into(),
+                    event.commit_id[..8.min(event.commit_id.len())].to_string(),
+                );
                 for (k, v) in &metrics.tags {
                     p.tags.insert(k.clone(), v.clone());
                 }
@@ -484,7 +714,11 @@ pub fn detect_regressions(
         })
         .windows(1, 1)
         .thresholds(threshold, 1.0, 0.0)
-        .changepoint(false);
+        .changepoint(false)
+        // exact legacy semantics: every series' own last two points, even
+        // when other tenants' trigger timestamps interleave or the series
+        // went stale — so no bounded tail() pushdown here
+        .full_history(true);
     crate::regress::detector::evaluate_policy(&policy, db)
         .into_iter()
         .map(|f| PerfChange {
@@ -499,7 +733,7 @@ pub fn detect_regressions(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::slurm::JobOutcome;
+    use crate::sched::JobOutcome;
 
     fn dummy_job(name: &str, host: &str, metrics: &str) -> PreparedJob {
         let out = metrics.to_string();
@@ -513,11 +747,30 @@ mod tests {
         }
     }
 
+    fn dummy_job_dur(name: &str, host: &str, dur: f64) -> PreparedJob {
+        PreparedJob {
+            ci: CiJob::new(name, "benchmark").var("HOST", host),
+            payload: Box::new(move |_n, _t| JobOutcome {
+                duration: dur,
+                stdout: format!("METRIC dur={dur}\n"),
+                exit_code: 0,
+            }),
+        }
+    }
+
     fn event() -> PushEvent {
         PushEvent {
             repo: "fe2ti".into(),
             branch: "master".into(),
             commit_id: "abcdef1234567890".into(),
+        }
+    }
+
+    fn event_for(repo: &str) -> PushEvent {
+        PushEvent {
+            repo: repo.into(),
+            branch: "master".into(),
+            commit_id: format!("{repo:0<16}"),
         }
     }
 
@@ -527,6 +780,33 @@ mod tests {
         assert_eq!(cfg.get("umfpack_blas"), Some("blis"));
         assert_eq!(cfg.get_f64("lbm_penalty", 0.0), 0.15);
         assert_eq!(cfg.get_f64("missing", 1.0), 1.0);
+    }
+
+    #[test]
+    fn detector_config_overrides_apply_and_revert() {
+        let base = Detector::with_default_policies();
+        let cfg = BenchConfig::parse(
+            "regress.lbm-mlups.min_rel_change = 0.5\n\
+             regress.lbm-mlups.baseline_window = 3\n\
+             regress.lbm-mlups.changepoint = false\n\
+             regress.fe2ti-tts.direction = higher-is-better\n\
+             regress.fe2ti-tts.alpha = 0.01\n",
+        );
+        let det = detector_with_config(&base, &cfg);
+        let lbm = det.policies.iter().find(|p| p.name == "lbm-mlups").unwrap();
+        assert_eq!(lbm.min_rel_change, 0.5);
+        assert_eq!(lbm.baseline_window, 3);
+        assert!(!lbm.use_changepoint);
+        let tts = det.policies.iter().find(|p| p.name == "fe2ti-tts").unwrap();
+        assert_eq!(tts.direction, Direction::HigherIsBetter);
+        assert_eq!(tts.alpha, 0.01);
+        // the base is untouched: the next commit reverts to stock
+        let lbm0 = base.policies.iter().find(|p| p.name == "lbm-mlups").unwrap();
+        assert_eq!(lbm0.min_rel_change, 0.08);
+        assert!(lbm0.use_changepoint);
+        // malformed values are ignored, not zeroed
+        let det = detector_with_config(&base, &BenchConfig::parse("regress.lbm-mlups.alpha = abc\n"));
+        assert_eq!(det.policies[0].alpha, 0.05);
     }
 
     #[test]
@@ -550,11 +830,81 @@ mod tests {
         assert_eq!(r.jobs_completed, 2);
         assert_eq!(r.points_uploaded, 2);
         assert_eq!(r.records_created, 6); // 3 records per job
+        assert_eq!(r.repo, "fe2ti");
         assert_eq!(cb.db.len(), 2);
         // points tagged with commit + node
         let pts = cb.db.points("fe2ti");
         assert_eq!(pts[0].tags["commit"], "abcdef12");
         assert!(cb.store.n_links() >= 4);
+    }
+
+    #[test]
+    fn submit_collect_phases_overlap_two_pipelines() {
+        // two pipelines stressing different nodes, in flight at once:
+        // p1 = 3 x 10 s on icx36; p2 = 1 x 25 s on rome1
+        let mut cb = CbSystem::new();
+        let p1 = cb
+            .submit_pipeline(
+                &event_for("alpha"),
+                false,
+                vec![
+                    dummy_job_dur("a1", "icx36", 10.0),
+                    dummy_job_dur("a2", "icx36", 10.0),
+                    dummy_job_dur("a3", "icx36", 10.0),
+                ],
+                "m",
+                0,
+            )
+            .unwrap();
+        let p2 = cb
+            .submit_pipeline(
+                &event_for("beta"),
+                false,
+                vec![dummy_job_dur("b1", "rome1", 25.0)],
+                "m",
+                0,
+            )
+            .unwrap();
+        assert_eq!(cb.in_flight().len(), 2);
+        // nothing ran yet: submission does not advance time
+        assert_eq!(cb.scheduler.now(), 0.0);
+
+        let r2 = cb.collect_pipeline(p2).unwrap();
+        // collecting p2 advanced the shared clock past p2's last job;
+        // p1's same-epoch jobs progressed alongside
+        assert_eq!(r2.finished_at, 25.0);
+        assert_eq!(r2.duration, 25.0);
+        assert_eq!(r2.standalone_duration, 25.0);
+        let r1 = cb.collect_pipeline(p1).unwrap();
+        assert_eq!(r1.finished_at, 30.0);
+        assert_eq!(r1.standalone_duration, 30.0);
+        assert_eq!(cb.in_flight().len(), 0);
+        // overlapped makespan (30) beats back-to-back (55)
+        assert!(cb.scheduler.now() < r1.standalone_duration + r2.standalone_duration);
+        // both pipelines' points uploaded under their own repo tag
+        let repos = cb.db.tag_values("m", "repo");
+        assert_eq!(repos, vec!["alpha", "beta"]);
+        // collecting twice is an error
+        assert!(cb.collect_pipeline(p1).is_err());
+    }
+
+    #[test]
+    fn pipeline_finished_at_tracks_in_flight_jobs() {
+        let mut cb = CbSystem::new();
+        let p1 = cb
+            .submit_pipeline(
+                &event_for("alpha"),
+                false,
+                vec![dummy_job_dur("a1", "icx36", 10.0)],
+                "m",
+                0,
+            )
+            .unwrap();
+        assert_eq!(cb.pipeline_finished_at(p1), Some(0.0)); // nothing ran yet
+        cb.scheduler.run_until_idle();
+        assert_eq!(cb.pipeline_finished_at(p1), Some(10.0));
+        cb.collect_pipeline(p1).unwrap();
+        assert_eq!(cb.pipeline_finished_at(p1), None); // no longer in flight
     }
 
     #[test]
@@ -583,6 +933,8 @@ mod tests {
             }),
         };
         assert!(cb.execute_pipeline(&event(), false, vec![j], "m").is_err());
+        // validation happens before queueing: nothing is in flight
+        assert!(cb.in_flight().is_empty());
     }
 
     #[test]
@@ -605,6 +957,48 @@ mod tests {
         db2.insert(Point::new("fe2ti", 2).tag("s", "x").field("tts", 13.0));
         let regs2 = detect_regressions(&db2, "fe2ti", "tts", &["s"], 0.1, false);
         assert_eq!(regs2.len(), 1);
+    }
+
+    #[test]
+    fn legacy_shim_sees_interleaved_tenant_series_exactly() {
+        // co-tenant trigger timestamps interleave; the legacy shim still
+        // compares each series' own last two points (it opts out of the
+        // bounded tail() pushdown via Policy::full_history)
+        let mut db = Db::new();
+        for (ts, repo, v) in [
+            (1, "a", 1000.0),
+            (2, "b", 500.0),
+            (3, "a", 800.0),
+            (4, "b", 505.0),
+        ] {
+            db.insert(Point::new("lbm", ts).tag("repo", repo).field("mlups", v));
+        }
+        let regs = detect_regressions(&db, "lbm", "mlups", &["repo"], 0.1, true);
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].series, "repo=a");
+        assert!((regs[0].rel_change + 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn install_detector_survives_commit_config() {
+        let mut cb = CbSystem::new();
+        let custom = Detector::with_default_policies()
+            .policy(Policy::new("gflops", "fe2ti", "gflops").group_by(&["repo"]));
+        cb.install_detector(custom);
+        // a commit tunes the custom policy: override applies...
+        cb.apply_regress_config(&BenchConfig::parse("regress.gflops.min_rel_change = 0.2\n"));
+        let p = cb
+            .detector
+            .policies
+            .iter()
+            .find(|p| p.name == "gflops")
+            .expect("custom policy survives per-commit config");
+        assert_eq!(p.min_rel_change, 0.2);
+        // ...and the next commit without overrides reverts to the
+        // *installed* base, not the stock CbSystem::new() snapshot
+        cb.apply_regress_config(&BenchConfig::default());
+        let p = cb.detector.policies.iter().find(|p| p.name == "gflops").unwrap();
+        assert_eq!(p.min_rel_change, 0.05);
     }
 
     #[test]
@@ -648,6 +1042,83 @@ mod tests {
         assert!(cb.alerts.active().is_empty());
         let rec = cb.store.record_by_identifier("regress-alert-1").unwrap();
         assert_eq!(rec.meta["state"], "resolved");
+    }
+
+    #[test]
+    fn commit_tuned_thresholds_silence_their_own_pipeline() {
+        // same 18% drop as above, but the offending commit ships a
+        // benchmark.cfg raising its own min_rel_change past the drop
+        let mut cb = CbSystem::new();
+        let run = |cb: &mut CbSystem, mlups: f64| {
+            let j = PreparedJob {
+                ci: CiJob::new("uniform-srt-icx36", "benchmark").var("HOST", "icx36"),
+                payload: Box::new(move |_n, _t| JobOutcome {
+                    duration: 1.0,
+                    stdout: format!(
+                        "TAG case=uniformgridcpu\nTAG collision_op=srt\nMETRIC mlups={mlups}\n"
+                    ),
+                    exit_code: 0,
+                }),
+            };
+            cb.execute_pipeline(&event(), false, vec![j], "lbm").unwrap()
+        };
+        for _ in 0..4 {
+            run(&mut cb, 1000.0);
+        }
+        cb.apply_regress_config(&BenchConfig::parse("regress.lbm-mlups.min_rel_change = 0.5\n"));
+        let r = run(&mut cb, 820.0);
+        assert_eq!(r.regressions.opened, 0, "tuned threshold must suppress the alert");
+        // the next commit has no overrides: stock sensitivity is back and
+        // the still-degraded series is flagged
+        cb.apply_regress_config(&BenchConfig::default());
+        let r = run(&mut cb, 820.0);
+        assert_eq!(r.regressions.opened, 1);
+    }
+
+    #[test]
+    fn co_tenant_tuned_config_cannot_mask_other_repos_alerts() {
+        // repo A carries a real regression with an open alert; repo B's
+        // next commit loosens ITS OWN thresholds. B's collect is scoped
+        // to B's series, so A's alert must survive untouched — and B's
+        // interleaved trigger timestamps must not shrink A's window.
+        let mut cb = CbSystem::new();
+        let run = |cb: &mut CbSystem, repo: &str, mlups: f64| {
+            let j = PreparedJob {
+                ci: CiJob::new("uniform-srt-icx36", "benchmark").var("HOST", "icx36"),
+                payload: Box::new(move |_n, _t| JobOutcome {
+                    duration: 1.0,
+                    stdout: format!(
+                        "TAG case=uniformgridcpu\nTAG collision_op=srt\nMETRIC mlups={mlups}\n"
+                    ),
+                    exit_code: 0,
+                }),
+            };
+            cb.execute_pipeline(&event_for(repo), false, vec![j], "lbm").unwrap()
+        };
+        for _ in 0..4 {
+            run(&mut cb, "repo-a", 1000.0);
+            run(&mut cb, "repo-b", 1000.0);
+        }
+        let r = run(&mut cb, "repo-a", 820.0);
+        assert_eq!(r.regressions.opened, 1, "repo A's drop opens an alert");
+        assert_eq!(cb.alerts.active().len(), 1);
+
+        // repo B ships a loosened config; its healthy pipeline collects
+        // under it — repo A's series are out of scope and stay flagged
+        cb.apply_regress_config(&BenchConfig::parse(
+            "regress.lbm-mlups.min_rel_change = 0.5\n",
+        ));
+        let r = run(&mut cb, "repo-b", 1000.0);
+        assert_eq!(r.regressions.opened, 0);
+        assert_eq!(r.regressions.auto_resolved, 0, "B must not resolve A's alert");
+        assert_eq!(cb.alerts.active().len(), 1);
+        assert!(cb.alerts.active()[0].series.contains("repo=repo-a"));
+
+        // A recovers under stock config: only now does the alert resolve
+        cb.apply_regress_config(&BenchConfig::default());
+        let r = run(&mut cb, "repo-a", 1000.0);
+        assert_eq!(r.regressions.auto_resolved, 1);
+        assert!(cb.alerts.active().is_empty());
     }
 
     #[test]

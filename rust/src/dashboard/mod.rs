@@ -252,6 +252,38 @@ pub fn fe2ti_dashboard() -> Dashboard {
         )
 }
 
+/// The multi-repo campaign dashboard: one `campaign` point per collected
+/// pipeline (see [`crate::coordinator::campaign::run_campaign`]) renders
+/// into per-repository wall-time series — the at-a-glance view of how
+/// the shared Testcluster splits between projects, and how much the
+/// overlapped wall time diverges from each pipeline's idle-cluster
+/// standalone duration.
+pub fn campaign_dashboard() -> Dashboard {
+    Dashboard::new("Campaign — multi-repo CB on one Testcluster")
+        .variable("repo")
+        .variable("kind")
+        .panel(
+            Panel::new("Pipeline wall time (overlapped)", PanelKind::TimeSeries, "campaign", "duration")
+                .group_by(&["repo"])
+                .unit("s"),
+        )
+        .panel(
+            Panel::new("Standalone duration (idle cluster)", PanelKind::TimeSeries, "campaign", "standalone")
+                .group_by(&["repo"])
+                .unit("s"),
+        )
+        .panel(
+            Panel::new("Jobs per pipeline", PanelKind::LatestBars, "campaign", "jobs")
+                .group_by(&["repo"])
+                .unit("jobs"),
+        )
+        .panel(
+            Panel::new("Failed jobs", PanelKind::Stat, "campaign", "failed")
+                .group_by(&["repo"])
+                .unit("jobs"),
+        )
+}
+
 pub fn walberla_dashboard() -> Dashboard {
     Dashboard::new("waLBerla benchmarks")
         .variable("case")
@@ -400,6 +432,38 @@ mod tests {
         resolved.state = AlertState::Resolved;
         let txt = walberla_dashboard().render_text_with_alerts(&db(), &[&resolved]);
         assert_eq!(txt.matches("!!").count(), 0);
+    }
+
+    #[test]
+    fn campaign_dashboard_renders_per_repo_series() {
+        let mut db = Db::new();
+        for (ts, repo, dur, standalone) in [
+            (1_000_000_000i64, "walberla-0", 320.0, 320.0),
+            (2_000_000_000, "fe2ti-1", 3300.0, 3200.0),
+            (3_000_000_000, "walberla-0", 330.0, 321.0),
+        ] {
+            db.insert(
+                Point::new("campaign", ts)
+                    .tag("repo", repo)
+                    .tag("kind", repo.split('-').next().unwrap())
+                    .field("duration", dur)
+                    .field("standalone", standalone)
+                    .field("jobs", 55.0)
+                    .field("failed", 0.0),
+            );
+        }
+        let d = campaign_dashboard();
+        let txt = d.render_text(&db);
+        assert!(txt.contains("Pipeline wall time (overlapped)"));
+        assert!(txt.contains("repo=walberla-0"));
+        assert!(txt.contains("repo=fe2ti-1"));
+        assert!(txt.contains("filter repo:"));
+        // repo filter narrows to one project
+        let mut d = campaign_dashboard();
+        d.select("repo", &["fe2ti-1"]);
+        let txt = d.render_text(&db);
+        assert!(txt.contains("repo=fe2ti-1"));
+        assert!(!txt.contains("repo=walberla-0"));
     }
 
     #[test]

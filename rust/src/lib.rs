@@ -32,6 +32,7 @@ pub mod regress;
 pub mod report;
 pub mod roofline;
 pub mod runtime;
+pub mod sched;
 pub mod slurm;
 pub mod sparse;
 pub mod tsdb;

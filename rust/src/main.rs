@@ -3,8 +3,9 @@
 
 use cbench::cluster::microbench::{run_host_microbench, MicrobenchKind};
 use cbench::cluster::nodes::{catalogue, node};
-use cbench::coordinator::{fe2ti_pipeline, walberla_pipeline, CbSystem, PreparedJob};
-use cbench::dashboard::{fe2ti_dashboard, walberla_dashboard};
+use cbench::coordinator::campaign::{self, CampaignConfig};
+use cbench::coordinator::{fe2ti_pipeline, walberla_pipeline, BenchConfig, CbSystem, PreparedJob};
+use cbench::dashboard::{campaign_dashboard, fe2ti_dashboard, walberla_dashboard};
 use cbench::regress::{bisect_pipeline, AlertBook, AlertState, Detector};
 use cbench::report;
 use cbench::tsdb::{Aggregate, Db, Query};
@@ -39,6 +40,7 @@ fn cbench_main(argv: Vec<String>) -> anyhow::Result<()> {
         }
         "report" => cmd_report(&args),
         "pipeline" => cmd_pipeline(&args),
+        "campaign" => cmd_campaign(&args),
         "cluster" => cmd_cluster(&args),
         "microbench" => cmd_microbench(&args),
         "dashboard" => cmd_dashboard(&args),
@@ -102,6 +104,27 @@ fn simulated_history(
     (repo, events)
 }
 
+/// Shared `--save-tsdb` / `--save-alerts` resume logic of `cbench
+/// pipeline` and `cbench campaign`: the TSDB accumulates across runs
+/// (new pipelines append after the saved history — alerts resolve only
+/// on real evidence) and the alert lifecycle survives (acknowledgements,
+/// bisection results, resolution history; ids keep counting,
+/// fingerprints deduplicate). The loaded book references a previous
+/// process's datastore, and ids are per-store, so they are detached
+/// before this run archives anything. Returns `(tsdb_path, alerts_path)`
+/// for the closing save.
+fn load_persisted_state<'a>(cb: &mut CbSystem, args: &'a Args) -> anyhow::Result<(&'a str, &'a str)> {
+    let tsdb_path = args.get_or("save-tsdb", "cbench_tsdb.lp");
+    if Path::new(tsdb_path).exists() {
+        cb.adopt_db(Db::load(Path::new(tsdb_path))?);
+        println!("resuming TSDB {tsdb_path} ({} points)", cb.db.len());
+    }
+    let alerts_path = args.get_or("save-alerts", "cbench_alerts.json");
+    cb.alerts = AlertBook::load(Path::new(alerts_path))?;
+    cb.alerts.detach_store();
+    Ok((tsdb_path, alerts_path))
+}
+
 fn pipeline_jobs_for(which: &str, repo: &Repository, commit_id: &str) -> Vec<PreparedJob> {
     match which {
         "fe2ti" => fe2ti_pipeline::fe2ti_pipeline_jobs(repo, commit_id),
@@ -131,25 +154,14 @@ fn cmd_pipeline(args: &Args) -> anyhow::Result<()> {
         anyhow::bail!("--inject-regression {inject_at} is past the last commit ({commits})");
     }
     let mut cb = CbSystem::new();
-    // carry the campaign across runs: the TSDB accumulates (new pipelines
-    // append after the saved history — alerts resolve only on real
-    // evidence), and the alert lifecycle survives (acknowledgements,
-    // bisection results, resolution history; ids keep counting,
-    // fingerprints deduplicate)
-    let tsdb_path = args.get_or("save-tsdb", "cbench_tsdb.lp");
-    if Path::new(tsdb_path).exists() {
-        cb.adopt_db(Db::load(Path::new(tsdb_path))?);
-        println!("resuming TSDB {tsdb_path} ({} points)", cb.db.len());
-    }
-    let alerts_path = args.get_or("save-alerts", "cbench_alerts.json");
-    cb.alerts = AlertBook::load(Path::new(alerts_path))?;
-    // the loaded book references a previous process's datastore; ids are
-    // per-store, so drop them before this run archives anything
-    cb.alerts.detach_store();
+    let (tsdb_path, alerts_path) = load_persisted_state(&mut cb, args)?;
     let (repo, events) = simulated_history(which, commits, inject_at, penalty);
     let measurement = if which == "fe2ti" { "fe2ti" } else { "lbm" };
     for ev in &events {
         let jobs = pipeline_jobs_for(which, &repo, &ev.commit_id);
+        // the commit's benchmark.cfg may tune its own detection
+        // (regress.<policy>.<knob> overrides)
+        cb.apply_regress_config(&BenchConfig::from_commit(&repo, &ev.commit_id));
         let r = cb.execute_pipeline(ev, which == "walberla", jobs, measurement)?;
         println!(
             "pipeline #{} commit {} jobs={} completed={} failed={} points={} records={} cluster-time={}{}",
@@ -184,6 +196,90 @@ fn cmd_pipeline(args: &Args) -> anyhow::Result<()> {
         walberla_dashboard()
     };
     println!("\n{}", dash.render_text_with_alerts(&cb.db, &cb.alerts.active()));
+    Ok(())
+}
+
+/// `cbench campaign [--repos N] [--pushes M] [--inject-regression K]
+/// [--penalty P] [--seed S] [--save-tsdb FILE] [--save-alerts FILE]` —
+/// the multi-repo coordinator: N repositories (alternating waLBerla /
+/// FE2TI matrices) each push M commits; every resulting pipeline is
+/// submitted onto ONE event-driven scheduler so their jobs interleave on
+/// the shared Testcluster, then collected (upload + regression check,
+/// serialized per pipeline) in completion order. Reports the overlapped
+/// simulated makespan against the sequential back-to-back baseline.
+fn cmd_campaign(args: &Args) -> anyhow::Result<()> {
+    let repos = args.get_usize("repos", 2);
+    let pushes = args.get_usize("pushes", 2);
+    let inject_at = args.get_usize("inject-regression", 0);
+    let penalty = args.get_f64("penalty", 0.15);
+    let seed = args.get_usize("seed", 42) as u64;
+    anyhow::ensure!(repos >= 1, "--repos must be at least 1");
+
+    let mut cb = CbSystem::new();
+    let (tsdb_path, alerts_path) = load_persisted_state(&mut cb, args)?;
+
+    let mut projects = campaign::default_projects(repos);
+    let cfg = CampaignConfig { pushes, inject_at, penalty, seed };
+    let out = campaign::run_campaign(&mut cb, &mut projects, &cfg)?;
+
+    for r in &out.reports {
+        println!(
+            "pipeline #{:<3} {:<12} commit {} jobs={:<3} failed={} points={:<3} wall={} standalone={}{}",
+            r.pipeline_id,
+            r.repo,
+            &r.commit_id[..8.min(r.commit_id.len())],
+            r.jobs_total,
+            r.jobs_failed,
+            r.points_uploaded,
+            cbench::util::fmt_secs(r.duration),
+            cbench::util::fmt_secs(r.standalone_duration),
+            if r.regressions.opened > 0 {
+                format!("  !! {} regression alert(s) OPENED", r.regressions.opened)
+            } else {
+                String::new()
+            },
+        );
+    }
+
+    let speedup = out.overlap_speedup();
+    println!(
+        "\ncampaign: {repos} repositories x {pushes} push(es) = {} pipelines, {} jobs on one Testcluster",
+        out.reports.len(),
+        out.total_jobs()
+    );
+    println!(
+        "simulated makespan (overlapped):  {}",
+        cbench::util::fmt_secs(out.makespan)
+    );
+    println!(
+        "sequential back-to-back baseline: {}",
+        cbench::util::fmt_secs(out.sequential_baseline)
+    );
+    println!("overlap speedup: {speedup:.2}x");
+    if out.makespan < out.sequential_baseline {
+        println!("overlap: makespan BELOW sequential baseline");
+    } else {
+        println!("overlap: no improvement over sequential baseline");
+    }
+    // machine-readable summary (CI records this in the per-commit bench JSON)
+    println!(
+        "CAMPAIGN_JSON {{\"repos\":{repos},\"pushes\":{pushes},\"pipelines\":{},\"jobs\":{},\"makespan_s\":{:.3},\"sequential_s\":{:.3},\"speedup\":{:.4},\"alerts_opened\":{}}}",
+        out.reports.len(),
+        out.total_jobs(),
+        out.makespan,
+        out.sequential_baseline,
+        speedup,
+        out.alerts_opened()
+    );
+
+    cb.db.save(Path::new(tsdb_path))?;
+    cb.alerts.save(Path::new(alerts_path))?;
+    println!(
+        "tsdb saved to {tsdb_path} ({} points); alerts saved to {alerts_path} ({} active)",
+        cb.db.len(),
+        cb.alerts.active().len()
+    );
+    println!("\n{}", campaign_dashboard().render_text(&cb.db));
     Ok(())
 }
 
@@ -536,6 +632,15 @@ COMMANDS:
                                 commit #K (penalty P, default 0.15); state
                                 persists to cbench_tsdb.lp / cbench_alerts.json
   pipeline describe             explain the pipeline wiring (Figs. 3-4)
+  campaign [--repos N] [--pushes M] [--inject-regression K] [--penalty P]
+           [--seed S] [--save-tsdb FILE] [--save-alerts FILE]
+                                multi-repo coordinator: N repositories
+                                (alternating walberla/fe2ti) x M pushes,
+                                every pipeline overlapped on ONE
+                                event-driven scheduler (sched::) with
+                                fair-share between repos; reports the
+                                simulated makespan vs the sequential
+                                back-to-back baseline
   regress detect [--tsdb FILE] [--alerts FILE]
                                 statistical regression scan of a saved TSDB
                                 (baseline windows, Welch t / Mann-Whitney /
@@ -563,6 +668,11 @@ THE CB LOOP (end-to-end demo):
   cbench regress detect         # flags the drop, opens alerts w/ confidence
   cbench regress bisect --commits 8 --inject-regression 5
                                 # pins commit #5 in O(log n) pipeline re-runs
+
+MULTI-REPO OVERLAP (the sched:: execution model):
+  cbench campaign --repos 2 --pushes 3
+                                # 6 pipelines interleaved on one cluster;
+                                # prints overlapped makespan vs sequential
 ";
 
 const PIPELINE_DESCRIPTION: &str = "\
@@ -574,7 +684,15 @@ CB pipeline wiring (paper Figs. 3-4):
        nodes x compilers x solvers x parallelization;
        coordinator::walberla_pipeline: 11 nodes x 4 collision ops + FSLBM)
     -> job scripts assembled (ci::assemble_job_script, Listing 1)
-    -> submitted via sbatch --wait (slurm:: over cluster:: node models)
+    -> SUBMIT phase (coordinator::submit_pipeline): jobs queued on the
+       event-driven scheduler (sched:: over cluster:: node models) tagged
+       with pipeline batch + repository owner + priority; pipelines from
+       other repositories interleave on the same nodes (fair-share picks
+       who runs when a slot frees) -- `cbench campaign` keeps many in
+       flight; the old sbatch --wait contract survives as slurm::
+    -> COLLECT phase (coordinator::collect_pipeline): the pipeline's
+       completion events are consumed; upload + detection below are
+       serialized per pipeline even when execution overlapped
     -> benchmarks execute (apps::fe2ti / apps::walberla; LBM kernels
        optionally through the JAX/Pallas PJRT artifacts, runtime::)
     -> output parsed (likwid-style counters, perf::)

@@ -126,7 +126,11 @@ pub fn bisect_pipeline(
         };
         let jobs = jobs_for(repo, commit);
         anyhow::ensure!(!jobs.is_empty(), "pipeline produced no jobs for {commit}");
-        cb.execute_pipeline(&ev, false, jobs, measurement)?;
+        // probes ride the same event-driven scheduler as live pipelines:
+        // submit, let the event queue advance, collect — so a bisection
+        // interleaves with in-flight CB work instead of owning the cluster
+        let pid = cb.submit_pipeline(&ev, false, jobs, measurement, 0)?;
+        cb.collect_pipeline(pid)?;
         let ts = cb.last_trigger_ts();
         let mut q = Query::new(measurement, field).range(ts, ts);
         for (k, v) in series_tags {

@@ -77,6 +77,13 @@ pub struct Policy {
     /// Split the series at a located CUSUM change point instead of a
     /// fixed trailing window when the shift is clear enough.
     pub use_changepoint: bool,
+    /// Materialize full series instead of the bounded `tail(n)` pushdown.
+    /// The pushdown restricts the scan to the trailing distinct
+    /// timestamps, which excludes series that stopped reporting (and, on
+    /// unscoped multi-tenant queries, shrinks per-tenant windows) — the
+    /// legacy `detect_regressions` shim opts out to keep its exact
+    /// pre-pushdown semantics at pre-pushdown cost.
+    pub scan_full_history: bool,
 }
 
 impl Policy {
@@ -93,6 +100,7 @@ impl Policy {
             alpha: 0.05,
             min_confidence: 0.5,
             use_changepoint: true,
+            scan_full_history: false,
         }
     }
     pub fn group_by(mut self, tags: &[&str]) -> Policy {
@@ -116,6 +124,10 @@ impl Policy {
     }
     pub fn changepoint(mut self, on: bool) -> Policy {
         self.use_changepoint = on;
+        self
+    }
+    pub fn full_history(mut self, on: bool) -> Policy {
+        self.scan_full_history = on;
         self
     }
 }
@@ -292,9 +304,10 @@ pub fn commit_at(
     group: &BTreeMap<String, String>,
     ts: i64,
 ) -> Option<String> {
-    db.points(measurement)
+    // binary-searched slice: one O(log n) lookup per finding instead of a
+    // full-history scan (time-range pushdown, same as the query layer)
+    db.points_in_range(measurement, Some(ts), Some(ts))
         .iter()
-        .filter(|p| p.ts == ts)
         .find(|p| {
             group.iter().all(|(k, v)| match p.tags.get(k) {
                 Some(t) => t == v,
@@ -310,13 +323,41 @@ pub fn commit_at(
 /// "healthy"; for an unevaluated one it means nothing — e.g. a fresh
 /// TSDB must not auto-resolve carried-over alerts).
 pub fn evaluate_policy_run(policy: &Policy, db: &Db) -> (Vec<Finding>, Vec<String>) {
+    evaluate_policy_run_scoped(policy, db, &[])
+}
+
+/// [`evaluate_policy_run`] restricted to series matching `scope` tag
+/// pairs — but only for tags the policy actually groups by, so a scope
+/// of `[("repo", "walberla-0")]` narrows a repo-grouped policy to that
+/// repository's series (the multi-tenant per-pipeline check) while
+/// leaving repo-agnostic custom policies untouched. Scoping also
+/// tightens the `tail(n)` pushdown bound: distinct timestamps are
+/// counted among the scoped points only, so co-tenant repositories
+/// uploading at interleaved trigger times cannot shrink each other's
+/// detection window.
+pub fn evaluate_policy_run_scoped(
+    policy: &Policy,
+    db: &Db,
+    scope: &[(&str, &str)],
+) -> (Vec<Finding>, Vec<String>) {
     let refs: Vec<&str> = policy.group_by.iter().map(|s| s.as_str()).collect();
     let mut findings = Vec::new();
     let mut evaluated = Vec::new();
-    for s in Query::new(&policy.measurement, &policy.field)
-        .group_by(&refs)
-        .run(db)
-    {
+    // tail(n) pushdown: the policy only ever looks at its rolling horizon
+    // (baseline + recent window), so the query is bounded to the trailing
+    // distinct timestamps instead of materializing the full series — the
+    // per-pipeline check cost stops growing with history length.
+    let lookback = (policy.baseline_window + policy.recent_window).max(2);
+    let mut q = Query::new(&policy.measurement, &policy.field).group_by(&refs);
+    if !policy.scan_full_history {
+        q = q.tail(lookback);
+    }
+    for (k, v) in scope {
+        if policy.group_by.iter().any(|g| g == k) {
+            q = q.where_tag(k, v);
+        }
+    }
+    for s in q.run(db) {
         if s.points.len() < 2 {
             continue;
         }
@@ -348,18 +389,21 @@ impl Detector {
 
     /// The stock policies for the two instrumented applications: waLBerla
     /// throughput (MLUP/s, higher is better) and FE2TI time-to-solution
-    /// (lower is better), grouped exactly like the dashboards.
+    /// (lower is better), grouped exactly like the dashboards. Since the
+    /// multi-repo coordinator landed, `repo` is part of every group: two
+    /// repositories sharing one Testcluster must not mix their series
+    /// (points without a repo tag group under `repo=<none>` as before).
     pub fn with_default_policies() -> Detector {
         Detector::new()
             .policy(
                 Policy::new("lbm-mlups", "lbm", "mlups")
-                    .group_by(&["case", "node", "collision_op", "gpu"])
+                    .group_by(&["case", "node", "collision_op", "gpu", "repo"])
                     .direction(Direction::HigherIsBetter)
                     .thresholds(0.08, 0.05, 0.5),
             )
             .policy(
                 Policy::new("fe2ti-tts", "fe2ti", "tts")
-                    .group_by(&["case", "node", "solver", "compiler", "parallelization"])
+                    .group_by(&["case", "node", "solver", "compiler", "parallelization", "repo"])
                     .direction(Direction::LowerIsBetter)
                     .thresholds(0.10, 0.05, 0.5),
             )
@@ -389,15 +433,30 @@ impl Detector {
     }
 
     /// Evaluate only the policies watching `measurement` (the post-upload
-    /// hook of `coordinator::execute_pipeline`). Returns the findings and
+    /// hook of `coordinator::collect_pipeline`). Returns the findings and
     /// the evaluated-series fingerprints, so the alert book knows which
     /// absent findings mean "recovered" (and which series simply were
     /// not measurable).
     pub fn detect_measurement(&self, db: &Db, measurement: &str) -> (Vec<Finding>, Vec<String>) {
+        self.detect_measurement_scoped(db, measurement, &[])
+    }
+
+    /// [`Detector::detect_measurement`] restricted to series matching
+    /// `scope` (see [`evaluate_policy_run_scoped`]). The multi-repo
+    /// coordinator scopes each pipeline's post-upload check to the
+    /// triggering repository: a commit's tuned `regress.*` config judges
+    /// only its own repo's series and cannot open, update, or
+    /// auto-resolve a co-tenant's alerts.
+    pub fn detect_measurement_scoped(
+        &self,
+        db: &Db,
+        measurement: &str,
+        scope: &[(&str, &str)],
+    ) -> (Vec<Finding>, Vec<String>) {
         let mut findings = Vec::new();
         let mut evaluated = Vec::new();
         for p in self.policies.iter().filter(|p| p.measurement == measurement) {
-            let (f, e) = evaluate_policy_run(p, db);
+            let (f, e) = evaluate_policy_run_scoped(p, db, scope);
             findings.extend(f);
             evaluated.extend(e);
         }

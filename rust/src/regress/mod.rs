@@ -19,11 +19,13 @@
 //!    [`crate::coordinator::CbSystem`] and binary-searches the first bad
 //!    commit for an open alert.
 //!
-//! `coordinator::execute_pipeline` runs the detector after every upload;
-//! `coordinator::detect_regressions` is now a thin shim over
-//! [`detector::Policy`] with a 1-point window (API and semantics
-//! preserved); `cbench regress <detect|alerts|bisect>` drives the loop
-//! from the CLI.
+//! `coordinator::collect_pipeline` runs the detector after every upload
+//! (serialized per pipeline even when execution overlaps on the shared
+//! `sched::` event scheduler); `coordinator::detect_regressions` is now a
+//! thin shim over [`detector::Policy`] with a 1-point window (API and
+//! semantics preserved); bisection probes ride the same scheduler as
+//! live pipelines; `cbench regress <detect|alerts|bisect>` drives the
+//! loop from the CLI.
 
 pub mod alerts;
 pub mod bisect;

@@ -1,0 +1,689 @@
+//! `sched::` — event-driven simulated-time scheduler for the shared
+//! Testcluster.
+//!
+//! The seed executed one pipeline at a time: `slurm::wait_all` ran every
+//! queued job to completion in FIFO order per node, so a second pipeline
+//! could not touch the cluster until the first drained. This module
+//! replaces that core with a discrete-event engine, the execution model
+//! continuous benchmarking needs once *many* repositories share one
+//! cluster (exaCB, the NEST CB study, and this paper's own >80-job
+//! matrices all hit this wall):
+//!
+//! * a **global event queue** — a binary heap of `(time, seq)`-ordered
+//!   events advancing one simulated clock across *all* nodes at once, so
+//!   jobs from different pipelines interleave on the shared cluster;
+//! * **per-node run slots** ([`SimScheduler::with_slots`]) — the
+//!   Testcluster's single-node-exclusive partition is `slots = 1`, but
+//!   shared partitions can oversubscribe;
+//! * **priority + fair-share between repositories** — every submission
+//!   carries an `owner` (the repository) and a `priority`
+//!   ([`SubmitSpec`]); when a slot frees, the dispatcher picks the
+//!   highest-priority waiting job, breaking ties toward the owner with
+//!   the least consumed node-seconds, then FIFO;
+//! * **completion events** ([`Completion`]) the coordinator consumes
+//!   instead of a blocking `wait_all`: [`SimScheduler::step`] advances
+//!   one event, [`SimScheduler::run_until_done`] advances until a given
+//!   job set is terminal, [`SimScheduler::run_until_idle`] drains the
+//!   queue;
+//! * a **deterministic timeline** — identical submissions replay to a
+//!   byte-identical event log ([`SimScheduler::timeline`]) and therefore
+//!   byte-identical TSDB contents downstream; ties are broken by a
+//!   monotone sequence number, never by iteration order of a hash map.
+//!
+//! [`crate::slurm::Scheduler`] is now a thin `sbatch --wait` veneer over
+//! this engine (the paper's Listing-1 contract is unchanged);
+//! [`crate::coordinator::CbSystem`] drives it phase-split
+//! (`submit_pipeline` / `collect_pipeline`) so pipelines overlap.
+
+use crate::cluster::nodes::NodeModel;
+use std::cmp::{Ordering, Reverse};
+use std::collections::{BTreeMap, BinaryHeap};
+
+/// Outcome a job payload reports back.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    /// Simulated runtime in seconds.
+    pub duration: f64,
+    /// Captured stdout (the benchmark's output the pipeline parses).
+    pub stdout: String,
+    /// Nonzero = job failed.
+    pub exit_code: i32,
+}
+
+/// The payload executed when the job starts: gets the node model and the
+/// simulated start time.
+pub type Payload = Box<dyn FnOnce(&NodeModel, f64) -> JobOutcome + Send>;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Pending,
+    Running,
+    Completed,
+    Failed,
+    Timeout,
+    Cancelled,
+}
+
+impl JobState {
+    /// Terminal states: the job will never run (again).
+    pub fn is_terminal(self) -> bool {
+        !matches!(self, JobState::Pending | JobState::Running)
+    }
+}
+
+/// Submission parameters: the `sbatch` flags plus the scheduling metadata
+/// the multi-repo coordinator attaches (owner, priority, batch).
+#[derive(Debug, Clone)]
+pub struct SubmitSpec {
+    pub name: String,
+    /// `--nodelist`: the single target host.
+    pub nodelist: String,
+    /// `SLURM_TIMELIMIT` in minutes.
+    pub timelimit_min: f64,
+    /// Higher runs first among queued jobs.
+    pub priority: i64,
+    /// Fair-share bucket — the repository the job benchmarks for.
+    pub owner: String,
+    /// Grouping id (the CI pipeline id); 0 = ungrouped.
+    pub batch: u64,
+}
+
+impl SubmitSpec {
+    pub fn new(name: &str, nodelist: &str) -> SubmitSpec {
+        SubmitSpec {
+            name: name.to_string(),
+            nodelist: nodelist.to_string(),
+            timelimit_min: 120.0,
+            priority: 0,
+            owner: "default".to_string(),
+            batch: 0,
+        }
+    }
+    pub fn timelimit(mut self, minutes: f64) -> SubmitSpec {
+        self.timelimit_min = minutes;
+        self
+    }
+    pub fn priority(mut self, p: i64) -> SubmitSpec {
+        self.priority = p;
+        self
+    }
+    pub fn owner(mut self, o: &str) -> SubmitSpec {
+        self.owner = o.to_string();
+        self
+    }
+    pub fn batch(mut self, b: u64) -> SubmitSpec {
+        self.batch = b;
+        self
+    }
+}
+
+/// Scheduler-side job record.
+pub struct SimJob {
+    pub id: u64,
+    pub spec: SubmitSpec,
+    pub state: JobState,
+    pub submit_time: f64,
+    pub start_time: Option<f64>,
+    pub end_time: Option<f64>,
+    pub log: String,
+    /// Submission order (dispatch tie-break).
+    seq: u64,
+    payload: Option<Payload>,
+    /// Filled at start: the finish event applies these.
+    planned_end: f64,
+    planned_state: JobState,
+    stdout: String,
+}
+
+impl std::fmt::Debug for SimJob {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SimJob")
+            .field("id", &self.id)
+            .field("name", &self.spec.name)
+            .field("node", &self.spec.nodelist)
+            .field("owner", &self.spec.owner)
+            .field("batch", &self.spec.batch)
+            .field("state", &self.state)
+            .finish()
+    }
+}
+
+/// A completion event the coordinator consumes.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub job_id: u64,
+    pub batch: u64,
+    pub owner: String,
+    pub name: String,
+    pub node: String,
+    pub state: JobState,
+    pub start: f64,
+    pub end: f64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum EventKind {
+    /// A submitted job arrives at the cluster (index into `jobs`).
+    Arrival(usize),
+    /// A running job finishes.
+    Finish(usize),
+}
+
+/// One entry of the global event queue; total order is (time, seq) so the
+/// heap pops deterministically.
+#[derive(Debug, Clone, Copy)]
+struct Event {
+    time: f64,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.time.total_cmp(&other.time).then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// First job id handed out (kept from the old slurm:: numbering so logs
+/// and archived records read the same).
+const BASE_JOB_ID: u64 = 1000;
+
+/// The event-driven cluster scheduler: one simulated clock, all nodes.
+pub struct SimScheduler {
+    nodes: BTreeMap<String, NodeModel>,
+    /// Free run slots per node.
+    free_slots: BTreeMap<String, usize>,
+    /// Jobs waiting for a slot, per node (indices into `jobs`).
+    waiting: BTreeMap<String, Vec<usize>>,
+    jobs: Vec<SimJob>,
+    queue: BinaryHeap<Reverse<Event>>,
+    clock: f64,
+    event_seq: u64,
+    next_id: u64,
+    /// Fair-share ledger: simulated node-seconds consumed per owner.
+    usage: BTreeMap<String, f64>,
+    completions: Vec<Completion>,
+    timeline: Vec<String>,
+}
+
+impl SimScheduler {
+    /// Build a scheduler over the given nodes, one run slot per node (the
+    /// Testcluster's exclusive single-node partition).
+    pub fn new(nodes: Vec<NodeModel>) -> SimScheduler {
+        SimScheduler::with_slots(nodes, 1)
+    }
+
+    /// Build a scheduler with `slots_per_node` concurrent run slots on
+    /// every node (shared/oversubscribed partitions).
+    pub fn with_slots(nodes: Vec<NodeModel>, slots_per_node: usize) -> SimScheduler {
+        let slots = slots_per_node.max(1);
+        let free_slots = nodes.iter().map(|n| (n.host.to_string(), slots)).collect();
+        SimScheduler {
+            nodes: nodes.into_iter().map(|n| (n.host.to_string(), n)).collect(),
+            free_slots,
+            waiting: BTreeMap::new(),
+            jobs: Vec::new(),
+            queue: BinaryHeap::new(),
+            clock: 0.0,
+            event_seq: 0,
+            next_id: BASE_JOB_ID,
+            usage: BTreeMap::new(),
+            completions: Vec::new(),
+            timeline: Vec::new(),
+        }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.clock
+    }
+    pub fn nodes(&self) -> impl Iterator<Item = &NodeModel> {
+        self.nodes.values()
+    }
+    pub fn node(&self, host: &str) -> Option<&NodeModel> {
+        self.nodes.get(host)
+    }
+    pub fn has_node(&self, host: &str) -> bool {
+        self.nodes.contains_key(host)
+    }
+
+    fn idx(&self, id: u64) -> Option<usize> {
+        id.checked_sub(BASE_JOB_ID)
+            .map(|i| i as usize)
+            .filter(|&i| i < self.jobs.len())
+    }
+
+    pub fn job(&self, id: u64) -> Option<&SimJob> {
+        self.idx(id).map(|i| &self.jobs[i])
+    }
+    pub fn jobs(&self) -> impl Iterator<Item = &SimJob> {
+        self.jobs.iter()
+    }
+
+    /// `squeue`: all jobs in the given state.
+    pub fn squeue(&self, state: JobState) -> Vec<&SimJob> {
+        self.jobs.iter().filter(|j| j.state == state).collect()
+    }
+
+    /// The log-file content a CI job `cat`s after completion
+    /// (`${CI_JOB_NAME}.o${job_id}.log` in Listing 1).
+    pub fn job_log(&self, id: u64) -> Option<&str> {
+        self.job(id).map(|j| j.log.as_str())
+    }
+
+    /// Completions recorded so far, in event order (append-only; callers
+    /// track their own offset to consume incrementally).
+    pub fn completions(&self) -> &[Completion] {
+        &self.completions
+    }
+
+    /// The deterministic event log: submissions, starts, finishes with
+    /// their simulated times. Identical submissions replay to a
+    /// byte-identical timeline.
+    pub fn timeline(&self) -> String {
+        self.timeline.join("\n")
+    }
+
+    /// Fair-share ledger: node-seconds consumed per owner so far.
+    pub fn owner_usage(&self, owner: &str) -> f64 {
+        self.usage.get(owner).copied().unwrap_or(0.0)
+    }
+
+    fn bump_seq(&mut self) -> u64 {
+        let s = self.event_seq;
+        self.event_seq += 1;
+        s
+    }
+
+    fn push_event(&mut self, time: f64, kind: EventKind) {
+        let seq = self.bump_seq();
+        self.queue.push(Reverse(Event { time, seq, kind }));
+    }
+
+    /// Queue a job. Errors if the nodelist names an unknown host (sbatch
+    /// would reject it). The job arrives at the current simulated time and
+    /// starts when a slot on its node frees up and the dispatcher picks it.
+    pub fn submit(&mut self, spec: SubmitSpec, payload: Payload) -> Result<u64, String> {
+        if !self.nodes.contains_key(&spec.nodelist) {
+            return Err(format!(
+                "sbatch: invalid nodelist `{}` (unknown host)",
+                spec.nodelist
+            ));
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        let idx = self.jobs.len();
+        let seq = self.bump_seq();
+        self.timeline.push(format!(
+            "t={:>12.3} submit {} `{}` -> {} owner={} prio={} batch={}",
+            self.clock, id, spec.name, spec.nodelist, spec.owner, spec.priority, spec.batch
+        ));
+        self.jobs.push(SimJob {
+            id,
+            spec,
+            state: JobState::Pending,
+            submit_time: self.clock,
+            start_time: None,
+            end_time: None,
+            log: String::new(),
+            seq,
+            payload: Some(payload),
+            planned_end: 0.0,
+            planned_state: JobState::Completed,
+            stdout: String::new(),
+        });
+        self.push_event(self.clock, EventKind::Arrival(idx));
+        Ok(id)
+    }
+
+    /// `scancel`: only jobs that have not started can be cancelled.
+    pub fn scancel(&mut self, id: u64) -> bool {
+        if let Some(i) = self.idx(id) {
+            if self.jobs[i].state == JobState::Pending {
+                self.jobs[i].state = JobState::Cancelled;
+                self.jobs[i].payload = None;
+                self.timeline
+                    .push(format!("t={:>12.3} cancel {}", self.clock, id));
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Process the next event, advancing the simulated clock. Returns the
+    /// event's time, or `None` when the queue is empty.
+    pub fn step(&mut self) -> Option<f64> {
+        let Reverse(ev) = self.queue.pop()?;
+        if ev.time > self.clock {
+            self.clock = ev.time;
+        }
+        match ev.kind {
+            EventKind::Arrival(i) => {
+                // cancelled before arrival: drop silently
+                if self.jobs[i].state == JobState::Pending {
+                    let host = self.jobs[i].spec.nodelist.clone();
+                    if self.free_slots.get(&host).copied().unwrap_or(0) > 0 {
+                        self.start_job(i);
+                    } else {
+                        self.waiting.entry(host).or_default().push(i);
+                    }
+                }
+            }
+            EventKind::Finish(i) => {
+                self.finish_job(i);
+                let host = self.jobs[i].spec.nodelist.clone();
+                self.dispatch(&host);
+            }
+        }
+        Some(ev.time)
+    }
+
+    /// Advance until every job in `ids` reached a terminal state (or the
+    /// queue drains). Other jobs' events are processed as simulated time
+    /// passes them — there is one clock for the whole cluster.
+    pub fn run_until_done(&mut self, ids: &[u64]) {
+        while ids
+            .iter()
+            .any(|&id| self.job(id).map(|j| !j.state.is_terminal()).unwrap_or(false))
+        {
+            if self.step().is_none() {
+                break;
+            }
+        }
+    }
+
+    /// Drain the event queue (the old `--wait` semantics). Returns the ids
+    /// of jobs that finished during this call, in completion order.
+    pub fn run_until_idle(&mut self) -> Vec<u64> {
+        let n0 = self.completions.len();
+        while self.step().is_some() {}
+        self.completions[n0..].iter().map(|c| c.job_id).collect()
+    }
+
+    /// Start job `i` on its (free-slot-checked) node at the current clock.
+    fn start_job(&mut self, i: usize) {
+        let host = self.jobs[i].spec.nodelist.clone();
+        *self.free_slots.get_mut(&host).expect("known host") -= 1;
+        let node = self.nodes[&host].clone();
+        let start = self.clock;
+        let payload = self.jobs[i].payload.take().expect("pending job has payload");
+        let outcome = payload(&node, start);
+        let limit = self.jobs[i].spec.timelimit_min * 60.0;
+        let (dur, state) = if outcome.duration > limit {
+            (limit, JobState::Timeout)
+        } else if outcome.exit_code != 0 {
+            (outcome.duration, JobState::Failed)
+        } else {
+            (outcome.duration, JobState::Completed)
+        };
+        {
+            let j = &mut self.jobs[i];
+            j.state = JobState::Running;
+            j.start_time = Some(start);
+            j.planned_end = start + dur;
+            j.planned_state = state;
+            j.stdout = outcome.stdout;
+        }
+        self.timeline.push(format!(
+            "t={:>12.3} start  {} on {}",
+            start, self.jobs[i].id, host
+        ));
+        self.push_event(start + dur, EventKind::Finish(i));
+    }
+
+    /// Apply a finish event: state, log, fair-share ledger, completion.
+    fn finish_job(&mut self, i: usize) {
+        let end = self.jobs[i].planned_end;
+        let state = self.jobs[i].planned_state;
+        let start = self.jobs[i].start_time.unwrap_or(end);
+        let host = self.jobs[i].spec.nodelist.clone();
+        let owner = self.jobs[i].spec.owner.clone();
+        let stdout = std::mem::take(&mut self.jobs[i].stdout);
+        let (id, batch, name, submit_time) = (
+            self.jobs[i].id,
+            self.jobs[i].spec.batch,
+            self.jobs[i].spec.name.clone(),
+            self.jobs[i].submit_time,
+        );
+        {
+            let j = &mut self.jobs[i];
+            j.state = state;
+            j.end_time = Some(end);
+            j.log = format!(
+                "== slurm job {} ({}) on {} ==\nsubmit={:.3} start={:.3} end={:.3} state={:?}\n{}{}",
+                id,
+                j.spec.name,
+                j.spec.nodelist,
+                submit_time,
+                start,
+                end,
+                state,
+                stdout,
+                if state == JobState::Timeout {
+                    format!("\nslurmstepd: *** JOB {id} CANCELLED DUE TO TIME LIMIT ***\n")
+                } else {
+                    String::new()
+                }
+            );
+        }
+        *self.usage.entry(owner.clone()).or_insert(0.0) += end - start;
+        *self.free_slots.get_mut(&host).expect("known host") += 1;
+        self.timeline.push(format!(
+            "t={:>12.3} finish {} state={:?}",
+            end, id, state
+        ));
+        self.completions.push(Completion {
+            job_id: id,
+            batch,
+            owner,
+            name,
+            node: host,
+            state,
+            start,
+            end,
+        });
+    }
+
+    /// Fill freed slots on `host` from its waiting queue: highest priority
+    /// first, ties toward the owner with the least consumed node-seconds,
+    /// then submission order.
+    fn dispatch(&mut self, host: &str) {
+        loop {
+            if self.free_slots.get(host).copied().unwrap_or(0) == 0 {
+                return;
+            }
+            let next = {
+                let jobs = &self.jobs;
+                let usage = &self.usage;
+                let Some(list) = self.waiting.get_mut(host) else {
+                    return;
+                };
+                list.retain(|&i| jobs[i].state == JobState::Pending);
+                if list.is_empty() {
+                    return;
+                }
+                let mut best = 0usize;
+                for pos in 1..list.len() {
+                    let a = &jobs[list[pos]];
+                    let b = &jobs[list[best]];
+                    let ua = usage.get(&a.spec.owner).copied().unwrap_or(0.0);
+                    let ub = usage.get(&b.spec.owner).copied().unwrap_or(0.0);
+                    let a_wins = a.spec.priority > b.spec.priority
+                        || (a.spec.priority == b.spec.priority
+                            && (ua < ub || (ua == ub && a.seq < b.seq)));
+                    if a_wins {
+                        best = pos;
+                    }
+                }
+                list.remove(best)
+            };
+            self.start_job(next);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::nodes::catalogue;
+
+    fn sched() -> SimScheduler {
+        SimScheduler::new(catalogue().into_iter().filter(|n| n.testcluster).collect())
+    }
+
+    fn job(dur: f64) -> Payload {
+        Box::new(move |_n, _t| JobOutcome {
+            duration: dur,
+            stdout: String::new(),
+            exit_code: 0,
+        })
+    }
+
+    #[test]
+    fn events_interleave_two_batches_on_shared_nodes() {
+        let mut s = sched();
+        // batch 1: two 10 s jobs on icx36, one 30 s job on rome1
+        let a1 = s.submit(SubmitSpec::new("a1", "icx36").batch(1), job(10.0)).unwrap();
+        let a2 = s.submit(SubmitSpec::new("a2", "icx36").batch(1), job(10.0)).unwrap();
+        let a3 = s.submit(SubmitSpec::new("a3", "rome1").batch(1), job(30.0)).unwrap();
+        // batch 2 submitted immediately after: one icx36 job
+        let b1 = s.submit(SubmitSpec::new("b1", "icx36").batch(2), job(5.0)).unwrap();
+        s.run_until_idle();
+        // batch 2's job ran while batch 1's rome1 job was still running —
+        // the old wait_all world could not start b1 before batch 1 drained
+        assert_eq!(s.job(a1).unwrap().end_time, Some(10.0));
+        assert_eq!(s.job(a2).unwrap().end_time, Some(20.0));
+        assert_eq!(s.job(b1).unwrap().start_time, Some(20.0));
+        assert_eq!(s.job(b1).unwrap().end_time, Some(25.0));
+        assert_eq!(s.job(a3).unwrap().end_time, Some(30.0));
+        assert_eq!(s.now(), 30.0);
+    }
+
+    #[test]
+    fn run_until_done_stops_at_target_set() {
+        let mut s = sched();
+        let fast = s.submit(SubmitSpec::new("fast", "icx36"), job(10.0)).unwrap();
+        let slow = s.submit(SubmitSpec::new("slow", "rome1"), job(100.0)).unwrap();
+        s.run_until_done(&[fast]);
+        assert_eq!(s.job(fast).unwrap().state, JobState::Completed);
+        // the slow job started (shared clock) but has not finished
+        assert_eq!(s.job(slow).unwrap().state, JobState::Running);
+        assert_eq!(s.now(), 10.0);
+        s.run_until_idle();
+        assert_eq!(s.job(slow).unwrap().state, JobState::Completed);
+        assert_eq!(s.now(), 100.0);
+    }
+
+    #[test]
+    fn priority_jumps_the_node_queue() {
+        let mut s = sched();
+        // filler occupies the node; low arrives before high
+        let filler = s.submit(SubmitSpec::new("filler", "icx36"), job(10.0)).unwrap();
+        let low = s.submit(SubmitSpec::new("low", "icx36").priority(0), job(1.0)).unwrap();
+        let high = s.submit(SubmitSpec::new("high", "icx36").priority(5), job(1.0)).unwrap();
+        s.run_until_idle();
+        assert_eq!(s.job(filler).unwrap().end_time, Some(10.0));
+        assert_eq!(s.job(high).unwrap().start_time, Some(10.0));
+        assert_eq!(s.job(low).unwrap().start_time, Some(11.0));
+    }
+
+    #[test]
+    fn fair_share_prefers_the_starved_owner() {
+        let mut s = sched();
+        // owner A floods the node; owner B submits one job last
+        let a1 = s.submit(SubmitSpec::new("a1", "icx36").owner("repo-a"), job(10.0)).unwrap();
+        let a2 = s.submit(SubmitSpec::new("a2", "icx36").owner("repo-a"), job(10.0)).unwrap();
+        let b1 = s.submit(SubmitSpec::new("b1", "icx36").owner("repo-b"), job(10.0)).unwrap();
+        s.run_until_idle();
+        // after a1 finishes, repo-a has 10 node-seconds on the ledger and
+        // repo-b has 0 — b1 runs before a2 despite its later submission
+        assert_eq!(s.job(a1).unwrap().end_time, Some(10.0));
+        assert_eq!(s.job(b1).unwrap().start_time, Some(10.0));
+        assert_eq!(s.job(a2).unwrap().start_time, Some(20.0));
+        assert_eq!(s.owner_usage("repo-a"), 20.0);
+        assert_eq!(s.owner_usage("repo-b"), 10.0);
+    }
+
+    #[test]
+    fn per_node_slots_run_concurrently() {
+        let nodes: Vec<_> = catalogue().into_iter().filter(|n| n.testcluster).collect();
+        let mut s = SimScheduler::with_slots(nodes, 2);
+        let a = s.submit(SubmitSpec::new("a", "icx36"), job(10.0)).unwrap();
+        let b = s.submit(SubmitSpec::new("b", "icx36"), job(10.0)).unwrap();
+        let c = s.submit(SubmitSpec::new("c", "icx36"), job(10.0)).unwrap();
+        s.run_until_idle();
+        assert_eq!(s.job(a).unwrap().start_time, Some(0.0));
+        assert_eq!(s.job(b).unwrap().start_time, Some(0.0));
+        assert_eq!(s.job(c).unwrap().start_time, Some(10.0));
+        assert_eq!(s.now(), 20.0);
+    }
+
+    #[test]
+    fn timeline_is_deterministic_across_replays() {
+        let build = || {
+            let mut s = sched();
+            for i in 0..20 {
+                let host = if i % 3 == 0 { "icx36" } else { "rome1" };
+                let owner = if i % 2 == 0 { "a" } else { "b" };
+                s.submit(
+                    SubmitSpec::new(&format!("j{i}"), host)
+                        .owner(owner)
+                        .priority((i % 4) as i64)
+                        .batch(1 + (i % 2) as u64),
+                    job(1.0 + (i % 5) as f64),
+                )
+                .unwrap();
+            }
+            s.run_until_idle();
+            s.timeline()
+        };
+        let t1 = build();
+        let t2 = build();
+        assert!(!t1.is_empty());
+        assert_eq!(t1, t2, "identical submissions must replay identically");
+    }
+
+    #[test]
+    fn cancelled_waiting_job_is_skipped_by_dispatch() {
+        let mut s = sched();
+        let running = s.submit(SubmitSpec::new("r", "icx36"), job(10.0)).unwrap();
+        let queued = s.submit(SubmitSpec::new("q", "icx36"), job(10.0)).unwrap();
+        let after = s.submit(SubmitSpec::new("x", "icx36"), job(10.0)).unwrap();
+        assert!(s.scancel(queued));
+        assert!(!s.scancel(queued));
+        s.run_until_idle();
+        assert_eq!(s.job(queued).unwrap().state, JobState::Cancelled);
+        assert_eq!(s.job(running).unwrap().state, JobState::Completed);
+        // the cancelled job's slot went to the next in line
+        assert_eq!(s.job(after).unwrap().start_time, Some(10.0));
+    }
+
+    #[test]
+    fn completions_carry_batch_and_owner() {
+        let mut s = sched();
+        s.submit(SubmitSpec::new("j", "icx36").owner("walberla").batch(7), job(4.0))
+            .unwrap();
+        s.run_until_idle();
+        let c = &s.completions()[0];
+        assert_eq!(c.batch, 7);
+        assert_eq!(c.owner, "walberla");
+        assert_eq!(c.state, JobState::Completed);
+        assert_eq!((c.start, c.end), (0.0, 4.0));
+    }
+
+    #[test]
+    fn unknown_node_rejected() {
+        let mut s = sched();
+        assert!(s.submit(SubmitSpec::new("x", "cray-1"), job(1.0)).is_err());
+    }
+}

@@ -1,46 +1,32 @@
-//! Slurm stand-in: single-node batch scheduling over the simulated
-//! Testcluster.
+//! Slurm stand-in: the `sbatch --parsable --wait` contract over the
+//! simulated Testcluster.
 //!
 //! The paper's pipeline assembles job scripts and submits them with
 //! `sbatch --parsable --wait --nodelist=$HOST` (Listing 1); the Testcluster
-//! partition only allows single-node jobs (§4.1). This module implements
-//! exactly that contract in simulated time:
+//! partition only allows single-node jobs (§4.1). This module preserves
+//! exactly that contract — but since the `sched::` refactor it is a thin
+//! veneer over the event-driven [`crate::sched::SimScheduler`]:
 //!
-//! * [`Scheduler::sbatch`] queues a job targeting one node (FIFO per node),
+//! * [`Scheduler::sbatch`] queues a job targeting one node,
 //! * job payloads are closures that "run" on the node model and return
 //!   their stdout plus the simulated duration,
 //! * `SLURM_TIMELIMIT` (minutes) kills overrunning jobs (`Timeout` state),
-//! * [`Scheduler::wait_all`] advances simulated time until the queue
-//!   drains (the `--wait` behaviour),
+//! * [`Scheduler::wait_all`] drains the event queue (the `--wait`
+//!   behaviour); phase-split callers use the engine's completion events
+//!   directly instead (see [`crate::coordinator::CbSystem::submit_pipeline`]),
 //! * completed jobs leave a log file content (`$CI_JOB_NAME.o$JOBID.log`).
+//!
+//! Jobs submitted through this wrapper run as owner `default` with
+//! priority 0 — single-tenant FIFO, which is what `sbatch --wait` scripts
+//! expect. Multi-repo fair-share and priorities live in [`crate::sched`].
 
 use crate::cluster::nodes::NodeModel;
-use std::collections::BTreeMap;
+use crate::sched::{SimScheduler, SubmitSpec};
 
-/// Outcome a job payload reports back.
-#[derive(Debug, Clone)]
-pub struct JobOutcome {
-    /// Simulated runtime in seconds.
-    pub duration: f64,
-    /// Captured stdout (the benchmark's output the pipeline parses).
-    pub stdout: String,
-    /// Nonzero = job failed.
-    pub exit_code: i32,
-}
+pub use crate::sched::{JobOutcome, JobState, Payload};
 
-/// The payload executed when the job starts: gets the node model and the
-/// simulated start time.
-pub type Payload = Box<dyn FnOnce(&NodeModel, f64) -> JobOutcome + Send>;
-
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum JobState {
-    Pending,
-    Running,
-    Completed,
-    Failed,
-    Timeout,
-    Cancelled,
-}
+/// Scheduler-side job record (the event engine's).
+pub type Job = crate::sched::SimJob;
 
 /// Submission parameters (the `sbatch` flags the pipeline uses).
 #[derive(Debug, Clone)]
@@ -52,166 +38,71 @@ pub struct JobSpec {
     pub timelimit_min: f64,
 }
 
-/// Scheduler-side job record.
-pub struct Job {
-    pub id: u64,
-    pub spec: JobSpec,
-    pub state: JobState,
-    pub submit_time: f64,
-    pub start_time: Option<f64>,
-    pub end_time: Option<f64>,
-    pub log: String,
-    payload: Option<Payload>,
-}
-
-impl std::fmt::Debug for Job {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("Job")
-            .field("id", &self.id)
-            .field("name", &self.spec.name)
-            .field("node", &self.spec.nodelist)
-            .field("state", &self.state)
-            .finish()
-    }
-}
-
-/// The cluster scheduler: one FIFO queue per node, simulated clock.
+/// The `sbatch --wait` front end over the shared event engine.
 pub struct Scheduler {
-    nodes: BTreeMap<String, NodeModel>,
-    jobs: Vec<Job>,
-    /// Per-node: sim time at which the node becomes free.
-    node_free_at: BTreeMap<String, f64>,
-    clock: f64,
-    next_id: u64,
+    core: SimScheduler,
 }
 
 impl Scheduler {
-    /// Build a scheduler over the given nodes.
+    /// Build a scheduler over the given nodes (one run slot per node).
     pub fn new(nodes: Vec<NodeModel>) -> Scheduler {
-        let node_free_at = nodes.iter().map(|n| (n.host.to_string(), 0.0)).collect();
         Scheduler {
-            nodes: nodes.into_iter().map(|n| (n.host.to_string(), n)).collect(),
-            jobs: Vec::new(),
-            node_free_at,
-            clock: 0.0,
-            next_id: 1000,
+            core: SimScheduler::new(nodes),
         }
     }
 
     pub fn now(&self) -> f64 {
-        self.clock
+        self.core.now()
     }
     pub fn nodes(&self) -> impl Iterator<Item = &NodeModel> {
-        self.nodes.values()
+        self.core.nodes()
     }
     pub fn node(&self, host: &str) -> Option<&NodeModel> {
-        self.nodes.get(host)
+        self.core.node(host)
+    }
+
+    /// Direct access to the underlying event engine.
+    pub fn core(&self) -> &SimScheduler {
+        &self.core
+    }
+    pub fn core_mut(&mut self) -> &mut SimScheduler {
+        &mut self.core
     }
 
     /// `sbatch --parsable`: queue a job, return its id. Errors if the
     /// nodelist names an unknown host (sbatch would reject it).
     pub fn sbatch(&mut self, spec: JobSpec, payload: Payload) -> Result<u64, String> {
-        if !self.nodes.contains_key(&spec.nodelist) {
-            return Err(format!(
-                "sbatch: invalid nodelist `{}` (unknown host)",
-                spec.nodelist
-            ));
-        }
-        let id = self.next_id;
-        self.next_id += 1;
-        self.jobs.push(Job {
-            id,
-            spec,
-            state: JobState::Pending,
-            submit_time: self.clock,
-            start_time: None,
-            end_time: None,
-            log: String::new(),
-            payload: Some(payload),
-        });
-        Ok(id)
+        self.core.submit(
+            SubmitSpec::new(&spec.name, &spec.nodelist).timelimit(spec.timelimit_min),
+            payload,
+        )
     }
 
     /// `squeue`: all jobs in the given state.
     pub fn squeue(&self, state: JobState) -> Vec<&Job> {
-        self.jobs.iter().filter(|j| j.state == state).collect()
+        self.core.squeue(state)
     }
 
     pub fn job(&self, id: u64) -> Option<&Job> {
-        self.jobs.iter().find(|j| j.id == id)
+        self.core.job(id)
     }
 
     /// `scancel`.
     pub fn scancel(&mut self, id: u64) -> bool {
-        for j in &mut self.jobs {
-            if j.id == id && j.state == JobState::Pending {
-                j.state = JobState::Cancelled;
-                j.payload = None;
-                return true;
-            }
-        }
-        false
+        self.core.scancel(id)
     }
 
-    /// Run every pending job to completion in FIFO order per node,
-    /// advancing the simulated clock (the `--wait` semantics the pipeline
-    /// relies on). Returns ids of jobs executed this call.
+    /// Drain the event queue (the `--wait` semantics the pipeline relies
+    /// on): every queued job runs to completion, FIFO per node at equal
+    /// priority. Returns ids of jobs that finished during this call.
     pub fn wait_all(&mut self) -> Vec<u64> {
-        let mut executed = Vec::new();
-        // FIFO per node: process in submission order
-        let order: Vec<usize> = (0..self.jobs.len())
-            .filter(|&i| self.jobs[i].state == JobState::Pending)
-            .collect();
-        for i in order {
-            let node_host = self.jobs[i].spec.nodelist.clone();
-            let node = self.nodes[&node_host].clone();
-            let free_at = self.node_free_at[&node_host].max(self.jobs[i].submit_time);
-            let start = free_at;
-            let payload = self.jobs[i].payload.take().expect("pending job has payload");
-            self.jobs[i].state = JobState::Running;
-            self.jobs[i].start_time = Some(start);
-
-            let outcome = payload(&node, start);
-            let limit = self.jobs[i].spec.timelimit_min * 60.0;
-            let (dur, state) = if outcome.duration > limit {
-                (limit, JobState::Timeout)
-            } else if outcome.exit_code != 0 {
-                (outcome.duration, JobState::Failed)
-            } else {
-                (outcome.duration, JobState::Completed)
-            };
-            let end = start + dur;
-            self.node_free_at.insert(node_host.clone(), end);
-            self.clock = self.clock.max(end);
-
-            let j = &mut self.jobs[i];
-            j.end_time = Some(end);
-            j.state = state;
-            j.log = format!(
-                "== slurm job {} ({}) on {} ==\nsubmit={:.3} start={:.3} end={:.3} state={:?}\n{}{}",
-                j.id,
-                j.spec.name,
-                j.spec.nodelist,
-                j.submit_time,
-                start,
-                end,
-                state,
-                outcome.stdout,
-                if state == JobState::Timeout {
-                    format!("\nslurmstepd: *** JOB {} CANCELLED DUE TO TIME LIMIT ***\n", j.id)
-                } else {
-                    String::new()
-                }
-            );
-            executed.push(j.id);
-        }
-        executed
+        self.core.run_until_idle()
     }
 
     /// The log-file content the CI job `cat`s after `--wait` returns
     /// (`${CI_JOB_NAME}.o${job_id}.log` in Listing 1).
     pub fn job_log(&self, id: u64) -> Option<&str> {
-        self.job(id).map(|j| j.log.as_str())
+        self.core.job_log(id)
     }
 }
 

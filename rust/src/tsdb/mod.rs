@@ -214,6 +214,54 @@ impl Db {
             .unwrap_or(&[])
     }
 
+    /// Points of `measurement` within the inclusive `[t_min, t_max]`
+    /// window, located by binary search on the time-sorted storage —
+    /// the pushdown behind [`Query::range`], O(log n + hits) instead of
+    /// a full scan.
+    pub fn points_in_range(
+        &self,
+        measurement: &str,
+        t_min: Option<i64>,
+        t_max: Option<i64>,
+    ) -> &[Point] {
+        let pts = self.points(measurement);
+        let lo = t_min.map(|t| pts.partition_point(|p| p.ts < t)).unwrap_or(0);
+        let hi = t_max
+            .map(|t| pts.partition_point(|p| p.ts <= t))
+            .unwrap_or(pts.len());
+        if lo >= hi {
+            &[]
+        } else {
+            &pts[lo..hi]
+        }
+    }
+
+    /// Timestamp at which the trailing `n` *distinct* timestamps of
+    /// `measurement` begin — the pushdown bound behind [`Query::tail`].
+    /// CB uploads one point per live series per pipeline trigger, so the
+    /// walk from the end touches O(n × series) points regardless of how
+    /// many years of history sit in front. Returns `None` for an empty
+    /// measurement or `n == 0`; with fewer than `n` distinct timestamps
+    /// it returns the earliest one.
+    pub fn tail_start_ts(&self, measurement: &str, n: usize) -> Option<i64> {
+        if n == 0 {
+            return None;
+        }
+        let pts = self.points(measurement);
+        let mut distinct = 0usize;
+        let mut last: Option<i64> = None;
+        for p in pts.iter().rev() {
+            if last != Some(p.ts) {
+                distinct += 1;
+                last = Some(p.ts);
+                if distinct == n {
+                    return last;
+                }
+            }
+        }
+        last
+    }
+
     /// All distinct values of `tag` within a measurement — powers the
     /// dashboard template-variable dropdowns (the "collision Setup menu").
     pub fn tag_values(&self, measurement: &str, tag: &str) -> Vec<String> {
@@ -364,6 +412,41 @@ lbm,node=rome1,op=srt mlups=400 3
         assert_eq!(db.tag_values("lbm", "op"), vec!["srt", "trt"]);
         assert_eq!(db.tag_values("lbm", "node"), vec!["icx36", "rome1"]);
         assert!(db.tag_values("lbm", "missing").is_empty());
+    }
+
+    #[test]
+    fn points_in_range_binary_search_matches_scan() {
+        let mut db = Db::new();
+        for ts in [1, 2, 2, 3, 5, 8, 8, 9] {
+            db.insert(Point::new("m", ts).field("v", ts as f64));
+        }
+        let slice = db.points_in_range("m", Some(2), Some(8));
+        assert_eq!(slice.len(), 6);
+        assert_eq!(slice.first().unwrap().ts, 2);
+        assert_eq!(slice.last().unwrap().ts, 8);
+        assert_eq!(db.points_in_range("m", None, Some(1)).len(), 1);
+        assert_eq!(db.points_in_range("m", Some(9), None).len(), 1);
+        assert!(db.points_in_range("m", Some(6), Some(7)).is_empty());
+        assert!(db.points_in_range("m", Some(10), None).is_empty());
+        assert_eq!(db.points_in_range("m", None, None).len(), 8);
+        assert!(db.points_in_range("nosuch", None, None).is_empty());
+    }
+
+    #[test]
+    fn tail_start_ts_counts_distinct_timestamps() {
+        let mut db = Db::new();
+        // two series reporting at each of 4 pipeline triggers
+        for ts in [10, 20, 30, 40] {
+            db.insert(Point::new("m", ts).tag("s", "a").field("v", 1.0));
+            db.insert(Point::new("m", ts).tag("s", "b").field("v", 2.0));
+        }
+        assert_eq!(db.tail_start_ts("m", 1), Some(40));
+        assert_eq!(db.tail_start_ts("m", 2), Some(30));
+        assert_eq!(db.tail_start_ts("m", 4), Some(10));
+        // fewer distinct timestamps than requested: earliest
+        assert_eq!(db.tail_start_ts("m", 99), Some(10));
+        assert_eq!(db.tail_start_ts("m", 0), None);
+        assert_eq!(db.tail_start_ts("nosuch", 3), None);
     }
 
     #[test]

@@ -6,6 +6,13 @@
 use super::{Db, Point};
 use std::collections::BTreeMap;
 
+/// How many distinct *global* timestamps a filtered `tail(n)` bound scan
+/// may visit per requested window slot (`n × TAIL_SCAN_SLACK` total).
+/// Generous enough for 32 co-tenant repositories to interleave triggers
+/// at full window depth, while keeping the worst case (filter matches
+/// nothing) bounded instead of O(full history).
+const TAIL_SCAN_SLACK: usize = 32;
+
 /// Aggregation over a field within a group.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Aggregate {
@@ -31,6 +38,10 @@ pub struct Query {
     /// Inclusive time range in ns; None = unbounded.
     pub t_min: Option<i64>,
     pub t_max: Option<i64>,
+    /// Keep only the trailing `n` points of every group (`tail(n)`), and
+    /// push the scan down to the trailing `n` distinct timestamps of the
+    /// measurement — see [`Query::tail`].
+    pub tail: Option<usize>,
     /// Tags to group the series by.
     pub group_by: Vec<String>,
 }
@@ -92,6 +103,27 @@ impl Query {
         self.t_max = Some(t_max);
         self
     }
+    /// `tail(n)`: return only the trailing `n` points of every group.
+    ///
+    /// This is the per-pipeline detection pushdown: the scan is bounded to
+    /// the trailing `n` *distinct* timestamps — of the whole measurement
+    /// ([`Db::tail_start_ts`]) for unfiltered queries, or of the points
+    /// matching the tag filters when `where_tag`/`where_tag_in` are set
+    /// (so a query scoped to one repository counts that repository's
+    /// trigger times, not its co-tenants'). Cost tracks the window size,
+    /// not the total history length. CB uploads one point per live series
+    /// per pipeline trigger, which makes the two notions line up; a
+    /// series that stopped reporting more than `n` (matching) triggers
+    /// ago falls outside the bound and comes back empty — i.e. "not
+    /// measured anymore", which is exactly what the detector's
+    /// evaluated-series bookkeeping wants. Caveat: an *unfiltered*
+    /// query over a TSDB where k tenants upload at interleaved trigger
+    /// times sees only ~n/k points per tenant series — scope the query
+    /// (as `coordinator::check_regressions` does) when that matters.
+    pub fn tail(mut self, n: usize) -> Query {
+        self.tail = Some(n);
+        self
+    }
     pub fn group_by(mut self, tags: &[&str]) -> Query {
         self.group_by = tags.iter().map(|s| s.to_string()).collect();
         self
@@ -123,10 +155,66 @@ impl Query {
     }
 
     /// Execute against a DB, returning one series per group (sorted by
-    /// group label for stable output).
+    /// group label for stable output). Time ranges and `tail(n)` are
+    /// pushed down to the storage layer: the scan is bounded by binary
+    /// search ([`Db::points_in_range`]) / the trailing distinct timestamps
+    /// ([`Db::tail_start_ts`]) instead of materializing the full series.
     pub fn run(&self, db: &Db) -> Vec<GroupedSeries> {
+        let scan: &[Point] = if self.t_min.is_some() || self.t_max.is_some() {
+            db.points_in_range(&self.measurement, self.t_min, self.t_max)
+        } else if let Some(n) = self.tail {
+            let t0 = if n == 0 {
+                None
+            } else if self.where_tags.is_empty() && self.where_tag_in.is_empty() {
+                db.tail_start_ts(&self.measurement, n)
+            } else {
+                // with tag filters the bound must count distinct
+                // timestamps among MATCHING points only — otherwise k
+                // co-tenant repositories uploading at distinct trigger
+                // times would shrink each other's window to n/k. The
+                // walk itself is capped at n × TAIL_SCAN_SLACK distinct
+                // *global* timestamps so a filter matching nothing (or a
+                // long-stale tenant) cannot regress the scan to O(full
+                // history): tenants whose last n uploads are spread over
+                // more interleaved foreign triggers than that are treated
+                // as stale, like any series outside the tail window.
+                let cap = n.saturating_mul(TAIL_SCAN_SLACK);
+                let mut distinct = 0usize;
+                let mut global_distinct = 0usize;
+                let mut last_global: Option<i64> = None;
+                let mut last: Option<i64> = None;
+                let mut bound: Option<i64> = None;
+                for p in db.points(&self.measurement).iter().rev() {
+                    if last_global != Some(p.ts) {
+                        global_distinct += 1;
+                        last_global = Some(p.ts);
+                        if global_distinct > cap {
+                            break;
+                        }
+                    }
+                    if !self.matches(p) {
+                        continue;
+                    }
+                    if last != Some(p.ts) {
+                        distinct += 1;
+                        last = Some(p.ts);
+                        if distinct == n {
+                            bound = last;
+                            break;
+                        }
+                    }
+                }
+                bound.or(last)
+            };
+            match t0 {
+                Some(t0) => db.points_in_range(&self.measurement, Some(t0), None),
+                None => &[],
+            }
+        } else {
+            db.points(&self.measurement)
+        };
         let mut groups: BTreeMap<Vec<(String, String)>, GroupedSeries> = BTreeMap::new();
-        for p in db.points(&self.measurement) {
+        for p in scan {
             if !self.matches(p) {
                 continue;
             }
@@ -146,7 +234,16 @@ impl Query {
             });
             entry.points.push((p.ts, p.fields[&self.field]));
         }
-        groups.into_values().collect()
+        let mut out: Vec<GroupedSeries> = groups.into_values().collect();
+        if let Some(n) = self.tail {
+            for s in &mut out {
+                if s.points.len() > n {
+                    let cut = s.points.len() - n;
+                    s.points.drain(..cut);
+                }
+            }
+        }
+        out
     }
 
     /// Execute and aggregate each group to a single value.
@@ -216,6 +313,96 @@ mod tests {
             .range(2, 2)
             .run(&db);
         assert_eq!(series[0].points, vec![(2, 41.0)]);
+    }
+
+    #[test]
+    fn tail_keeps_last_n_points_per_group() {
+        let db = test_db();
+        let series = Query::new("fe2ti", "tts")
+            .where_tag("node", "icx36")
+            .group_by(&["solver"])
+            .tail(1)
+            .run(&db);
+        assert_eq!(series.len(), 2);
+        assert_eq!(series[0].points, vec![(2, 41.0)]);
+        assert_eq!(series[1].points, vec![(2, 61.0)]);
+        // tail larger than history: everything survives
+        let series = Query::new("fe2ti", "tts")
+            .where_tag("node", "icx36")
+            .where_tag("solver", "ilu")
+            .tail(10)
+            .run(&db);
+        assert_eq!(series[0].points.len(), 2);
+    }
+
+    #[test]
+    fn tail_pushdown_skips_series_outside_the_trailing_window() {
+        // a series that stopped reporting long ago is "not measured
+        // anymore" under tail(n) — it must not come back as stale data
+        let mut db = Db::new();
+        db.insert(Point::new("m", 1).tag("s", "dead").field("v", 5.0));
+        for ts in 10..20 {
+            db.insert(Point::new("m", ts).tag("s", "live").field("v", ts as f64));
+        }
+        let series = Query::new("m", "v").group_by(&["s"]).tail(2).run(&db);
+        assert_eq!(series.len(), 1);
+        assert_eq!(series[0].group["s"], "live");
+        assert_eq!(series[0].points, vec![(18, 18.0), (19, 19.0)]);
+        // without tail the dead series is still there
+        assert_eq!(Query::new("m", "v").group_by(&["s"]).run(&db).len(), 2);
+    }
+
+    #[test]
+    fn filtered_tail_counts_matching_timestamps_only() {
+        // two tenants alternate trigger timestamps; a repo-scoped tail(2)
+        // must keep the repo's last 2 uploads, not last-2-overall / 2
+        let mut db = Db::new();
+        for (ts, repo, v) in [
+            (1, "a", 10.0),
+            (2, "b", 20.0),
+            (3, "a", 11.0),
+            (4, "b", 21.0),
+            (5, "a", 12.0),
+            (6, "b", 22.0),
+        ] {
+            db.insert(Point::new("m", ts).tag("repo", repo).field("v", v));
+        }
+        let series = Query::new("m", "v")
+            .where_tag("repo", "a")
+            .group_by(&["repo"])
+            .tail(2)
+            .run(&db);
+        assert_eq!(series.len(), 1);
+        assert_eq!(series[0].points, vec![(3, 11.0), (5, 12.0)]);
+        // unfiltered tail(2) only reaches timestamps 5..6 — one point per
+        // tenant — the caveat the scoped form exists for
+        let series = Query::new("m", "v").group_by(&["repo"]).tail(2).run(&db);
+        assert_eq!(series[0].points, vec![(5, 12.0)]);
+        assert_eq!(series[1].points, vec![(6, 22.0)]);
+    }
+
+    #[test]
+    fn filtered_tail_walk_is_capped_for_stale_tenants() {
+        // a tenant whose only upload sits deeper than n × TAIL_SCAN_SLACK
+        // interleaved foreign triggers is treated as stale instead of
+        // forcing an O(full history) reverse walk
+        let mut db = Db::new();
+        db.insert(Point::new("m", 0).tag("repo", "old").field("v", 1.0));
+        for ts in 1..200 {
+            db.insert(Point::new("m", ts).tag("repo", "live").field("v", ts as f64));
+        }
+        let series = Query::new("m", "v")
+            .where_tag("repo", "old")
+            .group_by(&["repo"])
+            .tail(1)
+            .run(&db);
+        assert!(series.is_empty(), "beyond the capped walk => stale");
+        let series = Query::new("m", "v")
+            .where_tag("repo", "live")
+            .group_by(&["repo"])
+            .tail(1)
+            .run(&db);
+        assert_eq!(series[0].points, vec![(199, 199.0)]);
     }
 
     #[test]
