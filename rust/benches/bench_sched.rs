@@ -49,7 +49,7 @@ fn main() {
     let out = run_campaign(
         &mut cb,
         &mut projects,
-        &CampaignConfig { pushes: 2, inject_at: 0, penalty: 0.0, seed: 1 },
+        &CampaignConfig { pushes: 2, penalty: 0.0, seed: 1, ..CampaignConfig::default() },
     )
     .unwrap();
     println!(
@@ -83,7 +83,7 @@ fn main() {
         let out = run_campaign(
             &mut cb,
             &mut projects,
-            &CampaignConfig { pushes: 1, inject_at: 0, penalty: 0.0, seed: 1 },
+            &CampaignConfig { pushes: 1, penalty: 0.0, seed: 1, ..CampaignConfig::default() },
         )
         .unwrap();
         println!(
@@ -104,7 +104,7 @@ fn main() {
     let out = run_campaign(
         &mut cb,
         &mut projects,
-        &CampaignConfig { pushes: 1, inject_at: 0, penalty: 0.0, seed: 2 },
+        &CampaignConfig { pushes: 1, penalty: 0.0, seed: 2, ..CampaignConfig::default() },
     )
     .unwrap();
     let urgent = out.reports.iter().find(|r| r.repo == "urgent").unwrap();
@@ -118,5 +118,71 @@ fn main() {
         "priority lane        : urgent pipeline wall {} vs slowest bulk {}",
         cbench::util::fmt_secs(urgent.duration),
         cbench::util::fmt_secs(bulk_wall)
+    );
+
+    // the gap-heavy roster: maintenance windows + mixed timelimits, the
+    // same submissions dispatched with and without conservative backfill.
+    // Backfill-on must come in strictly below backfill-off here — the
+    // acceptance number of the backfill refactor (BACKFILL_JSON is
+    // embedded into the per-commit bench history by CI).
+    println!("\n== backfill on/off on a gap-heavy roster (simulated time) ==\n");
+    let gap_heavy = |backfill: bool| -> (f64, usize) {
+        let mut s =
+            SimScheduler::new(catalogue().into_iter().filter(|n| n.testcluster).collect());
+        s.set_backfill(backfill);
+        // three nodes drained mid-roster; long-limit jobs cannot start in
+        // front of the windows, short-limit jobs can
+        for host in ["icx36", "rome1", "genoa2"] {
+            s.maintenance(host, 240.0, 4000.0).unwrap();
+        }
+        let hosts = ["icx36", "rome1", "genoa2", "medusa"];
+        let mut n = 0u64;
+        for i in 0..48 {
+            let host = hosts[i % hosts.len()];
+            // alternate hour-scale and minute-scale timelimits; distinct
+            // priorities keep the dispatch order fair-share-independent
+            let (tl_min, dur) = if i % 3 == 0 { (90.0, 600.0) } else { (2.0, 45.0) };
+            s.submit(
+                SubmitSpec::new(&format!("g{i}"), host)
+                    .timelimit(tl_min)
+                    .priority(1000 - i as i64)
+                    .owner(if i % 2 == 0 { "repo-a" } else { "repo-b" }),
+                Box::new(move |_n, _t| JobOutcome {
+                    duration: dur,
+                    stdout: String::new(),
+                    exit_code: 0,
+                }),
+            )
+            .unwrap();
+            n += 1;
+        }
+        s.run_until_idle();
+        let backfills = s.jobs().filter(|j| j.backfilled).count();
+        assert_eq!(s.jobs().count() as u64, n);
+        (s.now(), backfills)
+    };
+    let (makespan_on, backfills_on) = gap_heavy(true);
+    let (makespan_off, backfills_off) = gap_heavy(false);
+    println!(
+        "  backfill on : makespan {} ({} backfilled starts)",
+        cbench::util::fmt_secs(makespan_on),
+        backfills_on
+    );
+    println!(
+        "  backfill off: makespan {} ({} backfilled starts)",
+        cbench::util::fmt_secs(makespan_off),
+        backfills_off
+    );
+    println!(
+        "  {}",
+        if makespan_on < makespan_off {
+            "backfill-on makespan strictly BELOW backfill-off"
+        } else {
+            "no win on this roster"
+        }
+    );
+    println!(
+        "BACKFILL_JSON {{\"makespan_on_s\":{makespan_on:.3},\"makespan_off_s\":{makespan_off:.3},\"backfilled_jobs\":{backfills_on},\"improved\":{}}}",
+        makespan_on < makespan_off
     );
 }

@@ -47,9 +47,11 @@ impl CiJob {
         self.variables.get(k).map(|s| s.as_str())
     }
     /// `SLURM_TIMELIMIT` in minutes (default 120, as in Listing 1).
+    /// Accepts plain minutes or any sbatch `--time` form (`H:M:S`,
+    /// `D-H:M:S`, ... — see [`crate::slurm::parse_time`]).
     pub fn timelimit_min(&self) -> f64 {
         self.get("SLURM_TIMELIMIT")
-            .and_then(|v| v.parse().ok())
+            .and_then(crate::slurm::parse_time)
             .unwrap_or(120.0)
     }
 }
@@ -193,6 +195,11 @@ mod tests {
         assert_eq!(j.get("HOST"), Some("icx36"));
         assert_eq!(j.timelimit_min(), 60.0);
         assert_eq!(CiJob::new("x", "s").timelimit_min(), 120.0);
+        // sbatch --time grammar is accepted too; garbage falls back
+        let j = CiJob::new("y", "s").var("SLURM_TIMELIMIT", "2:30:00");
+        assert_eq!(j.timelimit_min(), 150.0);
+        let j = CiJob::new("z", "s").var("SLURM_TIMELIMIT", "soon");
+        assert_eq!(j.timelimit_min(), 120.0);
     }
 
     #[test]

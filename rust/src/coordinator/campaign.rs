@@ -127,6 +127,17 @@ pub struct CampaignConfig {
     /// Salts the simulated commit contents: same seed + same projects →
     /// identical commit chain, timeline and TSDB, byte for byte.
     pub seed: u64,
+    /// Timelimit-aware conservative backfill on the shared scheduler
+    /// (`cbench campaign --backfill on|off`; on by default). Off, a node
+    /// whose head-of-queue job is blocked by a maintenance window idles
+    /// until the job's shadow start.
+    pub backfill: bool,
+    /// Maintenance windows applied before the first submission:
+    /// `(host, from, until)` in simulated seconds (`cbench campaign
+    /// --drain NODE@FROM..TO`). Campaigns never call `resume`, so `until`
+    /// must be finite — an open-ended drain would silently strand every
+    /// job pinned to that node ([`run_campaign_with`] rejects it).
+    pub drains: Vec<(String, f64, f64)>,
 }
 
 impl Default for CampaignConfig {
@@ -136,6 +147,8 @@ impl Default for CampaignConfig {
             inject_at: 0,
             penalty: 0.15,
             seed: 42,
+            backfill: true,
+            drains: Vec::new(),
         }
     }
 }
@@ -165,6 +178,10 @@ impl CampaignOutcome {
     }
     pub fn total_jobs(&self) -> usize {
         self.reports.iter().map(|r| r.jobs_total).sum()
+    }
+    /// Job starts the scheduler backfilled into maintenance-window gaps.
+    pub fn jobs_backfilled(&self) -> usize {
+        self.reports.iter().map(|r| r.jobs_backfilled).sum()
     }
     pub fn alerts_opened(&self) -> usize {
         self.reports.iter().map(|r| r.regressions.opened).sum()
@@ -199,6 +216,22 @@ pub fn run_campaign_with(
         cfg.inject_at,
         cfg.pushes
     );
+    // scheduler policy for this campaign: backfill mode + maintenance
+    // windows land before the first submission so the whole roster is
+    // dispatched (and replays) under one deterministic configuration
+    cb.scheduler.set_backfill(cfg.backfill);
+    for (host, from, until) in &cfg.drains {
+        // a campaign never resumes nodes, so an open-ended drain would
+        // strand that node's jobs forever while the run "succeeds"
+        anyhow::ensure!(
+            until.is_finite(),
+            "campaign drain on `{host}` needs a finite end time — open-ended \
+             drains are only usable with an explicit scheduler resume"
+        );
+        cb.scheduler
+            .maintenance(host, *from, *until)
+            .map_err(|e| anyhow::anyhow!(e))?;
+    }
     let t0 = cb.scheduler.now();
 
     // --- push rounds: every project commits once per round ---
@@ -283,6 +316,8 @@ pub fn run_campaign_with(
                 .field("standalone", r.standalone_duration)
                 .field("jobs", r.jobs_total as f64)
                 .field("failed", r.jobs_failed as f64)
+                .field("backfilled", r.jobs_backfilled as f64)
+                .field("head_of_line", (r.jobs_total - r.jobs_backfilled) as f64)
                 .field("points", r.points_uploaded as f64),
         );
         reports.push(r);
@@ -330,7 +365,7 @@ mod tests {
             CampaignProject::new("alpha", ProjectKind::Walberla),
             CampaignProject::new("beta", ProjectKind::Walberla),
         ];
-        let cfg = CampaignConfig { pushes: 1, inject_at: 0, penalty: 0.0, seed: 1 };
+        let cfg = CampaignConfig { pushes: 1, penalty: 0.0, seed: 1, ..CampaignConfig::default() };
         let out = run_campaign_with(&mut cb, &mut projects, &cfg, |p, _c| {
             if p.name == "alpha" {
                 toy_jobs("a", &[("icx36", 10.0, 3), ("rome1", 5.0, 1)])
@@ -349,6 +384,64 @@ mod tests {
         // both repos tagged in the shared TSDB + campaign meta-points
         assert_eq!(cb.db.tag_values("lbm", "repo"), vec!["alpha", "beta"]);
         assert_eq!(cb.db.points("campaign").len(), 2);
+    }
+
+    fn toy_jobs_tl(tag: &str, spec: &[(&str, f64, f64, usize)]) -> Vec<PreparedJob> {
+        // (host, duration, timelimit minutes, count)
+        let mut jobs = Vec::new();
+        for (host, dur, tl, count) in spec {
+            for i in 0..*count {
+                let dur = *dur;
+                jobs.push(PreparedJob {
+                    ci: CiJob::new(&format!("{tag}-{host}-{i}"), "benchmark")
+                        .var("HOST", host)
+                        .var("SLURM_TIMELIMIT", &format!("{tl}")),
+                    payload: Box::new(move |_n, _t| JobOutcome {
+                        duration: dur,
+                        stdout: format!("TAG op=x\nMETRIC v={dur}\n"),
+                        exit_code: 0,
+                    }),
+                });
+            }
+        }
+        jobs
+    }
+
+    #[test]
+    fn drained_campaign_backfills_and_beats_backfill_off() {
+        // icx36 drains over [100, 2000): the long job (60 min limit)
+        // is pushed past the window; with backfill on, the short-limit
+        // jobs run inside the gap instead of idling behind it
+        let run = |backfill: bool| {
+            let mut cb = CbSystem::new();
+            let mut projects = vec![CampaignProject::new("alpha", ProjectKind::Walberla)];
+            let cfg = CampaignConfig {
+                pushes: 1,
+                penalty: 0.0,
+                seed: 1,
+                backfill,
+                drains: vec![("icx36".to_string(), 100.0, 2000.0)],
+                ..CampaignConfig::default()
+            };
+            run_campaign_with(&mut cb, &mut projects, &cfg, |_p, _c| {
+                let mut jobs = toy_jobs_tl("big", &[("icx36", 300.0, 60.0, 1)]);
+                jobs.extend(toy_jobs_tl("small", &[("icx36", 30.0, 1.0, 2)]));
+                jobs
+            })
+            .unwrap()
+        };
+        let on = run(true);
+        let off = run(false);
+        // off: nothing fits before the window -> 2000 + 300 + 30 + 30
+        // on: both 1-min-limit jobs run in the gap -> 2000 + 300
+        assert_eq!(off.makespan, 2360.0);
+        assert_eq!(on.makespan, 2300.0);
+        assert!(on.makespan < off.makespan);
+        assert_eq!(on.jobs_backfilled(), 2);
+        assert_eq!(off.jobs_backfilled(), 0);
+        // the per-pipeline meta point records the utilization split
+        assert_eq!(on.reports[0].jobs_backfilled, 2);
+        assert_eq!(on.reports[0].jobs_total, 3);
     }
 
     #[test]

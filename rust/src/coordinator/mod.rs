@@ -189,6 +189,9 @@ pub struct PipelineReport {
     pub jobs_total: usize,
     pub jobs_completed: usize,
     pub jobs_failed: usize,
+    /// Jobs the scheduler backfilled into a maintenance-window gap ahead
+    /// of a blocked higher-priority job (0 on an undrained cluster).
+    pub jobs_backfilled: usize,
     pub points_uploaded: usize,
     pub records_created: usize,
     pub collection: Id,
@@ -480,6 +483,7 @@ impl CbSystem {
 
         let mut completed = 0;
         let mut failed = 0;
+        let mut backfilled = 0;
         let mut points = 0;
         let mut records = 0;
         let mut last_end = pending.submitted_at;
@@ -489,6 +493,9 @@ impl CbSystem {
             let state = job.state;
             let log = job.log.clone();
             let node_host = job.spec.nodelist.clone();
+            if job.backfilled {
+                backfilled += 1;
+            }
             if let (Some(start), Some(end)) = (job.start_time, job.end_time) {
                 last_end = last_end.max(end);
                 *node_load.entry(node_host.clone()).or_insert(0.0) += end - start;
@@ -575,6 +582,7 @@ impl CbSystem {
             jobs_total: pending.jobs.len(),
             jobs_completed: completed,
             jobs_failed: failed,
+            jobs_backfilled: backfilled,
             points_uploaded: points,
             records_created: records,
             collection: coll,

@@ -61,9 +61,12 @@ pub fn walberla_job_matrix(cfg: &BenchConfig) -> Vec<PreparedJob> {
 /// single precision), SRT.
 fn prepare_gpu_job(host: &str, acc_index: usize, penalty: f64) -> PreparedJob {
     let name = format!("uniformgridgpu-{host}-gpu{acc_index}");
+    // GPU projections take a fixed 60 s — a 5 min limit lets these jobs
+    // backfill into maintenance-window gaps the hour-scale CPU jobs
+    // cannot use (the matrix annotates per-class timelimits)
     let ci = CiJob::new(&name, "benchmark")
         .var("HOST", host)
-        .var("SLURM_TIMELIMIT", "60")
+        .var("SLURM_TIMELIMIT", "5")
         .var("SCRIPT", "uniform_grid_gpu.sh");
     let payload = Box::new(move |node: &NodeModel, _t: f64| {
         let Some(acc) = node.accelerators.get(acc_index) else {

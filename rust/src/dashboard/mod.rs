@@ -277,6 +277,20 @@ pub fn campaign_dashboard() -> Dashboard {
                 .group_by(&["repo"])
                 .unit("jobs"),
         )
+        // utilization split under maintenance windows: how many of a
+        // pipeline's job starts were conservative backfills into a
+        // drain-window gap vs ordinary head-of-line dispatches (both 0 /
+        // all-head-of-line on an undrained cluster)
+        .panel(
+            Panel::new("Utilization: backfilled starts", PanelKind::LatestBars, "campaign", "backfilled")
+                .group_by(&["repo"])
+                .unit("jobs"),
+        )
+        .panel(
+            Panel::new("Utilization: head-of-line starts", PanelKind::LatestBars, "campaign", "head_of_line")
+                .group_by(&["repo"])
+                .unit("jobs"),
+        )
         .panel(
             Panel::new("Failed jobs", PanelKind::Stat, "campaign", "failed")
                 .group_by(&["repo"])
@@ -449,6 +463,8 @@ mod tests {
                     .field("duration", dur)
                     .field("standalone", standalone)
                     .field("jobs", 55.0)
+                    .field("backfilled", 4.0)
+                    .field("head_of_line", 51.0)
                     .field("failed", 0.0),
             );
         }
@@ -458,6 +474,9 @@ mod tests {
         assert!(txt.contains("repo=walberla-0"));
         assert!(txt.contains("repo=fe2ti-1"));
         assert!(txt.contains("filter repo:"));
+        // the maintenance-utilization split renders per repository
+        assert!(txt.contains("Utilization: backfilled starts"));
+        assert!(txt.contains("Utilization: head-of-line starts"));
         // repo filter narrows to one project
         let mut d = campaign_dashboard();
         d.select("repo", &["fe2ti-1"]);

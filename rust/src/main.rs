@@ -199,14 +199,48 @@ fn cmd_pipeline(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Parse `--drain NODE@FROM..TO[,NODE@FROM..TO...]` (simulated seconds)
+/// into maintenance windows. TO must be finite: a campaign never resumes
+/// nodes, so an open-ended drain would strand that node's jobs forever.
+fn parse_drain_specs(spec: Option<&str>) -> anyhow::Result<Vec<(String, f64, f64)>> {
+    let mut out = Vec::new();
+    let Some(spec) = spec else { return Ok(out) };
+    for part in spec.split(',').filter(|s| !s.trim().is_empty()) {
+        let part = part.trim();
+        let (host, range) = part
+            .split_once('@')
+            .ok_or_else(|| anyhow::anyhow!("--drain `{part}`: expected NODE@FROM..TO"))?;
+        let (from, to) = range
+            .split_once("..")
+            .ok_or_else(|| anyhow::anyhow!("--drain `{part}`: expected NODE@FROM..TO (seconds)"))?;
+        let from: f64 = from
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--drain `{part}`: FROM is not a number"))?;
+        let to: f64 = to.trim().parse().map_err(|_| {
+            anyhow::anyhow!(
+                "--drain `{part}`: TO is not a number (campaigns need a finite \
+                 resume time — nothing would ever start on the node again)"
+            )
+        })?;
+        anyhow::ensure!(from < to, "--drain `{part}`: FROM must be below TO");
+        anyhow::ensure!(to.is_finite(), "--drain `{part}`: TO must be finite");
+        out.push((host.trim().to_string(), from, to));
+    }
+    Ok(out)
+}
+
 /// `cbench campaign [--repos N] [--pushes M] [--inject-regression K]
-/// [--penalty P] [--seed S] [--save-tsdb FILE] [--save-alerts FILE]` —
+/// [--penalty P] [--seed S] [--backfill on|off] [--drain NODE@FROM..TO]
+/// [--save-tsdb FILE] [--save-alerts FILE]` —
 /// the multi-repo coordinator: N repositories (alternating waLBerla /
 /// FE2TI matrices) each push M commits; every resulting pipeline is
 /// submitted onto ONE event-driven scheduler so their jobs interleave on
 /// the shared Testcluster, then collected (upload + regression check,
 /// serialized per pipeline) in completion order. Reports the overlapped
 /// simulated makespan against the sequential back-to-back baseline.
+/// `--drain` opens scontrol-style maintenance windows; `--backfill off`
+/// disables the timelimit-aware gap filling (for A/B makespan runs).
 fn cmd_campaign(args: &Args) -> anyhow::Result<()> {
     let repos = args.get_usize("repos", 2);
     let pushes = args.get_usize("pushes", 2);
@@ -214,22 +248,32 @@ fn cmd_campaign(args: &Args) -> anyhow::Result<()> {
     let penalty = args.get_f64("penalty", 0.15);
     let seed = args.get_usize("seed", 42) as u64;
     anyhow::ensure!(repos >= 1, "--repos must be at least 1");
+    let backfill = match args.get_or("backfill", "on") {
+        "on" | "true" | "1" => true,
+        "off" | "false" | "0" => false,
+        other => anyhow::bail!("--backfill `{other}`: expected on|off"),
+    };
+    let drains = parse_drain_specs(args.get("drain"))?;
 
     let mut cb = CbSystem::new();
     let (tsdb_path, alerts_path) = load_persisted_state(&mut cb, args)?;
 
     let mut projects = campaign::default_projects(repos);
-    let cfg = CampaignConfig { pushes, inject_at, penalty, seed };
+    let cfg = CampaignConfig { pushes, inject_at, penalty, seed, backfill, drains };
+    for (host, from, until) in &cfg.drains {
+        println!("maintenance: {host} drained over [{from:.0}..{until:.0}) (simulated s)");
+    }
     let out = campaign::run_campaign(&mut cb, &mut projects, &cfg)?;
 
     for r in &out.reports {
         println!(
-            "pipeline #{:<3} {:<12} commit {} jobs={:<3} failed={} points={:<3} wall={} standalone={}{}",
+            "pipeline #{:<3} {:<12} commit {} jobs={:<3} failed={} backfilled={} points={:<3} wall={} standalone={}{}",
             r.pipeline_id,
             r.repo,
             &r.commit_id[..8.min(r.commit_id.len())],
             r.jobs_total,
             r.jobs_failed,
+            r.jobs_backfilled,
             r.points_uploaded,
             cbench::util::fmt_secs(r.duration),
             cbench::util::fmt_secs(r.standalone_duration),
@@ -261,15 +305,25 @@ fn cmd_campaign(args: &Args) -> anyhow::Result<()> {
     } else {
         println!("overlap: no improvement over sequential baseline");
     }
+    if !cfg.drains.is_empty() {
+        println!(
+            "backfill {}: {} of {} job starts went into maintenance-window gaps",
+            if cfg.backfill { "on" } else { "off" },
+            out.jobs_backfilled(),
+            out.total_jobs()
+        );
+    }
     // machine-readable summary (CI records this in the per-commit bench JSON)
     println!(
-        "CAMPAIGN_JSON {{\"repos\":{repos},\"pushes\":{pushes},\"pipelines\":{},\"jobs\":{},\"makespan_s\":{:.3},\"sequential_s\":{:.3},\"speedup\":{:.4},\"alerts_opened\":{}}}",
+        "CAMPAIGN_JSON {{\"repos\":{repos},\"pushes\":{pushes},\"pipelines\":{},\"jobs\":{},\"makespan_s\":{:.3},\"sequential_s\":{:.3},\"speedup\":{:.4},\"alerts_opened\":{},\"backfill\":{},\"backfilled_jobs\":{}}}",
         out.reports.len(),
         out.total_jobs(),
         out.makespan,
         out.sequential_baseline,
         speedup,
-        out.alerts_opened()
+        out.alerts_opened(),
+        cfg.backfill,
+        out.jobs_backfilled()
     );
 
     cb.db.save(Path::new(tsdb_path))?;
@@ -633,14 +687,22 @@ COMMANDS:
                                 persists to cbench_tsdb.lp / cbench_alerts.json
   pipeline describe             explain the pipeline wiring (Figs. 3-4)
   campaign [--repos N] [--pushes M] [--inject-regression K] [--penalty P]
-           [--seed S] [--save-tsdb FILE] [--save-alerts FILE]
+           [--seed S] [--backfill on|off] [--drain NODE@FROM..TO[,..]]
+           [--save-tsdb FILE] [--save-alerts FILE]
                                 multi-repo coordinator: N repositories
                                 (alternating walberla/fe2ti) x M pushes,
                                 every pipeline overlapped on ONE
                                 event-driven scheduler (sched::) with
                                 fair-share between repos; reports the
                                 simulated makespan vs the sequential
-                                back-to-back baseline
+                                back-to-back baseline. --drain opens
+                                scontrol-style maintenance windows (no
+                                job may start inside; a job whose
+                                timelimit crosses one waits for resume);
+                                --backfill off disables the conservative
+                                timelimit-aware gap filling for A/B runs
+                                (TO must be finite: campaigns never
+                                resume a node themselves)
   regress detect [--tsdb FILE] [--alerts FILE]
                                 statistical regression scan of a saved TSDB
                                 (baseline windows, Welch t / Mann-Whitney /
@@ -673,6 +735,15 @@ MULTI-REPO OVERLAP (the sched:: execution model):
   cbench campaign --repos 2 --pushes 3
                                 # 6 pipelines interleaved on one cluster;
                                 # prints overlapped makespan vs sequential
+
+MAINTENANCE + BACKFILL (scheduler realism):
+  cbench campaign --repos 2 --pushes 2 --drain medusa@400..8000
+                                # medusa drained over [400s, 8000s): only
+                                # jobs whose timelimit fits the gap are
+                                # backfilled in front of the window
+  cbench campaign --repos 2 --pushes 2 --drain medusa@400..8000 --backfill off
+                                # same roster, no gap filling -- compare
+                                # the two CAMPAIGN_JSON makespans
 ";
 
 const PIPELINE_DESCRIPTION: &str = "\
@@ -686,10 +757,16 @@ CB pipeline wiring (paper Figs. 3-4):
     -> job scripts assembled (ci::assemble_job_script, Listing 1)
     -> SUBMIT phase (coordinator::submit_pipeline): jobs queued on the
        event-driven scheduler (sched:: over cluster:: node models) tagged
-       with pipeline batch + repository owner + priority; pipelines from
-       other repositories interleave on the same nodes (fair-share picks
-       who runs when a slot frees) -- `cbench campaign` keeps many in
-       flight; the old sbatch --wait contract survives as slurm::
+       with pipeline batch + repository owner + priority + timelimit
+       (SLURM_TIMELIMIT from the job matrix, sbatch --time grammar);
+       pipelines from other repositories interleave on the same nodes
+       (fair-share picks who runs when a slot frees) -- `cbench campaign`
+       keeps many in flight; the old sbatch --wait contract survives as
+       slurm::, including scontrol-style drain/resume
+    -> dispatch is maintenance-aware: inside a drain window no job
+       starts; a job whose timelimit crosses a window waits for the
+       resume edge (its shadow start), and conservative backfill slots
+       shorter-limit jobs into the gap without ever delaying it
     -> COLLECT phase (coordinator::collect_pipeline): the pipeline's
        completion events are consumed; upload + detection below are
        serialized per pipeline even when execution overlapped

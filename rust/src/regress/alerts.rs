@@ -180,6 +180,54 @@ impl AlertBook {
         summary
     }
 
+    /// One-shot schema migration for books written by the PR-1-era
+    /// binary. Back then the stock policies did not group by `repo`, so
+    /// persisted fingerprints/series lack the `repo=` segment and can
+    /// never match a per-repo evaluation again — stale open alerts would
+    /// survive forever instead of auto-resolving (the ROADMAP known gap).
+    ///
+    /// The only producer of such books was the single-repo
+    /// `cbench pipeline <fe2ti|walberla>` flow, whose repository name is
+    /// fixed per measurement, so the missing segment is reconstructable:
+    /// `lbm` series belonged to the `walberla` repository, `fe2ti` series
+    /// to `fe2ti`. Alerts of custom (non-stock) policies are left
+    /// untouched. Runs automatically in [`AlertBook::load`]; idempotent.
+    /// Returns how many alerts were rewritten.
+    pub fn migrate_pr1_fingerprints(&mut self) -> usize {
+        // stock policy -> the repo its PR-1-era series implicitly meant
+        let stock = [("lbm-mlups", "walberla"), ("fe2ti-tts", "fe2ti")];
+        let mut migrated = 0;
+        for a in &mut self.alerts {
+            let Some(&(_, repo)) = stock.iter().find(|(p, _)| *p == a.policy) else {
+                continue;
+            };
+            if a.group.is_empty() && !a.series.is_empty() {
+                // very old books may miss the group map; the series label
+                // is `k=v,...` and authoritative
+                for kv in a.series.split(',') {
+                    if let Some((k, v)) = kv.split_once('=') {
+                        a.group.insert(k.to_string(), v.to_string());
+                    }
+                }
+            }
+            if a.group.contains_key("repo") {
+                continue; // already post-PR-2
+            }
+            a.group.insert("repo".to_string(), repo.to_string());
+            // rebuild the label in canonical (sorted-tag) order — `repo`
+            // is not always the last segment (e.g. before `solver`)
+            a.series = a
+                .group
+                .iter()
+                .map(|(k, v)| format!("{k}={v}"))
+                .collect::<Vec<_>>()
+                .join(",");
+            a.fingerprint = series_fingerprint(&a.policy, &a.series);
+            migrated += 1;
+        }
+        migrated
+    }
+
     /// Forget datastore-scoped ids (archive records, pipeline
     /// collections). Call after loading a book into a *different*
     /// datastore than the one it was built against — ids are sequential
@@ -308,6 +356,8 @@ impl AlertBook {
     }
 
     /// Load a previously saved book; a missing file is an empty book.
+    /// PR-1-era fingerprints (no `repo=` group segment) are rewritten on
+    /// the way in — see [`AlertBook::migrate_pr1_fingerprints`].
     pub fn load(path: &Path) -> std::io::Result<AlertBook> {
         if !path.exists() {
             return Ok(AlertBook::new());
@@ -315,8 +365,10 @@ impl AlertBook {
         let text = std::fs::read_to_string(path)?;
         let j = Json::parse(&text)
             .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
-        AlertBook::from_json(&j)
-            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))
+        let mut book = AlertBook::from_json(&j)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+        book.migrate_pr1_fingerprints();
+        Ok(book)
     }
 }
 
@@ -556,6 +608,100 @@ mod tests {
         let mut back = back;
         back.ingest(&[f2], &["lbm-mlups".to_string()], 8);
         assert_eq!(back.alerts[1].id, a.id + 1);
+    }
+
+    #[test]
+    fn pr1_era_fingerprints_migrate_on_load_and_auto_resolve() {
+        // a synthesized old-format book: stock-policy alerts without the
+        // `repo=` group segment (written by the PR-1 binary)
+        let old = r#"{
+  "next_id": 3,
+  "alerts": [
+    {
+      "id": 1,
+      "fingerprint": "lbm-mlups/case=uniformgridcpu,collision_op=srt,gpu=<none>,node=icx36",
+      "policy": "lbm-mlups",
+      "measurement": "lbm",
+      "field": "mlups",
+      "series": "case=uniformgridcpu,collision_op=srt,gpu=<none>,node=icx36",
+      "group": {"case": "uniformgridcpu", "collision_op": "srt", "gpu": "<none>", "node": "icx36"},
+      "direction": "higher-is-better",
+      "state": "open",
+      "opened_ts": 1, "last_seen_ts": 1, "times_seen": 1,
+      "confidence": 0.9, "baseline_mean": 1000.0, "baseline_sd": 1.0,
+      "current": 800.0, "rel_change": -0.2, "change_ts": 1
+    },
+    {
+      "id": 2,
+      "fingerprint": "fe2ti-tts/case=fe2ti216,node=icx36,solver=ilu",
+      "policy": "fe2ti-tts",
+      "measurement": "fe2ti",
+      "field": "tts",
+      "series": "case=fe2ti216,node=icx36,solver=ilu",
+      "group": {"case": "fe2ti216", "node": "icx36", "solver": "ilu"},
+      "direction": "lower-is-better",
+      "state": "open",
+      "opened_ts": 1, "last_seen_ts": 1, "times_seen": 1,
+      "confidence": 0.8, "baseline_mean": 40.0, "baseline_sd": 1.0,
+      "current": 55.0, "rel_change": 0.37, "change_ts": 1
+    }
+  ]
+}"#;
+        let path = std::env::temp_dir().join("cbench_alerts_pr1_migration.json");
+        std::fs::write(&path, old).unwrap();
+        let mut book = AlertBook::load(&path).unwrap();
+
+        // the missing repo segment is reconstructed in canonical tag order
+        assert_eq!(
+            book.alerts[0].series,
+            "case=uniformgridcpu,collision_op=srt,gpu=<none>,node=icx36,repo=walberla"
+        );
+        assert_eq!(
+            book.alerts[0].fingerprint,
+            "lbm-mlups/case=uniformgridcpu,collision_op=srt,gpu=<none>,node=icx36,repo=walberla"
+        );
+        // `repo` sorts *before* `solver` — the label must be re-sorted,
+        // not appended
+        assert_eq!(
+            book.alerts[1].series,
+            "case=fe2ti216,node=icx36,repo=fe2ti,solver=ilu"
+        );
+        assert_eq!(book.alerts[1].group["repo"], "fe2ti");
+
+        // round-trip: save + reload is idempotent (no second migration)
+        book.save(&path).unwrap();
+        let mut again = AlertBook::load(&path).unwrap();
+        assert_eq!(again.alerts[0].fingerprint, book.alerts[0].fingerprint);
+        assert_eq!(again.alerts[1].fingerprint, book.alerts[1].fingerprint);
+        assert_eq!(again.migrate_pr1_fingerprints(), 0, "idempotent");
+        std::fs::remove_file(&path).ok();
+
+        // and the point of it all: a healthy per-repo evaluation under the
+        // new fingerprints auto-resolves the stale PR-1 alert
+        let evaluated = vec![book.alerts[0].fingerprint.clone()];
+        let s = book.ingest(&[], &evaluated, 9);
+        assert_eq!(s.auto_resolved, 1);
+        assert_eq!(book.alerts[0].state, AlertState::Resolved);
+        assert_eq!(book.alerts[1].state, AlertState::Open, "unevaluated stays open");
+    }
+
+    #[test]
+    fn migration_leaves_custom_policies_and_new_books_alone() {
+        let mut book = AlertBook::new();
+        book.ingest(
+            &[finding("custom-policy", "node=a", 0.8)],
+            &["custom-policy/node=a".to_string()],
+            1,
+        );
+        book.ingest(
+            &[finding("lbm-mlups", "node=b,repo=walberla-0", 0.9)],
+            &["lbm-mlups/node=b,repo=walberla-0".to_string()],
+            1,
+        );
+        let before: Vec<String> = book.alerts.iter().map(|a| a.fingerprint.clone()).collect();
+        assert_eq!(book.migrate_pr1_fingerprints(), 0);
+        let after: Vec<String> = book.alerts.iter().map(|a| a.fingerprint.clone()).collect();
+        assert_eq!(before, after);
     }
 
     #[test]

@@ -28,10 +28,27 @@
 //! * a **deterministic timeline** — identical submissions replay to a
 //!   byte-identical event log ([`SimScheduler::timeline`]) and therefore
 //!   byte-identical TSDB contents downstream; ties are broken by a
-//!   monotone sequence number, never by iteration order of a hash map.
+//!   monotone sequence number, never by iteration order of a hash map;
+//! * **conservative, timelimit-aware backfill** (on by default,
+//!   [`SimScheduler::set_backfill`]) — when the head-of-queue job of a
+//!   node cannot start (its time limit crosses a maintenance window), the
+//!   dispatcher computes the head's *shadow start* (the earliest instant
+//!   it could run) and slots smaller jobs into the gap, but only jobs
+//!   whose **time limit** — not their unknown actual duration —
+//!   guarantees they are done by the shadow start and clear of every
+//!   window. Higher-priority work is never delayed: the shadow job still
+//!   starts exactly when it would have with backfill off;
+//! * **node maintenance windows** — [`SimScheduler::drain`] marks a node
+//!   as draining from a given time (open-ended until
+//!   [`SimScheduler::resume`] closes it; [`SimScheduler::maintenance`]
+//!   adds a closed window directly). During a window no new job may
+//!   start; running jobs finish. A job whose time limit crosses a window
+//!   is not started — and in particular never backfilled — in front of
+//!   it: it waits for the resume edge.
 //!
 //! [`crate::slurm::Scheduler`] is now a thin `sbatch --wait` veneer over
-//! this engine (the paper's Listing-1 contract is unchanged);
+//! this engine (the paper's Listing-1 contract is unchanged), including
+//! an `scontrol`-style drain/resume front end;
 //! [`crate::coordinator::CbSystem`] drives it phase-split
 //! (`submit_pipeline` / `collect_pipeline`) so pipelines overlap.
 
@@ -126,6 +143,9 @@ pub struct SimJob {
     pub start_time: Option<f64>,
     pub end_time: Option<f64>,
     pub log: String,
+    /// True when the dispatcher backfilled this job into a gap in front
+    /// of a blocked higher-priority (shadow) job.
+    pub backfilled: bool,
     /// Submission order (dispatch tie-break).
     seq: u64,
     payload: Option<Payload>,
@@ -159,6 +179,8 @@ pub struct Completion {
     pub state: JobState,
     pub start: f64,
     pub end: f64,
+    /// The job start was a backfill, not a head-of-line dispatch.
+    pub backfilled: bool,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -167,6 +189,9 @@ enum EventKind {
     Arrival(usize),
     /// A running job finishes.
     Finish(usize),
+    /// Re-run dispatch on a node (index into `hosts`) — scheduled for the
+    /// shadow start of a window-blocked head job or for a resume edge.
+    Wake(usize),
 }
 
 /// One entry of the global event queue; total order is (time, seq) so the
@@ -202,10 +227,19 @@ const BASE_JOB_ID: u64 = 1000;
 /// The event-driven cluster scheduler: one simulated clock, all nodes.
 pub struct SimScheduler {
     nodes: BTreeMap<String, NodeModel>,
+    /// Stable node index (sorted hostnames) for `Wake` events.
+    hosts: Vec<String>,
     /// Free run slots per node.
     free_slots: BTreeMap<String, usize>,
     /// Jobs waiting for a slot, per node (indices into `jobs`).
     waiting: BTreeMap<String, Vec<usize>>,
+    /// Maintenance windows per node, `[from, until)`, sorted by `from`;
+    /// `until` may be `f64::INFINITY` (open-ended drain).
+    windows: BTreeMap<String, Vec<(f64, f64)>>,
+    /// Earliest still-pending `Wake` per node (event-pileup dedup).
+    pending_wake: BTreeMap<String, f64>,
+    /// Timelimit-aware conservative backfill (on by default).
+    backfill: bool,
     jobs: Vec<SimJob>,
     queue: BinaryHeap<Reverse<Event>>,
     clock: f64,
@@ -229,10 +263,16 @@ impl SimScheduler {
     pub fn with_slots(nodes: Vec<NodeModel>, slots_per_node: usize) -> SimScheduler {
         let slots = slots_per_node.max(1);
         let free_slots = nodes.iter().map(|n| (n.host.to_string(), slots)).collect();
+        let nodes: BTreeMap<String, NodeModel> =
+            nodes.into_iter().map(|n| (n.host.to_string(), n)).collect();
         SimScheduler {
-            nodes: nodes.into_iter().map(|n| (n.host.to_string(), n)).collect(),
+            hosts: nodes.keys().cloned().collect(),
+            nodes,
             free_slots,
             waiting: BTreeMap::new(),
+            windows: BTreeMap::new(),
+            pending_wake: BTreeMap::new(),
+            backfill: true,
             jobs: Vec::new(),
             queue: BinaryHeap::new(),
             clock: 0.0,
@@ -299,6 +339,118 @@ impl SimScheduler {
         self.usage.get(owner).copied().unwrap_or(0.0)
     }
 
+    /// Enable/disable conservative backfill (on by default). Off, the
+    /// dispatcher never starts a job ahead of a blocked higher-priority
+    /// one — the node idles until the head job's shadow start.
+    pub fn set_backfill(&mut self, on: bool) {
+        self.backfill = on;
+    }
+    pub fn backfill_enabled(&self) -> bool {
+        self.backfill
+    }
+
+    /// Maintenance windows of `host`, `[from, until)` sorted by start.
+    pub fn maintenance_windows(&self, host: &str) -> &[(f64, f64)] {
+        self.windows.get(host).map(|w| w.as_slice()).unwrap_or(&[])
+    }
+
+    /// Add a closed maintenance window `[from, until)` on `host`: no new
+    /// job starts inside it, and no job whose *time limit* would carry it
+    /// into the window starts in front of it. Jobs already running when
+    /// the window opens finish normally.
+    pub fn maintenance(&mut self, host: &str, from: f64, until: f64) -> Result<(), String> {
+        if !self.nodes.contains_key(host) {
+            return Err(format!("scontrol: invalid node `{host}` (unknown host)"));
+        }
+        if !(from < until) {
+            return Err(format!(
+                "scontrol: maintenance window on `{host}` needs from < until (got {from}..{until})"
+            ));
+        }
+        let ws = self.windows.entry(host.to_string()).or_default();
+        ws.push((from, until));
+        ws.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
+        self.timeline.push(format!(
+            "t={:>12.3} drain  {host} [{from:.3}..{until:.3})",
+            self.clock
+        ));
+        Ok(())
+    }
+
+    /// `scontrol update nodename=HOST state=drain`: the node drains from
+    /// `at` with no scheduled end — nothing starts on it until a matching
+    /// [`SimScheduler::resume`] closes the window. Running jobs finish.
+    pub fn drain(&mut self, host: &str, at: f64) -> Result<(), String> {
+        self.maintenance(host, at, f64::INFINITY)
+    }
+
+    /// `scontrol update nodename=HOST state=resume`: close the open
+    /// drain window of `host` at time `at` and re-arm dispatch for the
+    /// resume edge.
+    pub fn resume(&mut self, host: &str, at: f64) -> Result<(), String> {
+        let Some(ws) = self.windows.get_mut(host) else {
+            return Err(format!("scontrol: node `{host}` has no drain window"));
+        };
+        match ws.iter_mut().rev().find(|w| w.1.is_infinite()) {
+            Some(w) if at > w.0 => w.1 = at,
+            Some(w) => {
+                return Err(format!(
+                    "scontrol: resume at {at} predates the drain start {} on `{host}`",
+                    w.0
+                ))
+            }
+            None => return Err(format!("scontrol: node `{host}` has no open drain window")),
+        }
+        self.timeline
+            .push(format!("t={:>12.3} resume {host} at {at:.3}", self.clock));
+        // waiting jobs may have been stranded behind the open-ended
+        // window (an infinite shadow schedules no wake) — re-arm dispatch
+        self.schedule_wake(host, at.max(self.clock));
+        Ok(())
+    }
+
+    /// Earliest time `>= t` at which a job with time limit `limit_secs`
+    /// could start on `host` with `[start, start + limit_secs)` clear of
+    /// every maintenance window. Conservative: the *limit*, not the
+    /// (unknown at dispatch time) actual duration, decides crossing.
+    /// `f64::INFINITY` when an open-ended drain blocks forever.
+    pub fn earliest_start(&self, host: &str, t: f64, limit_secs: f64) -> f64 {
+        let mut start = t;
+        if let Some(ws) = self.windows.get(host) {
+            for &(from, until) in ws {
+                if start >= until {
+                    continue;
+                }
+                if start + limit_secs <= from {
+                    break;
+                }
+                start = until;
+                if !start.is_finite() {
+                    return f64::INFINITY;
+                }
+            }
+        }
+        start
+    }
+
+    /// Schedule a `Wake` for `host` at `at` unless an earlier one is
+    /// already pending (keeps long queues from piling up wake events).
+    fn schedule_wake(&mut self, host: &str, at: f64) {
+        if !at.is_finite() {
+            return;
+        }
+        if let Some(&t) = self.pending_wake.get(host) {
+            if t > self.clock && t <= at {
+                return;
+            }
+        }
+        let Ok(idx) = self.hosts.binary_search_by(|h| h.as_str().cmp(host)) else {
+            return;
+        };
+        self.pending_wake.insert(host.to_string(), at);
+        self.push_event(at, EventKind::Wake(idx));
+    }
+
     fn bump_seq(&mut self) -> u64 {
         let s = self.event_seq;
         self.event_seq += 1;
@@ -336,6 +488,7 @@ impl SimScheduler {
             start_time: None,
             end_time: None,
             log: String::new(),
+            backfilled: false,
             seq,
             payload: Some(payload),
             planned_end: 0.0,
@@ -372,16 +525,18 @@ impl SimScheduler {
                 // cancelled before arrival: drop silently
                 if self.jobs[i].state == JobState::Pending {
                     let host = self.jobs[i].spec.nodelist.clone();
-                    if self.free_slots.get(&host).copied().unwrap_or(0) > 0 {
-                        self.start_job(i);
-                    } else {
-                        self.waiting.entry(host).or_default().push(i);
-                    }
+                    self.waiting.entry(host.clone()).or_default().push(i);
+                    self.dispatch(&host);
                 }
             }
             EventKind::Finish(i) => {
                 self.finish_job(i);
                 let host = self.jobs[i].spec.nodelist.clone();
+                self.dispatch(&host);
+            }
+            EventKind::Wake(h) => {
+                let host = self.hosts[h].clone();
+                self.pending_wake.remove(&host);
                 self.dispatch(&host);
             }
         }
@@ -411,7 +566,7 @@ impl SimScheduler {
     }
 
     /// Start job `i` on its (free-slot-checked) node at the current clock.
-    fn start_job(&mut self, i: usize) {
+    fn start_job(&mut self, i: usize, backfilled: bool) {
         let host = self.jobs[i].spec.nodelist.clone();
         *self.free_slots.get_mut(&host).expect("known host") -= 1;
         let node = self.nodes[&host].clone();
@@ -430,13 +585,17 @@ impl SimScheduler {
             let j = &mut self.jobs[i];
             j.state = JobState::Running;
             j.start_time = Some(start);
+            j.backfilled = backfilled;
             j.planned_end = start + dur;
             j.planned_state = state;
             j.stdout = outcome.stdout;
         }
         self.timeline.push(format!(
-            "t={:>12.3} start  {} on {}",
-            start, self.jobs[i].id, host
+            "t={:>12.3} {} {} on {}",
+            start,
+            if backfilled { "bkfill" } else { "start " },
+            self.jobs[i].id,
+            host
         ));
         self.push_event(start + dur, EventKind::Finish(i));
     }
@@ -449,6 +608,7 @@ impl SimScheduler {
         let host = self.jobs[i].spec.nodelist.clone();
         let owner = self.jobs[i].spec.owner.clone();
         let stdout = std::mem::take(&mut self.jobs[i].stdout);
+        let backfilled = self.jobs[i].backfilled;
         let (id, batch, name, submit_time) = (
             self.jobs[i].id,
             self.jobs[i].spec.batch,
@@ -491,43 +651,104 @@ impl SimScheduler {
             state,
             start,
             end,
+            backfilled,
         });
+    }
+
+    /// Drop `idx` from `host`'s waiting list (it is about to start).
+    fn remove_waiting(&mut self, host: &str, idx: usize) {
+        if let Some(list) = self.waiting.get_mut(host) {
+            if let Some(pos) = list.iter().position(|&i| i == idx) {
+                list.remove(pos);
+            }
+        }
     }
 
     /// Fill freed slots on `host` from its waiting queue: highest priority
     /// first, ties toward the owner with the least consumed node-seconds,
     /// then submission order.
+    ///
+    /// Maintenance windows gate every start: a job whose time limit would
+    /// carry it into a window does not start in front of it. When that
+    /// blocks the head-of-queue job, its *shadow start* (earliest
+    /// window-clear instant) is reserved — a `Wake` re-runs dispatch
+    /// there — and, with backfill enabled, lower-priority jobs whose time
+    /// limit ends by the shadow start (and clears every window) are
+    /// slotted into the gap. The conservative end-by-limit rule means a
+    /// backfilled job can never delay the shadow job, even if it runs all
+    /// the way into its timeout.
     fn dispatch(&mut self, host: &str) {
-        loop {
+        // prune + order the waiting queue once: priority desc, fair-share
+        // usage asc, submission order asc (the PR-2 comparator). All three
+        // keys are invariant within one dispatch call — the clock does not
+        // advance and usage only moves on finish events — so started jobs
+        // are removed from this order instead of re-sorting per start.
+        let mut order: Vec<usize> = {
+            let jobs = &self.jobs;
+            let usage = &self.usage;
+            let Some(list) = self.waiting.get_mut(host) else {
+                return;
+            };
+            list.retain(|&i| jobs[i].state == JobState::Pending);
+            if list.is_empty() {
+                return;
+            }
+            let mut order = list.clone();
+            order.sort_by(|&a, &b| {
+                let (ja, jb) = (&jobs[a], &jobs[b]);
+                jb.spec
+                    .priority
+                    .cmp(&ja.spec.priority)
+                    .then_with(|| {
+                        let ua = usage.get(&ja.spec.owner).copied().unwrap_or(0.0);
+                        let ub = usage.get(&jb.spec.owner).copied().unwrap_or(0.0);
+                        ua.total_cmp(&ub)
+                    })
+                    .then(ja.seq.cmp(&jb.seq))
+            });
+            order
+        };
+        let mut wake_scheduled = false;
+        while !order.is_empty() {
             if self.free_slots.get(host).copied().unwrap_or(0) == 0 {
                 return;
             }
-            let next = {
-                let jobs = &self.jobs;
-                let usage = &self.usage;
-                let Some(list) = self.waiting.get_mut(host) else {
-                    return;
-                };
-                list.retain(|&i| jobs[i].state == JobState::Pending);
-                if list.is_empty() {
-                    return;
+            let now = self.clock;
+            let head = order[0];
+            let head_limit = self.jobs[head].spec.timelimit_min * 60.0;
+            let shadow = self.earliest_start(host, now, head_limit);
+            if shadow <= now {
+                self.remove_waiting(host, head);
+                self.start_job(head, false);
+                order.remove(0);
+                continue;
+            }
+            // head blocked by a maintenance window: reserve its shadow
+            // start (open-ended drains have no finite shadow — the resume
+            // edge re-arms dispatch instead). Only the final, blocked head
+            // ever reaches this point, so one wake per call suffices.
+            if !wake_scheduled {
+                self.schedule_wake(host, shadow);
+                wake_scheduled = true;
+            }
+            if !self.backfill {
+                return;
+            }
+            // conservative backfill: first (by the same order) candidate
+            // whose time limit ends by the shadow start and clears every
+            // window may use the gap
+            let started = order.iter().skip(1).position(|&cand| {
+                let limit = self.jobs[cand].spec.timelimit_min * 60.0;
+                now + limit <= shadow && self.earliest_start(host, now, limit) <= now
+            });
+            match started {
+                Some(pos) => {
+                    let cand = order.remove(pos + 1);
+                    self.remove_waiting(host, cand);
+                    self.start_job(cand, true);
                 }
-                let mut best = 0usize;
-                for pos in 1..list.len() {
-                    let a = &jobs[list[pos]];
-                    let b = &jobs[list[best]];
-                    let ua = usage.get(&a.spec.owner).copied().unwrap_or(0.0);
-                    let ub = usage.get(&b.spec.owner).copied().unwrap_or(0.0);
-                    let a_wins = a.spec.priority > b.spec.priority
-                        || (a.spec.priority == b.spec.priority
-                            && (ua < ub || (ua == ub && a.seq < b.seq)));
-                    if a_wins {
-                        best = pos;
-                    }
-                }
-                list.remove(best)
-            };
-            self.start_job(next);
+                None => return,
+            }
         }
     }
 }
@@ -685,5 +906,188 @@ mod tests {
     fn unknown_node_rejected() {
         let mut s = sched();
         assert!(s.submit(SubmitSpec::new("x", "cray-1"), job(1.0)).is_err());
+    }
+
+    #[test]
+    fn no_start_inside_maintenance_window() {
+        // window [10, 50): a job whose 60 s time limit crosses it cannot
+        // start at t=0 and waits for the resume edge
+        let mut s = sched();
+        s.maintenance("icx36", 10.0, 50.0).unwrap();
+        let id = s
+            .submit(SubmitSpec::new("j", "icx36").timelimit(1.0), job(5.0))
+            .unwrap();
+        s.run_until_idle();
+        let j = s.job(id).unwrap();
+        assert_eq!(j.state, JobState::Completed);
+        assert_eq!(j.start_time, Some(50.0));
+        assert_eq!(j.end_time, Some(55.0));
+        assert!(!j.backfilled);
+    }
+
+    #[test]
+    fn job_fitting_before_window_starts_immediately() {
+        // [start, start+limit) up to the window edge is allowed: a 6 s
+        // limit ends exactly at the drain start
+        let mut s = sched();
+        s.maintenance("icx36", 6.0, 50.0).unwrap();
+        let id = s
+            .submit(SubmitSpec::new("j", "icx36").timelimit(0.1), job(5.0))
+            .unwrap();
+        s.run_until_idle();
+        assert_eq!(s.job(id).unwrap().start_time, Some(0.0));
+    }
+
+    #[test]
+    fn backfill_fills_gap_before_window_without_delaying_shadow_job() {
+        // head H (priority 10, 30 min limit) crosses the [100, 1000)
+        // window -> shadow start 1000; S (priority 5, 1 min limit) fits
+        // the gap and backfills at t=0. H still starts exactly at 1000.
+        let build = |backfill: bool| {
+            let mut s = sched();
+            s.set_backfill(backfill);
+            s.maintenance("icx36", 100.0, 1000.0).unwrap();
+            let h = s
+                .submit(SubmitSpec::new("h", "icx36").timelimit(30.0).priority(10), job(200.0))
+                .unwrap();
+            let small = s
+                .submit(SubmitSpec::new("s", "icx36").timelimit(1.0).priority(5), job(50.0))
+                .unwrap();
+            s.run_until_idle();
+            (
+                s.job(h).unwrap().start_time.unwrap(),
+                s.job(small).unwrap().start_time.unwrap(),
+                s.job(small).unwrap().backfilled,
+                s.now(),
+            )
+        };
+        let (h_on, s_on, s_bk, makespan_on) = build(true);
+        let (h_off, s_off, s_off_bk, makespan_off) = build(false);
+        assert_eq!(h_on, 1000.0, "shadow job starts at the resume edge");
+        assert_eq!(h_on, h_off, "backfill must not move the shadow job");
+        assert_eq!(s_on, 0.0, "small job backfills into the gap");
+        assert!(s_bk);
+        assert_eq!(s_off, 1250.0, "without backfill it queues behind H");
+        assert!(!s_off_bk);
+        assert!(
+            makespan_on < makespan_off,
+            "gap-heavy roster: backfill-on makespan {makespan_on} must beat {makespan_off}"
+        );
+    }
+
+    #[test]
+    fn backfill_candidate_crossing_the_window_is_skipped() {
+        // both waiting jobs' limits cross the window: nothing backfills,
+        // nothing starts inside the window, order is preserved at resume
+        let mut s = sched();
+        s.maintenance("icx36", 30.0, 300.0).unwrap();
+        let a = s
+            .submit(SubmitSpec::new("a", "icx36").timelimit(5.0).priority(1), job(10.0))
+            .unwrap();
+        let b = s
+            .submit(SubmitSpec::new("b", "icx36").timelimit(5.0), job(10.0))
+            .unwrap();
+        s.run_until_idle();
+        assert_eq!(s.job(a).unwrap().start_time, Some(300.0));
+        assert_eq!(s.job(b).unwrap().start_time, Some(310.0));
+        assert!(!s.job(a).unwrap().backfilled && !s.job(b).unwrap().backfilled);
+    }
+
+    #[test]
+    fn running_job_finishes_across_a_late_drain() {
+        // drain lands mid-run: the running job finishes ("running jobs
+        // finish"), the queued one waits for resume
+        let mut s = sched();
+        let a = s
+            .submit(SubmitSpec::new("a", "icx36").timelimit(2.0), job(60.0))
+            .unwrap();
+        let b = s
+            .submit(SubmitSpec::new("b", "icx36").timelimit(2.0), job(10.0))
+            .unwrap();
+        // process the arrivals so `a` is running, then drain mid-run
+        s.step();
+        s.step();
+        assert_eq!(s.job(a).unwrap().state, JobState::Running);
+        s.maintenance("icx36", 30.0, 90.0).unwrap();
+        s.run_until_idle();
+        assert_eq!(s.job(a).unwrap().end_time, Some(60.0), "ran through the window");
+        assert_eq!(s.job(b).unwrap().start_time, Some(90.0));
+    }
+
+    #[test]
+    fn open_drain_strands_jobs_until_resume() {
+        let mut s = sched();
+        s.drain("icx36", 5.0).unwrap();
+        let id = s
+            .submit(SubmitSpec::new("j", "icx36").timelimit(1.0), job(10.0))
+            .unwrap();
+        s.run_until_idle();
+        // open-ended drain: the job can never start (limit crosses it)
+        assert_eq!(s.job(id).unwrap().state, JobState::Pending);
+        // resume closes the window and re-arms dispatch at the edge
+        s.resume("icx36", 40.0).unwrap();
+        s.run_until_idle();
+        assert_eq!(s.job(id).unwrap().start_time, Some(40.0));
+        assert_eq!(s.job(id).unwrap().state, JobState::Completed);
+        assert_eq!(s.maintenance_windows("icx36"), &[(5.0, 40.0)]);
+    }
+
+    #[test]
+    fn drain_resume_validation() {
+        let mut s = sched();
+        assert!(s.drain("cray-1", 0.0).is_err());
+        assert!(s.maintenance("icx36", 10.0, 10.0).is_err());
+        assert!(s.resume("icx36", 5.0).is_err(), "no open window yet");
+        s.drain("icx36", 10.0).unwrap();
+        assert!(s.resume("icx36", 10.0).is_err(), "resume must be after drain");
+        assert!(s.resume("icx36", 20.0).is_ok());
+        assert!(s.resume("icx36", 30.0).is_err(), "window already closed");
+    }
+
+    #[test]
+    fn timeline_with_windows_and_backfill_is_deterministic() {
+        let build = || {
+            let mut s = sched();
+            s.maintenance("icx36", 40.0, 400.0).unwrap();
+            s.maintenance("rome1", 100.0, 250.0).unwrap();
+            for i in 0..24 {
+                let host = if i % 3 == 0 { "icx36" } else { "rome1" };
+                s.submit(
+                    SubmitSpec::new(&format!("j{i}"), host)
+                        .owner(if i % 2 == 0 { "a" } else { "b" })
+                        .priority((i % 5) as i64)
+                        .timelimit(0.5 + (i % 4) as f64),
+                    job(3.0 + (i % 7) as f64),
+                )
+                .unwrap();
+            }
+            s.run_until_idle();
+            s.timeline()
+        };
+        let t1 = build();
+        let t2 = build();
+        assert!(t1.contains("drain"));
+        assert!(t1.contains("bkfill"), "gap-heavy roster must backfill");
+        assert_eq!(t1, t2, "windows + backfill must replay byte-identically");
+    }
+
+    #[test]
+    fn backfilled_flag_reaches_completions() {
+        let mut s = sched();
+        s.maintenance("icx36", 50.0, 500.0).unwrap();
+        s.submit(SubmitSpec::new("big", "icx36").timelimit(60.0).priority(9), job(20.0))
+            .unwrap();
+        s.submit(SubmitSpec::new("tiny", "icx36").timelimit(0.5), job(5.0))
+            .unwrap();
+        s.run_until_idle();
+        let by_name = |n: &str| {
+            s.completions()
+                .iter()
+                .find(|c| c.name == n)
+                .unwrap()
+                .clone()
+        };
+        assert!(by_name("tiny").backfilled);
+        assert!(!by_name("big").backfilled);
     }
 }

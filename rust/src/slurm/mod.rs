@@ -19,11 +19,48 @@
 //! Jobs submitted through this wrapper run as owner `default` with
 //! priority 0 — single-tenant FIFO, which is what `sbatch --wait` scripts
 //! expect. Multi-repo fair-share and priorities live in [`crate::sched`].
+//!
+//! Since the backfill/maintenance refactor the veneer also exposes
+//! * [`parse_time`] — the sbatch `--time` grammar (`M`, `M:S`, `H:M:S`,
+//!   `D-H[:M[:S]]`) so CI `SLURM_TIMELIMIT` variables can use real Slurm
+//!   time strings, and
+//! * [`Scheduler::scontrol_drain`] / [`Scheduler::scontrol_resume`] —
+//!   the `scontrol update nodename=... state=drain|resume` analogue over
+//!   the engine's maintenance windows (no new job starts on a draining
+//!   node; running jobs finish).
 
 use crate::cluster::nodes::NodeModel;
 use crate::sched::{SimScheduler, SubmitSpec};
 
 pub use crate::sched::{JobOutcome, JobState, Payload};
+
+/// Parse an sbatch `--time` specification into **minutes**. Accepted
+/// forms (the Slurm grammar subset the pipelines use): `M`, `M:S`,
+/// `H:M:S`, `D-H`, `D-H:M`, `D-H:M:S`. Returns `None` for anything else.
+pub fn parse_time(spec: &str) -> Option<f64> {
+    let spec = spec.trim();
+    if spec.is_empty() {
+        return None;
+    }
+    let (days, rest, dayform) = match spec.split_once('-') {
+        Some((d, r)) => (d.parse::<f64>().ok().filter(|d| *d >= 0.0)?, r, true),
+        None => (0.0, spec, false),
+    };
+    let nums: Vec<f64> = rest
+        .split(':')
+        .map(|p| p.parse::<f64>().ok().filter(|v| *v >= 0.0))
+        .collect::<Option<_>>()?;
+    let minutes = match (dayform, nums.as_slice()) {
+        (true, [h]) => h * 60.0,
+        (true, [h, m]) => h * 60.0 + m,
+        (true, [h, m, s]) => h * 60.0 + m + s / 60.0,
+        (false, [m]) => *m,
+        (false, [m, s]) => m + s / 60.0,
+        (false, [h, m, s]) => h * 60.0 + m + s / 60.0,
+        _ => return None,
+    };
+    Some(days * 24.0 * 60.0 + minutes)
+}
 
 /// Scheduler-side job record (the event engine's).
 pub type Job = crate::sched::SimJob;
@@ -90,6 +127,19 @@ impl Scheduler {
     /// `scancel`.
     pub fn scancel(&mut self, id: u64) -> bool {
         self.core.scancel(id)
+    }
+
+    /// `scontrol update nodename=HOST state=drain`: from simulated time
+    /// `at` no new job starts on `host`; running jobs finish. Open-ended
+    /// until [`Scheduler::scontrol_resume`].
+    pub fn scontrol_drain(&mut self, host: &str, at: f64) -> Result<(), String> {
+        self.core.drain(host, at)
+    }
+
+    /// `scontrol update nodename=HOST state=resume`: close the node's
+    /// open drain window at time `at`.
+    pub fn scontrol_resume(&mut self, host: &str, at: f64) -> Result<(), String> {
+        self.core.resume(host, at)
     }
 
     /// Drain the event queue (the `--wait` semantics the pipeline relies
@@ -235,6 +285,41 @@ mod tests {
         assert!(!s.scancel(id)); // already cancelled
         s.wait_all();
         assert_eq!(s.job(id).unwrap().state, JobState::Cancelled);
+    }
+
+    #[test]
+    fn parse_time_slurm_grammar() {
+        assert_eq!(parse_time("60"), Some(60.0));
+        assert_eq!(parse_time("90:30"), Some(90.5));
+        assert_eq!(parse_time("2:30:00"), Some(150.0));
+        assert_eq!(parse_time("1-0"), Some(1440.0));
+        assert_eq!(parse_time("1-2:30"), Some(1590.0));
+        assert_eq!(parse_time("1-0:0:30"), Some(1440.5));
+        assert_eq!(parse_time(" 15 "), Some(15.0));
+        for bad in ["", "abc", "1:2:3:4", "-5", "1-", "1-2-3", "1:-2"] {
+            assert_eq!(parse_time(bad), None, "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn scontrol_drain_resume_gates_job_starts() {
+        let mut s = sched();
+        s.scontrol_drain("icx36", 0.0).unwrap();
+        let id = s
+            .sbatch(
+                JobSpec { name: "j".into(), nodelist: "icx36".into(), timelimit_min: 1.0 },
+                ok_payload(5.0, ""),
+            )
+            .unwrap();
+        s.wait_all();
+        assert_eq!(s.job(id).unwrap().state, JobState::Pending, "node is draining");
+        s.scontrol_resume("icx36", 25.0).unwrap();
+        s.wait_all();
+        let j = s.job(id).unwrap();
+        assert_eq!(j.state, JobState::Completed);
+        assert_eq!(j.start_time, Some(25.0));
+        // unknown host is rejected like sbatch rejects bad nodelists
+        assert!(s.scontrol_drain("cray-1", 0.0).is_err());
     }
 
     #[test]

@@ -43,7 +43,7 @@ fn real_matrices_overlap_strictly_beats_sequential() {
     let out = run_campaign(
         &mut cb,
         &mut projects,
-        &CampaignConfig { pushes: 1, inject_at: 0, penalty: 0.0, seed: 3 },
+        &CampaignConfig { pushes: 1, penalty: 0.0, seed: 3, ..CampaignConfig::default() },
     )
     .unwrap();
     assert_eq!(out.reports.len(), 2);
@@ -99,7 +99,7 @@ fn campaign_replays_byte_identical() {
         let out = run_campaign_with(
             &mut cb,
             &mut projects,
-            &CampaignConfig { pushes: 2, inject_at: 0, penalty: 0.0, seed },
+            &CampaignConfig { pushes: 2, penalty: 0.0, seed, ..CampaignConfig::default() },
             |p, _commit| {
                 if p.name == "alpha" {
                     toy_jobs("a", &[("icx36", 10.0, 3), ("rome1", 5.0, 1)])
@@ -139,6 +139,54 @@ fn campaign_replays_byte_identical() {
 }
 
 #[test]
+fn drained_campaign_replays_byte_identical_with_backfill() {
+    // maintenance windows + backfill are part of the deterministic
+    // schedule: the same drained roster replays to the same timeline,
+    // and backfilled starts appear in it (the `bkfill` records)
+    fn run_once() -> (String, f64, usize) {
+        let mut cb = CbSystem::new();
+        let mut projects = vec![CampaignProject::new("alpha", ProjectKind::Walberla)];
+        let cfg = CampaignConfig {
+            pushes: 1,
+            penalty: 0.0,
+            seed: 11,
+            drains: vec![("icx36".to_string(), 100.0, 3000.0)],
+            ..CampaignConfig::default()
+        };
+        let out = run_campaign_with(&mut cb, &mut projects, &cfg, |_p, _c| {
+            let mut jobs = Vec::new();
+            // one hour-limit job that must wait for the resume edge...
+            jobs.push(PreparedJob {
+                ci: CiJob::new("big-icx36", "benchmark")
+                    .var("HOST", "icx36")
+                    .var("SLURM_TIMELIMIT", "60"),
+                payload: Box::new(|_n, _t| JobOutcome {
+                    duration: 120.0,
+                    stdout: "METRIC v=1\n".into(),
+                    exit_code: 0,
+                }),
+            });
+            // ...and short-limit jobs that backfill the gap in front
+            jobs.extend(toy_jobs("small", &[("icx36", 20.0, 2)]).into_iter().map(|j| {
+                PreparedJob { ci: j.ci.var("SLURM_TIMELIMIT", "1"), payload: j.payload }
+            }));
+            jobs
+        })
+        .unwrap();
+        (cb.scheduler.timeline(), out.makespan, out.jobs_backfilled())
+    }
+    let (tl1, mk1, bk1) = run_once();
+    let (tl2, mk2, bk2) = run_once();
+    assert_eq!(tl1, tl2, "drained roster must replay byte-identically");
+    assert_eq!(mk1, mk2);
+    assert_eq!(bk1, bk2);
+    assert_eq!(bk1, 2, "both short-limit jobs backfill the gap");
+    assert!(tl1.contains("drain"), "window must be on the timeline");
+    assert!(tl1.contains("bkfill"), "backfilled starts must be on the timeline");
+    assert_eq!(mk1, 3120.0, "big job rides the resume edge at 3000");
+}
+
+#[test]
 fn injected_regression_surfaces_through_overlapped_campaign() {
     // two waLBerla repos share the cluster; push round 3 plants the
     // kernel-regen penalty in both — the per-repo grouped policies open
@@ -151,7 +199,7 @@ fn injected_regression_surfaces_through_overlapped_campaign() {
     let out = run_campaign_with(
         &mut cb,
         &mut projects,
-        &CampaignConfig { pushes: 3, inject_at: 3, penalty: 0.15, seed: 5 },
+        &CampaignConfig { pushes: 3, inject_at: 3, penalty: 0.15, seed: 5, ..CampaignConfig::default() },
         |p, commit| {
             // the icx36 slice of the real matrix, penalty-aware via the
             // commit's benchmark.cfg — cheap but faithful

@@ -6,6 +6,10 @@ use cbench::apps::walberla::collision::{collide_cell, CollisionOp};
 use cbench::apps::walberla::fslbm::FsBlock;
 use cbench::apps::walberla::lattice::{d3q19, d3q27};
 use cbench::ci::substitute_vars;
+use cbench::cluster::nodes::catalogue;
+use cbench::regress::detector::evaluate_policy_run_scoped;
+use cbench::regress::Detector;
+use cbench::sched::{JobOutcome, SimScheduler, SubmitSpec};
 use cbench::sparse::{cg, gmres, Csr, Ilu0, SparseLu, Work};
 use cbench::tsdb::{Db, Point, Query};
 use cbench::util::json::Json;
@@ -201,6 +205,412 @@ fn prop_json_roundtrip_random_documents() {
             let back = Json::parse(&text).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{text}"));
             assert_eq!(back, doc, "seed {seed}");
         }
+    }
+}
+
+// ---------------------------------------------------------------------
+// sched:: invariants — randomized rosters over the real Testcluster
+// node set, with maintenance windows and conservative backfill
+// ---------------------------------------------------------------------
+
+#[derive(Clone)]
+struct RosterJob {
+    host: String,
+    dur: f64,
+    tl_min: f64,
+    prio: i64,
+    owner: String,
+}
+
+fn testcluster_hosts() -> Vec<String> {
+    catalogue()
+        .into_iter()
+        .filter(|n| n.testcluster)
+        .map(|n| n.host.to_string())
+        .collect()
+}
+
+/// Random roster: every job is submitted at t=0 (durations are
+/// start-time-independent, so replays are exact). `distinct_prio` makes
+/// the dispatch order independent of the fair-share usage ledger — the
+/// precondition of the no-delay property (a).
+fn random_roster(rng: &mut Rng, hosts: &[String], n: usize, distinct_prio: bool) -> Vec<RosterJob> {
+    let mut prios: Vec<i64> = (0..n as i64).collect();
+    rng.shuffle(&mut prios);
+    (0..n)
+        .map(|i| {
+            let dur = 1.0 + rng.range(0.0, 120.0);
+            // mostly generous limits, sometimes tight (exercises Timeout)
+            let tl_secs = if rng.uniform() < 0.15 {
+                dur * rng.range(0.3, 0.9)
+            } else {
+                dur * rng.range(1.1, 4.0) + rng.range(0.0, 200.0)
+            };
+            RosterJob {
+                host: hosts[rng.below(hosts.len())].clone(),
+                dur,
+                tl_min: tl_secs / 60.0,
+                prio: if distinct_prio { prios[i] } else { rng.below(4) as i64 },
+                owner: format!("repo-{}", rng.below(3)),
+            }
+        })
+        .collect()
+}
+
+/// Random *closed*, non-overlapping maintenance windows per node.
+fn random_windows(rng: &mut Rng, hosts: &[String]) -> Vec<(String, f64, f64)> {
+    let mut out = Vec::new();
+    for h in hosts {
+        let mut t = 0.0;
+        for _ in 0..rng.below(3) {
+            let from = t + rng.range(10.0, 150.0);
+            let to = from + rng.range(20.0, 300.0);
+            out.push((h.clone(), from, to));
+            t = to;
+        }
+    }
+    out
+}
+
+fn build_and_run(
+    roster: &[RosterJob],
+    windows: &[(String, f64, f64)],
+    backfill: bool,
+    slots: usize,
+) -> SimScheduler {
+    let nodes: Vec<_> = catalogue().into_iter().filter(|n| n.testcluster).collect();
+    let mut s = SimScheduler::with_slots(nodes, slots);
+    s.set_backfill(backfill);
+    for (h, a, b) in windows {
+        s.maintenance(h, *a, *b).unwrap();
+    }
+    for (i, j) in roster.iter().enumerate() {
+        let dur = j.dur;
+        s.submit(
+            SubmitSpec::new(&format!("j{i}"), &j.host)
+                .timelimit(j.tl_min)
+                .priority(j.prio)
+                .owner(&j.owner),
+            Box::new(move |_n, _t| JobOutcome {
+                duration: dur,
+                stdout: String::new(),
+                exit_code: 0,
+            }),
+        )
+        .unwrap();
+    }
+    s.run_until_idle();
+    s
+}
+
+#[test]
+fn prop_backfill_never_delays_any_start_under_distinct_priorities() {
+    // (a) with a usage-independent dispatch order (distinct priorities,
+    // everything submitted at t=0), conservative backfill may only move
+    // starts EARLIER: the shadow job starts exactly when it would have
+    // with backfill off, and no job starts later
+    for seed in 0..25u64 {
+        let mut rng = Rng::new(1000 + seed);
+        let hosts = testcluster_hosts();
+        let n = 30 + rng.below(30);
+        let roster = random_roster(&mut rng, &hosts, n, true);
+        let windows = random_windows(&mut rng, &hosts);
+        let on = build_and_run(&roster, &windows, true, 1);
+        let off = build_and_run(&roster, &windows, false, 1);
+        for (a, b) in on.jobs().zip(off.jobs()) {
+            assert_eq!(a.spec.name, b.spec.name, "seed {seed}: same submission order");
+            let (sa, sb) = (a.start_time.unwrap(), b.start_time.unwrap());
+            assert!(
+                sa <= sb + 1e-9,
+                "seed {seed}: backfill delayed `{}` from {sb} to {sa}",
+                a.spec.name
+            );
+        }
+        assert!(
+            on.now() <= off.now() + 1e-9,
+            "seed {seed}: backfill-on makespan {} vs off {}",
+            on.now(),
+            off.now()
+        );
+    }
+}
+
+#[test]
+fn prop_no_job_starts_inside_a_drain_window() {
+    // (b) for any roster — fair-share ties and all — no start lands
+    // inside a window, and no started job's [start, end) interval
+    // touches one (conservative limit rule + timeout cap)
+    for seed in 0..25u64 {
+        let mut rng = Rng::new(2000 + seed);
+        let hosts = testcluster_hosts();
+        let n = 25 + rng.below(35);
+        let roster = random_roster(&mut rng, &hosts, n, false);
+        let windows = random_windows(&mut rng, &hosts);
+        let s = build_and_run(&roster, &windows, true, 1);
+        for j in s.jobs() {
+            let (Some(start), Some(end)) = (j.start_time, j.end_time) else {
+                panic!("seed {seed}: `{}` never ran (finite windows)", j.spec.name);
+            };
+            for (h, from, to) in &windows {
+                if *h != j.spec.nodelist {
+                    continue;
+                }
+                assert!(
+                    !(start >= *from && start < *to),
+                    "seed {seed}: `{}` started at {start} inside [{from}, {to})",
+                    j.spec.name
+                );
+                assert!(
+                    end <= *from + 1e-9 || start >= *to - 1e-9,
+                    "seed {seed}: `{}` ran [{start}, {end}) across [{from}, {to})",
+                    j.spec.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_per_node_concurrency_never_exceeds_slots() {
+    // (c) at every timeline instant the number of running jobs per node
+    // is at most the slot count — for 1 and 2 slots per node
+    for seed in 0..20u64 {
+        for slots in [1usize, 2] {
+            let mut rng = Rng::new(3000 + seed);
+            let hosts = testcluster_hosts();
+            let n = 30 + rng.below(30);
+            let roster = random_roster(&mut rng, &hosts, n, false);
+            let windows = random_windows(&mut rng, &hosts);
+            let s = build_and_run(&roster, &windows, true, slots);
+            let mut per_node: BTreeMap<&str, Vec<(f64, f64)>> = BTreeMap::new();
+            for j in s.jobs() {
+                if let (Some(a), Some(b)) = (j.start_time, j.end_time) {
+                    per_node.entry(j.spec.nodelist.as_str()).or_default().push((a, b));
+                }
+            }
+            for (host, mut spans) in per_node {
+                // sweep: +1 at start, -1 at end; ends sort before starts
+                // at the same instant (a slot frees before the next start)
+                let mut events: Vec<(f64, i32)> = Vec::new();
+                spans.sort_by(|x, y| x.0.total_cmp(&y.0));
+                for (a, b) in &spans {
+                    events.push((*a, 1));
+                    events.push((*b, -1));
+                }
+                events.sort_by(|x, y| x.0.total_cmp(&y.0).then(x.1.cmp(&y.1)));
+                let mut running = 0i32;
+                for (t, d) in events {
+                    running += d;
+                    assert!(
+                        running <= slots as i32,
+                        "seed {seed}: {running} concurrent jobs on {host} at t={t} (slots={slots})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_drained_backfilled_rosters_replay_byte_identical() {
+    // (d) determinism: identical submissions + identical windows replay
+    // to byte-identical timelines with backfill enabled
+    for seed in 0..15u64 {
+        let build = |seed: u64| {
+            let mut rng = Rng::new(4000 + seed);
+            let hosts = testcluster_hosts();
+            let roster = random_roster(&mut rng, &hosts, 40, false);
+            let windows = random_windows(&mut rng, &hosts);
+            let s = build_and_run(&roster, &windows, true, 1);
+            s.timeline()
+        };
+        let t1 = build(seed);
+        let t2 = build(seed);
+        assert!(!t1.is_empty());
+        assert_eq!(t1, t2, "seed {seed}: timeline must replay byte-identically");
+    }
+}
+
+#[test]
+fn backfill_strictly_improves_the_gap_heavy_roster() {
+    // the acceptance number: a constructed gap-heavy roster (hour-limit
+    // head jobs blocked by a window, minute-limit jobs that fit the gap)
+    // must have a strictly lower makespan with backfill on
+    let build = |backfill: bool| {
+        let nodes: Vec<_> = catalogue().into_iter().filter(|n| n.testcluster).collect();
+        let mut s = SimScheduler::new(nodes);
+        s.set_backfill(backfill);
+        s.maintenance("icx36", 100.0, 1000.0).unwrap();
+        s.maintenance("rome1", 150.0, 900.0).unwrap();
+        let job = |dur: f64| -> cbench::sched::Payload {
+            Box::new(move |_n, _t| JobOutcome {
+                duration: dur,
+                stdout: String::new(),
+                exit_code: 0,
+            })
+        };
+        // heads: hour-scale limits, cross the windows
+        s.submit(SubmitSpec::new("h1", "icx36").timelimit(60.0).priority(9), job(200.0))
+            .unwrap();
+        s.submit(SubmitSpec::new("h2", "rome1").timelimit(60.0).priority(9), job(150.0))
+            .unwrap();
+        // gap fillers: minute-scale limits
+        for (i, host) in [(0, "icx36"), (1, "icx36"), (2, "rome1")] {
+            s.submit(
+                SubmitSpec::new(&format!("s{i}"), host).timelimit(0.5).priority(1),
+                job(20.0),
+            )
+            .unwrap();
+        }
+        s.run_until_idle();
+        (s.now(), s.jobs().filter(|j| j.backfilled).count())
+    };
+    let (on, backfilled) = build(true);
+    let (off, none) = build(false);
+    assert_eq!(none, 0);
+    assert!(backfilled >= 3, "all gap fillers backfill: {backfilled}");
+    assert!(
+        on < off,
+        "gap-heavy roster: backfill-on makespan {on} must be strictly below {off}"
+    );
+    // exact numbers: icx36 off = 1000+200+2x20 = 1240, on = 1200;
+    // rome1 off = 900+150+20 = 1070, on = 1050
+    assert_eq!(off, 1240.0);
+    assert_eq!(on, 1200.0);
+}
+
+// ---------------------------------------------------------------------
+// tsdb:: tail(n) pushdown — equivalence with full-history scans
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_tail_pushdown_matches_full_history_on_interleaved_tenants() {
+    // multi-repo fixtures with interleaved trigger timestamps: as long as
+    // a repo's history fits the policy's lookback window, the bounded
+    // tail(n) pushdown must judge exactly like a full-history scan —
+    // same findings, same evaluated-series fingerprints, same numbers
+    let stock = Detector::with_default_policies();
+    let policy = stock
+        .policies
+        .iter()
+        .find(|p| p.name == "lbm-mlups")
+        .unwrap()
+        .clone();
+    let lookback = policy.baseline_window + policy.recent_window;
+    for seed in 0..15u64 {
+        let mut rng = Rng::new(5000 + seed);
+        let repos = 2 + rng.below(3); // 2..=4 tenants
+        let pushes = 2 + rng.below(lookback - 1); // 2..=lookback
+        let mut db = Db::new();
+        let mut ts = 0i64;
+        for push in 0..pushes {
+            for r in 0..repos {
+                ts += 1_000_000_000; // interleaved per-repo trigger times
+                for node in ["icx36", "rome1"] {
+                    let base = 1000.0 + 50.0 * r as f64;
+                    // repo-0 regresses on icx36 at the last push
+                    let v = if push + 1 == pushes && r == 0 && node == "icx36" {
+                        base * 0.7
+                    } else {
+                        base * (1.0 + rng.range(-0.004, 0.004))
+                    };
+                    db.insert(
+                        Point::new("lbm", ts)
+                            .tag("repo", &format!("repo-{r}"))
+                            .tag("node", node)
+                            .tag("case", "uniformgridcpu")
+                            .tag("collision_op", "srt")
+                            .field("mlups", v),
+                    );
+                }
+            }
+        }
+        for r in 0..repos {
+            let repo = format!("repo-{r}");
+            let scope = [("repo", repo.as_str())];
+            let (f_tail, mut e_tail) = evaluate_policy_run_scoped(&policy, &db, &scope);
+            let mut full = policy.clone();
+            full.scan_full_history = true;
+            let (f_full, mut e_full) = evaluate_policy_run_scoped(&full, &db, &scope);
+            e_tail.sort();
+            e_full.sort();
+            assert_eq!(e_tail, e_full, "seed {seed} repo {r}: evaluated sets differ");
+            assert_eq!(f_tail.len(), f_full.len(), "seed {seed} repo {r}");
+            for (a, b) in f_tail.iter().zip(f_full.iter()) {
+                assert_eq!(a.series, b.series, "seed {seed}");
+                assert_eq!(a.current, b.current, "seed {seed}");
+                assert_eq!(a.rel_change, b.rel_change, "seed {seed}");
+                assert_eq!(a.confidence, b.confidence, "seed {seed}");
+            }
+            if r == 0 {
+                assert!(
+                    f_tail.iter().any(|f| f.series.contains("node=icx36")),
+                    "seed {seed}: the planted repo-0 drop must be found"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn tail_scan_cap_boundary_is_inclusive_at_n_times_32() {
+    // the filtered tail(n) walk visits at most n x 32 distinct global
+    // timestamps (TAIL_SCAN_SLACK): a tenant whose last upload sits
+    // exactly at the cap is still found; one step beyond is stale
+    let build = |foreign: i64| {
+        let mut db = Db::new();
+        db.insert(Point::new("m", 0).tag("repo", "old").field("v", 1.0));
+        for ts in 1..=foreign {
+            db.insert(Point::new("m", ts).tag("repo", "live").field("v", ts as f64));
+        }
+        Query::new("m", "v")
+            .where_tag("repo", "old")
+            .group_by(&["repo"])
+            .tail(1)
+            .run(&db)
+    };
+    // 31 foreign triggers + the matching one = 32 distinct timestamps:
+    // exactly the n=1 cap — still visible
+    let series = build(31);
+    assert_eq!(series.len(), 1);
+    assert_eq!(series[0].points, vec![(0, 1.0)]);
+    // 32 foreign triggers push the match to the 33rd timestamp: stale
+    assert!(build(32).is_empty());
+}
+
+#[test]
+fn prop_range_pushdown_matches_linear_filter() {
+    // points_in_range (binary search) must select exactly the points a
+    // linear timestamp filter would, for arbitrary interleaved inserts
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(6000 + seed);
+        let mut db = Db::new();
+        let n = 50 + rng.below(150);
+        for _ in 0..n {
+            db.insert(
+                Point::new("m", rng.below(300) as i64)
+                    .tag("s", if rng.uniform() < 0.5 { "a" } else { "b" })
+                    .field("v", rng.range(0.0, 10.0)),
+            );
+        }
+        let (a, b) = {
+            let x = rng.below(300) as i64;
+            let y = rng.below(300) as i64;
+            (x.min(y), x.max(y))
+        };
+        let fast: Vec<(i64, f64)> = Query::new("m", "v")
+            .range(a, b)
+            .run(&db)
+            .first()
+            .map(|s| s.points.clone())
+            .unwrap_or_default();
+        let slow: Vec<(i64, f64)> = db
+            .points("m")
+            .iter()
+            .filter(|p| p.ts >= a && p.ts <= b)
+            .map(|p| (p.ts, p.fields["v"]))
+            .collect();
+        assert_eq!(fast, slow, "seed {seed}: range [{a}, {b}]");
     }
 }
 
