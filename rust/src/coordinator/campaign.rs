@@ -1,26 +1,45 @@
-//! Multi-repo campaign driver: many repositories, one Testcluster.
+//! Multi-repo campaign driver: many repositories, one Testcluster,
+//! **streaming collection**.
 //!
 //! The paper runs one pipeline at a time; exaCB (Badwaik et al.) and the
 //! NEST CB study (Vogelsang et al.) both show that continuous
 //! benchmarking at scale means *many* projects sharing one execution
-//! backend concurrently. This module is that coordinator:
+//! backend concurrently — and that detection latency is what makes the
+//! loop actionable. This module is that coordinator:
 //!
 //! * a [`CampaignProject`] wraps a watched [`Repository`] plus its
 //!   pipeline flavour ([`ProjectKind`]) and scheduling priority;
-//! * [`run_campaign`] generates push events for every project, submits
-//!   **all** resulting pipelines onto the shared event-driven scheduler
-//!   (they interleave job-by-job as simulated time advances), then
-//!   collects them one at a time in completion order — TSDB upload +
-//!   regression detection stay serialized per pipeline, so alert
-//!   bookkeeping and TSDB contents are deterministic;
+//! * [`run_campaign`] generates push events for every project
+//!   ([`campaign_push_events`] — deterministic and rebuildable, which is
+//!   what campaign-aware bisection replays) and submits **all** resulting
+//!   pipelines onto the shared event-driven scheduler, where they
+//!   interleave job-by-job as simulated time advances;
+//! * **streaming collect** (the default): the driver steps the event
+//!   queue one simulated instant at a time
+//!   ([`crate::sched::SimScheduler::step_epoch`]) and collects each
+//!   pipeline — parse, shard upload, regression detection, alert
+//!   bookkeeping — *at the instant its last job finished*, while the rest
+//!   of the roster is still running. Upload + detection stay serialized
+//!   per pipeline in `(completion time, pipeline id)` order, which is
+//!   exactly the order batch collection uses, so the two modes produce
+//!   identical TSDB benchmark contents, identical alert sets and a
+//!   byte-identical scheduler timeline — streaming only moves *when* the
+//!   results exist, which is the point: the first upload lands at the
+//!   first pipeline's completion instead of after the whole roster, and
+//!   the alert SLA (cluster-time from a regression landing to its alert
+//!   opening, [`crate::regress::Alert::sla_secs`]) is bounded by one
+//!   pipeline's duration instead of the campaign makespan;
+//! * **batch collect** (`streaming: false`, `cbench campaign --collect
+//!   batch`) keeps the PR-2 drain-then-collect model for A/B latency
+//!   comparisons;
 //! * each pipeline's triggering commit gets to tune its own detection
 //!   (`regress.*` overrides in `benchmark.cfg`,
 //!   [`super::detector_with_config`]) before its results are judged;
 //! * the [`CampaignOutcome`] reports the overlapped **makespan** against
-//!   the *sequential back-to-back baseline* (the sum of every pipeline's
-//!   idle-cluster standalone duration — what the pre-`sched::` FIFO world
-//!   would have taken), plus one `campaign` TSDB point per pipeline for
-//!   the dashboards.
+//!   the *sequential back-to-back baseline*, plus first-upload time and
+//!   worst alert SLA, plus one `campaign` TSDB point per pipeline
+//!   (wall/standalone durations, first/last-result latencies, alert SLA)
+//!   for the dashboards.
 
 use super::{BenchConfig, CbSystem, PipelineReport, PreparedJob};
 use crate::tsdb::Point;
@@ -138,6 +157,14 @@ pub struct CampaignConfig {
     /// must be finite — an open-ended drain would silently strand every
     /// job pinned to that node ([`run_campaign_with`] rejects it).
     pub drains: Vec<(String, f64, f64)>,
+    /// Streaming collect (default): each pipeline's results are parsed,
+    /// uploaded and fed to regression detection at its completion instant
+    /// on the simulated clock, while other pipelines still run. `false`
+    /// restores batch collection (drain the cluster, then collect) for
+    /// A/B latency comparisons — same final TSDB benchmark contents,
+    /// alert set and timeline, later uploads (`cbench campaign --collect
+    /// streaming|batch`).
+    pub streaming: bool,
 }
 
 impl Default for CampaignConfig {
@@ -149,6 +176,7 @@ impl Default for CampaignConfig {
             seed: 42,
             backfill: true,
             drains: Vec::new(),
+            streaming: true,
         }
     }
 }
@@ -165,6 +193,8 @@ pub struct CampaignOutcome {
     /// time on an idle cluster (Σ standalone durations) — the
     /// pre-`sched::` execution model.
     pub sequential_baseline: f64,
+    /// Collect mode the roster ran under.
+    pub streaming: bool,
 }
 
 impl CampaignOutcome {
@@ -186,6 +216,24 @@ impl CampaignOutcome {
     pub fn alerts_opened(&self) -> usize {
         self.reports.iter().map(|r| r.regressions.opened).sum()
     }
+    /// Simulated instant of the earliest upload + detection — under
+    /// streaming collect the first pipeline's completion; under batch
+    /// collect the roster makespan (everything waits for the drain).
+    pub fn first_upload_at(&self) -> f64 {
+        self.reports
+            .iter()
+            .map(|r| r.collected_at)
+            .fold(f64::INFINITY, f64::min)
+    }
+    /// Worst alert SLA across the roster: the longest cluster-time any
+    /// regression sat on the cluster before its alert opened (`None`
+    /// when no alert opened).
+    pub fn worst_alert_sla(&self) -> Option<f64> {
+        self.reports
+            .iter()
+            .filter_map(|r| r.alert_sla)
+            .fold(None, |acc, s| Some(acc.map_or(s, |a: f64| a.max(s))))
+    }
 }
 
 /// Run a campaign with the stock per-kind job matrices.
@@ -197,6 +245,83 @@ pub fn run_campaign(
     run_campaign_with(cb, projects, cfg, |p, commit_id| {
         p.kind.jobs_for(&p.repo, commit_id)
     })
+}
+
+/// The deterministic push rounds of a campaign: every project commits
+/// once per round, round `inject_at` (1-based) planting the waLBerla
+/// kernel-regen penalty. Returns `(project index, push event)` in
+/// submission order. Commit ids depend only on (author, message, parent,
+/// tree), so replaying this with the same projects and config rebuilds
+/// the **exact commit chains** a previous campaign benchmarked — that is
+/// what `cbench regress bisect --campaign` leans on to bisect a campaign
+/// alert without any saved repository state.
+pub fn campaign_push_events(
+    projects: &mut [CampaignProject],
+    cfg: &CampaignConfig,
+) -> Vec<(usize, PushEvent)> {
+    let mut events: Vec<(usize, PushEvent)> = Vec::new();
+    for r in 0..cfg.pushes {
+        for (pi, p) in projects.iter_mut().enumerate() {
+            let t = r as f64 * 60.0;
+            let ev = if cfg.inject_at > 0 && r + 1 == cfg.inject_at {
+                p.repo.commit_change(
+                    "master",
+                    "dev",
+                    &format!("push #{r} (kernel regen, perf bug)"),
+                    t,
+                    "benchmark.cfg",
+                    &format!("lbm_efficiency_penalty = {}\n", cfg.penalty),
+                )
+            } else {
+                p.repo.commit_change(
+                    "master",
+                    "dev",
+                    &format!("push #{r}"),
+                    t,
+                    "src/kernel.c",
+                    &format!("// seed {} rev {r}\n", cfg.seed),
+                )
+            };
+            events.push((pi, ev));
+        }
+    }
+    events
+}
+
+/// Collect one pipeline under its commit's detection config and insert
+/// its `campaign` meta-point (shared by the streaming and batch paths).
+fn collect_one(
+    cb: &mut CbSystem,
+    projects: &[CampaignProject],
+    pid: u64,
+    pi: usize,
+    ev: &PushEvent,
+    reports: &mut Vec<PipelineReport>,
+) -> anyhow::Result<()> {
+    // the triggering commit tunes its own detection
+    let commit_cfg = BenchConfig::from_commit(&projects[pi].repo, &ev.commit_id);
+    cb.apply_regress_config(&commit_cfg);
+    let r = cb.collect_pipeline(pid)?;
+    // one campaign meta-point per pipeline for the dashboards
+    let mut p = Point::new("campaign", r.trigger_ts)
+        .tag("repo", &r.repo)
+        .tag("kind", projects[pi].kind.name())
+        .tag("commit", &r.commit_id[..8.min(r.commit_id.len())])
+        .field("duration", r.duration)
+        .field("standalone", r.standalone_duration)
+        .field("jobs", r.jobs_total as f64)
+        .field("failed", r.jobs_failed as f64)
+        .field("backfilled", r.jobs_backfilled as f64)
+        .field("head_of_line", (r.jobs_total - r.jobs_backfilled) as f64)
+        .field("points", r.points_uploaded as f64)
+        .field("first_result_latency", r.first_result_latency())
+        .field("collect_latency", r.collect_latency());
+    if let Some(sla) = r.alert_sla {
+        p = p.field("alert_sla", sla);
+    }
+    cb.db.insert(p);
+    reports.push(r);
+    Ok(())
 }
 
 /// Run a campaign with a custom job-matrix provider (tests, downsized
@@ -235,32 +360,7 @@ pub fn run_campaign_with(
     let t0 = cb.scheduler.now();
 
     // --- push rounds: every project commits once per round ---
-    let mut events: Vec<(usize, PushEvent)> = Vec::new();
-    for r in 0..cfg.pushes {
-        for (pi, p) in projects.iter_mut().enumerate() {
-            let t = r as f64 * 60.0;
-            let ev = if cfg.inject_at > 0 && r + 1 == cfg.inject_at {
-                p.repo.commit_change(
-                    "master",
-                    "dev",
-                    &format!("push #{r} (kernel regen, perf bug)"),
-                    t,
-                    "benchmark.cfg",
-                    &format!("lbm_efficiency_penalty = {}\n", cfg.penalty),
-                )
-            } else {
-                p.repo.commit_change(
-                    "master",
-                    "dev",
-                    &format!("push #{r}"),
-                    t,
-                    "src/kernel.c",
-                    &format!("// seed {} rev {r}\n", cfg.seed),
-                )
-            };
-            events.push((pi, ev));
-        }
-    }
+    let events = campaign_push_events(projects, cfg);
 
     // --- submit phase: every pipeline goes onto the shared scheduler ---
     let mut submitted: Vec<(u64, usize, PushEvent)> = Vec::new();
@@ -283,44 +383,60 @@ pub fn run_campaign_with(
         submitted.push((pid, *pi, ev.clone()));
     }
 
-    // --- the overlap: one event queue drains all pipelines at once ---
-    cb.scheduler.run_until_idle();
-
-    // --- collect phase, serialized per pipeline in completion order ---
-    let mut order: Vec<(f64, u64, usize, PushEvent)> = submitted
-        .into_iter()
-        .map(|(pid, pi, ev)| {
-            (
-                cb.pipeline_finished_at(pid).unwrap_or(f64::MAX),
-                pid,
-                pi,
-                ev,
-            )
-        })
-        .collect();
-    order.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
-
-    let mut reports = Vec::with_capacity(order.len());
-    for (_, pid, pi, ev) in order {
-        // the triggering commit tunes its own detection
-        let commit_cfg = BenchConfig::from_commit(&projects[pi].repo, &ev.commit_id);
-        cb.apply_regress_config(&commit_cfg);
-        let r = cb.collect_pipeline(pid)?;
-        // one campaign meta-point per pipeline for the dashboards
-        cb.db.insert(
-            Point::new("campaign", r.trigger_ts)
-                .tag("repo", &r.repo)
-                .tag("kind", projects[pi].kind.name())
-                .tag("commit", &r.commit_id[..8.min(r.commit_id.len())])
-                .field("duration", r.duration)
-                .field("standalone", r.standalone_duration)
-                .field("jobs", r.jobs_total as f64)
-                .field("failed", r.jobs_failed as f64)
-                .field("backfilled", r.jobs_backfilled as f64)
-                .field("head_of_line", (r.jobs_total - r.jobs_backfilled) as f64)
-                .field("points", r.points_uploaded as f64),
-        );
-        reports.push(r);
+    let mut reports = Vec::with_capacity(submitted.len());
+    if cfg.streaming {
+        // --- streaming collect: advance the shared event queue one
+        // simulated instant at a time; a pipeline is collected (parse →
+        // shard upload → detection → alerting) at the instant its last
+        // job finished, while the rest of the roster keeps running.
+        // Pipelines completing at the same instant are collected in
+        // submission (pipeline-id) order — exactly the (finished_at,
+        // pid) order of batch collection, so the two modes agree on
+        // everything except *when* the uploads happen.
+        let mut remaining = submitted;
+        loop {
+            let mut i = 0;
+            while i < remaining.len() {
+                if cb.pipeline_done(remaining[i].0) {
+                    let (pid, pi, ev) = remaining.remove(i);
+                    collect_one(cb, projects, pid, pi, &ev, &mut reports)?;
+                } else {
+                    i += 1;
+                }
+            }
+            if remaining.is_empty() {
+                break;
+            }
+            if cb.scheduler.step_epoch().is_none() {
+                // queue drained with pipelines still incomplete (stranded
+                // jobs — e.g. a library caller draining a node without a
+                // resume): collect what exists so the campaign reports
+                // instead of spinning
+                for (pid, pi, ev) in std::mem::take(&mut remaining) {
+                    collect_one(cb, projects, pid, pi, &ev, &mut reports)?;
+                }
+                break;
+            }
+        }
+    } else {
+        // --- batch collect (A/B reference): drain the whole roster,
+        // then collect serialized per pipeline in completion order ---
+        cb.scheduler.run_until_idle();
+        let mut order: Vec<(f64, u64, usize, PushEvent)> = submitted
+            .into_iter()
+            .map(|(pid, pi, ev)| {
+                (
+                    cb.pipeline_finished_at(pid).unwrap_or(f64::MAX),
+                    pid,
+                    pi,
+                    ev,
+                )
+            })
+            .collect();
+        order.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        for (_, pid, pi, ev) in order {
+            collect_one(cb, projects, pid, pi, &ev, &mut reports)?;
+        }
     }
 
     let makespan = cb.scheduler.now() - t0;
@@ -329,6 +445,7 @@ pub fn run_campaign_with(
         reports,
         makespan,
         sequential_baseline,
+        streaming: cfg.streaming,
     })
 }
 
@@ -383,7 +500,7 @@ mod tests {
         assert!(out.overlap_speedup() > 1.5);
         // both repos tagged in the shared TSDB + campaign meta-points
         assert_eq!(cb.db.tag_values("lbm", "repo"), vec!["alpha", "beta"]);
-        assert_eq!(cb.db.points("campaign").len(), 2);
+        assert_eq!(cb.db.n_points("campaign"), 2);
     }
 
     fn toy_jobs_tl(tag: &str, spec: &[(&str, f64, f64, usize)]) -> Vec<PreparedJob> {
@@ -442,6 +559,66 @@ mod tests {
         // the per-pipeline meta point records the utilization split
         assert_eq!(on.reports[0].jobs_backfilled, 2);
         assert_eq!(on.reports[0].jobs_total, 3);
+    }
+
+    #[test]
+    fn streaming_collects_at_completion_and_matches_batch() {
+        // alpha's pipeline drains icx36 at t=30, beta's drains rome1 at
+        // t=45: streaming uploads alpha's results at 30 while beta still
+        // runs; batch uploads both only after the roster drained at 45
+        let run = |streaming: bool| {
+            let mut cb = CbSystem::new();
+            let mut projects = vec![
+                CampaignProject::new("alpha", ProjectKind::Walberla),
+                CampaignProject::new("beta", ProjectKind::Walberla),
+            ];
+            let cfg = CampaignConfig {
+                pushes: 1,
+                penalty: 0.0,
+                seed: 1,
+                streaming,
+                ..CampaignConfig::default()
+            };
+            let out = run_campaign_with(&mut cb, &mut projects, &cfg, |p, _c| {
+                if p.name == "alpha" {
+                    toy_jobs("a", &[("icx36", 10.0, 3)])
+                } else {
+                    toy_jobs("b", &[("rome1", 15.0, 3)])
+                }
+            })
+            .unwrap();
+            (out, cb)
+        };
+        let (s, cb_s) = run(true);
+        let (b, cb_b) = run(false);
+        assert!(s.streaming && !b.streaming);
+        // identical schedule, collection order, and benchmark TSDB
+        assert_eq!(s.makespan, b.makespan);
+        assert_eq!(cb_s.scheduler.timeline(), cb_b.scheduler.timeline());
+        let pids = |o: &CampaignOutcome| o.reports.iter().map(|r| r.pipeline_id).collect::<Vec<_>>();
+        assert_eq!(pids(&s), pids(&b));
+        let dump = |cb: &CbSystem| {
+            cb.db.points_iter("lbm").map(|p| p.to_line()).collect::<Vec<_>>()
+        };
+        assert_eq!(dump(&cb_s), dump(&cb_b));
+        // streaming collected alpha at its own completion instant...
+        assert_eq!(s.reports[0].repo, "alpha");
+        assert_eq!(s.reports[0].finished_at, 30.0);
+        assert_eq!(s.reports[0].collected_at, 30.0);
+        assert_eq!(s.first_upload_at(), 30.0);
+        // ...while batch only uploads once the roster drained
+        assert_eq!(b.first_upload_at(), b.makespan);
+        assert!(s.first_upload_at() < b.first_upload_at());
+        // latency bookkeeping: first result at 10 s, upload at completion
+        assert_eq!(s.reports[0].first_result_latency(), 10.0);
+        assert_eq!(s.reports[0].collect_latency(), 30.0);
+        assert_eq!(b.reports[0].collect_latency(), 45.0);
+        // the campaign meta-points carry the latency fields
+        assert!(cb_s
+            .db
+            .points_iter("campaign")
+            .all(|p| p.fields.contains_key("first_result_latency")
+                && p.fields.contains_key("collect_latency")));
     }
 
     #[test]

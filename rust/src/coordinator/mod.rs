@@ -17,19 +17,34 @@
 //!   advances,
 //! 4. **collect phase** ([`CbSystem::collect_pipeline`]): consumes the
 //!   pipeline's completion events, parses each job's output (likwid-style
-//!   counters), uploads metric points to the TSDB (fields) tagged with
-//!   the run parameters + repository (tags) and the pipeline trigger time
-//!   (timestamp), archives raw artifacts as linked records in the
-//!   Kadi4Mat-like store (one collection per pipeline execution, Fig. 5),
-//!   and runs the statistical regression check — upload + detection are
-//!   serialized per pipeline, which keeps alert bookkeeping and TSDB
-//!   ordering deterministic even when execution overlapped,
+//!   counters), uploads metric points to the *sharded* TSDB (fields)
+//!   tagged with the run parameters + repository (tags) and the pipeline
+//!   trigger time (timestamp), archives raw artifacts as linked records
+//!   in the Kadi4Mat-like store (one collection per pipeline execution,
+//!   Fig. 5), and runs the statistical regression check — upload +
+//!   detection are serialized per pipeline, which keeps alert bookkeeping
+//!   and TSDB ordering deterministic even when execution overlapped,
 //! 5. refreshes the Grafana-like dashboards and the roofline plots.
+//!
+//! **Streaming collection.** Collection is decoupled from draining the
+//! cluster: a caller can collect a pipeline the instant its last job
+//! finished — [`CbSystem::pipeline_done`] polled between scheduler
+//! epochs ([`crate::sched::SimScheduler::step_epoch`]) is the hook, and
+//! the campaign driver does exactly that by default — so results flow
+//! into the TSDB and the detector *while the cluster is still busy*.
+//! [`PipelineReport`] records the full latency picture (`submitted_at` →
+//! `first_result_at` → `finished_at` → `collected_at`), and a detection
+//! that opens alerts stamps them with the **alert SLA**: the simulated
+//! cluster-time from the offending push entering the system to its alert
+//! opening ([`crate::regress::Alert::sla_secs`]). Streaming collect
+//! bounds that SLA by one pipeline's duration; batch collection pays the
+//! whole roster's makespan.
 //!
 //! [`CbSystem::execute_pipeline`] remains as the submit-then-collect
 //! shim (the old synchronous single-pipeline call); the multi-repo
 //! campaign driver ([`campaign::run_campaign`]) keeps several pipelines
-//! in flight at once and collects them in completion order.
+//! in flight at once and collects them in completion order, streaming
+//! by default ([`campaign::CampaignConfig::streaming`]).
 //!
 //! Build *and detection* configuration live in the repository tree
 //! (`benchmark.cfg`), so commits change both measured performance (the
@@ -205,11 +220,35 @@ pub struct PipelineReport {
     /// heaviest per-node sum of its own job runtimes. The back-to-back
     /// sequential baseline of a campaign is the sum of these.
     pub standalone_duration: f64,
+    /// Simulated time the pipeline's jobs were submitted.
+    pub submitted_at: f64,
+    /// Simulated time the pipeline's *first* job finished — the earliest
+    /// instant any of its results existed on the cluster.
+    pub first_result_at: f64,
     /// Simulated time the pipeline's last job finished.
     pub finished_at: f64,
+    /// Simulated time the results were parsed/uploaded/detected. Under
+    /// streaming collect this is the pipeline's own completion instant;
+    /// under batch collect it is wherever the clock stood when the caller
+    /// got around to collecting (for a campaign: the roster's makespan).
+    pub collected_at: f64,
     /// Outcome of the post-upload regression check (alerts opened /
     /// re-confirmed / auto-resolved by this execution).
     pub regressions: IngestSummary,
+    /// Alert SLA of this execution: simulated seconds from submission to
+    /// the detection that opened alerts (`Some` iff any alert opened).
+    pub alert_sla: Option<f64>,
+}
+
+impl PipelineReport {
+    /// Cluster-time from submission to the first result existing.
+    pub fn first_result_latency(&self) -> f64 {
+        (self.first_result_at - self.submitted_at).max(0.0)
+    }
+    /// Cluster-time from submission to upload + detection having run.
+    pub fn collect_latency(&self) -> f64 {
+        (self.collected_at - self.submitted_at).max(0.0)
+    }
 }
 
 /// A pipeline whose jobs are on the scheduler but whose results have not
@@ -290,7 +329,7 @@ impl CbSystem {
     pub fn adopt_db(&mut self, db: Db) {
         let mut max_ts = 0i64;
         for m in db.measurements() {
-            if let Some(p) = db.points(m).last() {
+            if let Some(p) = db.last_point(m) {
                 max_ts = max_ts.max(p.ts);
             }
         }
@@ -448,6 +487,25 @@ impl CbSystem {
             })
     }
 
+    /// True when every job of an in-flight pipeline reached a terminal
+    /// state — its results can be collected without advancing the clock.
+    /// The streaming-collect loop polls this between scheduler epochs.
+    /// `false` for ids that are not in flight.
+    pub fn pipeline_done(&self, pipeline_id: u64) -> bool {
+        self.in_flight
+            .iter()
+            .find(|p| p.pipeline_id == pipeline_id)
+            .map(|p| {
+                p.jobs.iter().all(|(id, _)| {
+                    self.scheduler
+                        .job(*id)
+                        .map(|j| j.state.is_terminal())
+                        .unwrap_or(true)
+                })
+            })
+            .unwrap_or(false)
+    }
+
     /// **Collect phase**: advance the shared scheduler until every job of
     /// this pipeline completed (other pipelines' events are processed as
     /// simulated time passes them), then parse, upload, archive and run
@@ -487,6 +545,7 @@ impl CbSystem {
         let mut points = 0;
         let mut records = 0;
         let mut last_end = pending.submitted_at;
+        let mut first_end = f64::INFINITY;
         let mut node_load: BTreeMap<String, f64> = BTreeMap::new();
         for (sched_id, ci) in &pending.jobs {
             let job = self.scheduler.job(*sched_id).expect("job exists");
@@ -498,6 +557,7 @@ impl CbSystem {
             }
             if let (Some(start), Some(end)) = (job.start_time, job.end_time) {
                 last_end = last_end.max(end);
+                first_end = first_end.min(end);
                 *node_load.entry(node_host.clone()).or_insert(0.0) += end - start;
             }
             let node = self.scheduler.node(&node_host).unwrap().clone();
@@ -574,6 +634,44 @@ impl CbSystem {
         let regressions =
             self.check_regressions(&pending.measurement, coll, Some(&pending.event.repo));
 
+        // alert SLA: simulated cluster-time from the regressing push
+        // entering the system to its alert opening — the latency the
+        // streaming collect exists to shrink. The regression *landed*
+        // with the pipeline at the alert's located change point
+        // (`change_ts` is that pipeline's trigger timestamp), which may
+        // be several pipelines before the one whose detection finally
+        // opened the alert (e.g. a widened recent window); its submission
+        // time is looked up in this process's executed reports, falling
+        // back to the current pipeline's submission for change points in
+        // carried-over history. Stamped per alert; the report carries the
+        // worst SLA of the alerts it opened.
+        let collected_at = self.scheduler.now();
+        let mut slas: Vec<(u64, f64)> = Vec::with_capacity(regressions.opened_ids.len());
+        for id in &regressions.opened_ids {
+            let change_ts = self
+                .alerts
+                .get(*id)
+                .map(|a| a.change_ts)
+                .unwrap_or(trigger_ts);
+            let landed_at = self
+                .executed
+                .iter()
+                .rev()
+                .find(|r| r.trigger_ts == change_ts)
+                .map(|r| r.submitted_at)
+                .unwrap_or(pending.submitted_at);
+            slas.push((*id, (collected_at - landed_at).max(0.0)));
+        }
+        let alert_sla = slas
+            .iter()
+            .map(|&(_, s)| s)
+            .fold(None, |acc: Option<f64>, s| Some(acc.map_or(s, |a| a.max(s))));
+        for (id, s) in slas {
+            if let Some(a) = self.alerts.get_mut(id) {
+                a.sla_secs = Some(s);
+            }
+        }
+
         let standalone_duration = node_load.values().copied().fold(0.0, f64::max);
         let report = PipelineReport {
             pipeline_id: pending.pipeline_id,
@@ -589,8 +687,12 @@ impl CbSystem {
             trigger_ts,
             duration: (last_end - pending.submitted_at).max(0.0),
             standalone_duration,
+            submitted_at: pending.submitted_at,
+            first_result_at: if first_end.is_finite() { first_end } else { pending.submitted_at },
             finished_at: last_end,
+            collected_at,
             regressions,
+            alert_sla,
         };
         self.executed.push(report.clone());
         Ok(report)
@@ -841,7 +943,7 @@ mod tests {
         assert_eq!(r.repo, "fe2ti");
         assert_eq!(cb.db.len(), 2);
         // points tagged with commit + node
-        let pts = cb.db.points("fe2ti");
+        let pts: Vec<&Point> = cb.db.points_iter("fe2ti").collect();
         assert_eq!(pts[0].tags["commit"], "abcdef12");
         assert!(cb.store.n_links() >= 4);
     }
@@ -925,7 +1027,7 @@ mod tests {
             .execute_pipeline(&event(), false, vec![dummy_job("a2", "icx36", "METRIC x=2\n")], "m")
             .unwrap();
         assert!(r2.pipeline_id > r1.pipeline_id);
-        let pts = cb.db.points("m");
+        let pts: Vec<&Point> = cb.db.points_iter("m").collect();
         assert!(pts[1].ts > pts[0].ts);
     }
 
@@ -1050,6 +1152,52 @@ mod tests {
         assert!(cb.alerts.active().is_empty());
         let rec = cb.store.record_by_identifier("regress-alert-1").unwrap();
         assert_eq!(rec.meta["state"], "resolved");
+    }
+
+    #[test]
+    fn alert_sla_measures_from_the_offending_pipelines_submission() {
+        // detection can lag the regressing push (here: a 2-point recent
+        // window that still averages above the threshold when the first
+        // bad pipeline lands). The SLA must span back to the pipeline at
+        // the located change point, not just the detecting pipeline.
+        let mut cb = CbSystem::new();
+        cb.install_detector(Detector::new().policy(
+            Policy::new("lag", "m", "v")
+                .group_by(&["repo"])
+                .windows(4, 2)
+                .thresholds(0.08, 1.0, 0.0)
+                .changepoint(false),
+        ));
+        let run = |cb: &mut CbSystem, v: f64| {
+            let j = PreparedJob {
+                ci: CiJob::new("j", "benchmark").var("HOST", "icx36"),
+                payload: Box::new(move |_n, _t| JobOutcome {
+                    duration: 10.0,
+                    stdout: format!("METRIC v={v}\n"),
+                    exit_code: 0,
+                }),
+            };
+            cb.execute_pipeline(&event(), false, vec![j], "m").unwrap()
+        };
+        for _ in 0..4 {
+            assert_eq!(run(&mut cb, 1000.0).regressions.opened, 0);
+        }
+        // the regression LANDS here, but the recent window still averages
+        // (1000 + 880) / 2 = -6% — under the 8% threshold, no alert yet
+        let r5 = run(&mut cb, 880.0);
+        assert_eq!(r5.regressions.opened, 0);
+        // the window fills with bad points: the alert opens one pipeline
+        // late...
+        let r6 = run(&mut cb, 880.0);
+        assert_eq!(r6.regressions.opened, 1);
+        // ...and the SLA reaches back to pipeline 5's submission
+        let sla = r6.alert_sla.expect("opening report carries the SLA");
+        assert_eq!(sla, r6.collected_at - r5.submitted_at);
+        assert!(
+            sla > r6.collected_at - r6.submitted_at,
+            "lagged detection must not under-report the SLA"
+        );
+        assert_eq!(cb.alerts.active()[0].sla_secs, Some(sla));
     }
 
     #[test]

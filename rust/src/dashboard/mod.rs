@@ -291,6 +291,30 @@ pub fn campaign_dashboard() -> Dashboard {
                 .group_by(&["repo"])
                 .unit("jobs"),
         )
+        // streaming-collect latencies: cluster-time from a pipeline's
+        // submission to its first finished job and to its results being
+        // uploaded + detection having run. Under streaming collect the
+        // collect latency tracks the pipeline's own completion; under
+        // batch collect it balloons to the roster makespan — this panel
+        // is the A/B view of `cbench campaign --collect streaming|batch`.
+        .panel(
+            Panel::new("Latency: first result", PanelKind::TimeSeries, "campaign", "first_result_latency")
+                .group_by(&["repo"])
+                .unit("s"),
+        )
+        .panel(
+            Panel::new("Latency: upload + detect", PanelKind::TimeSeries, "campaign", "collect_latency")
+                .group_by(&["repo"])
+                .unit("s"),
+        )
+        // alert SLA: how long a landed regression sat on the cluster
+        // before its alert opened (only pipelines that opened alerts
+        // upload this field)
+        .panel(
+            Panel::new("Alert SLA", PanelKind::Stat, "campaign", "alert_sla")
+                .group_by(&["repo"])
+                .unit("s"),
+        )
         .panel(
             Panel::new("Failed jobs", PanelKind::Stat, "campaign", "failed")
                 .group_by(&["repo"])
@@ -431,6 +455,7 @@ mod tests {
             current: 1.2,
             rel_change: 0.2,
             change_ts: 2,
+            sla_secs: None,
             suspect_commit: Some("deadbeef".into()),
             first_bad_commit: None,
             archive_record: None,
@@ -465,9 +490,26 @@ mod tests {
                     .field("jobs", 55.0)
                     .field("backfilled", 4.0)
                     .field("head_of_line", 51.0)
-                    .field("failed", 0.0),
+                    .field("failed", 0.0)
+                    .field("first_result_latency", 60.0)
+                    .field("collect_latency", dur),
             );
         }
+        // only the alert-opening pipeline uploads an alert_sla field
+        db.insert(
+            Point::new("campaign", 4_000_000_000)
+                .tag("repo", "walberla-0")
+                .tag("kind", "walberla")
+                .field("duration", 320.0)
+                .field("standalone", 320.0)
+                .field("jobs", 55.0)
+                .field("backfilled", 0.0)
+                .field("head_of_line", 55.0)
+                .field("failed", 0.0)
+                .field("first_result_latency", 58.0)
+                .field("collect_latency", 320.0)
+                .field("alert_sla", 320.0),
+        );
         let d = campaign_dashboard();
         let txt = d.render_text(&db);
         assert!(txt.contains("Pipeline wall time (overlapped)"));
@@ -477,6 +519,10 @@ mod tests {
         // the maintenance-utilization split renders per repository
         assert!(txt.contains("Utilization: backfilled starts"));
         assert!(txt.contains("Utilization: head-of-line starts"));
+        // the streaming-collect latency + alert SLA panels render
+        assert!(txt.contains("Latency: first result"));
+        assert!(txt.contains("Latency: upload + detect"));
+        assert!(txt.contains("Alert SLA"));
         // repo filter narrows to one project
         let mut d = campaign_dashboard();
         d.select("repo", &["fe2ti-1"]);

@@ -6,7 +6,7 @@ use cbench::cluster::nodes::{catalogue, node};
 use cbench::coordinator::campaign::{self, CampaignConfig};
 use cbench::coordinator::{fe2ti_pipeline, walberla_pipeline, BenchConfig, CbSystem, PreparedJob};
 use cbench::dashboard::{campaign_dashboard, fe2ti_dashboard, walberla_dashboard};
-use cbench::regress::{bisect_pipeline, AlertBook, AlertState, Detector};
+use cbench::regress::{bisect_pipeline, AlertBook, AlertState, BisectReport, Detector};
 use cbench::report;
 use cbench::tsdb::{Aggregate, Db, Query};
 use cbench::util::cli::Args;
@@ -46,6 +46,7 @@ fn cbench_main(argv: Vec<String>) -> anyhow::Result<()> {
         "dashboard" => cmd_dashboard(&args),
         "artifacts" => cmd_artifacts(&args),
         "regress" => cmd_regress(&args),
+        "tsdb" => cmd_tsdb(&args),
         other => anyhow::bail!("unknown command `{other}` — see `cbench help`"),
     }
 }
@@ -232,13 +233,18 @@ fn parse_drain_specs(spec: Option<&str>) -> anyhow::Result<Vec<(String, f64, f64
 
 /// `cbench campaign [--repos N] [--pushes M] [--inject-regression K]
 /// [--penalty P] [--seed S] [--backfill on|off] [--drain NODE@FROM..TO]
-/// [--save-tsdb FILE] [--save-alerts FILE]` —
+/// [--collect streaming|batch] [--save-tsdb FILE] [--save-alerts FILE]` —
 /// the multi-repo coordinator: N repositories (alternating waLBerla /
 /// FE2TI matrices) each push M commits; every resulting pipeline is
 /// submitted onto ONE event-driven scheduler so their jobs interleave on
-/// the shared Testcluster, then collected (upload + regression check,
-/// serialized per pipeline) in completion order. Reports the overlapped
-/// simulated makespan against the sequential back-to-back baseline.
+/// the shared Testcluster. Under `--collect streaming` (the default)
+/// each pipeline's results are parsed, uploaded and fed to regression
+/// detection at its completion instant on the simulated clock — the
+/// first upload lands while the roster is still running; `--collect
+/// batch` restores drain-then-collect for A/B latency comparisons (same
+/// TSDB benchmark contents, alert set and timeline, later uploads).
+/// Reports the overlapped simulated makespan against the sequential
+/// back-to-back baseline plus the first-upload time and worst alert SLA.
 /// `--drain` opens scontrol-style maintenance windows; `--backfill off`
 /// disables the timelimit-aware gap filling (for A/B makespan runs).
 fn cmd_campaign(args: &Args) -> anyhow::Result<()> {
@@ -253,13 +259,18 @@ fn cmd_campaign(args: &Args) -> anyhow::Result<()> {
         "off" | "false" | "0" => false,
         other => anyhow::bail!("--backfill `{other}`: expected on|off"),
     };
+    let streaming = match args.get_or("collect", "streaming") {
+        "streaming" | "stream" => true,
+        "batch" => false,
+        other => anyhow::bail!("--collect `{other}`: expected streaming|batch"),
+    };
     let drains = parse_drain_specs(args.get("drain"))?;
 
     let mut cb = CbSystem::new();
     let (tsdb_path, alerts_path) = load_persisted_state(&mut cb, args)?;
 
     let mut projects = campaign::default_projects(repos);
-    let cfg = CampaignConfig { pushes, inject_at, penalty, seed, backfill, drains };
+    let cfg = CampaignConfig { pushes, inject_at, penalty, seed, backfill, drains, streaming };
     for (host, from, until) in &cfg.drains {
         println!("maintenance: {host} drained over [{from:.0}..{until:.0}) (simulated s)");
     }
@@ -305,6 +316,18 @@ fn cmd_campaign(args: &Args) -> anyhow::Result<()> {
     } else {
         println!("overlap: no improvement over sequential baseline");
     }
+    println!(
+        "collect mode: {} — first upload at {} cluster time (makespan {})",
+        if out.streaming { "streaming" } else { "batch" },
+        cbench::util::fmt_secs(out.first_upload_at()),
+        cbench::util::fmt_secs(out.makespan)
+    );
+    if let Some(sla) = out.worst_alert_sla() {
+        println!(
+            "worst alert SLA: {} from regression landing to alert opening",
+            cbench::util::fmt_secs(sla)
+        );
+    }
     if !cfg.drains.is_empty() {
         println!(
             "backfill {}: {} of {} job starts went into maintenance-window gaps",
@@ -315,7 +338,7 @@ fn cmd_campaign(args: &Args) -> anyhow::Result<()> {
     }
     // machine-readable summary (CI records this in the per-commit bench JSON)
     println!(
-        "CAMPAIGN_JSON {{\"repos\":{repos},\"pushes\":{pushes},\"pipelines\":{},\"jobs\":{},\"makespan_s\":{:.3},\"sequential_s\":{:.3},\"speedup\":{:.4},\"alerts_opened\":{},\"backfill\":{},\"backfilled_jobs\":{}}}",
+        "CAMPAIGN_JSON {{\"repos\":{repos},\"pushes\":{pushes},\"pipelines\":{},\"jobs\":{},\"makespan_s\":{:.3},\"sequential_s\":{:.3},\"speedup\":{:.4},\"alerts_opened\":{},\"backfill\":{},\"backfilled_jobs\":{},\"collect\":\"{}\",\"first_upload_s\":{:.3},\"worst_alert_sla_s\":{}}}",
         out.reports.len(),
         out.total_jobs(),
         out.makespan,
@@ -323,7 +346,12 @@ fn cmd_campaign(args: &Args) -> anyhow::Result<()> {
         speedup,
         out.alerts_opened(),
         cfg.backfill,
-        out.jobs_backfilled()
+        out.jobs_backfilled(),
+        if out.streaming { "streaming" } else { "batch" },
+        out.first_upload_at(),
+        out.worst_alert_sla()
+            .map(|s| format!("{s:.3}"))
+            .unwrap_or_else(|| "null".into())
     );
 
     cb.db.save(Path::new(tsdb_path))?;
@@ -436,13 +464,100 @@ fn cmd_artifacts(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Representative storage-layer query cost over a TSDB, in seconds: per
+/// measurement, one detector-style trailing-window scan (tail bound +
+/// range read) and one full-history scan, averaged over `reps` rounds.
+/// Used by `cbench tsdb compact` to report the query-time ratio.
+fn tsdb_probe_secs(db: &Db, reps: usize) -> f64 {
+    let measurements: Vec<String> = db.measurements().cloned().collect();
+    let t = std::time::Instant::now();
+    let mut sink = 0usize;
+    for _ in 0..reps.max(1) {
+        for m in &measurements {
+            let t0 = db.tail_start_ts(m, 16);
+            sink += db.points_in_range(m, t0, None).count();
+            sink += db.points_iter(m).count();
+        }
+    }
+    // keep the scans from being optimized away
+    if sink == usize::MAX {
+        eprintln!("unreachable probe sink");
+    }
+    t.elapsed().as_secs_f64() / reps.max(1) as f64
+}
+
+/// `cbench tsdb <info|compact> [--tsdb FILE]` — inspect / compact the
+/// sharded store. `info` prints the shard layout (per-measurement shard
+/// count, per-shard point counts and min/max-ts index, compaction
+/// state). `compact --retain-raw SECS` replaces raw points in shards
+/// entirely older than `newest - retain-raw` with per-series rollup
+/// summaries and saves the result (`--out FILE` to write elsewhere);
+/// `--shard-span SECS` controls the partition size on load.
+fn cmd_tsdb(args: &Args) -> anyhow::Result<()> {
+    let sub = args.positional.first().map(|s| s.as_str()).unwrap_or("info");
+    let tsdb = args.get_or("tsdb", "cbench_tsdb.lp");
+    let default_span_s = (cbench::tsdb::DEFAULT_SHARD_SPAN_NS / 1_000_000_000) as usize;
+    let span_s = args.get_usize("shard-span", default_span_s);
+    anyhow::ensure!(span_s >= 1, "--shard-span must be at least 1 second");
+    let mut db = Db::load_with_shard_span(Path::new(tsdb), span_s as i64 * 1_000_000_000)?;
+    match sub {
+        "info" => {
+            println!(
+                "{tsdb}: {} points, shard span {span_s} s",
+                db.len()
+            );
+            let measurements: Vec<String> = db.measurements().cloned().collect();
+            for m in &measurements {
+                println!("  {m}: {} shards, {} points", db.shards(m).len(), db.n_points(m));
+                for s in db.shards(m) {
+                    println!(
+                        "    shard {:>6}  [{}..{}]  {:>6} points{}",
+                        s.key(),
+                        s.min_ts().unwrap_or(0) / 1_000_000_000,
+                        s.max_ts().unwrap_or(0) / 1_000_000_000,
+                        s.len(),
+                        if s.is_compacted() { "  (compacted rollups)" } else { "" }
+                    );
+                }
+            }
+            Ok(())
+        }
+        "compact" => {
+            let retain_s = args.get_usize("retain-raw", 64);
+            let t_before = tsdb_probe_secs(&db, 3);
+            let rep = db.compact(retain_s as i64 * 1_000_000_000);
+            let t_after = tsdb_probe_secs(&db, 3);
+            let out = args.get_or("out", tsdb);
+            db.save(Path::new(out))?;
+            let ratio = if t_before > 0.0 { t_after / t_before } else { 1.0 };
+            println!(
+                "compacted {} of {} shards: {} -> {} points (raw kept for the trailing {retain_s} s) -> {out}",
+                rep.shards_compacted, rep.shards_seen, rep.points_before, rep.points_after
+            );
+            println!(
+                "storage-scan probe: {:.3} ms -> {:.3} ms ({ratio:.2}x)",
+                1e3 * t_before,
+                1e3 * t_after
+            );
+            // machine-readable summary (CI embeds this in the per-commit
+            // bench JSON next to CAMPAIGN_JSON / BACKFILL_JSON)
+            println!(
+                "COMPACT_JSON {{\"points_before\":{},\"points_after\":{},\"shards_seen\":{},\"shards_compacted\":{},\"retain_raw_s\":{retain_s},\"shard_span_s\":{span_s},\"query_time_ratio\":{ratio:.4}}}",
+                rep.points_before, rep.points_after, rep.shards_seen, rep.shards_compacted
+            );
+            Ok(())
+        }
+        other => anyhow::bail!("unknown subcommand `tsdb {other}` (info|compact)"),
+    }
+}
+
 /// Latest timestamp across every measurement — the "now" for alert
 /// bookkeeping when working from a saved TSDB.
 fn db_now(db: &Db) -> i64 {
     let measurements: Vec<String> = db.measurements().cloned().collect();
     measurements
         .iter()
-        .filter_map(|m| db.points(m).last().map(|p| p.ts))
+        .filter_map(|m| db.last_point(m).map(|p| p.ts))
         .max()
         .unwrap_or(0)
 }
@@ -455,6 +570,7 @@ fn cmd_regress(args: &Args) -> anyhow::Result<()> {
     match sub {
         "detect" => cmd_regress_detect(args, alerts_path),
         "alerts" => cmd_regress_alerts(args, alerts_path),
+        "bisect" if args.flag("campaign") => cmd_regress_bisect_campaign(args, alerts_path),
         "bisect" => cmd_regress_bisect(args, alerts_path),
         other => anyhow::bail!("unknown subcommand `regress {other}` (detect|alerts|bisect)"),
     }
@@ -521,7 +637,7 @@ fn cmd_regress_alerts(args: &Args, alerts_path: &str) -> anyhow::Result<()> {
     }
     let show_all = args.flag("all");
     let mut t = Table::new(&[
-        "id", "state", "series", "change", "confidence", "seen", "suspect", "first-bad",
+        "id", "state", "series", "change", "confidence", "seen", "sla", "suspect", "first-bad",
     ]);
     let mut shown = 0;
     for a in &book.alerts {
@@ -535,6 +651,9 @@ fn cmd_regress_alerts(args: &Args, alerts_path: &str) -> anyhow::Result<()> {
             format!("{:+.1}%", 100.0 * a.rel_change),
             format!("{:.2}", a.confidence),
             format!("{}x", a.times_seen),
+            a.sla_secs
+                .map(cbench::util::fmt_secs)
+                .unwrap_or_else(|| "-".into()),
             a.suspect_commit.clone().unwrap_or_else(|| "?".into()),
             a.first_bad_commit.clone().unwrap_or_else(|| "-".into()),
         ]);
@@ -578,23 +697,22 @@ fn cmd_regress_bisect(args: &Args, alerts_path: &str) -> anyhow::Result<()> {
         !candidates.is_empty(),
         "no active `{measurement}` alerts in {alerts_path} — run `cbench regress detect` first"
     );
-    let alert_id = match args.get("alert").and_then(|v| v.parse::<u64>().ok()) {
-        Some(id) => {
-            anyhow::ensure!(candidates.contains(&id), "alert #{id} is not an active {measurement} alert");
-            id
-        }
-        None => {
-            // highest confidence first
-            let mut best = candidates[0];
-            for &id in &candidates {
-                if book.get(id).unwrap().confidence > book.get(best).unwrap().confidence {
-                    best = id;
-                }
-            }
-            best
-        }
-    };
+    let alert_id = pick_alert(&book, &candidates, args, measurement)?;
     let alert = book.get(alert_id).unwrap().clone();
+    // this path rebuilds the single-repo `cbench pipeline` chain, whose
+    // repo tag is the pipeline name itself — an alert carrying any other
+    // repository came from campaign state and would probe the wrong chain
+    if let Some(r) = alert.group.get("repo") {
+        anyhow::ensure!(
+            r == "<none>" || r == &which,
+            "alert #{} belongs to repository `{r}` — that is campaign state. \
+             Re-run as `cbench regress bisect --campaign --repos N --pushes M \
+             [--seed S] [--inject-regression K]` with the original campaign \
+             arguments (they rebuild the exact commit chains), or pick a \
+             single-repo alert with --alert ID",
+            alert.id
+        );
+    }
     println!(
         "bisecting alert #{}: {}.{} {} ({:+.1}%)",
         alert.id,
@@ -611,13 +729,6 @@ fn cmd_regress_bisect(args: &Args, alerts_path: &str) -> anyhow::Result<()> {
     );
     let good = events.first().unwrap().commit_id.clone();
     let bad = events.last().unwrap().commit_id.clone();
-    // classify probes with the same sensitivity the alert's policy used
-    let threshold = Detector::with_default_policies()
-        .policies
-        .iter()
-        .find(|p| p.name == alert.policy)
-        .map(|p| p.min_rel_change)
-        .unwrap_or(0.08);
     let mut cb = CbSystem::new();
     let report = bisect_pipeline(
         &mut cb,
@@ -629,9 +740,59 @@ fn cmd_regress_bisect(args: &Args, alerts_path: &str) -> anyhow::Result<()> {
         &alert.field,
         &alert.group,
         alert.direction,
-        threshold,
+        policy_threshold(&alert.policy),
         |repo, commit| pipeline_jobs_for(&which, repo, commit),
     )?;
+    finish_bisection(&mut book, alert_id, &repo, &events, &report, alerts_path)
+}
+
+/// Resolve `--alert ID` against a candidate set (validating it), or
+/// default to the highest-confidence candidate. `what` names the
+/// candidate class for the error message. Shared by the single-repo and
+/// campaign bisect paths.
+fn pick_alert(book: &AlertBook, candidates: &[u64], args: &Args, what: &str) -> anyhow::Result<u64> {
+    match args.get("alert").and_then(|v| v.parse::<u64>().ok()) {
+        Some(id) => {
+            anyhow::ensure!(
+                candidates.contains(&id),
+                "alert #{id} is not an active {what} alert"
+            );
+            Ok(id)
+        }
+        None => {
+            // highest confidence first
+            let mut best = candidates[0];
+            for &id in candidates {
+                if book.get(id).unwrap().confidence > book.get(best).unwrap().confidence {
+                    best = id;
+                }
+            }
+            Ok(best)
+        }
+    }
+}
+
+/// `min_rel_change` of a stock policy — probes are classified with the
+/// same sensitivity the alert's policy used.
+fn policy_threshold(policy: &str) -> f64 {
+    Detector::with_default_policies()
+        .policies
+        .iter()
+        .find(|p| p.name == policy)
+        .map(|p| p.min_rel_change)
+        .unwrap_or(0.08)
+}
+
+/// Print a bisection's probe log + verdict and persist the first-bad
+/// commit onto the alert (shared by the single-repo and campaign paths).
+fn finish_bisection(
+    book: &mut AlertBook,
+    alert_id: u64,
+    repo: &Repository,
+    events: &[PushEvent],
+    report: &BisectReport,
+    alerts_path: &str,
+) -> anyhow::Result<()> {
     for (cid, v, is_bad) in &report.tested {
         let idx = events.iter().position(|e| &e.commit_id == cid);
         println!(
@@ -670,6 +831,90 @@ fn cmd_regress_bisect(args: &Args, alerts_path: &str) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `cbench regress bisect --campaign [--repos N] [--pushes M] [--seed S]
+/// [--inject-regression K] [--penalty P] [--alert ID]` — campaign-aware
+/// bisection (the ROADMAP item): rebuild the deterministic commit chains
+/// a `cbench campaign` run benchmarked (same arguments reproduce the
+/// same chains, `campaign_push_events`), pick the campaign project the
+/// alert's `repo` tag names, and binary-search that project's chain with
+/// its real job matrix. Probes ride the shared event-driven scheduler
+/// like any live pipeline.
+fn cmd_regress_bisect_campaign(args: &Args, alerts_path: &str) -> anyhow::Result<()> {
+    let repos = args.get_usize("repos", 2);
+    let pushes = args.get_usize("pushes", 2);
+    let inject_at = args.get_usize("inject-regression", 0);
+    let penalty = args.get_f64("penalty", 0.15);
+    let seed = args.get_usize("seed", 42) as u64;
+    anyhow::ensure!(repos >= 1, "--repos must be at least 1");
+    anyhow::ensure!(
+        pushes >= 2,
+        "need at least 2 push rounds to bisect (--pushes {pushes})"
+    );
+
+    let mut projects = campaign::default_projects(repos);
+    let cfg = CampaignConfig { pushes, inject_at, penalty, seed, ..CampaignConfig::default() };
+    let events = campaign::campaign_push_events(&mut projects, &cfg);
+
+    let mut book = AlertBook::load(Path::new(alerts_path))?;
+    let candidates: Vec<u64> = book
+        .active()
+        .iter()
+        .filter(|a| {
+            a.group
+                .get("repo")
+                .map(|r| projects.iter().any(|p| &p.name == r))
+                .unwrap_or(false)
+        })
+        .map(|a| a.id)
+        .collect();
+    anyhow::ensure!(
+        !candidates.is_empty(),
+        "no active alert names a campaign repository (--repos {repos}) in {alerts_path} — \
+         run `cbench campaign --inject-regression K` first, or bisect \
+         single-repo state without --campaign"
+    );
+    let alert_id = pick_alert(&book, &candidates, args, "campaign-repository")?;
+    let alert = book.get(alert_id).unwrap().clone();
+    let repo_name = alert.group.get("repo").cloned().expect("candidate has repo");
+    let pi = projects
+        .iter()
+        .position(|p| p.name == repo_name)
+        .expect("candidate repo is a project");
+    let chain: Vec<PushEvent> = events
+        .iter()
+        .filter(|(i, _)| *i == pi)
+        .map(|(_, e)| e.clone())
+        .collect();
+    anyhow::ensure!(chain.len() >= 2, "project `{repo_name}` has fewer than 2 pushes");
+    println!(
+        "bisecting campaign alert #{}: {}.{} {} ({:+.1}%) over repository `{repo_name}` ({} pushes)",
+        alert.id,
+        alert.measurement,
+        alert.field,
+        alert.series,
+        100.0 * alert.rel_change,
+        chain.len()
+    );
+    let good = chain.first().unwrap().commit_id.clone();
+    let bad = chain.last().unwrap().commit_id.clone();
+    let kind = projects[pi].kind;
+    let mut cb = CbSystem::new();
+    let report = bisect_pipeline(
+        &mut cb,
+        &projects[pi].repo,
+        "master",
+        &good,
+        &bad,
+        &alert.measurement,
+        &alert.field,
+        &alert.group,
+        alert.direction,
+        policy_threshold(&alert.policy),
+        |repo, commit| kind.jobs_for(repo, commit),
+    )?;
+    finish_bisection(&mut book, alert_id, &projects[pi].repo, &chain, &report, alerts_path)
+}
+
 const HELP: &str = "\
 cbench — continuous benchmarking infrastructure for HPC applications
 (reproduction of Alt et al. 2024, DOI 10.1080/17445760.2024.2360190)
@@ -688,6 +933,7 @@ COMMANDS:
   pipeline describe             explain the pipeline wiring (Figs. 3-4)
   campaign [--repos N] [--pushes M] [--inject-regression K] [--penalty P]
            [--seed S] [--backfill on|off] [--drain NODE@FROM..TO[,..]]
+           [--collect streaming|batch]
            [--save-tsdb FILE] [--save-alerts FILE]
                                 multi-repo coordinator: N repositories
                                 (alternating walberla/fe2ti) x M pushes,
@@ -695,14 +941,36 @@ COMMANDS:
                                 event-driven scheduler (sched::) with
                                 fair-share between repos; reports the
                                 simulated makespan vs the sequential
-                                back-to-back baseline. --drain opens
-                                scontrol-style maintenance windows (no
-                                job may start inside; a job whose
-                                timelimit crosses one waits for resume);
-                                --backfill off disables the conservative
-                                timelimit-aware gap filling for A/B runs
-                                (TO must be finite: campaigns never
-                                resume a node themselves)
+                                back-to-back baseline. --collect
+                                streaming (default) uploads + runs
+                                detection on each pipeline's results at
+                                its completion instant on the simulated
+                                clock, while the roster still runs —
+                                first upload and alert SLA are bounded by
+                                one pipeline, not the makespan; --collect
+                                batch drains the cluster first (A/B
+                                reference, same TSDB benchmark contents /
+                                alerts / timeline, later uploads).
+                                --drain opens scontrol-style maintenance
+                                windows (no job may start inside; a job
+                                whose timelimit crosses one waits for
+                                resume); --backfill off disables the
+                                conservative timelimit-aware gap filling
+                                for A/B runs (TO must be finite:
+                                campaigns never resume a node themselves)
+  tsdb info [--tsdb FILE] [--shard-span SECS]
+                                shard layout of a saved TSDB: per-shard
+                                point counts, min/max-ts index,
+                                compaction state
+  tsdb compact [--tsdb FILE] [--retain-raw SECS] [--shard-span SECS]
+               [--out FILE]
+                                retention pass for multi-year histories:
+                                shards entirely older than newest -
+                                retain-raw get their raw points replaced
+                                by per-series rollup summaries (per-field
+                                mean, rollup=mean tag, raw count in
+                                rollup_n); queries over the retained raw
+                                range are unchanged; prints COMPACT_JSON
   regress detect [--tsdb FILE] [--alerts FILE]
                                 statistical regression scan of a saved TSDB
                                 (baseline windows, Welch t / Mann-Whitney /
@@ -716,6 +984,14 @@ COMMANDS:
                                 active alert by re-running the pipeline on
                                 midpoint commits (same args as `pipeline`
                                 rebuild the identical commit chain)
+  regress bisect --campaign [--repos N] [--pushes M] [--seed S]
+                 [--inject-regression K] [--penalty P] [--alert ID]
+                                campaign-aware bisection: the same
+                                arguments as `campaign` rebuild the exact
+                                commit chains it benchmarked; the chain of
+                                the repository named by the alert's repo
+                                tag is bisected with that project's real
+                                job matrix on the shared scheduler
   cluster [--node HOST]         Testcluster catalogue / machinestate dump
   microbench [--n N] [--reps R] run stream/copy/load/peakflops on this host
   dashboard <fe2ti|walberla> --tsdb FILE [--select tag=v1,v2] [--alerts FILE]
@@ -744,6 +1020,28 @@ MAINTENANCE + BACKFILL (scheduler realism):
   cbench campaign --repos 2 --pushes 2 --drain medusa@400..8000 --backfill off
                                 # same roster, no gap filling -- compare
                                 # the two CAMPAIGN_JSON makespans
+
+STREAMING COLLECT + ALERT SLA (detection latency):
+  cbench campaign --repos 2 --pushes 2 --inject-regression 2
+                                # streaming (default): results upload at
+                                # each pipeline's completion; the alert
+                                # opens while other pipelines still run
+  cbench campaign --repos 2 --pushes 2 --inject-regression 2 --collect batch
+                                # A/B: same alerts, but first_upload_s ==
+                                # makespan and the alert SLA pays the
+                                # whole roster -- compare CAMPAIGN_JSON
+  cbench regress bisect --campaign --repos 2 --pushes 2 --inject-regression 2
+                                # campaign-aware bisection of the alert
+
+MULTI-YEAR HISTORIES (shards + compaction):
+  cbench tsdb info              # shard layout of cbench_tsdb.lp
+  cbench tsdb compact --retain-raw 64
+                                # roll up shards older than the trailing
+                                # 64 simulated seconds; prints pre/post
+                                # point counts + query-time ratio
+
+The full architecture walkthrough (data flow, module map, determinism /
+replay contract) lives in ARCHITECTURE.md at the repository root.
 ";
 
 const PIPELINE_DESCRIPTION: &str = "\
@@ -767,13 +1065,20 @@ CB pipeline wiring (paper Figs. 3-4):
        starts; a job whose timelimit crosses a window waits for the
        resume edge (its shadow start), and conservative backfill slots
        shorter-limit jobs into the gap without ever delaying it
-    -> COLLECT phase (coordinator::collect_pipeline): the pipeline's
-       completion events are consumed; upload + detection below are
-       serialized per pipeline even when execution overlapped
+    -> COLLECT phase (coordinator::collect_pipeline): STREAMING by
+       default -- the campaign driver steps the event queue one simulated
+       instant at a time (sched::step_epoch) and collects each pipeline
+       at the instant its last job finished, while the rest of the
+       roster still runs; upload + detection below are serialized per
+       pipeline in (completion time, pipeline id) order, so batch
+       collection (--collect batch) produces the identical TSDB /
+       alerts / timeline, just later
     -> benchmarks execute (apps::fe2ti / apps::walberla; LBM kernels
        optionally through the JAX/Pallas PJRT artifacts, runtime::)
     -> output parsed (likwid-style counters, perf::)
-    -> metrics uploaded to the TSDB (tsdb::, fields+tags+trigger-time)
+    -> metrics uploaded to the TSDB (tsdb::, fields+tags+trigger-time;
+       time-partitioned shards, `cbench tsdb compact` rolls old shards
+       up into per-series summaries for multi-year retention)
     -> raw files archived as linked records (datastore::, Fig. 5)
     -> dashboards + roofline plots refreshed (dashboard::, roofline::)
     -> regression check (regress::detector): every watched series is
@@ -783,7 +1088,14 @@ CB pipeline wiring (paper Figs. 3-4):
        open -> acknowledged -> resolved, persisted as JSON next to the
        TSDB, archived as datastore records linked to the offending
        pipeline's collection, surfaced on the dashboards
+    -> findings that open alerts are stamped with the alert SLA: the
+       simulated cluster-time from the offending push entering the
+       system to its alert opening (streaming collect bounds it by one
+       pipeline's duration; batch collect pays the roster makespan)
     -> open alerts can be bisected (regress::bisect): the pipeline is
        re-run on midpoint commits to pin the first bad commit in
-       O(log n) re-runs (cbench regress bisect)
+       O(log n) re-runs (cbench regress bisect; --campaign rebuilds the
+       campaign's commit chains and bisects the alerted repository)
+
+Full data-flow + module map + determinism contract: ARCHITECTURE.md.
 ";

@@ -64,6 +64,17 @@ pub struct Alert {
     pub current: f64,
     pub rel_change: f64,
     pub change_ts: i64,
+    /// Alert SLA in simulated cluster seconds: time from the offending
+    /// pipeline's submission (the regression "landing" on the cluster) to
+    /// this alert opening at the post-upload detection. The landing is
+    /// the pipeline at the alert's located change point — when detection
+    /// lags the regressing push (widened windows), the SLA spans every
+    /// pipeline in between; for change points in carried-over history it
+    /// falls back to the detecting pipeline's submission. Streaming
+    /// collect bounds it by pipeline completion; batch collect pays the
+    /// whole campaign makespan. Set by `coordinator::collect_pipeline`;
+    /// `None` for alerts opened outside a pipeline (e.g. `regress detect`).
+    pub sla_secs: Option<f64>,
     /// Commit tag at the located change point (detection-time guess).
     pub suspect_commit: Option<String>,
     /// First bad commit confirmed by bisection.
@@ -157,6 +168,7 @@ impl AlertBook {
                     current: f.current,
                     rel_change: f.rel_change,
                     change_ts: f.change_ts,
+                    sla_secs: None,
                     suspect_commit: f.suspect_commit.clone(),
                     first_bad_commit: None,
                     archive_record: None,
@@ -406,6 +418,9 @@ fn alert_to_json(a: &Alert) -> Json {
     if let Some(ts) = a.resolved_ts {
         j = j.set("resolved_ts", ts as f64);
     }
+    if let Some(s) = a.sla_secs {
+        j = j.set("sla_secs", s);
+    }
     if let Some(c) = &a.suspect_commit {
         j = j.set("suspect_commit", c.as_str());
     }
@@ -454,6 +469,7 @@ fn alert_from_json(j: &Json) -> Result<Alert, String> {
         current: opt_num(j, "current").unwrap_or(f64::NAN),
         rel_change: opt_num(j, "rel_change").unwrap_or(0.0),
         change_ts: opt_num(j, "change_ts").unwrap_or(0.0) as i64,
+        sla_secs: opt_num(j, "sla_secs"),
         suspect_commit: opt_str(j, "suspect_commit"),
         first_bad_commit: opt_str(j, "first_bad_commit"),
         archive_record: opt_num(j, "archive_record").map(|v| v as Id),
@@ -591,6 +607,7 @@ mod tests {
             7,
         );
         book.alerts[0].first_bad_commit = Some("feedface".into());
+        book.alerts[0].sla_secs = Some(182.25);
         book.acknowledge(book.alerts[0].id).unwrap();
 
         let j = book.to_json();
@@ -601,6 +618,7 @@ mod tests {
         assert_eq!(a.series, "collision_op=srt,node=icx36");
         assert_eq!(a.group["node"], "icx36");
         assert_eq!(a.first_bad_commit.as_deref(), Some("feedface"));
+        assert_eq!(a.sla_secs, Some(182.25));
         assert_eq!(a.opened_ts, 7);
         assert!((a.rel_change + 0.15).abs() < 1e-12);
         // ids keep counting after reload

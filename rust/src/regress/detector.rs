@@ -304,10 +304,10 @@ pub fn commit_at(
     group: &BTreeMap<String, String>,
     ts: i64,
 ) -> Option<String> {
-    // binary-searched slice: one O(log n) lookup per finding instead of a
-    // full-history scan (time-range pushdown, same as the query layer)
+    // shard-index lookup: one O(log shards + log shard_size) probe per
+    // finding instead of a full-history scan (same pushdown as the query
+    // layer — only the shard containing `ts` is touched)
     db.points_in_range(measurement, Some(ts), Some(ts))
-        .iter()
         .find(|p| {
             group.iter().all(|(k, v)| match p.tags.get(k) {
                 Some(t) => t == v,

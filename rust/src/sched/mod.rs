@@ -543,6 +543,27 @@ impl SimScheduler {
         Some(ev.time)
     }
 
+    /// Process **every event at the next pending timestamp** — one
+    /// simulated instant — and return that time (`None` on an empty
+    /// queue). Events spawned at the same instant while processing (e.g.
+    /// a dispatch following a finish) are included, so after the call the
+    /// cluster state is consistent *between* instants. This is the
+    /// streaming-collect hook: `coordinator::campaign` steps epoch by
+    /// epoch and collects each pipeline at the instant its last job
+    /// finished, while every tie at that instant resolves in the same
+    /// deterministic `(time, seq)` order a full drain would use — the
+    /// timeline stays byte-identical to batch collection.
+    pub fn step_epoch(&mut self) -> Option<f64> {
+        let t = self.step()?;
+        while let Some(&Reverse(ev)) = self.queue.peek() {
+            if ev.time > t {
+                break;
+            }
+            self.step();
+        }
+        Some(t)
+    }
+
     /// Advance until every job in `ids` reached a terminal state (or the
     /// queue drains). Other jobs' events are processed as simulated time
     /// passes them — there is one clock for the whole cluster.
@@ -803,6 +824,53 @@ mod tests {
         s.run_until_idle();
         assert_eq!(s.job(slow).unwrap().state, JobState::Completed);
         assert_eq!(s.now(), 100.0);
+    }
+
+    #[test]
+    fn step_epoch_processes_all_events_of_one_instant() {
+        let mut s = sched();
+        let a = s.submit(SubmitSpec::new("a", "icx36"), job(10.0)).unwrap();
+        let b = s.submit(SubmitSpec::new("b", "rome1"), job(10.0)).unwrap();
+        let c = s.submit(SubmitSpec::new("c", "icx36"), job(5.0)).unwrap();
+        // epoch t=0: all three arrivals — a and b start, c queues
+        assert_eq!(s.step_epoch(), Some(0.0));
+        assert_eq!(s.job(a).unwrap().state, JobState::Running);
+        assert_eq!(s.job(b).unwrap().state, JobState::Running);
+        assert_eq!(s.job(c).unwrap().state, JobState::Pending);
+        // epoch t=10: both finish events land in ONE epoch; c starts
+        assert_eq!(s.step_epoch(), Some(10.0));
+        assert!(s.job(a).unwrap().state.is_terminal());
+        assert!(s.job(b).unwrap().state.is_terminal());
+        assert_eq!(s.job(c).unwrap().start_time, Some(10.0));
+        assert_eq!(s.step_epoch(), Some(15.0));
+        assert!(s.job(c).unwrap().state.is_terminal());
+        assert_eq!(s.step_epoch(), None);
+    }
+
+    #[test]
+    fn epoch_stepping_replays_identically_to_full_drain() {
+        // streaming collect steps epoch by epoch; the event order (and
+        // thus the timeline) must be exactly what run_until_idle produces
+        let build = |epochs: bool| {
+            let mut s = sched();
+            for i in 0..20 {
+                let host = if i % 3 == 0 { "icx36" } else { "rome1" };
+                s.submit(
+                    SubmitSpec::new(&format!("j{i}"), host)
+                        .owner(if i % 2 == 0 { "a" } else { "b" })
+                        .priority((i % 4) as i64),
+                    job(1.0 + (i % 5) as f64),
+                )
+                .unwrap();
+            }
+            if epochs {
+                while s.step_epoch().is_some() {}
+            } else {
+                s.run_until_idle();
+            }
+            s.timeline()
+        };
+        assert_eq!(build(true), build(false));
     }
 
     #[test]

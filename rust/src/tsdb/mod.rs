@@ -1,5 +1,6 @@
-//! InfluxDB stand-in: a time-series database with tags, fields and a
-//! line-protocol wire format.
+//! InfluxDB stand-in: a time-series database with tags, fields, a
+//! line-protocol wire format — and, since the multi-year-history work,
+//! **time-partitioned shards with a compaction pass**.
 //!
 //! The paper stores every benchmark result in InfluxDB (§4.3): *fields*
 //! carry the runtime metrics (TTS, FLOP count, traffic), *tags* carry the
@@ -9,9 +10,50 @@
 //!
 //! * [`Point`] — measurement + tags + fields + nanosecond timestamp,
 //! * line protocol encode/parse ([`Point::to_line`], [`Point::parse_line`]),
-//! * [`Db`] — an in-memory engine with optional file persistence,
+//! * [`Db`] — the storage engine (shard layout below),
 //! * [`Query`] — tag filters, time range, field selection, group-by-tags,
 //!   and the aggregations the dashboards use (last/mean/min/max).
+//!
+//! # Shard layout
+//!
+//! Every measurement is split into **time-partitioned shards**: shard `k`
+//! owns the points with `ts ∈ [k·span, (k+1)·span)` where `span` is the
+//! database's shard span ([`Db::with_shard_span`]; default
+//! [`DEFAULT_SHARD_SPAN_NS`] = 4096 simulated seconds ≈ 4096 pipeline
+//! triggers). Shards are kept in partition order and each shard keeps its
+//! points time-sorted, so the concatenation of shards *is* the
+//! time-sorted measurement. Because points are sorted, a shard's first
+//! and last timestamps double as its **min/max-ts index**:
+//! [`Db::points_in_range`] binary-searches the shard list for the
+//! overlapping run and then clamps only inside the edge shards, and the
+//! reverse walks behind `tail(n)` ([`Db::tail_start_ts`], the filtered
+//! bound scan in [`Query::run`]) stream shard-by-shard from the newest —
+//! a query over the trailing window never touches the years of shards in
+//! front of it, no matter how deep the history grows.
+//!
+//! # Compaction / retention
+//!
+//! [`Db::compact`] implements the retention policy for multi-year
+//! histories: shards entirely older than `newest_ts − retain_raw_ns`
+//! have their raw points replaced by **downsampled rollup summaries** —
+//! one point per series (distinct tag set) per shard, carrying the
+//! per-field mean over the shard, the raw point count in the
+//! `rollup_n` field, the series' last in-shard timestamp, and a
+//! `rollup=mean` marker tag. Queries over the *retained raw* range are
+//! byte-for-byte unchanged; queries reaching into compacted shards see
+//! the coarse summaries (good enough for the dashboards' long-range
+//! panels, and exactly what keeps the store bounded). The pass is
+//! idempotent — compacted shards (including ones reloaded from a saved
+//! file, recognized by the marker tag) are skipped — and is exposed as
+//! `cbench tsdb compact`.
+//!
+//! # Streaming uploads
+//!
+//! `coordinator::collect_pipeline` uploads each pipeline's points at the
+//! pipeline's **completion event** on the simulated clock (streaming
+//! collect), so inserts arrive in nearly trigger-time order and hit the
+//! append fast path of the newest shard; late/out-of-order points are
+//! routed to their partition by binary search.
 
 pub mod query;
 
@@ -20,6 +62,13 @@ pub use query::{Aggregate, GroupedSeries, Query};
 use std::collections::BTreeMap;
 use std::io::Write;
 use std::path::Path;
+
+/// Default shard span: 4096 simulated seconds. Campaign trigger clocks
+/// advance 1 s per pipeline, so a shard holds ~4096 pipeline triggers.
+pub const DEFAULT_SHARD_SPAN_NS: i64 = 4096 * 1_000_000_000;
+
+/// Marker tag carried by compaction rollup summaries (`rollup=mean`).
+pub const ROLLUP_TAG: &str = "rollup";
 
 /// One data point.
 #[derive(Debug, Clone, PartialEq)]
@@ -159,21 +208,123 @@ impl Point {
     }
 }
 
-/// The storage engine: points per measurement, kept time-ordered.
-#[derive(Debug, Default)]
+/// One time partition of a measurement: the points with
+/// `ts ∈ [key·span, (key+1)·span)`, kept time-sorted. The first/last
+/// timestamps of the sorted storage are the shard's min/max-ts index.
+#[derive(Debug, Clone)]
+pub struct Shard {
+    /// Partition index: this shard covers `[key·span, (key+1)·span)`.
+    key: i64,
+    points: Vec<Point>,
+    /// Raw points replaced by rollup summaries (see [`Db::compact`]).
+    compacted: bool,
+}
+
+impl Shard {
+    pub fn key(&self) -> i64 {
+        self.key
+    }
+    pub fn points(&self) -> &[Point] {
+        &self.points
+    }
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+    /// Oldest timestamp in the shard (the min side of the index).
+    pub fn min_ts(&self) -> Option<i64> {
+        self.points.first().map(|p| p.ts)
+    }
+    /// Newest timestamp in the shard (the max side of the index).
+    pub fn max_ts(&self) -> Option<i64> {
+        self.points.last().map(|p| p.ts)
+    }
+    /// True once this shard holds rollup summaries instead of raw points
+    /// (set by [`Db::compact`], re-detected on reload via [`ROLLUP_TAG`]).
+    pub fn is_compacted(&self) -> bool {
+        self.compacted
+    }
+}
+
+/// Outcome of one [`Db::compact`] pass.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CompactionReport {
+    /// Shards inspected across all measurements.
+    pub shards_seen: usize,
+    /// Shards whose raw points were replaced by rollup summaries.
+    pub shards_compacted: usize,
+    /// Total points before / after the pass.
+    pub points_before: usize,
+    pub points_after: usize,
+}
+
+/// The storage engine: time-partitioned shards per measurement (see the
+/// module docs for the layout and the compaction/retention model).
+#[derive(Debug)]
 pub struct Db {
-    measurements: BTreeMap<String, Vec<Point>>,
+    measurements: BTreeMap<String, Vec<Shard>>,
+    shard_span_ns: i64,
+}
+
+impl Default for Db {
+    fn default() -> Db {
+        Db::new()
+    }
 }
 
 impl Db {
     pub fn new() -> Db {
-        Db::default()
+        Db::with_shard_span(DEFAULT_SHARD_SPAN_NS)
     }
 
-    /// Insert one point (keeps the measurement time-sorted).
+    /// Build a database with a custom shard span (ns per partition).
+    /// The span is fixed for the database's lifetime — partition keys are
+    /// derived from it.
+    pub fn with_shard_span(span_ns: i64) -> Db {
+        Db {
+            measurements: BTreeMap::new(),
+            shard_span_ns: span_ns.max(1),
+        }
+    }
+
+    pub fn shard_span(&self) -> i64 {
+        self.shard_span_ns
+    }
+
+    /// The shard list of `measurement`, in partition (= time) order.
+    pub fn shards(&self, measurement: &str) -> &[Shard] {
+        self.measurements
+            .get(measurement)
+            .map(|v| v.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// Insert one point into its time partition (keeps the shard sorted).
+    /// Streaming uploads arrive in near trigger-time order, so the common
+    /// case is an append to the newest shard. A raw point landing in an
+    /// already-compacted shard (late import into rolled-up history)
+    /// reopens that shard for the next [`Db::compact`] pass, which merges
+    /// raw points and existing rollups weight-correctly.
     pub fn insert(&mut self, p: Point) {
-        let v = self.measurements.entry(p.measurement.clone()).or_default();
-        // common case: appended in time order
+        let key = p.ts.div_euclid(self.shard_span_ns);
+        let raw = !p.tags.contains_key(ROLLUP_TAG);
+        let shards = self.measurements.entry(p.measurement.clone()).or_default();
+        let si = match shards.binary_search_by(|s| s.key.cmp(&key)) {
+            Ok(i) => i,
+            Err(i) => {
+                shards.insert(
+                    i,
+                    Shard { key, points: Vec::new(), compacted: false },
+                );
+                i
+            }
+        };
+        if raw {
+            shards[si].compacted = false;
+        }
+        let v = &mut shards[si].points;
         if v.last().map(|l| l.ts <= p.ts).unwrap_or(true) {
             v.push(p);
         } else {
@@ -201,56 +352,77 @@ impl Db {
     }
 
     pub fn len(&self) -> usize {
-        self.measurements.values().map(|v| v.len()).sum()
+        self.measurements
+            .values()
+            .map(|shards| shards.iter().map(|s| s.points.len()).sum::<usize>())
+            .sum()
     }
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    pub fn points(&self, measurement: &str) -> &[Point] {
-        self.measurements
-            .get(measurement)
-            .map(|v| v.as_slice())
-            .unwrap_or(&[])
+    /// Number of points of one measurement (across all its shards).
+    pub fn n_points(&self, measurement: &str) -> usize {
+        self.shards(measurement).iter().map(|s| s.points.len()).sum()
+    }
+
+    /// All points of `measurement` in time order, streamed shard by shard.
+    /// Double-ended: `.rev()` walks newest-first without touching old
+    /// shards until reached (the bound scans behind `tail(n)` rely on it).
+    pub fn points_iter<'a>(
+        &'a self,
+        measurement: &str,
+    ) -> impl DoubleEndedIterator<Item = &'a Point> + 'a {
+        self.shards(measurement).iter().flat_map(|s| s.points.iter())
+    }
+
+    /// The newest point of `measurement` (last point of the last shard).
+    pub fn last_point(&self, measurement: &str) -> Option<&Point> {
+        self.shards(measurement).last().and_then(|s| s.points.last())
     }
 
     /// Points of `measurement` within the inclusive `[t_min, t_max]`
-    /// window, located by binary search on the time-sorted storage —
-    /// the pushdown behind [`Query::range`], O(log n + hits) instead of
-    /// a full scan.
-    pub fn points_in_range(
-        &self,
+    /// window. The shard list is binary-searched by its min/max-ts index
+    /// for the overlapping run, and only the two edge shards are clamped
+    /// by an inner binary search — shards outside the window are never
+    /// touched, O(log shards + log shard_size + hits).
+    pub fn points_in_range<'a>(
+        &'a self,
         measurement: &str,
         t_min: Option<i64>,
         t_max: Option<i64>,
-    ) -> &[Point] {
-        let pts = self.points(measurement);
-        let lo = t_min.map(|t| pts.partition_point(|p| p.ts < t)).unwrap_or(0);
+    ) -> impl Iterator<Item = &'a Point> + 'a {
+        let shards = self.shards(measurement);
+        let lo = t_min
+            .map(|t0| shards.partition_point(|s| s.max_ts().map(|m| m < t0).unwrap_or(true)))
+            .unwrap_or(0);
         let hi = t_max
-            .map(|t| pts.partition_point(|p| p.ts <= t))
-            .unwrap_or(pts.len());
-        if lo >= hi {
-            &[]
-        } else {
-            &pts[lo..hi]
-        }
+            .map(|t1| shards.partition_point(|s| s.min_ts().map(|m| m <= t1).unwrap_or(false)))
+            .unwrap_or(shards.len());
+        shards[lo..hi.max(lo)].iter().flat_map(move |s| {
+            let pts = &s.points;
+            let a = t_min.map(|t| pts.partition_point(|p| p.ts < t)).unwrap_or(0);
+            let b = t_max
+                .map(|t| pts.partition_point(|p| p.ts <= t))
+                .unwrap_or(pts.len());
+            pts[a..b.max(a)].iter()
+        })
     }
 
     /// Timestamp at which the trailing `n` *distinct* timestamps of
     /// `measurement` begin — the pushdown bound behind [`Query::tail`].
     /// CB uploads one point per live series per pipeline trigger, so the
-    /// walk from the end touches O(n × series) points regardless of how
-    /// many years of history sit in front. Returns `None` for an empty
-    /// measurement or `n == 0`; with fewer than `n` distinct timestamps
-    /// it returns the earliest one.
+    /// walk from the end touches O(n × series) points — and, shard-wise,
+    /// only the newest shard(s) — regardless of how many years of history
+    /// sit in front. Returns `None` for an empty measurement or `n == 0`;
+    /// with fewer than `n` distinct timestamps it returns the earliest one.
     pub fn tail_start_ts(&self, measurement: &str, n: usize) -> Option<i64> {
         if n == 0 {
             return None;
         }
-        let pts = self.points(measurement);
         let mut distinct = 0usize;
         let mut last: Option<i64> = None;
-        for p in pts.iter().rev() {
+        for p in self.points_iter(measurement).rev() {
             if last != Some(p.ts) {
                 distinct += 1;
                 last = Some(p.ts);
@@ -266,8 +438,7 @@ impl Db {
     /// dashboard template-variable dropdowns (the "collision Setup menu").
     pub fn tag_values(&self, measurement: &str, tag: &str) -> Vec<String> {
         let mut vals: Vec<String> = self
-            .points(measurement)
-            .iter()
+            .points_iter(measurement)
             .filter_map(|p| p.tags.get(tag).cloned())
             .collect();
         vals.sort();
@@ -275,21 +446,121 @@ impl Db {
         vals
     }
 
-    /// Persist as line protocol.
+    /// Retention pass: replace the raw points of every shard entirely
+    /// older than `newest_ts − retain_raw_ns` with per-series rollup
+    /// summaries (per-field mean over the shard, raw count in `rollup_n`,
+    /// `rollup=mean` marker tag, timestamp = the series' last in-shard
+    /// point). Shards overlapping the retained window are untouched, so
+    /// queries over the raw range are unchanged. Idempotent: already
+    /// compacted shards — including ones reloaded from a saved file,
+    /// recognized by the marker tag — are skipped, and a shard that mixes
+    /// existing rollups with late-arriving raw points (see [`Db::insert`])
+    /// is merged **weight-correctly**: a rollup contributes its stored
+    /// per-field means at weight `rollup_n`, so re-compaction never
+    /// degrades means into means-of-means or resets raw counts.
+    pub fn compact(&mut self, retain_raw_ns: i64) -> CompactionReport {
+        let mut rep = CompactionReport {
+            points_before: self.len(),
+            ..CompactionReport::default()
+        };
+        let newest = self
+            .measurements
+            .values()
+            .filter_map(|shards| shards.last().and_then(|s| s.max_ts()))
+            .max();
+        let Some(newest) = newest else {
+            return rep;
+        };
+        let watermark = newest.saturating_sub(retain_raw_ns.max(0));
+        for shards in self.measurements.values_mut() {
+            for s in shards.iter_mut() {
+                rep.shards_seen += 1;
+                if s.compacted || s.points.is_empty() {
+                    continue;
+                }
+                if s.max_ts().unwrap_or(i64::MAX) >= watermark {
+                    continue; // overlaps the retained raw window
+                }
+                if s.points.iter().all(|p| p.tags.contains_key(ROLLUP_TAG)) {
+                    s.compacted = true; // reloaded pre-compacted shard
+                    continue;
+                }
+                // one rollup per series — keyed by the tags WITHOUT the
+                // rollup marker, so late raw points merge into the series'
+                // existing rollup. Accumulator: (last ts, per-field
+                // (weighted sum, weight), total weight); a raw point
+                // weighs 1, a rollup weighs its stored `rollup_n`.
+                type Acc = (i64, BTreeMap<String, (f64, f64)>, f64);
+                let mut groups: BTreeMap<BTreeMap<String, String>, Acc> = BTreeMap::new();
+                for p in &s.points {
+                    let is_rollup = p.tags.contains_key(ROLLUP_TAG);
+                    let w = if is_rollup {
+                        p.fields.get("rollup_n").copied().unwrap_or(1.0).max(1.0)
+                    } else {
+                        1.0
+                    };
+                    let mut key = p.tags.clone();
+                    key.remove(ROLLUP_TAG);
+                    let e = groups
+                        .entry(key)
+                        .or_insert_with(|| (p.ts, BTreeMap::new(), 0.0));
+                    e.0 = e.0.max(p.ts);
+                    e.2 += w;
+                    for (k, v) in &p.fields {
+                        if is_rollup && k == "rollup_n" {
+                            continue; // the count is the weight, not a metric
+                        }
+                        let f = e.1.entry(k.clone()).or_insert((0.0, 0.0));
+                        f.0 += v * w;
+                        f.1 += w;
+                    }
+                }
+                let measurement = s.points[0].measurement.clone();
+                let mut summaries: Vec<Point> = groups
+                    .into_iter()
+                    .map(|(mut tags, (ts, fields, n))| {
+                        tags.insert(ROLLUP_TAG.to_string(), "mean".to_string());
+                        let mut fmap: BTreeMap<String, f64> = fields
+                            .into_iter()
+                            .map(|(k, (sum, weight))| (k, sum / weight))
+                            .collect();
+                        fmap.insert("rollup_n".to_string(), n);
+                        Point { measurement: measurement.clone(), tags, fields: fmap, ts }
+                    })
+                    .collect();
+                // deterministic order: time-sorted, BTreeMap tie order
+                summaries.sort_by_key(|p| p.ts);
+                s.points = summaries;
+                s.compacted = true;
+                rep.shards_compacted += 1;
+            }
+        }
+        rep.points_after = self.len();
+        rep
+    }
+
+    /// Persist as line protocol (shards stream out in time order).
     pub fn save(&self, path: &Path) -> std::io::Result<()> {
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        for pts in self.measurements.values() {
-            for p in pts {
-                writeln!(f, "{}", p.to_line())?;
+        for shards in self.measurements.values() {
+            for s in shards {
+                for p in &s.points {
+                    writeln!(f, "{}", p.to_line())?;
+                }
             }
         }
         Ok(())
     }
 
-    /// Load from a line-protocol file.
+    /// Load from a line-protocol file (default shard span).
     pub fn load(path: &Path) -> std::io::Result<Db> {
+        Db::load_with_shard_span(path, DEFAULT_SHARD_SPAN_NS)
+    }
+
+    /// Load with a custom shard span (`cbench tsdb compact --shard-span`).
+    pub fn load_with_shard_span(path: &Path, span_ns: i64) -> std::io::Result<Db> {
         let text = std::fs::read_to_string(path)?;
-        let mut db = Db::new();
+        let mut db = Db::with_shard_span(span_ns);
         db.ingest_lines(&text)
             .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
         Ok(db)
@@ -393,8 +664,30 @@ mod tests {
         for ts in [5, 1, 3, 2, 4] {
             db.insert(Point::new("m", ts).field("v", ts as f64));
         }
-        let ts: Vec<i64> = db.points("m").iter().map(|p| p.ts).collect();
+        let ts: Vec<i64> = db.points_iter("m").map(|p| p.ts).collect();
         assert_eq!(ts, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn db_keeps_time_order_across_shard_boundaries() {
+        // span 10: keys ..., -1 => [-10, 0), 0 => [0, 10), 1 => [10, 20)
+        let mut db = Db::with_shard_span(10);
+        for ts in [25, 3, -7, 14, 9, 10, -10, 19, 0] {
+            db.insert(Point::new("m", ts).field("v", ts as f64));
+        }
+        let ts: Vec<i64> = db.points_iter("m").map(|p| p.ts).collect();
+        assert_eq!(ts, vec![-10, -7, 0, 3, 9, 10, 14, 19, 25]);
+        assert_eq!(db.shards("m").len(), 4);
+        let keys: Vec<i64> = db.shards("m").iter().map(|s| s.key()).collect();
+        assert_eq!(keys, vec![-1, 0, 1, 2]);
+        // min/max index of the middle shard
+        let s = &db.shards("m")[1];
+        assert_eq!((s.min_ts(), s.max_ts()), (Some(0), Some(9)));
+        assert_eq!(db.last_point("m").unwrap().ts, 25);
+        assert_eq!(db.n_points("m"), 9);
+        // reverse iteration streams newest-first across shards
+        let rev: Vec<i64> = db.points_iter("m").rev().map(|p| p.ts).collect();
+        assert_eq!(rev, vec![25, 19, 14, 10, 9, 3, 0, -7, -10]);
     }
 
     #[test]
@@ -420,16 +713,42 @@ lbm,node=rome1,op=srt mlups=400 3
         for ts in [1, 2, 2, 3, 5, 8, 8, 9] {
             db.insert(Point::new("m", ts).field("v", ts as f64));
         }
-        let slice = db.points_in_range("m", Some(2), Some(8));
+        let slice: Vec<&Point> = db.points_in_range("m", Some(2), Some(8)).collect();
         assert_eq!(slice.len(), 6);
         assert_eq!(slice.first().unwrap().ts, 2);
         assert_eq!(slice.last().unwrap().ts, 8);
-        assert_eq!(db.points_in_range("m", None, Some(1)).len(), 1);
-        assert_eq!(db.points_in_range("m", Some(9), None).len(), 1);
-        assert!(db.points_in_range("m", Some(6), Some(7)).is_empty());
-        assert!(db.points_in_range("m", Some(10), None).is_empty());
-        assert_eq!(db.points_in_range("m", None, None).len(), 8);
-        assert!(db.points_in_range("nosuch", None, None).is_empty());
+        assert_eq!(db.points_in_range("m", None, Some(1)).count(), 1);
+        assert_eq!(db.points_in_range("m", Some(9), None).count(), 1);
+        assert_eq!(db.points_in_range("m", Some(6), Some(7)).count(), 0);
+        assert_eq!(db.points_in_range("m", Some(10), None).count(), 0);
+        assert_eq!(db.points_in_range("m", None, None).count(), 8);
+        assert_eq!(db.points_in_range("nosuch", None, None).count(), 0);
+    }
+
+    #[test]
+    fn points_in_range_touches_only_overlapping_shards() {
+        // spans of 10 over [0, 50): ranges land inside / across shards,
+        // and exactly on shard edges — all equivalent to a linear filter
+        let mut sharded = Db::with_shard_span(10);
+        let mut single = Db::with_shard_span(i64::MAX / 4);
+        for ts in 0..50 {
+            let p = Point::new("m", ts).field("v", ts as f64);
+            sharded.insert(p.clone());
+            single.insert(p);
+        }
+        assert!(sharded.shards("m").len() > 1);
+        assert_eq!(single.shards("m").len(), 1);
+        for (a, b) in [(0, 49), (5, 25), (10, 19), (9, 10), (19, 20), (30, 30), (48, 200), (-5, 3)] {
+            let s1: Vec<i64> = sharded
+                .points_in_range("m", Some(a), Some(b))
+                .map(|p| p.ts)
+                .collect();
+            let s2: Vec<i64> = single
+                .points_in_range("m", Some(a), Some(b))
+                .map(|p| p.ts)
+                .collect();
+            assert_eq!(s1, s2, "range [{a}, {b}]");
+        }
     }
 
     #[test]
@@ -450,6 +769,121 @@ lbm,node=rome1,op=srt mlups=400 3
     }
 
     #[test]
+    fn tail_start_ts_crosses_shard_boundaries() {
+        let mut db = Db::with_shard_span(10);
+        for ts in [5, 15, 25] {
+            db.insert(Point::new("m", ts).field("v", ts as f64));
+        }
+        assert_eq!(db.shards("m").len(), 3);
+        assert_eq!(db.tail_start_ts("m", 1), Some(25));
+        assert_eq!(db.tail_start_ts("m", 2), Some(15));
+        assert_eq!(db.tail_start_ts("m", 3), Some(5));
+    }
+
+    #[test]
+    fn compaction_rolls_up_old_shards_and_keeps_raw_recent() {
+        // span 10, points over [0, 35): shards [0,10) [10,20) [20,30)
+        // [30,40). retain_raw 10 => watermark 24: shards 0 and 1 compact,
+        // shard [20,30) contains ts 24..29 >= watermark side — max_ts 29
+        // >= 24 so it stays raw, as does [30,40)
+        let mut db = Db::with_shard_span(10);
+        for ts in 0..35 {
+            for s in ["a", "b"] {
+                db.insert(
+                    Point::new("m", ts)
+                        .tag("s", s)
+                        .field("v", ts as f64)
+                        .field("w", 2.0 * ts as f64),
+                );
+            }
+        }
+        let before = db.len();
+        let rep = db.compact(10);
+        assert_eq!(rep.points_before, before);
+        assert_eq!(rep.shards_compacted, 2);
+        // each compacted shard: 2 series => 2 rollup points (was 20)
+        assert_eq!(rep.points_after, before - 2 * 20 + 2 * 2);
+        assert_eq!(db.len(), rep.points_after);
+        let s0 = &db.shards("m")[0];
+        assert!(s0.is_compacted());
+        assert_eq!(s0.len(), 2);
+        let p = &s0.points()[0];
+        assert_eq!(p.tags[ROLLUP_TAG], "mean");
+        assert_eq!(p.ts, 9, "rollup carries the series' last in-shard ts");
+        assert_eq!(p.fields["v"], 4.5, "mean of 0..=9");
+        assert_eq!(p.fields["rollup_n"], 10.0);
+        // the retained raw window is untouched
+        let recent: Vec<i64> = db
+            .points_in_range("m", Some(25), Some(34))
+            .map(|p| p.ts)
+            .collect();
+        assert_eq!(recent.len(), 20);
+        assert!(db.shards("m")[2].points().iter().all(|p| !p.tags.contains_key(ROLLUP_TAG)));
+        // idempotent: a second pass changes nothing
+        let rep2 = db.compact(10);
+        assert_eq!(rep2.shards_compacted, 0);
+        assert_eq!(rep2.points_after, rep2.points_before);
+    }
+
+    #[test]
+    fn compaction_survives_save_load_roundtrip() {
+        let mut db = Db::with_shard_span(10);
+        for ts in 0..30 {
+            db.insert(Point::new("m", ts).tag("s", "a").field("v", ts as f64));
+        }
+        db.compact(5);
+        let dump_before: Vec<String> = db.points_iter("m").map(|p| p.to_line()).collect();
+        let path = std::env::temp_dir().join("cbench_tsdb_compact_roundtrip.lp");
+        db.save(&path).unwrap();
+        let mut back = Db::load_with_shard_span(&path, 10).unwrap();
+        let dump_after: Vec<String> = back.points_iter("m").map(|p| p.to_line()).collect();
+        assert_eq!(dump_before, dump_after);
+        // reloaded rollup shards are recognized and not re-compacted
+        let rep = back.compact(5);
+        assert_eq!(rep.shards_compacted, 0);
+        assert_eq!(rep.points_after, rep.points_before);
+        assert!(back.shards("m")[0].is_compacted());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn late_insert_reopens_compacted_shard_and_recompaction_merges_weights() {
+        // a raw point landing in rolled-up history must reopen the shard,
+        // and the next pass must merge it into the existing rollup
+        // weight-correctly (no mean-of-means, no reset raw count)
+        let mut db = Db::with_shard_span(10);
+        for ts in 0..30 {
+            db.insert(Point::new("m", ts).tag("s", "a").field("v", 1.0));
+        }
+        db.compact(5); // shards [0,10) and [10,20) -> rollups of 10 points
+        assert!(db.shards("m")[0].is_compacted());
+        assert_eq!(db.shards("m")[0].points()[0].fields["rollup_n"], 10.0);
+
+        // late import: one raw point with a different value into shard 0
+        db.insert(Point::new("m", 5).tag("s", "a").field("v", 12.0));
+        assert!(!db.shards("m")[0].is_compacted(), "raw insert reopens the shard");
+        assert_eq!(db.shards("m")[0].len(), 2);
+
+        let rep = db.compact(5);
+        assert_eq!(rep.shards_compacted, 1, "only the reopened shard recompacts");
+        let s0 = &db.shards("m")[0];
+        assert!(s0.is_compacted());
+        assert_eq!(s0.len(), 1, "rollup and late point merge into one series");
+        let p = &s0.points()[0];
+        assert_eq!(p.fields["rollup_n"], 11.0, "raw count accumulates, not resets");
+        // weighted mean: (10 x 1.0 + 1 x 12.0) / 11
+        assert!((p.fields["v"] - 2.0).abs() < 1e-12, "got {}", p.fields["v"]);
+        assert_eq!(p.ts, 9, "rollup keeps the series' last in-shard ts");
+    }
+
+    #[test]
+    fn compaction_on_empty_db_is_a_noop() {
+        let mut db = Db::new();
+        let rep = db.compact(100);
+        assert_eq!(rep, CompactionReport::default());
+    }
+
+    #[test]
     fn save_load_roundtrip() {
         let mut db = Db::new();
         db.insert(sample());
@@ -458,7 +892,7 @@ lbm,node=rome1,op=srt mlups=400 3
         db.save(&path).unwrap();
         let back = Db::load(&path).unwrap();
         assert_eq!(back.len(), 2);
-        assert_eq!(back.points("fe2ti")[0], sample());
+        assert_eq!(back.points_iter("fe2ti").next().unwrap(), &sample());
         std::fs::remove_file(&path).ok();
     }
 }

@@ -156,83 +156,90 @@ impl Query {
 
     /// Execute against a DB, returning one series per group (sorted by
     /// group label for stable output). Time ranges and `tail(n)` are
-    /// pushed down to the storage layer: the scan is bounded by binary
-    /// search ([`Db::points_in_range`]) / the trailing distinct timestamps
-    /// ([`Db::tail_start_ts`]) instead of materializing the full series.
+    /// pushed down to the sharded storage layer: the scan is bounded by
+    /// the per-shard min/max-ts index ([`Db::points_in_range`]) / the
+    /// trailing distinct timestamps ([`Db::tail_start_ts`], streamed
+    /// newest-shard-first) instead of materializing the full series —
+    /// shards outside the window are never touched.
     pub fn run(&self, db: &Db) -> Vec<GroupedSeries> {
-        let scan: &[Point] = if self.t_min.is_some() || self.t_max.is_some() {
-            db.points_in_range(&self.measurement, self.t_min, self.t_max)
-        } else if let Some(n) = self.tail {
-            let t0 = if n == 0 {
-                None
-            } else if self.where_tags.is_empty() && self.where_tag_in.is_empty() {
-                db.tail_start_ts(&self.measurement, n)
-            } else {
-                // with tag filters the bound must count distinct
-                // timestamps among MATCHING points only — otherwise k
-                // co-tenant repositories uploading at distinct trigger
-                // times would shrink each other's window to n/k. The
-                // walk itself is capped at n × TAIL_SCAN_SLACK distinct
-                // *global* timestamps so a filter matching nothing (or a
-                // long-stale tenant) cannot regress the scan to O(full
-                // history): tenants whose last n uploads are spread over
-                // more interleaved foreign triggers than that are treated
-                // as stale, like any series outside the tail window.
-                let cap = n.saturating_mul(TAIL_SCAN_SLACK);
-                let mut distinct = 0usize;
-                let mut global_distinct = 0usize;
-                let mut last_global: Option<i64> = None;
-                let mut last: Option<i64> = None;
-                let mut bound: Option<i64> = None;
-                for p in db.points(&self.measurement).iter().rev() {
-                    if last_global != Some(p.ts) {
-                        global_distinct += 1;
-                        last_global = Some(p.ts);
-                        if global_distinct > cap {
-                            break;
-                        }
-                    }
-                    if !self.matches(p) {
-                        continue;
-                    }
-                    if last != Some(p.ts) {
-                        distinct += 1;
-                        last = Some(p.ts);
-                        if distinct == n {
-                            bound = last;
-                            break;
-                        }
-                    }
-                }
-                bound.or(last)
-            };
-            match t0 {
-                Some(t0) => db.points_in_range(&self.measurement, Some(t0), None),
-                None => &[],
-            }
-        } else {
-            db.points(&self.measurement)
-        };
         let mut groups: BTreeMap<Vec<(String, String)>, GroupedSeries> = BTreeMap::new();
-        for p in scan {
-            if !self.matches(p) {
-                continue;
+        {
+            let mut add = |p: &Point| {
+                if !self.matches(p) {
+                    return;
+                }
+                let key: Vec<(String, String)> = self
+                    .group_by
+                    .iter()
+                    .map(|t| {
+                        (
+                            t.clone(),
+                            p.tags.get(t).cloned().unwrap_or_else(|| "<none>".to_string()),
+                        )
+                    })
+                    .collect();
+                let entry = groups.entry(key.clone()).or_insert_with(|| GroupedSeries {
+                    group: key.into_iter().collect(),
+                    points: Vec::new(),
+                });
+                entry.points.push((p.ts, p.fields[&self.field]));
+            };
+            if self.t_min.is_some() || self.t_max.is_some() {
+                db.points_in_range(&self.measurement, self.t_min, self.t_max)
+                    .for_each(&mut add);
+            } else if let Some(n) = self.tail {
+                let t0 = if n == 0 {
+                    None
+                } else if self.where_tags.is_empty() && self.where_tag_in.is_empty() {
+                    db.tail_start_ts(&self.measurement, n)
+                } else {
+                    // with tag filters the bound must count distinct
+                    // timestamps among MATCHING points only — otherwise k
+                    // co-tenant repositories uploading at distinct trigger
+                    // times would shrink each other's window to n/k. The
+                    // walk itself is capped at n × TAIL_SCAN_SLACK distinct
+                    // *global* timestamps so a filter matching nothing (or a
+                    // long-stale tenant) cannot regress the scan to O(full
+                    // history): tenants whose last n uploads are spread over
+                    // more interleaved foreign triggers than that are treated
+                    // as stale, like any series outside the tail window. The
+                    // reverse walk streams shard by shard from the newest,
+                    // so old shards stay untouched either way.
+                    let cap = n.saturating_mul(TAIL_SCAN_SLACK);
+                    let mut distinct = 0usize;
+                    let mut global_distinct = 0usize;
+                    let mut last_global: Option<i64> = None;
+                    let mut last: Option<i64> = None;
+                    let mut bound: Option<i64> = None;
+                    for p in db.points_iter(&self.measurement).rev() {
+                        if last_global != Some(p.ts) {
+                            global_distinct += 1;
+                            last_global = Some(p.ts);
+                            if global_distinct > cap {
+                                break;
+                            }
+                        }
+                        if !self.matches(p) {
+                            continue;
+                        }
+                        if last != Some(p.ts) {
+                            distinct += 1;
+                            last = Some(p.ts);
+                            if distinct == n {
+                                bound = last;
+                                break;
+                            }
+                        }
+                    }
+                    bound.or(last)
+                };
+                if let Some(t0) = t0 {
+                    db.points_in_range(&self.measurement, Some(t0), None)
+                        .for_each(&mut add);
+                }
+            } else {
+                db.points_iter(&self.measurement).for_each(&mut add);
             }
-            let key: Vec<(String, String)> = self
-                .group_by
-                .iter()
-                .map(|t| {
-                    (
-                        t.clone(),
-                        p.tags.get(t).cloned().unwrap_or_else(|| "<none>".to_string()),
-                    )
-                })
-                .collect();
-            let entry = groups.entry(key.clone()).or_insert_with(|| GroupedSeries {
-                group: key.into_iter().collect(),
-                points: Vec::new(),
-            });
-            entry.points.push((p.ts, p.fields[&self.field]));
         }
         let mut out: Vec<GroupedSeries> = groups.into_values().collect();
         if let Some(n) = self.tail {

@@ -6,11 +6,13 @@
 
 use cbench::ci::CiJob;
 use cbench::coordinator::campaign::{
-    default_projects, run_campaign, run_campaign_with, CampaignConfig, CampaignProject,
-    ProjectKind,
+    campaign_push_events, default_projects, run_campaign, run_campaign_with, CampaignConfig,
+    CampaignProject, ProjectKind,
 };
 use cbench::coordinator::{CbSystem, PreparedJob};
+use cbench::regress::bisect_pipeline;
 use cbench::sched::JobOutcome;
+use cbench::vcs::PushEvent;
 
 fn toy_jobs(tag: &str, spec: &[(&str, f64, usize)]) -> Vec<PreparedJob> {
     let mut jobs = Vec::new();
@@ -113,7 +115,7 @@ fn campaign_replays_byte_identical() {
         let mut dump = String::new();
         let measurements: Vec<String> = cb.db.measurements().cloned().collect();
         for m in &measurements {
-            for p in cb.db.points(m) {
+            for p in cb.db.points_iter(m) {
                 dump.push_str(&p.to_line());
                 dump.push('\n');
             }
@@ -220,4 +222,202 @@ fn injected_regression_surfaces_through_overlapped_campaign() {
     // repo's regression cannot hide behind another's healthy numbers
     assert!(active.iter().any(|a| a.series.contains("repo=nhr-walberla")));
     assert!(active.iter().any(|a| a.series.contains("repo=proxy-walberla")));
+}
+
+/// The icx36 slice of the real waLBerla matrix — cheap but faithful
+/// (honors the commit's `benchmark.cfg` penalty).
+fn icx36_walberla_jobs(p: &CampaignProject, commit: &str) -> Vec<PreparedJob> {
+    ProjectKind::Walberla
+        .jobs_for(&p.repo, commit)
+        .into_iter()
+        .filter(|j| j.ci.get("HOST") == Some("icx36"))
+        .collect()
+}
+
+#[test]
+fn streaming_equals_batch_and_shrinks_first_upload_and_alert_sla() {
+    // the tentpole acceptance: same submissions => identical timeline,
+    // identical benchmark TSDB and identical alert set under streaming
+    // and batch collection — but the streaming first upload strictly
+    // precedes the batch one, and the alert SLA is tighter
+    let run = |streaming: bool| {
+        let mut cb = CbSystem::new();
+        let mut projects = vec![
+            CampaignProject::new("nhr-walberla", ProjectKind::Walberla),
+            CampaignProject::new("proxy-walberla", ProjectKind::Walberla),
+        ];
+        let out = run_campaign_with(
+            &mut cb,
+            &mut projects,
+            &CampaignConfig {
+                pushes: 3,
+                inject_at: 3,
+                penalty: 0.15,
+                seed: 5,
+                streaming,
+                ..CampaignConfig::default()
+            },
+            icx36_walberla_jobs,
+        )
+        .unwrap();
+        (out, cb)
+    };
+    let (s, cb_s) = run(true);
+    let (b, cb_b) = run(false);
+
+    // byte-identical replay across modes: collection never touches the
+    // schedule, and the collection order is the same (completion, pid)
+    assert_eq!(
+        cb_s.scheduler.timeline(),
+        cb_b.scheduler.timeline(),
+        "streaming must not perturb the deterministic timeline"
+    );
+    let dump = |cb: &CbSystem| cb.db.points_iter("lbm").map(|p| p.to_line()).collect::<Vec<_>>();
+    assert_eq!(dump(&cb_s), dump(&cb_b), "identical final TSDB benchmark contents");
+    let alert_set = |cb: &CbSystem| {
+        cb.alerts
+            .alerts
+            .iter()
+            .map(|a| (a.id, a.fingerprint.clone(), a.state, a.opened_ts))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(alert_set(&cb_s), alert_set(&cb_b), "identical alert set");
+    assert!(s.alerts_opened() > 0, "planted regression must open alerts");
+    assert_eq!(s.makespan, b.makespan);
+
+    // streaming's first upload strictly precedes the batch collect's
+    assert!(
+        s.first_upload_at() < b.first_upload_at(),
+        "streaming first upload {} must precede batch {}",
+        s.first_upload_at(),
+        b.first_upload_at()
+    );
+    assert_eq!(b.first_upload_at(), b.makespan, "batch uploads only at makespan");
+    // every streaming pipeline was collected at its own completion
+    for r in &s.reports {
+        assert_eq!(r.collected_at, r.finished_at, "pipeline #{}", r.pipeline_id);
+    }
+
+    // alert SLA: both openers' SLAs are recorded; the best streaming SLA
+    // beats batch's (where every alert waits for the whole roster)
+    let best_sla = |o: &cbench::coordinator::campaign::CampaignOutcome| {
+        o.reports
+            .iter()
+            .filter_map(|r| r.alert_sla)
+            .fold(f64::INFINITY, f64::min)
+    };
+    assert!(s.worst_alert_sla().is_some() && b.worst_alert_sla().is_some());
+    assert!(
+        best_sla(&s) < best_sla(&b),
+        "streaming SLA {} must beat batch {}",
+        best_sla(&s),
+        best_sla(&b)
+    );
+    assert!(s.worst_alert_sla().unwrap() <= b.worst_alert_sla().unwrap());
+    // the opened alerts themselves carry the SLA stamp
+    assert!(cb_s
+        .alerts
+        .alerts
+        .iter()
+        .all(|a| a.sla_secs.is_some()));
+}
+
+#[test]
+fn streaming_campaign_replays_byte_identical() {
+    // determinism of the new default: two identical streaming runs agree
+    // on the timeline AND the full TSDB including the campaign
+    // meta-points (latencies are simulated-clock values, not host time)
+    let run_once = || {
+        let mut cb = CbSystem::new();
+        let mut projects = vec![
+            CampaignProject::new("nhr-walberla", ProjectKind::Walberla),
+            CampaignProject::new("proxy-walberla", ProjectKind::Walberla),
+        ];
+        run_campaign_with(
+            &mut cb,
+            &mut projects,
+            &CampaignConfig { pushes: 2, penalty: 0.0, seed: 7, ..CampaignConfig::default() },
+            icx36_walberla_jobs,
+        )
+        .unwrap();
+        let mut dump = String::new();
+        let measurements: Vec<String> = cb.db.measurements().cloned().collect();
+        for m in &measurements {
+            for p in cb.db.points_iter(m) {
+                dump.push_str(&p.to_line());
+                dump.push('\n');
+            }
+        }
+        (cb.scheduler.timeline(), dump)
+    };
+    let (tl1, db1) = run_once();
+    let (tl2, db2) = run_once();
+    assert_eq!(tl1, tl2);
+    assert_eq!(db1, db2, "campaign meta-points must replay byte-identically too");
+}
+
+#[test]
+fn campaign_bisect_rebuilds_chains_and_finds_injected_commit() {
+    // close the ROADMAP gap end to end: a campaign plants a regression,
+    // the alert names the campaign repository, and a *rebuilt* campaign
+    // chain (same config, fresh projects) bisects to the injected round
+    let cfg = CampaignConfig {
+        pushes: 4,
+        inject_at: 3,
+        penalty: 0.15,
+        seed: 9,
+        ..CampaignConfig::default()
+    };
+    let mut cb = CbSystem::new();
+    let mut projects = vec![CampaignProject::new("walberla-0", ProjectKind::Walberla)];
+    let out = run_campaign_with(&mut cb, &mut projects, &cfg, icx36_walberla_jobs).unwrap();
+    assert!(out.alerts_opened() > 0);
+    let alert = {
+        let active = cb.alerts.active();
+        let mut best = active[0];
+        for &a in &active {
+            if a.confidence > best.confidence {
+                best = a;
+            }
+        }
+        best.clone()
+    };
+    assert_eq!(alert.group.get("repo").map(|s| s.as_str()), Some("walberla-0"));
+
+    // rebuild the chains from nothing but the campaign arguments
+    let mut rebuilt = vec![CampaignProject::new("walberla-0", ProjectKind::Walberla)];
+    let events = campaign_push_events(&mut rebuilt, &cfg);
+    let chain: Vec<PushEvent> = events.into_iter().map(|(_, e)| e).collect();
+    assert_eq!(chain.len(), 4);
+    // the rebuilt commits are the ones the campaign benchmarked: their
+    // ids appear as commit tags in the campaign's TSDB
+    let commits = cb.db.tag_values("lbm", "commit");
+    for ev in &chain {
+        assert!(commits.contains(&ev.commit_id[..8].to_string()), "{}", ev.commit_id);
+    }
+
+    let mut cb2 = CbSystem::new();
+    let report = bisect_pipeline(
+        &mut cb2,
+        &rebuilt[0].repo,
+        "master",
+        &chain[0].commit_id,
+        &chain[3].commit_id,
+        &alert.measurement,
+        &alert.field,
+        &alert.group,
+        alert.direction,
+        0.08,
+        |repo, commit| {
+            ProjectKind::Walberla
+                .jobs_for(repo, commit)
+                .into_iter()
+                .filter(|j| j.ci.get("HOST") == Some("icx36"))
+                .collect()
+        },
+    )
+    .unwrap();
+    // push round 3 (index 2) planted the kernel-regen penalty
+    assert_eq!(report.first_bad.as_deref(), Some(chain[2].commit_id.as_str()));
+    assert!(report.pipeline_runs <= report.linear_runs + 1);
 }

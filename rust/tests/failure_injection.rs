@@ -79,7 +79,7 @@ fn crashing_job_does_not_poison_the_pipeline() {
     assert_eq!(r.jobs_completed, 1);
     // only the good job uploads a point; the crash log has no METRIC lines
     assert_eq!(r.points_uploaded, 1);
-    assert_eq!(cb.db.points("m").len(), 1);
+    assert_eq!(cb.db.n_points("m"), 1);
 }
 
 #[test]
@@ -106,7 +106,7 @@ fn malformed_tsdb_ingest_rejected_atomically_per_line() {
     // before the error is lost
     let err = db.ingest_lines(text);
     assert!(err.is_err());
-    assert_eq!(db.points("good").len(), 1);
+    assert_eq!(db.n_points("good"), 1);
 }
 
 #[test]
@@ -139,7 +139,7 @@ fn duplicate_job_names_in_two_pipelines_do_not_collide_in_store() {
     }
     assert!(cb.store.record_by_identifier("p1-job-same-name").is_some());
     assert!(cb.store.record_by_identifier("p2-job-same-name").is_some());
-    assert_eq!(cb.db.points("m").len(), 2);
+    assert_eq!(cb.db.n_points("m"), 2);
 }
 
 #[test]

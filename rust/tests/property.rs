@@ -605,8 +605,7 @@ fn prop_range_pushdown_matches_linear_filter() {
             .map(|s| s.points.clone())
             .unwrap_or_default();
         let slow: Vec<(i64, f64)> = db
-            .points("m")
-            .iter()
+            .points_iter("m")
             .filter(|p| p.ts >= a && p.ts <= b)
             .map(|p| (p.ts, p.fields["v"]))
             .collect();
@@ -625,5 +624,126 @@ fn prop_ci_substitution_never_panics_and_is_idempotent_without_vars() {
             .collect();
         // without variables the text must come back unchanged
         assert_eq!(substitute_vars(&s, &empty), s, "seed {seed}: {s:?}");
+    }
+}
+
+#[test]
+fn prop_sharded_queries_match_single_shard_linear_scan() {
+    // shard-boundary equivalence: the same random inserts land in a
+    // many-shard store (tiny span) and an effectively unsharded one
+    // (huge span); points_in_range, tail(n) and grouped Query runs must
+    // agree exactly, including ranges that hit shard edges dead on
+    for seed in 0..15u64 {
+        let mut rng = Rng::new(7000 + seed);
+        let span = 8 + rng.below(24) as i64; // 8..31 ticks per shard
+        let mut sharded = Db::with_shard_span(span);
+        let mut single = Db::with_shard_span(i64::MAX / 4);
+        let n = 80 + rng.below(200);
+        for _ in 0..n {
+            let p = Point::new("m", rng.below(400) as i64 - 50)
+                .tag("s", if rng.uniform() < 0.5 { "a" } else { "b" })
+                .field("v", rng.range(0.0, 10.0));
+            sharded.insert(p.clone());
+            single.insert(p);
+        }
+        assert!(sharded.shards("m").len() > 1, "seed {seed}: span {span} must shard");
+        assert_eq!(sharded.len(), single.len());
+        // full iteration order identical
+        let all_a: Vec<String> = sharded.points_iter("m").map(|p| p.to_line()).collect();
+        let all_b: Vec<String> = single.points_iter("m").map(|p| p.to_line()).collect();
+        assert_eq!(all_a, all_b, "seed {seed}");
+        // ranges: random plus exact shard-boundary multiples of the span
+        let mut ranges: Vec<(i64, i64)> = (0..6)
+            .map(|_| {
+                let x = rng.below(400) as i64 - 50;
+                let y = rng.below(400) as i64 - 50;
+                (x.min(y), x.max(y))
+            })
+            .collect();
+        ranges.push((0, span - 1));
+        ranges.push((span, 2 * span));
+        ranges.push((span - 1, span));
+        for (a, b) in ranges {
+            let fast: Vec<i64> = sharded
+                .points_in_range("m", Some(a), Some(b))
+                .map(|p| p.ts)
+                .collect();
+            let slow: Vec<i64> = single
+                .points_in_range("m", Some(a), Some(b))
+                .map(|p| p.ts)
+                .collect();
+            assert_eq!(fast, slow, "seed {seed}: range [{a}, {b}]");
+        }
+        // tail(n) pushdown and grouped runs agree across the layouts
+        for n in [1usize, 3, 10] {
+            assert_eq!(
+                sharded.tail_start_ts("m", n),
+                single.tail_start_ts("m", n),
+                "seed {seed}: tail bound n={n}"
+            );
+            let qa = Query::new("m", "v").group_by(&["s"]).tail(n).run(&sharded);
+            let qb = Query::new("m", "v").group_by(&["s"]).tail(n).run(&single);
+            assert_eq!(qa, qb, "seed {seed}: tail({n}) query");
+            let fa = Query::new("m", "v").where_tag("s", "a").tail(n).run(&sharded);
+            let fb = Query::new("m", "v").where_tag("s", "a").tail(n).run(&single);
+            assert_eq!(fa, fb, "seed {seed}: filtered tail({n}) query");
+        }
+    }
+}
+
+#[test]
+fn prop_compaction_keeps_retained_raw_queries_unchanged() {
+    // compaction round-trip: queries whose window lies entirely inside
+    // the retained raw range return exactly what they returned before
+    // the pass; older shards collapse to per-series rollups
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(8000 + seed);
+        let span = 10i64;
+        let mut db = Db::with_shard_span(span);
+        let horizon = 120 + rng.below(80) as i64;
+        for ts in 0..horizon {
+            // series `a` reports at every tick (so every shard's max-ts
+            // index sits at its last tick and the compaction watermark
+            // falls exactly where the arithmetic below assumes); b and c
+            // are spotty like real co-tenants
+            for s in ["a", "b", "c"] {
+                if s == "a" || rng.uniform() < 0.9 {
+                    db.insert(
+                        Point::new("m", ts)
+                            .tag("s", s)
+                            .field("v", rng.range(1.0, 2.0)),
+                    );
+                }
+            }
+        }
+        let retain = 35i64;
+        let watermark = horizon - 1 - retain;
+        // any shard whose points all predate the watermark gets compacted;
+        // the raw region provably starts at the first kept shard boundary
+        let raw_from = (watermark.div_euclid(span)) * span;
+        let before: Vec<String> = db
+            .points_in_range("m", Some(raw_from), None)
+            .map(|p| p.to_line())
+            .collect();
+        let before_tail = Query::new("m", "v").group_by(&["s"]).tail(8).run(&db);
+        let rep = db.compact(retain);
+        assert!(rep.shards_compacted > 0, "seed {seed}: old shards must compact");
+        assert!(rep.points_after < rep.points_before, "seed {seed}");
+        let after: Vec<String> = db
+            .points_in_range("m", Some(raw_from), None)
+            .map(|p| p.to_line())
+            .collect();
+        assert_eq!(before, after, "seed {seed}: retained raw range changed");
+        // detector-style trailing-window queries see raw points only
+        let after_tail = Query::new("m", "v").group_by(&["s"]).tail(8).run(&db);
+        assert_eq!(before_tail, after_tail, "seed {seed}: tail window changed");
+        // compacted shards carry exactly one rollup per live series
+        let first = &db.shards("m")[0];
+        assert!(first.is_compacted(), "seed {seed}");
+        assert!(first.len() <= 3, "seed {seed}: at most one rollup per series");
+        for p in first.points() {
+            assert_eq!(p.tags["rollup"], "mean", "seed {seed}");
+            assert!(p.fields["rollup_n"] >= 1.0, "seed {seed}");
+        }
     }
 }
