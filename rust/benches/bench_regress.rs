@@ -16,8 +16,14 @@ use cbench::util::stats::Bench;
 /// shape `coordinator::collect_pipeline` uploads, and the one the
 /// detector's `tail(n)` pushdown is bounded against.
 fn synthetic_db(series: usize, per_series: usize, seed: u64) -> Db {
+    synthetic_db_span(series, per_series, seed, cbench::tsdb::DEFAULT_SHARD_SPAN_NS)
+}
+
+/// [`synthetic_db`] with an explicit shard span — the persistence benches
+/// use small shards so the lazy cold load has real shard granularity.
+fn synthetic_db_span(series: usize, per_series: usize, seed: u64, span_ns: i64) -> Db {
     let mut rng = Rng::new(seed);
-    let mut db = Db::new();
+    let mut db = Db::with_shard_span(span_ns);
     let ops = ["srt", "trt", "mrt", "cumulant"];
     // per-series personalities first ...
     let params: Vec<(String, &str, f64, bool, usize)> = (0..series)
@@ -138,6 +144,55 @@ fn main() {
         detect_raw,
         "detector windows live in the retained raw range — findings unchanged"
     );
+
+    // cold-load persistence: the manifest layout parses its shard index
+    // eagerly and shard bodies lazily, so "restart + first detect" reads
+    // only the newest shard(s) — flat as the on-disk history deepens
+    // 1× → 100×. The legacy single-file load pays the whole history
+    // (eager contrast figure). PERSIST_JSON is embedded into the
+    // per-commit bench JSON by CI; the acceptance gate is ±10%.
+    println!("\n== cold load: manifest (lazy) vs legacy single file (eager) ==\n");
+    let tmp = std::env::temp_dir().join("cbench_persist_bench");
+    let _ = std::fs::remove_dir_all(&tmp);
+    std::fs::create_dir_all(&tmp).unwrap();
+    let span_ns = 64 * 1_000_000_000; // 64-trigger shards = materialization granularity
+    let mut cold_ms: Vec<f64> = Vec::new();
+    let mut last_dir = tmp.clone();
+    let mut points_100x = 0usize;
+    for (mult, per_series) in [(1usize, 100usize), (10, 1000), (100, 10_000)] {
+        let mut db = synthetic_db_span(100, per_series, 17, span_ns);
+        db.compact(64 * 1_000_000_000);
+        let dir = tmp.join(format!("depth{mult}x"));
+        db.save(&dir).unwrap();
+        points_100x = db.len();
+        let shard_count = db.shards("lbm").len();
+        let mut b = Bench::new(&format!("cold_load_detect_{mult}x_history"));
+        b.budget_secs = 2.0;
+        let r = b.run(|| {
+            let cold = Db::load(&dir).unwrap();
+            det.detect(&cold).len()
+        });
+        println!("{}   ({} points on disk, {} shards)", r.report(), db.len(), shard_count);
+        cold_ms.push(r.secs_per_iter.p50 * 1e3);
+        last_dir = dir;
+    }
+    let legacy = tmp.join("depth100x.lp");
+    Db::load(&last_dir).unwrap().export_lp(&legacy).unwrap();
+    let mut b = Bench::new("cold_load_detect_100x_legacy_eager");
+    b.budget_secs = 2.0;
+    let r_eager = b.run(|| {
+        let cold = Db::load(&legacy).unwrap();
+        det.detect(&cold).len()
+    });
+    println!("{}", r_eager.report());
+    let (t1, t10, t100) = (cold_ms[0], cold_ms[1], cold_ms[2]);
+    let ratio = if t1 > 0.0 { t100 / t1 } else { 1.0 };
+    println!(
+        "PERSIST_JSON {{\"t_cold_1x_ms\":{t1:.4},\"t_cold_10x_ms\":{t10:.4},\"t_cold_100x_ms\":{t100:.4},\"ratio_100x\":{ratio:.4},\"lazy_load_flat\":{},\"t_eager_100x_ms\":{:.4},\"points_100x\":{points_100x}}}",
+        ratio <= 1.10,
+        r_eager.secs_per_iter.p50 * 1e3
+    );
+    let _ = std::fs::remove_dir_all(&tmp);
 
     // statistical primitives on window-sized samples
     let mut rng = Rng::new(1);

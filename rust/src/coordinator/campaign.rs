@@ -165,6 +165,13 @@ pub struct CampaignConfig {
     /// alert set and timeline, later uploads (`cbench campaign --collect
     /// streaming|batch`).
     pub streaming: bool,
+    /// Incremental detection (default): per-pipeline checks update the
+    /// carried `regress::DetectorState` from the new points instead of
+    /// re-querying the tail window. `false` restores the full re-query on
+    /// every collect (`cbench campaign --detect incremental|requery`) —
+    /// same findings, same alert book, byte for byte (the equivalence is
+    /// property-tested); only the work done per check differs.
+    pub incremental: bool,
 }
 
 impl Default for CampaignConfig {
@@ -177,6 +184,7 @@ impl Default for CampaignConfig {
             backfill: true,
             drains: Vec::new(),
             streaming: true,
+            incremental: true,
         }
     }
 }
@@ -345,6 +353,9 @@ pub fn run_campaign_with(
     // windows land before the first submission so the whole roster is
     // dispatched (and replays) under one deterministic configuration
     cb.scheduler.set_backfill(cfg.backfill);
+    // detection mode: incremental state-carried checks (default) vs the
+    // full tail re-query A/B reference — identical results either way
+    cb.set_incremental_detection(cfg.incremental);
     for (host, from, until) in &cfg.drains {
         // a campaign never resumes nodes, so an open-ended drain would
         // strand that node's jobs forever while the run "succeeds"

@@ -21,9 +21,13 @@
 //!   tagged with the run parameters + repository (tags) and the pipeline
 //!   trigger time (timestamp), archives raw artifacts as linked records
 //!   in the Kadi4Mat-like store (one collection per pipeline execution,
-//!   Fig. 5), and runs the statistical regression check — upload +
-//!   detection are serialized per pipeline, which keeps alert bookkeeping
-//!   and TSDB ordering deterministic even when execution overlapped,
+//!   Fig. 5), and runs the statistical regression check **incrementally**
+//!   (the carried [`crate::regress::DetectorState`] ingests just the
+//!   points this pipeline appended instead of re-querying the tail
+//!   window; `--detect requery` restores the re-query A/B reference) —
+//!   upload + detection are serialized per pipeline, which keeps alert
+//!   bookkeeping and TSDB ordering deterministic even when execution
+//!   overlapped,
 //! 5. refreshes the Grafana-like dashboards and the roofline plots.
 //!
 //! **Streaming collection.** Collection is decoupled from draining the
@@ -60,7 +64,7 @@ use crate::ci::{CiJob, Pipeline, PipelineFactory, Runner};
 use crate::cluster::machinestate::machine_state;
 use crate::cluster::nodes::catalogue;
 use crate::datastore::{DataStore, Id};
-use crate::regress::{AlertBook, Detector, Direction, IngestSummary, Policy};
+use crate::regress::{AlertBook, Detector, DetectorState, Direction, IngestSummary, Policy};
 use crate::sched::{JobState, Payload, SimScheduler, SubmitSpec};
 use crate::slurm::JobSpec;
 use crate::tsdb::{Db, Point};
@@ -280,6 +284,16 @@ pub struct CbSystem {
     pub detector: Detector,
     /// Durable alert lifecycle fed by the detector.
     pub alerts: AlertBook,
+    /// Incremental per-series detection state carried across collects:
+    /// the post-upload check ingests only the points its pipeline
+    /// appended instead of re-querying the tail window, with
+    /// byte-identical findings/alerts (see `regress::state`). Persisted
+    /// beside the alert book by the CLI (`--save-state`); invalidated and
+    /// rebuilt automatically on detector-config changes.
+    pub det_state: DetectorState,
+    /// `false` restores the full tail re-query on every check (the A/B
+    /// reference; `cbench campaign --detect requery`).
+    incremental_detection: bool,
     /// Pristine policies that per-commit `regress.*` overrides derive from.
     base_detector: Detector,
     /// Pipelines submitted but not yet collected.
@@ -314,6 +328,8 @@ impl CbSystem {
             base_detector: detector.clone(),
             detector,
             alerts: AlertBook::new(),
+            det_state: DetectorState::new(),
+            incremental_detection: true,
             in_flight: Vec::new(),
             root_collection,
             alerts_collection: None,
@@ -321,20 +337,28 @@ impl CbSystem {
         }
     }
 
-    /// Adopt an existing TSDB (e.g. reloaded from the file a previous
+    /// Adopt an existing TSDB (e.g. reloaded from the store a previous
     /// `cbench pipeline` run saved) and fast-forward the trigger clock
     /// past its newest point, so this run's pipelines append strictly
     /// increasing timestamps to the carried-over history instead of
-    /// overwriting it.
+    /// overwriting it. Reads only shard metadata — a lazily-loaded
+    /// manifest store stays unmaterialized. Carried detector state is
+    /// validated against the adopted database at the next check (its
+    /// watermarks trigger a bounded rebuild on mismatch).
     pub fn adopt_db(&mut self, db: Db) {
-        let mut max_ts = 0i64;
-        for m in db.measurements() {
-            if let Some(p) = db.last_point(m) {
-                max_ts = max_ts.max(p.ts);
-            }
-        }
+        let max_ts = db.newest_ts().unwrap_or(0);
         self.db = db;
         self.trigger_clock = self.trigger_clock.max(max_ts);
+    }
+
+    /// Toggle incremental detection (on by default): `false` makes every
+    /// post-upload check re-query the tail window from the TSDB — the
+    /// A/B reference the equivalence tests compare against.
+    pub fn set_incremental_detection(&mut self, on: bool) {
+        self.incremental_detection = on;
+    }
+    pub fn incremental_detection(&self) -> bool {
+        self.incremental_detection
     }
 
     /// Install a new detector as the *base* policy set: per-commit
@@ -374,9 +398,18 @@ impl CbSystem {
         owner_repo: Option<&str>,
     ) -> IngestSummary {
         let scope: Vec<(&str, &str)> = owner_repo.iter().map(|r| ("repo", *r)).collect();
-        let (findings, evaluated) =
+        // incremental by default: sync the carried per-series state with
+        // the points this collect appended (config changes / adopted
+        // databases rebuild, bounded), then judge from state — proven
+        // byte-identical to the full tail re-query below
+        let (findings, evaluated) = if self.incremental_detection {
+            self.det_state.sync(&self.detector, &self.db);
+            self.det_state
+                .detect_measurement_scoped(&self.detector, &self.db, measurement, &scope)
+        } else {
             self.detector
-                .detect_measurement_scoped(&self.db, measurement, &scope);
+                .detect_measurement_scoped(&self.db, measurement, &scope)
+        };
         let now = self.trigger_clock;
         let summary = self.alerts.ingest(&findings, &evaluated, now);
         // attribute exactly the alerts this execution opened to its

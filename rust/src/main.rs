@@ -105,16 +105,23 @@ fn simulated_history(
     (repo, events)
 }
 
-/// Shared `--save-tsdb` / `--save-alerts` resume logic of `cbench
-/// pipeline` and `cbench campaign`: the TSDB accumulates across runs
-/// (new pipelines append after the saved history — alerts resolve only
-/// on real evidence) and the alert lifecycle survives (acknowledgements,
+/// Shared `--save-tsdb` / `--save-alerts` / `--save-state` resume logic
+/// of `cbench pipeline` and `cbench campaign`: the TSDB accumulates
+/// across runs (new pipelines append after the saved history — alerts
+/// resolve only on real evidence; a manifest store loads its shard index
+/// eagerly and shard bodies lazily, so resuming on a multi-year history
+/// parses nothing old), the alert lifecycle survives (acknowledgements,
 /// bisection results, resolution history; ids keep counting,
-/// fingerprints deduplicate). The loaded book references a previous
-/// process's datastore, and ids are per-store, so they are detached
-/// before this run archives anything. Returns `(tsdb_path, alerts_path)`
-/// for the closing save.
-fn load_persisted_state<'a>(cb: &mut CbSystem, args: &'a Args) -> anyhow::Result<(&'a str, &'a str)> {
+/// fingerprints deduplicate), and the incremental detector state carries
+/// its per-series windows so the first check of this run does not
+/// re-derive them (stale/mismatched state rebuilds itself, bounded). The
+/// loaded book references a previous process's datastore, and ids are
+/// per-store, so they are detached before this run archives anything.
+/// Returns `(tsdb_path, alerts_path, state_path)` for the closing save.
+fn load_persisted_state<'a>(
+    cb: &mut CbSystem,
+    args: &'a Args,
+) -> anyhow::Result<(&'a str, &'a str, &'a str)> {
     let tsdb_path = args.get_or("save-tsdb", "cbench_tsdb.lp");
     if Path::new(tsdb_path).exists() {
         cb.adopt_db(Db::load(Path::new(tsdb_path))?);
@@ -123,7 +130,18 @@ fn load_persisted_state<'a>(cb: &mut CbSystem, args: &'a Args) -> anyhow::Result
     let alerts_path = args.get_or("save-alerts", "cbench_alerts.json");
     cb.alerts = AlertBook::load(Path::new(alerts_path))?;
     cb.alerts.detach_store();
-    Ok((tsdb_path, alerts_path))
+    let state_path = args.get_or("save-state", "cbench_detector_state.json");
+    cb.det_state = cbench::regress::DetectorState::load(Path::new(state_path))?;
+    Ok((tsdb_path, alerts_path, state_path))
+}
+
+/// Parse the shared `--detect incremental|requery` flag.
+fn parse_detect_mode(args: &Args) -> anyhow::Result<bool> {
+    match args.get_or("detect", "incremental") {
+        "incremental" | "inc" => Ok(true),
+        "requery" | "full" => Ok(false),
+        other => anyhow::bail!("--detect `{other}`: expected incremental|requery"),
+    }
 }
 
 fn pipeline_jobs_for(which: &str, repo: &Repository, commit_id: &str) -> Vec<PreparedJob> {
@@ -155,7 +173,8 @@ fn cmd_pipeline(args: &Args) -> anyhow::Result<()> {
         anyhow::bail!("--inject-regression {inject_at} is past the last commit ({commits})");
     }
     let mut cb = CbSystem::new();
-    let (tsdb_path, alerts_path) = load_persisted_state(&mut cb, args)?;
+    let (tsdb_path, alerts_path, state_path) = load_persisted_state(&mut cb, args)?;
+    cb.set_incremental_detection(parse_detect_mode(args)?);
     let (repo, events) = simulated_history(which, commits, inject_at, penalty);
     let measurement = if which == "fe2ti" { "fe2ti" } else { "lbm" };
     for ev in &events {
@@ -183,11 +202,18 @@ fn cmd_pipeline(args: &Args) -> anyhow::Result<()> {
             },
         );
     }
-    cb.db.save(Path::new(tsdb_path))?;
-    println!("tsdb saved to {tsdb_path} ({} points)", cb.db.len());
-    cb.alerts.save(Path::new(alerts_path))?;
+    let rep = cb.db.save_report(Path::new(tsdb_path))?;
     println!(
-        "alerts saved to {alerts_path} ({} active) — inspect with `cbench regress alerts`",
+        "tsdb saved to {tsdb_path} ({} points; {} shard file(s) rewritten, {} kept)",
+        cb.db.len(),
+        rep.shards_written,
+        rep.shards_kept
+    );
+    cb.alerts.save(Path::new(alerts_path))?;
+    cb.det_state.save(Path::new(state_path))?;
+    println!(
+        "alerts saved to {alerts_path} ({} active) — inspect with `cbench regress alerts`; \
+         detector state -> {state_path}",
         cb.alerts.active().len()
     );
     // render the project dashboard, annotated with open alerts
@@ -265,12 +291,22 @@ fn cmd_campaign(args: &Args) -> anyhow::Result<()> {
         other => anyhow::bail!("--collect `{other}`: expected streaming|batch"),
     };
     let drains = parse_drain_specs(args.get("drain"))?;
+    let incremental = parse_detect_mode(args)?;
 
     let mut cb = CbSystem::new();
-    let (tsdb_path, alerts_path) = load_persisted_state(&mut cb, args)?;
+    let (tsdb_path, alerts_path, state_path) = load_persisted_state(&mut cb, args)?;
 
     let mut projects = campaign::default_projects(repos);
-    let cfg = CampaignConfig { pushes, inject_at, penalty, seed, backfill, drains, streaming };
+    let cfg = CampaignConfig {
+        pushes,
+        inject_at,
+        penalty,
+        seed,
+        backfill,
+        drains,
+        streaming,
+        incremental,
+    };
     for (host, from, until) in &cfg.drains {
         println!("maintenance: {host} drained over [{from:.0}..{until:.0}) (simulated s)");
     }
@@ -336,6 +372,10 @@ fn cmd_campaign(args: &Args) -> anyhow::Result<()> {
             out.total_jobs()
         );
     }
+    println!(
+        "detect mode: {}",
+        if incremental { "incremental (state-carried windows)" } else { "requery (full tail re-query)" }
+    );
     // machine-readable summary (CI records this in the per-commit bench JSON)
     println!(
         "CAMPAIGN_JSON {{\"repos\":{repos},\"pushes\":{pushes},\"pipelines\":{},\"jobs\":{},\"makespan_s\":{:.3},\"sequential_s\":{:.3},\"speedup\":{:.4},\"alerts_opened\":{},\"backfill\":{},\"backfilled_jobs\":{},\"collect\":\"{}\",\"first_upload_s\":{:.3},\"worst_alert_sla_s\":{}}}",
@@ -354,11 +394,15 @@ fn cmd_campaign(args: &Args) -> anyhow::Result<()> {
             .unwrap_or_else(|| "null".into())
     );
 
-    cb.db.save(Path::new(tsdb_path))?;
+    let rep = cb.db.save_report(Path::new(tsdb_path))?;
     cb.alerts.save(Path::new(alerts_path))?;
+    cb.det_state.save(Path::new(state_path))?;
     println!(
-        "tsdb saved to {tsdb_path} ({} points); alerts saved to {alerts_path} ({} active)",
+        "tsdb saved to {tsdb_path} ({} points; {} shard file(s) rewritten, {} kept); \
+         alerts saved to {alerts_path} ({} active); detector state -> {state_path}",
         cb.db.len(),
+        rep.shards_written,
+        rep.shards_kept,
         cb.alerts.active().len()
     );
     println!("\n{}", campaign_dashboard().render_text(&cb.db));
@@ -486,37 +530,86 @@ fn tsdb_probe_secs(db: &Db, reps: usize) -> f64 {
     t.elapsed().as_secs_f64() / reps.max(1) as f64
 }
 
-/// `cbench tsdb <info|compact> [--tsdb FILE]` — inspect / compact the
-/// sharded store. `info` prints the shard layout (per-measurement shard
-/// count, per-shard point counts and min/max-ts index, compaction
-/// state). `compact --retain-raw SECS` replaces raw points in shards
-/// entirely older than `newest - retain-raw` with per-series rollup
-/// summaries and saves the result (`--out FILE` to write elsewhere);
-/// `--shard-span SECS` controls the partition size on load.
+/// `cbench tsdb <info|compact|export> [--tsdb STORE]` — inspect /
+/// compact / dump the sharded store (manifest directory or legacy
+/// single file). `info` prints the shard layout from the manifest index
+/// alone — nothing is materialized; `--json` emits it machine-readable.
+/// `compact --retain-raw SECS` replaces raw points in shards entirely
+/// older than `newest - retain-raw` with per-series rollup summaries and
+/// saves the result (`--out STORE` to write elsewhere; saving a loaded
+/// legacy file migrates it to the manifest layout). `export --out FILE`
+/// writes the legacy single-file line-protocol dump (stable order — the
+/// CI reload-equivalence check diffs it). `--shard-span SECS`
+/// re-partitions on load (a full-copy operation); without the flag a
+/// manifest store keeps its recorded span.
 fn cmd_tsdb(args: &Args) -> anyhow::Result<()> {
     let sub = args.positional.first().map(|s| s.as_str()).unwrap_or("info");
     let tsdb = args.get_or("tsdb", "cbench_tsdb.lp");
-    let default_span_s = (cbench::tsdb::DEFAULT_SHARD_SPAN_NS / 1_000_000_000) as usize;
-    let span_s = args.get_usize("shard-span", default_span_s);
-    anyhow::ensure!(span_s >= 1, "--shard-span must be at least 1 second");
-    let mut db = Db::load_with_shard_span(Path::new(tsdb), span_s as i64 * 1_000_000_000)?;
+    let mut db = match args.get("shard-span") {
+        Some(_) => {
+            let span_s = args.get_usize("shard-span", 0);
+            anyhow::ensure!(span_s >= 1, "--shard-span must be at least 1 second");
+            Db::load_with_shard_span(Path::new(tsdb), span_s as i64 * 1_000_000_000)?
+        }
+        None => Db::load(Path::new(tsdb))?,
+    };
+    let span_s = (db.shard_span() / 1_000_000_000).max(1) as usize;
+    let layout = if Path::new(tsdb).is_dir() { "manifest" } else { "legacy" };
     match sub {
         "info" => {
-            println!(
-                "{tsdb}: {} points, shard span {span_s} s",
-                db.len()
-            );
             let measurements: Vec<String> = db.measurements().cloned().collect();
+            if args.flag("json") {
+                // per-shard manifest stats, machine-readable, via the
+                // real JSON writer (measurement names and paths may
+                // contain characters Rust's {:?} would escape invalidly);
+                // `loaded` proves the info pass itself stayed lazy.
+                // min/max_ts print as JSON numbers here (display only —
+                // the manifest itself stores them as exact strings).
+                use cbench::util::json::Json;
+                let mut meas = Json::obj();
+                for m in &measurements {
+                    let shards: Vec<Json> = db
+                        .shards(m)
+                        .iter()
+                        .map(|s| {
+                            Json::obj()
+                                .set("key", s.key())
+                                .set("points", s.len())
+                                .set("min_ts", s.min_ts().unwrap_or(0))
+                                .set("max_ts", s.max_ts().unwrap_or(0))
+                                .set("compacted", s.is_compacted())
+                                .set("loaded", s.is_loaded())
+                        })
+                        .collect();
+                    meas = meas.set(
+                        m,
+                        Json::obj()
+                            .set("shards", db.shards(m).len())
+                            .set("points", db.n_points(m))
+                            .set("shard_list", Json::Arr(shards)),
+                    );
+                }
+                let j = Json::obj()
+                    .set("store", tsdb)
+                    .set("layout", layout)
+                    .set("shard_span_s", span_s)
+                    .set("points", db.len())
+                    .set("measurements", meas);
+                println!("{}", j.to_string_compact());
+                return Ok(());
+            }
+            println!("{tsdb}: {} points, shard span {span_s} s, {layout} layout", db.len());
             for m in &measurements {
                 println!("  {m}: {} shards, {} points", db.shards(m).len(), db.n_points(m));
                 for s in db.shards(m) {
                     println!(
-                        "    shard {:>6}  [{}..{}]  {:>6} points{}",
+                        "    shard {:>6}  [{}..{}]  {:>6} points{}{}",
                         s.key(),
                         s.min_ts().unwrap_or(0) / 1_000_000_000,
                         s.max_ts().unwrap_or(0) / 1_000_000_000,
                         s.len(),
-                        if s.is_compacted() { "  (compacted rollups)" } else { "" }
+                        if s.is_compacted() { "  (compacted rollups)" } else { "" },
+                        if s.is_loaded() { "" } else { "  (lazy)" }
                     );
                 }
             }
@@ -528,11 +621,16 @@ fn cmd_tsdb(args: &Args) -> anyhow::Result<()> {
             let rep = db.compact(retain_s as i64 * 1_000_000_000);
             let t_after = tsdb_probe_secs(&db, 3);
             let out = args.get_or("out", tsdb);
-            db.save(Path::new(out))?;
+            let persist = db.save_report(Path::new(out))?;
             let ratio = if t_before > 0.0 { t_after / t_before } else { 1.0 };
             println!(
-                "compacted {} of {} shards: {} -> {} points (raw kept for the trailing {retain_s} s) -> {out}",
-                rep.shards_compacted, rep.shards_seen, rep.points_before, rep.points_after
+                "compacted {} of {} shards: {} -> {} points (raw kept for the trailing {retain_s} s) -> {out} ({} shard file(s) rewritten, {} kept)",
+                rep.shards_compacted,
+                rep.shards_seen,
+                rep.points_before,
+                rep.points_after,
+                persist.shards_written,
+                persist.shards_kept
             );
             println!(
                 "storage-scan probe: {:.3} ms -> {:.3} ms ({ratio:.2}x)",
@@ -547,19 +645,23 @@ fn cmd_tsdb(args: &Args) -> anyhow::Result<()> {
             );
             Ok(())
         }
-        other => anyhow::bail!("unknown subcommand `tsdb {other}` (info|compact)"),
+        "export" => {
+            let out = args
+                .get("out")
+                .ok_or_else(|| anyhow::anyhow!("tsdb export needs --out FILE"))?;
+            db.export_lp(Path::new(out))?;
+            println!("exported {} points -> {out} (legacy single-file line protocol)", db.len());
+            Ok(())
+        }
+        other => anyhow::bail!("unknown subcommand `tsdb {other}` (info|compact|export)"),
     }
 }
 
 /// Latest timestamp across every measurement — the "now" for alert
-/// bookkeeping when working from a saved TSDB.
+/// bookkeeping when working from a saved TSDB. Reads shard metadata
+/// only: a lazily-loaded manifest store stays unmaterialized.
 fn db_now(db: &Db) -> i64 {
-    let measurements: Vec<String> = db.measurements().cloned().collect();
-    measurements
-        .iter()
-        .filter_map(|m| db.last_point(m).map(|p| p.ts))
-        .max()
-        .unwrap_or(0)
+    db.newest_ts().unwrap_or(0)
 }
 
 /// `cbench regress <detect|alerts|bisect>` — the detect → alert → bisect
@@ -926,15 +1028,21 @@ COMMANDS:
                                 (tab1..3, fig5..fig14; side CSV/SVG with --out)
   pipeline <fe2ti|walberla>     run the CB pipeline on simulated commits
            [--commits N] [--inject-regression K] [--penalty P]
-           [--save-tsdb FILE] [--save-alerts FILE]
+           [--save-tsdb STORE] [--save-alerts FILE] [--save-state FILE]
+           [--detect incremental|requery]
                                 K plants the waLBerla kernel regression at
                                 commit #K (penalty P, default 0.15); state
-                                persists to cbench_tsdb.lp / cbench_alerts.json
+                                persists to cbench_tsdb.lp (a manifest
+                                directory: shard index + one line-protocol
+                                file per shard; saves rewrite only dirty
+                                shards) / cbench_alerts.json /
+                                cbench_detector_state.json (the carried
+                                per-series detection windows)
   pipeline describe             explain the pipeline wiring (Figs. 3-4)
   campaign [--repos N] [--pushes M] [--inject-regression K] [--penalty P]
            [--seed S] [--backfill on|off] [--drain NODE@FROM..TO[,..]]
-           [--collect streaming|batch]
-           [--save-tsdb FILE] [--save-alerts FILE]
+           [--collect streaming|batch] [--detect incremental|requery]
+           [--save-tsdb STORE] [--save-alerts FILE] [--save-state FILE]
                                 multi-repo coordinator: N repositories
                                 (alternating walberla/fe2ti) x M pushes,
                                 every pipeline overlapped on ONE
@@ -957,20 +1065,35 @@ COMMANDS:
                                 resume); --backfill off disables the
                                 conservative timelimit-aware gap filling
                                 for A/B runs (TO must be finite:
-                                campaigns never resume a node themselves)
-  tsdb info [--tsdb FILE] [--shard-span SECS]
-                                shard layout of a saved TSDB: per-shard
-                                point counts, min/max-ts index,
-                                compaction state
-  tsdb compact [--tsdb FILE] [--retain-raw SECS] [--shard-span SECS]
-               [--out FILE]
+                                campaigns never resume a node themselves);
+                                --detect requery restores the full
+                                tail re-query per collect (A/B reference;
+                                incremental is the default and produces
+                                the identical alert book, byte for byte)
+  tsdb info [--tsdb STORE] [--shard-span SECS] [--json]
+                                shard layout of a saved TSDB from the
+                                manifest index alone (nothing is parsed):
+                                per-shard point counts, min/max-ts index,
+                                compaction + lazy-load state; --json for
+                                machine-readable per-shard manifest stats
+  tsdb compact [--tsdb STORE] [--retain-raw SECS] [--shard-span SECS]
+               [--out STORE]
                                 retention pass for multi-year histories:
                                 shards entirely older than newest -
                                 retain-raw get their raw points replaced
                                 by per-series rollup summaries (per-field
                                 mean, rollup=mean tag, raw count in
                                 rollup_n); queries over the retained raw
-                                range are unchanged; prints COMPACT_JSON
+                                range are unchanged; prints COMPACT_JSON.
+                                Saving a legacy single-file store writes
+                                the manifest directory layout (in-place
+                                migration); only mutated shards are
+                                rewritten on an existing manifest store
+  tsdb export --out FILE [--tsdb STORE]
+                                dump a store (manifest or legacy) as one
+                                legacy line-protocol file, stable order —
+                                the reload-equivalence dump CI diffs, and
+                                the down-migration path
   regress detect [--tsdb FILE] [--alerts FILE]
                                 statistical regression scan of a saved TSDB
                                 (baseline windows, Welch t / Mann-Whitney /
@@ -1033,12 +1156,30 @@ STREAMING COLLECT + ALERT SLA (detection latency):
   cbench regress bisect --campaign --repos 2 --pushes 2 --inject-regression 2
                                 # campaign-aware bisection of the alert
 
-MULTI-YEAR HISTORIES (shards + compaction):
-  cbench tsdb info              # shard layout of cbench_tsdb.lp
+MULTI-YEAR HISTORIES (shards + compaction + manifest persistence):
+  cbench tsdb info              # shard layout of cbench_tsdb.lp, read
+                                # from the manifest index alone
   cbench tsdb compact --retain-raw 64
                                 # roll up shards older than the trailing
                                 # 64 simulated seconds; prints pre/post
                                 # point counts + query-time ratio
+  cbench tsdb export --out dump.lp
+                                # stable single-file dump (byte-identical
+                                # across reloads -- CI asserts it)
+
+PERSISTENCE (the manifest layout; PERSIST_JSON in bench_regress):
+  cbench_tsdb.lp/ is a directory: manifest.json (shard index) + one
+  line-protocol file per shard. Loads parse the manifest eagerly and
+  shard bodies lazily -- resuming on a compacted multi-year history
+  parses only the shards the first queries touch, so cold-load cost is
+  flat in history depth. Saves rewrite only dirty (mutated) shards, via
+  temp-file + rename; stray *.tmp leftovers are cleaned on load. Legacy
+  single-file stores load transparently and migrate on their first save.
+  Detection state (cbench_detector_state.json) carries each series'
+  rolling window across runs, so per-collect detection updates from the
+  new points instead of re-querying the tail window -- byte-identical
+  findings/alerts either way (--detect requery is the A/B reference);
+  the state invalidates and rebuilds itself on regress.* config changes.
 
 The full architecture walkthrough (data flow, module map, determinism /
 replay contract) lives in ARCHITECTURE.md at the repository root.
@@ -1078,12 +1219,17 @@ CB pipeline wiring (paper Figs. 3-4):
     -> output parsed (likwid-style counters, perf::)
     -> metrics uploaded to the TSDB (tsdb::, fields+tags+trigger-time;
        time-partitioned shards, `cbench tsdb compact` rolls old shards
-       up into per-series summaries for multi-year retention)
+       up into per-series summaries for multi-year retention; the store
+       persists as a manifest directory -- shard index + one file per
+       shard -- loaded lazily and saved dirty-shards-only)
     -> raw files archived as linked records (datastore::, Fig. 5)
     -> dashboards + roofline plots refreshed (dashboard::, roofline::)
     -> regression check (regress::detector): every watched series is
        tested against a baseline window (Welch t, Mann-Whitney U, CUSUM
-       change-point location) instead of the old last-vs-previous diff
+       change-point location) instead of the old last-vs-previous diff;
+       the check is incremental by default (regress::state carries each
+       series' rolling window across collects and ingests only the new
+       points -- provably byte-identical to the full tail re-query)
     -> findings become alerts (regress::alerts): deduplicated per series,
        open -> acknowledged -> resolved, persisted as JSON next to the
        TSDB, archived as datastore records linked to the offending

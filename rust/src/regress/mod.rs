@@ -21,18 +21,25 @@
 //!
 //! `coordinator::collect_pipeline` runs the detector after every upload
 //! (serialized per pipeline even when execution overlaps on the shared
-//! `sched::` event scheduler); `coordinator::detect_regressions` is now a
-//! thin shim over [`detector::Policy`] with a 1-point window (API and
-//! semantics preserved); bisection probes ride the same scheduler as
-//! live pipelines; `cbench regress <detect|alerts|bisect>` drives the
-//! loop from the CLI.
+//! `sched::` event scheduler) — **incrementally** by default: [`state`]
+//! carries per-series rolling windows across collects so each check
+//! ingests only the points its pipeline appended instead of re-querying
+//! the tail window, with byte-identical findings/alerts guaranteed (and
+//! property-tested) against the full re-query path.
+//! `coordinator::detect_regressions` is a thin shim over
+//! [`detector::Policy`] with a 1-point window (API and semantics
+//! preserved); bisection probes ride the same scheduler as live
+//! pipelines; `cbench regress <detect|alerts|bisect>` drives the loop
+//! from the CLI.
 
 pub mod alerts;
 pub mod bisect;
 pub mod detector;
+pub mod state;
 pub mod stats;
 
 pub use alerts::{Alert, AlertBook, AlertState, IngestSummary};
 pub use bisect::{bisect_chain, bisect_pipeline, chain_between, resolve_short, BisectReport};
 pub use detector::{Detector, Direction, Finding, Policy};
+pub use state::{detector_fingerprint, DetectorState};
 pub use stats::{cusum_changepoint, mann_whitney, welch_t, BaselineStats, Cusum, TwoSampleTest};

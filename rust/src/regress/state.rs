@@ -1,0 +1,902 @@
+//! Incremental per-series detection state — the "don't redo old work"
+//! contract applied to the detector itself.
+//!
+//! Before this module, every per-pipeline regression check re-ran the
+//! bounded `tail(n)` query from scratch: walk the TSDB backwards, find
+//! the trailing window, regroup the series, evaluate. The pushdown made
+//! that flat in *history depth*, but each collect still re-derived the
+//! whole window from storage — and on a lazily-loaded manifest store it
+//! re-materialized the newest shards every time. [`DetectorState`]
+//! carries the window **across collects** instead: per-series rolling
+//! baselines plus the bookkeeping needed to reproduce the query path's
+//! staleness semantics, updated from the points a collect appended, so
+//! per-pipeline detection reads only what is new.
+//!
+//! # The equivalence contract
+//!
+//! `DetectorState::sync` + [`DetectorState::detect_measurement_scoped`]
+//! produce **byte-identical findings and evaluated-series fingerprints**
+//! to `Detector::detect_measurement_scoped` (the full re-query path) on
+//! the same database — same series, same order, same numbers, same
+//! suspect commits. That includes the subtle parts of the query
+//! semantics:
+//!
+//! * the unscoped `tail(n)` bound counts the trailing distinct
+//!   timestamps of the whole measurement (field-agnostic, like
+//!   `Db::tail_start_ts`);
+//! * the repo-scoped bound counts distinct timestamps among *matching*
+//!   points only, with the `n ×` [`TAIL_SCAN_SLACK`] cap on the global
+//!   reverse walk (a tenant staler than the cap is "not measured
+//!   anymore", exactly as the query treats it);
+//! * per-series trailing windows keep insertion order within equal
+//!   timestamps, and series are only *evaluated* when ≥ 2 points
+//!   survive the bound.
+//!
+//! `rust/tests/property.rs` holds the randomized equivalence suite;
+//! `campaign_e2e` pins byte-identical alert books across whole
+//! campaigns. Policies that opt out of the pushdown
+//! (`Policy::scan_full_history`) and scopes the state does not model
+//! fall back to the re-query path verbatim, so the contract holds
+//! unconditionally.
+//!
+//! # Invalidation
+//!
+//! The state is valid only for the detector configuration it was built
+//! under: [`detector_fingerprint`] serializes every policy knob, and a
+//! mismatch at sync time clears and rebuilds the state (per-commit
+//! `regress.*` overrides therefore rebuild on the override commit and
+//! again on the next stock commit — config changes are the explicit
+//! cost). Rebuilds are *bounded*: they reverse-walk only the trailing
+//! `max(lookback × TAIL_SCAN_SLACK)` distinct timestamps, never the full
+//! history. The same applies when the database itself changed behind the
+//! state's back — each measurement carries a watermark (last ingested
+//! timestamp, point count at it, a hash of the last ingested line, and
+//! the total point count), so rewound/replaced databases and
+//! out-of-order inserts below the watermark are detected and trigger a
+//! rebuild. (An in-place edit of *old* points that keeps the total count
+//! and the newest line identical is outside the watermark's reach — the
+//! TSDB upload path is append-only, so that shape does not occur in the
+//! system.)
+//!
+//! # Persistence
+//!
+//! [`DetectorState::save`]/[`DetectorState::load`] round-trip the state
+//! as JSON next to the alert book (`cbench_detector_state.json` by
+//! convention — `--save-state` on the CLI), so a resumed `cbench
+//! pipeline`/`campaign` run continues incrementally instead of
+//! re-deriving its windows from the TSDB.
+
+use super::detector::{
+    commit_at, evaluate_policy_run_scoped, evaluate_series, series_fingerprint, Detector, Finding,
+    Policy,
+};
+use crate::tsdb::{Db, Point, TAIL_SCAN_SLACK};
+use crate::util::json::Json;
+use std::collections::{BTreeMap, VecDeque};
+use std::path::Path;
+
+/// Canonical serialization of a detector's full policy configuration —
+/// the state's validity key. Any knob change (windows, thresholds,
+/// direction, grouping, policy order, policy count) changes the
+/// fingerprint and invalidates carried state.
+pub fn detector_fingerprint(det: &Detector) -> String {
+    use std::fmt::Write as _;
+    let mut s = format!("v1:{}", det.policies.len());
+    for p in &det.policies {
+        let _ = write!(
+            s,
+            ";{}|{}|{}|{:?}|{}|{}|{}|{}|{}|{}|{}|{}",
+            p.name,
+            p.measurement,
+            p.field,
+            p.group_by,
+            p.direction.name(),
+            p.baseline_window,
+            p.recent_window,
+            p.min_rel_change,
+            p.alpha,
+            p.min_confidence,
+            p.use_changepoint,
+            p.scan_full_history
+        );
+    }
+    s
+}
+
+/// The rolling horizon a policy evaluates (mirrors the detector).
+fn lookback_of(p: &Policy) -> usize {
+    (p.baseline_window + p.recent_window).max(2)
+}
+
+/// FNV-1a over a line — the watermark's cheap content check.
+fn fnv64(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Replicates `GroupedSeries::label()` for a state-derived group.
+fn group_label(group: &BTreeMap<String, String>) -> String {
+    if group.is_empty() {
+        return "all".to_string();
+    }
+    group
+        .iter()
+        .map(|(k, v)| format!("{k}={v}"))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// Per-measurement ingestion bookkeeping.
+#[derive(Debug, Clone, Default)]
+struct MeasState {
+    /// Distinct-timestamp counter; the value assigned to the newest
+    /// distinct timestamp. Differences of `seq` are ranks in the query
+    /// path's capped global reverse walk.
+    seq: u64,
+    /// Trailing distinct timestamps (capacity: the measurement's largest
+    /// policy lookback) — the unscoped `tail(n)` bound.
+    distinct: VecDeque<i64>,
+    /// Watermark: last ingested timestamp, how many points were ingested
+    /// at it, and the FNV hash of the last ingested line.
+    wm_ts: i64,
+    wm_n: usize,
+    wm_hash: u64,
+    /// `db.n_points(measurement)` at the end of the last sync — detects
+    /// out-of-order inserts landing below the watermark.
+    db_points: usize,
+}
+
+/// Per-policy rolling windows.
+#[derive(Debug, Clone, Default)]
+struct PolicyState {
+    /// Trailing `lookback` points per series, keyed exactly like the
+    /// query layer groups them: `(tag, value-or-"<none>")` pairs in
+    /// `group_by` order — iteration order therefore matches the query's
+    /// group order, which keeps findings and alert ids byte-identical.
+    series: BTreeMap<Vec<(String, String)>, VecDeque<(i64, f64)>>,
+    /// Repo-scoped bound trackers: per `repo` tag value, the trailing
+    /// `lookback` distinct timestamps carrying a matching point, with
+    /// the global distinct-ts `seq` at which each occurred (for the
+    /// `TAIL_SCAN_SLACK` cap arithmetic).
+    scoped: BTreeMap<String, VecDeque<(i64, u64)>>,
+}
+
+/// Incremental detection state carried across collects (see the module
+/// docs for the equivalence and invalidation contract).
+#[derive(Debug, Clone, Default)]
+pub struct DetectorState {
+    /// [`detector_fingerprint`] of the configuration this state is
+    /// valid for.
+    config: String,
+    measurements: BTreeMap<String, MeasState>,
+    /// Keyed by policy *index* (names need not be unique).
+    policies: BTreeMap<usize, PolicyState>,
+}
+
+impl DetectorState {
+    pub fn new() -> DetectorState {
+        DetectorState::default()
+    }
+
+    /// The configuration fingerprint this state was built under (empty
+    /// for a fresh state).
+    pub fn config_fingerprint(&self) -> &str {
+        &self.config
+    }
+
+    /// True when no measurement has been ingested yet.
+    pub fn is_empty(&self) -> bool {
+        self.measurements.is_empty()
+    }
+
+    /// Bring the state up to date with `db` under `det`'s configuration:
+    /// a config change clears and rebuilds (bounded), an intact state
+    /// ingests only the points appended since the last sync, and any
+    /// watermark inconsistency (replaced/rewound database, out-of-order
+    /// insert below the watermark) rebuilds the affected measurement.
+    pub fn sync(&mut self, det: &Detector, db: &Db) {
+        let fp = detector_fingerprint(det);
+        if fp != self.config {
+            self.config = fp;
+            self.measurements.clear();
+            self.policies.clear();
+        }
+        let mut by_meas: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+        for (i, p) in det.policies.iter().enumerate() {
+            // full-history policies always fall back to the query path —
+            // no state is kept for them
+            if !p.scan_full_history {
+                by_meas.entry(p.measurement.as_str()).or_default().push(i);
+            }
+        }
+        let work: Vec<(String, Vec<usize>)> = by_meas
+            .into_iter()
+            .map(|(m, v)| (m.to_string(), v))
+            .collect();
+        for (m, pol_idx) in work {
+            self.sync_measurement(det, db, &m, &pol_idx);
+        }
+    }
+
+    fn sync_measurement(&mut self, det: &Detector, db: &Db, m: &str, pol_idx: &[usize]) {
+        let distinct_cap = pol_idx
+            .iter()
+            .map(|&i| lookback_of(&det.policies[i]))
+            .max()
+            .unwrap_or(2);
+        let carried = matches!(self.measurements.get(m), Some(ms) if ms.seq > 0);
+        if !(carried && self.catch_up(det, db, m, pol_idx, distinct_cap)) {
+            self.rebuild_measurement(det, db, m, pol_idx, distinct_cap);
+        }
+    }
+
+    /// Ingest everything the database appended past the watermark.
+    /// Returns `false` (caller rebuilds) on any inconsistency.
+    fn catch_up(
+        &mut self,
+        det: &Detector,
+        db: &Db,
+        m: &str,
+        pol_idx: &[usize],
+        distinct_cap: usize,
+    ) -> bool {
+        let (wm_ts, wm_n, wm_hash, db_points) = {
+            let ms = self.measurements.get(m).expect("caller checked");
+            (ms.wm_ts, ms.wm_n, ms.wm_hash, ms.db_points)
+        };
+        let n_db = db.n_points(m);
+        if n_db < db_points {
+            return false; // database shrank behind the state
+        }
+        let mut skipped = 0usize;
+        let mut ingested = 0usize;
+        let mut last_ingested: Option<&Point> = None;
+        // the walk starts at the watermark timestamp: everything before
+        // it was ingested in earlier syncs; the first `wm_n` points at it
+        // too (insertion order within a timestamp is stable)
+        for p in db.points_in_range(m, Some(wm_ts), None) {
+            if skipped < wm_n {
+                if p.ts != wm_ts {
+                    return false; // fewer points at the watermark than recorded
+                }
+                skipped += 1;
+                if skipped == wm_n && fnv64(&p.to_line()) != wm_hash {
+                    return false; // content changed under the watermark
+                }
+                continue;
+            }
+            self.ingest_point(det, pol_idx, m, p, distinct_cap);
+            ingested += 1;
+            last_ingested = Some(p);
+        }
+        if skipped != wm_n {
+            return false;
+        }
+        if db_points + ingested != n_db {
+            return false; // a point landed below the watermark
+        }
+        let ms = self.measurements.get_mut(m).expect("present");
+        ms.db_points = n_db;
+        // the watermark hash is only ever read for the LAST ingested
+        // line, so it is computed once per sync, not per point
+        if let Some(p) = last_ingested {
+            ms.wm_hash = fnv64(&p.to_line());
+        }
+        true
+    }
+
+    /// Bounded cold rebuild: reverse-walk only the trailing
+    /// `max(lookback × TAIL_SCAN_SLACK)` distinct timestamps — anything
+    /// older is invisible to the bounded query path by construction — and
+    /// re-ingest forward from there. Never O(full history).
+    fn rebuild_measurement(
+        &mut self,
+        det: &Detector,
+        db: &Db,
+        m: &str,
+        pol_idx: &[usize],
+        distinct_cap: usize,
+    ) {
+        self.measurements.remove(m);
+        for i in pol_idx {
+            self.policies.remove(i);
+        }
+        let depth = pol_idx
+            .iter()
+            .map(|&i| lookback_of(&det.policies[i]).saturating_mul(TAIL_SCAN_SLACK))
+            .max()
+            .unwrap_or(0);
+        let mut n_dist = 0usize;
+        let mut last: Option<i64> = None;
+        let mut t_start: Option<i64> = None;
+        for p in db.points_iter(m).rev() {
+            if last != Some(p.ts) {
+                n_dist += 1;
+                last = Some(p.ts);
+                t_start = Some(p.ts);
+                if n_dist == depth {
+                    break;
+                }
+            }
+        }
+        let Some(t_start) = t_start else {
+            return; // empty measurement: no state, nothing evaluable
+        };
+        let mut last_ingested: Option<&Point> = None;
+        for p in db.points_in_range(m, Some(t_start), None) {
+            self.ingest_point(det, pol_idx, m, p, distinct_cap);
+            last_ingested = Some(p);
+        }
+        if let Some(ms) = self.measurements.get_mut(m) {
+            ms.db_points = db.n_points(m);
+            if let Some(p) = last_ingested {
+                ms.wm_hash = fnv64(&p.to_line());
+            }
+        }
+    }
+
+    fn ingest_point(
+        &mut self,
+        det: &Detector,
+        pol_idx: &[usize],
+        m: &str,
+        p: &Point,
+        distinct_cap: usize,
+    ) {
+        let seq = {
+            let ms = self.measurements.entry(m.to_string()).or_default();
+            if ms.seq == 0 || p.ts != ms.wm_ts {
+                ms.seq += 1;
+                ms.distinct.push_back(p.ts);
+                while ms.distinct.len() > distinct_cap {
+                    ms.distinct.pop_front();
+                }
+                ms.wm_ts = p.ts;
+                ms.wm_n = 0;
+            }
+            ms.wm_n += 1;
+            // NOTE: wm_hash is NOT updated here — the callers stamp the
+            // hash of the last ingested line once per walk (it is only
+            // ever compared against the final watermark point)
+            ms.seq
+        };
+        for &i in pol_idx {
+            let pol = &det.policies[i];
+            if !p.fields.contains_key(&pol.field) {
+                continue;
+            }
+            let lookback = lookback_of(pol);
+            let ps = self.policies.entry(i).or_default();
+            let key: Vec<(String, String)> = pol
+                .group_by
+                .iter()
+                .map(|t| {
+                    (
+                        t.clone(),
+                        p.tags.get(t).cloned().unwrap_or_else(|| "<none>".to_string()),
+                    )
+                })
+                .collect();
+            let buf = ps.series.entry(key).or_default();
+            buf.push_back((p.ts, p.fields[&pol.field]));
+            while buf.len() > lookback {
+                buf.pop_front();
+            }
+            if pol.group_by.iter().any(|g| g == "repo") {
+                if let Some(r) = p.tags.get("repo") {
+                    let dq = ps.scoped.entry(r.clone()).or_default();
+                    if dq.back().map(|&(ts, _)| ts != p.ts).unwrap_or(true) {
+                        dq.push_back((p.ts, seq));
+                        while dq.len() > lookback {
+                            dq.pop_front();
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Evaluate `measurement`'s policies from carried state — the
+    /// incremental equivalent of `Detector::detect_measurement_scoped`.
+    /// The caller must [`DetectorState::sync`] first; `db` is only read
+    /// for suspect-commit lookups and for the verbatim fallback paths
+    /// (full-history policies, scopes the state does not model).
+    pub fn detect_measurement_scoped(
+        &self,
+        det: &Detector,
+        db: &Db,
+        measurement: &str,
+        scope: &[(&str, &str)],
+    ) -> (Vec<Finding>, Vec<String>) {
+        let mut findings = Vec::new();
+        let mut evaluated = Vec::new();
+        for (i, pol) in det.policies.iter().enumerate() {
+            if pol.measurement != measurement {
+                continue;
+            }
+            // the query path applies only the scope tags the policy
+            // groups by — replicate that projection exactly
+            let applied: Vec<(&str, &str)> = scope
+                .iter()
+                .filter(|(k, _)| pol.group_by.iter().any(|g| g == k))
+                .copied()
+                .collect();
+            let supported = !pol.scan_full_history
+                && (applied.is_empty()
+                    || (applied.len() == 1 && applied[0].0 == "repo" && applied[0].1 != "<none>"));
+            if !supported {
+                let (f, e) = evaluate_policy_run_scoped(pol, db, scope);
+                findings.extend(f);
+                evaluated.extend(e);
+                continue;
+            }
+            let lookback = lookback_of(pol);
+            let Some(ms) = self.measurements.get(measurement) else {
+                continue; // nothing ingested: nothing evaluable
+            };
+            let Some(ps) = self.policies.get(&i) else {
+                continue;
+            };
+            let t0 = if applied.is_empty() {
+                unscoped_bound(ms, lookback)
+            } else {
+                scoped_bound(ps, ms, applied[0].1, lookback)
+            };
+            let Some(t0) = t0 else {
+                continue;
+            };
+            let repo_filter = applied.first().map(|&(_, v)| v);
+            for (key, buf) in &ps.series {
+                if let Some(r) = repo_filter {
+                    // a series whose repo group is "<none>" comes from
+                    // points without the tag — the query's where_tag
+                    // excludes those, and the "<none>" scope value itself
+                    // took the fallback above
+                    match key.iter().find(|(k, _)| k == "repo") {
+                        Some((_, v)) if v == r => {}
+                        _ => continue,
+                    }
+                }
+                let pts: Vec<(i64, f64)> =
+                    buf.iter().copied().filter(|&(ts, _)| ts >= t0).collect();
+                if pts.len() < 2 {
+                    continue;
+                }
+                let group: BTreeMap<String, String> = key.iter().cloned().collect();
+                let label = group_label(&group);
+                evaluated.push(series_fingerprint(&pol.name, &label));
+                if let Some(mut f) = evaluate_series(pol, &label, &group, &pts) {
+                    f.suspect_commit = commit_at(db, &pol.measurement, &group, f.change_ts);
+                    findings.push(f);
+                }
+            }
+        }
+        (findings, evaluated)
+    }
+
+    // --- persistence -------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut meas = Json::obj();
+        for (m, ms) in &self.measurements {
+            meas = meas.set(
+                m,
+                Json::obj()
+                    .set("seq", ms.seq.to_string())
+                    .set(
+                        "distinct",
+                        Json::Arr(ms.distinct.iter().map(|t| Json::Str(t.to_string())).collect()),
+                    )
+                    .set("wm_ts", ms.wm_ts.to_string())
+                    .set("wm_n", ms.wm_n)
+                    .set("wm_hash", ms.wm_hash.to_string())
+                    .set("db_points", ms.db_points),
+            );
+        }
+        let mut pols = Json::obj();
+        for (i, ps) in &self.policies {
+            let series: Vec<Json> = ps
+                .series
+                .iter()
+                .map(|(key, buf)| {
+                    Json::obj()
+                        .set(
+                            "key",
+                            Json::Arr(
+                                key.iter()
+                                    .map(|(k, v)| {
+                                        Json::Arr(vec![Json::Str(k.clone()), Json::Str(v.clone())])
+                                    })
+                                    .collect(),
+                            ),
+                        )
+                        .set(
+                            "points",
+                            Json::Arr(
+                                buf.iter()
+                                    .map(|&(ts, v)| {
+                                        Json::Arr(vec![Json::Str(ts.to_string()), Json::Num(v)])
+                                    })
+                                    .collect(),
+                            ),
+                        )
+                })
+                .collect();
+            let mut scoped = Json::obj();
+            for (r, dq) in &ps.scoped {
+                scoped = scoped.set(
+                    r,
+                    Json::Arr(
+                        dq.iter()
+                            .map(|&(ts, seq)| {
+                                Json::Arr(vec![Json::Str(ts.to_string()), Json::Str(seq.to_string())])
+                            })
+                            .collect(),
+                    ),
+                );
+            }
+            pols = pols.set(
+                &i.to_string(),
+                Json::obj().set("series", Json::Arr(series)).set("scoped", scoped),
+            );
+        }
+        Json::obj()
+            .set("version", 1)
+            .set("config", self.config.as_str())
+            .set("measurements", meas)
+            .set("policies", pols)
+    }
+
+    pub fn from_json(j: &Json) -> Result<DetectorState, String> {
+        let parse_i64 = |v: &Json, what: &str| -> Result<i64, String> {
+            v.as_str()
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| format!("detector state: bad {what}"))
+        };
+        let mut st = DetectorState {
+            config: j
+                .get("config")
+                .and_then(|v| v.as_str())
+                .unwrap_or_default()
+                .to_string(),
+            ..DetectorState::default()
+        };
+        if let Some(meas) = j.get("measurements").and_then(|v| v.as_obj()) {
+            for (m, e) in meas {
+                let mut ms = MeasState {
+                    seq: e
+                        .get("seq")
+                        .and_then(|v| v.as_str())
+                        .and_then(|s| s.parse().ok())
+                        .ok_or("detector state: bad seq")?,
+                    wm_ts: parse_i64(e.get("wm_ts").unwrap_or(&Json::Null), "wm_ts")?,
+                    wm_n: e.get("wm_n").and_then(|v| v.as_f64()).unwrap_or(0.0) as usize,
+                    wm_hash: e
+                        .get("wm_hash")
+                        .and_then(|v| v.as_str())
+                        .and_then(|s| s.parse().ok())
+                        .unwrap_or(0),
+                    db_points: e.get("db_points").and_then(|v| v.as_f64()).unwrap_or(0.0) as usize,
+                    ..MeasState::default()
+                };
+                for t in e.get("distinct").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+                    ms.distinct.push_back(parse_i64(t, "distinct ts")?);
+                }
+                st.measurements.insert(m.clone(), ms);
+            }
+        }
+        if let Some(pols) = j.get("policies").and_then(|v| v.as_obj()) {
+            for (i, e) in pols {
+                let idx: usize = i
+                    .parse()
+                    .map_err(|_| format!("detector state: bad policy index `{i}`"))?;
+                let mut ps = PolicyState::default();
+                for s in e.get("series").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+                    let mut key = Vec::new();
+                    for kv in s.get("key").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+                        let pair = kv.as_arr().unwrap_or(&[]);
+                        match (pair.first().and_then(|v| v.as_str()), pair.get(1).and_then(|v| v.as_str())) {
+                            (Some(k), Some(v)) => key.push((k.to_string(), v.to_string())),
+                            _ => return Err("detector state: bad series key".into()),
+                        }
+                    }
+                    let mut buf = VecDeque::new();
+                    for pt in s.get("points").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+                        let pair = pt.as_arr().unwrap_or(&[]);
+                        let ts = parse_i64(pair.first().unwrap_or(&Json::Null), "series ts")?;
+                        let v = pair
+                            .get(1)
+                            .and_then(|v| v.as_f64())
+                            .ok_or("detector state: bad series value")?;
+                        buf.push_back((ts, v));
+                    }
+                    ps.series.insert(key, buf);
+                }
+                if let Some(sc) = e.get("scoped").and_then(|v| v.as_obj()) {
+                    for (r, arr) in sc {
+                        let mut dq = VecDeque::new();
+                        for pt in arr.as_arr().unwrap_or(&[]) {
+                            let pair = pt.as_arr().unwrap_or(&[]);
+                            let ts = parse_i64(pair.first().unwrap_or(&Json::Null), "scoped ts")?;
+                            let seq: u64 = pair
+                                .get(1)
+                                .and_then(|v| v.as_str())
+                                .and_then(|s| s.parse().ok())
+                                .ok_or("detector state: bad scoped seq")?;
+                            dq.push_back((ts, seq));
+                        }
+                        ps.scoped.insert(r.clone(), dq);
+                    }
+                }
+                st.policies.insert(idx, ps);
+            }
+        }
+        Ok(st)
+    }
+
+    /// Persist as pretty JSON (convention: next to the alert book).
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+    }
+
+    /// Load a previously saved state; a missing file is a fresh state
+    /// (the first sync then does a bounded rebuild). A state whose
+    /// configuration or watermarks no longer match is not an error —
+    /// sync detects and rebuilds.
+    pub fn load(path: &Path) -> std::io::Result<DetectorState> {
+        if !path.exists() {
+            return Ok(DetectorState::new());
+        }
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+        DetectorState::from_json(&j)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))
+    }
+}
+
+/// The unscoped `tail(n)` bound: trailing `lookback`-th distinct
+/// timestamp of the measurement, or the earliest tracked one when fewer
+/// exist (`Db::tail_start_ts` semantics).
+fn unscoped_bound(ms: &MeasState, lookback: usize) -> Option<i64> {
+    if ms.distinct.is_empty() {
+        return None;
+    }
+    if ms.distinct.len() >= lookback {
+        Some(ms.distinct[ms.distinct.len() - lookback])
+    } else {
+        ms.distinct.front().copied()
+    }
+}
+
+/// The repo-scoped bound: trailing `lookback`-th distinct *matching*
+/// timestamp, visiting only matches whose rank in the global distinct-ts
+/// walk is within `lookback × TAIL_SCAN_SLACK` — the query path's capped
+/// reverse walk, computed from the carried seq numbers instead of a scan.
+fn scoped_bound(ps: &PolicyState, ms: &MeasState, repo: &str, lookback: usize) -> Option<i64> {
+    let dq = ps.scoped.get(repo)?;
+    let cap = lookback.saturating_mul(TAIL_SCAN_SLACK) as u64;
+    let mut distinct = 0usize;
+    let mut last: Option<i64> = None;
+    for &(ts, seq) in dq.iter().rev() {
+        // rank 1 = the measurement's newest distinct timestamp
+        if ms.seq - seq + 1 > cap {
+            break;
+        }
+        distinct += 1;
+        last = Some(ts);
+        if distinct == lookback {
+            break;
+        }
+    }
+    last
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::regress::detector::Direction;
+    use crate::tsdb::Point;
+
+    fn db_with(points: &[(&str, i64, &str, f64)]) -> Db {
+        // (measurement, ts, repo, value)
+        let mut db = Db::new();
+        for (m, ts, repo, v) in points {
+            let mut p = Point::new(m, *ts).field("v", *v);
+            if !repo.is_empty() {
+                p = p.tag("repo", repo);
+            }
+            db.insert(p);
+        }
+        db
+    }
+
+    fn det() -> Detector {
+        Detector::new().policy(
+            Policy::new("p", "m", "v")
+                .group_by(&["repo"])
+                .direction(Direction::HigherIsBetter)
+                .windows(4, 1)
+                .thresholds(0.08, 1.0, 0.0)
+                .changepoint(false),
+        )
+    }
+
+    fn dump(f: &[Finding]) -> Vec<String> {
+        f.iter()
+            .map(|f| {
+                format!(
+                    "{}|{}|{}|{}|{}|{:?}|{:?}|{:?}|{}|{:?}|{}",
+                    f.policy,
+                    f.series,
+                    f.baseline.mean,
+                    f.current,
+                    f.rel_change,
+                    f.p_welch,
+                    f.p_mann_whitney,
+                    f.p_z,
+                    f.change_ts,
+                    f.suspect_commit,
+                    f.confidence
+                )
+            })
+            .collect()
+    }
+
+    fn assert_equivalent(det: &Detector, st: &DetectorState, db: &Db, scope: &[(&str, &str)]) {
+        let (f_inc, e_inc) = st.detect_measurement_scoped(det, db, "m", scope);
+        let (f_req, e_req) = det.detect_measurement_scoped(db, "m", scope);
+        assert_eq!(e_inc, e_req, "evaluated fingerprints differ");
+        assert_eq!(dump(&f_inc), dump(&f_req), "findings differ");
+    }
+
+    #[test]
+    fn incremental_matches_requery_on_simple_series() {
+        let det = det();
+        let mut db = Db::new();
+        let mut st = DetectorState::new();
+        for (i, v) in [1000.0, 1001.0, 999.0, 1000.0, 800.0].iter().enumerate() {
+            db.insert(
+                Point::new("m", (i as i64 + 1) * 1_000_000_000)
+                    .tag("repo", "a")
+                    .field("v", *v),
+            );
+            st.sync(&det, &db);
+            assert_equivalent(&det, &st, &db, &[("repo", "a")]);
+            assert_equivalent(&det, &st, &db, &[]);
+        }
+        // the drop is found incrementally
+        let (f, _) = st.detect_measurement_scoped(&det, &db, "m", &[("repo", "a")]);
+        assert_eq!(f.len(), 1);
+        assert!((f[0].rel_change + 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn config_change_invalidates_and_rebuilds() {
+        let d1 = det();
+        let mut db = Db::new();
+        let mut st = DetectorState::new();
+        for i in 0..6i64 {
+            db.insert(Point::new("m", i * 10).tag("repo", "a").field("v", 1000.0));
+        }
+        st.sync(&d1, &db);
+        let fp1 = st.config_fingerprint().to_string();
+        assert!(!st.is_empty());
+        // a knob change rebuilds under the new fingerprint...
+        let mut d2 = det();
+        d2.policies[0].baseline_window = 2;
+        st.sync(&d2, &db);
+        assert_ne!(st.config_fingerprint(), fp1);
+        assert_equivalent(&d2, &st, &db, &[("repo", "a")]);
+        // ...and switching back rebuilds again, still equivalent
+        st.sync(&d1, &db);
+        assert_eq!(st.config_fingerprint(), fp1);
+        assert_equivalent(&d1, &st, &db, &[("repo", "a")]);
+    }
+
+    #[test]
+    fn replaced_db_is_detected_via_watermark() {
+        let det = det();
+        let mut st = DetectorState::new();
+        let db1 = db_with(&[("m", 10, "a", 1.0), ("m", 20, "a", 2.0)]);
+        st.sync(&det, &db1);
+        // a different database with the same shape (content differs)
+        let db2 = db_with(&[("m", 10, "a", 5.0), ("m", 20, "a", 6.0)]);
+        st.sync(&det, &db2);
+        assert_equivalent(&det, &st, &db2, &[("repo", "a")]);
+        // and a shorter database (rewound history)
+        let db3 = db_with(&[("m", 10, "a", 5.0)]);
+        st.sync(&det, &db3);
+        assert_equivalent(&det, &st, &db3, &[("repo", "a")]);
+    }
+
+    #[test]
+    fn out_of_order_insert_below_watermark_triggers_rebuild() {
+        let det = det();
+        let mut db = Db::new();
+        let mut st = DetectorState::new();
+        for i in 1..=5i64 {
+            db.insert(Point::new("m", i * 10).tag("repo", "a").field("v", i as f64));
+        }
+        st.sync(&det, &db);
+        // a late import lands *below* the watermark
+        db.insert(Point::new("m", 15).tag("repo", "a").field("v", 99.0));
+        st.sync(&det, &db);
+        assert_equivalent(&det, &st, &db, &[("repo", "a")]);
+    }
+
+    #[test]
+    fn stale_tenant_outside_cap_matches_query_semantics() {
+        let det = det();
+        let lookback = 5; // windows(4,1)
+        let cap = lookback * TAIL_SCAN_SLACK;
+        let mut db = Db::new();
+        let mut st = DetectorState::new();
+        db.insert(Point::new("m", 0).tag("repo", "old").field("v", 1.0));
+        db.insert(Point::new("m", 1).tag("repo", "old").field("v", 1.0));
+        for ts in 2..(cap as i64 + 10) {
+            db.insert(Point::new("m", ts).tag("repo", "live").field("v", ts as f64));
+        }
+        st.sync(&det, &db);
+        assert_equivalent(&det, &st, &db, &[("repo", "old")]);
+        assert_equivalent(&det, &st, &db, &[("repo", "live")]);
+        let (_, evaluated) = st.detect_measurement_scoped(&det, &db, "m", &[("repo", "old")]);
+        assert!(evaluated.is_empty(), "tenant beyond the capped walk is stale");
+    }
+
+    #[test]
+    fn state_json_roundtrip_preserves_equivalence() {
+        let det = det();
+        let mut db = Db::new();
+        let mut st = DetectorState::new();
+        for i in 1..=7i64 {
+            for r in ["a", "b"] {
+                db.insert(
+                    Point::new("m", i * 10 + (r == "b") as i64)
+                        .tag("repo", r)
+                        .field("v", 100.0 + i as f64),
+                );
+            }
+        }
+        st.sync(&det, &db);
+        let path = std::env::temp_dir().join("cbench_detector_state_test.json");
+        st.save(&path).unwrap();
+        let back = DetectorState::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.config_fingerprint(), st.config_fingerprint());
+        assert_equivalent(&det, &back, &db, &[("repo", "a")]);
+        assert_equivalent(&det, &back, &db, &[("repo", "b")]);
+        // a reloaded state keeps syncing incrementally
+        let mut back = back;
+        db.insert(Point::new("m", 100).tag("repo", "a").field("v", 50.0));
+        back.sync(&det, &db);
+        assert_equivalent(&det, &back, &db, &[("repo", "a")]);
+    }
+
+    #[test]
+    fn full_history_policies_fall_back_verbatim() {
+        let det = Detector::new().policy(
+            Policy::new("legacy", "m", "v")
+                .group_by(&["repo"])
+                .windows(1, 1)
+                .thresholds(0.1, 1.0, 0.0)
+                .changepoint(false)
+                .full_history(true),
+        );
+        let db = db_with(&[
+            ("m", 1, "a", 1000.0),
+            ("m", 2, "b", 500.0),
+            ("m", 3, "a", 800.0),
+            ("m", 4, "b", 505.0),
+        ]);
+        let mut st = DetectorState::new();
+        st.sync(&det, &db);
+        assert!(st.is_empty(), "full-history policies keep no state");
+        assert_equivalent(&det, &st, &db, &[]);
+        assert_equivalent(&det, &st, &db, &[("repo", "a")]);
+    }
+}

@@ -54,14 +54,71 @@
 //! collect), so inserts arrive in nearly trigger-time order and hit the
 //! append fast path of the newest shard; late/out-of-order points are
 //! routed to their partition by binary search.
+//!
+//! # Persistence: the manifest layout
+//!
+//! Since the shard-aware-persistence work a [`Db`] persists as a
+//! **directory**, not a single line-protocol file:
+//!
+//! ```text
+//! cbench_tsdb.lp/
+//!   manifest.json      shard index: per measurement, per shard the
+//!                      partition key, backing file, point count,
+//!                      min/max-ts index and compaction state
+//!   lbm-k0.lp          one line-protocol file per shard
+//!   lbm-k1.lp
+//!   campaign-k0.lp
+//! ```
+//!
+//! Two contracts fall out of the layout, both on the "don't redo old
+//! work" axis the whole system is built around:
+//!
+//! * **Loads parse the manifest eagerly but shard bodies lazily.**
+//!   [`Db::load`] materializes only the index; a shard's points are
+//!   parsed the first time a query actually reaches into it
+//!   ([`Shard::points`]). The range/tail pushdowns select shards by the
+//!   manifest's min/max-ts index, so a detector-style trailing-window
+//!   query over a multi-year compacted history parses the newest
+//!   shard(s) only — cold-load cost is flat in history depth (the
+//!   `bench_regress` PERSIST_JSON section pins it). The shard span is
+//!   the materialization granularity: a query touching one point pays
+//!   for that point's whole shard, never for its neighbours.
+//! * **Saves rewrite only mutated shards.** Every shard carries a dirty
+//!   flag ([`Shard::is_dirty`]); [`Db::save`] onto the directory the
+//!   store was loaded from (its *home*) rewrites dirty shards plus the
+//!   manifest and leaves everything else untouched on disk
+//!   ([`PersistReport`] counts both). Appending one pipeline to a
+//!   multi-year store costs one shard file + the manifest.
+//!
+//! All writes are **atomic around the manifest rename**: rewritten
+//! shards land in *fresh* file names (never over a file the committed
+//! manifest references), shard files and the manifest go through a
+//! `.tmp` sibling + rename with the manifest renamed last, superseded
+//! files are dropped only after that commit, and the in-memory
+//! dirty/home bookkeeping is updated only on success — a crash at any
+//! instant leaves the previous manifest pointing at intact files, a
+//! failed save leaves the store retryable, and stray `.tmp` leftovers
+//! are ignored and cleaned on the next load.
+//!
+//! Legacy single-file stores (the pre-manifest `cbench_tsdb.lp` format)
+//! are still read transparently: [`Db::load`] on a file parses it whole
+//! (compacted shards re-detected via the [`ROLLUP_TAG`] marker), leaves
+//! the file untouched, and the first [`Db::save`] migrates the layout to
+//! a manifest directory in place — the original file is parked as a
+//! `.legacy.bak` sibling until the migration commits (and loads recover
+//! from it if a crash strands a half-built directory). [`Db::export_lp`]
+//! writes the legacy single-file format back out (stable dump order —
+//! CI uses it to assert byte-identical reloads).
 
 pub mod query;
 
-pub use query::{Aggregate, GroupedSeries, Query};
+pub use query::{Aggregate, GroupedSeries, Query, TAIL_SCAN_SLACK};
 
-use std::collections::BTreeMap;
+use crate::util::json::Json;
+use std::cell::OnceCell;
+use std::collections::{BTreeMap, BTreeSet};
 use std::io::Write;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 /// Default shard span: 4096 simulated seconds. Campaign trigger clocks
 /// advance 1 s per pipeline, so a shard holds ~4096 pipeline triggers.
@@ -69,6 +126,12 @@ pub const DEFAULT_SHARD_SPAN_NS: i64 = 4096 * 1_000_000_000;
 
 /// Marker tag carried by compaction rollup summaries (`rollup=mean`).
 pub const ROLLUP_TAG: &str = "rollup";
+
+/// Index file of the manifest persistence layout (see the module docs).
+pub const MANIFEST_FILE: &str = "manifest.json";
+
+/// On-disk manifest schema version.
+const MANIFEST_VERSION: i64 = 1;
 
 /// One data point.
 #[derive(Debug, Clone, PartialEq)]
@@ -209,43 +272,150 @@ impl Point {
 }
 
 /// One time partition of a measurement: the points with
-/// `ts ∈ [key·span, (key+1)·span)`, kept time-sorted. The first/last
-/// timestamps of the sorted storage are the shard's min/max-ts index.
+/// `ts ∈ [key·span, (key+1)·span)`, kept time-sorted. The min/max-ts
+/// index and point count live in shard *metadata* (carried by the
+/// manifest), so a shard loaded from a manifest directory answers every
+/// index question without its body in memory — the points are parsed
+/// lazily on first access ([`Shard::points`]).
 #[derive(Debug, Clone)]
 pub struct Shard {
     /// Partition index: this shard covers `[key·span, (key+1)·span)`.
     key: i64,
-    points: Vec<Point>,
     /// Raw points replaced by rollup summaries (see [`Db::compact`]).
     compacted: bool,
+    /// Mutated since the last save into the bound manifest directory —
+    /// the next [`Db::save`] must rewrite this shard's file.
+    dirty: bool,
+    /// Point count (authoritative; body may be unloaded).
+    n: usize,
+    /// Min/max-ts index (valid when `n > 0`).
+    min_ts: i64,
+    max_ts: i64,
+    /// Backing file in the manifest layout; `None` for in-memory shards.
+    file: Option<PathBuf>,
+    /// Lazily materialized body. Pre-set for in-memory shards, parsed
+    /// from `file` on first access for manifest-loaded ones.
+    body: OnceCell<Vec<Point>>,
 }
 
 impl Shard {
+    /// A fresh, mutable, unbacked shard (the insert path).
+    fn in_memory(key: i64) -> Shard {
+        let body = OnceCell::new();
+        let _ = body.set(Vec::new());
+        Shard {
+            key,
+            compacted: false,
+            dirty: true,
+            n: 0,
+            min_ts: 0,
+            max_ts: 0,
+            file: None,
+            body,
+        }
+    }
+
     pub fn key(&self) -> i64 {
         self.key
     }
-    pub fn points(&self) -> &[Point] {
-        &self.points
-    }
     pub fn len(&self) -> usize {
-        self.points.len()
+        self.n
     }
     pub fn is_empty(&self) -> bool {
-        self.points.is_empty()
+        self.n == 0
     }
     /// Oldest timestamp in the shard (the min side of the index).
     pub fn min_ts(&self) -> Option<i64> {
-        self.points.first().map(|p| p.ts)
+        (self.n > 0).then_some(self.min_ts)
     }
     /// Newest timestamp in the shard (the max side of the index).
     pub fn max_ts(&self) -> Option<i64> {
-        self.points.last().map(|p| p.ts)
+        (self.n > 0).then_some(self.max_ts)
     }
     /// True once this shard holds rollup summaries instead of raw points
-    /// (set by [`Db::compact`], re-detected on reload via [`ROLLUP_TAG`]).
+    /// (set by [`Db::compact`], recorded in the manifest, re-detected via
+    /// [`ROLLUP_TAG`] on legacy single-file loads).
     pub fn is_compacted(&self) -> bool {
         self.compacted
     }
+    /// True when this shard must be rewritten by the next [`Db::save`].
+    pub fn is_dirty(&self) -> bool {
+        self.dirty
+    }
+    /// True once the body is materialized in memory. Manifest loads start
+    /// with metadata only — queries that never reach into this shard
+    /// never pay for parsing it.
+    pub fn is_loaded(&self) -> bool {
+        self.body.get().is_some()
+    }
+    /// Backing file name within the manifest directory, once bound.
+    pub fn file_name(&self) -> Option<&str> {
+        self.file
+            .as_deref()
+            .and_then(|p| p.file_name())
+            .and_then(|n| n.to_str())
+    }
+
+    /// The shard body, materialized on first access. Panics if the
+    /// backing file vanished or was modified behind the manifest — the
+    /// manifest is authoritative for a bound store; rebuild via
+    /// [`Db::export_lp`] + reload if a store was edited by hand.
+    pub fn points(&self) -> &[Point] {
+        self.body.get_or_init(|| {
+            let path = self
+                .file
+                .as_deref()
+                .expect("unloaded shard always has a backing file");
+            read_shard_file(path, self.n)
+        })
+    }
+
+    /// Mutable body access (materializes first).
+    fn body_mut(&mut self) -> &mut Vec<Point> {
+        self.points();
+        self.body.get_mut().expect("body just materialized")
+    }
+
+    /// Replace the body wholesale (compaction), refreshing the meta index
+    /// and marking the shard for rewrite.
+    fn set_points(&mut self, pts: Vec<Point>) {
+        self.n = pts.len();
+        self.min_ts = pts.first().map(|p| p.ts).unwrap_or(0);
+        self.max_ts = pts.last().map(|p| p.ts).unwrap_or(0);
+        let _ = self.body.take();
+        let _ = self.body.set(pts);
+        self.dirty = true;
+    }
+}
+
+/// Parse one shard file, enforcing the manifest's point count.
+fn read_shard_file(path: &Path, expect: usize) -> Vec<Point> {
+    let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+        panic!(
+            "tsdb: cannot materialize shard {}: {e} (store directory modified behind the manifest?)",
+            path.display()
+        )
+    });
+    let mut pts = Vec::with_capacity(expect);
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        match Point::parse_line(line) {
+            Ok(p) => pts.push(p),
+            Err(e) => panic!("tsdb: corrupt shard {}: {e}", path.display()),
+        }
+    }
+    if pts.len() != expect {
+        panic!(
+            "tsdb: shard {} holds {} points but the manifest says {expect} — \
+             the store was modified behind the manifest",
+            path.display(),
+            pts.len()
+        );
+    }
+    pts
 }
 
 /// Outcome of one [`Db::compact`] pass.
@@ -260,12 +430,25 @@ pub struct CompactionReport {
     pub points_after: usize,
 }
 
+/// Outcome of one [`Db::save_report`]: how many shard files were
+/// rewritten vs kept on disk untouched — the dirty-shard contract.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PersistReport {
+    pub shards_written: usize,
+    pub shards_kept: usize,
+}
+
 /// The storage engine: time-partitioned shards per measurement (see the
-/// module docs for the layout and the compaction/retention model).
+/// module docs for the layout, the compaction/retention model and the
+/// manifest persistence contract).
 #[derive(Debug)]
 pub struct Db {
     measurements: BTreeMap<String, Vec<Shard>>,
     shard_span_ns: i64,
+    /// Manifest directory this store is bound to (set by load/save).
+    /// Saves onto the home rewrite only dirty shards; saving elsewhere
+    /// copies everything and rebinds.
+    home: Option<PathBuf>,
 }
 
 impl Default for Db {
@@ -286,6 +469,7 @@ impl Db {
         Db {
             measurements: BTreeMap::new(),
             shard_span_ns: span_ns.max(1),
+            home: None,
         }
     }
 
@@ -310,27 +494,38 @@ impl Db {
     pub fn insert(&mut self, p: Point) {
         let key = p.ts.div_euclid(self.shard_span_ns);
         let raw = !p.tags.contains_key(ROLLUP_TAG);
+        let ts = p.ts;
         let shards = self.measurements.entry(p.measurement.clone()).or_default();
         let si = match shards.binary_search_by(|s| s.key.cmp(&key)) {
             Ok(i) => i,
             Err(i) => {
-                shards.insert(
-                    i,
-                    Shard { key, points: Vec::new(), compacted: false },
-                );
+                shards.insert(i, Shard::in_memory(key));
                 i
             }
         };
+        let s = &mut shards[si];
         if raw {
-            shards[si].compacted = false;
+            s.compacted = false;
         }
-        let v = &mut shards[si].points;
-        if v.last().map(|l| l.ts <= p.ts).unwrap_or(true) {
-            v.push(p);
+        {
+            // a late insert into a cold shard materializes just that shard
+            let v = s.body_mut();
+            if v.last().map(|l| l.ts <= ts).unwrap_or(true) {
+                v.push(p);
+            } else {
+                let idx = v.partition_point(|q| q.ts <= ts);
+                v.insert(idx, p);
+            }
+        }
+        s.n += 1;
+        if s.n == 1 {
+            s.min_ts = ts;
+            s.max_ts = ts;
         } else {
-            let idx = v.partition_point(|q| q.ts <= p.ts);
-            v.insert(idx, p);
+            s.min_ts = s.min_ts.min(ts);
+            s.max_ts = s.max_ts.max(ts);
         }
+        s.dirty = true;
     }
 
     /// Ingest a batch of line-protocol text (the pipeline's upload step).
@@ -354,31 +549,44 @@ impl Db {
     pub fn len(&self) -> usize {
         self.measurements
             .values()
-            .map(|shards| shards.iter().map(|s| s.points.len()).sum::<usize>())
+            .map(|shards| shards.iter().map(|s| s.n).sum::<usize>())
             .sum()
     }
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// Number of points of one measurement (across all its shards).
+    /// Number of points of one measurement (across all its shards) —
+    /// answered from shard metadata, no bodies are materialized.
     pub fn n_points(&self, measurement: &str) -> usize {
-        self.shards(measurement).iter().map(|s| s.points.len()).sum()
+        self.shards(measurement).iter().map(|s| s.n).sum()
     }
 
-    /// All points of `measurement` in time order, streamed shard by shard.
-    /// Double-ended: `.rev()` walks newest-first without touching old
+    /// Newest timestamp across every measurement, from shard metadata
+    /// (no bodies are materialized) — the "now" for trigger clocks and
+    /// the compaction watermark.
+    pub fn newest_ts(&self) -> Option<i64> {
+        self.measurements
+            .values()
+            .filter_map(|shards| shards.last().and_then(|s| s.max_ts()))
+            .max()
+    }
+
+    /// All points of `measurement` in time order, streamed shard by shard
+    /// — shard bodies materialize as the walk reaches them. Double-ended:
+    /// `.rev()` walks newest-first without touching (or parsing) old
     /// shards until reached (the bound scans behind `tail(n)` rely on it).
     pub fn points_iter<'a>(
         &'a self,
         measurement: &str,
     ) -> impl DoubleEndedIterator<Item = &'a Point> + 'a {
-        self.shards(measurement).iter().flat_map(|s| s.points.iter())
+        self.shards(measurement).iter().flat_map(|s| s.points().iter())
     }
 
-    /// The newest point of `measurement` (last point of the last shard).
+    /// The newest point of `measurement` (last point of the last shard —
+    /// materializes that shard).
     pub fn last_point(&self, measurement: &str) -> Option<&Point> {
-        self.shards(measurement).last().and_then(|s| s.points.last())
+        self.shards(measurement).last().and_then(|s| s.points().last())
     }
 
     /// Points of `measurement` within the inclusive `[t_min, t_max]`
@@ -400,7 +608,7 @@ impl Db {
             .map(|t1| shards.partition_point(|s| s.min_ts().map(|m| m <= t1).unwrap_or(false)))
             .unwrap_or(shards.len());
         shards[lo..hi.max(lo)].iter().flat_map(move |s| {
-            let pts = &s.points;
+            let pts = s.points();
             let a = t_min.map(|t| pts.partition_point(|p| p.ts < t)).unwrap_or(0);
             let b = t_max
                 .map(|t| pts.partition_point(|p| p.ts <= t))
@@ -463,26 +671,25 @@ impl Db {
             points_before: self.len(),
             ..CompactionReport::default()
         };
-        let newest = self
-            .measurements
-            .values()
-            .filter_map(|shards| shards.last().and_then(|s| s.max_ts()))
-            .max();
-        let Some(newest) = newest else {
+        let Some(newest) = self.newest_ts() else {
             return rep;
         };
         let watermark = newest.saturating_sub(retain_raw_ns.max(0));
         for shards in self.measurements.values_mut() {
             for s in shards.iter_mut() {
                 rep.shards_seen += 1;
-                if s.compacted || s.points.is_empty() {
+                // the compacted flag and the min/max-ts index live in
+                // shard metadata — shards that are already rolled up or
+                // inside the retained raw window are skipped without
+                // materializing their bodies
+                if s.compacted || s.n == 0 {
                     continue;
                 }
-                if s.max_ts().unwrap_or(i64::MAX) >= watermark {
+                if s.max_ts >= watermark {
                     continue; // overlaps the retained raw window
                 }
-                if s.points.iter().all(|p| p.tags.contains_key(ROLLUP_TAG)) {
-                    s.compacted = true; // reloaded pre-compacted shard
+                if s.points().iter().all(|p| p.tags.contains_key(ROLLUP_TAG)) {
+                    s.compacted = true; // pre-compacted legacy-file shard
                     continue;
                 }
                 // one rollup per series — keyed by the tags WITHOUT the
@@ -492,7 +699,7 @@ impl Db {
                 // weighs 1, a rollup weighs its stored `rollup_n`.
                 type Acc = (i64, BTreeMap<String, (f64, f64)>, f64);
                 let mut groups: BTreeMap<BTreeMap<String, String>, Acc> = BTreeMap::new();
-                for p in &s.points {
+                for p in s.points() {
                     let is_rollup = p.tags.contains_key(ROLLUP_TAG);
                     let w = if is_rollup {
                         p.fields.get("rollup_n").copied().unwrap_or(1.0).max(1.0)
@@ -515,7 +722,7 @@ impl Db {
                         f.1 += w;
                     }
                 }
-                let measurement = s.points[0].measurement.clone();
+                let measurement = s.points()[0].measurement.clone();
                 let mut summaries: Vec<Point> = groups
                     .into_iter()
                     .map(|(mut tags, (ts, fields, n))| {
@@ -530,7 +737,7 @@ impl Db {
                     .collect();
                 // deterministic order: time-sorted, BTreeMap tie order
                 summaries.sort_by_key(|p| p.ts);
-                s.points = summaries;
+                s.set_points(summaries);
                 s.compacted = true;
                 rep.shards_compacted += 1;
             }
@@ -539,32 +746,369 @@ impl Db {
         rep
     }
 
-    /// Persist as line protocol (shards stream out in time order).
-    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+    /// Persist as a manifest directory (see the module docs): one
+    /// line-protocol file per shard plus `manifest.json`. Saving onto the
+    /// directory the store was loaded from rewrites only dirty shards; a
+    /// legacy single-file store at `path` is replaced by the directory
+    /// layout on this first save (the old file is kept as a
+    /// `.legacy.bak` sibling until the migration committed).
+    ///
+    /// The save is **crash-atomic around the manifest rename**: rewritten
+    /// shards go to *fresh* file names (never over a file the current
+    /// manifest references), the manifest is renamed into place last, and
+    /// only then are the superseded files removed and the in-memory
+    /// dirty/file bookkeeping updated — a crash at any earlier instant
+    /// leaves the previous manifest pointing at intact files, and a
+    /// failed save leaves this store's state unchanged so a retry
+    /// rewrites everything it must.
+    pub fn save(&mut self, path: &Path) -> std::io::Result<()> {
+        self.save_report(path).map(|_| ())
+    }
+
+    /// [`Db::save`] returning the written/kept shard split.
+    pub fn save_report(&mut self, path: &Path) -> std::io::Result<PersistReport> {
+        // legacy single-file store: move it aside (atomic rename) instead
+        // of deleting it — the history's only on-disk copy must survive
+        // until the manifest layout has fully committed. The `.bak` is
+        // removed after the manifest rename; `Db::load` knows to fall
+        // back to it if a crash strands a half-built directory.
+        if path.is_file() {
+            std::fs::rename(path, &legacy_bak_path(path))?;
+        }
+        std::fs::create_dir_all(path)?;
+        let bound = self.home.as_deref() == Some(path);
+
+        // --- plan phase (no mutation, no I/O): decide which shards keep
+        // their file and which get a FRESH name. On a bound store every
+        // live file name is reserved, so a rewrite can never land on a
+        // file the committed manifest still references.
+        let mut used: BTreeSet<String> = BTreeSet::new();
+        if bound {
+            for shards in self.measurements.values() {
+                for s in shards {
+                    if let Some(n) = s.file_name() {
+                        used.insert(n.to_string());
+                    }
+                }
+            }
+        }
+        let mut rep = PersistReport::default();
+        // (measurement, shard key) -> manifest file name
+        let mut names: BTreeMap<(String, i64), String> = BTreeMap::new();
+        // shards that need their file written: (measurement, key, name)
+        let mut writes: Vec<(String, i64, String)> = Vec::new();
+        for (m, shards) in &self.measurements {
+            for s in shards {
+                if bound && !s.dirty && s.file_name().is_some() {
+                    names.insert((m.clone(), s.key), s.file_name().unwrap().to_string());
+                    rep.shards_kept += 1;
+                    continue;
+                }
+                let name = match s.file_name() {
+                    Some(n) if !used.contains(n) => n.to_string(),
+                    _ => alloc_shard_name(m, s.key, &used),
+                };
+                used.insert(name.clone());
+                names.insert((m.clone(), s.key), name.clone());
+                writes.push((m.clone(), s.key, name));
+                rep.shards_written += 1;
+            }
+        }
+
+        // --- write phase: shard files via .tmp + rename, manifest last.
+        // Nothing in-memory has been touched yet — an Err return leaves
+        // the store exactly as it was (still dirty, still bound to the
+        // old home), so a retried save rewrites everything it must.
+        for (m, key, name) in &writes {
+            let shards = &self.measurements[m];
+            let i = shards
+                .binary_search_by(|s| s.key.cmp(key))
+                .expect("planned shard exists");
+            write_shard_file(&path.join(name), shards[i].points())?;
+        }
+        let tmp = path.join(format!("{MANIFEST_FILE}.tmp"));
+        std::fs::write(&tmp, self.manifest_json(&names).to_string_pretty())?;
+        std::fs::rename(&tmp, path.join(MANIFEST_FILE))?;
+
+        // --- commit phase: the manifest is on disk; now update the
+        // in-memory bookkeeping and drop superseded files.
+        for (m, key, name) in writes {
+            let shards = self.measurements.get_mut(&m).expect("exists");
+            let i = shards
+                .binary_search_by(|s| s.key.cmp(&key))
+                .expect("exists");
+            shards[i].file = Some(path.join(&name));
+            shards[i].dirty = false;
+        }
+        let referenced: BTreeSet<&str> = names.values().map(|s| s.as_str()).collect();
+        if let Ok(rd) = std::fs::read_dir(path) {
+            for e in rd.flatten() {
+                let name = e.file_name().to_string_lossy().to_string();
+                let stray_tmp = name.ends_with(".tmp");
+                // inside a bound store the manifest is authoritative:
+                // files it no longer references (superseded rewrites,
+                // orphans) are dropped. An unbound target directory may
+                // hold foreign files — those are left alone.
+                let orphan = bound && name.ends_with(".lp") && !referenced.contains(name.as_str());
+                if stray_tmp || orphan {
+                    std::fs::remove_file(e.path()).ok();
+                }
+            }
+        }
+        // the manifest committed: any parked legacy original — from this
+        // save's migration or a crashed earlier one — is superseded
+        std::fs::remove_file(legacy_bak_path(path)).ok();
+        self.home = Some(path.to_path_buf());
+        Ok(rep)
+    }
+
+    fn manifest_json(&self, names: &BTreeMap<(String, i64), String>) -> Json {
+        let mut meas = Json::obj();
+        for (m, shards) in &self.measurements {
+            let arr: Vec<Json> = shards
+                .iter()
+                .map(|s| {
+                    let file = names
+                        .get(&(m.clone(), s.key))
+                        .map(|n| n.as_str())
+                        .expect("every shard was planned a file name");
+                    Json::obj()
+                        .set("key", s.key)
+                        .set("file", file)
+                        .set("points", s.n)
+                        // timestamps as strings: i64 round-trips exactly,
+                        // beyond f64's 2^53 integer range
+                        .set("min_ts", s.min_ts.to_string())
+                        .set("max_ts", s.max_ts.to_string())
+                        .set("compacted", s.compacted)
+                })
+                .collect();
+            meas = meas.set(m, Json::Arr(arr));
+        }
+        Json::obj()
+            .set("version", MANIFEST_VERSION)
+            .set("shard_span_ns", self.shard_span_ns.to_string())
+            .set("points", self.len())
+            .set("measurements", meas)
+    }
+
+    /// Load a store: a manifest directory loads its index eagerly and
+    /// shard bodies lazily; a legacy single-file store is parsed whole
+    /// (and migrates to the manifest layout on the first save). A
+    /// directory without a manifest is an error — unless a `.legacy.bak`
+    /// sibling exists (a migration crashed mid-way), in which case the
+    /// preserved legacy file is loaded instead.
+    pub fn load(path: &Path) -> std::io::Result<Db> {
+        Db::load_impl(path, None)
+    }
+
+    /// Load with a custom shard span (`cbench tsdb --shard-span`). A
+    /// manifest store whose recorded span differs is **re-partitioned**,
+    /// which materializes every shard — re-sharding is a full-copy
+    /// operation by nature; matching spans stay lazy.
+    pub fn load_with_shard_span(path: &Path, span_ns: i64) -> std::io::Result<Db> {
+        Db::load_impl(path, Some(span_ns))
+    }
+
+    fn load_impl(path: &Path, span_ns: Option<i64>) -> std::io::Result<Db> {
+        if path.join(MANIFEST_FILE).is_file() {
+            let db = Db::load_manifest_dir(path)?;
+            return Ok(match span_ns {
+                Some(span) if db.shard_span_ns != span.max(1) => db.reshard(span),
+                _ => db,
+            });
+        }
+        let legacy_span = span_ns.unwrap_or(DEFAULT_SHARD_SPAN_NS);
+        if path.is_dir() {
+            // a crash between the legacy-file rename-aside and the
+            // manifest commit leaves a half-built directory plus the
+            // preserved original — recover from the original
+            let bak = legacy_bak_path(path);
+            if bak.is_file() {
+                return Db::load_legacy_file(&bak, legacy_span);
+            }
+            return Err(invalid_data(format!(
+                "{} is a directory without a {MANIFEST_FILE}",
+                path.display()
+            )));
+        }
+        Db::load_legacy_file(path, legacy_span)
+    }
+
+    fn load_legacy_file(path: &Path, span_ns: i64) -> std::io::Result<Db> {
+        let text = std::fs::read_to_string(path)?;
+        let mut db = Db::with_shard_span(span_ns);
+        db.ingest_lines(&text)
+            .map_err(|e| invalid_data(e))?;
+        // compaction state survives the legacy format via the marker tag
+        for shards in db.measurements.values_mut() {
+            for s in shards.iter_mut() {
+                if s.n > 0 && s.points().iter().all(|p| p.tags.contains_key(ROLLUP_TAG)) {
+                    s.compacted = true;
+                }
+            }
+        }
+        // home stays None: the first save migrates to the manifest layout
+        Ok(db)
+    }
+
+    fn load_manifest_dir(dir: &Path) -> std::io::Result<Db> {
+        let text = std::fs::read_to_string(dir.join(MANIFEST_FILE))?;
+        let j = Json::parse(&text).map_err(|e| invalid_data(format!("bad manifest: {e}")))?;
+        let version = j.get("version").and_then(|v| v.as_f64()).unwrap_or(0.0) as i64;
+        if version != MANIFEST_VERSION {
+            return Err(invalid_data(format!(
+                "unsupported tsdb manifest version {version} (this build reads {MANIFEST_VERSION})"
+            )));
+        }
+        let span = j
+            .get("shard_span_ns")
+            .and_then(|v| v.as_str())
+            .and_then(|s| s.parse::<i64>().ok())
+            .ok_or_else(|| invalid_data("manifest missing shard_span_ns"))?;
+        let mut db = Db::with_shard_span(span);
+        if let Some(meas) = j.get("measurements").and_then(|v| v.as_obj()) {
+            for (m, arr) in meas {
+                let mut shards: Vec<Shard> = Vec::new();
+                for e in arr.as_arr().unwrap_or(&[]) {
+                    let key = e
+                        .get("key")
+                        .and_then(|v| v.as_f64())
+                        .ok_or_else(|| invalid_data("manifest shard missing key"))?
+                        as i64;
+                    let file = e
+                        .get("file")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| invalid_data("manifest shard missing file"))?;
+                    let n = e.get("points").and_then(|v| v.as_f64()).unwrap_or(0.0) as usize;
+                    let min_ts = manifest_ts(e, "min_ts")?;
+                    let max_ts = manifest_ts(e, "max_ts")?;
+                    let compacted = e.get("compacted").and_then(|v| v.as_bool()).unwrap_or(false);
+                    let path = dir.join(file);
+                    if !path.is_file() {
+                        return Err(invalid_data(format!(
+                            "manifest references missing shard file {file}"
+                        )));
+                    }
+                    shards.push(Shard {
+                        key,
+                        compacted,
+                        dirty: false,
+                        n,
+                        min_ts,
+                        max_ts,
+                        file: Some(path),
+                        body: OnceCell::new(),
+                    });
+                }
+                shards.sort_by_key(|s| s.key);
+                db.measurements.insert(m.clone(), shards);
+            }
+        }
+        // a crash between the shard and manifest renames can strand .tmp
+        // siblings; nothing references them — clean them up
+        if let Ok(rd) = std::fs::read_dir(dir) {
+            for e in rd.flatten() {
+                if e.file_name().to_string_lossy().ends_with(".tmp") {
+                    std::fs::remove_file(e.path()).ok();
+                }
+            }
+        }
+        db.home = Some(dir.to_path_buf());
+        Ok(db)
+    }
+
+    /// Re-partition into a fresh store with a different span. The result
+    /// is unbound (`home` cleared): its first save is a full rewrite.
+    fn reshard(self, span_ns: i64) -> Db {
+        let mut out = Db::with_shard_span(span_ns);
+        for shards in self.measurements.values() {
+            for s in shards {
+                for p in s.points() {
+                    out.insert(p.clone());
+                }
+            }
+        }
+        out
+    }
+
+    /// Write the whole store as one legacy line-protocol file — the
+    /// pre-manifest format, measurements in name order, shards in time
+    /// order. The inverse of the legacy auto-migration, and the stable
+    /// dump CI diffs to assert byte-identical reloads.
+    pub fn export_lp(&self, path: &Path) -> std::io::Result<()> {
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
         for shards in self.measurements.values() {
             for s in shards {
-                for p in &s.points {
+                for p in s.points() {
                     writeln!(f, "{}", p.to_line())?;
                 }
             }
         }
         Ok(())
     }
+}
 
-    /// Load from a line-protocol file (default shard span).
-    pub fn load(path: &Path) -> std::io::Result<Db> {
-        Db::load_with_shard_span(path, DEFAULT_SHARD_SPAN_NS)
-    }
+fn invalid_data(msg: impl Into<String>) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg.into())
+}
 
-    /// Load with a custom shard span (`cbench tsdb compact --shard-span`).
-    pub fn load_with_shard_span(path: &Path, span_ns: i64) -> std::io::Result<Db> {
-        let text = std::fs::read_to_string(path)?;
-        let mut db = Db::with_shard_span(span_ns);
-        db.ingest_lines(&text)
-            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
-        Ok(db)
+/// Sibling path a legacy single-file store is parked at while its
+/// first manifest save commits (`cbench_tsdb.lp` →
+/// `cbench_tsdb.lp.legacy.bak`).
+fn legacy_bak_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".legacy.bak");
+    PathBuf::from(os)
+}
+
+fn manifest_ts(e: &Json, key: &str) -> std::io::Result<i64> {
+    e.get(key)
+        .and_then(|v| v.as_str())
+        .and_then(|s| s.parse::<i64>().ok())
+        .ok_or_else(|| invalid_data(format!("manifest shard missing {key}")))
+}
+
+/// Shard file names are manifest-internal: derived from the measurement
+/// for readability, uniqued within the directory, and resolved only
+/// through the manifest on load.
+fn alloc_shard_name(measurement: &str, key: i64, used: &BTreeSet<String>) -> String {
+    let sanitized: String = measurement
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || matches!(c, '_' | '-' | '.') { c } else { '_' })
+        .collect();
+    let base = if sanitized.is_empty() {
+        format!("m-k{key}")
+    } else {
+        format!("{sanitized}-k{key}")
+    };
+    let cand = format!("{base}.lp");
+    if !used.contains(&cand) {
+        return cand;
     }
+    let mut i = 2usize;
+    loop {
+        let cand = format!("{base}-{i}.lp");
+        if !used.contains(&cand) {
+            return cand;
+        }
+        i += 1;
+    }
+}
+
+/// Atomic shard write: `.tmp` sibling + rename.
+fn write_shard_file(path: &Path, points: &[Point]) -> std::io::Result<()> {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    let tmp = PathBuf::from(os);
+    {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+        for p in points {
+            writeln!(f, "{}", p.to_line())?;
+        }
+        f.into_inner().map_err(|e| e.into_error())?;
+    }
+    std::fs::rename(&tmp, path)
 }
 
 #[cfg(test)]
@@ -834,8 +1378,14 @@ lbm,node=rome1,op=srt mlups=400 3
         db.compact(5);
         let dump_before: Vec<String> = db.points_iter("m").map(|p| p.to_line()).collect();
         let path = std::env::temp_dir().join("cbench_tsdb_compact_roundtrip.lp");
+        let _ = std::fs::remove_dir_all(&path);
         db.save(&path).unwrap();
-        let mut back = Db::load_with_shard_span(&path, 10).unwrap();
+        // the manifest records the store's own span: a plain load keeps it
+        let mut back = Db::load(&path).unwrap();
+        assert_eq!(back.shard_span(), 10);
+        // the compacted flag comes from the manifest, before any body load
+        assert!(back.shards("m")[0].is_compacted());
+        assert!(!back.shards("m")[0].is_loaded());
         let dump_after: Vec<String> = back.points_iter("m").map(|p| p.to_line()).collect();
         assert_eq!(dump_before, dump_after);
         // reloaded rollup shards are recognized and not re-compacted
@@ -843,7 +1393,7 @@ lbm,node=rome1,op=srt mlups=400 3
         assert_eq!(rep.shards_compacted, 0);
         assert_eq!(rep.points_after, rep.points_before);
         assert!(back.shards("m")[0].is_compacted());
-        std::fs::remove_file(&path).ok();
+        std::fs::remove_dir_all(&path).ok();
     }
 
     #[test]
@@ -889,10 +1439,284 @@ lbm,node=rome1,op=srt mlups=400 3
         db.insert(sample());
         db.insert(Point::new("lbm", 7).tag("op", "srt").field("mlups", 900.0));
         let path = std::env::temp_dir().join("cbench_tsdb_test.lp");
+        let _ = std::fs::remove_dir_all(&path);
+        db.save(&path).unwrap();
+        assert!(path.join(MANIFEST_FILE).is_file(), "manifest layout");
+        let back = Db::load(&path).unwrap();
+        // the index answers without materializing anything
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.n_points("lbm"), 1);
+        assert!(back.shards("lbm").iter().all(|s| !s.is_loaded()));
+        assert_eq!(back.points_iter("fe2ti").next().unwrap(), &sample());
+        std::fs::remove_dir_all(&path).ok();
+    }
+
+    /// Unique temp dir per test: tests run concurrently.
+    fn tmp_store(name: &str) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!("cbench_tsdb_{name}"));
+        let _ = std::fs::remove_dir_all(&p);
+        let _ = std::fs::remove_file(&p);
+        p
+    }
+
+    fn deep_db(span: i64, n: i64) -> Db {
+        let mut db = Db::with_shard_span(span);
+        for ts in 0..n {
+            for s in ["a", "b"] {
+                db.insert(Point::new("m", ts).tag("s", s).field("v", ts as f64));
+            }
+        }
+        db
+    }
+
+    #[test]
+    fn manifest_load_is_lazy_and_queries_materialize_only_touched_shards() {
+        let mut db = deep_db(10, 100); // 10 shards
+        let path = tmp_store("lazy");
         db.save(&path).unwrap();
         let back = Db::load(&path).unwrap();
-        assert_eq!(back.len(), 2);
-        assert_eq!(back.points_iter("fe2ti").next().unwrap(), &sample());
-        std::fs::remove_file(&path).ok();
+        assert_eq!(back.shards("m").len(), 10);
+        assert!(back.shards("m").iter().all(|s| !s.is_loaded()), "load parses no bodies");
+        // meta answers without materialization
+        assert_eq!(back.len(), 200);
+        assert_eq!(back.newest_ts(), Some(99));
+        assert_eq!(back.shards("m")[3].min_ts(), Some(30));
+        assert!(back.shards("m").iter().all(|s| !s.is_loaded()));
+        // a mid-history range query touches exactly the overlapping shards
+        let hits: Vec<i64> = back.points_in_range("m", Some(42), Some(57)).map(|p| p.ts).collect();
+        assert_eq!(hits.len(), 2 * 16);
+        let loaded: Vec<i64> = back
+            .shards("m")
+            .iter()
+            .filter(|s| s.is_loaded())
+            .map(|s| s.key())
+            .collect();
+        assert_eq!(loaded, vec![4, 5], "only the window's shards were parsed");
+        // a tail walk parses from the newest shard backwards only
+        assert_eq!(back.tail_start_ts("m", 3), Some(97));
+        assert!(back.shards("m")[9].is_loaded());
+        assert!(!back.shards("m")[0].is_loaded(), "cold history stays cold");
+    }
+
+    #[test]
+    fn incremental_save_rewrites_only_dirty_shards() {
+        let mut db = deep_db(10, 50); // 5 shards
+        let path = tmp_store("dirty");
+        let rep = db.save_report(&path).unwrap();
+        assert_eq!(rep, PersistReport { shards_written: 5, shards_kept: 0 });
+        // a no-op save keeps every shard in place
+        let rep = db.save_report(&path).unwrap();
+        assert_eq!(rep, PersistReport { shards_written: 0, shards_kept: 5 });
+
+        // prove the skip is real: delete a cold shard's backing file —
+        // an incremental save must not need (or recreate) it
+        let cold = db.shards("m")[1].file_name().unwrap().to_string();
+        std::fs::remove_file(path.join(&cold)).unwrap();
+        db.insert(Point::new("m", 49).tag("s", "late").field("v", 1.0)); // newest shard only
+        let rep = db.save_report(&path).unwrap();
+        assert_eq!(rep, PersistReport { shards_written: 1, shards_kept: 4 });
+        assert!(!path.join(&cold).exists(), "cold shard was never rewritten");
+
+        // the same save through a reloaded handle is also incremental
+        std::fs::remove_dir_all(&path).ok();
+        let mut db = deep_db(10, 50);
+        db.save(&path).unwrap();
+        let mut back = Db::load(&path).unwrap();
+        back.insert(Point::new("m", 5).tag("s", "late").field("v", 2.0)); // reopen shard 0
+        let rep = back.save_report(&path).unwrap();
+        assert_eq!(rep, PersistReport { shards_written: 1, shards_kept: 4 });
+        // saving a loaded store to a DIFFERENT directory copies everything
+        let copy = tmp_store("dirty_copy");
+        let rep = back.save_report(&copy).unwrap();
+        assert_eq!(rep.shards_written, 5);
+        // ...and rebinds: the copy is now the incremental home
+        let rep = back.save_report(&copy).unwrap();
+        assert_eq!(rep, PersistReport { shards_written: 0, shards_kept: 5 });
+        std::fs::remove_dir_all(&path).ok();
+        std::fs::remove_dir_all(&copy).ok();
+    }
+
+    #[test]
+    fn legacy_single_file_migrates_on_first_save_and_roundtrips() {
+        // write the pre-manifest format by hand
+        let mut db = deep_db(10, 30);
+        db.compact(4); // shards [0,10) and [10,20) roll up
+        let legacy = tmp_store("legacy");
+        db.export_lp(&legacy).unwrap();
+        assert!(legacy.is_file());
+        let legacy_bytes = std::fs::read_to_string(&legacy).unwrap();
+
+        // loading the legacy file parses it whole and leaves it untouched
+        let mut back = Db::load(&legacy).unwrap();
+        assert!(legacy.is_file(), "old file untouched until first save");
+        assert!(back.shards("m")[0].is_compacted(), "rollup marker re-detected");
+        let dump: Vec<String> = back.points_iter("m").map(|p| p.to_line()).collect();
+
+        // the first save migrates the layout in place: file -> directory
+        back.save(&legacy).unwrap();
+        assert!(legacy.is_dir());
+        assert!(legacy.join(MANIFEST_FILE).is_file());
+        let again = Db::load(&legacy).unwrap();
+        assert!(again.shards("m")[0].is_compacted());
+        let dump2: Vec<String> = again.points_iter("m").map(|p| p.to_line()).collect();
+        assert_eq!(dump, dump2, "migration preserves contents byte-identically");
+        // export brings back the exact legacy bytes (stable dump order)
+        let exported = tmp_store("legacy_export");
+        again.export_lp(&exported).unwrap();
+        assert_eq!(std::fs::read_to_string(&exported).unwrap(), legacy_bytes);
+        // idempotent: an unchanged reloaded store saves zero shards
+        let mut again = again;
+        let rep = again.save_report(&legacy).unwrap();
+        assert_eq!(rep.shards_written, 0);
+        std::fs::remove_dir_all(&legacy).ok();
+        std::fs::remove_file(&exported).ok();
+    }
+
+    #[test]
+    fn stray_tmp_files_are_ignored_and_cleaned_on_load() {
+        let mut db = deep_db(10, 20);
+        let path = tmp_store("straytmp");
+        db.save(&path).unwrap();
+        // a crash between renames leaves .tmp siblings behind
+        std::fs::write(path.join("m-k0.lp.tmp"), "garbage that must not be parsed").unwrap();
+        std::fs::write(path.join(format!("{MANIFEST_FILE}.tmp")), "{half a manifest").unwrap();
+        let back = Db::load(&path).unwrap();
+        assert_eq!(back.len(), 40, "load ignores stray .tmp files");
+        assert!(!path.join("m-k0.lp.tmp").exists(), "stray shard tmp cleaned");
+        assert!(!path.join(format!("{MANIFEST_FILE}.tmp")).exists(), "stray manifest tmp cleaned");
+        // foreign .lp files in a bound store are dropped by the next save
+        // (the manifest is authoritative)
+        std::fs::write(path.join("orphan.lp"), "m v=1 1\n").unwrap();
+        let mut back = back;
+        back.insert(Point::new("m", 19).field("v", 9.0));
+        back.save(&path).unwrap();
+        assert!(!path.join("orphan.lp").exists());
+        std::fs::remove_dir_all(&path).ok();
+    }
+
+    #[test]
+    fn load_with_differing_span_repartitions() {
+        let mut db = deep_db(10, 40);
+        let path = tmp_store("respan");
+        db.save(&path).unwrap();
+        // matching span: lazy, same layout
+        let lazy = Db::load_with_shard_span(&path, 10).unwrap();
+        assert_eq!(lazy.shards("m").len(), 4);
+        assert!(lazy.shards("m").iter().all(|s| !s.is_loaded()));
+        // differing span: repartitioned (a full-copy operation)
+        let wide = Db::load_with_shard_span(&path, 20).unwrap();
+        assert_eq!(wide.shards("m").len(), 2);
+        let a: Vec<String> = lazy.points_iter("m").map(|p| p.to_line()).collect();
+        let b: Vec<String> = wide.points_iter("m").map(|p| p.to_line()).collect();
+        assert_eq!(a, b, "re-sharding preserves contents and order");
+        std::fs::remove_dir_all(&path).ok();
+    }
+
+    #[test]
+    fn manifest_roundtrips_negative_shard_keys_and_odd_measurement_names() {
+        let mut db = Db::with_shard_span(10);
+        db.insert(Point::new("m x,y=z", -25).tag("t", "v").field("f", 1.5));
+        db.insert(Point::new("m x,y=z", 7).field("f", 2.5));
+        let path = tmp_store("oddnames");
+        db.save(&path).unwrap();
+        let back = Db::load(&path).unwrap();
+        let keys: Vec<i64> = back.shards("m x,y=z").iter().map(|s| s.key()).collect();
+        assert_eq!(keys, vec![-3, 0]);
+        assert_eq!(back.shards("m x,y=z")[0].min_ts(), Some(-25));
+        let pts: Vec<i64> = back.points_iter("m x,y=z").map(|p| p.ts).collect();
+        assert_eq!(pts, vec![-25, 7]);
+        std::fs::remove_dir_all(&path).ok();
+    }
+
+    #[test]
+    fn load_rejects_missing_shard_file_and_bad_manifest() {
+        let mut db = deep_db(10, 20);
+        let path = tmp_store("missing");
+        db.save(&path).unwrap();
+        let victim = db.shards("m")[0].file_name().unwrap().to_string();
+        std::fs::remove_file(path.join(&victim)).unwrap();
+        assert!(Db::load(&path).is_err(), "missing shard file fails the load eagerly");
+        std::fs::write(path.join(MANIFEST_FILE), "not json").unwrap();
+        assert!(Db::load(&path).is_err());
+        // a directory without a manifest is not silently treated as empty
+        let empty = tmp_store("nomanifest");
+        std::fs::create_dir_all(&empty).unwrap();
+        assert!(Db::load(&empty).is_err());
+        std::fs::remove_dir_all(&path).ok();
+        std::fs::remove_dir_all(&empty).ok();
+    }
+
+    #[test]
+    fn rewritten_shards_get_fresh_names_so_the_old_manifest_stays_valid() {
+        // crash-atomicity: an incremental rewrite must never overwrite a
+        // file the committed manifest references — the new content goes
+        // to a fresh name, and the superseded file is dropped only after
+        // the manifest rename
+        let mut db = deep_db(10, 30);
+        let path = tmp_store("freshnames");
+        db.save(&path).unwrap();
+        let old_name = db.shards("m")[2].file_name().unwrap().to_string();
+        db.insert(Point::new("m", 25).tag("s", "late").field("v", 1.0));
+        let rep = db.save_report(&path).unwrap();
+        assert_eq!(rep.shards_written, 1);
+        let new_name = db.shards("m")[2].file_name().unwrap().to_string();
+        assert_ne!(old_name, new_name, "rewrite must not reuse the live file name");
+        assert!(!path.join(&old_name).exists(), "superseded file dropped post-commit");
+        assert!(path.join(&new_name).is_file());
+        // the reloaded store agrees with memory
+        let back = Db::load(&path).unwrap();
+        assert_eq!(back.n_points("m"), 61);
+        std::fs::remove_dir_all(&path).ok();
+    }
+
+    #[test]
+    fn crashed_legacy_migration_recovers_from_the_bak_sibling() {
+        // simulate a crash after the legacy file was parked aside but
+        // before the manifest committed: a half-built directory plus the
+        // .legacy.bak sibling. Loads must fall back to the preserved file.
+        let mut db = deep_db(10, 20);
+        let legacy = tmp_store("migrecover");
+        db.export_lp(&legacy).unwrap();
+        let bak = {
+            let mut os = legacy.as_os_str().to_os_string();
+            os.push(".legacy.bak");
+            std::path::PathBuf::from(os)
+        };
+        let _ = std::fs::remove_file(&bak);
+        std::fs::rename(&legacy, &bak).unwrap();
+        std::fs::create_dir_all(&legacy).unwrap(); // half-built, no manifest
+        let mut back = Db::load(&legacy).unwrap();
+        assert_eq!(back.len(), 40, "recovered from the .legacy.bak sibling");
+        // a successful save completes the migration and clears the bak
+        std::fs::remove_dir_all(&legacy).unwrap();
+        back.save(&legacy).unwrap();
+        assert!(legacy.join(MANIFEST_FILE).is_file());
+        assert!(!bak.exists(), "bak removed once the migration committed");
+        std::fs::remove_dir_all(&legacy).ok();
+    }
+
+    #[test]
+    fn late_insert_into_cold_shard_materializes_and_dirties_only_it() {
+        let mut db = deep_db(10, 50);
+        let path = tmp_store("lateinsert");
+        db.save(&path).unwrap();
+        let mut back = Db::load(&path).unwrap();
+        back.insert(Point::new("m", 12).tag("s", "late").field("v", 0.5));
+        let loaded: Vec<i64> = back
+            .shards("m")
+            .iter()
+            .filter(|s| s.is_loaded())
+            .map(|s| s.key())
+            .collect();
+        assert_eq!(loaded, vec![1], "only the target shard materialized");
+        let dirty: Vec<i64> = back
+            .shards("m")
+            .iter()
+            .filter(|s| s.is_dirty())
+            .map(|s| s.key())
+            .collect();
+        assert_eq!(dirty, vec![1]);
+        assert_eq!(back.n_points("m"), 101);
+        std::fs::remove_dir_all(&path).ok();
     }
 }

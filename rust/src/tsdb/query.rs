@@ -10,8 +10,10 @@ use std::collections::BTreeMap;
 /// may visit per requested window slot (`n × TAIL_SCAN_SLACK` total).
 /// Generous enough for 32 co-tenant repositories to interleave triggers
 /// at full window depth, while keeping the worst case (filter matches
-/// nothing) bounded instead of O(full history).
-const TAIL_SCAN_SLACK: usize = 32;
+/// nothing) bounded instead of O(full history). Public because the
+/// incremental detector state (`regress::state`) replicates the exact
+/// cap semantics to stay byte-equivalent with this query path.
+pub const TAIL_SCAN_SLACK: usize = 32;
 
 /// Aggregation over a field within a group.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -160,7 +162,10 @@ impl Query {
     /// the per-shard min/max-ts index ([`Db::points_in_range`]) / the
     /// trailing distinct timestamps ([`Db::tail_start_ts`], streamed
     /// newest-shard-first) instead of materializing the full series —
-    /// shards outside the window are never touched.
+    /// shards outside the window are never touched. On a manifest-loaded
+    /// store "never touched" includes never *parsed*: shard bodies
+    /// materialize lazily, so a bounded query against a multi-year
+    /// on-disk history reads only the shard files it reaches into.
     pub fn run(&self, db: &Db) -> Vec<GroupedSeries> {
         let mut groups: BTreeMap<Vec<(String, String)>, GroupedSeries> = BTreeMap::new();
         {

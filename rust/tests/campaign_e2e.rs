@@ -357,6 +357,112 @@ fn streaming_campaign_replays_byte_identical() {
 }
 
 #[test]
+fn incremental_detection_equals_requery_across_streaming_campaign() {
+    // the tentpole equivalence, end to end: the same streaming campaign
+    // run with incremental (state-carried) detection and with the full
+    // tail re-query must produce the identical timeline, TSDB and —
+    // crucially — the byte-identical alert book (ids, fingerprints,
+    // opened/resolved timestamps, SLA stamps)
+    let run = |incremental: bool| {
+        let mut cb = CbSystem::new();
+        let mut projects = vec![
+            CampaignProject::new("nhr-walberla", ProjectKind::Walberla),
+            CampaignProject::new("proxy-walberla", ProjectKind::Walberla),
+        ];
+        let out = run_campaign_with(
+            &mut cb,
+            &mut projects,
+            &CampaignConfig {
+                pushes: 4,
+                inject_at: 3,
+                penalty: 0.15,
+                seed: 5,
+                incremental,
+                ..CampaignConfig::default()
+            },
+            icx36_walberla_jobs,
+        )
+        .unwrap();
+        (out, cb)
+    };
+    let (out_inc, cb_inc) = run(true);
+    let (out_req, cb_req) = run(false);
+    assert!(cb_inc.incremental_detection() && !cb_req.incremental_detection());
+    assert_eq!(cb_inc.scheduler.timeline(), cb_req.scheduler.timeline());
+    let dump = |cb: &CbSystem| cb.db.points_iter("lbm").map(|p| p.to_line()).collect::<Vec<_>>();
+    assert_eq!(dump(&cb_inc), dump(&cb_req));
+    assert!(out_inc.alerts_opened() > 0, "planted regression must open alerts");
+    assert_eq!(
+        cb_inc.alerts.to_json().to_string_pretty(),
+        cb_req.alerts.to_json().to_string_pretty(),
+        "alert books must be byte-identical across detection modes"
+    );
+    // per-pipeline ingest summaries agree report by report
+    let sums = |o: &cbench::coordinator::campaign::CampaignOutcome| {
+        o.reports.iter().map(|r| r.regressions.clone()).collect::<Vec<_>>()
+    };
+    assert_eq!(sums(&out_inc), sums(&out_req));
+}
+
+#[test]
+fn campaign_resumes_from_manifest_store_with_carried_detector_state() {
+    // run 1 persists the manifest store + detector state; two fresh
+    // systems resume it — one continuing incrementally from the carried
+    // state, one re-querying — run the same follow-up campaign, and must
+    // agree on the final alert book byte for byte. The closing save then
+    // proves the dirty-shard contract: shards the follow-up never
+    // touched stay on disk as-is.
+    let dir = std::env::temp_dir().join("cbench_campaign_resume");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let store = dir.join("tsdb");
+    let state = dir.join("state.json");
+
+    let mut cb = CbSystem::new();
+    let mut projects = vec![CampaignProject::new("walberla-0", ProjectKind::Walberla)];
+    let cfg1 = CampaignConfig { pushes: 2, penalty: 0.0, seed: 21, ..CampaignConfig::default() };
+    run_campaign_with(&mut cb, &mut projects, &cfg1, icx36_walberla_jobs).unwrap();
+    cb.db.save(&store).unwrap();
+    // re-partition finely (2 s shards) so the follow-up appends into new
+    // shards instead of rewriting one giant partition
+    let mut fine = cbench::tsdb::Db::load_with_shard_span(&store, 2_000_000_000).unwrap();
+    fine.save(&store).unwrap();
+    cb.det_state.save(&state).unwrap();
+
+    let resume = |incremental: bool| {
+        let mut cb = CbSystem::new();
+        cb.adopt_db(cbench::tsdb::Db::load(&store).unwrap());
+        cb.det_state = cbench::regress::DetectorState::load(&state).unwrap();
+        cb.set_incremental_detection(incremental);
+        let mut projects = vec![CampaignProject::new("walberla-0", ProjectKind::Walberla)];
+        let cfg2 = CampaignConfig {
+            pushes: 3,
+            inject_at: 2,
+            penalty: 0.15,
+            seed: 22,
+            incremental,
+            ..CampaignConfig::default()
+        };
+        let out = run_campaign_with(&mut cb, &mut projects, &cfg2, icx36_walberla_jobs).unwrap();
+        (out, cb)
+    };
+    let (out_inc, cb_inc) = resume(true);
+    let (_, cb_req) = resume(false);
+    assert!(out_inc.alerts_opened() > 0, "follow-up regression found on resumed history");
+    assert_eq!(
+        cb_inc.alerts.to_json().to_string_pretty(),
+        cb_req.alerts.to_json().to_string_pretty(),
+        "carried state and re-query agree on the resumed run's alerts"
+    );
+    // closing incremental save: cold shards kept, only touched ones written
+    let mut cb_inc = cb_inc;
+    let rep = cb_inc.db.save_report(&store).unwrap();
+    assert!(rep.shards_written >= 1, "{rep:?}");
+    assert!(rep.shards_kept >= 1, "cold shards must stay untouched: {rep:?}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn campaign_bisect_rebuilds_chains_and_finds_injected_commit() {
     // close the ROADMAP gap end to end: a campaign plants a regression,
     // the alert names the campaign repository, and a *rebuilt* campaign

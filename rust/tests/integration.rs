@@ -94,13 +94,17 @@ fn tsdb_roundtrip_preserves_dashboard() {
     cb.execute_pipeline(&ev, true, jobs, "lbm").unwrap();
 
     let path = std::env::temp_dir().join("cbench_integration_tsdb.lp");
+    let _ = std::fs::remove_dir_all(&path);
     cb.db.save(&path).unwrap();
+    // the store persists as a manifest directory; the reload is lazy
+    // (the dashboard render below materializes what it queries)
+    assert!(path.join("manifest.json").is_file());
     let reloaded = Db::load(&path).unwrap();
-    std::fs::remove_file(&path).ok();
 
     let dash = walberla_dashboard();
     assert_eq!(dash.render_text(&cb.db), dash.render_text(&reloaded));
     assert_eq!(cb.db.len(), reloaded.len());
+    std::fs::remove_dir_all(&path).ok();
 }
 
 /// The BLAS-fix story through the full stack: two commits, queryable drop.

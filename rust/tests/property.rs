@@ -691,6 +691,137 @@ fn prop_sharded_queries_match_single_shard_linear_scan() {
     }
 }
 
+// ---------------------------------------------------------------------
+// regress::state — incremental detection ≡ full tail re-query
+// ---------------------------------------------------------------------
+
+fn dump_findings(f: &[cbench::regress::Finding]) -> Vec<String> {
+    f.iter()
+        .map(|f| {
+            format!(
+                "{}|{}|{}|{}|{}|{}|{:?}|{:?}|{:?}|{}|{:?}|{}",
+                f.policy,
+                f.series,
+                f.baseline.mean,
+                f.baseline.sd,
+                f.current,
+                f.rel_change,
+                f.p_welch,
+                f.p_mann_whitney,
+                f.p_z,
+                f.change_ts,
+                f.suspect_commit,
+                f.confidence
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn prop_incremental_detector_state_matches_full_requery_across_campaigns() {
+    // randomized multi-repo "campaigns": repositories upload at
+    // interleaved trigger timestamps, some skip rounds (staleness paths),
+    // one round collects under tuned regress.* config (state
+    // invalidation + rebuild), one round plants a real drop, fieldless
+    // points advance the global distinct-timestamp walk, and the state is
+    // saved/reloaded mid-sequence. After EVERY collect the incremental
+    // path must equal the full tail re-query byte for byte — findings,
+    // evaluated-series fingerprints, and the alert books each feeds.
+    use cbench::coordinator::{detector_with_config, BenchConfig};
+    use cbench::regress::{AlertBook, DetectorState};
+    let stock = Detector::with_default_policies();
+    for seed in 0..12u64 {
+        let mut rng = Rng::new(9000 + seed);
+        let repos = 2 + rng.below(3); // 2..=4 tenants
+        let rounds = 4 + rng.below(10);
+        let drop_round = 2 + rng.below(rounds - 2);
+        let cfg_round = 1 + rng.below(rounds);
+        let mut db = Db::new();
+        let mut st = DetectorState::new();
+        let mut book_inc = AlertBook::new();
+        let mut book_req = AlertBook::new();
+        let mut ts = 0i64;
+        for round in 0..rounds {
+            for r in 0..repos {
+                // co-tenants sometimes skip a push; the regressing repo
+                // never does (the planted drop must stay observable)
+                if r > 0 && rng.uniform() < 0.2 {
+                    continue;
+                }
+                ts += 1_000_000_000;
+                let repo = format!("repo-{r}");
+                for node in ["icx36", "rome1"] {
+                    let base = 1000.0 + 40.0 * r as f64;
+                    let v = if round >= drop_round && r == 0 && node == "icx36" {
+                        base * 0.75
+                    } else {
+                        base * (1.0 + rng.range(-0.003, 0.003))
+                    };
+                    db.insert(
+                        Point::new("lbm", ts)
+                            .tag("repo", &repo)
+                            .tag("node", node)
+                            .tag("case", "uniformgridcpu")
+                            .tag("collision_op", "srt")
+                            .tag("commit", &format!("c{r}x{round}"))
+                            .field("mlups", v),
+                    );
+                }
+                if rng.uniform() < 0.3 {
+                    // a point without the watched field: part of the
+                    // measurement's distinct-timestamp walk, invisible to
+                    // the policies
+                    db.insert(Point::new("lbm", ts).tag("repo", &repo).field("other", 1.0));
+                }
+                // this collect's detector: one round runs under tuned
+                // regress.* overrides (state must invalidate + rebuild,
+                // twice: into the override and back out of it)
+                let det = if round + 1 == cfg_round {
+                    detector_with_config(
+                        &stock,
+                        &BenchConfig::parse(
+                            "regress.lbm-mlups.baseline_window = 4\n\
+                             regress.lbm-mlups.min_rel_change = 0.2\n",
+                        ),
+                    )
+                } else {
+                    stock.clone()
+                };
+                let scope = [("repo", repo.as_str())];
+                st.sync(&det, &db);
+                let (f_inc, e_inc) = st.detect_measurement_scoped(&det, &db, "lbm", &scope);
+                let (f_req, e_req) = det.detect_measurement_scoped(&db, "lbm", &scope);
+                assert_eq!(e_inc, e_req, "seed {seed} round {round} repo {r}: evaluated sets");
+                assert_eq!(
+                    dump_findings(&f_inc),
+                    dump_findings(&f_req),
+                    "seed {seed} round {round} repo {r}: findings"
+                );
+                let s_inc = book_inc.ingest(&f_inc, &e_inc, ts);
+                let s_req = book_req.ingest(&f_req, &e_req, ts);
+                assert_eq!(s_inc, s_req, "seed {seed} round {round} repo {r}: ingest");
+            }
+            if round == rounds / 2 {
+                // mid-campaign restart: persisted state must resume
+                // incrementally with no behavioural difference
+                let p = std::env::temp_dir().join(format!("cbench_state_prop_{seed}.json"));
+                st.save(&p).unwrap();
+                st = DetectorState::load(&p).unwrap();
+                std::fs::remove_file(&p).ok();
+            }
+        }
+        assert_eq!(
+            book_inc.to_json().to_string_pretty(),
+            book_req.to_json().to_string_pretty(),
+            "seed {seed}: alert books must be byte-identical"
+        );
+        assert!(
+            !book_req.alerts.is_empty(),
+            "seed {seed}: the planted drop must have opened an alert"
+        );
+    }
+}
+
 #[test]
 fn prop_compaction_keeps_retained_raw_queries_unchanged() {
     // compaction round-trip: queries whose window lies entirely inside
