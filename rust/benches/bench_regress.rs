@@ -4,7 +4,8 @@
 //!
 //! `cargo bench --bench bench_regress`
 
-use cbench::regress::{cusum_changepoint, mann_whitney, welch_t, Detector, Policy};
+use cbench::obs::metrics as om;
+use cbench::regress::{cusum_changepoint, mann_whitney, welch_t, Detector, DetectorState, Policy};
 use cbench::regress::detector::Direction;
 use cbench::tsdb::{Db, Point, Query};
 use cbench::util::rng::Rng;
@@ -185,6 +186,74 @@ fn main() {
         det.detect(&cold).len()
     });
     println!("{}", r_eager.report());
+
+    // LRU shard-body cache on the 100× history: cap resident bodies,
+    // prove the cap holds through inserts (the eviction hook) while
+    // queries stay correct (evicted shards lazily re-materialize), and
+    // count evictions / re-materializations via obs::metrics
+    println!("\n== shard-body LRU cache (--shard-cache) on the 100x history ==\n");
+    om::set_enabled(true);
+    let ev0 = om::get(om::Counter::ShardEvictions);
+    let rm0 = om::get(om::Counter::ShardRemats);
+    let mut capped = Db::load(&last_dir).unwrap();
+    let total_shards = capped.shards("lbm").len();
+    capped.set_body_cap(Some(4));
+    let full = full_scan(&capped); // warms every shard (reads never evict)
+    let warm = capped.loaded_bodies();
+    assert!(warm > 4, "full scan materializes more bodies than the cap");
+    capped.insert(
+        Point::new("lbm", 10_000 * 1_000_000_000)
+            .tag("case", "uniformgridcpu")
+            .tag("node", "node00")
+            .tag("collision_op", "srt")
+            .tag("commit", "lru-probe")
+            .field("mlups", 400.0),
+    );
+    let after = capped.loaded_bodies();
+    assert!(after <= 4 + 1, "insert hook enforces the cap (+1 dirty shard), got {after}");
+    let full2 = full_scan(&capped);
+    assert_eq!(full, full2, "eviction must be invisible to queries");
+    let lru_evictions = om::get(om::Counter::ShardEvictions) - ev0;
+    let lru_remats = om::get(om::Counter::ShardRemats) - rm0;
+    assert!(lru_evictions > 0 && lru_remats > 0);
+    println!(
+        "cap 4 of {total_shards} shards: warm={warm} -> {after} after insert; \
+         {lru_evictions} evictions, {lru_remats} lazy re-materializations"
+    );
+
+    // self-metrics throughput: the rates `--self-metrics on` uploads as
+    // `cbench_self` (line-protocol parse, point insert, detector sync) —
+    // measured here single-threaded so the counters are exact
+    println!("\n== self-metrics (obs::metrics rates) ==\n");
+    om::reset();
+    om::set_enabled(true);
+    let mut lp = String::new();
+    for t in 0..2000i64 {
+        lp.push_str(&format!(
+            "lbm,case=uniformgridcpu,node=node{:02},collision_op=srt mlups={} {}\n",
+            t % 10,
+            400 + (t % 50),
+            t * 1_000_000_000
+        ));
+    }
+    let mut mdb = Db::new();
+    let ingested = mdb.ingest_lines(&lp).unwrap();
+    assert_eq!(ingested, 2000);
+    let mut st = DetectorState::new();
+    st.sync(&det, &mdb);
+    let snap = om::counters();
+    let g = |c: om::Counter| snap[c.idx()];
+    let lp_rate = om::rate_per_sec(g(om::Counter::LpLines), g(om::Counter::LpParseNs));
+    let ins_rate = om::rate_per_sec(g(om::Counter::InsertPoints), g(om::Counter::InsertNs));
+    let sync_rate = om::rate_per_sec(g(om::Counter::SyncPoints), g(om::Counter::SyncNs));
+    println!("lp parse   : {:>12.0} lines/s", lp_rate);
+    println!("tsdb insert: {:>12.0} points/s", ins_rate);
+    println!("state sync : {:>12.0} points/s", sync_rate);
+    println!(
+        "SELFMETRICS_JSON {{\"lp_lines_per_sec\":{lp_rate:.0},\"insert_points_per_sec\":{ins_rate:.0},\"sync_points_per_sec\":{sync_rate:.0},\"shard_evictions\":{lru_evictions},\"shard_remats\":{lru_remats}}}"
+    );
+    om::set_enabled(false);
+
     let (t1, t10, t100) = (cold_ms[0], cold_ms[1], cold_ms[2]);
     let ratio = if t1 > 0.0 { t100 / t1 } else { 1.0 };
     println!(

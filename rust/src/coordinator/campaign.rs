@@ -370,6 +370,13 @@ pub fn run_campaign_with(
     }
     let t0 = cb.scheduler.now();
 
+    // root trace span: the campaign envelope. Its `nodes` meta is the
+    // critical-path walk's node inventory — a node that stayed idle all
+    // campaign leaves no job spans, but still must show up (100% idle)
+    // in the per-node attribution.
+    let node_list = cb.scheduler.hosts().join(",");
+    cb.trace.begin_root("campaign", t0, &[("nodes", &node_list)]);
+
     // --- push rounds: every project commits once per round ---
     let events = campaign_push_events(projects, cfg);
 
@@ -450,7 +457,28 @@ pub fn run_campaign_with(
         }
     }
 
-    let makespan = cb.scheduler.now() - t0;
+    let t_end = cb.scheduler.now();
+    // maintenance windows as cluster-lane spans (clipped to the
+    // campaign), then close the root — makespan == root span duration
+    if cb.trace.is_enabled() {
+        let root = cb.trace.root();
+        let hosts: Vec<String> = cb.scheduler.hosts().to_vec();
+        for host in &hosts {
+            let windows: Vec<(f64, f64)> = cb.scheduler.maintenance_windows(host).to_vec();
+            for (i, (from, until)) in windows.iter().enumerate() {
+                if *until <= t0 || *from >= t_end {
+                    continue;
+                }
+                let a = from.max(t0);
+                let b = until.min(t_end);
+                cb.trace
+                    .span(root, "maint", &format!("maint/{host}/{i}"), "", host, a, b);
+            }
+        }
+    }
+    cb.trace.end_root(t_end);
+
+    let makespan = t_end - t0;
     let sequential_baseline = reports.iter().map(|r| r.standalone_duration).sum();
     Ok(CampaignOutcome {
         reports,

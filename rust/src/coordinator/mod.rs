@@ -64,6 +64,8 @@ use crate::ci::{CiJob, Pipeline, PipelineFactory, Runner};
 use crate::cluster::machinestate::machine_state;
 use crate::cluster::nodes::catalogue;
 use crate::datastore::{DataStore, Id};
+use crate::obs::metrics as om;
+use crate::obs::trace::TraceRecorder;
 use crate::regress::{AlertBook, Detector, DetectorState, Direction, IngestSummary, Policy};
 use crate::sched::{JobState, Payload, SimScheduler, SubmitSpec};
 use crate::slurm::JobSpec;
@@ -226,6 +228,10 @@ pub struct PipelineReport {
     pub standalone_duration: f64,
     /// Simulated time the pipeline's jobs were submitted.
     pub submitted_at: f64,
+    /// Simulated time the pipeline's *first* job started running — the
+    /// end of its queue wait (equals `submitted_at` when nothing ran,
+    /// e.g. every job failed validation-side before starting).
+    pub first_started_at: f64,
     /// Simulated time the pipeline's *first* job finished — the earliest
     /// instant any of its results existed on the cluster.
     pub first_result_at: f64,
@@ -303,6 +309,25 @@ pub struct CbSystem {
     alerts_collection: Option<Id>,
     /// Simulated "trigger time" counter: advances per pipeline (ns).
     trigger_clock: i64,
+    /// Cluster-time span recorder fed by every collect (see
+    /// [`crate::obs::trace`]). Driven entirely by scheduler-clock values,
+    /// so replays are byte-identical; `cbench trace` renders/export it.
+    pub trace: TraceRecorder,
+    /// When on, each collect uploads its own throughput deltas (line
+    /// parse, TSDB insert, detector sync, …) to the TSDB as the
+    /// `cbench_self` measurement, so the stock `self-throughput` policy
+    /// watches the infrastructure like any benchmark. Off by default:
+    /// self-metrics carry *host*-time rates, which would make otherwise
+    /// deterministic runs emit machine-dependent points.
+    self_metrics: bool,
+    /// Divisor applied to uploaded self-metric rates — a CI fault
+    /// injector (`--self-slowdown 100` makes the infra look 100× slower
+    /// so the alerting path can be exercised end to end).
+    self_slowdown: f64,
+    /// Counter snapshot at the previous upload (delta basis).
+    last_self: [u64; om::N_COUNTERS],
+    /// Alerts the `cbench_self` detection opened (CI assertion hook).
+    self_alerts_opened: usize,
 }
 
 impl Default for CbSystem {
@@ -334,7 +359,38 @@ impl CbSystem {
             root_collection,
             alerts_collection: None,
             trigger_clock: 0,
+            trace: TraceRecorder::new(),
+            self_metrics: false,
+            self_slowdown: 1.0,
+            last_self: [0; om::N_COUNTERS],
+            self_alerts_opened: 0,
         }
+    }
+
+    /// Enable uploading the coordinator's own throughput as the
+    /// `cbench_self` measurement after every collect. Also turns the
+    /// global [`crate::obs::metrics`] recording on — the deltas have to
+    /// be measured to be uploaded.
+    pub fn set_self_metrics(&mut self, on: bool) {
+        self.self_metrics = on;
+        if on {
+            om::set_enabled(true);
+            self.last_self = om::counters();
+        }
+    }
+    pub fn self_metrics(&self) -> bool {
+        self.self_metrics
+    }
+
+    /// Fault injector: divide uploaded self-metric rates by `factor`
+    /// (CI uses 100.0 to prove an infra slowdown opens an alert).
+    pub fn set_self_slowdown(&mut self, factor: f64) {
+        self.self_slowdown = if factor > 0.0 { factor } else { 1.0 };
+    }
+
+    /// Alerts opened by `cbench_self` detections so far.
+    pub fn self_alerts_opened(&self) -> usize {
+        self.self_alerts_opened
     }
 
     /// Adopt an existing TSDB (e.g. reloaded from the store a previous
@@ -579,6 +635,7 @@ impl CbSystem {
         let mut records = 0;
         let mut last_end = pending.submitted_at;
         let mut first_end = f64::INFINITY;
+        let mut first_start = f64::INFINITY;
         let mut node_load: BTreeMap<String, f64> = BTreeMap::new();
         for (sched_id, ci) in &pending.jobs {
             let job = self.scheduler.job(*sched_id).expect("job exists");
@@ -591,6 +648,7 @@ impl CbSystem {
             if let (Some(start), Some(end)) = (job.start_time, job.end_time) {
                 last_end = last_end.max(end);
                 first_end = first_end.min(end);
+                first_start = first_start.min(start);
                 *node_load.entry(node_host.clone()).or_insert(0.0) += end - start;
             }
             let node = self.scheduler.node(&node_host).unwrap().clone();
@@ -601,7 +659,10 @@ impl CbSystem {
             }
 
             // --- parse + upload (fields & tags, trigger time as ts) ---
+            let jt = om::Timer::start();
             let metrics = parse_job_output(&ci.name, &node_host, &log);
+            om::add(om::Counter::JobsParsed, 1);
+            jt.stop(om::TimedOp::JobParse);
             if !metrics.fields.is_empty() {
                 let mut p = Point::new(&pending.measurement, trigger_ts);
                 p.tags.insert("node".into(), node_host.clone());
@@ -678,30 +739,154 @@ impl CbSystem {
         // back to the current pipeline's submission for change points in
         // carried-over history. Stamped per alert; the report carries the
         // worst SLA of the alerts it opened.
+        // Each SLA is decomposed into where the time went — queue wait,
+        // run, collect latency, detect lag (the remainder: cluster-time
+        // between the offender's own collect and the later detection that
+        // finally opened the alert) — components that sum to `sla_secs`
+        // exactly. `cbench regress alerts` prints the breakdown.
         let collected_at = self.scheduler.now();
-        let mut slas: Vec<(u64, f64)> = Vec::with_capacity(regressions.opened_ids.len());
+        let first_started_at = if first_start.is_finite() {
+            first_start
+        } else {
+            pending.submitted_at
+        };
+        let mut slas: Vec<(u64, f64, [f64; 4])> =
+            Vec::with_capacity(regressions.opened_ids.len());
         for id in &regressions.opened_ids {
             let change_ts = self
                 .alerts
                 .get(*id)
                 .map(|a| a.change_ts)
                 .unwrap_or(trigger_ts);
-            let landed_at = self
+            // the offending pipeline's own latency picture (fall back to
+            // the current pipeline for change points in carried-over
+            // history)
+            let (landed_at, o_started, o_finished, o_collected) = self
                 .executed
                 .iter()
                 .rev()
                 .find(|r| r.trigger_ts == change_ts)
-                .map(|r| r.submitted_at)
-                .unwrap_or(pending.submitted_at);
-            slas.push((*id, (collected_at - landed_at).max(0.0)));
+                .map(|r| (r.submitted_at, r.first_started_at, r.finished_at, r.collected_at))
+                .unwrap_or((pending.submitted_at, first_started_at, last_end, collected_at));
+            let sla = (collected_at - landed_at).max(0.0);
+            let queue = o_started - landed_at;
+            let run = o_finished - o_started;
+            let collect = o_collected - o_finished;
+            let detect = sla - queue - run - collect;
+            slas.push((*id, sla, [queue, run, collect, detect]));
         }
         let alert_sla = slas
             .iter()
-            .map(|&(_, s)| s)
+            .map(|&(_, s, _)| s)
             .fold(None, |acc: Option<f64>, s| Some(acc.map_or(s, |a| a.max(s))));
-        for (id, s) in slas {
+        for (id, s, [queue, run, collect, detect]) in slas {
             if let Some(a) = self.alerts.get_mut(id) {
                 a.sla_secs = Some(s);
+                a.sla_queue_secs = Some(queue);
+                a.sla_run_secs = Some(run);
+                a.sla_collect_secs = Some(collect);
+                a.sla_detect_secs = Some(detect);
+            }
+        }
+
+        // --- self-observability: upload this collect's own throughput
+        // deltas as `cbench_self` and let the stock detector judge them ---
+        let commit8 = event.commit_id[..8.min(event.commit_id.len())].to_string();
+        if self.self_metrics {
+            self.upload_self_metrics(trigger_ts, &commit8, coll);
+        }
+
+        // --- cluster-time trace: one span tree per collect, driven
+        // entirely by scheduler timestamps, so replays of the same
+        // roster are byte-identical (`cbench trace`) ---
+        if self.trace.is_enabled() {
+            let root = self.trace.root();
+            let pname = format!("p{} {} @{}", pending.pipeline_id, event.repo, commit8);
+            let pspan = self.trace.span_m(
+                root,
+                "pipeline",
+                &pname,
+                &event.repo,
+                "",
+                pending.submitted_at,
+                collected_at,
+                &[("commit", &commit8), ("trigger_ts", &trigger_ts.to_string())],
+            );
+            for (seq, (sched_id, ci)) in pending.jobs.iter().enumerate() {
+                // copy the cluster-time facts out of the scheduler before
+                // recording (disjoint borrows of self)
+                let (start, end, node_host, was_backfilled) = {
+                    let job = self.scheduler.job(*sched_id).expect("job exists");
+                    (job.start_time, job.end_time, job.spec.nodelist.clone(), job.backfilled)
+                };
+                let (Some(start), Some(end)) = (start, end) else { continue };
+                let jname = format!("p{}/j{}/{}", pending.pipeline_id, seq, ci.name);
+                let jspan = self.trace.span(
+                    pspan,
+                    "job",
+                    &jname,
+                    &event.repo,
+                    &node_host,
+                    pending.submitted_at,
+                    end,
+                );
+                if start > pending.submitted_at {
+                    self.trace.span(
+                        jspan,
+                        "queue",
+                        &format!("{jname}/queue"),
+                        &event.repo,
+                        &node_host,
+                        pending.submitted_at,
+                        start,
+                    );
+                }
+                self.trace.span_m(
+                    jspan,
+                    "run",
+                    &format!("{jname}/run"),
+                    &event.repo,
+                    &node_host,
+                    start,
+                    end,
+                    &[
+                        // shortest-roundtrip text: the critical-path walk
+                        // reparses it to the bit-identical f64
+                        ("submit", &format!("{:?}", pending.submitted_at)),
+                        ("backfilled", if was_backfilled { "true" } else { "false" }),
+                    ],
+                );
+            }
+            if collected_at > last_end {
+                self.trace.span(
+                    pspan,
+                    "collect",
+                    &format!("p{}/collect", pending.pipeline_id),
+                    &event.repo,
+                    "",
+                    last_end,
+                    collected_at,
+                );
+            }
+            self.trace.span(
+                pspan,
+                "detect",
+                &format!("p{}/detect", pending.pipeline_id),
+                &event.repo,
+                "",
+                collected_at,
+                collected_at,
+            );
+            for id in &regressions.opened_ids {
+                self.trace.span(
+                    pspan,
+                    "alert-open",
+                    &format!("alert#{id}"),
+                    &event.repo,
+                    "",
+                    collected_at,
+                    collected_at,
+                );
             }
         }
 
@@ -721,6 +906,7 @@ impl CbSystem {
             duration: (last_end - pending.submitted_at).max(0.0),
             standalone_duration,
             submitted_at: pending.submitted_at,
+            first_started_at,
             first_result_at: if first_end.is_finite() { first_end } else { pending.submitted_at },
             finished_at: last_end,
             collected_at,
@@ -729,6 +915,49 @@ impl CbSystem {
         };
         self.executed.push(report.clone());
         Ok(report)
+    }
+
+    /// Upload the coordinator's own throughput since the previous upload
+    /// as `cbench_self` points — one per component, rated ops/second from
+    /// *host*-time deltas (see [`crate::obs::metrics`]) — then run the
+    /// stock `self-throughput` detection over them: the infrastructure is
+    /// watched by the same statistical machinery as the benchmarks it
+    /// serves. Components with no activity this collect are skipped.
+    fn upload_self_metrics(&mut self, trigger_ts: i64, commit8: &str, coll: Id) {
+        let now = om::counters();
+        let prev = self.last_self;
+        self.last_self = now;
+        let d = |c: om::Counter| now[c.idx()].saturating_sub(prev[c.idx()]);
+        let components: [(&str, u64, u64); 5] = [
+            ("lp_parse", d(om::Counter::LpLines), d(om::Counter::LpParseNs)),
+            ("tsdb_insert", d(om::Counter::InsertPoints), d(om::Counter::InsertNs)),
+            ("job_parse", d(om::Counter::JobsParsed), d(om::Counter::JobParseNs)),
+            ("detector_sync", d(om::Counter::SyncPoints), d(om::Counter::SyncNs)),
+            (
+                "shard_load",
+                d(om::Counter::ShardLoadPoints),
+                d(om::Counter::ShardLoadNs),
+            ),
+        ];
+        let mut uploaded = false;
+        for (comp, ops, ns) in components {
+            if ops == 0 || ns == 0 {
+                continue;
+            }
+            let rate = om::rate_per_sec(ops, ns) / self.self_slowdown;
+            let mut p = Point::new("cbench_self", trigger_ts);
+            p.tags.insert("repo".into(), "cbench".into());
+            p.tags.insert("component".into(), comp.into());
+            p.tags.insert("commit".into(), commit8.to_string());
+            p.fields.insert("points_per_sec".into(), rate);
+            p.fields.insert("ops".into(), ops as f64);
+            self.db.insert(p);
+            uploaded = true;
+        }
+        if uploaded {
+            let s = self.check_regressions("cbench_self", coll, Some("cbench"));
+            self.self_alerts_opened += s.opened;
+        }
     }
 
     /// Execute a pipeline synchronously: submit, run to completion,

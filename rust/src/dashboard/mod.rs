@@ -322,6 +322,47 @@ pub fn campaign_dashboard() -> Dashboard {
         )
 }
 
+/// The self-observability dashboard: the benchmarker benchmarked. Renders
+/// the `cbench_self` series the coordinator uploads when self-metrics are
+/// on (`obs::metrics` counter deltas per collect — line-protocol parse,
+/// TSDB insert, job-output parse, detector-state sync, shard loads) plus
+/// the campaign-level latency/SLA series, so an infrastructure slowdown
+/// shows up here exactly like a workload regression shows up on the
+/// project dashboards — and the stock `self-throughput` policy alerts on
+/// the same series.
+pub fn self_observability_dashboard() -> Dashboard {
+    Dashboard::new("cbench self-observability — infrastructure throughput")
+        .variable("component")
+        .variable("repo")
+        .panel(
+            // the series the stock self-throughput policy watches, so its
+            // alerts annotate here
+            Panel::new("Ingest/parse/sync throughput", PanelKind::TimeSeries, "cbench_self", "points_per_sec")
+                .group_by(&["component"])
+                .unit("points/s"),
+        )
+        .panel(
+            Panel::new("Latest throughput by component", PanelKind::LatestBars, "cbench_self", "points_per_sec")
+                .group_by(&["component"])
+                .unit("points/s"),
+        )
+        .panel(
+            Panel::new("Ops per collect", PanelKind::TimeSeries, "cbench_self", "ops")
+                .group_by(&["component"])
+                .unit("ops"),
+        )
+        .panel(
+            Panel::new("Latency: upload + detect", PanelKind::TimeSeries, "campaign", "collect_latency")
+                .group_by(&["repo"])
+                .unit("s"),
+        )
+        .panel(
+            Panel::new("Alert SLA", PanelKind::TimeSeries, "campaign", "alert_sla")
+                .group_by(&["repo"])
+                .unit("s"),
+        )
+}
+
 pub fn walberla_dashboard() -> Dashboard {
     Dashboard::new("waLBerla benchmarks")
         .variable("case")
@@ -406,6 +447,26 @@ mod tests {
     }
 
     #[test]
+    fn stock_self_throughput_alert_annotates_self_dashboard() {
+        // the self-throughput policy's alerts must land on a real panel
+        use crate::regress::Detector;
+        let d = self_observability_dashboard();
+        let det = Detector::with_default_policies();
+        let p = det
+            .policies
+            .iter()
+            .find(|p| p.measurement == "cbench_self")
+            .expect("stock self-throughput policy");
+        assert!(
+            d.panels.iter().any(|panel| panel.measurement == p.measurement
+                && panel.field == p.field),
+            "no self-observability panel shows `{}.{}`",
+            p.measurement,
+            p.field
+        );
+    }
+
+    #[test]
     fn render_text_contains_all_panels() {
         let d = walberla_dashboard();
         let txt = d.render_text(&db());
@@ -456,6 +517,10 @@ mod tests {
             rel_change: 0.2,
             change_ts: 2,
             sla_secs: None,
+            sla_queue_secs: None,
+            sla_run_secs: None,
+            sla_collect_secs: None,
+            sla_detect_secs: None,
             suspect_commit: Some("deadbeef".into()),
             first_bad_commit: None,
             archive_record: None,

@@ -27,6 +27,7 @@ pub mod coordinator;
 pub mod dashboard;
 pub mod datastore;
 pub mod mpisim;
+pub mod obs;
 pub mod perf;
 pub mod regress;
 pub mod report;

@@ -5,7 +5,9 @@ use cbench::cluster::microbench::{run_host_microbench, MicrobenchKind};
 use cbench::cluster::nodes::{catalogue, node};
 use cbench::coordinator::campaign::{self, CampaignConfig};
 use cbench::coordinator::{fe2ti_pipeline, walberla_pipeline, BenchConfig, CbSystem, PreparedJob};
-use cbench::dashboard::{campaign_dashboard, fe2ti_dashboard, walberla_dashboard};
+use cbench::dashboard::{
+    campaign_dashboard, fe2ti_dashboard, self_observability_dashboard, walberla_dashboard,
+};
 use cbench::regress::{bisect_pipeline, AlertBook, AlertState, BisectReport, Detector};
 use cbench::report;
 use cbench::tsdb::{Aggregate, Db, Query};
@@ -46,6 +48,7 @@ fn cbench_main(argv: Vec<String>) -> anyhow::Result<()> {
         "dashboard" => cmd_dashboard(&args),
         "artifacts" => cmd_artifacts(&args),
         "regress" => cmd_regress(&args),
+        "trace" => cmd_trace(&args),
         "tsdb" => cmd_tsdb(&args),
         other => anyhow::bail!("unknown command `{other}` — see `cbench help`"),
     }
@@ -132,6 +135,15 @@ fn load_persisted_state<'a>(
     cb.alerts.detach_store();
     let state_path = args.get_or("save-state", "cbench_detector_state.json");
     cb.det_state = cbench::regress::DetectorState::load(Path::new(state_path))?;
+    // `--shard-cache N`: cap loaded shard bodies — cold shards evict (LRU)
+    // after each insert and lazily re-materialize from their files on the
+    // next read, bounding resident memory on multi-year histories
+    if let Some(cap) = args.get("shard-cache") {
+        let cap: usize = cap
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--shard-cache `{cap}`: expected a shard count"))?;
+        cb.db.set_body_cap(Some(cap));
+    }
     Ok((tsdb_path, alerts_path, state_path))
 }
 
@@ -216,6 +228,13 @@ fn cmd_pipeline(args: &Args) -> anyhow::Result<()> {
          detector state -> {state_path}",
         cb.alerts.active().len()
     );
+    if let Some(tp) = args.get("save-trace") {
+        cb.trace.save(Path::new(tp))?;
+        println!(
+            "trace saved to {tp} ({} spans) — `cbench trace show --trace {tp}`",
+            cb.trace.len()
+        );
+    }
     // render the project dashboard, annotated with open alerts
     let dash = if which == "fe2ti" {
         fe2ti_dashboard()
@@ -292,9 +311,18 @@ fn cmd_campaign(args: &Args) -> anyhow::Result<()> {
     };
     let drains = parse_drain_specs(args.get("drain"))?;
     let incremental = parse_detect_mode(args)?;
+    let self_metrics = match args.get_or("self-metrics", "off") {
+        "on" | "true" | "1" => true,
+        "off" | "false" | "0" => false,
+        other => anyhow::bail!("--self-metrics `{other}`: expected on|off"),
+    };
+    let self_slowdown = args.get_f64("self-slowdown", 1.0);
+    anyhow::ensure!(self_slowdown > 0.0, "--self-slowdown must be positive");
 
     let mut cb = CbSystem::new();
     let (tsdb_path, alerts_path, state_path) = load_persisted_state(&mut cb, args)?;
+    cb.set_self_metrics(self_metrics);
+    cb.set_self_slowdown(self_slowdown);
 
     let mut projects = campaign::default_projects(repos);
     let cfg = CampaignConfig {
@@ -394,6 +422,18 @@ fn cmd_campaign(args: &Args) -> anyhow::Result<()> {
             .unwrap_or_else(|| "null".into())
     );
 
+    if self_metrics {
+        println!(
+            "self-metrics: infra throughput uploaded as `cbench_self`{} — {} self alert(s) opened",
+            if self_slowdown != 1.0 {
+                format!(" (rates injected /{self_slowdown})")
+            } else {
+                String::new()
+            },
+            cb.self_alerts_opened()
+        );
+    }
+
     let rep = cb.db.save_report(Path::new(tsdb_path))?;
     cb.alerts.save(Path::new(alerts_path))?;
     cb.det_state.save(Path::new(state_path))?;
@@ -405,7 +445,51 @@ fn cmd_campaign(args: &Args) -> anyhow::Result<()> {
         rep.shards_kept,
         cb.alerts.active().len()
     );
+    if let Some(tp) = args.get("save-trace") {
+        cb.trace.save(Path::new(tp))?;
+        println!(
+            "trace saved to {tp} ({} spans) — `cbench trace show|export|critical-path --trace {tp}`",
+            cb.trace.len()
+        );
+    }
     println!("\n{}", campaign_dashboard().render_text(&cb.db));
+    Ok(())
+}
+
+/// `cbench trace <show|export|critical-path> [--trace FILE] [--chrome]
+/// [--out FILE]` — inspect a cluster-time trace saved by
+/// `cbench campaign|pipeline --save-trace`: `show` prints the span tree,
+/// `export --chrome` emits Chrome trace-event JSON (open in Perfetto or
+/// chrome://tracing), `critical-path` walks the span DAG backward from
+/// the campaign end and attributes the entire makespan to run /
+/// queue-wait / maintenance / collect / idle segments (prints
+/// `CRITPATH_JSON`, the machine-readable breakdown CI archives).
+fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    let sub = args.positional.first().map(|s| s.as_str()).unwrap_or("show");
+    let path = args.get_or("trace", "cbench_trace.json");
+    let rec = cbench::obs::trace::TraceRecorder::load(Path::new(path))?;
+    match sub {
+        "show" => {
+            println!("{}", rec.tree_text());
+        }
+        "export" => {
+            let j = if args.flag("chrome") { rec.chrome_json() } else { rec.to_json() };
+            let text = j.to_string_pretty();
+            match args.get("out") {
+                Some(out) => {
+                    std::fs::write(out, &text)?;
+                    println!("trace exported to {out} ({} spans)", rec.len());
+                }
+                None => println!("{text}"),
+            }
+        }
+        "critical-path" | "crit" => {
+            let cp = cbench::obs::trace::critical_path(rec.spans())?;
+            println!("{}", cp.render_text());
+            println!("CRITPATH_JSON {}", cp.to_json().to_string_compact());
+        }
+        other => anyhow::bail!("unknown trace subcommand `{other}` (show|export|critical-path)"),
+    }
     Ok(())
 }
 
@@ -448,10 +532,11 @@ fn cmd_dashboard(args: &Args) -> anyhow::Result<()> {
         .get("tsdb")
         .ok_or_else(|| anyhow::anyhow!("--tsdb FILE required (see `cbench pipeline --save-tsdb`)"))?;
     let db = cbench::tsdb::Db::load(std::path::Path::new(tsdb))?;
-    let mut dash = if which == "fe2ti" {
-        fe2ti_dashboard()
-    } else {
-        walberla_dashboard()
+    let mut dash = match which {
+        "fe2ti" => fe2ti_dashboard(),
+        // the infrastructure watching itself (`--self-metrics on` runs)
+        "self" => self_observability_dashboard(),
+        _ => walberla_dashboard(),
     };
     if let Some(sel) = args.get("select") {
         if let Some((tag, vals)) = sel.split_once('=') {
@@ -739,7 +824,8 @@ fn cmd_regress_alerts(args: &Args, alerts_path: &str) -> anyhow::Result<()> {
     }
     let show_all = args.flag("all");
     let mut t = Table::new(&[
-        "id", "state", "series", "change", "confidence", "seen", "sla", "suspect", "first-bad",
+        "id", "state", "series", "change", "confidence", "seen", "sla", "queue+run+collect+detect",
+        "suspect", "first-bad",
     ]);
     let mut shown = 0;
     for a in &book.alerts {
@@ -756,6 +842,18 @@ fn cmd_regress_alerts(args: &Args, alerts_path: &str) -> anyhow::Result<()> {
             a.sla_secs
                 .map(cbench::util::fmt_secs)
                 .unwrap_or_else(|| "-".into()),
+            // where the SLA went (components sum to `sla` exactly)
+            match (
+                a.sla_queue_secs,
+                a.sla_run_secs,
+                a.sla_collect_secs,
+                a.sla_detect_secs,
+            ) {
+                (Some(q), Some(r), Some(c), Some(d)) => {
+                    format!("{q:.0}+{r:.0}+{c:.0}+{d:.0}")
+                }
+                _ => "-".into(),
+            },
             a.suspect_commit.clone().unwrap_or_else(|| "?".into()),
             a.first_bad_commit.clone().unwrap_or_else(|| "-".into()),
         ]);
@@ -1029,7 +1127,8 @@ COMMANDS:
   pipeline <fe2ti|walberla>     run the CB pipeline on simulated commits
            [--commits N] [--inject-regression K] [--penalty P]
            [--save-tsdb STORE] [--save-alerts FILE] [--save-state FILE]
-           [--detect incremental|requery]
+           [--detect incremental|requery] [--save-trace FILE]
+           [--shard-cache N]
                                 K plants the waLBerla kernel regression at
                                 commit #K (penalty P, default 0.15); state
                                 persists to cbench_tsdb.lp (a manifest
@@ -1043,6 +1142,8 @@ COMMANDS:
            [--seed S] [--backfill on|off] [--drain NODE@FROM..TO[,..]]
            [--collect streaming|batch] [--detect incremental|requery]
            [--save-tsdb STORE] [--save-alerts FILE] [--save-state FILE]
+           [--save-trace FILE] [--self-metrics on|off] [--self-slowdown F]
+           [--shard-cache N]
                                 multi-repo coordinator: N repositories
                                 (alternating walberla/fe2ti) x M pushes,
                                 every pipeline overlapped on ONE
@@ -1069,7 +1170,27 @@ COMMANDS:
                                 --detect requery restores the full
                                 tail re-query per collect (A/B reference;
                                 incremental is the default and produces
-                                the identical alert book, byte for byte)
+                                the identical alert book, byte for byte);
+                                --save-trace records the cluster-time
+                                span tree (see `trace`); --self-metrics
+                                on uploads the coordinator's own
+                                throughput as `cbench_self` so the stock
+                                detector watches the infrastructure
+                                (--self-slowdown F divides the uploaded
+                                rates: a CI fault injector);
+                                --shard-cache N caps loaded shard bodies
+                                (LRU eviction, lazy re-materialization)
+  trace <show|export|critical-path> [--trace FILE] [--chrome] [--out FILE]
+                                inspect a saved cluster-time trace:
+                                show prints the span tree; export
+                                --chrome emits Chrome trace-event JSON
+                                (Perfetto / chrome://tracing);
+                                critical-path attributes the WHOLE
+                                makespan to run / queue-wait /
+                                maintenance / collect / idle segments,
+                                exactly and deterministically, plus
+                                per-node and per-repo breakdowns
+                                (prints CRITPATH_JSON)
   tsdb info [--tsdb STORE] [--shard-span SECS] [--json]
                                 shard layout of a saved TSDB from the
                                 manifest index alone (nothing is parsed):
@@ -1117,9 +1238,11 @@ COMMANDS:
                                 job matrix on the shared scheduler
   cluster [--node HOST]         Testcluster catalogue / machinestate dump
   microbench [--n N] [--reps R] run stream/copy/load/peakflops on this host
-  dashboard <fe2ti|walberla> --tsdb FILE [--select tag=v1,v2] [--alerts FILE]
+  dashboard <fe2ti|walberla|self> --tsdb FILE [--select tag=v1,v2] [--alerts FILE]
                                 render a dashboard from a saved TSDB,
                                 annotated with active regression alerts
+                                (`self` shows the infra's own throughput
+                                from --self-metrics runs)
   artifacts [--dir DIR] [--smoke]
                                 list + smoke-test the AOT PJRT artifacts
   help                          this help
@@ -1155,6 +1278,26 @@ STREAMING COLLECT + ALERT SLA (detection latency):
                                 # whole roster -- compare CAMPAIGN_JSON
   cbench regress bisect --campaign --repos 2 --pushes 2 --inject-regression 2
                                 # campaign-aware bisection of the alert
+
+OBSERVABILITY (the infrastructure watching itself):
+  cbench campaign --repos 2 --pushes 2 --drain medusa@400..8000 \\
+                  --save-trace trace.json
+  cbench trace show --trace trace.json
+                                # the span tree: campaign > pipeline >
+                                # job > queue/run, collect, detect
+  cbench trace critical-path --trace trace.json
+                                # where did the makespan go? run vs
+                                # queue-wait vs maintenance vs collect,
+                                # attributed 100% (+-0), per node + repo
+  cbench trace export --chrome --out trace.chrome.json
+                                # open in Perfetto / chrome://tracing
+  cbench campaign --repos 2 --pushes 2 --self-metrics on
+                                # parse/insert/sync throughput uploaded
+                                # as cbench_self; the stock
+                                # self-throughput policy alerts when the
+                                # infra itself slows down (inject with
+                                # --self-slowdown 100 on a resumed run)
+  cbench dashboard self --tsdb cbench_tsdb.lp
 
 MULTI-YEAR HISTORIES (shards + compaction + manifest persistence):
   cbench tsdb info              # shard layout of cbench_tsdb.lp, read
@@ -1242,6 +1385,19 @@ CB pipeline wiring (paper Figs. 3-4):
        re-run on midpoint commits to pin the first bad commit in
        O(log n) re-runs (cbench regress bisect; --campaign rebuilds the
        campaign's commit chains and bisects the alerted repository)
+    -> the run itself is observable (obs::): every collect records a
+       cluster-time span tree (campaign > pipeline > job > queue/run,
+       collect, detect, alert-open) built purely from scheduler
+       timestamps -- replaying the same roster yields a byte-identical
+       trace (--save-trace; `cbench trace show|export|critical-path`;
+       critical-path attributes the entire makespan, exactly, to run /
+       queue-wait / maintenance / collect / idle); with --self-metrics
+       on, the coordinator's own host-time throughput (line-protocol
+       parse, TSDB insert, job parse, detector sync, shard load) is
+       uploaded as the `cbench_self` measurement and judged by the same
+       stock detector that watches the benchmarks -- an infra slowdown
+       opens a regression alert like any other (alert SLAs decompose
+       into queue + run + collect + detect components that sum exactly)
 
 Full data-flow + module map + determinism contract: ARCHITECTURE.md.
 ";

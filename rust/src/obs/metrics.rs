@@ -1,0 +1,351 @@
+//! # obs::metrics — host-side self-metrics for the infrastructure's hot paths
+//!
+//! The paper's premise is that performance must be watched continuously —
+//! including the benchmarking system's own overhead (the ROOT framework and
+//! "Continuous benchmarking: keeping pace with an evolving ecosystem" both
+//! monitor the harness itself). This module provides the measurement side:
+//! a fixed set of process-global monotone counters plus fixed-bucket
+//! latency histograms around the real hot paths — line-protocol parse,
+//! TSDB insert, job-output parse, `DetectorState::sync`, shard
+//! materialization, dirty-shard save.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Near-zero cost when disabled** (the default): every recording call
+//!    starts with one `Relaxed` load of an `AtomicBool`; [`Timer::start`]
+//!    never reads the clock while disabled. No path here allocates —
+//!    counters and histograms are fixed-size static atomic arrays — so
+//!    instrumented hot loops stay allocation-free (asserted by the
+//!    counting-allocator test in `rust/tests/obs_trace.rs`).
+//! 2. **No locks**: everything is `AtomicU64` with `Relaxed` ordering.
+//!    Counts are monotone; readers take snapshots and difference them.
+//! 3. **Host time, not cluster time**: these are wall-clock nanoseconds of
+//!    the *process*, unlike `obs::trace` which records deterministic
+//!    simulated cluster time. Self-metrics values are therefore noisy and
+//!    are kept out of byte-identical replay contracts — the coordinator
+//!    only uploads them into the TSDB (measurement `cbench_self`) when
+//!    explicitly enabled.
+//!
+//! The aggregates flow back through the standard pipeline: the coordinator
+//! differences [`counters`] snapshots per collect, derives points/sec
+//! rates, and inserts `cbench_self` points that the stock
+//! `self-throughput` detector policy watches like any workload series.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Number of counter slots (must match [`Counter::ALL`]).
+pub const N_COUNTERS: usize = 15;
+
+/// Monotone process-global counters. `*Ns` slots accumulate wall-clock
+/// nanoseconds measured by [`Timer`]; the rest count operations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Counter {
+    /// Line-protocol lines parsed (batch ingest + shard materialization).
+    LpLines,
+    /// Nanoseconds spent in line-protocol batch parses.
+    LpParseNs,
+    /// Points inserted into a `tsdb::Db`.
+    InsertPoints,
+    /// Nanoseconds spent inside `Db::insert`.
+    InsertNs,
+    /// Job stdout logs parsed into points by the coordinator.
+    JobsParsed,
+    /// Nanoseconds spent parsing job stdout.
+    JobParseNs,
+    /// Points ingested by `DetectorState::sync` (catch-up + rebuild).
+    SyncPoints,
+    /// Nanoseconds spent inside `DetectorState::sync`.
+    SyncNs,
+    /// Shard bodies materialized from their backing file.
+    ShardLoads,
+    /// Points parsed by those materializations.
+    ShardLoadPoints,
+    /// Nanoseconds spent materializing shard bodies.
+    ShardLoadNs,
+    /// Clean, cold shard bodies evicted under the LRU body cap.
+    ShardEvictions,
+    /// Re-materializations of a previously evicted body.
+    ShardRemats,
+    /// Shard files rewritten by `Db::save_report`.
+    SaveShardsWritten,
+    /// Nanoseconds spent inside `Db::save_report`.
+    SaveNs,
+}
+
+impl Counter {
+    pub const ALL: [Counter; N_COUNTERS] = [
+        Counter::LpLines,
+        Counter::LpParseNs,
+        Counter::InsertPoints,
+        Counter::InsertNs,
+        Counter::JobsParsed,
+        Counter::JobParseNs,
+        Counter::SyncPoints,
+        Counter::SyncNs,
+        Counter::ShardLoads,
+        Counter::ShardLoadPoints,
+        Counter::ShardLoadNs,
+        Counter::ShardEvictions,
+        Counter::ShardRemats,
+        Counter::SaveShardsWritten,
+        Counter::SaveNs,
+    ];
+
+    pub fn idx(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::LpLines => "lp_lines",
+            Counter::LpParseNs => "lp_parse_ns",
+            Counter::InsertPoints => "insert_points",
+            Counter::InsertNs => "insert_ns",
+            Counter::JobsParsed => "jobs_parsed",
+            Counter::JobParseNs => "job_parse_ns",
+            Counter::SyncPoints => "sync_points",
+            Counter::SyncNs => "sync_ns",
+            Counter::ShardLoads => "shard_loads",
+            Counter::ShardLoadPoints => "shard_load_points",
+            Counter::ShardLoadNs => "shard_load_ns",
+            Counter::ShardEvictions => "shard_evictions",
+            Counter::ShardRemats => "shard_remats",
+            Counter::SaveShardsWritten => "save_shards_written",
+            Counter::SaveNs => "save_ns",
+        }
+    }
+}
+
+/// Number of timed-operation histogram rows (must match [`TimedOp::ALL`]).
+pub const N_OPS: usize = 6;
+
+/// Log2-bucket latency histogram slots per [`Timer`]-wrapped operation.
+pub const HIST_BUCKETS: usize = 32;
+
+/// Operations wrapped by [`Timer`]: each owns a `*Ns` counter and one
+/// fixed-bucket histogram row.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TimedOp {
+    LpParse,
+    Insert,
+    JobParse,
+    DetectorSync,
+    ShardLoad,
+    Save,
+}
+
+impl TimedOp {
+    pub const ALL: [TimedOp; N_OPS] = [
+        TimedOp::LpParse,
+        TimedOp::Insert,
+        TimedOp::JobParse,
+        TimedOp::DetectorSync,
+        TimedOp::ShardLoad,
+        TimedOp::Save,
+    ];
+
+    pub fn idx(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TimedOp::LpParse => "lp_parse",
+            TimedOp::Insert => "insert",
+            TimedOp::JobParse => "job_parse",
+            TimedOp::DetectorSync => "detector_sync",
+            TimedOp::ShardLoad => "shard_load",
+            TimedOp::Save => "save",
+        }
+    }
+
+    /// The counter accumulating this operation's total nanoseconds.
+    pub fn ns_counter(self) -> Counter {
+        match self {
+            TimedOp::LpParse => Counter::LpParseNs,
+            TimedOp::Insert => Counter::InsertNs,
+            TimedOp::JobParse => Counter::JobParseNs,
+            TimedOp::DetectorSync => Counter::SyncNs,
+            TimedOp::ShardLoad => Counter::ShardLoadNs,
+            TimedOp::Save => Counter::SaveNs,
+        }
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO: AtomicU64 = AtomicU64::new(0);
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO_ROW: [AtomicU64; HIST_BUCKETS] = [ZERO; HIST_BUCKETS];
+
+static COUNTERS: [AtomicU64; N_COUNTERS] = [ZERO; N_COUNTERS];
+static HIST: [[AtomicU64; HIST_BUCKETS]; N_OPS] = [ZERO_ROW; N_OPS];
+
+/// Turn recording on/off process-wide. Off (the default) reduces every
+/// recording call to one relaxed bool load.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Add `v` to a counter (no-op while disabled).
+pub fn add(c: Counter, v: u64) {
+    if v != 0 && enabled() {
+        COUNTERS[c.idx()].fetch_add(v, Ordering::Relaxed);
+    }
+}
+
+/// Current value of one counter.
+pub fn get(c: Counter) -> u64 {
+    COUNTERS[c.idx()].load(Ordering::Relaxed)
+}
+
+/// Snapshot of every counter, indexed by [`Counter::idx`]. Readers
+/// difference two snapshots to get a window's worth of activity.
+pub fn counters() -> [u64; N_COUNTERS] {
+    let mut out = [0u64; N_COUNTERS];
+    for (i, slot) in COUNTERS.iter().enumerate() {
+        out[i] = slot.load(Ordering::Relaxed);
+    }
+    out
+}
+
+/// Snapshot of one operation's latency histogram (bucket `i` counts
+/// observations with `ns < 2^(i+1)`, last bucket is open-ended).
+pub fn hist(op: TimedOp) -> [u64; HIST_BUCKETS] {
+    let mut out = [0u64; HIST_BUCKETS];
+    for (i, slot) in HIST[op.idx()].iter().enumerate() {
+        out[i] = slot.load(Ordering::Relaxed);
+    }
+    out
+}
+
+/// Zero every counter and histogram (bench/test setup).
+pub fn reset() {
+    for slot in COUNTERS.iter() {
+        slot.store(0, Ordering::Relaxed);
+    }
+    for row in HIST.iter() {
+        for slot in row.iter() {
+            slot.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// The fixed-bucket index of a duration: `floor(log2(ns))`, clamped.
+pub fn bucket_of(ns: u64) -> usize {
+    if ns == 0 {
+        return 0;
+    }
+    ((63 - ns.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+}
+
+/// `ops` per second given `ns` total nanoseconds (0.0 when unmeasured).
+pub fn rate_per_sec(ops: u64, ns: u64) -> f64 {
+    if ns == 0 {
+        0.0
+    } else {
+        ops as f64 * 1e9 / ns as f64
+    }
+}
+
+/// Scope timer: reads the clock only while recording is enabled, and on
+/// [`Timer::stop`] adds the elapsed nanoseconds to the operation's `*Ns`
+/// counter and its histogram row. Returns the elapsed ns (0 if disabled).
+#[must_use = "a timer records nothing until stop() is called"]
+pub struct Timer(Option<Instant>);
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer(if enabled() { Some(Instant::now()) } else { None })
+    }
+
+    pub fn stop(self, op: TimedOp) -> u64 {
+        match self.0 {
+            Some(t0) => {
+                let ns = t0.elapsed().as_nanos() as u64;
+                // the timer only exists because recording was enabled at
+                // start(); an enable-flag flip mid-flight is harmless
+                COUNTERS[op.ns_counter().idx()].fetch_add(ns, Ordering::Relaxed);
+                HIST[op.idx()][bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+                ns
+            }
+            None => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_is_floor_log2_clamped() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 1);
+        assert_eq!(bucket_of(1024), 10);
+        assert_eq!(bucket_of(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn rate_handles_zero_time() {
+        assert_eq!(rate_per_sec(100, 0), 0.0);
+        assert_eq!(rate_per_sec(5, 1_000_000_000), 5.0);
+    }
+
+    #[test]
+    fn enum_tables_are_consistent() {
+        for (i, c) in Counter::ALL.iter().enumerate() {
+            assert_eq!(c.idx(), i, "{}", c.name());
+        }
+        for (i, op) in TimedOp::ALL.iter().enumerate() {
+            assert_eq!(op.idx(), i, "{}", op.name());
+            // every timed op's ns counter exists in the table
+            assert!(op.ns_counter().idx() < N_COUNTERS);
+        }
+    }
+
+    // Enable/disable gating is a single test: the registry is process
+    // global and the disabled-phase equality asserts must run before any
+    // test in this binary ever enables recording (tests run in parallel).
+    #[test]
+    fn gate_and_counters() {
+        // phase 1 — disabled (process default): adds and timers are inert
+        assert!(!enabled());
+        let before = get(Counter::ShardEvictions);
+        add(Counter::ShardEvictions, 7);
+        let t = Timer::start();
+        let ns = t.stop(TimedOp::Save);
+        assert_eq!(ns, 0);
+        assert_eq!(get(Counter::ShardEvictions), before);
+
+        // phase 2 — enabled: counters advance (>=: other threads may also
+        // record while the gate is open)
+        set_enabled(true);
+        add(Counter::ShardEvictions, 3);
+        let t = Timer::start();
+        std::hint::black_box(fibonacci(18));
+        let ns = t.stop(TimedOp::Save);
+        set_enabled(false);
+        assert!(ns > 0);
+        assert!(get(Counter::ShardEvictions) >= before + 3);
+        assert!(get(Counter::SaveNs) >= ns);
+        let h = hist(TimedOp::Save);
+        assert!(h.iter().sum::<u64>() >= 1);
+    }
+
+    fn fibonacci(n: u64) -> u64 {
+        if n < 2 {
+            n
+        } else {
+            fibonacci(n - 1) + fibonacci(n - 2)
+        }
+    }
+}

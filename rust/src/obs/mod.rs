@@ -1,0 +1,23 @@
+//! # obs — self-observability for the benchmarking infrastructure
+//!
+//! The paper argues performance must be watched continuously as systems
+//! evolve; this module turns that lens on cbench itself, in two
+//! complementary time domains:
+//!
+//! * [`trace`] — **cluster time** (deterministic, simulated): a span
+//!   recorder threaded through the pipeline lifecycle (push → submit →
+//!   queue-wait → run → collect → detect → alert-open), with stable span
+//!   ids, Chrome trace-event export and critical-path analysis that
+//!   attributes a campaign's makespan to queue-wait vs run vs collect vs
+//!   maintenance segments per node and per repo. Byte-identical on
+//!   replay — the same contract as `sched::timeline()`.
+//! * [`metrics`] — **host time** (wall clock, noisy): fixed-slot atomic
+//!   counters and log2-bucket histograms around the real hot paths
+//!   (line-protocol parse, TSDB insert, shard materialization,
+//!   dirty-shard save, detector-state sync). Near-zero cost when
+//!   disabled; aggregates are uploaded into the TSDB as the
+//!   `cbench_self` measurement so the standard regression detector
+//!   watches the infrastructure's own throughput across commits.
+
+pub mod metrics;
+pub mod trace;

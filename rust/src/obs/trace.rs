@@ -1,0 +1,953 @@
+//! # obs::trace — deterministic cluster-time tracing of the pipeline lifecycle
+//!
+//! Records what the benchmarking infrastructure itself did with the
+//! cluster's time: one span per pipeline, job, queue-wait, run, collect,
+//! detect and alert-open step, plus campaign roots and maintenance
+//! windows. All timestamps are **simulated cluster seconds** (the
+//! scheduler's clock), never wall clock, so a replayed campaign produces a
+//! byte-identical trace — the same contract as `sched::timeline()`.
+//!
+//! ## Span model and id scheme
+//!
+//! A [`Span`] is `(id, parent, cat, name, repo, node, t0, t1, meta)`.
+//! Ids are **stable**: FNV-1a over `(cat, name, repo, node)`, where the
+//! name embeds the identifying coordinates — pipeline spans are named
+//! `p<pid> <repo> @<commit8>`, job-level spans `p<pid>/j<seq>/<job>` — so
+//! a span's id is a pure function of `(repo, push, pid, job seq)` and a
+//! re-recorded campaign assigns identical ids. `parent = 0` marks a root.
+//! Zero-length spans (`t0 == t1`) are instants (detect, alert-open).
+//!
+//! Categories: `campaign` (root, carries the node inventory in meta),
+//! `pipeline`, `job` (submit→end envelope), `queue` (submit→start),
+//! `run` (start→end, meta carries the submit time), `collect`
+//! (last job end→collected), `detect`, `alert-open`, `maint`
+//! (maintenance window clipped to the campaign interval).
+//!
+//! ## Exports
+//!
+//! * [`TraceRecorder::tree_text`] — indented span tree (`cbench trace show`)
+//! * [`TraceRecorder::chrome_json`] — Chrome trace-event JSON
+//!   (`cbench trace export --chrome`), one lane per node/repo, opens in
+//!   Perfetto or `chrome://tracing`
+//! * [`TraceRecorder::to_json`]/[`load`](TraceRecorder::load) — the
+//!   persisted form written by `--save-trace`
+//!
+//! ## Critical path
+//!
+//! [`critical_path`] walks the span DAG *backward* from the campaign end:
+//! the segment ending at `t` is whatever explains `t` — a run finishing
+//! there, a maintenance window lifting there, the blocked job's
+//! queue-wait back to its submit, or a collect phase — and the walk
+//! continues from that segment's start. Every boundary is a timestamp
+//! *copied* from the spans (never arithmetic), so adjacent segments meet
+//! exactly and the chain sums to the makespan with zero float drift —
+//! `attributed_pct` is emitted as exactly `100` only when the chain covers
+//! `[t0, t_end]` with bit-exact endpoints.
+
+use crate::util::json::Json;
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+
+/// FNV-1a over a part list (with separators, so `("ab","c") != ("a","bc")`).
+/// Returns a nonzero id — 0 is the "no parent" sentinel.
+pub fn fnv64(parts: &[&str]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for p in parts {
+        for b in p.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h ^= 0x1f;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    if h == 0 {
+        1
+    } else {
+        h
+    }
+}
+
+/// One traced interval (or instant, when `t0 == t1`) of cluster time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    pub id: u64,
+    /// Parent span id; 0 for roots.
+    pub parent: u64,
+    pub cat: String,
+    pub name: String,
+    /// Repository the work belongs to ("" for infrastructure spans).
+    pub repo: String,
+    /// Node the work ran on ("" when not node-bound).
+    pub node: String,
+    pub t0: f64,
+    pub t1: f64,
+    /// Extra key/value arguments (e.g. `submit` on run spans).
+    pub meta: Vec<(String, String)>,
+}
+
+impl Span {
+    pub fn dur(&self) -> f64 {
+        (self.t1 - self.t0).max(0.0)
+    }
+
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn meta_f64(&self, key: &str) -> Option<f64> {
+        self.meta_str(key).and_then(|v| v.parse().ok())
+    }
+}
+
+/// Append-only deterministic span recorder, carried by the coordinator.
+/// Enabled by default — recording costs a Vec push of already-known
+/// values on the (simulated) collect path, never on job hot paths — and
+/// fully inert when disabled: [`TraceRecorder::span`] returns 0 without
+/// hashing or allocating.
+#[derive(Debug, Clone)]
+pub struct TraceRecorder {
+    enabled: bool,
+    root: u64,
+    spans: Vec<Span>,
+}
+
+impl Default for TraceRecorder {
+    fn default() -> TraceRecorder {
+        TraceRecorder::new()
+    }
+}
+
+impl TraceRecorder {
+    pub fn new() -> TraceRecorder {
+        TraceRecorder { enabled: true, root: 0, spans: Vec::new() }
+    }
+
+    pub fn disabled() -> TraceRecorder {
+        TraceRecorder { enabled: false, root: 0, spans: Vec::new() }
+    }
+
+    pub fn set_enabled(&mut self, on: bool) {
+        self.enabled = on;
+    }
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+    pub fn spans(&self) -> &[Span] {
+        &self.spans
+    }
+    pub fn clear(&mut self) {
+        self.spans.clear();
+        self.root = 0;
+    }
+
+    /// Open a root span (a campaign). Subsequent [`TraceRecorder::root`]
+    /// calls return its id so pipeline spans can attach to it; `end_root`
+    /// closes it. Returns 0 when disabled.
+    pub fn begin_root(&mut self, name: &str, t0: f64, meta: &[(&str, &str)]) -> u64 {
+        if !self.enabled {
+            return 0;
+        }
+        let id = self.span_m(0, "campaign", name, "", "", t0, t0, meta);
+        self.root = id;
+        id
+    }
+
+    /// Close the current root span at `t1` (keeps the larger end if
+    /// pipeline spans already pushed it out).
+    pub fn end_root(&mut self, t1: f64) {
+        if !self.enabled {
+            return;
+        }
+        let root = self.root;
+        if let Some(s) = self.spans.iter_mut().find(|s| s.id == root) {
+            s.t1 = s.t1.max(t1);
+        }
+    }
+
+    /// Id of the open root span (0 when none — spans become roots).
+    pub fn root(&self) -> u64 {
+        self.root
+    }
+
+    /// Record a span. The id is the stable FNV of
+    /// `(cat, name, repo, node)` — see the module docs for the scheme.
+    pub fn span(
+        &mut self,
+        parent: u64,
+        cat: &str,
+        name: &str,
+        repo: &str,
+        node: &str,
+        t0: f64,
+        t1: f64,
+    ) -> u64 {
+        self.span_m(parent, cat, name, repo, node, t0, t1, &[])
+    }
+
+    /// [`TraceRecorder::span`] with meta key/value arguments attached.
+    #[allow(clippy::too_many_arguments)]
+    pub fn span_m(
+        &mut self,
+        parent: u64,
+        cat: &str,
+        name: &str,
+        repo: &str,
+        node: &str,
+        t0: f64,
+        t1: f64,
+        meta: &[(&str, &str)],
+    ) -> u64 {
+        if !self.enabled {
+            return 0;
+        }
+        let id = fnv64(&[cat, name, repo, node]);
+        self.spans.push(Span {
+            id,
+            parent,
+            cat: cat.to_string(),
+            name: name.to_string(),
+            repo: repo.to_string(),
+            node: node.to_string(),
+            t0,
+            t1,
+            meta: meta
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.to_string()))
+                .collect(),
+        });
+        id
+    }
+
+    /// Spans sorted by `(t0, t1, id)` — the deterministic export order.
+    fn sorted(&self) -> Vec<&Span> {
+        let mut v: Vec<&Span> = self.spans.iter().collect();
+        v.sort_by(|a, b| {
+            a.t0.total_cmp(&b.t0)
+                .then(a.t1.total_cmp(&b.t1))
+                .then(a.id.cmp(&b.id))
+        });
+        v
+    }
+
+    /// Indented span tree (`cbench trace show`). Children nest under
+    /// their parent sorted by `(t0, t1, id)`; orphans print as roots.
+    pub fn tree_text(&self) -> String {
+        let sorted = self.sorted();
+        let known: BTreeSet<u64> = sorted.iter().map(|s| s.id).collect();
+        let mut children: BTreeMap<u64, Vec<&Span>> = BTreeMap::new();
+        let mut roots: Vec<&Span> = Vec::new();
+        for s in &sorted {
+            if s.parent != 0 && known.contains(&s.parent) && s.parent != s.id {
+                children.entry(s.parent).or_default().push(s);
+            } else {
+                roots.push(s);
+            }
+        }
+        let mut out = String::new();
+        // manual stack: (span, depth), children pushed in reverse so the
+        // earliest child prints first
+        let mut stack: Vec<(&Span, usize)> = roots.into_iter().rev().map(|s| (s, 0)).collect();
+        let mut seen: BTreeSet<u64> = BTreeSet::new();
+        while let Some((s, depth)) = stack.pop() {
+            let indent = "  ".repeat(depth);
+            let tag = if s.t1 > s.t0 {
+                format!("t={:.3}..{:.3} ({:.3} s)", s.t0, s.t1, s.t1 - s.t0)
+            } else {
+                format!("t={:.3} (instant)", s.t0)
+            };
+            out.push_str(&format!("{indent}{} [{}] {}", s.name, s.cat, tag));
+            if !s.node.is_empty() {
+                out.push_str(&format!(" node={}", s.node));
+            }
+            if !s.repo.is_empty() {
+                out.push_str(&format!(" repo={}", s.repo));
+            }
+            out.push('\n');
+            if seen.insert(s.id) {
+                if let Some(kids) = children.get(&s.id) {
+                    for k in kids.iter().rev() {
+                        stack.push((k, depth + 1));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Chrome trace-event JSON (the `chrome://tracing` / Perfetto format):
+    /// one lane ("thread") per node, repo or the cluster itself, complete
+    /// events (`ph:"X"`) for intervals and instants (`ph:"i"`) for
+    /// zero-length spans, timestamps in microseconds of cluster time.
+    pub fn chrome_json(&self) -> Json {
+        let lane_of = |s: &Span| -> String {
+            if !s.node.is_empty() {
+                format!("node {}", s.node)
+            } else if !s.repo.is_empty() {
+                format!("repo {}", s.repo)
+            } else {
+                "cluster".to_string()
+            }
+        };
+        let lanes: BTreeSet<String> = self.spans.iter().map(|s| lane_of(s)).collect();
+        let tid: BTreeMap<&str, i64> = lanes
+            .iter()
+            .enumerate()
+            .map(|(i, l)| (l.as_str(), i as i64 + 1))
+            .collect();
+        let mut events: Vec<Json> = Vec::new();
+        for (lane, t) in &tid {
+            events.push(
+                Json::obj()
+                    .set("ph", "M")
+                    .set("pid", 1i64)
+                    .set("tid", *t)
+                    .set("name", "thread_name")
+                    .set("args", Json::obj().set("name", *lane)),
+            );
+        }
+        for s in self.sorted() {
+            let mut args = Json::obj()
+                .set("id", format!("{:016x}", s.id))
+                .set("parent", format!("{:016x}", s.parent));
+            if !s.repo.is_empty() {
+                args = args.set("repo", s.repo.as_str());
+            }
+            if !s.node.is_empty() {
+                args = args.set("node", s.node.as_str());
+            }
+            for (k, v) in &s.meta {
+                args = args.set(k, v.as_str());
+            }
+            let lane = lane_of(s);
+            let mut ev = Json::obj()
+                .set("pid", 1i64)
+                .set("tid", tid[lane.as_str()])
+                .set("name", s.name.as_str())
+                .set("cat", s.cat.as_str())
+                .set("ts", s.t0 * 1e6)
+                .set("args", args);
+            ev = if s.t1 > s.t0 {
+                ev.set("ph", "X").set("dur", (s.t1 - s.t0) * 1e6)
+            } else {
+                ev.set("ph", "i").set("s", "t")
+            };
+            events.push(ev);
+        }
+        Json::obj()
+            .set("displayTimeUnit", "ms")
+            .set("traceEvents", Json::Arr(events))
+    }
+
+    /// The persisted form (`--save-trace` / `cbench trace --trace FILE`).
+    pub fn to_json(&self) -> Json {
+        let spans: Vec<Json> = self
+            .spans
+            .iter()
+            .map(|s| {
+                let mut meta = Json::obj();
+                for (k, v) in &s.meta {
+                    meta = meta.set(k, v.as_str());
+                }
+                Json::obj()
+                    .set("id", format!("{:016x}", s.id))
+                    .set("parent", format!("{:016x}", s.parent))
+                    .set("cat", s.cat.as_str())
+                    .set("name", s.name.as_str())
+                    .set("repo", s.repo.as_str())
+                    .set("node", s.node.as_str())
+                    .set("t0", s.t0)
+                    .set("t1", s.t1)
+                    .set("meta", meta)
+            })
+            .collect();
+        Json::obj()
+            .set("version", 1i64)
+            .set("root", format!("{:016x}", self.root))
+            .set("spans", Json::Arr(spans))
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<TraceRecorder> {
+        let hex = |s: &str| u64::from_str_radix(s, 16).map_err(|e| anyhow::anyhow!("bad id: {e}"));
+        let mut rec = TraceRecorder::new();
+        rec.root = match j.get("root").and_then(|v| v.as_str()) {
+            Some(s) => hex(s)?,
+            None => 0,
+        };
+        let spans = j
+            .get("spans")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("trace file has no spans array"))?;
+        for s in spans {
+            let str_of = |k: &str| s.get(k).and_then(|v| v.as_str()).unwrap_or("").to_string();
+            let num_of = |k: &str| -> anyhow::Result<f64> {
+                s.get(k)
+                    .and_then(|v| v.as_f64())
+                    .ok_or_else(|| anyhow::anyhow!("span missing {k}"))
+            };
+            let meta: Vec<(String, String)> = s
+                .get("meta")
+                .and_then(|v| v.as_obj())
+                .map(|m| {
+                    m.iter()
+                        .filter_map(|(k, v)| v.as_str().map(|v| (k.clone(), v.to_string())))
+                        .collect()
+                })
+                .unwrap_or_default();
+            rec.spans.push(Span {
+                id: hex(&str_of("id"))?,
+                parent: hex(&str_of("parent"))?,
+                cat: str_of("cat"),
+                name: str_of("name"),
+                repo: str_of("repo"),
+                node: str_of("node"),
+                t0: num_of("t0")?,
+                t1: num_of("t1")?,
+                meta,
+            });
+        }
+        Ok(rec)
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .map_err(|e| anyhow::anyhow!("cannot write trace {}: {e}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<TraceRecorder> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read trace {}: {e} — record one with `cbench campaign --save-trace {}`",
+                path.display(),
+                path.display()
+            )
+        })?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("bad trace file: {e}"))?;
+        TraceRecorder::from_json(&j)
+    }
+}
+
+/// One segment of the critical-path chain.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CritSegment {
+    pub t0: f64,
+    pub t1: f64,
+    /// `run` | `queue-wait` | `maintenance` | `collect` | `idle`.
+    pub cat: String,
+    /// The span name that explains this segment.
+    pub what: String,
+    pub node: String,
+    pub repo: String,
+}
+
+impl CritSegment {
+    pub fn dur(&self) -> f64 {
+        self.t1 - self.t0
+    }
+}
+
+/// Where one node's campaign time went (`run`/`maint`/`wait` from a
+/// boundary sweep, `idle` by subtraction so the four sum to the makespan
+/// exactly).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct NodeBreakdown {
+    pub run: f64,
+    pub maint: f64,
+    pub wait: f64,
+    pub idle: f64,
+}
+
+/// Per-repository run/queue-wait totals (raw span sums across nodes).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RepoBreakdown {
+    pub run: f64,
+    pub wait: f64,
+    pub jobs: usize,
+}
+
+/// Output of [`critical_path`].
+#[derive(Debug, Clone)]
+pub struct CritPath {
+    pub t0: f64,
+    pub t_end: f64,
+    pub makespan: f64,
+    /// The chain, oldest first; adjacent segments share an endpoint.
+    pub segments: Vec<CritSegment>,
+    pub by_category: BTreeMap<String, f64>,
+    pub per_node: BTreeMap<String, NodeBreakdown>,
+    pub per_repo: BTreeMap<String, RepoBreakdown>,
+}
+
+impl CritPath {
+    /// Time span covered by the chain — equals `makespan` bit-exactly
+    /// when [`CritPath::covers_exactly`] holds, because both are the same
+    /// two endpoint values subtracted.
+    pub fn attributed(&self) -> f64 {
+        match self.segments.first() {
+            Some(s) => self.t_end - s.t0,
+            None => 0.0,
+        }
+    }
+
+    /// True when the chain tiles `[t0, t_end]` exactly: bit-equal shared
+    /// endpoints between adjacent segments, first start == `t0`, last
+    /// end == `t_end`.
+    pub fn covers_exactly(&self) -> bool {
+        if self.segments.is_empty() {
+            return self.makespan == 0.0;
+        }
+        let contiguous = self
+            .segments
+            .windows(2)
+            .all(|w| w[0].t1 == w[1].t0);
+        contiguous
+            && self.segments.first().map(|s| s.t0) == Some(self.t0)
+            && self.segments.last().map(|s| s.t1) == Some(self.t_end)
+    }
+
+    pub fn attributed_pct(&self) -> f64 {
+        if self.covers_exactly() {
+            100.0
+        } else if self.makespan > 0.0 {
+            100.0 * self.attributed() / self.makespan
+        } else {
+            0.0
+        }
+    }
+
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "critical path: makespan {:.3} s over [{:.3}, {:.3}] — {} segments, {:.1}% attributed\n",
+            self.makespan,
+            self.t0,
+            self.t_end,
+            self.segments.len(),
+            self.attributed_pct()
+        ));
+        out.push_str("\nchain (oldest first):\n");
+        for s in &self.segments {
+            out.push_str(&format!(
+                "  [{:>10.3} ..{:>10.3}] {:>11} {:>9.3} s  {}{}{}\n",
+                s.t0,
+                s.t1,
+                s.cat,
+                s.dur(),
+                s.what,
+                if s.node.is_empty() { String::new() } else { format!("  node={}", s.node) },
+                if s.repo.is_empty() { String::new() } else { format!("  repo={}", s.repo) },
+            ));
+        }
+        out.push_str("\nby category (of the chain):\n");
+        for (cat, secs) in &self.by_category {
+            let pct = if self.makespan > 0.0 { 100.0 * secs / self.makespan } else { 0.0 };
+            out.push_str(&format!("  {cat:>11} {secs:>10.3} s  {pct:>5.1}%\n"));
+        }
+        if !self.per_node.is_empty() {
+            out.push_str("\nper node (full partition; run+maint+wait+idle = makespan):\n");
+            out.push_str(&format!(
+                "  {:<12} {:>10} {:>10} {:>10} {:>10}\n",
+                "node", "run", "maint", "wait", "idle"
+            ));
+            for (node, b) in &self.per_node {
+                out.push_str(&format!(
+                    "  {:<12} {:>10.3} {:>10.3} {:>10.3} {:>10.3}\n",
+                    node, b.run, b.maint, b.wait, b.idle
+                ));
+            }
+        }
+        if !self.per_repo.is_empty() {
+            out.push_str("\nper repo (raw span sums across nodes):\n");
+            out.push_str(&format!(
+                "  {:<12} {:>5} {:>10} {:>10}\n",
+                "repo", "jobs", "run", "queue-wait"
+            ));
+            for (repo, b) in &self.per_repo {
+                out.push_str(&format!(
+                    "  {:<12} {:>5} {:>10.3} {:>10.3}\n",
+                    repo, b.jobs, b.run, b.wait
+                ));
+            }
+        }
+        out
+    }
+
+    /// The single-line `CRITPATH_JSON` payload.
+    pub fn to_json(&self) -> Json {
+        let mut by_cat = Json::obj();
+        for (k, v) in &self.by_category {
+            by_cat = by_cat.set(k, *v);
+        }
+        let mut nodes = Json::obj();
+        for (n, b) in &self.per_node {
+            nodes = nodes.set(
+                n,
+                Json::obj()
+                    .set("run", b.run)
+                    .set("maint", b.maint)
+                    .set("wait", b.wait)
+                    .set("idle", b.idle),
+            );
+        }
+        let mut repos = Json::obj();
+        for (r, b) in &self.per_repo {
+            repos = repos.set(
+                r,
+                Json::obj()
+                    .set("run", b.run)
+                    .set("wait", b.wait)
+                    .set("jobs", b.jobs),
+            );
+        }
+        Json::obj()
+            .set("makespan_s", self.makespan)
+            .set("t0", self.t0)
+            .set("t_end", self.t_end)
+            .set("segments", self.segments.len())
+            .set("attributed_s", self.attributed())
+            .set("attributed_pct", self.attributed_pct())
+            .set("by_category", by_cat)
+            .set("per_node", nodes)
+            .set("per_repo", repos)
+    }
+}
+
+/// Walk the span DAG backward from the campaign end and attribute the
+/// makespan to a contiguous chain of run / queue-wait / maintenance /
+/// collect / idle segments (see the module docs for the algorithm and the
+/// exactness argument). Also computes the full per-node time partition
+/// and per-repo totals.
+pub fn critical_path(spans: &[Span]) -> anyhow::Result<CritPath> {
+    anyhow::ensure!(
+        !spans.is_empty(),
+        "empty trace — run a campaign or pipeline with tracing enabled first"
+    );
+    let campaign = spans.iter().find(|s| s.cat == "campaign");
+    let (t0, t_end) = match campaign {
+        Some(c) => (c.t0, c.t1),
+        None => spans
+            .iter()
+            .fold((f64::INFINITY, f64::NEG_INFINITY), |(a, b), s| {
+                (a.min(s.t0), b.max(s.t1))
+            }),
+    };
+    anyhow::ensure!(t_end >= t0, "degenerate trace interval");
+    let makespan = t_end - t0;
+
+    let runs: Vec<&Span> = spans.iter().filter(|s| s.cat == "run").collect();
+    let maints: Vec<&Span> = spans.iter().filter(|s| s.cat == "maint").collect();
+    let queues: Vec<&Span> = spans.iter().filter(|s| s.cat == "queue").collect();
+    let collects: Vec<&Span> = spans.iter().filter(|s| s.cat == "collect").collect();
+
+    // --- the chain: walk backward from t_end ---
+    let mut segs: Vec<CritSegment> = Vec::new(); // newest-first while building
+    let mut t = t_end;
+    // the job whose start we are currently explaining:
+    // (submit time, node, repo, name)
+    let mut floor: Option<(f64, String, String, String)> = None;
+    while t > t0 {
+        let t_before = t;
+        if let Some(f) = &floor {
+            if t <= f.0 {
+                floor = None;
+            }
+        }
+        // deterministic pick among candidates ending exactly at t: the
+        // latest-starting span, ties broken by smallest id
+        let pick = |cands: &[&Span], node: Option<&str>| -> Option<Span> {
+            cands
+                .iter()
+                .filter(|s| s.t1 == t && s.t0 < t && node.map_or(true, |n| s.node == n))
+                .max_by(|a, b| a.t0.total_cmp(&b.t0).then(b.id.cmp(&a.id)))
+                .map(|s| (*s).clone())
+        };
+        let node = floor.as_ref().map(|f| f.1.clone());
+        // 1) a run finishing exactly at t (on the blocked job's node, if
+        //    one is being explained) — the cluster computed until t
+        if let Some(r) = pick(&runs, node.as_deref()) {
+            segs.push(CritSegment {
+                t0: r.t0,
+                t1: t,
+                cat: "run".to_string(),
+                what: r.name.clone(),
+                node: r.node.clone(),
+                repo: r.repo.clone(),
+            });
+            let submit = r.meta_f64("submit").unwrap_or(r.t0).max(t0);
+            floor = Some((submit, r.node, r.repo, r.name));
+            t = r.t0;
+            continue;
+        }
+        // 2) a maintenance window lifting exactly at t blocked the node
+        if let Some(m) = pick(&maints, node.as_deref()) {
+            let start = floor
+                .as_ref()
+                .map(|f| f.0.max(m.t0))
+                .unwrap_or(m.t0)
+                .max(t0);
+            if start < t {
+                segs.push(CritSegment {
+                    t0: start,
+                    t1: t,
+                    cat: "maintenance".to_string(),
+                    what: m.name.clone(),
+                    node: m.node.clone(),
+                    repo: String::new(),
+                });
+                t = start;
+                continue;
+            }
+        }
+        // 3) nothing ended at t but a job was waiting: queue-wait back to
+        //    its submission (priority / fair-share / wake ordering)
+        if let Some(f) = floor.take() {
+            if f.0 < t {
+                segs.push(CritSegment {
+                    t0: f.0,
+                    t1: t,
+                    cat: "queue-wait".to_string(),
+                    what: f.3,
+                    node: f.1,
+                    repo: f.2,
+                });
+                t = f.0;
+                continue;
+            }
+        }
+        // 4) a collect phase ending exactly at t (campaign tails, and the
+        //    inter-pipeline gap of sequential runs)
+        if let Some(c) = pick(&collects, None) {
+            segs.push(CritSegment {
+                t0: c.t0,
+                t1: t,
+                cat: "collect".to_string(),
+                what: c.name.clone(),
+                node: String::new(),
+                repo: c.repo.clone(),
+            });
+            t = c.t0;
+            continue;
+        }
+        // 5) unexplained: idle gap back to the latest earlier span edge
+        let prev = spans
+            .iter()
+            .flat_map(|s| [s.t0, s.t1])
+            .filter(|&e| e < t)
+            .fold(t0, f64::max);
+        segs.push(CritSegment {
+            t0: prev,
+            t1: t,
+            cat: "idle".to_string(),
+            what: "gap".to_string(),
+            node: String::new(),
+            repo: String::new(),
+        });
+        t = prev;
+        anyhow::ensure!(t < t_before, "critical-path walk stalled at t={t}");
+    }
+    segs.reverse();
+
+    let mut by_category: BTreeMap<String, f64> = BTreeMap::new();
+    for s in &segs {
+        *by_category.entry(s.cat.clone()).or_insert(0.0) += s.dur();
+    }
+
+    // --- per-node partition: boundary sweep, priority run > maint >
+    // wait, idle by subtraction so the four sum to the makespan exactly
+    let mut node_names: BTreeSet<String> = runs
+        .iter()
+        .chain(&maints)
+        .chain(&queues)
+        .filter(|s| !s.node.is_empty())
+        .map(|s| s.node.clone())
+        .collect();
+    if let Some(c) = campaign {
+        if let Some(hosts) = c.meta_str("nodes") {
+            node_names.extend(hosts.split(',').filter(|h| !h.is_empty()).map(String::from));
+        }
+    }
+    let mut per_node: BTreeMap<String, NodeBreakdown> = BTreeMap::new();
+    for node in &node_names {
+        let mut edges: Vec<f64> = vec![t0, t_end];
+        for s in runs.iter().chain(&maints).chain(&queues) {
+            if &s.node == node {
+                for e in [s.t0, s.t1] {
+                    if e > t0 && e < t_end {
+                        edges.push(e);
+                    }
+                }
+            }
+        }
+        edges.sort_by(f64::total_cmp);
+        edges.dedup();
+        let covered = |set: &[&Span], a: f64, b: f64| {
+            set.iter().any(|s| &s.node == node && s.t0 <= a && b <= s.t1)
+        };
+        let mut b = NodeBreakdown::default();
+        for w in edges.windows(2) {
+            let len = w[1] - w[0];
+            if covered(&runs, w[0], w[1]) {
+                b.run += len;
+            } else if covered(&maints, w[0], w[1]) {
+                b.maint += len;
+            } else if covered(&queues, w[0], w[1]) {
+                b.wait += len;
+            }
+        }
+        b.idle = (makespan - b.run - b.maint - b.wait).max(0.0);
+        per_node.insert(node.clone(), b);
+    }
+
+    let mut per_repo: BTreeMap<String, RepoBreakdown> = BTreeMap::new();
+    for s in &runs {
+        if s.repo.is_empty() {
+            continue;
+        }
+        let e = per_repo.entry(s.repo.clone()).or_default();
+        e.run += s.dur();
+        e.jobs += 1;
+    }
+    for s in &queues {
+        if s.repo.is_empty() {
+            continue;
+        }
+        per_repo.entry(s.repo.clone()).or_default().wait += s.dur();
+    }
+
+    Ok(CritPath { t0, t_end, makespan, segments: segs, by_category, per_node, per_repo })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_recorder() -> TraceRecorder {
+        let mut rec = TraceRecorder::new();
+        let root = rec.begin_root("campaign", 0.0, &[("nodes", "a,b")]);
+        let p = rec.span_m(root, "pipeline", "p1 fe2ti @abcdef12", "fe2ti", "", 0.0, 100.0, &[]);
+        let j1 = rec.span(p, "job", "p1/j0/cg", "fe2ti", "a", 0.0, 40.0);
+        rec.span_m(j1, "run", "p1/j0/cg", "fe2ti", "a", 0.0, 40.0, &[("submit", "0")]);
+        rec.span(root, "maint", "maint/a/0", "", "a", 40.0, 45.0);
+        let j2 = rec.span(p, "job", "p1/j1/asm", "fe2ti", "a", 0.0, 90.0);
+        rec.span(j2, "queue", "p1/j1/asm", "fe2ti", "a", 0.0, 45.0);
+        rec.span_m(j2, "run", "p1/j1/asm", "fe2ti", "a", 45.0, 90.0, &[("submit", "0")]);
+        rec.span(p, "collect", "collect p1", "fe2ti", "", 90.0, 100.0);
+        rec.span(p, "detect", "detect p1", "fe2ti", "", 100.0, 100.0);
+        rec.end_root(100.0);
+        rec
+    }
+
+    #[test]
+    fn ids_are_stable_and_exports_are_byte_identical() {
+        let a = sample_recorder();
+        let b = sample_recorder();
+        assert_eq!(
+            a.spans().iter().map(|s| s.id).collect::<Vec<_>>(),
+            b.spans().iter().map(|s| s.id).collect::<Vec<_>>()
+        );
+        assert_eq!(a.to_json().to_string_pretty(), b.to_json().to_string_pretty());
+        assert_eq!(
+            a.chrome_json().to_string_pretty(),
+            b.chrome_json().to_string_pretty()
+        );
+        assert_eq!(a.tree_text(), b.tree_text());
+        // distinct spans get distinct ids
+        let mut ids: Vec<u64> = a.spans().iter().map(|s| s.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), a.len());
+    }
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let mut rec = TraceRecorder::disabled();
+        assert_eq!(rec.begin_root("campaign", 0.0, &[]), 0);
+        assert_eq!(rec.span(0, "run", "x", "r", "n", 0.0, 1.0), 0);
+        rec.end_root(5.0);
+        assert!(rec.is_empty());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_spans() {
+        let rec = sample_recorder();
+        let back = TraceRecorder::from_json(&rec.to_json()).unwrap();
+        assert_eq!(back.spans().len(), rec.spans().len());
+        for (a, b) in rec.spans().iter().zip(back.spans()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.parent, b.parent);
+            assert_eq!(a.cat, b.cat);
+            assert_eq!(a.t0, b.t0);
+            assert_eq!(a.t1, b.t1);
+        }
+        // re-serializing the loaded trace is byte-identical
+        assert_eq!(rec.to_json().to_string_pretty(), back.to_json().to_string_pretty());
+    }
+
+    #[test]
+    fn critical_path_tiles_the_makespan_exactly() {
+        let rec = sample_recorder();
+        let cp = critical_path(rec.spans()).unwrap();
+        assert_eq!(cp.makespan, 100.0);
+        assert!(cp.covers_exactly(), "chain: {:?}", cp.segments);
+        assert_eq!(cp.attributed(), cp.makespan);
+        assert_eq!(cp.attributed_pct(), 100.0);
+        // collect(90..100) <- run asm(45..90) <- maint(40..45) <- run cg(0..40)
+        let cats: Vec<&str> = cp.segments.iter().map(|s| s.cat.as_str()).collect();
+        assert_eq!(cats, ["run", "maintenance", "run", "collect"]);
+        assert_eq!(cp.by_category["run"], 85.0);
+        assert_eq!(cp.by_category["maintenance"], 5.0);
+        assert_eq!(cp.by_category["collect"], 10.0);
+        // per-node partition sums to the makespan for every node
+        for (node, b) in &cp.per_node {
+            let total = b.run + b.maint + b.wait + b.idle;
+            assert!((total - cp.makespan).abs() < 1e-9, "{node}: {total}");
+        }
+        // node b was idle the whole campaign (inventory via root meta)
+        assert_eq!(cp.per_node["b"].idle, 100.0);
+        assert_eq!(cp.per_repo["fe2ti"].jobs, 2);
+        assert_eq!(cp.per_repo["fe2ti"].run, 85.0);
+        assert_eq!(cp.per_repo["fe2ti"].wait, 45.0);
+    }
+
+    #[test]
+    fn spans_nest_within_parents() {
+        let rec = sample_recorder();
+        let by_id: BTreeMap<u64, &Span> = rec.spans().iter().map(|s| (s.id, s)).collect();
+        for s in rec.spans() {
+            if s.parent == 0 {
+                continue;
+            }
+            let p = by_id.get(&s.parent).expect("parent exists");
+            assert!(
+                p.t0 <= s.t0 && s.t1 <= p.t1,
+                "{} [{}..{}] escapes parent {} [{}..{}]",
+                s.name,
+                s.t0,
+                s.t1,
+                p.name,
+                p.t0,
+                p.t1
+            );
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("cbench_trace_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.json");
+        let rec = sample_recorder();
+        rec.save(&path).unwrap();
+        let back = TraceRecorder::load(&path).unwrap();
+        assert_eq!(rec.to_json().to_string_pretty(), back.to_json().to_string_pretty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -75,6 +75,18 @@ pub struct Alert {
     /// whole campaign makespan. Set by `coordinator::collect_pipeline`;
     /// `None` for alerts opened outside a pipeline (e.g. `regress detect`).
     pub sla_secs: Option<f64>,
+    /// SLA breakdown (set together with `sla_secs` from the offending
+    /// pipeline's record): time its first job waited in the queue.
+    pub sla_queue_secs: Option<f64>,
+    /// …time its jobs ran (first start → last end).
+    pub sla_run_secs: Option<f64>,
+    /// …its collect latency (last job end → points uploaded).
+    pub sla_collect_secs: Option<f64>,
+    /// …detection lag (its upload → the alert actually opening; >0 when
+    /// the detector needed later pipelines to confirm the change). The
+    /// four components sum to `sla_secs` exactly — detect is computed as
+    /// the remainder.
+    pub sla_detect_secs: Option<f64>,
     /// Commit tag at the located change point (detection-time guess).
     pub suspect_commit: Option<String>,
     /// First bad commit confirmed by bisection.
@@ -169,6 +181,10 @@ impl AlertBook {
                     rel_change: f.rel_change,
                     change_ts: f.change_ts,
                     sla_secs: None,
+                    sla_queue_secs: None,
+                    sla_run_secs: None,
+                    sla_collect_secs: None,
+                    sla_detect_secs: None,
                     suspect_commit: f.suspect_commit.clone(),
                     first_bad_commit: None,
                     archive_record: None,
@@ -421,6 +437,18 @@ fn alert_to_json(a: &Alert) -> Json {
     if let Some(s) = a.sla_secs {
         j = j.set("sla_secs", s);
     }
+    if let Some(s) = a.sla_queue_secs {
+        j = j.set("sla_queue_secs", s);
+    }
+    if let Some(s) = a.sla_run_secs {
+        j = j.set("sla_run_secs", s);
+    }
+    if let Some(s) = a.sla_collect_secs {
+        j = j.set("sla_collect_secs", s);
+    }
+    if let Some(s) = a.sla_detect_secs {
+        j = j.set("sla_detect_secs", s);
+    }
     if let Some(c) = &a.suspect_commit {
         j = j.set("suspect_commit", c.as_str());
     }
@@ -470,6 +498,10 @@ fn alert_from_json(j: &Json) -> Result<Alert, String> {
         rel_change: opt_num(j, "rel_change").unwrap_or(0.0),
         change_ts: opt_num(j, "change_ts").unwrap_or(0.0) as i64,
         sla_secs: opt_num(j, "sla_secs"),
+        sla_queue_secs: opt_num(j, "sla_queue_secs"),
+        sla_run_secs: opt_num(j, "sla_run_secs"),
+        sla_collect_secs: opt_num(j, "sla_collect_secs"),
+        sla_detect_secs: opt_num(j, "sla_detect_secs"),
         suspect_commit: opt_str(j, "suspect_commit"),
         first_bad_commit: opt_str(j, "first_bad_commit"),
         archive_record: opt_num(j, "archive_record").map(|v| v as Id),
@@ -608,6 +640,10 @@ mod tests {
         );
         book.alerts[0].first_bad_commit = Some("feedface".into());
         book.alerts[0].sla_secs = Some(182.25);
+        book.alerts[0].sla_queue_secs = Some(100.0);
+        book.alerts[0].sla_run_secs = Some(60.25);
+        book.alerts[0].sla_collect_secs = Some(12.0);
+        book.alerts[0].sla_detect_secs = Some(10.0);
         book.acknowledge(book.alerts[0].id).unwrap();
 
         let j = book.to_json();
@@ -619,6 +655,10 @@ mod tests {
         assert_eq!(a.group["node"], "icx36");
         assert_eq!(a.first_bad_commit.as_deref(), Some("feedface"));
         assert_eq!(a.sla_secs, Some(182.25));
+        assert_eq!(a.sla_queue_secs, Some(100.0));
+        assert_eq!(a.sla_run_secs, Some(60.25));
+        assert_eq!(a.sla_collect_secs, Some(12.0));
+        assert_eq!(a.sla_detect_secs, Some(10.0));
         assert_eq!(a.opened_ts, 7);
         assert!((a.rel_change + 0.15).abs() < 1e-12);
         // ids keep counting after reload

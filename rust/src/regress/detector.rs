@@ -407,6 +407,17 @@ impl Detector {
                     .direction(Direction::LowerIsBetter)
                     .thresholds(0.10, 0.05, 0.5),
             )
+            // the benchmarker benchmarked: the coordinator uploads its own
+            // ingest/parse/sync throughput as `cbench_self` (obs::metrics)
+            // and the same detector watches it. Host-time rates are noisy,
+            // hence the wide 30% threshold — the statistical gate does the
+            // rest (an injected slowdown is caught; jitter is not).
+            .policy(
+                Policy::new("self-throughput", "cbench_self", "points_per_sec")
+                    .group_by(&["component", "repo"])
+                    .direction(Direction::HigherIsBetter)
+                    .thresholds(0.30, 0.05, 0.5),
+            )
     }
 
     pub fn policy(mut self, p: Policy) -> Detector {

@@ -199,6 +199,7 @@ impl DetectorState {
     /// watermark inconsistency (replaced/rewound database, out-of-order
     /// insert below the watermark) rebuilds the affected measurement.
     pub fn sync(&mut self, det: &Detector, db: &Db) {
+        let timer = crate::obs::metrics::Timer::start();
         let fp = detector_fingerprint(det);
         if fp != self.config {
             self.config = fp;
@@ -220,6 +221,7 @@ impl DetectorState {
         for (m, pol_idx) in work {
             self.sync_measurement(det, db, &m, &pol_idx);
         }
+        timer.stop(crate::obs::metrics::TimedOp::DetectorSync);
     }
 
     fn sync_measurement(&mut self, det: &Detector, db: &Db, m: &str, pol_idx: &[usize]) {
@@ -347,6 +349,7 @@ impl DetectorState {
         p: &Point,
         distinct_cap: usize,
     ) {
+        crate::obs::metrics::add(crate::obs::metrics::Counter::SyncPoints, 1);
         let seq = {
             let ms = self.measurements.entry(m.to_string()).or_default();
             if ms.seq == 0 || p.ts != ms.wm_ts {

@@ -354,6 +354,11 @@ impl SimScheduler {
         self.windows.get(host).map(|w| w.as_slice()).unwrap_or(&[])
     }
 
+    /// All hostnames, sorted (the stable node index).
+    pub fn hosts(&self) -> &[String] {
+        &self.hosts
+    }
+
     /// Add a closed maintenance window `[from, until)` on `host`: no new
     /// job starts inside it, and no job whose *time limit* would carry it
     /// into the window starts in front of it. Jobs already running when

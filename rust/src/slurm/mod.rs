@@ -154,6 +154,19 @@ impl Scheduler {
     pub fn job_log(&self, id: u64) -> Option<&str> {
         self.core.job_log(id)
     }
+
+    /// `scontrol show node HOST` maintenance view: the node's windows,
+    /// `[from, until)` sorted by start (`until` may be `INFINITY` for an
+    /// open drain).
+    pub fn maintenance_windows(&self, host: &str) -> &[(f64, f64)] {
+        self.core.maintenance_windows(host)
+    }
+
+    /// The deterministic event log (`sacct`-style): submissions, starts,
+    /// finishes with simulated times — the replay/trace ground truth.
+    pub fn timeline(&self) -> String {
+        self.core.timeline()
+    }
 }
 
 #[cfg(test)]

@@ -114,11 +114,19 @@ pub mod query;
 
 pub use query::{Aggregate, GroupedSeries, Query, TAIL_SCAN_SLACK};
 
+use crate::obs::metrics as om;
 use crate::util::json::Json;
-use std::cell::OnceCell;
+use std::cell::{Cell, OnceCell};
 use std::collections::{BTreeMap, BTreeSet};
 use std::io::Write;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-global monotone stamp for shard-body touch order (the LRU key
+/// behind [`Db::evict_cold_bodies`]). Global rather than per-`Db` because
+/// `Shard::points` takes `&self`; within one process a deterministic
+/// access sequence still yields a deterministic eviction order.
+static TOUCH: AtomicU64 = AtomicU64::new(1);
 
 /// Default shard span: 4096 simulated seconds. Campaign trigger clocks
 /// advance 1 s per pipeline, so a shard holds ~4096 pipeline triggers.
@@ -296,6 +304,11 @@ pub struct Shard {
     /// Lazily materialized body. Pre-set for in-memory shards, parsed
     /// from `file` on first access for manifest-loaded ones.
     body: OnceCell<Vec<Point>>,
+    /// Touch stamp of the last body access (LRU recency; see [`TOUCH`]).
+    touch: Cell<u64>,
+    /// Body was evicted at least once — the next materialization counts
+    /// as a re-materialization in the self-metrics.
+    evicted: Cell<bool>,
 }
 
 impl Shard {
@@ -312,6 +325,8 @@ impl Shard {
             max_ts: 0,
             file: None,
             body,
+            touch: Cell::new(TOUCH.fetch_add(1, Ordering::Relaxed)),
+            evicted: Cell::new(false),
         }
     }
 
@@ -361,13 +376,23 @@ impl Shard {
     /// manifest is authoritative for a bound store; rebuild via
     /// [`Db::export_lp`] + reload if a store was edited by hand.
     pub fn points(&self) -> &[Point] {
-        self.body.get_or_init(|| {
+        if self.body.get().is_none() {
+            let t = om::Timer::start();
             let path = self
                 .file
                 .as_deref()
                 .expect("unloaded shard always has a backing file");
-            read_shard_file(path, self.n)
-        })
+            let pts = read_shard_file(path, self.n);
+            om::add(om::Counter::ShardLoads, 1);
+            om::add(om::Counter::ShardLoadPoints, pts.len() as u64);
+            if self.evicted.get() {
+                om::add(om::Counter::ShardRemats, 1);
+            }
+            t.stop(om::TimedOp::ShardLoad);
+            let _ = self.body.set(pts);
+        }
+        self.touch.set(TOUCH.fetch_add(1, Ordering::Relaxed));
+        self.body.get().expect("body just materialized")
     }
 
     /// Mutable body access (materializes first).
@@ -449,6 +474,9 @@ pub struct Db {
     /// Saves onto the home rewrite only dirty shards; saving elsewhere
     /// copies everything and rebinds.
     home: Option<PathBuf>,
+    /// Cap on concurrently materialized shard bodies (LRU eviction of
+    /// clean, cold bodies; `None` = unbounded). See [`Db::set_body_cap`].
+    body_cap: Option<usize>,
 }
 
 impl Default for Db {
@@ -470,6 +498,7 @@ impl Db {
             measurements: BTreeMap::new(),
             shard_span_ns: span_ns.max(1),
             home: None,
+            body_cap: None,
         }
     }
 
@@ -492,6 +521,7 @@ impl Db {
     /// reopens that shard for the next [`Db::compact`] pass, which merges
     /// raw points and existing rollups weight-correctly.
     pub fn insert(&mut self, p: Point) {
+        let timer = om::Timer::start();
         let key = p.ts.div_euclid(self.shard_span_ns);
         let raw = !p.tags.contains_key(ROLLUP_TAG);
         let ts = p.ts;
@@ -526,10 +556,16 @@ impl Db {
             s.max_ts = s.max_ts.max(ts);
         }
         s.dirty = true;
+        om::add(om::Counter::InsertPoints, 1);
+        timer.stop(om::TimedOp::Insert);
+        if self.body_cap.is_some() {
+            self.maybe_evict();
+        }
     }
 
     /// Ingest a batch of line-protocol text (the pipeline's upload step).
     pub fn ingest_lines(&mut self, text: &str) -> Result<usize, String> {
+        let timer = om::Timer::start();
         let mut n = 0;
         for line in text.lines() {
             let line = line.trim();
@@ -539,7 +575,79 @@ impl Db {
             self.insert(Point::parse_line(line)?);
             n += 1;
         }
+        om::add(om::Counter::LpLines, n as u64);
+        timer.stop(om::TimedOp::LpParse);
         Ok(n)
+    }
+
+    /// Cap the number of concurrently materialized shard bodies. The
+    /// mutating entry points ([`Db::insert`], and everything built on it)
+    /// enforce the cap by evicting clean, cold, file-backed bodies in LRU
+    /// order; dirty or unbacked bodies are never evicted (they cannot be
+    /// reloaded), so the cap is best-effort while many shards are mutated
+    /// between saves. `None` (the default) disables eviction.
+    pub fn set_body_cap(&mut self, cap: Option<usize>) {
+        self.body_cap = cap;
+        self.maybe_evict();
+    }
+
+    pub fn body_cap(&self) -> Option<usize> {
+        self.body_cap
+    }
+
+    /// Number of shard bodies currently materialized in memory.
+    pub fn loaded_bodies(&self) -> usize {
+        self.measurements
+            .values()
+            .flatten()
+            .filter(|s| s.is_loaded())
+            .count()
+    }
+
+    /// Evict clean, cold shard bodies — least recently touched first —
+    /// until at most `keep` bodies remain materialized. Only clean,
+    /// file-backed bodies are candidates; the freed body reloads lazily
+    /// (and byte-identically — the file is the body's source of truth)
+    /// on its next touch. Returns the eviction count; each eviction bumps
+    /// the `shard_evictions` self-metric and the eventual reload counts
+    /// as a `shard_remats`.
+    pub fn evict_cold_bodies(&mut self, keep: usize) -> usize {
+        let loaded = self.loaded_bodies();
+        if loaded <= keep {
+            return 0;
+        }
+        // (touch stamp, measurement, shard index) of every candidate
+        let mut cands: Vec<(u64, String, usize)> = Vec::new();
+        for (m, shards) in &self.measurements {
+            for (i, s) in shards.iter().enumerate() {
+                if s.is_loaded() && !s.dirty && s.file.is_some() {
+                    cands.push((s.touch.get(), m.clone(), i));
+                }
+            }
+        }
+        cands.sort();
+        let mut over = loaded - keep;
+        let mut evicted = 0;
+        for (_, m, i) in cands {
+            if over == 0 {
+                break;
+            }
+            let s = &mut self.measurements.get_mut(&m).expect("candidate exists")[i];
+            let _ = s.body.take();
+            s.evicted.set(true);
+            om::add(om::Counter::ShardEvictions, 1);
+            evicted += 1;
+            over -= 1;
+        }
+        evicted
+    }
+
+    fn maybe_evict(&mut self) {
+        if let Some(cap) = self.body_cap {
+            if self.loaded_bodies() > cap {
+                self.evict_cold_bodies(cap);
+            }
+        }
     }
 
     pub fn measurements(&self) -> impl Iterator<Item = &String> {
@@ -767,6 +875,7 @@ impl Db {
 
     /// [`Db::save`] returning the written/kept shard split.
     pub fn save_report(&mut self, path: &Path) -> std::io::Result<PersistReport> {
+        let timer = om::Timer::start();
         // legacy single-file store: move it aside (atomic rename) instead
         // of deleting it — the history's only on-disk copy must survive
         // until the manifest layout has fully committed. The `.bak` is
@@ -859,6 +968,8 @@ impl Db {
         // save's migration or a crashed earlier one — is superseded
         std::fs::remove_file(legacy_bak_path(path)).ok();
         self.home = Some(path.to_path_buf());
+        om::add(om::Counter::SaveShardsWritten, rep.shards_written as u64);
+        timer.stop(om::TimedOp::Save);
         Ok(rep)
     }
 
@@ -999,6 +1110,8 @@ impl Db {
                         max_ts,
                         file: Some(path),
                         body: OnceCell::new(),
+                        touch: Cell::new(0),
+                        evicted: Cell::new(false),
                     });
                 }
                 shards.sort_by_key(|s| s.key);
@@ -1496,6 +1609,63 @@ lbm,node=rome1,op=srt mlups=400 3
         assert_eq!(back.tail_start_ts("m", 3), Some(97));
         assert!(back.shards("m")[9].is_loaded());
         assert!(!back.shards("m")[0].is_loaded(), "cold history stays cold");
+    }
+
+    #[test]
+    fn lru_eviction_caps_loaded_bodies_and_reloads_lazily() {
+        let mut db = deep_db(10, 100); // 10 shards
+        let path = tmp_store("lru");
+        db.save(&path).unwrap();
+        let mut back = Db::load(&path).unwrap();
+        assert_eq!(back.loaded_bodies(), 0);
+
+        // materialize every shard, oldest-to-newest touch order
+        let n: usize = back.points_iter("m").count();
+        assert_eq!(n, 200);
+        assert_eq!(back.loaded_bodies(), 10);
+
+        // explicit eviction keeps the most recently touched bodies
+        let evicted = back.evict_cold_bodies(3);
+        assert_eq!(evicted, 7);
+        assert_eq!(back.loaded_bodies(), 3);
+        let loaded: Vec<i64> = back
+            .shards("m")
+            .iter()
+            .filter(|s| s.is_loaded())
+            .map(|s| s.key())
+            .collect();
+        assert_eq!(loaded, vec![7, 8, 9], "LRU keeps the newest-touched shards");
+
+        // evicted bodies re-materialize lazily, byte-identical
+        let hits: Vec<i64> = back.points_in_range("m", Some(12), Some(13)).map(|p| p.ts).collect();
+        assert_eq!(hits, vec![12, 12, 13, 13]);
+        assert_eq!(back.loaded_bodies(), 4);
+        assert!(back.shards("m")[1].evicted.get());
+
+        // with a cap set, the mutating path holds it automatically
+        back.set_body_cap(Some(2));
+        assert!(back.loaded_bodies() <= 2);
+        for _ in back.points_in_range("m", Some(0), Some(49)) {} // warm 5 shards
+        assert!(back.loaded_bodies() > 2, "read path does not evict");
+        back.insert(Point::new("m", 99).tag("s", "x").field("v", 1.0));
+        assert!(back.loaded_bodies() <= 3, "insert path enforces the cap");
+
+        // dirty bodies are never evicted: the shard just inserted into
+        // must survive an aggressive eviction pass
+        let dirty_key = 99i64.div_euclid(10);
+        back.evict_cold_bodies(0);
+        let still: Vec<i64> = back
+            .shards("m")
+            .iter()
+            .filter(|s| s.is_loaded())
+            .map(|s| s.key())
+            .collect();
+        assert_eq!(still, vec![dirty_key], "only the dirty shard stays");
+        // the store still saves correctly after evictions
+        back.save(&path).unwrap();
+        let again = Db::load(&path).unwrap();
+        assert_eq!(again.len(), 201);
+        std::fs::remove_dir_all(&path).ok();
     }
 
     #[test]

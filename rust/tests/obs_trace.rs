@@ -1,0 +1,241 @@
+//! End-to-end tests of the observability layer (`obs::`): the
+//! cluster-time trace a campaign records replays byte-identically, spans
+//! nest properly, the critical-path walk attributes the *entire*
+//! makespan exactly, alert SLAs decompose into components that sum back,
+//! and `--self-metrics` uploads the coordinator's own throughput as a
+//! detector-watched measurement.
+
+use cbench::ci::CiJob;
+use cbench::coordinator::campaign::{
+    run_campaign_with, CampaignConfig, CampaignProject, ProjectKind,
+};
+use cbench::coordinator::{CbSystem, PreparedJob};
+use cbench::obs::trace::{critical_path, Span};
+use cbench::sched::JobOutcome;
+use std::collections::HashMap;
+
+fn toy_jobs(tag: &str, spec: &[(&str, f64, usize)]) -> Vec<PreparedJob> {
+    let mut jobs = Vec::new();
+    for (host, dur, count) in spec {
+        for i in 0..*count {
+            let dur = *dur;
+            jobs.push(PreparedJob {
+                ci: CiJob::new(&format!("{tag}-{host}-{i}"), "benchmark").var("HOST", host),
+                payload: Box::new(move |_n, _t| JobOutcome {
+                    duration: dur,
+                    stdout: format!("TAG case=toy\nTAG collision_op=srt\nMETRIC mlups={dur}\n"),
+                    exit_code: 0,
+                }),
+            });
+        }
+    }
+    jobs
+}
+
+/// A drained + backfilled streaming campaign: one hour-limit job that
+/// must wait for the maintenance resume edge, two short-limit jobs that
+/// backfill the gap — the trace shows queue-wait, maintenance, run and
+/// backfill, all on scheduler-clock values.
+fn drained_run() -> (CbSystem, f64) {
+    let mut cb = CbSystem::new();
+    let mut projects = vec![CampaignProject::new("alpha", ProjectKind::Walberla)];
+    let cfg = CampaignConfig {
+        pushes: 1,
+        penalty: 0.0,
+        seed: 11,
+        drains: vec![("icx36".to_string(), 100.0, 3000.0)],
+        ..CampaignConfig::default()
+    };
+    let out = run_campaign_with(&mut cb, &mut projects, &cfg, |_p, _c| {
+        let mut jobs = vec![PreparedJob {
+            ci: CiJob::new("big-icx36", "benchmark")
+                .var("HOST", "icx36")
+                .var("SLURM_TIMELIMIT", "60"),
+            payload: Box::new(|_n, _t| JobOutcome {
+                duration: 120.0,
+                stdout: "METRIC v=1\n".into(),
+                exit_code: 0,
+            }),
+        }];
+        jobs.extend(
+            toy_jobs("small", &[("icx36", 20.0, 2)])
+                .into_iter()
+                .map(|j| PreparedJob { ci: j.ci.var("SLURM_TIMELIMIT", "1"), payload: j.payload }),
+        );
+        jobs
+    })
+    .unwrap();
+    (cb, out.makespan)
+}
+
+#[test]
+fn trace_replays_byte_identical_across_runs() {
+    // the same contract as sched::timeline(): identical submissions =>
+    // identical trace, in every export format, byte for byte
+    let (cb1, mk1) = drained_run();
+    let (cb2, mk2) = drained_run();
+    assert!(!cb1.trace.is_empty());
+    assert_eq!(mk1, mk2);
+    assert_eq!(cb1.trace.len(), cb2.trace.len());
+    assert_eq!(
+        cb1.trace.to_json().to_string_pretty(),
+        cb2.trace.to_json().to_string_pretty(),
+        "native trace JSON must replay byte-identically"
+    );
+    assert_eq!(
+        cb1.trace.chrome_json().to_string_compact(),
+        cb2.trace.chrome_json().to_string_compact(),
+        "chrome export must replay byte-identically"
+    );
+    assert_eq!(cb1.trace.tree_text(), cb2.trace.tree_text());
+}
+
+#[test]
+fn spans_nest_within_their_parents() {
+    let (cb, _) = drained_run();
+    let spans = cb.trace.spans();
+    let by_id: HashMap<u64, &Span> = spans.iter().map(|s| (s.id, s)).collect();
+    assert!(spans.iter().any(|s| s.cat == "campaign"), "root span exists");
+    assert!(spans.iter().any(|s| s.cat == "maint"), "drain window recorded");
+    for s in spans {
+        assert!(s.t1 >= s.t0, "{}", s.name);
+        if s.parent != 0 {
+            let p = by_id
+                .get(&s.parent)
+                .unwrap_or_else(|| panic!("parent of `{}` missing from trace", s.name));
+            assert!(
+                s.t0 >= p.t0 && s.t1 <= p.t1,
+                "span `{}` [{};{}] escapes parent `{}` [{};{}]",
+                s.name,
+                s.t0,
+                s.t1,
+                p.name,
+                p.t0,
+                p.t1
+            );
+        }
+    }
+    // every run span closes its job envelope; queue spans start at the
+    // pipeline submission (they explain the wait, not the work)
+    for s in spans.iter().filter(|s| s.cat == "run") {
+        let j = by_id[&s.parent];
+        assert_eq!(j.cat, "job");
+        assert_eq!(s.t1, j.t1, "job `{}` ends when its run ends", j.name);
+    }
+    for s in spans.iter().filter(|s| s.cat == "queue") {
+        let j = by_id[&s.parent];
+        assert_eq!(s.t0, j.t0, "queue wait starts at submission of `{}`", j.name);
+    }
+}
+
+#[test]
+fn critical_path_attributes_the_entire_makespan_exactly() {
+    let (cb, makespan) = drained_run();
+    let cp = critical_path(cb.trace.spans()).unwrap();
+    // bit-exact agreement with the campaign's own makespan: both are the
+    // same two scheduler timestamps subtracted
+    assert_eq!(cp.makespan, makespan);
+    assert!(cp.covers_exactly(), "segments must tile [t0, t_end] with bit-equal boundaries");
+    assert_eq!(cp.attributed(), cp.makespan);
+    assert_eq!(cp.attributed_pct(), 100.0);
+    assert!(!cp.segments.is_empty());
+    assert_eq!(cp.segments.first().unwrap().t0, cp.t0);
+    assert_eq!(cp.segments.last().unwrap().t1, cp.t_end);
+    // the drained roster's path: the big job's queue-wait, the window,
+    // its run — all three must appear
+    assert!(cp.by_category.contains_key("run"), "{:?}", cp.by_category);
+    assert!(cp.by_category.contains_key("maintenance"), "{:?}", cp.by_category);
+    assert!(cp.by_category.contains_key("queue-wait"), "{:?}", cp.by_category);
+    // per-node partition: run + maint + wait + idle == makespan per node
+    assert!(!cp.per_node.is_empty());
+    for (node, b) in &cp.per_node {
+        let sum = b.run + b.maint + b.wait + b.idle;
+        assert!(
+            (sum - cp.makespan).abs() < 1e-6,
+            "node {node}: partition {sum} != makespan {}",
+            cp.makespan
+        );
+    }
+    // idle nodes from the root span's inventory still show up
+    assert!(cp.per_node.len() > 1, "idle Testcluster nodes must be listed too");
+    assert!(cp.per_repo.contains_key("alpha"));
+    assert!(cp.per_repo["alpha"].jobs >= 3);
+    // the JSON the CLI prints as CRITPATH_JSON carries the exactness flag
+    let j = cp.to_json();
+    assert_eq!(j.get("attributed_pct").and_then(|v| v.as_f64()), Some(100.0));
+}
+
+/// The icx36 slice of the real waLBerla matrix — cheap but faithful
+/// (honors the commit's `benchmark.cfg` penalty).
+fn icx36_walberla_jobs(p: &CampaignProject, commit: &str) -> Vec<PreparedJob> {
+    ProjectKind::Walberla
+        .jobs_for(&p.repo, commit)
+        .into_iter()
+        .filter(|j| j.ci.get("HOST") == Some("icx36"))
+        .collect()
+}
+
+#[test]
+fn sla_decomposes_and_self_metrics_upload_under_detection() {
+    let mut cb = CbSystem::new();
+    cb.set_self_metrics(true);
+    let mut projects = vec![
+        CampaignProject::new("nhr-walberla", ProjectKind::Walberla),
+        CampaignProject::new("proxy-walberla", ProjectKind::Walberla),
+    ];
+    let out = run_campaign_with(
+        &mut cb,
+        &mut projects,
+        &CampaignConfig {
+            pushes: 3,
+            inject_at: 3,
+            penalty: 0.15,
+            seed: 5,
+            ..CampaignConfig::default()
+        },
+        icx36_walberla_jobs,
+    )
+    .unwrap();
+    assert!(out.alerts_opened() > 0, "planted regression must open alerts");
+    for r in &out.reports {
+        assert!(r.submitted_at <= r.first_started_at, "#{}", r.pipeline_id);
+        assert!(r.first_started_at <= r.first_result_at, "#{}", r.pipeline_id);
+    }
+
+    // every opened benchmark alert decomposes its SLA into queue + run +
+    // collect + detect components that sum back to sla_secs
+    let opened: Vec<_> = cb
+        .alerts
+        .alerts
+        .iter()
+        .filter(|a| a.measurement == "lbm" && a.sla_secs.is_some())
+        .collect();
+    assert!(!opened.is_empty());
+    for a in &opened {
+        let sla = a.sla_secs.unwrap();
+        let q = a.sla_queue_secs.expect("queue component stamped");
+        let r = a.sla_run_secs.expect("run component stamped");
+        let c = a.sla_collect_secs.expect("collect component stamped");
+        let d = a.sla_detect_secs.expect("detect component stamped");
+        assert!(q >= 0.0 && r >= 0.0 && c >= 0.0, "alert #{}: {q} {r} {c}", a.id);
+        assert!(d >= -1e-9, "detect remainder must not be negative: {d}");
+        assert!(
+            ((q + r + c + d) - sla).abs() <= 1e-9 * sla.max(1.0),
+            "alert #{}: {q}+{r}+{c}+{d} != {sla}",
+            a.id
+        );
+        assert!(r > 0.0, "the offending pipeline did run");
+    }
+
+    // self-metrics landed under their own measurement, tagged for the
+    // stock `self-throughput` policy (component+repo grouping)
+    assert!(cb.db.points_iter("cbench_self").count() > 0);
+    let comps = cb.db.tag_values("cbench_self", "component");
+    assert!(comps.contains(&"tsdb_insert".to_string()), "{comps:?}");
+    assert!(comps.contains(&"job_parse".to_string()), "{comps:?}");
+    for p in cb.db.points_iter("cbench_self") {
+        assert_eq!(p.tags.get("repo").map(|s| s.as_str()), Some("cbench"));
+        assert!(p.fields.get("points_per_sec").copied().unwrap_or(0.0) > 0.0);
+        assert!(p.fields.get("ops").copied().unwrap_or(0.0) >= 1.0);
+    }
+}

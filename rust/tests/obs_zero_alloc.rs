@@ -1,0 +1,60 @@
+//! The disabled-path cost contract of `obs::`: with metrics recording
+//! off (the default) and a disabled trace recorder, the instrumentation
+//! hooks that sit on the TSDB/coordinator hot paths must not allocate at
+//! all — a counting global allocator proves it.
+//!
+//! This lives in its own test binary on purpose: integration test
+//! binaries run their `#[test]`s in parallel threads sharing one global
+//! allocator, so any sibling test's allocations would race the counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn disabled_observability_paths_allocate_nothing() {
+    use cbench::obs::metrics as om;
+    use cbench::obs::trace::TraceRecorder;
+
+    assert!(!om::enabled(), "metrics recording must default to off");
+    let mut rec = TraceRecorder::disabled();
+
+    // warm up any lazy statics outside the measured window
+    om::add(om::Counter::LpLines, 1);
+    let t = om::Timer::start();
+    t.stop(om::TimedOp::LpParse);
+    rec.span(0, "run", "warmup", "repo", "node", 0.0, 1.0);
+
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for i in 0..10_000u64 {
+        om::add(om::Counter::InsertPoints, i);
+        let t = om::Timer::start();
+        t.stop(om::TimedOp::Insert);
+        rec.span(0, "run", "hot", "repo", "node", 0.0, 1.0);
+        rec.span_m(0, "job", "hot2", "repo", "node", 0.0, 2.0, &[("k", "v")]);
+    }
+    let after = ALLOCS.load(Ordering::Relaxed);
+    assert_eq!(after - before, 0, "disabled obs hooks must not allocate");
+    assert!(rec.is_empty(), "disabled recorder must record nothing");
+    assert_eq!(om::get(om::Counter::InsertPoints), 0, "disabled counters stay zero");
+}
