@@ -637,6 +637,10 @@ impl CbSystem {
         let mut first_end = f64::INFINITY;
         let mut first_start = f64::INFINITY;
         let mut node_load: BTreeMap<String, f64> = BTreeMap::new();
+        // --- phase 1 (serial): read terminal job state off the scheduler
+        // and fold the latency/load accounting, in job order ---
+        let mut gathered: Vec<(String, String, JobState, String)> =
+            Vec::with_capacity(pending.jobs.len());
         for (sched_id, ci) in &pending.jobs {
             let job = self.scheduler.job(*sched_id).expect("job exists");
             let state = job.state;
@@ -651,18 +655,36 @@ impl CbSystem {
                 first_start = first_start.min(start);
                 *node_load.entry(node_host.clone()).or_insert(0.0) += end - start;
             }
-            let node = self.scheduler.node(&node_host).unwrap().clone();
             if state == JobState::Completed {
                 completed += 1;
             } else {
                 failed += 1;
             }
+            gathered.push((ci.name.clone(), node_host, state, log));
+        }
 
-            // --- parse + upload (fields & tags, trigger time as ts) ---
-            let jt = om::Timer::start();
-            let metrics = parse_job_output(&ci.name, &node_host, &log);
-            om::add(om::Counter::JobsParsed, 1);
-            jt.stop(om::TimedOp::JobParse);
+        // --- phase 2 (parallel): parse every job log — the CPU-heavy
+        // part of collect — across the par pool. `par::map` returns in
+        // job order, so the merge below is byte-identical to the old
+        // serial loop for any thread count. ---
+        let parsed = {
+            let items: Vec<(&str, &str, &str)> = gathered
+                .iter()
+                .map(|(name, host, _, log)| (name.as_str(), host.as_str(), log.as_str()))
+                .collect();
+            crate::par::map(items, |(name, host, log)| {
+                let jt = om::Timer::start();
+                let metrics = parse_job_output(name, host, log);
+                om::add(om::Counter::JobsParsed, 1);
+                jt.stop(om::TimedOp::JobParse);
+                metrics
+            })
+        };
+
+        // --- phase 3 (serial merge, job order): upload + archive — the
+        // TSDB insert order and record/link ids stay exactly as before ---
+        for ((name, node_host, state, log), metrics) in gathered.iter().zip(parsed) {
+            let node = self.scheduler.node(node_host).unwrap().clone();
             if !metrics.fields.is_empty() {
                 let mut p = Point::new(&pending.measurement, trigger_ts);
                 p.tags.insert("node".into(), node_host.clone());
@@ -686,19 +708,19 @@ impl CbSystem {
             let rid_job = self
                 .store
                 .create_record(
-                    &format!("p{}-job-{}", pending.pipeline_id, ci.name),
-                    &format!("job log {}", ci.name),
+                    &format!("p{}-job-{}", pending.pipeline_id, name),
+                    &format!("job log {name}"),
                     "job-log",
                 )
                 .map_err(|e| anyhow::anyhow!(e))?;
-            self.store.attach_file(rid_job, "slurm.log", &log).ok();
-            self.store.set_meta(rid_job, "node", &node_host).ok();
+            self.store.attach_file(rid_job, "slurm.log", log).ok();
+            self.store.set_meta(rid_job, "node", node_host).ok();
             self.store.set_meta(rid_job, "state", &format!("{state:?}")).ok();
             let rid_perf = self
                 .store
                 .create_record(
-                    &format!("p{}-perf-{}", pending.pipeline_id, ci.name),
-                    &format!("likwid output {}", ci.name),
+                    &format!("p{}-perf-{}", pending.pipeline_id, name),
+                    &format!("likwid output {name}"),
                     "likwid-output",
                 )
                 .map_err(|e| anyhow::anyhow!(e))?;
@@ -706,12 +728,12 @@ impl CbSystem {
             let rid_ms = self
                 .store
                 .create_record(
-                    &format!("p{}-ms-{}", pending.pipeline_id, ci.name),
-                    &format!("machinestate {}", ci.name),
+                    &format!("p{}-ms-{}", pending.pipeline_id, name),
+                    &format!("machinestate {name}"),
                     "machinestate",
                 )
                 .map_err(|e| anyhow::anyhow!(e))?;
-            let ms = machine_state(&node, &ci.name, self.scheduler.now());
+            let ms = machine_state(&node, name, self.scheduler.now());
             self.store
                 .attach_file(rid_ms, "machinestate.json", &ms.to_string_pretty())
                 .ok();

@@ -28,6 +28,7 @@ pub mod dashboard;
 pub mod datastore;
 pub mod mpisim;
 pub mod obs;
+pub mod par;
 pub mod perf;
 pub mod regress;
 pub mod report;

@@ -35,6 +35,11 @@ fn main() {
 fn cbench_main(argv: Vec<String>) -> anyhow::Result<()> {
     let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
     let args = Args::parse(argv.iter().skip(1).cloned());
+    // process-wide worker count for every par:: fan-out (collect/detect,
+    // shard I/O, batched lp parsing). 0 = one worker per available core.
+    // Results are byte-identical for any value — this knob trades only
+    // wall-clock.
+    cbench::par::set_threads(args.get_usize("threads", 0));
     match cmd {
         "help" | "--help" | "-h" => {
             println!("{HELP}");
@@ -1128,7 +1133,7 @@ COMMANDS:
            [--commits N] [--inject-regression K] [--penalty P]
            [--save-tsdb STORE] [--save-alerts FILE] [--save-state FILE]
            [--detect incremental|requery] [--save-trace FILE]
-           [--shard-cache N]
+           [--shard-cache N] [--threads N]
                                 K plants the waLBerla kernel regression at
                                 commit #K (penalty P, default 0.15); state
                                 persists to cbench_tsdb.lp (a manifest
@@ -1143,7 +1148,7 @@ COMMANDS:
            [--collect streaming|batch] [--detect incremental|requery]
            [--save-tsdb STORE] [--save-alerts FILE] [--save-state FILE]
            [--save-trace FILE] [--self-metrics on|off] [--self-slowdown F]
-           [--shard-cache N]
+           [--shard-cache N] [--threads N]
                                 multi-repo coordinator: N repositories
                                 (alternating walberla/fe2ti) x M pushes,
                                 every pipeline overlapped on ONE
@@ -1179,7 +1184,13 @@ COMMANDS:
                                 (--self-slowdown F divides the uploaded
                                 rates: a CI fault injector);
                                 --shard-cache N caps loaded shard bodies
-                                (LRU eviction, lazy re-materialization)
+                                (LRU eviction, lazy re-materialization);
+                                --threads N sets the worker count for the
+                                parallel collect/detect, shard I/O and
+                                batched line-protocol parse fan-outs
+                                (global, any command; default: one worker
+                                per core; results are byte-identical for
+                                any N -- only wall-clock changes)
   trace <show|export|critical-path> [--trace FILE] [--chrome] [--out FILE]
                                 inspect a saved cluster-time trace:
                                 show prints the span tree; export
@@ -1356,7 +1367,11 @@ CB pipeline wiring (paper Figs. 3-4):
        roster still runs; upload + detection below are serialized per
        pipeline in (completion time, pipeline id) order, so batch
        collection (--collect batch) produces the identical TSDB /
-       alerts / timeline, just later
+       alerts / timeline, just later. WITHIN one pipeline's collect the
+       hot work fans out across the par:: worker pool (--threads N):
+       job-log parsing, per-series detection, shard materialization and
+       dirty-shard writes run in parallel and merge back in input order,
+       so every artifact stays byte-identical for any thread count
     -> benchmarks execute (apps::fe2ti / apps::walberla; LBM kernels
        optionally through the JAX/Pallas PJRT artifacts, runtime::)
     -> output parsed (likwid-style counters, perf::)

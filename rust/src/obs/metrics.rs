@@ -339,6 +339,30 @@ mod tests {
         assert!(get(Counter::SaveNs) >= ns);
         let h = hist(TimedOp::Save);
         assert!(h.iter().sum::<u64>() >= 1);
+
+        // phase 3 — contention: the slots are process-global relaxed
+        // atomics, so adds and timers from par:: worker threads must
+        // aggregate without losing updates (`--self-metrics on` with
+        // `--threads > 1` depends on this). 8 threads x 1000 adds each,
+        // plus a timer per thread; totals must grow by at least the sum.
+        let c0 = get(Counter::LpLines);
+        let h0: u64 = hist(TimedOp::LpParse).iter().sum();
+        set_enabled(true);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for _ in 0..1000 {
+                        add(Counter::LpLines, 1);
+                    }
+                    let t = Timer::start();
+                    std::hint::black_box(fibonacci(12));
+                    t.stop(TimedOp::LpParse);
+                });
+            }
+        });
+        set_enabled(false);
+        assert!(get(Counter::LpLines) >= c0 + 8 * 1000, "lost counter updates under contention");
+        assert!(hist(TimedOp::LpParse).iter().sum::<u64>() >= h0 + 8, "lost histogram samples under contention");
     }
 
     fn fibonacci(n: u64) -> u64 {

@@ -1,0 +1,219 @@
+//! # par — deterministic fan-out across scoped worker threads
+//!
+//! The whole collect → parse → upload → detect hot path used to run on
+//! one thread; this module is the minimal parallel substrate that fixes
+//! that **without giving up the replay contract**. Everything in cbench
+//! that claims byte-identical output (timelines, TSDB contents, alert
+//! books, traces) keeps that claim for any thread count because every
+//! fan-out goes through [`map`], whose result order is the *input*
+//! order — worker scheduling decides only the wall-clock, never the
+//! merge order.
+//!
+//! Design (deliberately boring — no new dependencies, std only):
+//!
+//! * **No work stealing.** Workers are plain [`std::thread::scope`]
+//!   threads pulling `(index, item)` pairs from one shared queue (a
+//!   mutexed iterator — the spmc channel std does not ship; sharing an
+//!   `mpsc::Receiver` across workers needs the same mutex anyway).
+//!   Results land in per-index slots, so the output `Vec` is assembled
+//!   in input order no matter which worker finished when.
+//! * **Global thread count**, set once from the CLI (`--threads N`,
+//!   default [`std::thread::available_parallelism`]): the pool is a
+//!   process-wide policy like `obs::metrics::set_enabled`, not a value
+//!   threaded through every call site. `1` (or one-element inputs) runs
+//!   inline on the caller's thread — zero spawns, zero locks.
+//! * **No nested fan-out.** A worker that reaches another [`map`] (e.g.
+//!   a parallel shard prefetch whose materialization parses line
+//!   protocol in parallel) runs it inline: parallelism stays bounded by
+//!   the configured thread count instead of multiplying per layer.
+//!
+//! What must stay serial stays serial at the call sites: per-pipeline
+//! collect order (`(completion, pid)`), `Db::insert` ordering within a
+//! shard, alert-book ingestion, and the manifest rename that commits a
+//! save. See ARCHITECTURE.md §7 for the full concurrency model.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Configured worker count; `0` means "not set — use
+/// [`std::thread::available_parallelism`]".
+static THREADS: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Set inside pool workers so nested [`map`] calls run inline.
+    static IN_WORKER: Cell<bool> = Cell::new(false);
+}
+
+/// Set the process-wide worker count. `0` restores the default
+/// (one worker per available core). Safe to call at any time; fan-outs
+/// already in flight keep the count they started with.
+pub fn set_threads(n: usize) {
+    THREADS.store(n, Ordering::Relaxed);
+}
+
+/// The effective worker count for the next fan-out.
+pub fn threads() -> usize {
+    match THREADS.load(Ordering::Relaxed) {
+        0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        n => n,
+    }
+}
+
+/// True when the current thread is a pool worker (nested fan-outs run
+/// inline — see the module docs).
+pub fn in_worker() -> bool {
+    IN_WORKER.with(|w| w.get())
+}
+
+/// Apply `f` to every item, fanning the work across up to [`threads`]
+/// scoped workers, and return the results **in input order** — the
+/// output is identical to `items.into_iter().map(f).collect()` for any
+/// thread count (determinism by ordered merge, not by scheduling).
+/// Runs inline when one worker suffices or when called from inside a
+/// worker. A panicking `f` propagates to the caller after the scope
+/// joins, as with serial iteration.
+pub fn map<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let workers = threads().min(items.len());
+    if workers <= 1 || in_worker() {
+        return items.into_iter().map(f).collect();
+    }
+    let len = items.len();
+    // the work queue: workers pull (index, item) pairs; per-index result
+    // slots make the merge order the input order
+    let queue = Mutex::new(items.into_iter().enumerate());
+    let slots: Vec<Mutex<Option<R>>> = (0..len).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| {
+                IN_WORKER.with(|w| w.set(true));
+                loop {
+                    // hold the queue lock only to pull the next item —
+                    // `f` runs unlocked
+                    let next = queue.lock().expect("queue poisoned").next();
+                    let Some((i, item)) = next else { break };
+                    let r = f(item);
+                    *slots[i].lock().expect("slot poisoned") = Some(r);
+                }
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .expect("slot poisoned")
+                .expect("every queue item fills its slot")
+        })
+        .collect()
+}
+
+/// [`map`] for fallible work: returns the first `Err` **in input
+/// order** (not completion order — the same error a serial loop would
+/// surface), or all results in input order.
+pub fn try_map<T, R, E, F>(items: Vec<T>, f: F) -> Result<Vec<R>, E>
+where
+    T: Send,
+    R: Send,
+    E: Send,
+    F: Fn(T) -> Result<R, E> + Sync,
+{
+    map(items, f).into_iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    /// `THREADS` is process-global and the harness runs tests in
+    /// parallel — tests that assert on it serialize through this lock.
+    /// (Poisoning is fine: a poisoned lock means another test failed.)
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn map_preserves_input_order_for_any_thread_count() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let input: Vec<usize> = (0..1000).collect();
+        for t in [1usize, 2, 3, 4, 8, 16] {
+            set_threads(t);
+            let out = map(input.clone(), |x| x * 2);
+            assert_eq!(out, input.iter().map(|x| x * 2).collect::<Vec<_>>(), "t={t}");
+        }
+        set_threads(0);
+    }
+
+    #[test]
+    fn map_handles_degenerate_inputs() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_threads(4);
+        assert_eq!(map(Vec::<usize>::new(), |x| x), Vec::<usize>::new());
+        assert_eq!(map(vec![7usize], |x| x + 1), vec![8]);
+        set_threads(0);
+    }
+
+    #[test]
+    fn map_actually_runs_on_worker_threads() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_threads(4);
+        let main_id = std::thread::current().id();
+        let offloaded = AtomicUsize::new(0);
+        let _ = map((0..64).collect::<Vec<usize>>(), |x| {
+            if std::thread::current().id() != main_id {
+                offloaded.fetch_add(1, Ordering::Relaxed);
+            }
+            x
+        });
+        assert_eq!(offloaded.load(Ordering::Relaxed), 64, "workers do all the pulling");
+        set_threads(0);
+    }
+
+    #[test]
+    fn nested_map_runs_inline_and_stays_correct() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_threads(4);
+        let out = map((0..8).collect::<Vec<usize>>(), |x| {
+            assert!(in_worker());
+            // the inner fan-out must not spawn (and must still be right)
+            map((0..4).collect::<Vec<usize>>(), |y| x * 10 + y)
+        });
+        for (x, inner) in out.iter().enumerate() {
+            assert_eq!(inner, &vec![x * 10, x * 10 + 1, x * 10 + 2, x * 10 + 3]);
+        }
+        set_threads(0);
+    }
+
+    #[test]
+    fn try_map_returns_the_first_error_in_input_order() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        for t in [1usize, 4] {
+            set_threads(t);
+            let r: Result<Vec<usize>, String> = try_map((0..100).collect(), |x| {
+                if x == 13 || x == 77 {
+                    Err(format!("bad {x}"))
+                } else {
+                    Ok(x)
+                }
+            });
+            assert_eq!(r.unwrap_err(), "bad 13", "t={t}: lowest index wins");
+            let ok: Result<Vec<usize>, String> = try_map((0..10).collect(), Ok);
+            assert_eq!(ok.unwrap(), (0..10).collect::<Vec<_>>());
+        }
+        set_threads(0);
+    }
+
+    #[test]
+    fn threads_zero_means_available_parallelism() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_threads(0);
+        assert!(threads() >= 1);
+        set_threads(3);
+        assert_eq!(threads(), 3);
+        set_threads(0);
+    }
+}

@@ -19,7 +19,7 @@
 use super::stats::{
     cusum_changepoint, mann_whitney, mean, normal_two_sided_p, welch_t, BaselineStats,
 };
-use crate::tsdb::{Db, Query};
+use crate::tsdb::{Db, GroupedSeries, Query};
 use std::collections::BTreeMap;
 
 /// Sign convention for "worse": throughput-like metrics regress when they
@@ -357,14 +357,22 @@ pub fn evaluate_policy_run_scoped(
             q = q.where_tag(k, v);
         }
     }
-    for s in q.run(db) {
-        if s.points.len() < 2 {
-            continue;
-        }
+    // per-series evaluation is embarrassingly parallel (each series
+    // reads its own points; commit_at is a read-only range probe on the
+    // now-Sync Db) — fan out and merge in series order, so fingerprints
+    // and findings come back exactly as the serial loop produced them
+    let series: Vec<GroupedSeries> = q.run(db).into_iter().filter(|s| s.points.len() >= 2).collect();
+    let results = crate::par::map(series, |s| {
         let label = s.label();
-        evaluated.push(series_fingerprint(&policy.name, &label));
-        if let Some(mut f) = evaluate_series(policy, &label, &s.group, &s.points) {
+        let f = evaluate_series(policy, &label, &s.group, &s.points).map(|mut f| {
             f.suspect_commit = commit_at(db, &policy.measurement, &s.group, f.change_ts);
+            f
+        });
+        (label, f)
+    });
+    for (label, f) in results {
+        evaluated.push(series_fingerprint(&policy.name, &label));
+        if let Some(f) = f {
             findings.push(f);
         }
     }

@@ -453,6 +453,11 @@ impl DetectorState {
                 continue;
             };
             let repo_filter = applied.first().map(|&(_, v)| v);
+            // serial filter pass first (cheap), then fan the per-series
+            // evaluations across the par pool and merge in series order —
+            // identical fingerprint/finding order to the serial loop for
+            // any thread count (ps.series is a BTreeMap: stable order)
+            let mut cands: Vec<(&Vec<(String, String)>, Vec<(i64, f64)>)> = Vec::new();
             for (key, buf) in &ps.series {
                 if let Some(r) = repo_filter {
                     // a series whose repo group is "<none>" comes from
@@ -469,11 +474,20 @@ impl DetectorState {
                 if pts.len() < 2 {
                     continue;
                 }
+                cands.push((key, pts));
+            }
+            let results = crate::par::map(cands, |(key, pts)| {
                 let group: BTreeMap<String, String> = key.iter().cloned().collect();
                 let label = group_label(&group);
-                evaluated.push(series_fingerprint(&pol.name, &label));
-                if let Some(mut f) = evaluate_series(pol, &label, &group, &pts) {
+                let f = evaluate_series(pol, &label, &group, &pts).map(|mut f| {
                     f.suspect_commit = commit_at(db, &pol.measurement, &group, f.change_ts);
+                    f
+                });
+                (label, f)
+            });
+            for (label, f) in results {
+                evaluated.push(series_fingerprint(&pol.name, &label));
+                if let Some(f) = f {
                     findings.push(f);
                 }
             }

@@ -1,0 +1,205 @@
+//! # tsdb::lp — zero-copy batched line-protocol parsing
+//!
+//! The original [`super::Point::parse_line`] built every token one
+//! `char` at a time through intermediate `String`s — ~10 allocations
+//! per line before the [`super::Point`] even existed. This module is
+//! the rewrite the ingest hot path runs on:
+//!
+//! * **Zero-copy splitting**: sections, tags and fields are `&str`
+//!   slices borrowed straight from the input line, found by a single
+//!   byte scan for unescaped delimiters. All delimiters (`\`, space,
+//!   `,`, `=`) are ASCII, and UTF-8 guarantees no continuation byte
+//!   collides with them, so the byte scan is exact on any input.
+//! * **Allocate only on escapes**: [`unescape`] returns
+//!   `Cow::Borrowed` for the (overwhelmingly common) token without a
+//!   backslash; only tokens that actually carry escapes buy a `String`.
+//!   The owned [`super::Point`] is built directly from the cow slices.
+//! * **Batched, parallel parses**: [`parse_lines`] splits a whole
+//!   upload batch serially (cheap) and parses chunks of lines across
+//!   the [`crate::par`] pool, preserving input order — and therefore
+//!   byte-identical results — for any thread count. Errors surface in
+//!   input order, exactly like a serial loop.
+//!
+//! Semantics are bit-for-bit those of the old parser (same accepted
+//! grammar, same error strings, trailing lone backslashes dropped by
+//! unescaping, field *values* parsed without unescaping) — the
+//! round-trip property suite and the PR 1 escape/negative-timestamp/
+//! extreme-value fixtures run against this implementation through the
+//! unchanged `Point::parse_line` entry point.
+
+use super::Point;
+use crate::par;
+use std::borrow::Cow;
+
+/// Below this many lines a batch parse stays serial — spawning workers
+/// costs more than the parse.
+const PAR_MIN_LINES: usize = 512;
+
+/// Remove line-protocol escapes. Borrowed when there is nothing to do;
+/// a lone trailing backslash is dropped (as the old parser did).
+fn unescape(s: &str) -> Cow<'_, str> {
+    if !s.as_bytes().contains(&b'\\') {
+        return Cow::Borrowed(s);
+    }
+    let mut out = String::with_capacity(s.len());
+    let mut esc = false;
+    for c in s.chars() {
+        if esc {
+            out.push(c);
+            esc = false;
+        } else if c == '\\' {
+            esc = true;
+        } else {
+            out.push(c);
+        }
+    }
+    Cow::Owned(out)
+}
+
+/// Split `s` on unescaped `sep` (an ASCII delimiter), borrowing every
+/// part. Escapes are kept in the parts — [`unescape`] strips them later,
+/// mirroring the two-phase structure of the old parser.
+fn split_unescaped(s: &str, sep: u8) -> Vec<&str> {
+    let bytes = s.as_bytes();
+    let mut parts = Vec::new();
+    let mut start = 0usize;
+    let mut i = 0usize;
+    while i < bytes.len() {
+        if bytes[i] == b'\\' {
+            i += 2; // skip the escaped byte (a trailing `\` just ends the scan)
+        } else if bytes[i] == sep {
+            parts.push(&s[start..i]);
+            start = i + 1;
+            i += 1;
+        } else {
+            i += 1;
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+/// Parse one line-protocol line
+/// (`measurement,tag=v,... field=v,... ts`) into an owned [`Point`].
+/// The workhorse behind [`Point::parse_line`].
+pub fn parse_line(line: &str) -> Result<Point, String> {
+    // split into 3 sections on the first two unescaped spaces
+    let bytes = line.as_bytes();
+    let mut sections: [&str; 3] = ["", "", ""];
+    let mut n_sections = 0usize;
+    let mut start = 0usize;
+    let mut i = 0usize;
+    while i < bytes.len() {
+        if bytes[i] == b'\\' {
+            i += 2;
+        } else if bytes[i] == b' ' && n_sections < 2 {
+            sections[n_sections] = &line[start..i];
+            n_sections += 1;
+            start = i + 1;
+            i += 1;
+        } else {
+            i += 1;
+        }
+    }
+    sections[n_sections] = &line[start..];
+    n_sections += 1;
+    if n_sections != 3 {
+        return Err(format!("expected 3 sections, got {n_sections}"));
+    }
+
+    // measurement + tags: split on unescaped commas
+    let head = split_unescaped(sections[0], b',');
+    let mut p = Point::new(&unescape(head[0]), 0);
+    for t in &head[1..] {
+        let kv = split_unescaped(t, b'=');
+        if kv.len() != 2 {
+            return Err(format!("bad tag `{t}`"));
+        }
+        p.tags.insert(unescape(kv[0]).into_owned(), unescape(kv[1]).into_owned());
+    }
+    for f in split_unescaped(sections[1], b',') {
+        let kv = split_unescaped(f, b'=');
+        if kv.len() != 2 {
+            return Err(format!("bad field `{f}`"));
+        }
+        // field values are parsed raw (floats never carry escapes) —
+        // old-parser semantics, kept bit-for-bit
+        let v: f64 = kv[1].parse().map_err(|_| format!("bad field value `{}`", kv[1]))?;
+        p.fields.insert(unescape(kv[0]).into_owned(), v);
+    }
+    p.ts = sections[2]
+        .trim()
+        .parse()
+        .map_err(|_| format!("bad timestamp `{}`", sections[2]))?;
+    if p.fields.is_empty() {
+        return Err("point has no fields".into());
+    }
+    Ok(p)
+}
+
+/// Parse a whole batch of line-protocol text, in input order. Blank
+/// lines and `#` comments are skipped (the `Db::ingest_lines`
+/// convention). Large batches parse in chunks across the [`crate::par`]
+/// pool; the result — points *and* the error a malformed batch
+/// surfaces — is identical for any thread count.
+pub fn parse_lines(text: &str) -> Result<Vec<Point>, String> {
+    let lines: Vec<&str> = text
+        .lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .collect();
+    if lines.len() < PAR_MIN_LINES || par::threads() <= 1 || par::in_worker() {
+        return lines.iter().map(|l| parse_line(l)).collect();
+    }
+    // chunk so every worker sees a few batches (work-queue balancing
+    // without work stealing), but never below the serial threshold
+    let chunk = (lines.len() / (par::threads() * 4)).max(PAR_MIN_LINES / 4);
+    let chunks: Vec<&[&str]> = lines.chunks(chunk).collect();
+    let parsed = par::try_map(chunks, |c| {
+        c.iter().map(|l| parse_line(l)).collect::<Result<Vec<Point>, String>>()
+    })?;
+    Ok(parsed.into_iter().flatten().collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn borrowed_unless_escaped() {
+        assert!(matches!(unescape("plain_token"), Cow::Borrowed(_)));
+        assert!(matches!(unescape("esc\\,aped"), Cow::Owned(_)));
+        assert_eq!(unescape("a\\ b\\=c\\,d\\\\e"), "a b=c,d\\e");
+        // a lone trailing backslash is dropped, like the old parser
+        assert_eq!(unescape("tail\\"), "tail");
+    }
+
+    #[test]
+    fn split_keeps_escapes_for_the_unescape_phase() {
+        assert_eq!(split_unescaped("a,b\\,c,d", b','), vec!["a", "b\\,c", "d"]);
+        assert_eq!(split_unescaped("", b','), vec![""]);
+        assert_eq!(split_unescaped("k\\=v=x", b'='), vec!["k\\=v", "x"]);
+    }
+
+    #[test]
+    fn batch_parse_matches_per_line_parse_and_skips_comments() {
+        let text = "m,t=a v=1 10\n# comment\n\n  m,t=b v=2.5 20  \nm v=3 -30\n";
+        let batch = parse_lines(text).unwrap();
+        let single: Vec<Point> = text
+            .lines()
+            .map(str::trim)
+            .filter(|l| !l.is_empty() && !l.starts_with('#'))
+            .map(|l| parse_line(l).unwrap())
+            .collect();
+        assert_eq!(batch, single);
+        assert_eq!(batch.len(), 3);
+        assert_eq!(batch[2].ts, -30);
+    }
+
+    #[test]
+    fn batch_error_is_the_first_bad_line() {
+        let text = "m v=1 1\nm v=x 2\nnot_a_point\n";
+        let err = parse_lines(text).unwrap_err();
+        assert_eq!(err, "bad field value `x`");
+    }
+}

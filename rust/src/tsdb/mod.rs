@@ -110,17 +110,19 @@
 //! writes the legacy single-file format back out (stable dump order —
 //! CI uses it to assert byte-identical reloads).
 
+pub mod lp;
 pub mod query;
 
 pub use query::{Aggregate, GroupedSeries, Query, TAIL_SCAN_SLACK};
 
 use crate::obs::metrics as om;
+use crate::par;
 use crate::util::json::Json;
-use std::cell::{Cell, OnceCell};
 use std::collections::{BTreeMap, BTreeSet};
 use std::io::Write;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::OnceLock;
 
 /// Process-global monotone stamp for shard-body touch order (the LRU key
 /// behind [`Db::evict_cold_bodies`]). Global rather than per-`Db` because
@@ -192,90 +194,11 @@ impl Point {
         line
     }
 
-    /// Parse one line-protocol line.
+    /// Parse one line-protocol line (the zero-copy parser in
+    /// [`lp`] — slices borrowed from the input, allocations only on
+    /// escaped tokens).
     pub fn parse_line(line: &str) -> Result<Point, String> {
-        // split into 3 sections on unescaped spaces
-        let mut sections: Vec<String> = Vec::new();
-        let mut cur = String::new();
-        let mut esc = false;
-        for c in line.chars() {
-            if esc {
-                cur.push(c);
-                esc = false;
-            } else if c == '\\' {
-                cur.push(c);
-                esc = true;
-            } else if c == ' ' && sections.len() < 2 {
-                sections.push(std::mem::take(&mut cur));
-            } else {
-                cur.push(c);
-            }
-        }
-        sections.push(cur);
-        if sections.len() != 3 {
-            return Err(format!("expected 3 sections, got {}", sections.len()));
-        }
-        let unesc = |s: &str| -> String {
-            let mut out = String::new();
-            let mut esc = false;
-            for c in s.chars() {
-                if esc {
-                    out.push(c);
-                    esc = false;
-                } else if c == '\\' {
-                    esc = true;
-                } else {
-                    out.push(c);
-                }
-            }
-            out
-        };
-        // measurement + tags: split on unescaped commas
-        let split_unescaped = |s: &str, sep: char| -> Vec<String> {
-            let mut parts = Vec::new();
-            let mut cur = String::new();
-            let mut esc = false;
-            for c in s.chars() {
-                if esc {
-                    cur.push(c);
-                    esc = false;
-                } else if c == '\\' {
-                    cur.push(c);
-                    esc = true;
-                } else if c == sep {
-                    parts.push(std::mem::take(&mut cur));
-                } else {
-                    cur.push(c);
-                }
-            }
-            parts.push(cur);
-            parts
-        };
-        let head = split_unescaped(&sections[0], ',');
-        let mut p = Point::new(&unesc(&head[0]), 0);
-        for t in &head[1..] {
-            let kv = split_unescaped(t, '=');
-            if kv.len() != 2 {
-                return Err(format!("bad tag `{t}`"));
-            }
-            p.tags.insert(unesc(&kv[0]), unesc(&kv[1]));
-        }
-        for f in split_unescaped(&sections[1], ',') {
-            let kv = split_unescaped(&f, '=');
-            if kv.len() != 2 {
-                return Err(format!("bad field `{f}`"));
-            }
-            let v: f64 = kv[1].parse().map_err(|_| format!("bad field value `{}`", kv[1]))?;
-            p.fields.insert(unesc(&kv[0]), v);
-        }
-        p.ts = sections[2]
-            .trim()
-            .parse()
-            .map_err(|_| format!("bad timestamp `{}`", sections[2]))?;
-        if p.fields.is_empty() {
-            return Err("point has no fields".into());
-        }
-        Ok(p)
+        lp::parse_line(line)
     }
 }
 
@@ -285,7 +208,11 @@ impl Point {
 /// manifest), so a shard loaded from a manifest directory answers every
 /// index question without its body in memory — the points are parsed
 /// lazily on first access ([`Shard::points`]).
-#[derive(Debug, Clone)]
+/// `Sync` by construction — the lazy body is an [`OnceLock`] and the LRU
+/// bookkeeping is atomics, so `&Shard` (and therefore `&Db`) can be
+/// shared across the [`crate::par`] pool for parallel materialization
+/// and range scans.
+#[derive(Debug)]
 pub struct Shard {
     /// Partition index: this shard covers `[key·span, (key+1)·span)`.
     key: i64,
@@ -303,18 +230,35 @@ pub struct Shard {
     file: Option<PathBuf>,
     /// Lazily materialized body. Pre-set for in-memory shards, parsed
     /// from `file` on first access for manifest-loaded ones.
-    body: OnceCell<Vec<Point>>,
+    body: OnceLock<Vec<Point>>,
     /// Touch stamp of the last body access (LRU recency; see [`TOUCH`]).
-    touch: Cell<u64>,
+    touch: AtomicU64,
     /// Body was evicted at least once — the next materialization counts
     /// as a re-materialization in the self-metrics.
-    evicted: Cell<bool>,
+    evicted: AtomicBool,
+}
+
+impl Clone for Shard {
+    fn clone(&self) -> Shard {
+        Shard {
+            key: self.key,
+            compacted: self.compacted,
+            dirty: self.dirty,
+            n: self.n,
+            min_ts: self.min_ts,
+            max_ts: self.max_ts,
+            file: self.file.clone(),
+            body: self.body.clone(),
+            touch: AtomicU64::new(self.touch.load(Ordering::Relaxed)),
+            evicted: AtomicBool::new(self.evicted.load(Ordering::Relaxed)),
+        }
+    }
 }
 
 impl Shard {
     /// A fresh, mutable, unbacked shard (the insert path).
     fn in_memory(key: i64) -> Shard {
-        let body = OnceCell::new();
+        let body = OnceLock::new();
         let _ = body.set(Vec::new());
         Shard {
             key,
@@ -325,8 +269,8 @@ impl Shard {
             max_ts: 0,
             file: None,
             body,
-            touch: Cell::new(TOUCH.fetch_add(1, Ordering::Relaxed)),
-            evicted: Cell::new(false),
+            touch: AtomicU64::new(TOUCH.fetch_add(1, Ordering::Relaxed)),
+            evicted: AtomicBool::new(false),
         }
     }
 
@@ -375,8 +319,12 @@ impl Shard {
     /// backing file vanished or was modified behind the manifest — the
     /// manifest is authoritative for a bound store; rebuild via
     /// [`Db::export_lp`] + reload if a store was edited by hand.
+    /// Thread-safe: concurrent callers race through [`OnceLock`] and
+    /// exactly one materializes (losers' parses are dropped — the
+    /// shard-load counters record attempts, which is what the cache
+    /// metrics mean).
     pub fn points(&self) -> &[Point] {
-        if self.body.get().is_none() {
+        let body = self.body.get_or_init(|| {
             let t = om::Timer::start();
             let path = self
                 .file
@@ -385,14 +333,14 @@ impl Shard {
             let pts = read_shard_file(path, self.n);
             om::add(om::Counter::ShardLoads, 1);
             om::add(om::Counter::ShardLoadPoints, pts.len() as u64);
-            if self.evicted.get() {
+            if self.evicted.load(Ordering::Relaxed) {
                 om::add(om::Counter::ShardRemats, 1);
             }
             t.stop(om::TimedOp::ShardLoad);
-            let _ = self.body.set(pts);
-        }
-        self.touch.set(TOUCH.fetch_add(1, Ordering::Relaxed));
-        self.body.get().expect("body just materialized")
+            pts
+        });
+        self.touch.store(TOUCH.fetch_add(1, Ordering::Relaxed), Ordering::Relaxed);
+        body
     }
 
     /// Mutable body access (materializes first).
@@ -413,6 +361,63 @@ impl Shard {
     }
 }
 
+/// Materialize the cold, file-backed bodies of a range-scan window in
+/// parallel before the scan walks them serially — the walk (and so the
+/// result order) is untouched; only the disk/parse latency overlaps.
+/// `Shard: Sync` makes the shared `&Shard` access sound; `OnceLock`
+/// arbitrates the (impossible here — shards are distinct) set race.
+/// [`Db::points_iter`] deliberately does NOT prefetch: its cold-load
+/// cost must stay flat in history depth (the PERSIST bench contract) —
+/// full scans pay only for the shards actually reached.
+fn prefetch_shards(shards: &[Shard]) {
+    if par::threads() <= 1 || par::in_worker() {
+        return;
+    }
+    let cold: Vec<&Shard> = shards
+        .iter()
+        .filter(|s| !s.is_loaded() && s.file.is_some())
+        .collect();
+    if cold.len() > 1 {
+        par::map(cold, |s| {
+            s.points();
+        });
+    }
+}
+
+/// The per-point insert body shared by [`Db::insert`] (serial) and
+/// [`Db::insert_batch`] (parallel, one worker per shard): sorted insert,
+/// meta-index refresh, dirty + compaction-reopen bookkeeping. Keeping it
+/// a single function is what makes "batch == replayed serial inserts"
+/// true by construction.
+fn insert_point_into(s: &mut Shard, p: Point) {
+    let timer = om::Timer::start();
+    let ts = p.ts;
+    if !p.tags.contains_key(ROLLUP_TAG) {
+        s.compacted = false;
+    }
+    {
+        // a late insert into a cold shard materializes just that shard
+        let v = s.body_mut();
+        if v.last().map(|l| l.ts <= ts).unwrap_or(true) {
+            v.push(p);
+        } else {
+            let idx = v.partition_point(|q| q.ts <= ts);
+            v.insert(idx, p);
+        }
+    }
+    s.n += 1;
+    if s.n == 1 {
+        s.min_ts = ts;
+        s.max_ts = ts;
+    } else {
+        s.min_ts = s.min_ts.min(ts);
+        s.max_ts = s.max_ts.max(ts);
+    }
+    s.dirty = true;
+    om::add(om::Counter::InsertPoints, 1);
+    timer.stop(om::TimedOp::Insert);
+}
+
 /// Parse one shard file, enforcing the manifest's point count.
 fn read_shard_file(path: &Path, expect: usize) -> Vec<Point> {
     let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
@@ -421,17 +426,8 @@ fn read_shard_file(path: &Path, expect: usize) -> Vec<Point> {
             path.display()
         )
     });
-    let mut pts = Vec::with_capacity(expect);
-    for line in text.lines() {
-        let line = line.trim();
-        if line.is_empty() || line.starts_with('#') {
-            continue;
-        }
-        match Point::parse_line(line) {
-            Ok(p) => pts.push(p),
-            Err(e) => panic!("tsdb: corrupt shard {}: {e}", path.display()),
-        }
-    }
+    let pts = lp::parse_lines(&text)
+        .unwrap_or_else(|e| panic!("tsdb: corrupt shard {}: {e}", path.display()));
     if pts.len() != expect {
         panic!(
             "tsdb: shard {} holds {} points but the manifest says {expect} — \
@@ -521,10 +517,7 @@ impl Db {
     /// reopens that shard for the next [`Db::compact`] pass, which merges
     /// raw points and existing rollups weight-correctly.
     pub fn insert(&mut self, p: Point) {
-        let timer = om::Timer::start();
         let key = p.ts.div_euclid(self.shard_span_ns);
-        let raw = !p.tags.contains_key(ROLLUP_TAG);
-        let ts = p.ts;
         let shards = self.measurements.entry(p.measurement.clone()).or_default();
         let si = match shards.binary_search_by(|s| s.key.cmp(&key)) {
             Ok(i) => i,
@@ -533,50 +526,77 @@ impl Db {
                 i
             }
         };
-        let s = &mut shards[si];
-        if raw {
-            s.compacted = false;
-        }
-        {
-            // a late insert into a cold shard materializes just that shard
-            let v = s.body_mut();
-            if v.last().map(|l| l.ts <= ts).unwrap_or(true) {
-                v.push(p);
-            } else {
-                let idx = v.partition_point(|q| q.ts <= ts);
-                v.insert(idx, p);
-            }
-        }
-        s.n += 1;
-        if s.n == 1 {
-            s.min_ts = ts;
-            s.max_ts = ts;
-        } else {
-            s.min_ts = s.min_ts.min(ts);
-            s.max_ts = s.max_ts.max(ts);
-        }
-        s.dirty = true;
-        om::add(om::Counter::InsertPoints, 1);
-        timer.stop(om::TimedOp::Insert);
+        insert_point_into(&mut shards[si], p);
         if self.body_cap.is_some() {
             self.maybe_evict();
         }
     }
 
-    /// Ingest a batch of line-protocol text (the pipeline's upload step).
+    /// Insert a whole batch of points. The final store is byte-identical
+    /// to inserting every point in order with [`Db::insert`]: points are
+    /// grouped by destination shard *preserving input order within each
+    /// group*, and the per-shard insert replays exactly the serial body.
+    /// Large batches fan the disjoint per-shard work across the
+    /// [`crate::par`] pool. The grouped path is taken by batch size alone
+    /// (with one worker it runs inline) so the store — including LRU
+    /// eviction timing — never depends on the thread count.
+    pub fn insert_batch(&mut self, pts: Vec<Point>) {
+        const PAR_MIN_BATCH: usize = 256;
+        if pts.len() < PAR_MIN_BATCH {
+            for p in pts {
+                self.insert(p);
+            }
+            return;
+        }
+        // group by (measurement, shard key); BTreeMap iteration gives a
+        // deterministic job order, Vec pushes keep input order per group
+        let mut groups: BTreeMap<(String, i64), Vec<Point>> = BTreeMap::new();
+        for p in pts {
+            let key = p.ts.div_euclid(self.shard_span_ns);
+            groups.entry((p.measurement.clone(), key)).or_default().push(p);
+        }
+        // pass A (serial): create every missing destination shard
+        for (m, key) in groups.keys() {
+            let shards = self.measurements.entry(m.clone()).or_default();
+            if let Err(i) = shards.binary_search_by(|s| s.key.cmp(key)) {
+                shards.insert(i, Shard::in_memory(*key));
+            }
+        }
+        // pass B: one job per target shard — each worker gets exclusive
+        // `&mut` access to its shard, so the fan-out is data-race-free by
+        // construction (no locks on the insert path)
+        let mut jobs: Vec<(&mut Shard, Vec<Point>)> = Vec::new();
+        for (m, shards) in self.measurements.iter_mut() {
+            for s in shards.iter_mut() {
+                if let Some(pts) = groups.remove(&(m.clone(), s.key)) {
+                    jobs.push((s, pts));
+                }
+            }
+        }
+        par::map(jobs, |(s, pts)| {
+            for p in pts {
+                insert_point_into(s, p);
+            }
+        });
+        // LRU once per batch, not per point
+        if self.body_cap.is_some() {
+            self.maybe_evict();
+        }
+    }
+
+    /// Ingest a batch of line-protocol text (the pipeline's upload step):
+    /// zero-copy batched parse ([`lp::parse_lines`] — parallel for large
+    /// batches) followed by [`Db::insert_batch`]. Atomic: a malformed
+    /// line fails the whole batch and nothing is ingested. The `LpParse`
+    /// timer covers the parse only; inserts carry their own `Insert`
+    /// timers as before.
     pub fn ingest_lines(&mut self, text: &str) -> Result<usize, String> {
         let timer = om::Timer::start();
-        let mut n = 0;
-        for line in text.lines() {
-            let line = line.trim();
-            if line.is_empty() || line.starts_with('#') {
-                continue;
-            }
-            self.insert(Point::parse_line(line)?);
-            n += 1;
-        }
+        let pts = lp::parse_lines(text)?;
+        let n = pts.len();
         om::add(om::Counter::LpLines, n as u64);
         timer.stop(om::TimedOp::LpParse);
+        self.insert_batch(pts);
         Ok(n)
     }
 
@@ -621,7 +641,7 @@ impl Db {
         for (m, shards) in &self.measurements {
             for (i, s) in shards.iter().enumerate() {
                 if s.is_loaded() && !s.dirty && s.file.is_some() {
-                    cands.push((s.touch.get(), m.clone(), i));
+                    cands.push((s.touch.load(Ordering::Relaxed), m.clone(), i));
                 }
             }
         }
@@ -634,7 +654,7 @@ impl Db {
             }
             let s = &mut self.measurements.get_mut(&m).expect("candidate exists")[i];
             let _ = s.body.take();
-            s.evicted.set(true);
+            s.evicted.store(true, Ordering::Relaxed);
             om::add(om::Counter::ShardEvictions, 1);
             evicted += 1;
             over -= 1;
@@ -715,6 +735,7 @@ impl Db {
         let hi = t_max
             .map(|t1| shards.partition_point(|s| s.min_ts().map(|m| m <= t1).unwrap_or(false)))
             .unwrap_or(shards.len());
+        prefetch_shards(&shards[lo..hi.max(lo)]);
         shards[lo..hi.max(lo)].iter().flat_map(move |s| {
             let pts = s.points();
             let a = t_min.map(|t| pts.partition_point(|p| p.ts < t)).unwrap_or(0);
@@ -928,12 +949,22 @@ impl Db {
         // Nothing in-memory has been touched yet — an Err return leaves
         // the store exactly as it was (still dirty, still bound to the
         // old home), so a retried save rewrites everything it must.
-        for (m, key, name) in &writes {
-            let shards = &self.measurements[m];
-            let i = shards
-                .binary_search_by(|s| s.key.cmp(key))
-                .expect("planned shard exists");
-            write_shard_file(&path.join(name), shards[i].points())?;
+        // Per-shard writes are independent (distinct files, each .tmp +
+        // rename atomic on its own) and fan out across the par pool; the
+        // manifest write below stays the single serial commit point, so
+        // a crash mid-fan-out still leaves the old manifest authoritative.
+        {
+            let jobs: Vec<(PathBuf, &Shard)> = writes
+                .iter()
+                .map(|(m, key, name)| {
+                    let shards = &self.measurements[m];
+                    let i = shards
+                        .binary_search_by(|s| s.key.cmp(key))
+                        .expect("planned shard exists");
+                    (path.join(name), &shards[i])
+                })
+                .collect();
+            par::try_map(jobs, |(p, s)| write_shard_file(&p, s.points()))?;
         }
         let tmp = path.join(format!("{MANIFEST_FILE}.tmp"));
         std::fs::write(&tmp, self.manifest_json(&names).to_string_pretty())?;
@@ -1109,9 +1140,9 @@ impl Db {
                         min_ts,
                         max_ts,
                         file: Some(path),
-                        body: OnceCell::new(),
-                        touch: Cell::new(0),
-                        evicted: Cell::new(false),
+                        body: OnceLock::new(),
+                        touch: AtomicU64::new(0),
+                        evicted: AtomicBool::new(false),
                     });
                 }
                 shards.sort_by_key(|s| s.key);
@@ -1640,7 +1671,7 @@ lbm,node=rome1,op=srt mlups=400 3
         let hits: Vec<i64> = back.points_in_range("m", Some(12), Some(13)).map(|p| p.ts).collect();
         assert_eq!(hits, vec![12, 12, 13, 13]);
         assert_eq!(back.loaded_bodies(), 4);
-        assert!(back.shards("m")[1].evicted.get());
+        assert!(back.shards("m")[1].evicted.load(Ordering::Relaxed));
 
         // with a cap set, the mutating path holds it automatically
         back.set_body_cap(Some(2));

@@ -5,8 +5,12 @@
 use cbench::apps::walberla::collision::{collide_cell, CollisionOp};
 use cbench::apps::walberla::fslbm::FsBlock;
 use cbench::apps::walberla::lattice::{d3q19, d3q27};
-use cbench::ci::substitute_vars;
+use cbench::ci::{substitute_vars, CiJob};
 use cbench::cluster::nodes::catalogue;
+use cbench::coordinator::campaign::{
+    run_campaign_with, CampaignConfig, CampaignProject, ProjectKind,
+};
+use cbench::coordinator::{CbSystem, PreparedJob};
 use cbench::regress::detector::evaluate_policy_run_scoped;
 use cbench::regress::Detector;
 use cbench::sched::{JobOutcome, SimScheduler, SubmitSpec};
@@ -876,5 +880,203 @@ fn prop_compaction_keeps_retained_raw_queries_unchanged() {
             assert_eq!(p.tags["rollup"], "mean", "seed {seed}");
             assert!(p.fields["rollup_n"] >= 1.0, "seed {seed}");
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// par:: hot-path parallelism: a campaign run must produce byte-identical
+// artifacts for any worker count. Both tests below mutate the process-global
+// par:: thread knob, so they serialize on PAR_LOCK (cargo runs the tests in
+// one binary concurrently).
+// ---------------------------------------------------------------------------
+
+static PAR_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// Toy job matrix in the campaign harness shape: fixed durations keep the
+/// simulated schedule deterministic; the metric steps down after round 2 so
+/// the per-series detector fan-out has non-constant history to evaluate.
+fn par_toy_jobs(tag: &str, round: usize, spec: &[(&str, f64, usize)]) -> Vec<PreparedJob> {
+    let mut jobs = Vec::new();
+    for (host, dur, count) in spec {
+        for i in 0..*count {
+            let dur = *dur;
+            let mlups = if round >= 3 { dur * 0.5 } else { dur } + i as f64 * 0.01;
+            jobs.push(PreparedJob {
+                ci: CiJob::new(&format!("{tag}-{host}-{i}"), "benchmark").var("HOST", host),
+                payload: Box::new(move |_n, _t| JobOutcome {
+                    duration: dur,
+                    stdout: format!("TAG case=toy\nTAG collision_op=srt\nMETRIC mlups={mlups}\n"),
+                    exit_code: 0,
+                }),
+            });
+        }
+    }
+    jobs
+}
+
+/// Runs one randomized two-repo campaign under `threads` workers and returns
+/// every artifact the CLI can persist: the simulated timeline, a full TSDB
+/// dump, the alert book and trace JSON, and the byte content of a saved
+/// manifest-layout store. The config is a pure function of `seed`, so the
+/// serial and parallel runs see identical inputs.
+fn campaign_artifacts(
+    threads: usize,
+    seed: u64,
+) -> (String, String, String, String, Vec<(String, String)>) {
+    cbench::par::set_threads(threads);
+    let mut rng = Rng::new(seed);
+    let cfg = CampaignConfig {
+        pushes: 3 + rng.below(2),
+        inject_at: 0,
+        penalty: 0.0,
+        seed,
+        backfill: rng.below(2) == 0,
+        drains: if rng.below(2) == 0 {
+            vec![("icx36".to_string(), 50.0, 400.0)]
+        } else {
+            Vec::new()
+        },
+        streaming: rng.below(2) == 0,
+        incremental: rng.below(2) == 0,
+    };
+    let mut cb = CbSystem::new();
+    let mut projects = vec![
+        CampaignProject::new("alpha", ProjectKind::Walberla),
+        CampaignProject::new("beta", ProjectKind::Walberla).priority(1),
+    ];
+    let mut rounds: BTreeMap<String, usize> = BTreeMap::new();
+    run_campaign_with(&mut cb, &mut projects, &cfg, |p, _commit| {
+        let r = rounds.entry(p.name.clone()).or_insert(0);
+        *r += 1;
+        if p.name == "alpha" {
+            par_toy_jobs("a", *r, &[("icx36", 10.0, 3), ("rome1", 5.0, 2)])
+        } else {
+            par_toy_jobs("b", *r, &[("rome1", 20.0, 2), ("skylakesp2", 8.0, 2)])
+        }
+    })
+    .unwrap();
+
+    let timeline = cb.scheduler.timeline();
+    let mut dump = String::new();
+    let measurements: Vec<String> = cb.db.measurements().cloned().collect();
+    for m in &measurements {
+        for p in cb.db.points_iter(m) {
+            dump.push_str(&p.to_line());
+            dump.push('\n');
+        }
+    }
+    let alerts = cb.alerts.to_json().to_string_pretty();
+    let trace = cb.trace.to_json().to_string_pretty();
+
+    // persist under the manifest layout (parallel per-shard writes) and read
+    // every file back for byte comparison
+    let dir = std::env::temp_dir().join(format!(
+        "cbench_par_prop_{}_{}_{}",
+        std::process::id(),
+        seed,
+        threads
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    cb.db.save_report(&dir).unwrap();
+    let mut files: Vec<(String, String)> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| {
+            let e = e.unwrap();
+            (
+                e.file_name().to_string_lossy().into_owned(),
+                std::fs::read_to_string(e.path()).unwrap(),
+            )
+        })
+        .collect();
+    files.sort();
+    let _ = std::fs::remove_dir_all(&dir);
+    (timeline, dump, alerts, trace, files)
+}
+
+#[test]
+fn prop_parallel_equals_serial() {
+    // ISSUE 7 acceptance: timelines, TSDB contents, saved manifest stores,
+    // alert books and traces are byte-identical for --threads 1 vs 4 across
+    // randomized drained / streaming / incremental two-repo campaigns.
+    let _g = PAR_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    for seed in 0..4u64 {
+        let serial = campaign_artifacts(1, seed);
+        let parallel = campaign_artifacts(4, seed);
+        assert!(!serial.0.is_empty() && !serial.1.is_empty(), "seed {seed}");
+        assert!(serial.4.len() >= 2, "seed {seed}: store must have manifest + shards");
+        assert_eq!(serial.0, parallel.0, "seed {seed}: timeline diverged");
+        assert_eq!(serial.1, parallel.1, "seed {seed}: TSDB dump diverged");
+        assert_eq!(serial.2, parallel.2, "seed {seed}: alert book diverged");
+        assert_eq!(serial.3, parallel.3, "seed {seed}: trace diverged");
+        assert_eq!(serial.4, parallel.4, "seed {seed}: saved store diverged");
+    }
+    cbench::par::set_threads(0);
+}
+
+#[test]
+fn prop_lp_batch_parse_matches_serial_and_roundtrip() {
+    // The zero-copy batched parser must agree with the per-line parser on
+    // the PR 1 escape / negative-timestamp / extreme-value fixtures and on
+    // randomized round-tripped points, serial and parallel alike.
+    let _g = PAR_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let fixtures = [
+        "weird\\ name,t1=co\\,mma,t2=eq\\=uals v=1 42",
+        "m,host=a v=0.5,w=-3e-7 -1234567890",
+        "m value=1.7976931348623157e308 1",
+        "m value=5e-324 2",
+        "m value=-1234567890.123456 3",
+        "m value=0 4",
+        "back\\\\slash,k=v\\ w x=9 -5",
+    ];
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(seed);
+        let weird = ["plain", "with space", "co,mma", "eq=uals", "back\\slash"];
+        let mut originals: Vec<Point> = Vec::new();
+        for _ in 0..600 {
+            // 600 lines > lp::PAR_MIN_LINES, so the chunked path engages
+            let ts = rng.next_u64() as i64 / 2 - i64::MAX / 4;
+            let mut p = Point::new(weird[rng.below(weird.len())], ts);
+            for _ in 0..1 + rng.below(3) {
+                let k = format!("t{}", rng.below(5));
+                p.tags.insert(k, weird[rng.below(weird.len())].to_string());
+            }
+            for _ in 0..1 + rng.below(3) {
+                p.fields.insert(format!("f{}", rng.below(5)), rng.gauss(0.0, 100.0));
+            }
+            originals.push(p);
+        }
+        let mut text = String::new();
+        for f in &fixtures {
+            text.push_str(f);
+            text.push('\n');
+        }
+        text.push_str("# comment line\n\n");
+        for p in &originals {
+            text.push_str(&p.to_line());
+            text.push('\n');
+        }
+
+        let mut expect: Vec<Point> =
+            fixtures.iter().map(|l| Point::parse_line(l).unwrap()).collect();
+        expect.extend(originals.iter().cloned());
+
+        cbench::par::set_threads(1);
+        let serial = cbench::tsdb::lp::parse_lines(&text)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        cbench::par::set_threads(4);
+        let parallel = cbench::tsdb::lp::parse_lines(&text)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        cbench::par::set_threads(0);
+        assert_eq!(serial, expect, "seed {seed}: serial batch != per-line parse");
+        assert_eq!(parallel, expect, "seed {seed}: parallel batch != per-line parse");
+
+        // a malformed line anywhere in the batch rejects the whole batch with
+        // the first (input-order) error, same text as the per-line parser
+        let bad = format!("{text}m value=nope 9\n");
+        cbench::par::set_threads(4);
+        let err = cbench::tsdb::lp::parse_lines(&bad).unwrap_err();
+        cbench::par::set_threads(0);
+        assert!(err.contains("bad field value `nope`"), "seed {seed}: {err}");
     }
 }
