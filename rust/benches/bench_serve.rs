@@ -1,0 +1,70 @@
+//! Service-layer benchmark: an in-process serve:: instance driven by the
+//! loadgen client over real TCP — sustained ingest/query QPS and request
+//! latency percentiles, plus the end-to-end proof that a regression
+//! injected through the HTTP API opens an alert readable back through
+//! the HTTP API.
+//!
+//! `cargo bench --bench bench_serve`; CI embeds SERVE_JSON into the
+//! per-commit bench report next to CAMPAIGN_JSON / INGEST_JSON.
+
+use cbench::serve::loadgen::{run, LoadgenConfig};
+use cbench::serve::{start, ServeConfig};
+
+fn main() {
+    println!("== bench_serve ==\n");
+
+    let handle = start(ServeConfig {
+        addr: "127.0.0.1:0".to_string(), // ephemeral port
+        ..ServeConfig::default()
+    })
+    .expect("server starts");
+    let addr = handle.addr.to_string();
+    println!("in-process server on {addr} ({} workers)", handle.threads());
+
+    // throughput phase: concurrent clients, disjoint projects, healthy
+    // data plus injected single-point regressions at the tail
+    let report = run(&LoadgenConfig {
+        addr: addr.clone(),
+        project: "bench".to_string(),
+        clients: 4,
+        batches: 25,
+        batch_points: 40,
+        queries: 100,
+        inject_regression: true,
+    });
+    assert_eq!(report.http_errors, 0, "bench traffic must be error-free");
+    assert!(
+        report.alerts_open >= 1,
+        "the injected drop must open an alert visible over HTTP"
+    );
+    println!(
+        "ingest: {} requests ({} points) at {:.0} req/s",
+        report.ingest_requests, report.points_sent, report.ingest_qps
+    );
+    println!(
+        "query : {} requests at {:.0} req/s",
+        report.query_requests, report.query_qps
+    );
+    println!(
+        "latency: p50 {:.3} ms, p99 {:.3} ms; {} open alerts read back",
+        report.p50_ms, report.p99_ms, report.alerts_open
+    );
+
+    let shutdown = handle.stop();
+    println!(
+        "drain: {} requests served, {} errors",
+        shutdown.requests, shutdown.errors
+    );
+
+    println!(
+        "SERVE_JSON {{\"ingest_qps\":{:.2},\"query_qps\":{:.2},\"p50_ms\":{:.3},\"p99_ms\":{:.3},\"points_sent\":{},\"alerts_open\":{},\"requests\":{},\"http_errors\":{}}}",
+        report.ingest_qps,
+        report.query_qps,
+        report.p50_ms,
+        report.p99_ms,
+        report.points_sent,
+        report.alerts_open,
+        shutdown.requests,
+        report.http_errors
+    );
+}

@@ -1,0 +1,237 @@
+//! The ownership core of a CB installation — the paper's "upload →
+//! detect → alert" loop as a self-contained, scheduler-free value.
+//!
+//! [`CoreHandle`] bundles exactly the state that survives a pipeline
+//! (the sharded TSDB, the alert lifecycle, the carried incremental
+//! detector state and the active/base policy pair) and the operations
+//! the continuous-benchmarking loop performs on it: batched
+//! line-protocol ingest, scoped statistical detection, alert-book
+//! folding, and per-tenant `regress.*` threshold overrides.
+//!
+//! Two frontends share it:
+//!
+//! * [`crate::coordinator::CbSystem`] embeds one `CoreHandle` and layers
+//!   the simulated cluster on top (scheduler, datastore archival,
+//!   tracing). `CbSystem` derefs to its core, so `cb.db` / `cb.alerts` /
+//!   `cb.det_state` keep reading naturally at every existing call site.
+//! * [`crate::serve`] keeps one `CoreHandle` **per project** behind an
+//!   `RwLock` — the multi-tenant benchmark-as-a-service facade. Nothing
+//!   in here touches the scheduler or any global, so per-project cores
+//!   are fully independent: two projects never contend on a lock and can
+//!   never see each other's series.
+//!
+//! The detection semantics are byte-identical to what
+//! `CbSystem::check_regressions` did before the extraction — the
+//! incremental state-path/re-query equivalence contract
+//! (`regress::state`) is proven over this code.
+
+use crate::coordinator::{detector_with_config, BenchConfig};
+use crate::obs::metrics as om;
+use crate::regress::{AlertBook, Detector, DetectorState, IngestSummary};
+use crate::tsdb::{lp, Db};
+use std::collections::BTreeSet;
+
+/// Outcome of one [`CoreHandle::ingest_and_detect`] call: how many points
+/// landed and what the post-ingest detection did to the alert book.
+#[derive(Debug, Clone, Default)]
+pub struct IngestDetectOutcome {
+    /// Line-protocol points ingested (the whole batch, atomically).
+    pub points: usize,
+    /// Distinct `(measurement, repo-tag)` scopes the batch touched — one
+    /// scoped detection ran per entry.
+    pub scopes: usize,
+    /// Folded alert-book deltas across all scoped detections.
+    pub summary: IngestSummary,
+}
+
+/// The shared continuous-benchmarking core: TSDB + detector (+ carried
+/// incremental state) + alert book. See the module docs for who owns one.
+pub struct CoreHandle {
+    pub db: Db,
+    /// Durable alert lifecycle fed by the detector.
+    pub alerts: AlertBook,
+    /// Incremental per-series detection state carried across ingests —
+    /// judged from by default, invalidated (bounded rebuild) whenever the
+    /// detector fingerprint changes (see [`crate::regress::state`]).
+    pub det_state: DetectorState,
+    /// Active policies: the base set with the current per-tenant
+    /// `regress.*` overrides applied. Use [`CoreHandle::install_detector`]
+    /// for durable changes — direct assignment is overwritten by the next
+    /// [`CoreHandle::apply_regress_config`].
+    pub detector: Detector,
+    /// Pristine policies that `regress.*` overrides derive from.
+    pub(crate) base_detector: Detector,
+    /// `false` restores the full tail re-query on every check (the A/B
+    /// reference; `--detect requery`).
+    pub(crate) incremental_detection: bool,
+}
+
+impl Default for CoreHandle {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CoreHandle {
+    pub fn new() -> CoreHandle {
+        let detector = Detector::with_default_policies();
+        CoreHandle {
+            db: Db::new(),
+            alerts: AlertBook::new(),
+            det_state: DetectorState::new(),
+            base_detector: detector.clone(),
+            detector,
+            incremental_detection: true,
+        }
+    }
+
+    /// Install a new detector as the *base* policy set: per-tenant
+    /// `regress.*` overrides ([`CoreHandle::apply_regress_config`]) are
+    /// derived from it, so custom policies installed here survive
+    /// subsequent config applications.
+    pub fn install_detector(&mut self, det: Detector) {
+        self.base_detector = det.clone();
+        self.detector = det;
+    }
+
+    /// Swap in the base policies overridden by `regress.<policy>.<knob>`
+    /// entries (see [`detector_with_config`]). A config without overrides
+    /// restores the base sensitivity. A change to any knob changes the
+    /// detector fingerprint, which invalidates the carried incremental
+    /// state at its next sync (bounded rebuild — never O(history)).
+    pub fn apply_regress_config(&mut self, cfg: &BenchConfig) {
+        self.detector = detector_with_config(&self.base_detector, cfg);
+    }
+
+    /// Toggle incremental detection (on by default): `false` makes every
+    /// check re-query the tail window from the TSDB — the A/B reference
+    /// the equivalence tests compare against.
+    pub fn set_incremental_detection(&mut self, on: bool) {
+        self.incremental_detection = on;
+    }
+    pub fn incremental_detection(&self) -> bool {
+        self.incremental_detection
+    }
+
+    /// Run the scoped statistical regression check against the current
+    /// TSDB and fold the findings into the alert book (opened /
+    /// re-confirmed / auto-resolved). `owner_repo` scopes the check to
+    /// that repository's series for `repo`-grouped policies: a tenant's
+    /// detection judges only its own series, and co-tenant trigger
+    /// timestamps don't shrink its window. `now_ts` stamps the alert
+    /// bookkeeping (opened/last-seen times).
+    pub fn detect_and_ingest(
+        &mut self,
+        measurement: &str,
+        owner_repo: Option<&str>,
+        now_ts: i64,
+    ) -> IngestSummary {
+        let scope: Vec<(&str, &str)> = owner_repo.iter().map(|r| ("repo", *r)).collect();
+        // incremental by default: sync the carried per-series state with
+        // the points appended since the last check, then judge from state
+        // — proven byte-identical to the full tail re-query below
+        let (findings, evaluated) = if self.incremental_detection {
+            self.det_state.sync(&self.detector, &self.db);
+            self.det_state
+                .detect_measurement_scoped(&self.detector, &self.db, measurement, &scope)
+        } else {
+            self.detector
+                .detect_measurement_scoped(&self.db, measurement, &scope)
+        };
+        self.alerts.ingest(&findings, &evaluated, now_ts)
+    }
+
+    /// The service-facade ingest path: parse a line-protocol batch
+    /// (atomic — a malformed line fails the whole batch and nothing is
+    /// ingested), insert it, then run one scoped detection per distinct
+    /// `(measurement, repo-tag)` pair the batch touched, folding every
+    /// outcome into the alert book. Points without a `repo` tag get an
+    /// unscoped detection of their measurement.
+    ///
+    /// Mirrors [`Db::ingest_lines`]'s instrumentation (`LpParse` timer
+    /// covers the parse only) and `CbSystem`'s per-collect detection
+    /// semantics, so a served project behaves exactly like a pipeline
+    /// tenant.
+    pub fn ingest_and_detect(&mut self, text: &str) -> Result<IngestDetectOutcome, String> {
+        let timer = om::Timer::start();
+        let pts = lp::parse_lines(text)?;
+        let n = pts.len();
+        om::add(om::Counter::LpLines, n as u64);
+        timer.stop(om::TimedOp::LpParse);
+        // deterministic scope order: BTreeSet sorts (measurement, repo)
+        let scopes: BTreeSet<(String, Option<String>)> = pts
+            .iter()
+            .map(|p| (p.measurement.clone(), p.tags.get("repo").cloned()))
+            .collect();
+        self.db.insert_batch(pts);
+        let now_ts = self.db.newest_ts().unwrap_or(0);
+        let mut summary = IngestSummary::default();
+        for (m, repo) in &scopes {
+            let s = self.detect_and_ingest(m, repo.as_deref(), now_ts);
+            summary.opened += s.opened;
+            summary.updated += s.updated;
+            summary.auto_resolved += s.auto_resolved;
+            summary.opened_ids.extend(s.opened_ids);
+        }
+        Ok(IngestDetectOutcome { points: n, scopes: scopes.len(), summary })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lp_series(repo: &str, n: usize, val: impl Fn(usize) -> f64) -> String {
+        (0..n)
+            .map(|i| {
+                format!(
+                    "lbm,case=uniform,node=icx36,collision_op=srt,gpu=false,repo={repo} mlups={} {}\n",
+                    val(i),
+                    (i as i64 + 1) * 1_000_000_000
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn ingest_and_detect_opens_alert_on_injected_drop() {
+        let mut core = CoreHandle::new();
+        // healthy baseline, then a 40% drop
+        let out = core
+            .ingest_and_detect(&lp_series("p1", 10, |i| 800.0 + (i % 3) as f64))
+            .unwrap();
+        assert_eq!(out.points, 10);
+        assert_eq!(out.summary.opened, 0);
+        let out = core
+            .ingest_and_detect(
+                "lbm,case=uniform,node=icx36,collision_op=srt,gpu=false,repo=p1 mlups=480 11000000000\n",
+            )
+            .unwrap();
+        assert_eq!(out.summary.opened, 1, "drop must open an alert");
+        assert_eq!(core.alerts.active().len(), 1);
+    }
+
+    #[test]
+    fn ingest_is_atomic_on_malformed_batches() {
+        let mut core = CoreHandle::new();
+        let bad = "lbm,repo=p1 mlups=1 1000000000\nnot a line\n";
+        assert!(core.ingest_and_detect(bad).is_err());
+        assert_eq!(core.db.len(), 0, "malformed batch must not partially ingest");
+    }
+
+    #[test]
+    fn scoped_detection_isolates_tenants() {
+        let mut core = CoreHandle::new();
+        core.ingest_and_detect(&lp_series("a", 10, |i| 800.0 + (i % 3) as f64)).unwrap();
+        core.ingest_and_detect(&lp_series("b", 10, |i| 400.0 + (i % 3) as f64)).unwrap();
+        // tenant a regresses; tenant b stays healthy
+        let out = core
+            .ingest_and_detect(
+                "lbm,case=uniform,node=icx36,collision_op=srt,gpu=false,repo=a mlups=450 12000000000\n",
+            )
+            .unwrap();
+        assert_eq!(out.summary.opened, 1);
+        let a = core.alerts.active()[0];
+        assert_eq!(a.group.get("repo").map(|s| s.as_str()), Some("a"));
+    }
+}

@@ -56,9 +56,12 @@
 //! (`regress.<policy>.<knob>` overrides, [`detector_with_config`]).
 
 pub mod campaign;
+pub mod core;
 pub mod fe2ti_pipeline;
 pub mod scaling_pipeline;
 pub mod walberla_pipeline;
+
+pub use self::core::{CoreHandle, IngestDetectOutcome};
 
 use crate::ci::{CiJob, Pipeline, PipelineFactory, Runner};
 use crate::cluster::machinestate::machine_state;
@@ -66,7 +69,7 @@ use crate::cluster::nodes::catalogue;
 use crate::datastore::{DataStore, Id};
 use crate::obs::metrics as om;
 use crate::obs::trace::TraceRecorder;
-use crate::regress::{AlertBook, Detector, DetectorState, Direction, IngestSummary, Policy};
+use crate::regress::{Detector, Direction, IngestSummary, Policy};
 use crate::sched::{JobState, Payload, SimScheduler, SubmitSpec};
 use crate::slurm::JobSpec;
 use crate::tsdb::{Db, Point};
@@ -278,30 +281,15 @@ pub struct PendingPipeline {
 pub struct CbSystem {
     /// The shared event-driven scheduler all pipelines interleave on.
     pub scheduler: SimScheduler,
-    pub db: Db,
+    /// The continuous-benchmarking core (TSDB + detector + carried
+    /// incremental state + alert book) — the part `serve::` shares, one
+    /// per project. `CbSystem` derefs to it, so `cb.db`, `cb.alerts`,
+    /// `cb.detector` and `cb.det_state` keep working everywhere.
+    pub core: CoreHandle,
     pub store: DataStore,
     pub runner: Runner,
     pub pipelines: PipelineFactory,
     pub executed: Vec<PipelineReport>,
-    /// Statistical regression detector run after every upload. To add or
-    /// change policies durably use [`CbSystem::install_detector`] —
-    /// direct assignment is overwritten by the next per-commit
-    /// [`CbSystem::apply_regress_config`].
-    pub detector: Detector,
-    /// Durable alert lifecycle fed by the detector.
-    pub alerts: AlertBook,
-    /// Incremental per-series detection state carried across collects:
-    /// the post-upload check ingests only the points its pipeline
-    /// appended instead of re-querying the tail window, with
-    /// byte-identical findings/alerts (see `regress::state`). Persisted
-    /// beside the alert book by the CLI (`--save-state`); invalidated and
-    /// rebuilt automatically on detector-config changes.
-    pub det_state: DetectorState,
-    /// `false` restores the full tail re-query on every check (the A/B
-    /// reference; `cbench campaign --detect requery`).
-    incremental_detection: bool,
-    /// Pristine policies that per-commit `regress.*` overrides derive from.
-    base_detector: Detector,
     /// Pipelines submitted but not yet collected.
     in_flight: Vec<PendingPipeline>,
     root_collection: Id,
@@ -336,25 +324,35 @@ impl Default for CbSystem {
     }
 }
 
+/// `CbSystem` reads as its core at every field-access site: `cb.db`,
+/// `cb.alerts`, `cb.det_state`, `cb.detector` resolve through this pair.
+/// (Method calls that need *disjoint* mut/shared core borrows go through
+/// `cb.core.…` explicitly — Deref borrows the whole system.)
+impl std::ops::Deref for CbSystem {
+    type Target = CoreHandle;
+    fn deref(&self) -> &CoreHandle {
+        &self.core
+    }
+}
+impl std::ops::DerefMut for CbSystem {
+    fn deref_mut(&mut self) -> &mut CoreHandle {
+        &mut self.core
+    }
+}
+
 impl CbSystem {
     pub fn new() -> CbSystem {
         let mut store = DataStore::new();
         let root_collection = store.create_collection("cb-project", "CB project-level collection");
-        let detector = Detector::with_default_policies();
         CbSystem {
             scheduler: SimScheduler::new(
                 catalogue().into_iter().filter(|n| n.testcluster).collect(),
             ),
-            db: Db::new(),
+            core: CoreHandle::new(),
             store,
             runner: Runner::hpc(),
             pipelines: PipelineFactory::new(),
             executed: Vec::new(),
-            base_detector: detector.clone(),
-            detector,
-            alerts: AlertBook::new(),
-            det_state: DetectorState::new(),
-            incremental_detection: true,
             in_flight: Vec::new(),
             root_collection,
             alerts_collection: None,
@@ -403,38 +401,8 @@ impl CbSystem {
     /// watermarks trigger a bounded rebuild on mismatch).
     pub fn adopt_db(&mut self, db: Db) {
         let max_ts = db.newest_ts().unwrap_or(0);
-        self.db = db;
+        self.core.db = db;
         self.trigger_clock = self.trigger_clock.max(max_ts);
-    }
-
-    /// Toggle incremental detection (on by default): `false` makes every
-    /// post-upload check re-query the tail window from the TSDB — the
-    /// A/B reference the equivalence tests compare against.
-    pub fn set_incremental_detection(&mut self, on: bool) {
-        self.incremental_detection = on;
-    }
-    pub fn incremental_detection(&self) -> bool {
-        self.incremental_detection
-    }
-
-    /// Install a new detector as the *base* policy set: per-commit
-    /// `regress.*` overrides ([`CbSystem::apply_regress_config`]) are
-    /// derived from it, so custom policies installed here survive
-    /// campaign/pipeline collects. (Assigning to the `detector` field
-    /// directly is transient — the next `apply_regress_config` replaces
-    /// it with a fresh derivation from the base.)
-    pub fn install_detector(&mut self, det: Detector) {
-        self.base_detector = det.clone();
-        self.detector = det;
-    }
-
-    /// Swap in the base policies overridden by a commit's
-    /// `regress.<policy>.<knob>` entries (see [`detector_with_config`]).
-    /// Call with the triggering commit's [`BenchConfig`] before collecting
-    /// its pipeline; a config without overrides restores the base
-    /// sensitivity ([`CbSystem::install_detector`] sets the base).
-    pub fn apply_regress_config(&mut self, cfg: &BenchConfig) {
-        self.detector = detector_with_config(&self.base_detector, cfg);
     }
 
     /// Run the regression detector for `measurement` against the current
@@ -453,25 +421,14 @@ impl CbSystem {
         collection: Id,
         owner_repo: Option<&str>,
     ) -> IngestSummary {
-        let scope: Vec<(&str, &str)> = owner_repo.iter().map(|r| ("repo", *r)).collect();
-        // incremental by default: sync the carried per-series state with
-        // the points this collect appended (config changes / adopted
-        // databases rebuild, bounded), then judge from state — proven
-        // byte-identical to the full tail re-query below
-        let (findings, evaluated) = if self.incremental_detection {
-            self.det_state.sync(&self.detector, &self.db);
-            self.det_state
-                .detect_measurement_scoped(&self.detector, &self.db, measurement, &scope)
-        } else {
-            self.detector
-                .detect_measurement_scoped(&self.db, measurement, &scope)
-        };
+        // detection + alert-book folding live on the shared core (the
+        // serve:: facade runs the identical code per project)
         let now = self.trigger_clock;
-        let summary = self.alerts.ingest(&findings, &evaluated, now);
+        let summary = self.core.detect_and_ingest(measurement, owner_repo, now);
         // attribute exactly the alerts this execution opened to its
         // collection (the Fig. 5 provenance link)
         for id in &summary.opened_ids {
-            if let Some(a) = self.alerts.get_mut(*id) {
+            if let Some(a) = self.core.alerts.get_mut(*id) {
                 a.pipeline_collection = Some(collection);
             }
         }
@@ -487,7 +444,7 @@ impl CbSystem {
                     c
                 }
             };
-            self.alerts.archive(&mut self.store, coll);
+            self.core.alerts.archive(&mut self.store, coll);
         }
         summary
     }
@@ -700,7 +657,7 @@ impl CbSystem {
                 for (k, v) in &metrics.fields {
                     p.fields.insert(k.clone(), *v);
                 }
-                self.db.insert(p);
+                self.core.db.insert(p);
                 points += 1;
             }
 
@@ -802,7 +759,7 @@ impl CbSystem {
             .map(|&(_, s, _)| s)
             .fold(None, |acc: Option<f64>, s| Some(acc.map_or(s, |a| a.max(s))));
         for (id, s, [queue, run, collect, detect]) in slas {
-            if let Some(a) = self.alerts.get_mut(id) {
+            if let Some(a) = self.core.alerts.get_mut(id) {
                 a.sla_secs = Some(s);
                 a.sla_queue_secs = Some(queue);
                 a.sla_run_secs = Some(run);
@@ -973,7 +930,7 @@ impl CbSystem {
             p.tags.insert("commit".into(), commit8.to_string());
             p.fields.insert("points_per_sec".into(), rate);
             p.fields.insert("ops".into(), ops as f64);
-            self.db.insert(p);
+            self.core.db.insert(p);
             uploaded = true;
         }
         if uploaded {
@@ -1049,7 +1006,7 @@ impl CbSystem {
                 for (k, v) in &metrics.fields {
                     p.fields.insert(k.clone(), *v);
                 }
-                self.db.insert(p);
+                self.core.db.insert(p);
                 points += 1;
             }
             summary.push_str(&job.log);

@@ -55,6 +55,8 @@ fn cbench_main(argv: Vec<String>) -> anyhow::Result<()> {
         "regress" => cmd_regress(&args),
         "trace" => cmd_trace(&args),
         "tsdb" => cmd_tsdb(&args),
+        "serve" => cmd_serve(&args),
+        "loadgen" => cmd_loadgen(&args),
         other => anyhow::bail!("unknown command `{other}` — see `cbench help`"),
     }
 }
@@ -679,13 +681,29 @@ fn cmd_tsdb(args: &Args) -> anyhow::Result<()> {
                             .set("shard_list", Json::Arr(shards)),
                     );
                 }
+                // flag unreadable shard bodies (valid manifest over a
+                // truncated/corrupt/missing file) without retaining any
+                // body — `loaded` above stays an honest laziness probe
+                let bad = db.verify_bodies();
+                let bad_json: Vec<Json> = bad
+                    .iter()
+                    .map(|(m, key, file, err)| {
+                        Json::obj()
+                            .set("measurement", m.as_str())
+                            .set("key", *key)
+                            .set("file", file.as_str())
+                            .set("error", err.as_str())
+                    })
+                    .collect();
                 let j = Json::obj()
                     .set("store", tsdb)
                     .set("layout", layout)
                     .set("shard_span_s", span_s)
                     .set("points", db.len())
+                    .set("unreadable_shards", Json::Arr(bad_json))
                     .set("measurements", meas);
                 println!("{}", j.to_string_compact());
+                anyhow::ensure!(bad.is_empty(), "{} unreadable shard bodies", bad.len());
                 return Ok(());
             }
             println!("{tsdb}: {} points, shard span {span_s} s, {layout} layout", db.len());
@@ -703,6 +721,15 @@ fn cmd_tsdb(args: &Args) -> anyhow::Result<()> {
                     );
                 }
             }
+            let bad = db.verify_bodies();
+            for (m, key, file, err) in &bad {
+                eprintln!("UNREADABLE shard {m}/{key} ({file}): {err}");
+            }
+            anyhow::ensure!(
+                bad.is_empty(),
+                "{} unreadable shard bodies — the store was modified behind the manifest",
+                bad.len()
+            );
             Ok(())
         }
         "compact" => {
@@ -747,6 +774,102 @@ fn cmd_tsdb(args: &Args) -> anyhow::Result<()> {
     }
 }
 
+/// Process-wide shutdown flag for `cbench serve` — flipped by the
+/// SIGTERM/SIGINT handler, polled by the serve foreground loop.
+#[cfg(unix)]
+static SERVE_SHUTDOWN: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+#[cfg(unix)]
+extern "C" fn serve_signal_handler(_sig: libc::c_int) {
+    SERVE_SHUTDOWN.store(true, std::sync::atomic::Ordering::SeqCst);
+}
+
+/// `cbench serve [--addr A] [--data-dir DIR] [--serve-threads N]
+/// [--max-body BYTES] [--read-timeout-ms MS]` — run the
+/// benchmark-as-a-service facade in the foreground until SIGTERM/SIGINT,
+/// then drain in-flight requests, save every project store (crash-atomic
+/// manifest protocol) and print `SERVE_SHUTDOWN_JSON`; CI asserts
+/// `dirty_after_save == 0`.
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    use cbench::serve::{start, ServeConfig};
+    let def = ServeConfig::default();
+    let cfg = ServeConfig {
+        addr: args.get_or("addr", &def.addr).to_string(),
+        data_dir: args.get("data-dir").map(PathBuf::from),
+        threads: args.get_usize("serve-threads", def.threads).max(1),
+        max_body: args.get_usize("max-body", def.max_body),
+        read_timeout_ms: args.get_usize("read-timeout-ms", def.read_timeout_ms as usize) as u64,
+    };
+    let handle = start(cfg).map_err(|e| anyhow::anyhow!(e))?;
+    println!(
+        "cbench serve: listening on http://{} ({} workers{})",
+        handle.addr,
+        handle.threads(),
+        match handle.data_dir() {
+            Some(d) => format!(", data-dir {}", d.display()),
+            None => ", in-memory only".to_string(),
+        }
+    );
+    #[cfg(unix)]
+    {
+        unsafe {
+            libc::signal(libc::SIGTERM, serve_signal_handler as libc::sighandler_t);
+            libc::signal(libc::SIGINT, serve_signal_handler as libc::sighandler_t);
+        }
+        while !SERVE_SHUTDOWN.load(std::sync::atomic::Ordering::SeqCst) {
+            std::thread::sleep(std::time::Duration::from_millis(100));
+        }
+        println!("cbench serve: shutdown signal — draining and saving");
+    }
+    #[cfg(not(unix))]
+    {
+        // no signal story off unix: serve until the process is killed
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    let report = handle.stop();
+    println!(
+        "SERVE_SHUTDOWN_JSON {}",
+        report.to_json().to_string_compact()
+    );
+    anyhow::ensure!(
+        report.dirty_after_save == 0,
+        "{} shards still dirty after the shutdown save",
+        report.dirty_after_save
+    );
+    Ok(())
+}
+
+/// `cbench loadgen [--addr A] [--project P] [--clients N] [--batches B]
+/// [--batch-points K] [--queries Q] [--inject]` — drive a running
+/// serve:: instance with concurrent ingest + query traffic and print
+/// `LOADGEN_JSON` (QPS, p50/p99 latency, open alerts read back over the
+/// API). `--inject` appends single-point regressed batches so the stock
+/// detector opens an alert the smoke job can assert on.
+fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
+    use cbench::serve::loadgen::{run, LoadgenConfig};
+    let def = LoadgenConfig::default();
+    let cfg = LoadgenConfig {
+        addr: args.get_or("addr", &def.addr).to_string(),
+        project: args.get_or("project", &def.project).to_string(),
+        clients: args.get_usize("clients", def.clients).max(1),
+        batches: args.get_usize("batches", def.batches).max(1),
+        batch_points: args.get_usize("batch-points", def.batch_points).max(1),
+        queries: args.get_usize("queries", def.queries),
+        inject_regression: args.flag("inject"),
+    };
+    let report = run(&cfg);
+    println!("LOADGEN_JSON {}", report.to_json().to_string_compact());
+    anyhow::ensure!(
+        report.http_errors == 0,
+        "{} of {} requests failed",
+        report.http_errors,
+        report.ingest_requests + report.query_requests
+    );
+    Ok(())
+}
+
 /// Latest timestamp across every measurement — the "now" for alert
 /// bookkeeping when working from a saved TSDB. Reads shard metadata
 /// only: a lazily-loaded manifest store stays unmaterialized.
@@ -771,11 +894,43 @@ fn cmd_regress(args: &Args) -> anyhow::Result<()> {
 /// `cbench regress detect [--tsdb FILE] [--alerts FILE]` — run the
 /// statistical detector over a saved TSDB and fold findings into the
 /// alert book.
+///
+/// Detection iterates (measurement × repo tag value) and runs each check
+/// *scoped* to that repository, matching the pipeline-path semantics:
+/// the `tail(n)` detection window counts each repo's own trigger
+/// timestamps, so co-tenant uploads cannot dilute (or shrink) another
+/// repo's window. (The unscoped `detect_full` used here before judged
+/// every series against the measurement-wide tail bound — the documented
+/// PR-2 caveat this fixes.) Measurements without a `repo` tag keep the
+/// unscoped check. Policies that don't group by `repo` evaluate the same
+/// series identically under every scope; the fingerprint dedup below
+/// collapses those repeats before the alert book sees them.
 fn cmd_regress_detect(args: &Args, alerts_path: &str) -> anyhow::Result<()> {
+    use cbench::regress::detector::series_fingerprint;
     let tsdb = args.get_or("tsdb", "cbench_tsdb.lp");
     let db = Db::load(Path::new(tsdb))?;
     let det = Detector::with_default_policies();
-    let (findings, evaluated) = det.detect_full(&db);
+    let mut findings = Vec::new();
+    let mut evaluated = Vec::new();
+    let measurements: Vec<String> = db.measurements().cloned().collect();
+    for m in &measurements {
+        let repos = db.tag_values(m, "repo");
+        if repos.is_empty() {
+            let (f, e) = det.detect_measurement(&db, m);
+            findings.extend(f);
+            evaluated.extend(e);
+        } else {
+            for r in &repos {
+                let (f, e) = det.detect_measurement_scoped(&db, m, &[("repo", r)]);
+                findings.extend(f);
+                evaluated.extend(e);
+            }
+        }
+    }
+    let mut seen = std::collections::BTreeSet::new();
+    findings.retain(|f| seen.insert(series_fingerprint(&f.policy, &f.series)));
+    let mut seen_eval = std::collections::BTreeSet::new();
+    evaluated.retain(|e| seen_eval.insert(e.clone()));
     if findings.is_empty() {
         println!("no regressions detected across {} points", db.len());
     } else {
@@ -1226,6 +1381,38 @@ COMMANDS:
                                 legacy line-protocol file, stable order —
                                 the reload-equivalence dump CI diffs, and
                                 the down-migration path
+  serve [--addr A] [--data-dir DIR] [--serve-threads N] [--max-body BYTES]
+        [--read-timeout-ms MS]
+                                benchmark-as-a-service facade: a
+                                multi-tenant HTTP/1.1 API (std::net, no
+                                new deps) over the CB core — POST
+                                /v0/projects/{p}/ingest (line protocol
+                                -> scoped detection -> alert book), GET
+                                .../query (tail/range pushdowns), GET
+                                .../alerts + POST
+                                .../alerts/{id}/resolve, PUT
+                                .../thresholds (per-project regress.*
+                                overrides, detector-fingerprint
+                                invalidation), GET /healthz, GET
+                                /metrics; every project is an
+                                independent core behind its own lock
+                                (--data-dir persists each under
+                                DIR/{project}/). SIGTERM/SIGINT drains
+                                in-flight requests, saves every project
+                                via the crash-atomic manifest protocol
+                                and prints SERVE_SHUTDOWN_JSON
+                                (dirty_after_save must be 0)
+  loadgen [--addr A] [--project P] [--clients N] [--batches B]
+          [--batch-points K] [--queries Q] [--inject]
+                                drive a running serve instance: N client
+                                threads (disjoint projects) send B
+                                ingest batches of K points then Q tail
+                                queries each; prints LOADGEN_JSON
+                                (ingest/query QPS, p50/p99 latency ms,
+                                open alerts read back over the API);
+                                --inject appends single-point regressed
+                                batches so the stock detector opens an
+                                alert the serve-smoke CI job asserts on
   regress detect [--tsdb FILE] [--alerts FILE]
                                 statistical regression scan of a saved TSDB
                                 (baseline windows, Welch t / Mann-Whitney /
@@ -1413,6 +1600,12 @@ CB pipeline wiring (paper Figs. 3-4):
        stock detector that watches the benchmarks -- an infra slowdown
        opens a regression alert like any other (alert SLAs decompose
        into queue + run + collect + detect components that sum exactly)
+    -> the same core loop is servable (serve::): `cbench serve` exposes
+       upload -> detect -> alert as a multi-tenant HTTP API -- each
+       project owns an independent TSDB + detector state + alert book
+       behind its own lock, ingests line protocol over POST, answers
+       tail/range queries, and persists per-project manifest stores on
+       drain; `cbench loadgen` is the matching traffic driver
 
 Full data-flow + module map + determinism contract: ARCHITECTURE.md.
 ";

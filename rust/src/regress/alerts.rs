@@ -407,7 +407,7 @@ fn opt_num(j: &Json, key: &str) -> Option<f64> {
     j.get(key).and_then(|v| v.as_f64())
 }
 
-fn alert_to_json(a: &Alert) -> Json {
+pub fn alert_to_json(a: &Alert) -> Json {
     let mut group = Json::obj();
     for (k, v) in &a.group {
         group = group.set(k, v.as_str());

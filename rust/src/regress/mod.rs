@@ -38,7 +38,7 @@ pub mod detector;
 pub mod state;
 pub mod stats;
 
-pub use alerts::{Alert, AlertBook, AlertState, IngestSummary};
+pub use alerts::{alert_to_json, Alert, AlertBook, AlertState, IngestSummary};
 pub use bisect::{bisect_chain, bisect_pipeline, chain_between, resolve_short, BisectReport};
 pub use detector::{Detector, Direction, Finding, Policy};
 pub use state::{detector_fingerprint, DetectorState};

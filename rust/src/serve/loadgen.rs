@@ -1,0 +1,259 @@
+//! Load generator for the serve:: facade — the client half of the
+//! benchmark-as-a-service story. Drives concurrent line-protocol ingest
+//! and tail queries over real HTTP connections, optionally injects a
+//! performance regression into the generated series, and reports
+//! sustained QPS with p50/p99 request latency (`cbench loadgen`,
+//! `bench_serve.rs`).
+//!
+//! Generated traffic is shaped to trip the stock `lbm-mlups` policy:
+//! `lbm` points carrying the `case/node/collision_op/gpu/repo` tags with
+//! a `mlups` field, strictly increasing timestamps, a stable baseline
+//! and (with [`LoadgenConfig::inject_regression`]) a >30% drop for the
+//! final batches — enough for the CUSUM + Welch-t gates to open an
+//! alert, which the serve-smoke CI job then reads back over
+//! `GET /v0/projects/{p}/alerts`.
+
+use crate::util::json::Json;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Server address, e.g. `127.0.0.1:8080`.
+    pub addr: String,
+    /// Project name prefix; client `i` writes to `{project}-{i}`.
+    pub project: String,
+    /// Concurrent client threads (each owns a disjoint project).
+    pub clients: usize,
+    /// Ingest requests (batches) per client.
+    pub batches: usize,
+    /// Points per ingest batch.
+    pub batch_points: usize,
+    /// Query requests per client (after the ingest phase).
+    pub queries: usize,
+    /// After the healthy batches, send a few *single-point* batches that
+    /// regress ~35% — single-point so the detector's recent window (1)
+    /// sees the drop against a still-healthy baseline window (8); a
+    /// whole regressed batch would shift the baseline along with it.
+    pub inject_regression: bool,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> LoadgenConfig {
+        LoadgenConfig {
+            addr: "127.0.0.1:8080".to_string(),
+            project: "loadgen".to_string(),
+            clients: 2,
+            batches: 20,
+            batch_points: 50,
+            queries: 50,
+            inject_regression: false,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct LoadgenReport {
+    pub ingest_requests: usize,
+    pub query_requests: usize,
+    pub points_sent: usize,
+    pub http_errors: usize,
+    pub ingest_qps: f64,
+    pub query_qps: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// Open alerts summed over the driven projects after the run.
+    pub alerts_open: usize,
+}
+
+impl LoadgenReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("ingest_requests", self.ingest_requests)
+            .set("query_requests", self.query_requests)
+            .set("points_sent", self.points_sent)
+            .set("http_errors", self.http_errors)
+            .set("ingest_qps", round2(self.ingest_qps))
+            .set("query_qps", round2(self.query_qps))
+            .set("p50_ms", round3(self.p50_ms))
+            .set("p99_ms", round3(self.p99_ms))
+            .set("alerts_open", self.alerts_open)
+    }
+}
+
+fn round2(v: f64) -> f64 {
+    (v * 100.0).round() / 100.0
+}
+fn round3(v: f64) -> f64 {
+    (v * 1000.0).round() / 1000.0
+}
+
+/// One blocking HTTP/1.1 exchange (connection per request — the server
+/// always answers `Connection: close`). Returns `(status, body)`.
+pub fn http_request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: &[u8],
+) -> Result<(u16, Vec<u8>), String> {
+    let mut stream =
+        TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .ok();
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream
+        .write_all(head.as_bytes())
+        .and_then(|_| stream.write_all(body))
+        .map_err(|e| format!("send: {e}"))?;
+    let mut resp = Vec::new();
+    stream
+        .read_to_end(&mut resp)
+        .map_err(|e| format!("recv: {e}"))?;
+    let head_end = resp
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .ok_or("malformed response: no header terminator")?;
+    let head_txt = std::str::from_utf8(&resp[..head_end])
+        .map_err(|_| "malformed response head".to_string())?;
+    let status: u16 = head_txt
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or("malformed status line")?;
+    Ok((status, resp[head_end + 4..].to_vec()))
+}
+
+/// Line-protocol batch for one client: `batch_points` points shaped for
+/// the stock `lbm-mlups` policy. Timestamps are strictly increasing
+/// across batches (1 s apart — one "pipeline trigger" per point), values
+/// hold a jittered baseline until `regress_from`, then drop ~35%.
+pub fn lp_batch(
+    repo: &str,
+    batch_idx: usize,
+    batch_points: usize,
+    regress: bool,
+) -> (String, usize) {
+    let mut out = String::with_capacity(batch_points * 96);
+    for j in 0..batch_points {
+        let i = batch_idx * batch_points + j;
+        let base = if regress { 520.0 } else { 800.0 };
+        // deterministic ±2 jitter so the baseline has variance for the
+        // Welch-t gate without drifting
+        let v = base + (i % 5) as f64;
+        let ts = (i as i64 + 1) * 1_000_000_000;
+        out.push_str(&format!(
+            "lbm,case=uniform,node=icx36,collision_op=srt,gpu=false,repo={repo} mlups={v} {ts}\n"
+        ));
+    }
+    (out, batch_points)
+}
+
+/// Run the configured load against a serve:: instance. Wall-clock is
+/// used only to *measure* (QPS/latency) — the stored state the server
+/// ends up with is a pure function of the requests sent.
+pub fn run(cfg: &LoadgenConfig) -> LoadgenReport {
+    let start = Instant::now();
+    let handles: Vec<std::thread::JoinHandle<(usize, usize, usize, Vec<f64>, Vec<f64>)>> = (0
+        ..cfg.clients.max(1))
+        .map(|c| {
+            let cfg = cfg.clone();
+            std::thread::spawn(move || {
+                let project = format!("{}-{c}", cfg.project);
+                let mut ingest_lat = Vec::with_capacity(cfg.batches);
+                let mut query_lat = Vec::with_capacity(cfg.queries);
+                let mut points = 0usize;
+                let mut errors = 0usize;
+                let mut ingest_reqs = 0usize;
+                let ingest_path = format!("/v0/projects/{project}/ingest");
+                let mut send = |body: &str, n: usize, points: &mut usize, errors: &mut usize,
+                                lat: &mut Vec<f64>| {
+                    let t = Instant::now();
+                    match http_request(&cfg.addr, "POST", &ingest_path, body.as_bytes()) {
+                        Ok((200, _)) => *points += n,
+                        _ => *errors += 1,
+                    }
+                    lat.push(t.elapsed().as_secs_f64() * 1000.0);
+                };
+                for b in 0..cfg.batches {
+                    let (body, n) = lp_batch(&project, b, cfg.batch_points, false);
+                    send(&body, n, &mut points, &mut errors, &mut ingest_lat);
+                    ingest_reqs += 1;
+                }
+                if cfg.inject_regression {
+                    // single-point regressed batches continuing the series
+                    let next = cfg.batches * cfg.batch_points;
+                    for k in 0..3 {
+                        let i = next + k;
+                        let v = 520.0 + (i % 5) as f64;
+                        let ts = (i as i64 + 1) * 1_000_000_000;
+                        let body = format!(
+                            "lbm,case=uniform,node=icx36,collision_op=srt,gpu=false,repo={project} mlups={v} {ts}\n"
+                        );
+                        send(&body, 1, &mut points, &mut errors, &mut ingest_lat);
+                        ingest_reqs += 1;
+                    }
+                }
+                let q = format!(
+                    "/v0/projects/{project}/query?measurement=lbm&field=mlups&tail=8&tag.repo={project}"
+                );
+                for _ in 0..cfg.queries {
+                    let t = Instant::now();
+                    match http_request(&cfg.addr, "GET", &q, b"") {
+                        Ok((200, _)) => {}
+                        _ => errors += 1,
+                    }
+                    query_lat.push(t.elapsed().as_secs_f64() * 1000.0);
+                }
+                (points, errors, ingest_reqs, ingest_lat, query_lat)
+            })
+        })
+        .collect();
+
+    let mut rep = LoadgenReport::default();
+    let mut all_lat: Vec<f64> = Vec::new();
+    let mut ingest_time = 0.0f64;
+    for h in handles {
+        if let Ok((points, errors, ingest_reqs, ingest_lat, query_lat)) = h.join() {
+            rep.points_sent += points;
+            rep.http_errors += errors;
+            rep.ingest_requests += ingest_reqs;
+            rep.query_requests += query_lat.len();
+            ingest_time = ingest_time.max(ingest_lat.iter().sum::<f64>() / 1000.0);
+            all_lat.extend(ingest_lat);
+            all_lat.extend(query_lat);
+        }
+    }
+    let total = start.elapsed().as_secs_f64().max(1e-9);
+    let query_time = (total - ingest_time).max(1e-9);
+    rep.ingest_qps = rep.ingest_requests as f64 / ingest_time.max(1e-9);
+    rep.query_qps = rep.query_requests as f64 / query_time;
+    all_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    rep.p50_ms = percentile(&all_lat, 0.50);
+    rep.p99_ms = percentile(&all_lat, 0.99);
+
+    // read back open alerts per driven project over the API
+    for c in 0..cfg.clients.max(1) {
+        let project = format!("{}-{c}", cfg.project);
+        if let Ok((200, body)) =
+            http_request(&cfg.addr, "GET", &format!("/v0/projects/{project}/alerts"), b"")
+        {
+            if let Ok(json) = Json::parse(&String::from_utf8_lossy(&body)) {
+                rep.alerts_open += json.as_arr().map(|a| a.len()).unwrap_or(0);
+            }
+        }
+    }
+    rep
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}

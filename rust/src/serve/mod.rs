@@ -1,0 +1,623 @@
+//! `serve::` — the benchmark-as-a-service facade (ROADMAP: "the path
+//! from one operator's CLI to millions of users").
+//!
+//! Exposes the continuous-benchmarking core ([`CoreHandle`]) as a
+//! multi-tenant HTTP/1.1 service over `std::net` — no new dependencies.
+//! Each *project* (tenant) owns a full, independent core: sharded TSDB,
+//! detector + carried incremental state, alert book, and its own
+//! `regress.*` threshold overrides. The v0 surface:
+//!
+//! | Method | Path | Body | Semantics |
+//! |---|---|---|---|
+//! | `POST` | `/v0/projects/{p}/ingest` | line protocol | batched ingest → scoped detection → alert book |
+//! | `GET`  | `/v0/projects/{p}/query` | — | range/`tail(n)` pushdown query (`measurement`, `field`, `tag.K=V`, `group_by`, `tail`, `t_min`, `t_max`) |
+//! | `GET`  | `/v0/projects/{p}/alerts` | — | alert list (`state=open` default, `state=all`) |
+//! | `POST` | `/v0/projects/{p}/alerts/{id}/resolve` | — | manual resolve (409 if already resolved) |
+//! | `PUT`  | `/v0/projects/{p}/thresholds` | `regress.*` cfg | detector rebuild via fingerprint invalidation |
+//! | `GET`  | `/healthz` | — | liveness + project/request counts |
+//! | `GET`  | `/metrics` | — | `obs::metrics` counters + serve counters, text exposition |
+//!
+//! **Locking model.** A registry `RwLock` guards the project map (held
+//! only to look up / create entries); each project is its own
+//! `Arc<RwLock<ProjectStore>>`. Reads (`query`, `alerts`) take the
+//! project read lock and ride the `Sync` `Db` (PR 7: `OnceLock` shard
+//! bodies, atomic LRU bookkeeping) — concurrent readers of one project
+//! proceed in parallel. Writes (`ingest`, `resolve`, `thresholds`) take
+//! the project write lock. Two different projects never share a lock, so
+//! tenants scale without contention and cannot observe each other's
+//! state — the cross-tenant isolation the pipeline path gets from
+//! detection scoping, the service gets from ownership.
+//!
+//! **Shutdown/drain.** [`ServerHandle::stop`] (or SIGTERM via `cbench
+//! serve`) flips the shutdown flag; the accept loop stops accepting,
+//! workers drain every already-accepted connection, then each project is
+//! saved through the PR-5 manifest commit protocol (crash-atomic: shard
+//! files first, manifest rename last). The returned [`ServeReport`]
+//! counts `dirty_after_save` — zero on a clean drain, which the
+//! serve-smoke CI job asserts.
+//!
+//! **Determinism.** Per-project state transitions are deterministic in
+//! the request order that project observed (same core code as the
+//! simulated pipeline path; detection timestamps come from the data's
+//! own trigger clock, `Db::newest_ts`). Wall-clock enters only in
+//! latency *measurements* (loadgen, bench_serve) — never in stored
+//! state.
+
+pub mod http;
+pub mod loadgen;
+
+use crate::coordinator::{BenchConfig, CoreHandle};
+use crate::obs::metrics as om;
+use crate::regress::{alert_to_json, detector_fingerprint, AlertBook, AlertState, DetectorState};
+use crate::tsdb::{Db, Query};
+use crate::util::json::Json;
+use http::{read_request, write_response, HttpError, Request};
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::time::Duration;
+
+/// On-disk layout of one project under the serve data dir.
+const TSDB_DIR: &str = "tsdb";
+const ALERTS_FILE: &str = "alerts.json";
+const STATE_FILE: &str = "state.json";
+const THRESHOLDS_FILE: &str = "thresholds.cfg";
+
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bind address, e.g. `127.0.0.1:8080` (`:0` picks an ephemeral
+    /// port, reported in [`ServerHandle::addr`]).
+    pub addr: String,
+    /// Per-project persistence root; `None` = in-memory only.
+    pub data_dir: Option<PathBuf>,
+    /// Worker threads handling connections.
+    pub threads: usize,
+    /// Request body cap (413 beyond it).
+    pub max_body: usize,
+    /// Socket read timeout per connection (408 on expiry).
+    pub read_timeout_ms: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:8080".to_string(),
+            data_dir: None,
+            threads: 4,
+            max_body: 8 * 1024 * 1024,
+            read_timeout_ms: 5000,
+        }
+    }
+}
+
+/// One tenant: a full CB core plus the raw threshold config it was last
+/// given (persisted verbatim so a restart re-applies it).
+pub struct ProjectStore {
+    pub core: CoreHandle,
+    /// Raw `regress.*` config text from the last `PUT …/thresholds`.
+    pub thresholds: Option<String>,
+}
+
+impl ProjectStore {
+    fn new() -> ProjectStore {
+        ProjectStore {
+            core: CoreHandle::new(),
+            thresholds: None,
+        }
+    }
+
+    /// Load a project from `dir` (its subtree of the serve data dir).
+    fn load(dir: &Path) -> Result<ProjectStore, String> {
+        let mut p = ProjectStore::new();
+        let tsdb = dir.join(TSDB_DIR);
+        if tsdb.exists() {
+            p.core.db = Db::load(&tsdb).map_err(|e| format!("load {}: {e}", tsdb.display()))?;
+        }
+        p.core.alerts = AlertBook::load(&dir.join(ALERTS_FILE))
+            .map_err(|e| format!("load {}: {e}", dir.join(ALERTS_FILE).display()))?;
+        p.core.alerts.detach_store();
+        p.core.det_state = DetectorState::load(&dir.join(STATE_FILE))
+            .map_err(|e| format!("load {}: {e}", dir.join(STATE_FILE).display()))?;
+        if let Ok(text) = std::fs::read_to_string(dir.join(THRESHOLDS_FILE)) {
+            p.core.apply_regress_config(&BenchConfig::parse(&text));
+            p.thresholds = Some(text);
+        }
+        Ok(p)
+    }
+
+    /// Persist via the PR-5 manifest commit protocol (crash-atomic) and
+    /// report what was written. Returns `(written, kept, dirty_after)`.
+    fn save(&mut self, dir: &Path) -> Result<(usize, usize, usize), String> {
+        std::fs::create_dir_all(dir).map_err(|e| format!("mkdir {}: {e}", dir.display()))?;
+        let rep = self
+            .core
+            .db
+            .save_report(&dir.join(TSDB_DIR))
+            .map_err(|e| format!("save tsdb: {e}"))?;
+        self.core
+            .alerts
+            .save(&dir.join(ALERTS_FILE))
+            .map_err(|e| format!("save alerts: {e}"))?;
+        self.core
+            .det_state
+            .save(&dir.join(STATE_FILE))
+            .map_err(|e| format!("save state: {e}"))?;
+        if let Some(t) = &self.thresholds {
+            std::fs::write(dir.join(THRESHOLDS_FILE), t)
+                .map_err(|e| format!("save thresholds: {e}"))?;
+        }
+        Ok((rep.shards_written, rep.shards_kept, self.core.db.dirty_shards()))
+    }
+}
+
+/// State shared between the accept loop, the workers and the handle.
+struct Shared {
+    cfg: ServeConfig,
+    projects: RwLock<BTreeMap<String, Arc<RwLock<ProjectStore>>>>,
+    /// Accepted connections awaiting a worker.
+    queue: Mutex<VecDeque<TcpStream>>,
+    queue_cv: Condvar,
+    shutdown: AtomicBool,
+    requests: AtomicU64,
+    errors: AtomicU64,
+}
+
+/// Final accounting returned by [`ServerHandle::stop`].
+#[derive(Debug, Clone, Default)]
+pub struct ServeReport {
+    pub requests: u64,
+    pub errors: u64,
+    pub projects_saved: usize,
+    pub shards_written: usize,
+    pub shards_kept: usize,
+    /// Dirty shards remaining after the drain save — 0 on a clean stop.
+    pub dirty_after_save: usize,
+}
+
+impl ServeReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("requests", self.requests as i64)
+            .set("errors", self.errors as i64)
+            .set("projects_saved", self.projects_saved)
+            .set("shards_written", self.shards_written)
+            .set("shards_kept", self.shards_kept)
+            .set("dirty_after_save", self.dirty_after_save)
+    }
+}
+
+/// A running server. Dropping the handle does NOT stop the server; call
+/// [`ServerHandle::stop`] (or let the process exit).
+pub struct ServerHandle {
+    pub addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept_join: std::thread::JoinHandle<()>,
+    worker_joins: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// Worker thread count the server was started with.
+    pub fn threads(&self) -> usize {
+        self.worker_joins.len()
+    }
+
+    /// Persistence root, if any.
+    pub fn data_dir(&self) -> Option<&Path> {
+        self.shared.cfg.data_dir.as_deref()
+    }
+
+    /// Request shutdown without waiting (signal-handler safe side:
+    /// `cbench serve` flips this from its SIGTERM handler loop).
+    pub fn request_stop(&self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.queue_cv.notify_all();
+    }
+
+    /// Graceful shutdown: stop accepting, drain every already-accepted
+    /// connection, join all threads, then save every project store.
+    pub fn stop(self) -> ServeReport {
+        self.request_stop();
+        self.accept_join.join().ok();
+        for j in self.worker_joins {
+            j.join().ok();
+        }
+        let mut rep = ServeReport {
+            requests: self.shared.requests.load(Ordering::Relaxed),
+            errors: self.shared.errors.load(Ordering::Relaxed),
+            ..ServeReport::default()
+        };
+        let projects = self.shared.projects.read().unwrap();
+        for (name, store) in projects.iter() {
+            let mut st = store.write().unwrap();
+            if let Some(root) = &self.shared.cfg.data_dir {
+                match st.save(&root.join(name)) {
+                    Ok((w, k, dirty)) => {
+                        rep.projects_saved += 1;
+                        rep.shards_written += w;
+                        rep.shards_kept += k;
+                        rep.dirty_after_save += dirty;
+                    }
+                    Err(e) => {
+                        eprintln!("serve: failed to save project {name}: {e}");
+                        rep.dirty_after_save += st.core.db.dirty_shards();
+                    }
+                }
+            } else {
+                rep.dirty_after_save += st.core.db.dirty_shards();
+            }
+        }
+        rep
+    }
+}
+
+/// Bind and start the service: one accept thread + `threads` workers.
+pub fn start(cfg: ServeConfig) -> Result<ServerHandle, String> {
+    // the /metrics endpoint is part of the service contract — turn the
+    // (zero-cost-when-disabled) self-metrics recording on
+    om::set_enabled(true);
+    let listener =
+        TcpListener::bind(&cfg.addr).map_err(|e| format!("bind {}: {e}", cfg.addr))?;
+    let addr = listener
+        .local_addr()
+        .map_err(|e| format!("local_addr: {e}"))?;
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| format!("set_nonblocking: {e}"))?;
+    let shared = Arc::new(Shared {
+        cfg,
+        projects: RwLock::new(BTreeMap::new()),
+        queue: Mutex::new(VecDeque::new()),
+        queue_cv: Condvar::new(),
+        shutdown: AtomicBool::new(false),
+        requests: AtomicU64::new(0),
+        errors: AtomicU64::new(0),
+    });
+
+    let accept_shared = Arc::clone(&shared);
+    let accept_join = std::thread::Builder::new()
+        .name("serve-accept".into())
+        .spawn(move || accept_loop(listener, accept_shared))
+        .map_err(|e| format!("spawn accept thread: {e}"))?;
+
+    let mut worker_joins = Vec::new();
+    for i in 0..shared.cfg.threads.max(1) {
+        let w = Arc::clone(&shared);
+        worker_joins.push(
+            std::thread::Builder::new()
+                .name(format!("serve-worker-{i}"))
+                .spawn(move || worker_loop(w))
+                .map_err(|e| format!("spawn worker: {e}"))?,
+        );
+    }
+    Ok(ServerHandle {
+        addr,
+        shared,
+        accept_join,
+        worker_joins,
+    })
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    while !shared.shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let t = Duration::from_millis(shared.cfg.read_timeout_ms.max(1));
+                stream.set_read_timeout(Some(t)).ok();
+                stream.set_write_timeout(Some(t)).ok();
+                shared.queue.lock().unwrap().push_back(stream);
+                shared.queue_cv.notify_one();
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                // nonblocking accept doubles as the shutdown poll point
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+    // wake every worker so they can observe shutdown + drain the queue
+    shared.queue_cv.notify_all();
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let stream = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(s) = q.pop_front() {
+                    break Some(s);
+                }
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    // queue empty + shutdown: fully drained
+                    break None;
+                }
+                let (guard, _) = shared
+                    .queue_cv
+                    .wait_timeout(q, Duration::from_millis(100))
+                    .unwrap();
+                q = guard;
+            }
+        };
+        let Some(mut stream) = stream else { return };
+        handle_connection(&mut stream, &shared);
+    }
+}
+
+fn handle_connection(stream: &mut TcpStream, shared: &Shared) {
+    match read_request(stream, shared.cfg.max_body) {
+        Ok(None) => {} // client connected and left
+        Ok(Some(req)) => {
+            shared.requests.fetch_add(1, Ordering::Relaxed);
+            match route(&req, shared) {
+                Ok((content_type, body)) => {
+                    write_response(stream, 200, content_type, body.as_bytes()).ok();
+                }
+                Err(e) => {
+                    shared.errors.fetch_add(1, Ordering::Relaxed);
+                    let body = Json::obj()
+                        .set("error", e.message.clone())
+                        .to_string_compact();
+                    write_response(stream, e.status, "application/json", body.as_bytes()).ok();
+                }
+            }
+        }
+        Err(e) => {
+            shared.requests.fetch_add(1, Ordering::Relaxed);
+            shared.errors.fetch_add(1, Ordering::Relaxed);
+            let body = Json::obj()
+                .set("error", e.message.clone())
+                .to_string_compact();
+            write_response(stream, e.status, "application/json", body.as_bytes()).ok();
+        }
+    }
+    // Connection: close — drop the stream
+}
+
+/// Dispatch one parsed request. Returns `(content_type, body)`.
+fn route(req: &Request, shared: &Shared) -> Result<(&'static str, String), HttpError> {
+    let segs = req.segments();
+    match (req.method.as_str(), segs.as_slice()) {
+        ("GET", ["healthz"]) => {
+            let projects = shared.projects.read().unwrap().len();
+            Ok((
+                "application/json",
+                Json::obj()
+                    .set("status", "ok")
+                    .set("projects", projects)
+                    .set("requests", shared.requests.load(Ordering::Relaxed) as i64)
+                    .to_string_compact(),
+            ))
+        }
+        ("GET", ["metrics"]) => Ok(("text/plain; version=0.0.4", render_metrics(shared))),
+        (_, ["healthz" | "metrics"]) => Err(HttpError::new(405, "method not allowed")),
+        (method, ["v0", "projects", project, rest @ ..]) => {
+            let project = validate_project(project)?;
+            match (method, rest) {
+                ("POST", ["ingest"]) => {
+                    let store = open_project(shared, &project, true)?;
+                    let text = req.body_utf8()?.to_string();
+                    let mut st = store.write().unwrap();
+                    let out = st
+                        .core
+                        .ingest_and_detect(&text)
+                        .map_err(|e| HttpError::new(400, e))?;
+                    Ok((
+                        "application/json",
+                        Json::obj()
+                            .set("points", out.points)
+                            .set("scopes", out.scopes)
+                            .set("alerts_opened", out.summary.opened)
+                            .set("alerts_auto_resolved", out.summary.auto_resolved)
+                            .to_string_compact(),
+                    ))
+                }
+                ("GET", ["query"]) => {
+                    let store = open_project(shared, &project, false)?;
+                    let q = build_query(req)?;
+                    let st = store.read().unwrap();
+                    let series = q.run(&st.core.db);
+                    let arr: Vec<Json> = series
+                        .iter()
+                        .map(|s| {
+                            let mut group = Json::obj();
+                            for (k, v) in &s.group {
+                                group = group.set(k, v.as_str());
+                            }
+                            let pts: Vec<Json> = s
+                                .points
+                                .iter()
+                                .map(|(ts, v)| Json::Arr(vec![Json::from(*ts), Json::from(*v)]))
+                                .collect();
+                            Json::obj().set("group", group).set("points", pts)
+                        })
+                        .collect();
+                    Ok(("application/json", Json::Arr(arr).to_string_compact()))
+                }
+                ("GET", ["alerts"]) => {
+                    let store = open_project(shared, &project, false)?;
+                    let all = req.query_get("state") == Some("all");
+                    let st = store.read().unwrap();
+                    let arr: Vec<Json> = st
+                        .core
+                        .alerts
+                        .alerts
+                        .iter()
+                        .filter(|a| all || a.state != AlertState::Resolved)
+                        .map(alert_to_json)
+                        .collect();
+                    Ok(("application/json", Json::Arr(arr).to_string_compact()))
+                }
+                ("POST", ["alerts", id, "resolve"]) => {
+                    let id: u64 = id
+                        .parse()
+                        .map_err(|_| HttpError::new(400, "alert id must be an integer"))?;
+                    let store = open_project(shared, &project, false)?;
+                    let mut st = store.write().unwrap();
+                    match st.core.alerts.get(id) {
+                        None => return Err(HttpError::new(404, format!("no alert #{id}"))),
+                        Some(a) if a.state == AlertState::Resolved => {
+                            return Err(HttpError::new(409, format!("alert #{id} already resolved")))
+                        }
+                        Some(_) => {}
+                    }
+                    let now = st.core.db.newest_ts().unwrap_or(0);
+                    st.core
+                        .alerts
+                        .resolve(id, now)
+                        .map_err(|e| HttpError::new(400, e))?;
+                    Ok((
+                        "application/json",
+                        Json::obj().set("resolved", id as i64).to_string_compact(),
+                    ))
+                }
+                ("PUT", ["thresholds"]) => {
+                    let store = open_project(shared, &project, true)?;
+                    let text = req.body_utf8()?.to_string();
+                    let cfg = BenchConfig::parse(&text);
+                    let mut st = store.write().unwrap();
+                    // fingerprint change invalidates the carried
+                    // detector state at its next sync (bounded rebuild)
+                    st.core.apply_regress_config(&cfg);
+                    let fp = detector_fingerprint(&st.core.detector);
+                    st.thresholds = Some(text);
+                    if let Some(root) = &shared.cfg.data_dir {
+                        let dir = root.join(&project);
+                        std::fs::create_dir_all(&dir).ok();
+                        std::fs::write(dir.join(THRESHOLDS_FILE), st.thresholds.as_deref().unwrap())
+                            .ok();
+                    }
+                    Ok((
+                        "application/json",
+                        Json::obj()
+                            .set("applied", true)
+                            .set("fingerprint", fp)
+                            .to_string_compact(),
+                    ))
+                }
+                _ => Err(HttpError::new(404, format!("no route for {} {}", req.method, req.path))),
+            }
+        }
+        _ => Err(HttpError::new(404, format!("no route for {} {}", req.method, req.path))),
+    }
+}
+
+/// Project names are path components on disk — restrict them hard
+/// (no traversal, no separators, bounded length).
+fn validate_project(name: &str) -> Result<String, HttpError> {
+    let ok = !name.is_empty()
+        && name.len() <= 64
+        && name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_');
+    if ok {
+        Ok(name.to_string())
+    } else {
+        Err(HttpError::new(
+            400,
+            "project names are [A-Za-z0-9_-]{1,64}",
+        ))
+    }
+}
+
+/// Look up a project. `create` (ingest/thresholds) makes missing
+/// projects spring into existence — loading from the data dir if a
+/// previous run persisted them; read endpoints 404 instead.
+fn open_project(
+    shared: &Shared,
+    name: &str,
+    create: bool,
+) -> Result<Arc<RwLock<ProjectStore>>, HttpError> {
+    if let Some(p) = shared.projects.read().unwrap().get(name) {
+        return Ok(Arc::clone(p));
+    }
+    let on_disk = shared
+        .cfg
+        .data_dir
+        .as_ref()
+        .map(|root| root.join(name))
+        .filter(|d| d.exists());
+    if !create && on_disk.is_none() {
+        return Err(HttpError::new(404, format!("no project '{name}'")));
+    }
+    let mut projects = shared.projects.write().unwrap();
+    // double-checked: another worker may have created it meanwhile
+    if let Some(p) = projects.get(name) {
+        return Ok(Arc::clone(p));
+    }
+    let store = match on_disk {
+        Some(dir) => ProjectStore::load(&dir).map_err(|e| HttpError::new(500, e))?,
+        None => ProjectStore::new(),
+    };
+    let arc = Arc::new(RwLock::new(store));
+    projects.insert(name.to_string(), Arc::clone(&arc));
+    Ok(arc)
+}
+
+/// Translate query parameters into a [`Query`]: `measurement` + `field`
+/// required; `tag.K=V` exact filters, `group_by=a,b`, `tail=n`,
+/// `t_min`/`t_max` in ns.
+fn build_query(req: &Request) -> Result<Query, HttpError> {
+    let measurement = req
+        .query_get("measurement")
+        .ok_or_else(|| HttpError::new(400, "missing query parameter 'measurement'"))?;
+    let field = req
+        .query_get("field")
+        .ok_or_else(|| HttpError::new(400, "missing query parameter 'field'"))?;
+    let mut q = Query::new(measurement, field);
+    for (k, v) in &req.query {
+        if let Some(tag) = k.strip_prefix("tag.") {
+            q.where_tags.insert(tag.to_string(), v.clone());
+        }
+    }
+    if let Some(g) = req.query_get("group_by") {
+        q.group_by = g
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.to_string())
+            .collect();
+    }
+    if let Some(t) = req.query_get("tail") {
+        q.tail = Some(
+            t.parse()
+                .map_err(|_| HttpError::new(400, "'tail' must be an integer"))?,
+        );
+    }
+    if let Some(t) = req.query_get("t_min") {
+        q.t_min = Some(
+            t.parse()
+                .map_err(|_| HttpError::new(400, "'t_min' must be an integer (ns)"))?,
+        );
+    }
+    if let Some(t) = req.query_get("t_max") {
+        q.t_max = Some(
+            t.parse()
+                .map_err(|_| HttpError::new(400, "'t_max' must be an integer (ns)"))?,
+        );
+    }
+    Ok(q)
+}
+
+/// Prometheus-style text exposition of the `obs::metrics` counters plus
+/// the serve-layer request counters.
+fn render_metrics(shared: &Shared) -> String {
+    let mut out = String::new();
+    let counters = om::counters();
+    for (i, c) in om::Counter::ALL.iter().enumerate() {
+        out.push_str(&format!("cbench_{} {}\n", c.name(), counters[i]));
+    }
+    out.push_str(&format!(
+        "cbench_serve_requests {}\n",
+        shared.requests.load(Ordering::Relaxed)
+    ));
+    out.push_str(&format!(
+        "cbench_serve_errors {}\n",
+        shared.errors.load(Ordering::Relaxed)
+    ));
+    out.push_str(&format!(
+        "cbench_serve_projects {}\n",
+        shared.projects.read().unwrap().len()
+    ));
+    out
+}

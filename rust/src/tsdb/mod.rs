@@ -324,23 +324,48 @@ impl Shard {
     /// shard-load counters record attempts, which is what the cache
     /// metrics mean).
     pub fn points(&self) -> &[Point] {
-        let body = self.body.get_or_init(|| {
+        self.try_points().unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible body materialization: like [`Shard::points`] but a
+    /// missing, truncated or otherwise corrupt backing file surfaces as
+    /// an `Err` naming the shard key and file path instead of a panic
+    /// deep inside a query. `tsdb info` and [`Db::verify_bodies`] use
+    /// this to flag unreadable shards without tearing the process down.
+    pub fn try_points(&self) -> Result<&[Point], String> {
+        if self.body.get().is_none() {
             let t = om::Timer::start();
             let path = self
                 .file
                 .as_deref()
                 .expect("unloaded shard always has a backing file");
-            let pts = read_shard_file(path, self.n);
+            let pts = read_shard_file(path, self.key, self.n)?;
             om::add(om::Counter::ShardLoads, 1);
             om::add(om::Counter::ShardLoadPoints, pts.len() as u64);
             if self.evicted.load(Ordering::Relaxed) {
                 om::add(om::Counter::ShardRemats, 1);
             }
             t.stop(om::TimedOp::ShardLoad);
-            pts
-        });
+            // a concurrent materializer may have won the race — its body
+            // is identical (the file is the source of truth); ours drops
+            let _ = self.body.set(pts);
+        }
         self.touch.store(TOUCH.fetch_add(1, Ordering::Relaxed), Ordering::Relaxed);
-        body
+        Ok(self.body.get().expect("body just materialized").as_slice())
+    }
+
+    /// Validate that this shard's body is readable without retaining it:
+    /// already-loaded (or unbacked) bodies are trivially fine; cold ones
+    /// get their file read and parsed, and the parse result is dropped.
+    pub fn check_body(&self) -> Result<(), String> {
+        if self.body.get().is_some() {
+            return Ok(());
+        }
+        let path = self
+            .file
+            .as_deref()
+            .expect("unloaded shard always has a backing file");
+        read_shard_file(path, self.key, self.n).map(|_| ())
     }
 
     /// Mutable body access (materializes first).
@@ -419,24 +444,25 @@ fn insert_point_into(s: &mut Shard, p: Point) {
 }
 
 /// Parse one shard file, enforcing the manifest's point count.
-fn read_shard_file(path: &Path, expect: usize) -> Vec<Point> {
-    let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
-        panic!(
-            "tsdb: cannot materialize shard {}: {e} (store directory modified behind the manifest?)",
+fn read_shard_file(path: &Path, key: i64, expect: usize) -> Result<Vec<Point>, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| {
+        format!(
+            "tsdb: cannot materialize shard key={key} from {}: {e} \
+             (store directory modified behind the manifest?)",
             path.display()
         )
-    });
+    })?;
     let pts = lp::parse_lines(&text)
-        .unwrap_or_else(|e| panic!("tsdb: corrupt shard {}: {e}", path.display()));
+        .map_err(|e| format!("tsdb: corrupt shard key={key} at {}: {e}", path.display()))?;
     if pts.len() != expect {
-        panic!(
-            "tsdb: shard {} holds {} points but the manifest says {expect} — \
+        return Err(format!(
+            "tsdb: shard key={key} at {} holds {} points but the manifest says {expect} — \
              the store was modified behind the manifest",
             path.display(),
             pts.len()
-        );
+        ));
     }
-    pts
+    Ok(pts)
 }
 
 /// Outcome of one [`Db::compact`] pass.
@@ -672,6 +698,41 @@ impl Db {
 
     pub fn measurements(&self) -> impl Iterator<Item = &String> {
         self.measurements.keys()
+    }
+
+    /// Shards mutated since the last save into the bound manifest
+    /// directory — the count the next [`Db::save`] would rewrite. Zero
+    /// right after a save: the serve-smoke "clean shutdown" assertion.
+    pub fn dirty_shards(&self) -> usize {
+        self.measurements
+            .values()
+            .flatten()
+            .filter(|s| s.is_dirty())
+            .count()
+    }
+
+    /// Validate every cold shard body without retaining any of them
+    /// ([`Shard::check_body`]): returns one `(measurement, shard key,
+    /// file name, error)` tuple per unreadable body. A valid manifest
+    /// over truncated/corrupt shard files is detected *here*, at
+    /// materialization-check time, instead of deep inside the first
+    /// query that happens to touch the bad shard — `tsdb info` calls
+    /// this to flag broken stores.
+    pub fn verify_bodies(&self) -> Vec<(String, i64, String, String)> {
+        let mut bad = Vec::new();
+        for (m, shards) in &self.measurements {
+            for s in shards {
+                if let Err(e) = s.check_body() {
+                    bad.push((
+                        m.clone(),
+                        s.key(),
+                        s.file_name().unwrap_or("<unbound>").to_string(),
+                        e,
+                    ));
+                }
+            }
+        }
+        bad
     }
 
     pub fn len(&self) -> usize {

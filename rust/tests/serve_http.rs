@@ -1,0 +1,419 @@
+//! End-to-end tests of the serve:: benchmark-as-a-service facade over
+//! real TCP connections: concurrent multi-tenant correctness (no lost
+//! points, no cross-project leakage), the served-vs-serial on-disk
+//! determinism property, restart/reload persistence, the HTTP error
+//! mapping contract and per-project threshold overrides.
+
+use cbench::serve::loadgen::{http_request, lp_batch};
+use cbench::serve::{start, ServeConfig, ServerHandle};
+use cbench::util::json::Json;
+use std::path::PathBuf;
+
+fn spawn(data_dir: Option<PathBuf>, max_body: usize) -> ServerHandle {
+    start(ServeConfig {
+        addr: "127.0.0.1:0".to_string(), // ephemeral port per test
+        data_dir,
+        max_body,
+        ..ServeConfig::default()
+    })
+    .expect("server starts")
+}
+
+/// Fresh per-test scratch dir (tests run in one process; names are
+/// distinct per call site).
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("cbench_serve_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn get_json(addr: &str, path: &str) -> (u16, Json) {
+    let (status, body) = http_request(addr, "GET", path, b"").expect("request");
+    let json = Json::parse(&String::from_utf8_lossy(&body)).unwrap_or(Json::Null);
+    (status, json)
+}
+
+/// Total points across every grouped series of a query response.
+fn response_points(json: &Json) -> usize {
+    json.as_arr()
+        .map(|series| {
+            series
+                .iter()
+                .filter_map(|s| s.get("points").and_then(|p| p.as_arr().map(|a| a.len())))
+                .sum()
+        })
+        .unwrap_or(0)
+}
+
+#[test]
+fn concurrent_writers_and_readers_no_lost_points_no_leakage() {
+    let handle = spawn(None, 8 * 1024 * 1024);
+    let addr = handle.addr.to_string();
+    const WRITERS: usize = 4;
+    const BATCHES: usize = 6;
+    const BATCH_POINTS: usize = 20;
+
+    // seed batch 0 for every project up front so the concurrent readers
+    // below can never race project creation (a 404 would be legal but
+    // would muddy the zero-errors assertion at the end)
+    for w in 0..WRITERS {
+        let project = format!("w{w}");
+        let (body, _) = lp_batch(&project, 0, BATCH_POINTS, false);
+        let (status, _) = http_request(
+            &addr,
+            "POST",
+            &format!("/v0/projects/{project}/ingest"),
+            body.as_bytes(),
+        )
+        .expect("seed ingest");
+        assert_eq!(status, 200);
+    }
+    let writers: Vec<_> = (0..WRITERS)
+        .map(|w| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let project = format!("w{w}");
+                for b in 1..BATCHES {
+                    let (body, _) = lp_batch(&project, b, BATCH_POINTS, false);
+                    let (status, _) = http_request(
+                        &addr,
+                        "POST",
+                        &format!("/v0/projects/{project}/ingest"),
+                        body.as_bytes(),
+                    )
+                    .expect("ingest request");
+                    assert_eq!(status, 200, "writer {w} batch {b}");
+                }
+            })
+        })
+        .collect();
+    // readers run against the same projects while the writers write:
+    // every response must be a clean 200 — never a 5xx, never a hang
+    let readers: Vec<_> = (0..3)
+        .map(|r| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                for i in 0..30 {
+                    let project = format!("w{}", (r + i) % WRITERS);
+                    let (status, _) = get_json(
+                        &addr,
+                        &format!("/v0/projects/{project}/query?measurement=lbm&field=mlups&tail=8"),
+                    );
+                    assert_eq!(status, 200, "reader saw status {status}");
+                }
+            })
+        })
+        .collect();
+    for t in writers {
+        t.join().unwrap();
+    }
+    for t in readers {
+        t.join().unwrap();
+    }
+
+    for w in 0..WRITERS {
+        let project = format!("w{w}");
+        // no lost points: everything each writer sent is queryable
+        let (status, json) = get_json(
+            &addr,
+            &format!("/v0/projects/{project}/query?measurement=lbm&field=mlups"),
+        );
+        assert_eq!(status, 200);
+        assert_eq!(
+            response_points(&json),
+            BATCHES * BATCH_POINTS,
+            "project {project} lost points"
+        );
+        // no leakage: grouping by repo shows exactly this writer's tag
+        let (_, grouped) = get_json(
+            &addr,
+            &format!("/v0/projects/{project}/query?measurement=lbm&field=mlups&group_by=repo"),
+        );
+        let groups = grouped.as_arr().expect("array");
+        assert_eq!(groups.len(), 1, "project {project} sees foreign series");
+        let repo = groups[0]
+            .get("group")
+            .and_then(|g| g.get("repo"))
+            .and_then(|r| r.as_str().map(|s| s.to_string()));
+        assert_eq!(repo.as_deref(), Some(project.as_str()));
+        // filtering by another tenant's repo tag inside this project
+        // finds nothing
+        let other = format!("w{}", (w + 1) % WRITERS);
+        let (_, leaked) = get_json(
+            &addr,
+            &format!(
+                "/v0/projects/{project}/query?measurement=lbm&field=mlups&tag.repo={other}"
+            ),
+        );
+        assert_eq!(response_points(&leaked), 0, "cross-project leakage");
+    }
+    let report = handle.stop();
+    assert_eq!(report.errors, 0, "clean run must log zero request errors");
+}
+
+/// THE determinism property of the service layer: driving the same
+/// per-project request streams concurrently or strictly serially must
+/// leave byte-identical stores on disk — manifest, shard files, alert
+/// book, detector state.
+#[test]
+fn served_concurrent_matches_serial_on_disk_byte_for_byte() {
+    const PROJECTS: usize = 3;
+    const BATCHES: usize = 4;
+    const BATCH_POINTS: usize = 25;
+    let dir_con = fresh_dir("concurrent");
+    let dir_ser = fresh_dir("serial");
+
+    // concurrent: one writer thread per project
+    let handle = spawn(Some(dir_con.clone()), 8 * 1024 * 1024);
+    let addr = handle.addr.to_string();
+    let writers: Vec<_> = (0..PROJECTS)
+        .map(|p| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let project = format!("p{p}");
+                for b in 0..BATCHES {
+                    let (body, _) = lp_batch(&project, b, BATCH_POINTS, false);
+                    let (status, _) = http_request(
+                        &addr,
+                        "POST",
+                        &format!("/v0/projects/{project}/ingest"),
+                        body.as_bytes(),
+                    )
+                    .unwrap();
+                    assert_eq!(status, 200);
+                }
+            })
+        })
+        .collect();
+    for t in writers {
+        t.join().unwrap();
+    }
+    let report = handle.stop();
+    assert_eq!(report.projects_saved, PROJECTS);
+    assert_eq!(report.dirty_after_save, 0, "drain save must leave nothing dirty");
+
+    // serial: identical per-project request streams, one after another
+    let handle = spawn(Some(dir_ser.clone()), 8 * 1024 * 1024);
+    let addr = handle.addr.to_string();
+    for p in 0..PROJECTS {
+        let project = format!("p{p}");
+        for b in 0..BATCHES {
+            let (body, _) = lp_batch(&project, b, BATCH_POINTS, false);
+            let (status, _) = http_request(
+                &addr,
+                "POST",
+                &format!("/v0/projects/{project}/ingest"),
+                body.as_bytes(),
+            )
+            .unwrap();
+            assert_eq!(status, 200);
+        }
+    }
+    let report = handle.stop();
+    assert_eq!(report.dirty_after_save, 0);
+
+    assert_eq!(
+        dir_snapshot(&dir_con),
+        dir_snapshot(&dir_ser),
+        "concurrent and serial stores must be byte-identical"
+    );
+    let _ = std::fs::remove_dir_all(&dir_con);
+    let _ = std::fs::remove_dir_all(&dir_ser);
+}
+
+/// Sorted (relative-path, contents) pairs of every file under `root`.
+fn dir_snapshot(root: &std::path::Path) -> Vec<(String, Vec<u8>)> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let path = entry.unwrap().path();
+            if path.is_dir() {
+                stack.push(path);
+            } else {
+                let rel = path.strip_prefix(root).unwrap().to_string_lossy().into_owned();
+                out.push((rel, std::fs::read(&path).unwrap()));
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+#[test]
+fn restart_reloads_persisted_projects() {
+    let dir = fresh_dir("restart");
+    let handle = spawn(Some(dir.clone()), 8 * 1024 * 1024);
+    let addr = handle.addr.to_string();
+    let (body, n) = lp_batch("persist", 0, 30, false);
+    let (status, _) = http_request(&addr, "POST", "/v0/projects/persist/ingest", body.as_bytes())
+        .unwrap();
+    assert_eq!(status, 200);
+    handle.stop();
+
+    // a fresh process-equivalent: new server, same data dir, no ingest
+    let handle = spawn(Some(dir.clone()), 8 * 1024 * 1024);
+    let addr = handle.addr.to_string();
+    let (status, json) = get_json(
+        &addr,
+        "/v0/projects/persist/query?measurement=lbm&field=mlups",
+    );
+    assert_eq!(status, 200, "persisted project must load on demand");
+    assert_eq!(response_points(&json), n);
+    handle.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn http_error_mapping_contract() {
+    let handle = spawn(None, 1024); // 1 KiB body cap to exercise 413
+    let addr = handle.addr.to_string();
+
+    // 404: read endpoints never create projects
+    let (status, _) = get_json(&addr, "/v0/projects/ghost/query?measurement=lbm&field=mlups");
+    assert_eq!(status, 404);
+    let (status, _) = get_json(&addr, "/v0/projects/ghost/alerts");
+    assert_eq!(status, 404);
+
+    // 400: malformed line protocol fails the whole batch
+    let (status, _) =
+        http_request(&addr, "POST", "/v0/projects/bad/ingest", b"this is not lp\n").unwrap();
+    assert_eq!(status, 400);
+    // ...atomically: the project exists but holds zero points
+    let (status, json) = get_json(&addr, "/v0/projects/bad/query?measurement=lbm&field=mlups");
+    assert_eq!(status, 200);
+    assert_eq!(response_points(&json), 0);
+
+    // 400: invalid project names (path traversal shapes) are rejected
+    let (status, _) = get_json(&addr, "/v0/projects/a%2Eb%2Fc/query?measurement=lbm&field=mlups");
+    assert_eq!(status, 400);
+
+    // 413: body over the configured cap
+    let big = vec![b'x'; 4096];
+    let (status, _) = http_request(&addr, "POST", "/v0/projects/big/ingest", &big).unwrap();
+    assert_eq!(status, 413);
+
+    // 404 + 400 on the alert resolve path
+    let (status, _) = http_request(&addr, "POST", "/v0/projects/bad/alerts/99/resolve", b"").unwrap();
+    assert_eq!(status, 404);
+    let (status, _) =
+        http_request(&addr, "POST", "/v0/projects/bad/alerts/zzz/resolve", b"").unwrap();
+    assert_eq!(status, 400);
+
+    handle.stop();
+}
+
+#[test]
+fn alert_lifecycle_over_http_and_double_resolve_conflict() {
+    let handle = spawn(None, 8 * 1024 * 1024);
+    let addr = handle.addr.to_string();
+    // healthy baseline, then single-point regressed batches (the recent
+    // window is 1 — a whole regressed batch would shift the baseline)
+    let (body, _) = lp_batch("alerts", 0, 20, false);
+    let (status, _) =
+        http_request(&addr, "POST", "/v0/projects/alerts/ingest", body.as_bytes()).unwrap();
+    assert_eq!(status, 200);
+    let mut opened = 0usize;
+    for k in 0..3 {
+        let i = 20 + k;
+        let line = format!(
+            "lbm,case=uniform,node=icx36,collision_op=srt,gpu=false,repo=alerts mlups={} {}\n",
+            520.0 + (i % 5) as f64,
+            (i as i64 + 1) * 1_000_000_000
+        );
+        let (status, body) =
+            http_request(&addr, "POST", "/v0/projects/alerts/ingest", line.as_bytes()).unwrap();
+        assert_eq!(status, 200);
+        let json = Json::parse(&String::from_utf8_lossy(&body)).unwrap();
+        opened += json.get("alerts_opened").and_then(|v| v.as_f64()).unwrap_or(0.0) as usize;
+    }
+    assert!(opened >= 1, "a 35% drop must open an alert over HTTP");
+
+    let (status, alerts) = get_json(&addr, "/v0/projects/alerts/alerts");
+    assert_eq!(status, 200);
+    let id = alerts
+        .as_arr()
+        .and_then(|a| a.first().cloned())
+        .and_then(|a| a.get("id").cloned())
+        .and_then(|v| v.as_f64())
+        .expect("open alert with id") as u64;
+
+    let path = format!("/v0/projects/alerts/alerts/{id}/resolve");
+    let (status, _) = http_request(&addr, "POST", &path, b"").unwrap();
+    assert_eq!(status, 200);
+    let (status, _) = http_request(&addr, "POST", &path, b"").unwrap();
+    assert_eq!(status, 409, "double resolve must conflict");
+    // resolved alerts drop out of the default listing, stay under state=all
+    let (_, open) = get_json(&addr, "/v0/projects/alerts/alerts");
+    assert_eq!(open.as_arr().map(|a| a.len()), Some(0));
+    let (_, all) = get_json(&addr, "/v0/projects/alerts/alerts?state=all");
+    assert!(all.as_arr().map(|a| !a.is_empty()).unwrap_or(false));
+    handle.stop();
+}
+
+#[test]
+fn thresholds_put_rebuilds_detector_per_project() {
+    let handle = spawn(None, 8 * 1024 * 1024);
+    let addr = handle.addr.to_string();
+
+    // project "tuned" requires a 90% drop before alerting
+    let cfg = "regress.lbm-mlups.min_rel_change = 0.9\n";
+    let (status, body) =
+        http_request(&addr, "PUT", "/v0/projects/tuned/thresholds", cfg.as_bytes()).unwrap();
+    assert_eq!(status, 200);
+    let fp1 = Json::parse(&String::from_utf8_lossy(&body))
+        .ok()
+        .and_then(|j| j.get("fingerprint").and_then(|f| f.as_str().map(|s| s.to_string())))
+        .expect("fingerprint");
+    let (_, body) = http_request(
+        &addr,
+        "PUT",
+        "/v0/projects/tuned/thresholds",
+        b"regress.lbm-mlups.min_rel_change = 0.9\nregress.lbm-mlups.alpha = 0.01\n",
+    )
+    .unwrap();
+    let fp2 = Json::parse(&String::from_utf8_lossy(&body))
+        .ok()
+        .and_then(|j| j.get("fingerprint").and_then(|f| f.as_str().map(|s| s.to_string())))
+        .expect("fingerprint");
+    assert_ne!(fp1, fp2, "changed knobs must change the detector fingerprint");
+
+    // same traffic, different outcomes: "stock" alerts on a 35% drop,
+    // "tuned" (90% required) does not — per-project isolation of the
+    // override, not just of the data
+    let drive = |project: &str| -> usize {
+        let (body, _) = lp_batch(project, 0, 20, false);
+        http_request(
+            &addr,
+            "POST",
+            &format!("/v0/projects/{project}/ingest"),
+            body.as_bytes(),
+        )
+        .unwrap();
+        let mut opened = 0usize;
+        for k in 0..3 {
+            let i = 20 + k;
+            let line = format!(
+                "lbm,case=uniform,node=icx36,collision_op=srt,gpu=false,repo={project} mlups={} {}\n",
+                520.0 + (i % 5) as f64,
+                (i as i64 + 1) * 1_000_000_000
+            );
+            let (status, body) = http_request(
+                &addr,
+                "POST",
+                &format!("/v0/projects/{project}/ingest"),
+                line.as_bytes(),
+            )
+            .unwrap();
+            assert_eq!(status, 200);
+            let json = Json::parse(&String::from_utf8_lossy(&body)).unwrap();
+            opened +=
+                json.get("alerts_opened").and_then(|v| v.as_f64()).unwrap_or(0.0) as usize;
+        }
+        opened
+    };
+    assert!(drive("stock") >= 1, "default thresholds must alert");
+    assert_eq!(drive("tuned"), 0, "tuned project must stay quiet");
+    handle.stop();
+}
