@@ -184,6 +184,7 @@ mod tests {
             repo: "fe2ti".into(),
             branch: "master".into(),
             commit_id: "abc123".into(),
+            changed: vec![],
         }
     }
 

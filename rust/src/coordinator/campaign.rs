@@ -42,6 +42,7 @@
 //!   for the dashboards.
 
 use super::{BenchConfig, CbSystem, PipelineReport, PreparedJob};
+use crate::select::SelectMode;
 use crate::tsdb::Point;
 use crate::vcs::{PushEvent, Repository};
 
@@ -172,6 +173,13 @@ pub struct CampaignConfig {
     /// same findings, same alert book, byte for byte (the equivalence is
     /// property-tested); only the work done per check differs.
     pub incremental: bool,
+    /// Benchmark selection mode (`cbench campaign --select
+    /// change-aware|full`, full by default). Change-aware consults the
+    /// push's touched components against each job's `CB_COMPONENTS`
+    /// declaration, skips jobs the push cannot affect, and carries their
+    /// last measured points forward (`carried=1`) — same alert book as a
+    /// full run, fewer cluster hours (see `crate::select`).
+    pub select: SelectMode,
 }
 
 impl Default for CampaignConfig {
@@ -185,6 +193,7 @@ impl Default for CampaignConfig {
             drains: Vec::new(),
             streaming: true,
             incremental: true,
+            select: SelectMode::Full,
         }
     }
 }
@@ -216,6 +225,24 @@ impl CampaignOutcome {
     }
     pub fn total_jobs(&self) -> usize {
         self.reports.iter().map(|r| r.jobs_total).sum()
+    }
+    /// Jobs that actually ran (the matrix minus change-aware skips).
+    pub fn jobs_selected(&self) -> usize {
+        self.total_jobs() - self.jobs_skipped()
+    }
+    /// Jobs change-aware selection skipped (0 under `--select full`).
+    pub fn jobs_skipped(&self) -> usize {
+        self.reports.iter().map(|r| r.jobs_skipped).sum()
+    }
+    /// Cluster hours the skips saved (Σ of the skipped jobs' last
+    /// measured durations, in hours).
+    pub fn cluster_hours_saved(&self) -> f64 {
+        self.reports.iter().map(|r| r.saved_cluster_s).sum::<f64>() / 3600.0
+    }
+    /// Standalone-makespan seconds the skips saved, summed per pipeline
+    /// (each pipeline's critical path with vs without its skipped jobs).
+    pub fn makespan_saved_s(&self) -> f64 {
+        self.reports.iter().map(|r| r.saved_makespan_s).sum()
     }
     /// Job starts the scheduler backfilled into maintenance-window gaps.
     pub fn jobs_backfilled(&self) -> usize {
@@ -255,6 +282,20 @@ pub fn run_campaign(
     })
 }
 
+/// Source paths a campaign's non-inject pushes rotate through — one per
+/// benchmark component group, so change-aware selection (`--select
+/// change-aware`) sees pushes that plausibly touch only part of the
+/// matrix. Inject rounds always touch `benchmark.cfg` (config surface →
+/// affects everything → the planted regression is measured, never
+/// carried past).
+pub const CAMPAIGN_TOUCH_PATHS: [&str; 5] = [
+    "src/lbm/cpu/stream_collide.c",
+    "src/lbm/gpu/stream_collide.cu",
+    "src/lbm/fslbm/free_surface.c",
+    "src/fe2ti/pardiso/factor.c",
+    "src/fe2ti/solver_common.c",
+];
+
 /// The deterministic push rounds of a campaign: every project commits
 /// once per round, round `inject_at` (1-based) planting the waLBerla
 /// kernel-regen penalty. Returns `(project index, push event)` in
@@ -281,12 +322,21 @@ pub fn campaign_push_events(
                     &format!("lbm_efficiency_penalty = {}\n", cfg.penalty),
                 )
             } else {
+                // rotate the touched surface deterministically through the
+                // component tree (seed- and round-dependent, never
+                // mode-dependent: commit chains must replay identically
+                // under --select full and change-aware — bisection rebuilds
+                // them). The contents stay seed+round-salted only, so the
+                // benchmark values a job measures do not depend on which
+                // path was touched.
+                let path = CAMPAIGN_TOUCH_PATHS
+                    [(cfg.seed as usize + r) % CAMPAIGN_TOUCH_PATHS.len()];
                 p.repo.commit_change(
                     "master",
                     "dev",
                     &format!("push #{r}"),
                     t,
-                    "src/kernel.c",
+                    path,
                     &format!("// seed {} rev {r}\n", cfg.seed),
                 )
             };
@@ -322,6 +372,10 @@ fn collect_one(
         .field("backfilled", r.jobs_backfilled as f64)
         .field("head_of_line", (r.jobs_total - r.jobs_backfilled) as f64)
         .field("points", r.points_uploaded as f64)
+        .field("skipped", r.jobs_skipped as f64)
+        .field("carried", r.points_carried as f64)
+        .field("saved_cluster_s", r.saved_cluster_s)
+        .field("saved_makespan_s", r.saved_makespan_s)
         .field("first_result_latency", r.first_result_latency())
         .field("collect_latency", r.collect_latency());
     if let Some(sla) = r.alert_sla {
@@ -356,6 +410,9 @@ pub fn run_campaign_with(
     // detection mode: incremental state-carried checks (default) vs the
     // full tail re-query A/B reference — identical results either way
     cb.set_incremental_detection(cfg.incremental);
+    // selection mode: full matrix (default) vs change-aware skipping —
+    // identical alert book either way, fewer cluster hours change-aware
+    cb.set_select_mode(cfg.select);
     for (host, from, until) in &cfg.drains {
         // a campaign never resumes nodes, so an open-ended drain would
         // strand that node's jobs forever while the run "succeeds"
@@ -658,6 +715,53 @@ mod tests {
             .points_iter("campaign")
             .all(|p| p.fields.contains_key("first_result_latency")
                 && p.fields.contains_key("collect_latency")));
+    }
+
+    #[test]
+    fn change_aware_campaign_skips_jobs_and_keeps_the_schedule_shape() {
+        // three component-declaring jobs; seed 0 rotates the touched path
+        // through lbm/cpu, lbm/gpu, lbm/fslbm, fe2ti/pardiso — after the
+        // cold first round every later round skips whatever it cannot
+        // affect, carrying the last measured points forward
+        let run = |select: SelectMode| {
+            let mut cb = CbSystem::new();
+            let mut projects = vec![CampaignProject::new("alpha", ProjectKind::Walberla)];
+            let cfg = CampaignConfig {
+                pushes: 4,
+                penalty: 0.0,
+                seed: 0,
+                select,
+                ..CampaignConfig::default()
+            };
+            let out = run_campaign_with(&mut cb, &mut projects, &cfg, |_p, _c| {
+                let mut jobs = toy_jobs("cpu", &[("icx36", 10.0, 2)]);
+                jobs.extend(toy_jobs("gpu", &[("rome1", 20.0, 1)]));
+                for j in &mut jobs {
+                    let comp = if j.ci.name.starts_with("cpu") { "lbm/cpu" } else { "lbm/gpu" };
+                    j.ci = j.ci.clone().var(crate::select::COMPONENTS_VAR, comp);
+                }
+                jobs
+            })
+            .unwrap();
+            (out, cb)
+        };
+        let (full, cb_full) = run(SelectMode::Full);
+        let (ca, cb_ca) = run(SelectMode::ChangeAware);
+        assert_eq!(full.jobs_skipped(), 0);
+        assert_eq!(full.total_jobs(), ca.total_jobs(), "jobs_total counts the matrix");
+        // round 0 is cold (nothing to carry); round 1 touches lbm/gpu
+        // (cpu skips); rounds 2/3 touch fslbm / fe2ti (everything skips)
+        assert_eq!(ca.jobs_skipped(), 2 + 3 + 3);
+        assert!(ca.jobs_selected() < full.jobs_selected());
+        assert!(ca.cluster_hours_saved() > 0.0);
+        assert!(ca.makespan_saved_s() > 0.0);
+        // every pipeline still uploads the full point set (carried or
+        // measured), and the alert books agree byte for byte
+        assert_eq!(cb_full.db.n_points("lbm"), cb_ca.db.n_points("lbm"));
+        assert_eq!(
+            cb_full.alerts.to_json().to_string_pretty(),
+            cb_ca.alerts.to_json().to_string_pretty()
+        );
     }
 
     #[test]

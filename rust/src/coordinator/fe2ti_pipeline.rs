@@ -94,7 +94,11 @@ fn prepare_job(
     let ci = CiJob::new(&name, "benchmark")
         .var("HOST", host)
         .var("SLURM_TIMELIMIT", "120")
-        .var("SCRIPT", &format!("fe2ti_{}.sh", case.name()));
+        .var("SCRIPT", &format!("fe2ti_{}.sh", case.name()))
+        .var(
+            crate::select::COMPONENTS_VAR,
+            &format!("fe2ti/{}", solver.kind.name()),
+        );
     let payload = Box::new(move |node: &crate::cluster::nodes::NodeModel, _t: f64| {
         let mut run = Fe2tiRun::new(case, solver, par);
         run.rve_n = rve_n;

@@ -71,6 +71,7 @@ use crate::obs::metrics as om;
 use crate::obs::trace::TraceRecorder;
 use crate::regress::{Detector, Direction, IngestSummary, Policy};
 use crate::sched::{JobState, Payload, SimScheduler, SubmitSpec};
+use crate::select::{SelectMode, Selector, StoredRun, Touched};
 use crate::slurm::JobSpec;
 use crate::tsdb::{Db, Point};
 use crate::vcs::{PushEvent, Repository};
@@ -251,6 +252,18 @@ pub struct PipelineReport {
     /// Alert SLA of this execution: simulated seconds from submission to
     /// the detection that opened alerts (`Some` iff any alert opened).
     pub alert_sla: Option<f64>,
+    /// Jobs change-aware selection skipped (0 under `--select full`).
+    /// `jobs_total` counts the full matrix, so
+    /// `jobs_total - jobs_skipped` jobs actually ran.
+    pub jobs_skipped: usize,
+    /// Carried-forward points synthesized for the skipped jobs.
+    pub points_carried: usize,
+    /// Cluster-seconds the skipped jobs would have occupied (sum of their
+    /// last measured durations).
+    pub saved_cluster_s: f64,
+    /// Estimated standalone-makespan seconds saved: heaviest per-node
+    /// load including the skipped jobs minus the actual one.
+    pub saved_makespan_s: f64,
 }
 
 impl PipelineReport {
@@ -275,6 +288,10 @@ pub struct PendingPipeline {
     pub submitted_at: f64,
     /// (scheduler job id, CI job spec) per submitted job.
     pub jobs: Vec<(u64, CiJob)>,
+    /// Jobs change-aware selection skipped, with the stored run each one
+    /// carries forward (snapshotted at submit so the decision and its
+    /// data are consistent even when pipelines overlap).
+    pub skipped: Vec<(CiJob, StoredRun)>,
 }
 
 /// The whole CB installation.
@@ -316,6 +333,13 @@ pub struct CbSystem {
     last_self: [u64; om::N_COUNTERS],
     /// Alerts the `cbench_self` detection opened (CI assertion hook).
     self_alerts_opened: usize,
+    /// Benchmark-selection mode: `Full` reruns the whole matrix per push
+    /// (pre-PR-9 behaviour); `ChangeAware` skips jobs whose declared
+    /// components the push cannot affect and carries their results
+    /// forward (`carried=1` points).
+    select_mode: SelectMode,
+    /// Per-(repo, job) memory of last measured runs for carry-forward.
+    selector: Selector,
 }
 
 impl Default for CbSystem {
@@ -362,7 +386,21 @@ impl CbSystem {
             self_slowdown: 1.0,
             last_self: [0; om::N_COUNTERS],
             self_alerts_opened: 0,
+            select_mode: SelectMode::Full,
+            selector: Selector::new(),
         }
+    }
+
+    /// Set the benchmark-selection mode (`--select change-aware|full`).
+    pub fn set_select_mode(&mut self, mode: SelectMode) {
+        self.select_mode = mode;
+    }
+    pub fn select_mode(&self) -> SelectMode {
+        self.select_mode
+    }
+    /// The carry-forward memory (read-only; tests inspect it).
+    pub fn selector(&self) -> &Selector {
+        &self.selector
     }
 
     /// Enable uploading the coordinator's own throughput as the
@@ -487,8 +525,27 @@ impl CbSystem {
         let ci_jobs: Vec<CiJob> = jobs.iter().map(|j| j.ci.clone()).collect();
         let pipeline: Pipeline = self.pipelines.create(event.clone(), via_trigger_api, ci_jobs);
         let submitted_at = self.scheduler.now();
+
+        // change-aware selection: a job is skipped when it declares the
+        // components it measures, the push cannot affect any of them, and
+        // a previous measured run exists to carry forward. Full mode (and
+        // pushes with unknown surface) runs everything.
+        let touched = match self.select_mode {
+            SelectMode::Full => Touched::All,
+            SelectMode::ChangeAware => crate::select::touched(&event.changed),
+        };
         let mut submitted = Vec::with_capacity(jobs.len());
+        let mut skipped = Vec::new();
         for j in jobs {
+            if self.selector.can_skip(&event.repo, &j.ci, &touched) {
+                let run = self
+                    .selector
+                    .last(&event.repo, &j.ci.name)
+                    .expect("can_skip checked presence")
+                    .clone();
+                skipped.push((j.ci, run));
+                continue;
+            }
             let host = j.ci.get("HOST").expect("validated above").to_string();
             let spec = SubmitSpec::new(&j.ci.name, &host)
                 .timelimit(j.ci.timelimit_min())
@@ -509,6 +566,7 @@ impl CbSystem {
             trigger_ts,
             submitted_at,
             jobs: submitted,
+            skipped,
         });
         Ok(pipeline.id)
     }
@@ -596,7 +654,7 @@ impl CbSystem {
         let mut node_load: BTreeMap<String, f64> = BTreeMap::new();
         // --- phase 1 (serial): read terminal job state off the scheduler
         // and fold the latency/load accounting, in job order ---
-        let mut gathered: Vec<(String, String, JobState, String)> =
+        let mut gathered: Vec<(String, String, JobState, String, f64)> =
             Vec::with_capacity(pending.jobs.len());
         for (sched_id, ci) in &pending.jobs {
             let job = self.scheduler.job(*sched_id).expect("job exists");
@@ -606,10 +664,12 @@ impl CbSystem {
             if job.backfilled {
                 backfilled += 1;
             }
+            let mut run_dur = 0.0;
             if let (Some(start), Some(end)) = (job.start_time, job.end_time) {
                 last_end = last_end.max(end);
                 first_end = first_end.min(end);
                 first_start = first_start.min(start);
+                run_dur = end - start;
                 *node_load.entry(node_host.clone()).or_insert(0.0) += end - start;
             }
             if state == JobState::Completed {
@@ -617,7 +677,7 @@ impl CbSystem {
             } else {
                 failed += 1;
             }
-            gathered.push((ci.name.clone(), node_host, state, log));
+            gathered.push((ci.name.clone(), node_host, state, log, run_dur));
         }
 
         // --- phase 2 (parallel): parse every job log — the CPU-heavy
@@ -627,7 +687,7 @@ impl CbSystem {
         let parsed = {
             let items: Vec<(&str, &str, &str)> = gathered
                 .iter()
-                .map(|(name, host, _, log)| (name.as_str(), host.as_str(), log.as_str()))
+                .map(|(name, host, _, log, _)| (name.as_str(), host.as_str(), log.as_str()))
                 .collect();
             crate::par::map(items, |(name, host, log)| {
                 let jt = om::Timer::start();
@@ -640,15 +700,14 @@ impl CbSystem {
 
         // --- phase 3 (serial merge, job order): upload + archive — the
         // TSDB insert order and record/link ids stay exactly as before ---
-        for ((name, node_host, state, log), metrics) in gathered.iter().zip(parsed) {
+        let commit8 = event.commit_id[..8.min(event.commit_id.len())].to_string();
+        let mut measured_runs: Vec<(String, StoredRun)> = Vec::new();
+        for ((name, node_host, state, log, run_dur), metrics) in gathered.iter().zip(parsed) {
             let node = self.scheduler.node(node_host).unwrap().clone();
             if !metrics.fields.is_empty() {
                 let mut p = Point::new(&pending.measurement, trigger_ts);
                 p.tags.insert("node".into(), node_host.clone());
-                p.tags.insert(
-                    "commit".into(),
-                    event.commit_id[..8.min(event.commit_id.len())].to_string(),
-                );
+                p.tags.insert("commit".into(), commit8.clone());
                 p.tags.insert("repo".into(), event.repo.clone());
                 p.tags.insert("branch".into(), event.branch.clone());
                 for (k, v) in &metrics.tags {
@@ -656,6 +715,18 @@ impl CbSystem {
                 }
                 for (k, v) in &metrics.fields {
                     p.fields.insert(k.clone(), *v);
+                }
+                if *state == JobState::Completed {
+                    // remember this measured run so change-aware selection
+                    // can carry it forward for later unaffected pushes
+                    measured_runs.push((
+                        name.clone(),
+                        StoredRun {
+                            points: vec![p.clone()],
+                            duration: *run_dur,
+                            commit: commit8.clone(),
+                        },
+                    ));
                 }
                 self.core.db.insert(p);
                 points += 1;
@@ -701,6 +772,95 @@ impl CbSystem {
             self.store.link(rid_perf, rid_job, "belongs to").ok();
             self.store.link(rid_ms, rid_job, "recorded on").ok();
         }
+
+        for (name, run) in measured_runs {
+            self.selector.record(&event.repo, &name, run);
+        }
+
+        // --- carried-forward synthesis for skipped jobs: re-upload each
+        // one's last measured points under this pipeline's trigger
+        // timestamp, tagged `carried=1` (+ the commit they were measured
+        // at). The detector treats them as non-evidence (they can neither
+        // open nor auto-resolve alerts) but they keep the skipped series
+        // fresh at the stale-tenant / TAIL_SCAN_SLACK boundary. Runs
+        // before the regression check so detection sees the same series
+        // shape a full run would have produced. ---
+        let mut carried_points = 0usize;
+        let mut saved_cluster_s = 0.0;
+        let mut skipped_load: BTreeMap<String, f64> = BTreeMap::new();
+        for (ci, run) in &pending.skipped {
+            saved_cluster_s += run.duration;
+            if let Some(host) = ci.get("HOST") {
+                *skipped_load.entry(host.to_string()).or_insert(0.0) += run.duration;
+            }
+            for stored in &run.points {
+                let mut p = stored.clone();
+                p.ts = trigger_ts;
+                p.tags.insert("commit".into(), commit8.clone());
+                p.tags.insert("branch".into(), event.branch.clone());
+                p.tags
+                    .insert(crate::select::CARRIED_TAG.into(), "1".into());
+                p.tags
+                    .insert(crate::select::CARRIED_FROM_TAG.into(), run.commit.clone());
+                self.core.db.insert(p);
+                carried_points += 1;
+            }
+
+            // archive the carry-forward decision with the same record
+            // triple a measured job gets: the archive answers "why is
+            // there no fresh log for this job?", and the datastore id
+            // sequence stays identical to a full run's — alert archive
+            // ids are part of the byte-identical-book contract.
+            let note = format!(
+                "SKIPPED by change-aware selection: carried forward from commit {}",
+                run.commit
+            );
+            let rid_job = self
+                .store
+                .create_record(
+                    &format!("p{}-job-{}", pending.pipeline_id, ci.name),
+                    &format!("job log {} (carried)", ci.name),
+                    "job-log",
+                )
+                .map_err(|e| anyhow::anyhow!(e))?;
+            self.store.attach_file(rid_job, "slurm.log", &note).ok();
+            self.store.set_meta(rid_job, "state", "Skipped").ok();
+            self.store.set_meta(rid_job, "carried_from", &run.commit).ok();
+            let rid_perf = self
+                .store
+                .create_record(
+                    &format!("p{}-perf-{}", pending.pipeline_id, ci.name),
+                    &format!("likwid output {} (carried)", ci.name),
+                    "likwid-output",
+                )
+                .map_err(|e| anyhow::anyhow!(e))?;
+            self.store.attach_file(rid_perf, "perfctr.txt", &note).ok();
+            let rid_ms = self
+                .store
+                .create_record(
+                    &format!("p{}-ms-{}", pending.pipeline_id, ci.name),
+                    &format!("machinestate {} (carried)", ci.name),
+                    "machinestate",
+                )
+                .map_err(|e| anyhow::anyhow!(e))?;
+            self.store.attach_file(rid_ms, "machinestate.json", &note).ok();
+            for rid in [rid_job, rid_perf, rid_ms] {
+                self.store.add_to_collection(coll, rid).ok();
+                records += 1;
+            }
+            self.store.link(rid_perf, rid_job, "belongs to").ok();
+            self.store.link(rid_ms, rid_job, "recorded on").ok();
+        }
+        // estimated standalone makespan had the skipped jobs run: the
+        // heaviest per-node load including their last measured durations
+        let standalone_full = node_load
+            .keys()
+            .chain(skipped_load.keys())
+            .map(|h| {
+                node_load.get(h).copied().unwrap_or(0.0)
+                    + skipped_load.get(h).copied().unwrap_or(0.0)
+            })
+            .fold(0.0, f64::max);
 
         // --- §4.4 closing the loop: statistical regression check,
         // scoped to the triggering repository's series ---
@@ -770,7 +930,6 @@ impl CbSystem {
 
         // --- self-observability: upload this collect's own throughput
         // deltas as `cbench_self` and let the stock detector judge them ---
-        let commit8 = event.commit_id[..8.min(event.commit_id.len())].to_string();
         if self.self_metrics {
             self.upload_self_metrics(trigger_ts, &commit8, coll);
         }
@@ -874,7 +1033,7 @@ impl CbSystem {
             pipeline_id: pending.pipeline_id,
             repo: event.repo.clone(),
             commit_id: event.commit_id.clone(),
-            jobs_total: pending.jobs.len(),
+            jobs_total: pending.jobs.len() + pending.skipped.len(),
             jobs_completed: completed,
             jobs_failed: failed,
             jobs_backfilled: backfilled,
@@ -891,6 +1050,10 @@ impl CbSystem {
             collected_at,
             regressions,
             alert_sla,
+            jobs_skipped: pending.skipped.len(),
+            points_carried: carried_points,
+            saved_cluster_s,
+            saved_makespan_s: (standalone_full - standalone_duration).max(0.0),
         };
         self.executed.push(report.clone());
         Ok(report)
@@ -1114,6 +1277,7 @@ mod tests {
             repo: "fe2ti".into(),
             branch: "master".into(),
             commit_id: "abcdef1234567890".into(),
+            changed: vec![],
         }
     }
 
@@ -1122,6 +1286,7 @@ mod tests {
             repo: repo.into(),
             branch: "master".into(),
             commit_id: format!("{repo:0<16}"),
+            changed: vec![],
         }
     }
 
@@ -1516,6 +1681,74 @@ mod tests {
         let r = run(&mut cb, "repo-a", 1000.0);
         assert_eq!(r.regressions.auto_resolved, 1);
         assert!(cb.alerts.active().is_empty());
+    }
+
+    #[test]
+    fn change_aware_selection_skips_and_carries_forward() {
+        use crate::select::COMPONENTS_VAR;
+        let mut cb = CbSystem::new();
+        cb.set_select_mode(SelectMode::ChangeAware);
+        let jobs = || {
+            vec![
+                PreparedJob {
+                    ci: CiJob::new("cpu-j", "benchmark")
+                        .var("HOST", "icx36")
+                        .var(COMPONENTS_VAR, "lbm/cpu"),
+                    payload: Box::new(|_n, _t| JobOutcome {
+                        duration: 10.0,
+                        stdout: "TAG case=c\nMETRIC v=1\n".into(),
+                        exit_code: 0,
+                    }),
+                },
+                PreparedJob {
+                    ci: CiJob::new("gpu-j", "benchmark")
+                        .var("HOST", "rome1")
+                        .var(COMPONENTS_VAR, "lbm/gpu"),
+                    payload: Box::new(|_n, _t| JobOutcome {
+                        duration: 20.0,
+                        stdout: "TAG case=g\nMETRIC v=2\n".into(),
+                        exit_code: 0,
+                    }),
+                },
+            ]
+        };
+        let ev = |changed: &[&str]| PushEvent {
+            repo: "walberla".into(),
+            branch: "master".into(),
+            commit_id: "0123456789abcdef".into(),
+            changed: changed.iter().map(|s| s.to_string()).collect(),
+        };
+        // unknown surface (empty changed): conservative, everything runs
+        let r1 = cb.execute_pipeline(&ev(&[]), false, jobs(), "m").unwrap();
+        assert_eq!((r1.jobs_total, r1.jobs_skipped), (2, 0));
+        // touches only gpu code: the cpu job is skipped + carried forward
+        let r2 = cb
+            .execute_pipeline(&ev(&["src/lbm/gpu/k.cu"]), false, jobs(), "m")
+            .unwrap();
+        assert_eq!((r2.jobs_total, r2.jobs_skipped), (2, 1));
+        assert_eq!(r2.points_carried, 1);
+        assert_eq!(r2.saved_cluster_s, 10.0);
+        let carried: Vec<&Point> = cb
+            .db
+            .points_iter("m")
+            .filter(|p| p.tags.get("carried").map(|v| v == "1").unwrap_or(false))
+            .collect();
+        assert_eq!(carried.len(), 1);
+        assert_eq!(carried[0].ts, r2.trigger_ts);
+        assert_eq!(carried[0].tags["case"], "c");
+        assert_eq!(carried[0].fields["v"], 1.0);
+        assert_eq!(carried[0].tags["carried_from"], "01234567");
+        // config surface: the full matrix runs again
+        let r3 = cb
+            .execute_pipeline(&ev(&["benchmark.cfg"]), false, jobs(), "m")
+            .unwrap();
+        assert_eq!(r3.jobs_skipped, 0);
+        // full mode never skips, even with history and a narrow touch
+        cb.set_select_mode(SelectMode::Full);
+        let r4 = cb
+            .execute_pipeline(&ev(&["src/lbm/gpu/k.cu"]), false, jobs(), "m")
+            .unwrap();
+        assert_eq!(r4.jobs_skipped, 0);
     }
 
     #[test]

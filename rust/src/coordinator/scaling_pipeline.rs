@@ -72,7 +72,10 @@ pub fn scaling_jobs(case: ScalingCase) -> Vec<PreparedJob> {
             .var("HOST", case.host())
             .var("NODES", &nodes.to_string())
             .var("SLURM_TIMELIMIT", "240")
-            .var("SCRIPT", "weak_scaling.sh");
+            .var("SCRIPT", "weak_scaling.sh")
+            // nominal: scaling campaigns bypass submit_pipeline's selector
+            // today, but the declaration keeps the map total
+            .var(crate::select::COMPONENTS_VAR, "scaling");
         let payload = Box::new(move |node: &crate::cluster::nodes::NodeModel, _t: f64| {
             let comm = CommModel::default();
             match case {
@@ -204,6 +207,7 @@ mod tests {
             repo: "fe2ti".into(),
             branch: "master".into(),
             commit_id: "0123456789abcdef".into(),
+            changed: vec![],
         }
     }
 

@@ -67,7 +67,8 @@ fn prepare_gpu_job(host: &str, acc_index: usize, penalty: f64) -> PreparedJob {
     let ci = CiJob::new(&name, "benchmark")
         .var("HOST", host)
         .var("SLURM_TIMELIMIT", "5")
-        .var("SCRIPT", "uniform_grid_gpu.sh");
+        .var("SCRIPT", "uniform_grid_gpu.sh")
+        .var(crate::select::COMPONENTS_VAR, "lbm/gpu");
     let payload = Box::new(move |node: &NodeModel, _t: f64| {
         let Some(acc) = node.accelerators.get(acc_index) else {
             return JobOutcome {
@@ -102,7 +103,8 @@ fn prepare_uniform_job(host: &str, op: CollisionOp, penalty: f64) -> PreparedJob
     let ci = CiJob::new(&name, "benchmark")
         .var("HOST", host)
         .var("SLURM_TIMELIMIT", "60")
-        .var("SCRIPT", "uniform_grid_cpu.sh");
+        .var("SCRIPT", "uniform_grid_cpu.sh")
+        .var(crate::select::COMPONENTS_VAR, "lbm/cpu");
     let payload = Box::new(move |node: &NodeModel, _t: f64| {
         let cfg = UniformGrid::new(Stencil::D3Q27, op, 32);
         let eff_scale = 1.0 - penalty;
@@ -136,7 +138,8 @@ fn prepare_fslbm_job(host: &str, penalty: f64) -> PreparedJob {
     let ci = CiJob::new(&name, "benchmark")
         .var("HOST", host)
         .var("SLURM_TIMELIMIT", "120")
-        .var("SCRIPT", "gravity_wave_fslbm.sh");
+        .var("SCRIPT", "gravity_wave_fslbm.sh")
+        .var(crate::select::COMPONENTS_VAR, "lbm/fslbm");
     let payload = Box::new(move |node: &NodeModel, _t: f64| {
         // per-cell cost measured once from the real rust FSLBM sweep would
         // be host-dependent; the calibrated constant keeps jobs cheap

@@ -35,6 +35,7 @@ pub mod report;
 pub mod roofline;
 pub mod runtime;
 pub mod sched;
+pub mod select;
 pub mod serve;
 pub mod slurm;
 pub mod sparse;

@@ -299,6 +299,9 @@ fn parse_drain_specs(spec: Option<&str>) -> anyhow::Result<Vec<(String, f64, f64
 /// back-to-back baseline plus the first-upload time and worst alert SLA.
 /// `--drain` opens scontrol-style maintenance windows; `--backfill off`
 /// disables the timelimit-aware gap filling (for A/B makespan runs).
+/// `--select change-aware` runs only the jobs a push's changed paths can
+/// affect and carries the rest forward as `carried=1` points (see
+/// `select::`); the default `full` runs every job on every push.
 fn cmd_campaign(args: &Args) -> anyhow::Result<()> {
     let repos = args.get_usize("repos", 2);
     let pushes = args.get_usize("pushes", 2);
@@ -318,6 +321,13 @@ fn cmd_campaign(args: &Args) -> anyhow::Result<()> {
     };
     let drains = parse_drain_specs(args.get("drain"))?;
     let incremental = parse_detect_mode(args)?;
+    let select = cbench::select::SelectMode::parse(args.get_or("select", "full"))
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "--select `{}`: expected change-aware|full",
+                args.get_or("select", "full")
+            )
+        })?;
     let self_metrics = match args.get_or("self-metrics", "off") {
         "on" | "true" | "1" => true,
         "off" | "false" | "0" => false,
@@ -341,6 +351,7 @@ fn cmd_campaign(args: &Args) -> anyhow::Result<()> {
         drains,
         streaming,
         incremental,
+        select,
     };
     for (host, from, until) in &cfg.drains {
         println!("maintenance: {host} drained over [{from:.0}..{until:.0}) (simulated s)");
@@ -411,9 +422,18 @@ fn cmd_campaign(args: &Args) -> anyhow::Result<()> {
         "detect mode: {}",
         if incremental { "incremental (state-carried windows)" } else { "requery (full tail re-query)" }
     );
+    println!(
+        "select mode: {} — {} of {} jobs run, {} carried forward ({:.2} cluster-hours and {} makespan saved)",
+        cfg.select.name(),
+        out.jobs_selected(),
+        out.total_jobs(),
+        out.jobs_skipped(),
+        out.cluster_hours_saved(),
+        cbench::util::fmt_secs(out.makespan_saved_s())
+    );
     // machine-readable summary (CI records this in the per-commit bench JSON)
     println!(
-        "CAMPAIGN_JSON {{\"repos\":{repos},\"pushes\":{pushes},\"pipelines\":{},\"jobs\":{},\"makespan_s\":{:.3},\"sequential_s\":{:.3},\"speedup\":{:.4},\"alerts_opened\":{},\"backfill\":{},\"backfilled_jobs\":{},\"collect\":\"{}\",\"first_upload_s\":{:.3},\"worst_alert_sla_s\":{}}}",
+        "CAMPAIGN_JSON {{\"repos\":{repos},\"pushes\":{pushes},\"pipelines\":{},\"jobs\":{},\"makespan_s\":{:.3},\"sequential_s\":{:.3},\"speedup\":{:.4},\"alerts_opened\":{},\"backfill\":{},\"backfilled_jobs\":{},\"collect\":\"{}\",\"first_upload_s\":{:.3},\"worst_alert_sla_s\":{},\"select\":\"{}\",\"selected_jobs\":{},\"skipped_jobs\":{},\"cluster_hours_saved\":{:.4},\"makespan_saved_s\":{:.3}}}",
         out.reports.len(),
         out.total_jobs(),
         out.makespan,
@@ -426,7 +446,22 @@ fn cmd_campaign(args: &Args) -> anyhow::Result<()> {
         out.first_upload_at(),
         out.worst_alert_sla()
             .map(|s| format!("{s:.3}"))
-            .unwrap_or_else(|| "null".into())
+            .unwrap_or_else(|| "null".into()),
+        cfg.select.name(),
+        out.jobs_selected(),
+        out.jobs_skipped(),
+        out.cluster_hours_saved(),
+        out.makespan_saved_s()
+    );
+    // standalone selection summary for the CI select-smoke job
+    println!(
+        "SELECT_JSON {{\"mode\":\"{}\",\"selected_jobs\":{},\"skipped_jobs\":{},\"carried_points\":{},\"cluster_hours_saved\":{:.4},\"makespan_saved_s\":{:.3}}}",
+        cfg.select.name(),
+        out.jobs_selected(),
+        out.jobs_skipped(),
+        out.reports.iter().map(|r| r.points_carried).sum::<usize>(),
+        out.cluster_hours_saved(),
+        out.makespan_saved_s()
     );
 
     if self_metrics {
@@ -1301,6 +1336,7 @@ COMMANDS:
   campaign [--repos N] [--pushes M] [--inject-regression K] [--penalty P]
            [--seed S] [--backfill on|off] [--drain NODE@FROM..TO[,..]]
            [--collect streaming|batch] [--detect incremental|requery]
+           [--select change-aware|full]
            [--save-tsdb STORE] [--save-alerts FILE] [--save-state FILE]
            [--save-trace FILE] [--self-metrics on|off] [--self-slowdown F]
            [--shard-cache N] [--threads N]
@@ -1331,6 +1367,16 @@ COMMANDS:
                                 tail re-query per collect (A/B reference;
                                 incremental is the default and produces
                                 the identical alert book, byte for byte);
+                                --select change-aware runs only the jobs
+                                whose CB_COMPONENTS declaration a push's
+                                changed paths can affect and carries the
+                                rest forward (points tagged carried=1:
+                                non-evidence to the detector — they keep
+                                series fresh and alerts' bookkeeping
+                                identical to --select full, but never
+                                open or auto-resolve alerts; reports
+                                SELECT_JSON with the saved cluster-hours
+                                and makespan; default: full);
                                 --save-trace records the cluster-time
                                 span tree (see `trace`); --self-metrics
                                 on uploads the coordinator's own
@@ -1477,6 +1523,20 @@ STREAMING COLLECT + ALERT SLA (detection latency):
   cbench regress bisect --campaign --repos 2 --pushes 2 --inject-regression 2
                                 # campaign-aware bisection of the alert
 
+CHANGE-AWARE SELECTION (select:: -- skip what a push cannot affect):
+  cbench campaign --repos 2 --pushes 4 --select change-aware
+                                # jobs whose CB_COMPONENTS declaration the
+                                # push's changed paths cannot affect are
+                                # skipped; their last measured points are
+                                # carried forward as carried=1 (detector
+                                # non-evidence) -- SELECT_JSON reports
+                                # skipped_jobs + cluster_hours_saved
+  cbench campaign --repos 2 --pushes 4 --select full
+                                # A/B reference: identical alert book,
+                                # byte for byte (CI's select-smoke diffs
+                                # the two); bisect probes always re-run
+                                # the full matrix regardless of --select
+
 OBSERVABILITY (the infrastructure watching itself):
   cbench campaign --repos 2 --pushes 2 --drain medusa@400..8000 \\
                   --save-trace trace.json
@@ -1535,7 +1595,14 @@ CB pipeline wiring (paper Figs. 3-4):
        nodes x compilers x solvers x parallelization;
        coordinator::walberla_pipeline: 11 nodes x 4 collision ops + FSLBM)
     -> job scripts assembled (ci::assemble_job_script, Listing 1)
-    -> SUBMIT phase (coordinator::submit_pipeline): jobs queued on the
+    -> SUBMIT phase (coordinator::submit_pipeline): under `--select
+       change-aware` the selector (select::) first classifies the push's
+       changed paths to components and drops every job whose
+       CB_COMPONENTS declaration the change cannot affect (undeclared
+       jobs and config/build/CI changes always run; skipped jobs are
+       carried forward at collect as carried=1 points -- detector
+       non-evidence, so the alert book stays byte-identical to --select
+       full); the surviving jobs are queued on the
        event-driven scheduler (sched:: over cluster:: node models) tagged
        with pipeline batch + repository owner + priority + timelimit
        (SLURM_TIMELIMIT from the job matrix, sbatch --time grammar);

@@ -154,6 +154,15 @@ impl AlertBook {
                     a.suspect_commit = f.suspect_commit.clone();
                 }
                 summary.updated += 1;
+            } else if f.carried {
+                // a carried-forward series (change-aware selection skipped
+                // its job this pipeline) may keep an existing alert alive —
+                // handled above — but it is not fresh evidence: the value
+                // was measured on an earlier commit and any alert it could
+                // open either already exists or will open when the series
+                // is next measured for real. Opening here would double-book
+                // the same regression under a new pipeline's attribution.
+                seen.pop();
             } else {
                 if self.next_id == 0 {
                     self.next_id = 1;
@@ -537,6 +546,7 @@ mod tests {
             change_ts: 5_000_000_000,
             suspect_commit: Some("abcd1234".into()),
             confidence: conf,
+            carried: false,
         }
     }
 
@@ -577,6 +587,33 @@ mod tests {
         assert_eq!(s4.opened_ids, vec![2]);
         assert_eq!(book.alerts.len(), 2);
         assert_ne!(book.alerts[1].id, book.alerts[0].id);
+    }
+
+    #[test]
+    fn carried_findings_update_but_never_open() {
+        let mut book = AlertBook::new();
+        let evaluated = vec!["lbm-mlups/node=icx36".to_string()];
+        let mut carried = finding("lbm-mlups", "node=icx36", 0.9);
+        carried.carried = true;
+
+        // no open alert yet: a carried finding opens nothing — the value
+        // was measured on an earlier commit, whose pipeline already had
+        // its chance to open (and attribute) the alert
+        let s = book.ingest(&[carried.clone()], &[], 1);
+        assert_eq!(s, IngestSummary::default());
+        assert!(book.alerts.is_empty());
+
+        // open it for real, then keep it alive through carried pipelines
+        book.ingest(&[finding("lbm-mlups", "node=icx36", 0.9)], &evaluated, 2);
+        let s = book.ingest(&[carried], &[], 3);
+        assert_eq!(
+            s,
+            IngestSummary { opened: 0, updated: 1, auto_resolved: 0, opened_ids: vec![] }
+        );
+        assert_eq!(book.alerts.len(), 1);
+        assert_eq!(book.alerts[0].times_seen, 2);
+        assert_eq!(book.alerts[0].last_seen_ts, 3);
+        assert_eq!(book.alerts[0].state, AlertState::Open);
     }
 
     #[test]

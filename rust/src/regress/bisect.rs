@@ -12,6 +12,7 @@
 
 use super::detector::Direction;
 use crate::coordinator::{CbSystem, PreparedJob};
+use crate::select::SelectMode;
 use crate::tsdb::Query;
 use crate::vcs::{PushEvent, Repository};
 use std::collections::BTreeMap;
@@ -111,6 +112,46 @@ pub fn bisect_pipeline(
     series_tags: &BTreeMap<String, String>,
     direction: Direction,
     threshold: f64,
+    jobs_for: impl FnMut(&Repository, &str) -> Vec<PreparedJob>,
+) -> anyhow::Result<BisectReport> {
+    // A probe must re-measure the commit it visits. Under change-aware
+    // selection a probe job whose CB_COMPONENTS declaration the probed
+    // commit does not touch would be skipped and carried forward from
+    // the selector's last measured run — the probe would "measure" a
+    // stale value and the search would walk to a confidently wrong
+    // first-bad commit. Force the full matrix for the whole bisection
+    // and restore the caller's mode afterwards (also on error).
+    let saved_select = cb.select_mode();
+    cb.set_select_mode(SelectMode::Full);
+    let out = bisect_pipeline_full(
+        cb,
+        repo,
+        branch,
+        good,
+        bad,
+        measurement,
+        field,
+        series_tags,
+        direction,
+        threshold,
+        jobs_for,
+    );
+    cb.set_select_mode(saved_select);
+    out
+}
+
+#[allow(clippy::too_many_arguments)]
+fn bisect_pipeline_full(
+    cb: &mut CbSystem,
+    repo: &Repository,
+    branch: &str,
+    good: &str,
+    bad: &str,
+    measurement: &str,
+    field: &str,
+    series_tags: &BTreeMap<String, String>,
+    direction: Direction,
+    threshold: f64,
     mut jobs_for: impl FnMut(&Repository, &str) -> Vec<PreparedJob>,
 ) -> anyhow::Result<BisectReport> {
     let chain = chain_between(repo, branch, good, bad)?;
@@ -123,6 +164,10 @@ pub fn bisect_pipeline(
             repo: repo.name.clone(),
             branch: branch.to_string(),
             commit_id: commit.to_string(),
+            // honest change metadata — selection is forced off above, so
+            // this is informational only (and keeps replay artifacts
+            // identical whatever mode the caller was in)
+            changed: repo.get(commit).map(|c| c.changed.clone()).unwrap_or_default(),
         };
         let jobs = jobs_for(repo, commit);
         anyhow::ensure!(!jobs.is_empty(), "pipeline produced no jobs for {commit}");
@@ -341,5 +386,106 @@ mod tests {
         assert_eq!(report.first_bad, None);
         // only the two anchors were spent
         assert_eq!(report.pipeline_runs, 2);
+    }
+
+    #[test]
+    fn probes_force_the_full_matrix_under_change_aware_selection() {
+        use crate::ci::CiJob;
+        use crate::select::{self, SelectMode, COMPONENTS_VAR};
+        use crate::slurm::JobOutcome;
+
+        // every commit touches only src/lbm/cpu/** while the probe job
+        // declares lbm/gpu: under change-aware selection a naive probe
+        // would skip the job and "measure" the carried-forward value of
+        // the last measured run — here the fast baseline — so the bad
+        // anchor would read clean and the bisection would walk away from
+        // the planted commit
+        let n = 6;
+        let bad_at = 4; // 1-based
+        let mut repo = Repository::new("r");
+        let mut ids = Vec::new();
+        for i in 0..n {
+            let content = if i + 1 >= bad_at { "slow" } else { "fast" };
+            let ev = repo.commit_change(
+                "master",
+                "dev",
+                &format!("c{i}"),
+                i as f64,
+                "src/lbm/cpu/kernel.c",
+                &format!("{content} {i}\n"),
+            );
+            ids.push(ev.commit_id);
+        }
+        let jobs_for = |repo: &Repository, commit: &str| -> Vec<PreparedJob> {
+            let slow = repo
+                .get(commit)
+                .map(|c| {
+                    c.tree
+                        .get("src/lbm/cpu/kernel.c")
+                        .map(|t| t.contains("slow"))
+                        .unwrap_or(false)
+                })
+                .unwrap_or(false);
+            let mlups = if slow { 850.0 } else { 1000.0 };
+            vec![PreparedJob {
+                ci: CiJob::new("probe-icx36", "benchmark")
+                    .var("HOST", "icx36")
+                    .var(COMPONENTS_VAR, "lbm/gpu"),
+                payload: Box::new(move |_n, _t| JobOutcome {
+                    duration: 10.0,
+                    stdout: format!("TAG collision_op=srt\nMETRIC mlups={mlups}\n"),
+                    exit_code: 0,
+                }),
+            }]
+        };
+
+        let mut cb = CbSystem::new();
+        cb.set_select_mode(SelectMode::ChangeAware);
+        // leave the state a change-aware campaign would: one measured run
+        // recorded in the selector for the probe job (empty change list =
+        // unknown surface = always runs, even change-aware)
+        let warm = PushEvent {
+            repo: "r".to_string(),
+            branch: "master".to_string(),
+            commit_id: ids[0].clone(),
+            changed: vec![],
+        };
+        let pid = cb
+            .submit_pipeline(&warm, false, jobs_for(&repo, &ids[0]), "lbm", 0)
+            .unwrap();
+        cb.collect_pipeline(pid).unwrap();
+        assert!(cb.selector().last("r", "probe-icx36").is_some());
+        // the trap is armed: without the force-full fix this probe job
+        // would be skipped for any of the chain's commits
+        let touched = select::touched(&repo.get(&ids[2]).unwrap().changed);
+        assert!(cb.selector().can_skip("r", &jobs_for(&repo, &ids[2])[0].ci, &touched));
+
+        let mut tags = BTreeMap::new();
+        tags.insert("collision_op".to_string(), "srt".to_string());
+        tags.insert("node".to_string(), "icx36".to_string());
+        let report = bisect_pipeline(
+            &mut cb,
+            &repo,
+            "master",
+            &ids[0],
+            &ids[n - 1],
+            "lbm",
+            "mlups",
+            &tags,
+            Direction::HigherIsBetter,
+            0.08,
+            jobs_for,
+        )
+        .unwrap();
+
+        // every probe measured its commit's true value, not a carry-over
+        for (cid, v, _) in &report.tested {
+            let idx = ids.iter().position(|i| i == cid).unwrap();
+            let want = if idx + 1 >= bad_at { 850.0 } else { 1000.0 };
+            assert_eq!(*v, want, "probe of commit {idx} carried a stale value");
+        }
+        assert_eq!(report.first_bad.as_deref(), Some(ids[bad_at - 1].as_str()));
+        // the caller's selection mode survives the bisection
+        assert_eq!(cb.select_mode(), SelectMode::ChangeAware);
     }
 }

@@ -165,6 +165,13 @@ pub struct Finding {
     pub suspect_commit: Option<String>,
     /// Combined score in [0, 1].
     pub confidence: f64,
+    /// The newest point of this series is a carried-forward value
+    /// (`carried=1`, written by change-aware selection for skipped jobs)
+    /// rather than a fresh measurement. Carried findings keep existing
+    /// alerts alive but are not evidence of anything new: the alert book
+    /// must neither open a fresh alert from one nor auto-resolve on the
+    /// series' absence from a finding set.
+    pub carried: bool,
 }
 
 impl Finding {
@@ -284,6 +291,7 @@ pub fn evaluate_series(
         change_ts: points[split].0,
         suspect_commit: None,
         confidence,
+        carried: false,
     })
 }
 
@@ -315,6 +323,35 @@ pub fn commit_at(
             })
         })
         .and_then(|p| p.tags.get("commit").cloned())
+}
+
+/// Is the point of `measurement` at timestamp `ts` whose tags agree with
+/// `group` (and which carries `field`) a carried-forward value? Change-aware
+/// selection writes `carried=1` on points it synthesizes for skipped jobs;
+/// the detector probes the newest in-window point of each series so those
+/// series are judged but never treated as fresh evidence. The `field`
+/// filter matters: a fieldless or foreign-field point at the same (ts,
+/// group) must not shadow the real series point; among matches the *last*
+/// wins, mirroring how the query layer's field extraction keeps the final
+/// value per timestamp.
+pub fn carried_at(
+    db: &Db,
+    measurement: &str,
+    group: &BTreeMap<String, String>,
+    ts: i64,
+    field: &str,
+) -> bool {
+    db.points_in_range(measurement, Some(ts), Some(ts))
+        .filter(|p| {
+            p.fields.contains_key(field)
+                && group.iter().all(|(k, v)| match p.tags.get(k) {
+                    Some(t) => t == v,
+                    None => v == "<none>",
+                })
+        })
+        .last()
+        .map(|p| p.tags.get(crate::select::CARRIED_TAG).map(|v| v == "1").unwrap_or(false))
+        .unwrap_or(false)
 }
 
 /// Evaluate one policy over the database, reporting both the findings
@@ -364,14 +401,27 @@ pub fn evaluate_policy_run_scoped(
     let series: Vec<GroupedSeries> = q.run(db).into_iter().filter(|s| s.points.len() >= 2).collect();
     let results = crate::par::map(series, |s| {
         let label = s.label();
+        // change-aware selection: a series whose newest point is carried
+        // forward from an earlier commit is judged (open alerts stay
+        // updated, times_seen advances in lockstep with a full run) but
+        // is NOT fresh evidence — it must not count as "evaluated" for
+        // auto-resolve, and its findings must not open new alerts.
+        let carried = s
+            .points
+            .last()
+            .map(|&(ts, _)| carried_at(db, &policy.measurement, &s.group, ts, &policy.field))
+            .unwrap_or(false);
         let f = evaluate_series(policy, &label, &s.group, &s.points).map(|mut f| {
             f.suspect_commit = commit_at(db, &policy.measurement, &s.group, f.change_ts);
+            f.carried = carried;
             f
         });
-        (label, f)
+        (label, carried, f)
     });
-    for (label, f) in results {
-        evaluated.push(series_fingerprint(&policy.name, &label));
+    for (label, carried, f) in results {
+        if !carried {
+            evaluated.push(series_fingerprint(&policy.name, &label));
+        }
         if let Some(f) = f {
             findings.push(f);
         }
@@ -618,6 +668,66 @@ mod tests {
         assert!(evaluated[0].contains("collision_op=srt"));
         assert!(det.detect_measurement(&db, "fe2ti").0.is_empty());
         assert!(det.detect_measurement(&db, "fe2ti").1.is_empty());
+    }
+
+    #[test]
+    fn carried_newest_series_is_judged_but_not_evaluated() {
+        // same injected regression as detector_finds_injected_commit_in_db,
+        // but the newest point is a carried-forward copy of the previous
+        // one: the finding survives (tagged carried) while the series
+        // drops out of the evaluated set, so the alert book can keep an
+        // open alert alive without treating the carry as fresh evidence
+        let mut db = Db::new();
+        for i in 0..8i64 {
+            let v = if i < 4 { 1000.0 } else { 850.0 };
+            let mut p = Point::new("lbm", i * 1_000_000_000)
+                .tag("case", "uniformgridcpu")
+                .tag("node", "icx36")
+                .tag("collision_op", "srt")
+                .tag("commit", &format!("c{i:07}"))
+                .field("mlups", v);
+            if i == 7 {
+                p = p.tag(crate::select::CARRIED_TAG, "1");
+            }
+            db.insert(p);
+        }
+        let det = Detector::with_default_policies();
+        let (findings, evaluated) = det.detect_measurement(&db, "lbm");
+        assert_eq!(findings.len(), 1);
+        assert!(findings[0].carried);
+        assert!(evaluated.is_empty(), "carried-newest series must not auto-resolve");
+        // a fresh measurement at the tail flips both back
+        db.insert(
+            Point::new("lbm", 8_000_000_000)
+                .tag("case", "uniformgridcpu")
+                .tag("node", "icx36")
+                .tag("collision_op", "srt")
+                .tag("commit", "c0000008")
+                .field("mlups", 850.0),
+        );
+        let (findings, evaluated) = det.detect_measurement(&db, "lbm");
+        assert_eq!(findings.len(), 1);
+        assert!(!findings[0].carried);
+        assert_eq!(evaluated.len(), 1);
+    }
+
+    #[test]
+    fn carried_at_requires_the_probed_field() {
+        // a fieldless annotation point sharing (ts, group) with the real
+        // series point must not shadow it
+        let mut db = Db::new();
+        db.insert(Point::new("m", 5).tag("node", "a").field("v", 1.0));
+        db.insert(
+            Point::new("m", 5)
+                .tag("node", "a")
+                .tag(crate::select::CARRIED_TAG, "1")
+                .field("other", 2.0),
+        );
+        let mut g = BTreeMap::new();
+        g.insert("node".to_string(), "a".to_string());
+        assert!(!carried_at(&db, "m", &g, 5, "v"));
+        assert!(carried_at(&db, "m", &g, 5, "other"));
+        assert!(!carried_at(&db, "m", &g, 6, "v"));
     }
 
     #[test]

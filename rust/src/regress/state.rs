@@ -157,7 +157,11 @@ struct PolicyState {
     /// query layer groups them: `(tag, value-or-"<none>")` pairs in
     /// `group_by` order — iteration order therefore matches the query's
     /// group order, which keeps findings and alert ids byte-identical.
-    series: BTreeMap<Vec<(String, String)>, VecDeque<(i64, f64)>>,
+    /// The third element marks carried-forward points (`carried=1`,
+    /// written by change-aware selection): the evaluation only reads it
+    /// on the newest in-window point, mirroring the requery path's
+    /// `carried_at` probe.
+    series: BTreeMap<Vec<(String, String)>, VecDeque<(i64, f64, bool)>>,
     /// Repo-scoped bound trackers: per `repo` tag value, the trailing
     /// `lookback` distinct timestamps carrying a matching point, with
     /// the global distinct-ts `seq` at which each occurred (for the
@@ -385,7 +389,12 @@ impl DetectorState {
                 })
                 .collect();
             let buf = ps.series.entry(key).or_default();
-            buf.push_back((p.ts, p.fields[&pol.field]));
+            let is_carried = p
+                .tags
+                .get(crate::select::CARRIED_TAG)
+                .map(|v| v == "1")
+                .unwrap_or(false);
+            buf.push_back((p.ts, p.fields[&pol.field], is_carried));
             while buf.len() > lookback {
                 buf.pop_front();
             }
@@ -457,7 +466,7 @@ impl DetectorState {
             // evaluations across the par pool and merge in series order —
             // identical fingerprint/finding order to the serial loop for
             // any thread count (ps.series is a BTreeMap: stable order)
-            let mut cands: Vec<(&Vec<(String, String)>, Vec<(i64, f64)>)> = Vec::new();
+            let mut cands: Vec<(&Vec<(String, String)>, Vec<(i64, f64)>, bool)> = Vec::new();
             for (key, buf) in &ps.series {
                 if let Some(r) = repo_filter {
                     // a series whose repo group is "<none>" comes from
@@ -469,24 +478,37 @@ impl DetectorState {
                         _ => continue,
                     }
                 }
-                let pts: Vec<(i64, f64)> =
-                    buf.iter().copied().filter(|&(ts, _)| ts >= t0).collect();
+                let mut pts: Vec<(i64, f64)> = Vec::with_capacity(buf.len());
+                let mut newest_carried = false;
+                for &(ts, v, c) in buf.iter().filter(|&&(ts, _, _)| ts >= t0) {
+                    pts.push((ts, v));
+                    // within equal timestamps insertion order holds, so
+                    // the final flag matches the requery path's
+                    // last-match-wins `carried_at` probe
+                    newest_carried = c;
+                }
                 if pts.len() < 2 {
                     continue;
                 }
-                cands.push((key, pts));
+                cands.push((key, pts, newest_carried));
             }
-            let results = crate::par::map(cands, |(key, pts)| {
+            let results = crate::par::map(cands, |(key, pts, carried)| {
                 let group: BTreeMap<String, String> = key.iter().cloned().collect();
                 let label = group_label(&group);
                 let f = evaluate_series(pol, &label, &group, &pts).map(|mut f| {
                     f.suspect_commit = commit_at(db, &pol.measurement, &group, f.change_ts);
+                    f.carried = carried;
                     f
                 });
-                (label, f)
+                (label, carried, f)
             });
-            for (label, f) in results {
-                evaluated.push(series_fingerprint(&pol.name, &label));
+            for (label, carried, f) in results {
+                // same rule as the requery path: a carried-newest series
+                // is judged but never counts as evaluated (no
+                // auto-resolve from a skipped job)
+                if !carried {
+                    evaluated.push(series_fingerprint(&pol.name, &label));
+                }
                 if let Some(f) = f {
                     findings.push(f);
                 }
@@ -535,8 +557,17 @@ impl DetectorState {
                             "points",
                             Json::Arr(
                                 buf.iter()
-                                    .map(|&(ts, v)| {
-                                        Json::Arr(vec![Json::Str(ts.to_string()), Json::Num(v)])
+                                    .map(|&(ts, v, carried)| {
+                                        // real points keep the legacy
+                                        // 2-element shape (byte-stable
+                                        // with pre-select states);
+                                        // carried ones append a 1
+                                        let mut pt =
+                                            vec![Json::Str(ts.to_string()), Json::Num(v)];
+                                        if carried {
+                                            pt.push(Json::Num(1.0));
+                                        }
+                                        Json::Arr(pt)
                                     })
                                     .collect(),
                             ),
@@ -629,7 +660,14 @@ impl DetectorState {
                             .get(1)
                             .and_then(|v| v.as_f64())
                             .ok_or("detector state: bad series value")?;
-                        buf.push_back((ts, v));
+                        // optional third element: carried marker (absent
+                        // in pre-select states — those points are real)
+                        let carried = pair
+                            .get(2)
+                            .and_then(|v| v.as_f64())
+                            .map(|n| n == 1.0)
+                            .unwrap_or(false);
+                        buf.push_back((ts, v, carried));
                     }
                     ps.series.insert(key, buf);
                 }
@@ -790,6 +828,41 @@ mod tests {
         let (f, _) = st.detect_measurement_scoped(&det, &db, "m", &[("repo", "a")]);
         assert_eq!(f.len(), 1);
         assert!((f[0].rel_change + 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn carried_newest_matches_requery_and_roundtrips() {
+        let det = det();
+        let mut db = Db::new();
+        let mut st = DetectorState::new();
+        // injected regression whose newest point is a carried-forward
+        // copy (change-aware selection skipped the job this pipeline)
+        for (i, v) in [1000.0, 1001.0, 999.0, 1000.0, 800.0].iter().enumerate() {
+            let mut p = Point::new("m", (i as i64 + 1) * 1_000_000_000)
+                .tag("repo", "a")
+                .field("v", *v);
+            if i == 4 {
+                p = p.tag(crate::select::CARRIED_TAG, "1");
+            }
+            db.insert(p);
+        }
+        st.sync(&det, &db);
+        assert_equivalent(&det, &st, &db, &[("repo", "a")]);
+        assert_equivalent(&det, &st, &db, &[]);
+        let (f, evaluated) = st.detect_measurement_scoped(&det, &db, "m", &[("repo", "a")]);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].carried);
+        assert!(evaluated.is_empty(), "carried-newest series must not auto-resolve");
+        // the marker survives the JSON round trip
+        let path = std::env::temp_dir().join("cbench_detector_state_carried.json");
+        st.save(&path).unwrap();
+        let back = DetectorState::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_equivalent(&det, &back, &db, &[("repo", "a")]);
+        let (f2, e2) = back.detect_measurement_scoped(&det, &db, "m", &[("repo", "a")]);
+        assert_eq!(dump(&f2), dump(&f));
+        assert!(f2[0].carried);
+        assert!(e2.is_empty());
     }
 
     #[test]

@@ -1,0 +1,291 @@
+//! Change-aware benchmark selection (the exaCB idea, PAPERS.md arxiv
+//! 2603.22251): re-run only the benchmark subset a change can affect and
+//! carry the rest forward from the component's last measured commit.
+//!
+//! The model has three pieces:
+//!
+//! * **Touched surface** — a push's changed paths (tracked by
+//!   [`crate::vcs::PushEvent::changed`]) classify to *components*:
+//!   `src/lbm/cpu/**` → `lbm/cpu`, `src/fe2ti/pardiso/**` →
+//!   `fe2ti/pardiso`, and so on. Build/config/CI surface
+//!   (`benchmark.cfg`, YAML, Makefiles, `ci/`, `scripts/`) classifies to
+//!   *affects-everything*, as does any path the classifier does not
+//!   recognise — unknown must never mean "safe to skip".
+//! * **Job declarations** — a pipeline job declares the components its
+//!   measurement depends on in the `CB_COMPONENTS` CI variable
+//!   (comma-separated). Jobs with no declaration are conservatively
+//!   treated as affected by every change.
+//! * **The [`Selector`]** — remembers, per `(repo, job)`, the points and
+//!   duration of the job's last *measured* run so a skipped job can be
+//!   carried forward and the saved cluster time can be reported.
+//!
+//! Safety contract (property-tested in `rust/tests/select_prop.rs`):
+//! because job payloads are pure functions of the benchmark config, a
+//! correctly-declared skipped job would have reproduced its previous
+//! value bit for bit — so carried-forward points are tagged `carried=1`
+//! and the detector treats them as *non-evidence*: they keep a series
+//! fresh at the stale-tenant boundary and keep open alerts' bookkeeping
+//! identical to a full run, but can neither open nor auto-resolve
+//! alerts. A regression committed to an untouched component is caught on
+//! the next commit that touches it (deferred, never lost).
+
+use crate::ci::CiJob;
+use crate::tsdb::Point;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// CI variable a job uses to declare the components it measures.
+pub const COMPONENTS_VAR: &str = "CB_COMPONENTS";
+
+/// Tag carried-forward points are stamped with (value `"1"`).
+pub const CARRIED_TAG: &str = "carried";
+
+/// Tag recording which measured commit a carried point was copied from.
+pub const CARRIED_FROM_TAG: &str = "carried_from";
+
+/// Selection mode for pipeline submission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SelectMode {
+    /// Run the full matrix on every push (the pre-PR-9 behaviour).
+    #[default]
+    Full,
+    /// Skip jobs whose declared components the push cannot affect.
+    ChangeAware,
+}
+
+impl SelectMode {
+    pub fn parse(s: &str) -> Option<SelectMode> {
+        match s {
+            "full" => Some(SelectMode::Full),
+            "change-aware" | "changeaware" | "change_aware" => Some(SelectMode::ChangeAware),
+            _ => None,
+        }
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            SelectMode::Full => "full",
+            SelectMode::ChangeAware => "change-aware",
+        }
+    }
+}
+
+/// The component surface a push touches.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Touched {
+    /// Build/config/CI or unclassifiable paths: every job is affected.
+    All,
+    /// Only jobs declaring one of these components are affected.
+    Components(BTreeSet<String>),
+}
+
+impl Touched {
+    /// Is a job declaring `declared` affected by this touched surface?
+    /// Matching is exact or at a `/` group boundary in either direction:
+    /// touched `fe2ti` affects declared `fe2ti/pardiso` and vice versa.
+    pub fn affects(&self, declared: &[String]) -> bool {
+        match self {
+            Touched::All => true,
+            Touched::Components(set) => declared.iter().any(|d| {
+                set.iter().any(|t| {
+                    t == d
+                        || d.starts_with(&format!("{t}/"))
+                        || t.starts_with(&format!("{d}/"))
+                })
+            }),
+        }
+    }
+}
+
+/// Classify one changed path to the components it belongs to. `None`
+/// means the path affects everything (config/build/CI surface, or a path
+/// the classifier does not model).
+pub fn classify_path(path: &str) -> Option<Vec<String>> {
+    let base = path.rsplit('/').next().unwrap_or(path);
+    let config_surface = base == "benchmark.cfg"
+        || base.ends_with(".yml")
+        || base.ends_with(".yaml")
+        || base == "Makefile"
+        || base == "CMakeLists.txt"
+        || base.ends_with(".cmake")
+        || path.starts_with("ci/")
+        || path.starts_with(".github/")
+        || path.starts_with("scripts/");
+    if config_surface {
+        return None;
+    }
+    if let Some(rest) = path.strip_prefix("src/lbm/") {
+        return Some(match rest.split('/').next() {
+            Some("cpu") => vec!["lbm/cpu".to_string()],
+            Some("gpu") => vec!["lbm/gpu".to_string()],
+            Some("fslbm") => vec!["lbm/fslbm".to_string()],
+            // shared lbm source: every backend rebuilds
+            _ => vec!["lbm".to_string()],
+        });
+    }
+    if let Some(rest) = path.strip_prefix("src/fe2ti/") {
+        return Some(match rest.split('/').next() {
+            // a solver-stage subdirectory names its component
+            Some(stage) if rest.contains('/') => vec![format!("fe2ti/{stage}")],
+            // shared fe2ti source: every solver stage rebuilds
+            _ => vec!["fe2ti".to_string()],
+        });
+    }
+    if path.starts_with("src/scaling/") {
+        return Some(vec!["scaling".to_string()]);
+    }
+    None
+}
+
+/// Fold a push's changed paths into its touched surface. An *empty*
+/// change list means the surface is unknown (hand-built events, root
+/// pushes from before tracking) and is conservatively affects-everything.
+pub fn touched(changed: &[String]) -> Touched {
+    if changed.is_empty() {
+        return Touched::All;
+    }
+    let mut set = BTreeSet::new();
+    for path in changed {
+        match classify_path(path) {
+            None => return Touched::All,
+            Some(cs) => set.extend(cs),
+        }
+    }
+    Touched::Components(set)
+}
+
+/// The components a job declares via [`COMPONENTS_VAR`]. `None` when the
+/// job declares nothing — such jobs are always run.
+pub fn components_of(job: &CiJob) -> Option<Vec<String>> {
+    job.get(COMPONENTS_VAR).map(|v| {
+        v.split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect()
+    })
+}
+
+/// The last measured run of one job: the points it uploaded (before
+/// retagging) and its simulated duration, for carry-forward and savings
+/// accounting.
+#[derive(Debug, Clone, Default)]
+pub struct StoredRun {
+    pub points: Vec<Point>,
+    pub duration: f64,
+    /// Short commit tag the run measured.
+    pub commit: String,
+}
+
+/// Per-`(repo, job)` memory of last measured runs. Lives on the
+/// coordinator; deterministic (BTreeMap order, no timestamps of its own).
+#[derive(Debug, Default)]
+pub struct Selector {
+    runs: BTreeMap<(String, String), StoredRun>,
+}
+
+impl Selector {
+    pub fn new() -> Selector {
+        Selector::default()
+    }
+
+    pub fn record(&mut self, repo: &str, job: &str, run: StoredRun) {
+        self.runs.insert((repo.to_string(), job.to_string()), run);
+    }
+
+    pub fn last(&self, repo: &str, job: &str) -> Option<&StoredRun> {
+        self.runs.get(&(repo.to_string(), job.to_string()))
+    }
+
+    /// Can `job` be skipped for a push with this touched surface? True
+    /// only when the job declares components, none of them is affected,
+    /// and a previous measured run exists to carry forward.
+    pub fn can_skip(&self, repo: &str, job: &CiJob, touched: &Touched) -> bool {
+        if matches!(touched, Touched::All) {
+            return false;
+        }
+        match components_of(job) {
+            Some(cs) if !cs.is_empty() => {
+                !touched.affects(&cs) && self.last(repo, &job.name).is_some()
+            }
+            _ => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn strs(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn config_surface_affects_everything() {
+        for p in [
+            "benchmark.cfg",
+            "app/benchmark.cfg",
+            ".gitlab-ci.yml",
+            "ci/pipeline.sh",
+            "CMakeLists.txt",
+            "cmake/toolchain.cmake",
+            "scripts/run.sh",
+            "totally/unknown/path.c",
+        ] {
+            assert_eq!(classify_path(p), None, "{p}");
+        }
+        assert_eq!(touched(&strs(&["src/lbm/cpu/k.c", "benchmark.cfg"])), Touched::All);
+        assert_eq!(touched(&[]), Touched::All);
+    }
+
+    #[test]
+    fn backend_paths_classify_to_their_component() {
+        assert_eq!(classify_path("src/lbm/cpu/stream.c"), Some(strs(&["lbm/cpu"])));
+        assert_eq!(classify_path("src/lbm/gpu/stream.cu"), Some(strs(&["lbm/gpu"])));
+        assert_eq!(classify_path("src/lbm/fslbm/surface.c"), Some(strs(&["lbm/fslbm"])));
+        assert_eq!(classify_path("src/lbm/lattice.h"), Some(strs(&["lbm"])));
+        assert_eq!(classify_path("src/fe2ti/pardiso/factor.c"), Some(strs(&["fe2ti/pardiso"])));
+        assert_eq!(classify_path("src/fe2ti/common.c"), Some(strs(&["fe2ti"])));
+    }
+
+    #[test]
+    fn group_prefix_matching_is_symmetric() {
+        let t = touched(&strs(&["src/lbm/lattice.h"]));
+        assert!(t.affects(&strs(&["lbm/cpu"])), "group touch hits member");
+        assert!(!t.affects(&strs(&["fe2ti/pardiso"])));
+        let t = touched(&strs(&["src/lbm/gpu/k.cu"]));
+        assert!(t.affects(&strs(&["lbm/gpu"])));
+        assert!(!t.affects(&strs(&["lbm/cpu"])));
+        // declared group, touched member
+        assert!(t.affects(&strs(&["lbm"])));
+    }
+
+    #[test]
+    fn selector_skips_only_declared_unaffected_jobs_with_history() {
+        let mut sel = Selector::new();
+        let declared = CiJob::new("cpu-bench", "benchmark").var(COMPONENTS_VAR, "lbm/cpu");
+        let undeclared = CiJob::new("misc", "benchmark");
+        let gpu_touch = touched(&strs(&["src/lbm/gpu/k.cu"]));
+
+        // no stored run yet: must run even though unaffected
+        assert!(!sel.can_skip("r", &declared, &gpu_touch));
+        sel.record("r", "cpu-bench", StoredRun::default());
+        assert!(sel.can_skip("r", &declared, &gpu_touch));
+        // affected component: run
+        let cpu_touch = touched(&strs(&["src/lbm/cpu/k.c"]));
+        assert!(!sel.can_skip("r", &declared, &cpu_touch));
+        // All surface: run
+        assert!(!sel.can_skip("r", &declared, &Touched::All));
+        // undeclared job: always run
+        assert!(!sel.can_skip("r", &undeclared, &gpu_touch));
+        // different repo: no history there
+        assert!(!sel.can_skip("other", &declared, &gpu_touch));
+    }
+
+    #[test]
+    fn select_mode_parses_cli_spellings() {
+        assert_eq!(SelectMode::parse("full"), Some(SelectMode::Full));
+        assert_eq!(SelectMode::parse("change-aware"), Some(SelectMode::ChangeAware));
+        assert_eq!(SelectMode::parse("nope"), None);
+        assert_eq!(SelectMode::default(), SelectMode::Full);
+        assert_eq!(SelectMode::ChangeAware.name(), "change-aware");
+    }
+}

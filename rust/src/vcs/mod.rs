@@ -41,6 +41,10 @@ pub struct Commit {
     /// Simulated commit time (secs since campaign start).
     pub time: f64,
     pub tree: Tree,
+    /// Paths touched relative to the parent tree (added, modified or
+    /// removed), sorted. A root commit touches its entire tree. Not part
+    /// of the content hash: derived metadata, like git's diff output.
+    pub changed: Vec<String>,
 }
 
 /// A push event delivered to CI subscribers.
@@ -49,6 +53,28 @@ pub struct PushEvent {
     pub repo: String,
     pub branch: String,
     pub commit_id: String,
+    /// The commit's touched paths (see [`Commit::changed`]). Empty means
+    /// "unknown surface" — consumers must treat it conservatively as
+    /// affects-everything, never as affects-nothing.
+    pub changed: Vec<String>,
+}
+
+/// Sorted set of paths differing between two trees (added, modified or
+/// removed either way).
+pub fn tree_diff(old: &Tree, new: &Tree) -> Vec<String> {
+    let mut out: Vec<String> = Vec::new();
+    for (p, c) in new {
+        if old.get(p) != Some(c) {
+            out.push(p.clone());
+        }
+    }
+    for p in old.keys() {
+        if !new.contains_key(p) {
+            out.push(p.clone());
+        }
+    }
+    out.sort();
+    out
 }
 
 /// An in-memory repository with branches and a commit DAG.
@@ -92,6 +118,10 @@ impl Repository {
             parts.push(t);
         }
         let id = content_hash(&parts);
+        let changed = match parent.as_ref().and_then(|p| self.commits.get(p)) {
+            Some(pc) => tree_diff(&pc.tree, &tree),
+            None => tree.keys().cloned().collect(),
+        };
         let c = Commit {
             id: id.clone(),
             parent,
@@ -99,6 +129,7 @@ impl Repository {
             message: message.to_string(),
             time,
             tree,
+            changed: changed.clone(),
         };
         self.commits.insert(id.clone(), c);
         self.branches.insert(branch.to_string(), id.clone());
@@ -106,6 +137,7 @@ impl Repository {
             repo: self.name.clone(),
             branch: branch.to_string(),
             commit_id: id,
+            changed,
         }
     }
 
@@ -275,6 +307,31 @@ mod tests {
         let e2 = up.commit_change("fork/x", "dev", "exp", 1.0, "k", "3");
         assert!(proxy.trigger(&up, &e2.commit_id, "fork/x", "mallory").is_err());
         assert!(proxy.trigger(&up, &e2.commit_id, "fork/x", "carol").is_ok());
+    }
+
+    #[test]
+    fn changed_paths_track_the_tree_diff() {
+        let mut r = Repository::new("walberla");
+        let e1 = r.commit(
+            "master",
+            "a",
+            "init",
+            0.0,
+            tree(&[("src/lbm/cpu/k.c", "1"), ("benchmark.cfg", "cfg")]),
+        );
+        // root commit: everything counts as touched
+        assert_eq!(e1.changed, vec!["benchmark.cfg", "src/lbm/cpu/k.c"]);
+        let e2 = r.commit_change("master", "b", "tweak", 1.0, "src/lbm/cpu/k.c", "2");
+        assert_eq!(e2.changed, vec!["src/lbm/cpu/k.c"]);
+        // unchanged re-commit of the same tree touches nothing new
+        let head = r.head("master").unwrap().tree.clone();
+        let e3 = r.commit("master", "c", "noop", 2.0, head);
+        assert!(e3.changed.is_empty());
+        // removal is a touch too
+        let mut t = r.head("master").unwrap().tree.clone();
+        t.remove("benchmark.cfg");
+        let e4 = r.commit("master", "d", "rm cfg", 3.0, t);
+        assert_eq!(e4.changed, vec!["benchmark.cfg"]);
     }
 
     #[test]

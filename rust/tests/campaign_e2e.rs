@@ -4,6 +4,8 @@
 //! sequential baseline, and the whole thing is deterministic — same seed
 //! and submissions replay to a byte-identical timeline and TSDB.
 
+mod common;
+
 use cbench::ci::CiJob;
 use cbench::coordinator::campaign::{
     campaign_push_events, default_projects, run_campaign, run_campaign_with, CampaignConfig,
@@ -13,24 +15,7 @@ use cbench::coordinator::{CbSystem, PreparedJob};
 use cbench::regress::bisect_pipeline;
 use cbench::sched::JobOutcome;
 use cbench::vcs::PushEvent;
-
-fn toy_jobs(tag: &str, spec: &[(&str, f64, usize)]) -> Vec<PreparedJob> {
-    let mut jobs = Vec::new();
-    for (host, dur, count) in spec {
-        for i in 0..*count {
-            let dur = *dur;
-            jobs.push(PreparedJob {
-                ci: CiJob::new(&format!("{tag}-{host}-{i}"), "benchmark").var("HOST", host),
-                payload: Box::new(move |_n, _t| JobOutcome {
-                    duration: dur,
-                    stdout: format!("TAG case=toy\nTAG collision_op=srt\nMETRIC mlups={dur}\n"),
-                    exit_code: 0,
-                }),
-            });
-        }
-    }
-    jobs
-}
+use common::{icx36_walberla_jobs, toy_jobs};
 
 #[test]
 fn real_matrices_overlap_strictly_beats_sequential() {
@@ -222,16 +207,6 @@ fn injected_regression_surfaces_through_overlapped_campaign() {
     // repo's regression cannot hide behind another's healthy numbers
     assert!(active.iter().any(|a| a.series.contains("repo=nhr-walberla")));
     assert!(active.iter().any(|a| a.series.contains("repo=proxy-walberla")));
-}
-
-/// The icx36 slice of the real waLBerla matrix — cheap but faithful
-/// (honors the commit's `benchmark.cfg` penalty).
-fn icx36_walberla_jobs(p: &CampaignProject, commit: &str) -> Vec<PreparedJob> {
-    ProjectKind::Walberla
-        .jobs_for(&p.repo, commit)
-        .into_iter()
-        .filter(|j| j.ci.get("HOST") == Some("icx36"))
-        .collect()
 }
 
 #[test]

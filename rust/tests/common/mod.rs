@@ -1,0 +1,153 @@
+//! Shared campaign-fixture helpers for the integration/property suites:
+//! a seeded RNG (tests must not depend on host entropy), roster presets
+//! over the real project matrices, and byte-compare helpers for the
+//! determinism contracts. Each test binary compiles its own copy via
+//! `mod common;` — keep everything here deterministic and allocation-only
+//! (no clocks, no environment reads).
+#![allow(dead_code)]
+
+use cbench::coordinator::campaign::{CampaignProject, ProjectKind};
+use cbench::coordinator::{CbSystem, PreparedJob};
+use cbench::sched::JobOutcome;
+
+/// Tiny deterministic xorshift64* generator — enough to randomize test
+/// campaigns without pulling a dependency or host entropy.
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Rng {
+        // avoid the all-zero fixed point; splatter the seed bits
+        Rng(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform draw in `0..n` (n > 0).
+    pub fn below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n
+    }
+}
+
+/// Toy job roster: `spec` is `(host, duration, count)` — each entry
+/// becomes `count` jobs pinned to `host`, uploading one `mlups` point.
+pub fn toy_jobs(tag: &str, spec: &[(&str, f64, usize)]) -> Vec<PreparedJob> {
+    let mut jobs = Vec::new();
+    for (host, dur, count) in spec {
+        for i in 0..*count {
+            let dur = *dur;
+            jobs.push(PreparedJob {
+                ci: cbench::ci::CiJob::new(&format!("{tag}-{host}-{i}"), "benchmark")
+                    .var("HOST", host),
+                payload: Box::new(move |_n, _t| JobOutcome {
+                    duration: dur,
+                    stdout: format!("TAG case=toy\nTAG collision_op=srt\nMETRIC mlups={dur}\n"),
+                    exit_code: 0,
+                }),
+            });
+        }
+    }
+    jobs
+}
+
+/// The icx36 slice of the real waLBerla matrix — cheap but faithful
+/// (honors the commit's `benchmark.cfg` penalty and the jobs'
+/// CB_COMPONENTS declarations).
+pub fn icx36_walberla_jobs(p: &CampaignProject, commit: &str) -> Vec<PreparedJob> {
+    ProjectKind::Walberla
+        .jobs_for(&p.repo, commit)
+        .into_iter()
+        .filter(|j| j.ci.get("HOST") == Some("icx36"))
+        .collect()
+}
+
+/// One-host slice of whichever real matrix the project uses: the full
+/// matrix filtered to jobs on its first job's HOST. Keeps campaign tests
+/// fast while preserving the matrix's tags, penalties and component
+/// declarations.
+pub fn one_host_slice(p: &CampaignProject, commit: &str) -> Vec<PreparedJob> {
+    let jobs = p.kind.jobs_for(&p.repo, commit);
+    let host = jobs
+        .first()
+        .and_then(|j| j.ci.get("HOST"))
+        .map(|h| h.to_string());
+    match host {
+        Some(h) => jobs.into_iter().filter(|j| j.ci.get("HOST") == Some(h.as_str())).collect(),
+        None => jobs,
+    }
+}
+
+/// Every point of every measurement as line protocol, insertion order —
+/// the byte-compare surface for replay-identity assertions.
+pub fn db_dump(cb: &CbSystem) -> String {
+    let mut dump = String::new();
+    let measurements: Vec<String> = cb.db.measurements().cloned().collect();
+    for m in &measurements {
+        for p in cb.db.points_iter(m) {
+            dump.push_str(&p.to_line());
+            dump.push('\n');
+        }
+    }
+    dump
+}
+
+/// The benchmark points of one measurement, sorted, with the
+/// carried-forward markers removed: under the `select::` safety contract
+/// a change-aware campaign's store differs from the full run's ONLY by
+/// the `carried=1` / `carried_from=…` tags on skipped jobs' points.
+pub fn sorted_lines_sans_carried(cb: &CbSystem, measurement: &str) -> Vec<String> {
+    let mut lines: Vec<String> = cb
+        .db
+        .points_iter(measurement)
+        .map(|p| strip_carried_tags(&p.to_line()))
+        .collect();
+    lines.sort();
+    lines
+}
+
+/// Remove the `carried=1` and `carried_from=XXXXXXXX` tag entries from a
+/// line-protocol line (tags sit between the measurement name and the
+/// first space, comma-separated).
+pub fn strip_carried_tags(line: &str) -> String {
+    let (head, rest) = match line.split_once(' ') {
+        Some((h, r)) => (h, r),
+        None => return line.to_string(),
+    };
+    let kept: Vec<&str> = head
+        .split(',')
+        .filter(|part| {
+            !part.starts_with("carried=") && !part.starts_with("carried_from=")
+        })
+        .collect();
+    format!("{} {}", kept.join(","), rest)
+}
+
+/// The alert book rendered to its canonical persisted form — byte
+/// equality here is the "identical alert book" acceptance everywhere.
+pub fn alert_book(cb: &CbSystem) -> String {
+    cb.alerts.to_json().to_string_pretty()
+}
+
+/// The carried detector state rendered to its persisted form.
+pub fn detector_state(cb: &CbSystem) -> String {
+    cb.det_state.to_json().to_string_pretty()
+}
+
+/// Alert book bytes with the cluster-latency stamps (`sla_*`) dropped:
+/// change-aware selection legitimately shrinks those latencies (fewer
+/// jobs contend on the cluster), so cross-select-mode equality is
+/// asserted on everything else — verdicts, fingerprints, states,
+/// trigger-clock timestamps, archive ids — byte for byte.
+pub fn alert_book_sans_sla(cb: &CbSystem) -> String {
+    alert_book(cb)
+        .lines()
+        .filter(|l| !l.trim_start().starts_with("\"sla_"))
+        .collect::<Vec<_>>()
+        .join("\n")
+}

@@ -13,6 +13,7 @@ fn event() -> PushEvent {
         repo: "fe2ti".into(),
         branch: "master".into(),
         commit_id: "feedfacecafebeef".into(),
+        changed: vec![],
     }
 }
 

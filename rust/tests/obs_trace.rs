@@ -5,6 +5,8 @@
 //! and `--self-metrics` uploads the coordinator's own throughput as a
 //! detector-watched measurement.
 
+mod common;
+
 use cbench::ci::CiJob;
 use cbench::coordinator::campaign::{
     run_campaign_with, CampaignConfig, CampaignProject, ProjectKind,
@@ -12,25 +14,8 @@ use cbench::coordinator::campaign::{
 use cbench::coordinator::{CbSystem, PreparedJob};
 use cbench::obs::trace::{critical_path, Span};
 use cbench::sched::JobOutcome;
+use common::{icx36_walberla_jobs, toy_jobs};
 use std::collections::HashMap;
-
-fn toy_jobs(tag: &str, spec: &[(&str, f64, usize)]) -> Vec<PreparedJob> {
-    let mut jobs = Vec::new();
-    for (host, dur, count) in spec {
-        for i in 0..*count {
-            let dur = *dur;
-            jobs.push(PreparedJob {
-                ci: CiJob::new(&format!("{tag}-{host}-{i}"), "benchmark").var("HOST", host),
-                payload: Box::new(move |_n, _t| JobOutcome {
-                    duration: dur,
-                    stdout: format!("TAG case=toy\nTAG collision_op=srt\nMETRIC mlups={dur}\n"),
-                    exit_code: 0,
-                }),
-            });
-        }
-    }
-    jobs
-}
 
 /// A drained + backfilled streaming campaign: one hour-limit job that
 /// must wait for the maintenance resume edge, two short-limit jobs that
@@ -163,16 +148,6 @@ fn critical_path_attributes_the_entire_makespan_exactly() {
     // the JSON the CLI prints as CRITPATH_JSON carries the exactness flag
     let j = cp.to_json();
     assert_eq!(j.get("attributed_pct").and_then(|v| v.as_f64()), Some(100.0));
-}
-
-/// The icx36 slice of the real waLBerla matrix — cheap but faithful
-/// (honors the commit's `benchmark.cfg` penalty).
-fn icx36_walberla_jobs(p: &CampaignProject, commit: &str) -> Vec<PreparedJob> {
-    ProjectKind::Walberla
-        .jobs_for(&p.repo, commit)
-        .into_iter()
-        .filter(|j| j.ci.get("HOST") == Some("icx36"))
-        .collect()
 }
 
 #[test]

@@ -938,6 +938,7 @@ fn campaign_artifacts(
         },
         streaming: rng.below(2) == 0,
         incremental: rng.below(2) == 0,
+        select: Default::default(),
     };
     let mut cb = CbSystem::new();
     let mut projects = vec![

@@ -1,0 +1,409 @@
+//! Property-tested safety contract of change-aware benchmark selection
+//! (`select::`): for any campaign, skipping the jobs a push cannot
+//! affect and carrying their last measured points forward must be
+//! *observationally equivalent* to running the full matrix — identical
+//! measured values on every affected series, an identical alert book
+//! (modulo the cluster-latency stamps selection exists to shrink),
+//! byte-stable artifacts across thread counts and save/load, planted
+//! regressions in touched components always caught, and regressions
+//! hidden behind a mis-declared dependency deferred but never lost.
+
+mod common;
+
+use cbench::ci::CiJob;
+use cbench::coordinator::campaign::{default_projects, run_campaign_with, CampaignConfig};
+use cbench::coordinator::{BenchConfig, CbSystem, PipelineReport, PreparedJob};
+use cbench::sched::JobOutcome;
+use cbench::select::{SelectMode, COMPONENTS_VAR};
+use cbench::tsdb::TAIL_SCAN_SLACK;
+use cbench::vcs::Repository;
+
+/// One campaign over the stock two-project roster (walberla + fe2ti,
+/// one-host slices of the real matrices) in the given selection mode.
+fn run_campaign_in(
+    select: SelectMode,
+    seed: u64,
+    pushes: usize,
+    inject_at: usize,
+) -> (cbench::coordinator::campaign::CampaignOutcome, CbSystem) {
+    let mut cb = CbSystem::new();
+    let mut projects = default_projects(2);
+    let out = run_campaign_with(
+        &mut cb,
+        &mut projects,
+        &CampaignConfig {
+            pushes,
+            inject_at,
+            penalty: 0.15,
+            seed,
+            select,
+            ..CampaignConfig::default()
+        },
+        common::one_host_slice,
+    )
+    .unwrap();
+    (out, cb)
+}
+
+#[test]
+fn change_aware_equals_full_across_random_campaigns() {
+    let mut rng = common::Rng::new(0x5E1E_C701);
+    for case in 0..3 {
+        let seed = rng.below(1_000);
+        let pushes = 3 + rng.below(2) as usize; // 3..=4
+        let inject_at = 3 + rng.below(pushes as u64 - 2) as usize; // 3..=pushes
+        let (full, cb_full) = run_campaign_in(SelectMode::Full, seed, pushes, inject_at);
+        let (ca, cb_ca) = run_campaign_in(SelectMode::ChangeAware, seed, pushes, inject_at);
+
+        // every affected series measured the same values: once the
+        // carried markers are stripped, the benchmark stores agree line
+        // for line (carried points equal the values a full run measures,
+        // because job payloads are pure functions of the benchmark config)
+        for m in ["lbm", "fe2ti"] {
+            assert_eq!(
+                common::sorted_lines_sans_carried(&cb_full, m),
+                common::sorted_lines_sans_carried(&cb_ca, m),
+                "case {case} seed {seed}: measurement `{m}` diverged"
+            );
+        }
+
+        // identical alert book: verdicts, fingerprints, states,
+        // trigger-clock timestamps, archive ids — byte for byte. Only
+        // the sla_* latency stamps may differ (they shrink with the
+        // saved cluster time, which is the point of selection).
+        assert_eq!(
+            common::alert_book_sans_sla(&cb_full),
+            common::alert_book_sans_sla(&cb_ca),
+            "case {case} seed {seed}: alert books diverged"
+        );
+        assert!(full.alerts_opened() > 0, "case {case}: plant must fire");
+        assert_eq!(full.alerts_opened(), ca.alerts_opened());
+
+        // selection really skipped work and banked the savings
+        assert_eq!(full.jobs_skipped(), 0);
+        assert!(ca.jobs_skipped() > 0, "case {case} seed {seed}");
+        assert!(ca.cluster_hours_saved() > 0.0);
+        assert_eq!(full.total_jobs(), ca.total_jobs());
+
+        // both modes stamp an SLA on the opened alert (the stamps
+        // themselves are schedule-dependent — see alert_book_sans_sla)
+        assert_eq!(
+            full.worst_alert_sla().is_some(),
+            ca.worst_alert_sla().is_some(),
+            "case {case} seed {seed}"
+        );
+    }
+}
+
+#[test]
+fn planted_regression_in_touched_component_is_always_caught() {
+    // the inject round ships its penalty through benchmark.cfg — config
+    // surface, affects-everything — so change-aware selection must
+    // measure it on the very round it lands, every time
+    for seed in [1u64, 2, 3] {
+        let (full, _) = run_campaign_in(SelectMode::Full, seed, 4, 3);
+        let (ca, _) = run_campaign_in(SelectMode::ChangeAware, seed, 4, 3);
+        assert!(full.alerts_opened() > 0, "seed {seed}");
+        assert_eq!(full.alerts_opened(), ca.alerts_opened(), "seed {seed}");
+        assert!(ca.jobs_skipped() > 0, "seed {seed}: selection must engage");
+    }
+}
+
+#[test]
+fn carried_artifacts_are_byte_stable_across_threads_and_reload() {
+    let run = |threads: usize| {
+        cbench::par::set_threads(threads);
+        let mut cb = CbSystem::new();
+        let mut projects = default_projects(2);
+        run_campaign_with(
+            &mut cb,
+            &mut projects,
+            &CampaignConfig {
+                pushes: 4,
+                inject_at: 3,
+                penalty: 0.15,
+                seed: 13,
+                select: SelectMode::ChangeAware,
+                ..CampaignConfig::default()
+            },
+            common::one_host_slice,
+        )
+        .unwrap();
+        (
+            common::db_dump(&cb),
+            common::alert_book(&cb),
+            common::detector_state(&cb),
+            cb,
+        )
+    };
+    let (db1, book1, st1, _) = run(1);
+    let (db4, book4, st4, mut cb) = run(4);
+    assert!(db1.contains("carried=1"), "change-aware run must carry points");
+    assert_eq!(db1, db4, "TSDB must be byte-identical for any thread count");
+    assert_eq!(book1, book4, "alert book must be byte-identical for any thread count");
+    assert_eq!(st1, st4, "detector state must be byte-identical for any thread count");
+
+    // save → load: carried points, alert book and detector state survive
+    // persistence byte for byte (lines compared sorted: shard iteration
+    // order is not part of the contract, line contents are)
+    let dir = std::env::temp_dir().join("cbench_select_prop_roundtrip");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let store = dir.join("tsdb");
+    let alerts_path = dir.join("alerts.json");
+    let state_path = dir.join("state.json");
+    cb.db.save(&store).unwrap();
+    cb.alerts.save(&alerts_path).unwrap();
+    cb.det_state.save(&state_path).unwrap();
+
+    let mut back = CbSystem::new();
+    back.adopt_db(cbench::tsdb::Db::load(&store).unwrap());
+    back.alerts = cbench::regress::AlertBook::load(&alerts_path).unwrap();
+    back.det_state = cbench::regress::DetectorState::load(&state_path).unwrap();
+    let sorted = |s: &str| {
+        let mut v: Vec<&str> = s.lines().collect();
+        v.sort_unstable();
+        v
+    };
+    assert_eq!(sorted(&common::db_dump(&back)), sorted(&db4));
+    assert_eq!(common::alert_book(&back), book4);
+    assert_eq!(common::detector_state(&back), st4);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// One benchmark job that *really* reads `src/lbm/cpu/**` but declares
+/// `lbm/gpu` — the mis-declared dependency every selection scheme has to
+/// survive. Value is a pure function of the commit's tree.
+fn misdeclared_job(repo: &Repository, commit: &str) -> Vec<PreparedJob> {
+    let slow = repo
+        .get(commit)
+        .map(|c| {
+            c.tree
+                .get("src/lbm/cpu/kernel.c")
+                .map(|t| t.contains("slow"))
+                .unwrap_or(false)
+        })
+        .unwrap_or(false);
+    let mlups = if slow { 820.0 } else { 1000.0 };
+    vec![PreparedJob {
+        ci: CiJob::new("uniform-srt-icx36", "benchmark")
+            .var("HOST", "icx36")
+            .var(COMPONENTS_VAR, "lbm/gpu"),
+        payload: Box::new(move |_n, _t| JobOutcome {
+            duration: 10.0,
+            stdout: format!(
+                "TAG case=uniformgridcpu\nTAG collision_op=srt\nMETRIC mlups={mlups}\n"
+            ),
+            exit_code: 0,
+        }),
+    }]
+}
+
+/// Commit `content` to `path` and run the pipeline for it.
+fn push_and_run(
+    cb: &mut CbSystem,
+    repo: &mut Repository,
+    path: &str,
+    content: &str,
+    jobs_for: impl Fn(&Repository, &str) -> Vec<PreparedJob>,
+) -> PipelineReport {
+    let ev = repo.commit_change("master", "dev", &format!("edit {path}: {content}"), 0.0, path, content);
+    let jobs = jobs_for(repo, &ev.commit_id);
+    cb.execute_pipeline(&ev, false, jobs, "lbm").unwrap()
+}
+
+#[test]
+fn misdeclared_dependency_defers_but_never_loses_the_regression() {
+    let mut repo = Repository::new("walberla");
+    let mut cb = CbSystem::new();
+    cb.set_select_mode(SelectMode::ChangeAware);
+
+    // warm-up: four rounds touching the declared component — job runs
+    for i in 0..4 {
+        let r = push_and_run(&mut cb, &mut repo, "src/lbm/gpu/tune.cu", &format!("rev {i}\n"), misdeclared_job);
+        assert_eq!(r.jobs_skipped, 0);
+        assert_eq!(r.regressions.opened, 0);
+    }
+
+    // the regression lands in src/lbm/cpu/** — which the job really
+    // reads but does NOT declare. Selection skips the job: the round is
+    // carried, nothing fires yet (deferred)…
+    let r = push_and_run(&mut cb, &mut repo, "src/lbm/cpu/kernel.c", "slow kernel\n", misdeclared_job);
+    assert_eq!(r.jobs_skipped, 1);
+    assert_eq!(r.points_carried, 1);
+    assert_eq!(r.regressions.opened, 0, "the skipped round cannot see the plant");
+    assert!(cb.alerts.active().is_empty());
+
+    // …and the next commit touching the *declared* component re-measures
+    // and catches it: one commit late, never lost
+    let r = push_and_run(&mut cb, &mut repo, "src/lbm/gpu/tune.cu", "rev 4\n", misdeclared_job);
+    assert_eq!(r.jobs_skipped, 0);
+    assert_eq!(r.regressions.opened, 1, "deferred regression must surface");
+    assert_eq!(cb.alerts.active().len(), 1);
+}
+
+/// Two-job fixture for the boundary tests: a cpu job reading the cpu
+/// kernel and a gpu job with an independent healthy value, as distinct
+/// series of the stock `lbm` policy.
+fn cpu_gpu_jobs(repo: &Repository, commit: &str) -> Vec<PreparedJob> {
+    let slow = repo
+        .get(commit)
+        .map(|c| {
+            c.tree
+                .get("src/lbm/cpu/kernel.c")
+                .map(|t| t.contains("slow"))
+                .unwrap_or(false)
+        })
+        .unwrap_or(false);
+    let cpu_mlups = if slow { 820.0 } else { 1000.0 };
+    vec![
+        PreparedJob {
+            ci: CiJob::new("cpu-icx36", "benchmark")
+                .var("HOST", "icx36")
+                .var(COMPONENTS_VAR, "lbm/cpu"),
+            payload: Box::new(move |_n, _t| JobOutcome {
+                duration: 10.0,
+                stdout: format!(
+                    "TAG case=uniformgridcpu\nTAG collision_op=srt\nMETRIC mlups={cpu_mlups}\n"
+                ),
+                exit_code: 0,
+            }),
+        },
+        PreparedJob {
+            ci: CiJob::new("gpu-rome1", "benchmark")
+                .var("HOST", "rome1")
+                .var(COMPONENTS_VAR, "lbm/gpu"),
+            payload: Box::new(|_n, _t| JobOutcome {
+                duration: 20.0,
+                stdout: "TAG case=uniformgridgpu\nTAG collision_op=srt\nMETRIC mlups=4000\n"
+                    .into(),
+                exit_code: 0,
+            }),
+        },
+    ]
+}
+
+#[test]
+fn carried_series_survives_the_stale_tenant_boundary() {
+    // after the cpu regression opens its alert, a long gpu-only stretch
+    // pushes the cpu series' last MEASURED point far beyond the capped
+    // reverse tail walk (lookback × TAIL_SCAN_SLACK distinct trigger
+    // timestamps) — without carried points the series would flip to
+    // stale-tenant exclusion and the open alert would rot. With them it
+    // stays fresh, keeps updating, and never auto-resolves; the book
+    // stays byte-identical to the full run's (modulo latency stamps).
+    let lookback = 8 + 1; // stock lbm policy: windows(8, 1)
+    let rounds = lookback * TAIL_SCAN_SLACK + 16;
+    let run = |select: SelectMode| {
+        let mut repo = Repository::new("walberla");
+        let mut cb = CbSystem::new();
+        cb.set_select_mode(select);
+        // warm-up touches shared lbm source: both series measured
+        for i in 0..4 {
+            push_and_run(&mut cb, &mut repo, "src/lbm/lattice.h", &format!("rev {i}\n"), cpu_gpu_jobs);
+        }
+        // the cpu kernel regresses — its component is touched, so the
+        // cpu job runs (in both modes) and the alert opens
+        let r = push_and_run(&mut cb, &mut repo, "src/lbm/cpu/kernel.c", "slow kernel\n", cpu_gpu_jobs);
+        assert_eq!(r.regressions.opened, 1, "{select:?}");
+        // gpu-only stretch past the stale-tenant cap
+        for i in 0..rounds {
+            push_and_run(&mut cb, &mut repo, "src/lbm/gpu/tune.cu", &format!("tune {i}\n"), cpu_gpu_jobs);
+        }
+        cb
+    };
+    let cb_full = run(SelectMode::Full);
+    let cb_ca = run(SelectMode::ChangeAware);
+
+    assert_eq!(
+        common::alert_book_sans_sla(&cb_full),
+        common::alert_book_sans_sla(&cb_ca),
+        "long-horizon carried series diverged from the full run"
+    );
+    let active = cb_ca.alerts.active();
+    assert_eq!(active.len(), 1, "exactly the one cpu alert, still open");
+    let alert = &active[0];
+    assert!(alert.series.contains("case=uniformgridcpu"));
+    // the carried series kept feeding the alert every round — had it
+    // gone stale at the TAIL_SCAN_SLACK boundary, times_seen would have
+    // frozen at the opening round
+    assert!(
+        alert.times_seen > rounds,
+        "times_seen {} must grow through all {rounds} carried rounds",
+        alert.times_seen
+    );
+    // and the carried points really were the only thing keeping the
+    // series inside the capped walk
+    let last_measured = cb_ca
+        .db
+        .points_iter("lbm")
+        .filter(|p| {
+            p.tags.get("case").map(|c| c == "uniformgridcpu").unwrap_or(false)
+                && p.tags.get("carried").is_none()
+        })
+        .map(|p| p.ts)
+        .max()
+        .unwrap();
+    let newer_triggers: std::collections::BTreeSet<i64> = cb_ca
+        .db
+        .points_iter("lbm")
+        .filter(|p| p.ts > last_measured)
+        .map(|p| p.ts)
+        .collect();
+    assert!(
+        newer_triggers.len() > lookback * TAIL_SCAN_SLACK,
+        "fixture must push the last measured point past the cap ({} distinct newer triggers)",
+        newer_triggers.len()
+    );
+}
+
+#[test]
+fn config_rebuild_over_carried_store_matches_requery() {
+    // a regress.* knob change invalidates the detector fingerprint and
+    // rebuilds the carried state from a store full of carried=1 points —
+    // the rebuilt verdicts must equal a from-scratch re-query's. Both
+    // runs are change-aware with identical schedules, so the whole book
+    // (latency stamps included) must agree byte for byte.
+    let run = |incremental: bool| {
+        let mut repo = Repository::new("walberla");
+        let mut cb = CbSystem::new();
+        cb.set_select_mode(SelectMode::ChangeAware);
+        cb.set_incremental_detection(incremental);
+        for i in 0..4 {
+            push_and_run(&mut cb, &mut repo, "src/lbm/gpu/tune.cu", &format!("rev {i}\n"), misdeclared_job);
+        }
+        // plant lands, deferred (carried round)…
+        push_and_run(&mut cb, &mut repo, "src/lbm/cpu/kernel.c", "slow kernel\n", misdeclared_job);
+        // …caught on the next declared-component touch
+        let r = push_and_run(&mut cb, &mut repo, "src/lbm/gpu/tune.cu", "rev 4\n", misdeclared_job);
+        assert_eq!(r.regressions.opened, 1);
+        // a few more carried rounds stack carried=1 points into the store
+        for i in 0..3 {
+            let r = push_and_run(&mut cb, &mut repo, "src/lbm/cpu/other.c", &format!("cpu {i}\n"), misdeclared_job);
+            assert_eq!(r.jobs_skipped, 1);
+        }
+        let fp_before = cb.det_state.config_fingerprint().to_string();
+        // the knob change forces the rebuild over the carried store
+        cb.apply_regress_config(&BenchConfig::parse("regress.lbm-mlups.min_rel_change = 0.01\n"));
+        push_and_run(&mut cb, &mut repo, "src/lbm/gpu/tune.cu", "rev 5\n", misdeclared_job);
+        if incremental {
+            assert_ne!(
+                cb.det_state.config_fingerprint(),
+                fp_before,
+                "knob change must re-fingerprint the carried state"
+            );
+        }
+        // and back to stock for one more round
+        cb.apply_regress_config(&BenchConfig::default());
+        push_and_run(&mut cb, &mut repo, "src/lbm/gpu/tune.cu", "rev 6\n", misdeclared_job);
+        cb
+    };
+    let cb_inc = run(true);
+    let cb_req = run(false);
+    assert_eq!(
+        common::alert_book(&cb_inc),
+        common::alert_book(&cb_req),
+        "rebuild over carried points must match the full re-query, byte for byte"
+    );
+    assert!(!cb_inc.alerts.active().is_empty());
+}
