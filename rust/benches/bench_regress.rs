@@ -10,6 +10,31 @@ use cbench::regress::detector::Direction;
 use cbench::tsdb::{Db, Point, Query};
 use cbench::util::rng::Rng;
 use cbench::util::stats::Bench;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Counting allocator for the MEMORY_JSON section: a thin System wrapper
+/// whose relaxed counter costs nothing measurable on the other benches.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
 
 /// Synthetic production-shaped TSDB: `series` series × `per_series`
 /// pipeline executions, ~8% of series carrying a planted 15% drop.
@@ -310,6 +335,65 @@ fn main() {
         ms_at(4),
         ms_at(8),
         speedup_4x >= 2.0
+    );
+
+    // allocation economy: columnar ingest vs the per-point replay on the
+    // same 10k-line slice, counted by the process-wide counting
+    // allocator. The per-point path parses every line into an owned
+    // Point (BTreeMaps of owned Strings) and inserts it; the columnar
+    // path interns measurement/tag/field strings once and appends to
+    // structure-of-arrays columns. The in-run A/B ratio is the portable
+    // gate (CI: <= 0.25); absolute counts vary with allocator and libstd.
+    println!("\n== allocations per ingested point (columnar vs per-point) ==\n");
+    cbench::par::set_threads(1); // single-threaded: the counter is exact
+    let slice: String = lp_text
+        .lines()
+        .take(10_000)
+        .flat_map(|l| [l, "\n"])
+        .collect();
+    let n_slice = slice.lines().count();
+    let legacy_allocs = {
+        let mut db = Db::with_shard_span(ingest_span);
+        let a0 = ALLOCS.load(Ordering::Relaxed);
+        for line in slice.lines() {
+            db.insert(Point::parse_line(line).unwrap());
+        }
+        ALLOCS.load(Ordering::Relaxed) - a0
+    };
+    let col_db;
+    let col_allocs = {
+        let mut db = Db::with_shard_span(ingest_span);
+        let a0 = ALLOCS.load(Ordering::Relaxed);
+        let n = db.ingest_lines(&slice).unwrap();
+        let d = ALLOCS.load(Ordering::Relaxed) - a0;
+        assert_eq!(n, n_slice);
+        col_db = db;
+        d
+    };
+    cbench::par::set_threads(0);
+    let legacy_per_point = legacy_allocs as f64 / n_slice as f64;
+    let col_per_point = col_allocs as f64 / n_slice as f64;
+    let alloc_ratio = if legacy_per_point > 0.0 {
+        col_per_point / legacy_per_point
+    } else {
+        1.0
+    };
+    let istats = col_db.interner_stats();
+    println!("  per-point path: {legacy_per_point:.1} allocs/point");
+    println!(
+        "  columnar path : {col_per_point:.1} allocs/point ({:.1}% of per-point)",
+        alloc_ratio * 100.0
+    );
+    println!(
+        "  interner      : {} strings / {} tag sets, ~{} bytes resident",
+        istats.strings, istats.tagsets, istats.approx_bytes
+    );
+    println!(
+        "MEMORY_JSON {{\"points\":{n_slice},\"allocs_per_point_legacy\":{legacy_per_point:.3},\"allocs_per_point_columnar\":{col_per_point:.3},\"ratio\":{alloc_ratio:.4},\"le_quarter\":{},\"interner_strings\":{},\"interner_tagsets\":{},\"interner_bytes\":{}}}",
+        alloc_ratio <= 0.25,
+        istats.strings,
+        istats.tagsets,
+        istats.approx_bytes
     );
 
     // statistical primitives on window-sized samples

@@ -224,4 +224,69 @@ fn main() {
         "BACKFILL_JSON {{\"makespan_on_s\":{makespan_on:.3},\"makespan_off_s\":{makespan_off:.3},\"backfilled_jobs\":{backfills_on},\"improved\":{}}}",
         makespan_on < makespan_off
     );
+
+    // fleet scale: a day of open-loop push arrivals (submit_at) swept by
+    // one event queue, timeline formatting off — the capacity number of
+    // the interned/indexed scheduler core. CBENCH_FLEET_JOBS overrides
+    // the job count (CI may dial it down).
+    println!("\n== fleet-scale event engine (open-loop arrivals, timeline off) ==\n");
+    let fleet_jobs: usize = std::env::var("CBENCH_FLEET_JOBS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1_000_000);
+    let mut s = SimScheduler::new(catalogue().into_iter().filter(|n| n.testcluster).collect());
+    s.set_timeline(false);
+    let hosts: Vec<String> = s.nodes().map(|n| n.host.to_string()).collect();
+    let owners = [
+        "repo-a", "repo-b", "repo-c", "repo-d", "repo-e", "repo-f", "repo-g", "repo-h",
+    ];
+    let t = std::time::Instant::now();
+    // ~10 arrivals per simulated second against ~11 nodes of 1 s jobs:
+    // slightly undersubscribed, so queues stay shallow and the number
+    // measures the engine, not a pile-up
+    for i in 0..fleet_jobs {
+        s.submit_at(
+            SubmitSpec::new(&format!("f{i}"), &hosts[i % hosts.len()])
+                .owner(owners[i % owners.len()])
+                .priority((i % 5) as i64),
+            Box::new(|_n, _t| JobOutcome {
+                duration: 1.0,
+                stdout: String::new(),
+                exit_code: 0,
+            }),
+            i as f64 * 0.1,
+        )
+        .unwrap();
+    }
+    let submit_s = t.elapsed().as_secs_f64();
+    let t = std::time::Instant::now();
+    let mut events = 0u64;
+    while s.step().is_some() {
+        events += 1;
+    }
+    let drive_s = t.elapsed().as_secs_f64();
+    let done = s.jobs().filter(|j| j.state.is_terminal()).count();
+    assert_eq!(done, fleet_jobs, "every fleet job must reach a terminal state");
+    let events_per_sec = events as f64 / drive_s.max(1e-9);
+    let dispatch_us_per_job = (submit_s + drive_s) * 1e6 / fleet_jobs as f64;
+    println!(
+        "  {} jobs / {} events on {} nodes, {} owners interned",
+        fleet_jobs,
+        events,
+        hosts.len(),
+        s.owner_count()
+    );
+    println!(
+        "  submit {} + drive {} -> {:.0} events/s, {:.3} us/job end to end",
+        cbench::util::fmt_secs(submit_s),
+        cbench::util::fmt_secs(drive_s),
+        events_per_sec,
+        dispatch_us_per_job
+    );
+    println!("  peak event-queue depth: {}", s.peak_queue_depth());
+    println!(
+        "FLEET_JSON {{\"jobs\":{fleet_jobs},\"events\":{events},\"events_per_sec\":{events_per_sec:.0},\"dispatch_us_per_job\":{dispatch_us_per_job:.3},\"peak_queue_depth\":{},\"owners\":{}}}",
+        s.peak_queue_depth(),
+        s.owner_count()
+    );
 }

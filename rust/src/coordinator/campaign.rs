@@ -29,6 +29,15 @@
 //!   the alert SLA (cluster-time from a regression landing to its alert
 //!   opening, [`crate::regress::Alert::sla_secs`]) is bounded by one
 //!   pipeline's duration instead of the campaign makespan;
+//! * **overlapped collects** (automatic under `--threads > 1`): a
+//!   completed pipeline's log parsing runs on a background thread while
+//!   the scheduler keeps stepping epochs for the rest of the roster;
+//!   gathers and the serialized commits (upload → detection → alerting →
+//!   trace) stay on the driver thread in `(completion, pid)` FIFO order,
+//!   so the host wall-clock of a big collect overlaps the simulation
+//!   without changing a single byte of its output (see
+//!   [`super::CbSystem::gather_collect`] /
+//!   [`super::CbSystem::commit_collect`]);
 //! * **batch collect** (`streaming: false`, `cbench campaign --collect
 //!   batch`) keeps the PR-2 drain-then-collect model for A/B latency
 //!   comparisons;
@@ -41,10 +50,12 @@
 //!   (wall/standalone durations, first/last-result latencies, alert SLA)
 //!   for the dashboards.
 
-use super::{BenchConfig, CbSystem, PipelineReport, PreparedJob};
+use super::{BenchConfig, CbSystem, CollectInputs, JobMetrics, PipelineReport, PreparedJob};
 use crate::select::SelectMode;
 use crate::tsdb::Point;
 use crate::vcs::{PushEvent, Repository};
+use std::collections::VecDeque;
+use std::thread::JoinHandle;
 
 /// Which benchmark pipeline a project runs on push.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -164,7 +175,10 @@ pub struct CampaignConfig {
     /// restores batch collection (drain the cluster, then collect) for
     /// A/B latency comparisons — same final TSDB benchmark contents,
     /// alert set and timeline, later uploads (`cbench campaign --collect
-    /// streaming|batch`).
+    /// streaming|batch`). Under `--threads > 1` the streaming driver
+    /// additionally overlaps each pipeline's log parsing with the
+    /// scheduler on background threads — byte-identical output, less
+    /// host wall-clock (self-metrics runs stay serial).
     pub streaming: bool,
     /// Incremental detection (default): per-pipeline checks update the
     /// carried `regress::DetectorState` from the new points instead of
@@ -360,7 +374,46 @@ fn collect_one(
     let commit_cfg = BenchConfig::from_commit(&projects[pi].repo, &ev.commit_id);
     cb.apply_regress_config(&commit_cfg);
     let r = cb.collect_pipeline(pid)?;
-    // one campaign meta-point per pipeline for the dashboards
+    finish_one(cb, projects, pi, r, reports);
+    Ok(())
+}
+
+/// Join the oldest background parse and run its serialized commit:
+/// detection config first (the triggering commit tunes its own detection
+/// — [`CbSystem::gather_collect`] never reads the detector, so applying
+/// it at commit time is exactly where the serial path's application
+/// lands), then upload + detection + alerting + trace, then the
+/// `campaign` meta-point. FIFO only: the in-flight queue holds pipelines
+/// in `(completion, pid)` order and commits must not reorder it.
+fn commit_front(
+    cb: &mut CbSystem,
+    projects: &[CampaignProject],
+    inflight: &mut VecDeque<(JoinHandle<(CollectInputs, Vec<JobMetrics>)>, usize, PushEvent)>,
+    reports: &mut Vec<PipelineReport>,
+) -> anyhow::Result<()> {
+    let (h, pi, ev) = inflight.pop_front().expect("commit_front on an empty queue");
+    let (inputs, parsed) = match h.join() {
+        Ok(v) => v,
+        // a panicking parse worker must fail the campaign loudly, not
+        // silently drop a pipeline's results
+        Err(payload) => std::panic::resume_unwind(payload),
+    };
+    let commit_cfg = BenchConfig::from_commit(&projects[pi].repo, &ev.commit_id);
+    cb.apply_regress_config(&commit_cfg);
+    let r = cb.commit_collect(inputs, parsed)?;
+    finish_one(cb, projects, pi, r, reports);
+    Ok(())
+}
+
+/// Shared tail of every collect path: one `campaign` meta-point per
+/// pipeline for the dashboards, then file the report.
+fn finish_one(
+    cb: &mut CbSystem,
+    projects: &[CampaignProject],
+    pi: usize,
+    r: PipelineReport,
+    reports: &mut Vec<PipelineReport>,
+) {
     let mut p = Point::new("campaign", r.trigger_ts)
         .tag("repo", &r.repo)
         .tag("kind", projects[pi].kind.name())
@@ -383,7 +436,6 @@ fn collect_one(
     }
     cb.db.insert(p);
     reports.push(r);
-    Ok(())
 }
 
 /// Run a campaign with a custom job-matrix provider (tests, downsized
@@ -468,16 +520,57 @@ pub fn run_campaign_with(
         // submission (pipeline-id) order — exactly the (finished_at,
         // pid) order of batch collection, so the two modes agree on
         // everything except *when* the uploads happen.
+        //
+        // With more than one worker thread configured, collects
+        // *overlap* the scheduler: each completed pipeline's gather
+        // (scheduler snapshot) runs here, its log parsing runs on a
+        // background thread, and only the serialized commit (upload,
+        // detection, alerting, trace) comes back to this thread — in
+        // the same (completion, pid) FIFO order the serial path uses,
+        // so the output is byte-identical for any `--threads` value.
+        // Self-metrics runs stay serial: uploads difference the global
+        // host-time counters at commit, and a parse still in flight
+        // would shift which collect its deltas land in.
+        let overlap = crate::par::threads() > 1 && !cb.self_metrics();
+        // cap outstanding parses at threads-1 (this thread is the
+        // scheduler); the oldest is force-committed when the cap hits
+        let max_inflight = crate::par::threads().saturating_sub(1).max(1);
+        let mut inflight: VecDeque<(
+            JoinHandle<(CollectInputs, Vec<JobMetrics>)>,
+            usize,
+            PushEvent,
+        )> = VecDeque::new();
         let mut remaining = submitted;
         loop {
             let mut i = 0;
             while i < remaining.len() {
                 if cb.pipeline_done(remaining[i].0) {
                     let (pid, pi, ev) = remaining.remove(i);
-                    collect_one(cb, projects, pid, pi, &ev, &mut reports)?;
+                    if overlap {
+                        while inflight.len() >= max_inflight {
+                            commit_front(cb, projects, &mut inflight, &mut reports)?;
+                        }
+                        let inputs = cb.gather_collect(pid)?;
+                        let h = std::thread::spawn(move || {
+                            // serial inside the worker: total parallelism
+                            // stays bounded by the configured thread count
+                            let parsed = CbSystem::parse_collect(&inputs, false);
+                            (inputs, parsed)
+                        });
+                        inflight.push_back((h, pi, ev));
+                    } else {
+                        collect_one(cb, projects, pid, pi, &ev, &mut reports)?;
+                    }
                 } else {
                     i += 1;
                 }
+            }
+            // opportunistic commits between epochs: drain every
+            // background parse that already finished, FIFO only —
+            // never join past an unfinished front, stepping must not
+            // block on a straggling parse
+            while inflight.front().is_some_and(|(h, _, _)| h.is_finished()) {
+                commit_front(cb, projects, &mut inflight, &mut reports)?;
             }
             if remaining.is_empty() {
                 break;
@@ -485,13 +578,22 @@ pub fn run_campaign_with(
             if cb.scheduler.step_epoch().is_none() {
                 // queue drained with pipelines still incomplete (stranded
                 // jobs — e.g. a library caller draining a node without a
-                // resume): collect what exists so the campaign reports
-                // instead of spinning
+                // resume): flush the in-flight parses (order!), then
+                // collect what exists so the campaign reports instead of
+                // spinning
+                while !inflight.is_empty() {
+                    commit_front(cb, projects, &mut inflight, &mut reports)?;
+                }
                 for (pid, pi, ev) in std::mem::take(&mut remaining) {
                     collect_one(cb, projects, pid, pi, &ev, &mut reports)?;
                 }
                 break;
             }
+        }
+        // flush the in-flight tail. Commits never advance the simulated
+        // clock, so makespan and timeline are exactly the serial ones.
+        while !inflight.is_empty() {
+            commit_front(cb, projects, &mut inflight, &mut reports)?;
         }
     } else {
         // --- batch collect (A/B reference): drain the whole roster,

@@ -26,10 +26,8 @@
 //! (`regress::state`) is proven over this code.
 
 use crate::coordinator::{detector_with_config, BenchConfig};
-use crate::obs::metrics as om;
 use crate::regress::{AlertBook, Detector, DetectorState, IngestSummary};
-use crate::tsdb::{lp, Db};
-use std::collections::BTreeSet;
+use crate::tsdb::Db;
 
 /// Outcome of one [`CoreHandle::ingest_and_detect`] call: how many points
 /// landed and what the post-ingest detection did to the alert book.
@@ -153,17 +151,10 @@ impl CoreHandle {
     /// semantics, so a served project behaves exactly like a pipeline
     /// tenant.
     pub fn ingest_and_detect(&mut self, text: &str) -> Result<IngestDetectOutcome, String> {
-        let timer = om::Timer::start();
-        let pts = lp::parse_lines(text)?;
-        let n = pts.len();
-        om::add(om::Counter::LpLines, n as u64);
-        timer.stop(om::TimedOp::LpParse);
-        // deterministic scope order: BTreeSet sorts (measurement, repo)
-        let scopes: BTreeSet<(String, Option<String>)> = pts
-            .iter()
-            .map(|p| (p.measurement.clone(), p.tags.get("repo").cloned()))
-            .collect();
-        self.db.insert_batch(pts);
+        // columnar ingest; the distinct (measurement, repo) scopes come
+        // out of the interned tag sets — deterministic BTreeSet order,
+        // no second walk over owned Points
+        let (n, scopes) = self.db.ingest_lines_scoped(text, "repo")?;
         let now_ts = self.db.newest_ts().unwrap_or(0);
         let mut summary = IngestSummary::default();
         for (m, repo) in &scopes {

@@ -294,6 +294,36 @@ pub struct PendingPipeline {
     pub skipped: Vec<(CiJob, StoredRun)>,
 }
 
+/// Everything the serial **gather** phase of a collect read off the
+/// scheduler, snapshotted so the parse phase can run on a background
+/// thread while the scheduler keeps advancing (overlapped campaign
+/// collects) and the commit phase can replay byte-identically later.
+/// Self-contained and `Send`; the one cluster-time stamp the commit
+/// phase needs (`collected_at`) is captured at gather time — see
+/// [`CbSystem::gather_collect`].
+pub(crate) struct CollectInputs {
+    pending: PendingPipeline,
+    /// Per job, in submit order: (ci name, node host, terminal state,
+    /// log, run duration).
+    gathered: Vec<(String, String, JobState, String, f64)>,
+    completed: usize,
+    failed: usize,
+    backfilled: usize,
+    last_end: f64,
+    first_end: f64,
+    first_start: f64,
+    node_load: BTreeMap<String, f64>,
+    /// Scheduler clock at gather time — the pipeline's collect instant.
+    collected_at: f64,
+}
+
+impl CollectInputs {
+    /// The pipeline this gather belongs to (campaign bookkeeping).
+    pub(crate) fn pipeline_id(&self) -> u64 {
+        self.pending.pipeline_id
+    }
+}
+
 /// The whole CB installation.
 pub struct CbSystem {
     /// The shared event-driven scheduler all pipelines interleave on.
@@ -617,6 +647,17 @@ impl CbSystem {
     /// pipeline — callers collecting several overlapped pipelines do so
     /// one at a time, in any order.
     pub fn collect_pipeline(&mut self, pipeline_id: u64) -> anyhow::Result<PipelineReport> {
+        let inputs = self.gather_collect(pipeline_id)?;
+        let parsed = Self::parse_collect(&inputs, true);
+        self.commit_collect(inputs, parsed)
+    }
+
+    /// **Gather** (serial, scheduler-side): drain the pipeline's jobs to
+    /// terminal state, snapshot everything the later phases need off the
+    /// scheduler, and capture the collect instant. The returned value is
+    /// self-contained (`Send`): the campaign driver hands it to a
+    /// background parse while the scheduler keeps advancing epochs.
+    pub(crate) fn gather_collect(&mut self, pipeline_id: u64) -> anyhow::Result<CollectInputs> {
         let pos = self
             .in_flight
             .iter()
@@ -625,35 +666,22 @@ impl CbSystem {
         let pending = self.in_flight.remove(pos);
         let ids: Vec<u64> = pending.jobs.iter().map(|(id, _)| *id).collect();
         self.scheduler.run_until_done(&ids);
-
-        let event = &pending.event;
-        let trigger_ts = pending.trigger_ts;
-
-        // per-execution collection (Fig. 5)
-        let coll = self.store.create_collection(
-            &format!("pipeline-{}", pending.pipeline_id),
-            &format!(
-                "{} pipeline #{} @ {}",
-                event.repo,
-                pending.pipeline_id,
-                &event.commit_id[..8.min(event.commit_id.len())]
-            ),
-        );
-        self.store
-            .add_child_collection(self.root_collection, coll)
-            .ok();
+        // the collect instant, captured exactly once: an overlapped
+        // campaign commits this pipeline after the scheduler has moved
+        // past this point, and every timestamp the commit stamps (report,
+        // SLA, trace, machinestate) must be the gather-time clock for the
+        // output to stay byte-identical to a serial collect
+        let collected_at = self.scheduler.now();
 
         let mut completed = 0;
         let mut failed = 0;
         let mut backfilled = 0;
-        let mut points = 0;
-        let mut records = 0;
         let mut last_end = pending.submitted_at;
         let mut first_end = f64::INFINITY;
         let mut first_start = f64::INFINITY;
         let mut node_load: BTreeMap<String, f64> = BTreeMap::new();
-        // --- phase 1 (serial): read terminal job state off the scheduler
-        // and fold the latency/load accounting, in job order ---
+        // read terminal job state off the scheduler and fold the
+        // latency/load accounting, in job order
         let mut gathered: Vec<(String, String, JobState, String, f64)> =
             Vec::with_capacity(pending.jobs.len());
         for (sched_id, ci) in &pending.jobs {
@@ -679,27 +707,93 @@ impl CbSystem {
             }
             gathered.push((ci.name.clone(), node_host, state, log, run_dur));
         }
+        Ok(CollectInputs {
+            pending,
+            gathered,
+            completed,
+            failed,
+            backfilled,
+            last_end,
+            first_end,
+            first_start,
+            node_load,
+            collected_at,
+        })
+    }
 
-        // --- phase 2 (parallel): parse every job log — the CPU-heavy
-        // part of collect — across the par pool. `par::map` returns in
-        // job order, so the merge below is byte-identical to the old
-        // serial loop for any thread count. ---
-        let parsed = {
-            let items: Vec<(&str, &str, &str)> = gathered
-                .iter()
-                .map(|(name, host, _, log, _)| (name.as_str(), host.as_str(), log.as_str()))
-                .collect();
-            crate::par::map(items, |(name, host, log)| {
-                let jt = om::Timer::start();
-                let metrics = parse_job_output(name, host, log);
-                om::add(om::Counter::JobsParsed, 1);
-                jt.stop(om::TimedOp::JobParse);
-                metrics
-            })
+    /// **Parse** (the CPU-heavy middle): parse every job log. Stateless —
+    /// no `&self` — so the campaign driver can run it on a background
+    /// thread while the scheduler advances. `parallel` fans the logs
+    /// across the par pool (the inline single-pipeline path); background
+    /// callers pass `false` and stay serial, keeping total parallelism
+    /// bounded by the configured thread count. Either way results come
+    /// back in job order, so the commit below is byte-identical to the
+    /// old serial loop for any thread count.
+    pub(crate) fn parse_collect(inputs: &CollectInputs, parallel: bool) -> Vec<JobMetrics> {
+        let parse_one = |(name, host, log): (&str, &str, &str)| {
+            let jt = om::Timer::start();
+            let metrics = parse_job_output(name, host, log);
+            om::add(om::Counter::JobsParsed, 1);
+            jt.stop(om::TimedOp::JobParse);
+            metrics
         };
+        let items: Vec<(&str, &str, &str)> = inputs
+            .gathered
+            .iter()
+            .map(|(name, host, _, log, _)| (name.as_str(), host.as_str(), log.as_str()))
+            .collect();
+        if parallel {
+            crate::par::map(items, parse_one)
+        } else {
+            items.into_iter().map(parse_one).collect()
+        }
+    }
 
-        // --- phase 3 (serial merge, job order): upload + archive — the
-        // TSDB insert order and record/link ids stay exactly as before ---
+    /// **Commit** (serial, in collect order): upload, archive, detect,
+    /// trace, report. All mutation of shared state happens here — an
+    /// overlapped campaign applies commits in (completion, pid) order, so
+    /// the TSDB insert order, datastore id sequence, alert book and trace
+    /// stay exactly as a serial collect would leave them. Cluster-time
+    /// stamps come from `inputs.collected_at` (the gather instant), never
+    /// from the scheduler's current clock.
+    pub(crate) fn commit_collect(
+        &mut self,
+        inputs: CollectInputs,
+        parsed: Vec<JobMetrics>,
+    ) -> anyhow::Result<PipelineReport> {
+        let CollectInputs {
+            pending,
+            gathered,
+            completed,
+            failed,
+            backfilled,
+            last_end,
+            first_end,
+            first_start,
+            node_load,
+            collected_at,
+        } = inputs;
+        let event = &pending.event;
+        let trigger_ts = pending.trigger_ts;
+
+        // per-execution collection (Fig. 5)
+        let coll = self.store.create_collection(
+            &format!("pipeline-{}", pending.pipeline_id),
+            &format!(
+                "{} pipeline #{} @ {}",
+                event.repo,
+                pending.pipeline_id,
+                &event.commit_id[..8.min(event.commit_id.len())]
+            ),
+        );
+        self.store
+            .add_child_collection(self.root_collection, coll)
+            .ok();
+
+        let mut points = 0;
+        let mut records = 0;
+        // --- upload + archive (job order): the TSDB insert order and
+        // record/link ids stay exactly as before ---
         let commit8 = event.commit_id[..8.min(event.commit_id.len())].to_string();
         let mut measured_runs: Vec<(String, StoredRun)> = Vec::new();
         for ((name, node_host, state, log, run_dur), metrics) in gathered.iter().zip(parsed) {
@@ -761,7 +855,7 @@ impl CbSystem {
                     "machinestate",
                 )
                 .map_err(|e| anyhow::anyhow!(e))?;
-            let ms = machine_state(&node, name, self.scheduler.now());
+            let ms = machine_state(&node, name, collected_at);
             self.store
                 .attach_file(rid_ms, "machinestate.json", &ms.to_string_pretty())
                 .ok();
@@ -883,7 +977,6 @@ impl CbSystem {
         // between the offender's own collect and the later detection that
         // finally opened the alert) — components that sum to `sla_secs`
         // exactly. `cbench regress alerts` prints the breakdown.
-        let collected_at = self.scheduler.now();
         let first_started_at = if first_start.is_finite() {
             first_start
         } else {

@@ -1391,7 +1391,13 @@ COMMANDS:
                                 batched line-protocol parse fan-outs
                                 (global, any command; default: one worker
                                 per core; results are byte-identical for
-                                any N -- only wall-clock changes)
+                                any N -- only wall-clock changes); with
+                                N > 1 streaming campaigns also overlap
+                                collect parsing with scheduling on
+                                background threads (commits stay serial
+                                in completion order, so artifacts are
+                                still byte-identical; gated off under
+                                --self-metrics on)
   trace <show|export|critical-path> [--trace FILE] [--chrome] [--out FILE]
                                 inspect a saved cluster-time trace:
                                 show prints the span tree; export
@@ -1625,7 +1631,14 @@ CB pipeline wiring (paper Figs. 3-4):
        hot work fans out across the par:: worker pool (--threads N):
        job-log parsing, per-series detection, shard materialization and
        dirty-shard writes run in parallel and merge back in input order,
-       so every artifact stays byte-identical for any thread count
+       so every artifact stays byte-identical for any thread count;
+       ACROSS pipelines (still --threads N > 1) the collect's pure parse
+       phase runs on background threads while the scheduler advances
+       toward the next completion -- commits (detector + TSDB + alerts)
+       stay serial on the driver thread in (completion, pipeline id)
+       order, the same order the serial loop uses, so overlap changes
+       host wall-clock only, never bytes (bench_sched's fleet section
+       and CBENCH_FLEET_JOBS size the underlying event engine)
     -> benchmarks execute (apps::fe2ti / apps::walberla; LBM kernels
        optionally through the JAX/Pallas PJRT artifacts, runtime::)
     -> output parsed (likwid-style counters, perf::)

@@ -35,7 +35,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::time::Instant;
 
 /// Number of counter slots (must match [`Counter::ALL`]).
-pub const N_COUNTERS: usize = 15;
+pub const N_COUNTERS: usize = 18;
 
 /// Monotone process-global counters. `*Ns` slots accumulate wall-clock
 /// nanoseconds measured by [`Timer`]; the rest count operations.
@@ -71,6 +71,14 @@ pub enum Counter {
     SaveShardsWritten,
     /// Nanoseconds spent inside `Db::save_report`.
     SaveNs,
+    /// Interner lookups that found an existing symbol/tag set.
+    InternHits,
+    /// Interner lookups that allocated a new symbol/tag set.
+    InternMisses,
+    /// Columnar shard bodies materialized into owned `Point` rows
+    /// (the public-API boundary cost the columnar store avoids paying
+    /// on the ingest/save paths).
+    ColMaterializations,
 }
 
 impl Counter {
@@ -90,6 +98,9 @@ impl Counter {
         Counter::ShardRemats,
         Counter::SaveShardsWritten,
         Counter::SaveNs,
+        Counter::InternHits,
+        Counter::InternMisses,
+        Counter::ColMaterializations,
     ];
 
     pub fn idx(self) -> usize {
@@ -113,6 +124,9 @@ impl Counter {
             Counter::ShardRemats => "shard_remats",
             Counter::SaveShardsWritten => "save_shards_written",
             Counter::SaveNs => "save_ns",
+            Counter::InternHits => "intern_hits",
+            Counter::InternMisses => "intern_misses",
+            Counter::ColMaterializations => "col_materializations",
         }
     }
 }

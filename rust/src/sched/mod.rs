@@ -29,6 +29,14 @@
 //!   byte-identical event log ([`SimScheduler::timeline`]) and therefore
 //!   byte-identical TSDB contents downstream; ties are broken by a
 //!   monotone sequence number, never by iteration order of a hash map;
+//!   fleet-scale drivers can turn the log's *formatting* off
+//!   ([`SimScheduler::set_timeline`]) without touching dispatch order;
+//! * **interned hot state** — nodes resolve to a dense index and
+//!   fair-share owners to dense ids once at submit
+//!   ([`SimScheduler::submit_at`] also defers arrivals for open-loop
+//!   workloads), so the per-event path runs on vector reads with no
+//!   hostname hashing or owner-string probes (see the memory-layout
+//!   notes on [`SimScheduler`]);
 //! * **conservative, timelimit-aware backfill** (on by default,
 //!   [`SimScheduler::set_backfill`]) — when the head-of-queue job of a
 //!   node cannot start (its time limit crosses a maintenance window), the
@@ -54,7 +62,7 @@
 
 use crate::cluster::nodes::NodeModel;
 use std::cmp::{Ordering, Reverse};
-use std::collections::{BTreeMap, BinaryHeap};
+use std::collections::{BinaryHeap, HashMap};
 
 /// Outcome a job payload reports back.
 #[derive(Debug, Clone)]
@@ -148,6 +156,11 @@ pub struct SimJob {
     pub backfilled: bool,
     /// Submission order (dispatch tie-break).
     seq: u64,
+    /// Position of `spec.nodelist` in the scheduler's sorted host index
+    /// (resolved once at submit; the event hot path never re-hashes it).
+    node_idx: usize,
+    /// Interned `spec.owner` (dense id into the fair-share ledger).
+    owner_id: u32,
     payload: Option<Payload>,
     /// Filled at start: the finish event applies these.
     planned_end: f64,
@@ -225,19 +238,32 @@ impl Ord for Event {
 const BASE_JOB_ID: u64 = 1000;
 
 /// The event-driven cluster scheduler: one simulated clock, all nodes.
+///
+/// # Memory layout
+///
+/// Every per-node table (`free_slots`, `waiting`, `windows`,
+/// `pending_wake`, `models`) is a dense vector indexed by the node's
+/// position in the sorted `hosts` index, and each job resolves its node
+/// exactly once at submit; the per-event hot path (arrival → dispatch →
+/// finish) never hashes or clones a hostname. Fair-share owners are
+/// interned the same way: `SubmitSpec::owner` strings become dense ids
+/// at submit, so the dispatch comparator reads `usage[owner_id]`
+/// instead of probing a map keyed by `String` for every candidate pair.
 pub struct SimScheduler {
-    nodes: BTreeMap<String, NodeModel>,
-    /// Stable node index (sorted hostnames) for `Wake` events.
+    /// Stable node index: sorted hostnames. Every per-node vector below
+    /// is aligned with it.
     hosts: Vec<String>,
-    /// Free run slots per node.
-    free_slots: BTreeMap<String, usize>,
+    /// Node models, aligned with `hosts`.
+    models: Vec<NodeModel>,
+    /// Free run slots per node (by host index).
+    free_slots: Vec<usize>,
     /// Jobs waiting for a slot, per node (indices into `jobs`).
-    waiting: BTreeMap<String, Vec<usize>>,
+    waiting: Vec<Vec<usize>>,
     /// Maintenance windows per node, `[from, until)`, sorted by `from`;
     /// `until` may be `f64::INFINITY` (open-ended drain).
-    windows: BTreeMap<String, Vec<(f64, f64)>>,
+    windows: Vec<Vec<(f64, f64)>>,
     /// Earliest still-pending `Wake` per node (event-pileup dedup).
-    pending_wake: BTreeMap<String, f64>,
+    pending_wake: Vec<Option<f64>>,
     /// Timelimit-aware conservative backfill (on by default).
     backfill: bool,
     jobs: Vec<SimJob>,
@@ -245,10 +271,18 @@ pub struct SimScheduler {
     clock: f64,
     event_seq: u64,
     next_id: u64,
-    /// Fair-share ledger: simulated node-seconds consumed per owner.
-    usage: BTreeMap<String, f64>,
+    /// Owner interner: fair-share owner → dense id into `usage`.
+    owner_ids: HashMap<String, u32>,
+    /// Fair-share ledger: simulated node-seconds consumed per owner id.
+    usage: Vec<f64>,
     completions: Vec<Completion>,
     timeline: Vec<String>,
+    /// `false` skips all timeline formatting — fleet-scale benchmark
+    /// runs keep the event engine hot without building millions of
+    /// log strings ([`SimScheduler::set_timeline`]).
+    timeline_on: bool,
+    /// High-water mark of the event-queue depth.
+    peak_queue: usize,
 }
 
 impl SimScheduler {
@@ -262,39 +296,47 @@ impl SimScheduler {
     /// every node (shared/oversubscribed partitions).
     pub fn with_slots(nodes: Vec<NodeModel>, slots_per_node: usize) -> SimScheduler {
         let slots = slots_per_node.max(1);
-        let free_slots = nodes.iter().map(|n| (n.host.to_string(), slots)).collect();
-        let nodes: BTreeMap<String, NodeModel> =
-            nodes.into_iter().map(|n| (n.host.to_string(), n)).collect();
+        let mut models = nodes;
+        models.sort_by(|a, b| a.host.cmp(b.host));
+        let hosts: Vec<String> = models.iter().map(|n| n.host.to_string()).collect();
+        let n = hosts.len();
         SimScheduler {
-            hosts: nodes.keys().cloned().collect(),
-            nodes,
-            free_slots,
-            waiting: BTreeMap::new(),
-            windows: BTreeMap::new(),
-            pending_wake: BTreeMap::new(),
+            hosts,
+            models,
+            free_slots: vec![slots; n],
+            waiting: vec![Vec::new(); n],
+            windows: vec![Vec::new(); n],
+            pending_wake: vec![None; n],
             backfill: true,
             jobs: Vec::new(),
             queue: BinaryHeap::new(),
             clock: 0.0,
             event_seq: 0,
             next_id: BASE_JOB_ID,
-            usage: BTreeMap::new(),
+            owner_ids: HashMap::new(),
+            usage: Vec::new(),
             completions: Vec::new(),
             timeline: Vec::new(),
+            timeline_on: true,
+            peak_queue: 0,
         }
     }
 
     pub fn now(&self) -> f64 {
         self.clock
     }
+    /// Position of `host` in the sorted node index.
+    fn host_idx(&self, host: &str) -> Option<usize> {
+        self.hosts.binary_search_by(|h| h.as_str().cmp(host)).ok()
+    }
     pub fn nodes(&self) -> impl Iterator<Item = &NodeModel> {
-        self.nodes.values()
+        self.models.iter()
     }
     pub fn node(&self, host: &str) -> Option<&NodeModel> {
-        self.nodes.get(host)
+        self.host_idx(host).map(|i| &self.models[i])
     }
     pub fn has_node(&self, host: &str) -> bool {
-        self.nodes.contains_key(host)
+        self.host_idx(host).is_some()
     }
 
     fn idx(&self, id: u64) -> Option<usize> {
@@ -336,7 +378,35 @@ impl SimScheduler {
 
     /// Fair-share ledger: node-seconds consumed per owner so far.
     pub fn owner_usage(&self, owner: &str) -> f64 {
-        self.usage.get(owner).copied().unwrap_or(0.0)
+        self.owner_ids
+            .get(owner)
+            .map(|&id| self.usage[id as usize])
+            .unwrap_or(0.0)
+    }
+
+    /// Number of distinct fair-share owners seen so far.
+    pub fn owner_count(&self) -> usize {
+        self.usage.len()
+    }
+
+    /// Enable/disable the human-readable event log (on by default).
+    /// Fleet-scale benchmark drivers turn it off: a million jobs would
+    /// otherwise spend most of their wall-clock formatting timeline
+    /// strings nobody reads. Dispatch order, completions and all public
+    /// state are unaffected — only [`SimScheduler::timeline`] comes back
+    /// empty for the disabled stretch.
+    pub fn set_timeline(&mut self, on: bool) {
+        self.timeline_on = on;
+    }
+    pub fn timeline_enabled(&self) -> bool {
+        self.timeline_on
+    }
+
+    /// High-water mark of the event-queue depth (submissions, finishes
+    /// and wakes pending at once) — the capacity figure fleet-scale
+    /// benchmarks report.
+    pub fn peak_queue_depth(&self) -> usize {
+        self.peak_queue
     }
 
     /// Enable/disable conservative backfill (on by default). Off, the
@@ -351,7 +421,9 @@ impl SimScheduler {
 
     /// Maintenance windows of `host`, `[from, until)` sorted by start.
     pub fn maintenance_windows(&self, host: &str) -> &[(f64, f64)] {
-        self.windows.get(host).map(|w| w.as_slice()).unwrap_or(&[])
+        self.host_idx(host)
+            .map(|i| self.windows[i].as_slice())
+            .unwrap_or(&[])
     }
 
     /// All hostnames, sorted (the stable node index).
@@ -364,21 +436,23 @@ impl SimScheduler {
     /// into the window starts in front of it. Jobs already running when
     /// the window opens finish normally.
     pub fn maintenance(&mut self, host: &str, from: f64, until: f64) -> Result<(), String> {
-        if !self.nodes.contains_key(host) {
+        let Some(h) = self.host_idx(host) else {
             return Err(format!("scontrol: invalid node `{host}` (unknown host)"));
-        }
+        };
         if !(from < until) {
             return Err(format!(
                 "scontrol: maintenance window on `{host}` needs from < until (got {from}..{until})"
             ));
         }
-        let ws = self.windows.entry(host.to_string()).or_default();
+        let ws = &mut self.windows[h];
         ws.push((from, until));
         ws.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
-        self.timeline.push(format!(
-            "t={:>12.3} drain  {host} [{from:.3}..{until:.3})",
-            self.clock
-        ));
+        if self.timeline_on {
+            self.timeline.push(format!(
+                "t={:>12.3} drain  {host} [{from:.3}..{until:.3})",
+                self.clock
+            ));
+        }
         Ok(())
     }
 
@@ -393,10 +467,13 @@ impl SimScheduler {
     /// drain window of `host` at time `at` and re-arm dispatch for the
     /// resume edge.
     pub fn resume(&mut self, host: &str, at: f64) -> Result<(), String> {
-        let Some(ws) = self.windows.get_mut(host) else {
+        let Some(h) = self.host_idx(host) else {
             return Err(format!("scontrol: node `{host}` has no drain window"));
         };
-        match ws.iter_mut().rev().find(|w| w.1.is_infinite()) {
+        if self.windows[h].is_empty() {
+            return Err(format!("scontrol: node `{host}` has no drain window"));
+        }
+        match self.windows[h].iter_mut().rev().find(|w| w.1.is_infinite()) {
             Some(w) if at > w.0 => w.1 = at,
             Some(w) => {
                 return Err(format!(
@@ -406,11 +483,13 @@ impl SimScheduler {
             }
             None => return Err(format!("scontrol: node `{host}` has no open drain window")),
         }
-        self.timeline
-            .push(format!("t={:>12.3} resume {host} at {at:.3}", self.clock));
+        if self.timeline_on {
+            self.timeline
+                .push(format!("t={:>12.3} resume {host} at {at:.3}", self.clock));
+        }
         // waiting jobs may have been stranded behind the open-ended
         // window (an infinite shadow schedules no wake) — re-arm dispatch
-        self.schedule_wake(host, at.max(self.clock));
+        self.schedule_wake(h, at.max(self.clock));
         Ok(())
     }
 
@@ -420,40 +499,44 @@ impl SimScheduler {
     /// (unknown at dispatch time) actual duration, decides crossing.
     /// `f64::INFINITY` when an open-ended drain blocks forever.
     pub fn earliest_start(&self, host: &str, t: f64, limit_secs: f64) -> f64 {
+        match self.host_idx(host) {
+            Some(h) => self.earliest_start_at(h, t, limit_secs),
+            None => t,
+        }
+    }
+
+    /// [`SimScheduler::earliest_start`] by host index — the dispatch
+    /// hot path, no hostname lookup.
+    fn earliest_start_at(&self, h: usize, t: f64, limit_secs: f64) -> f64 {
         let mut start = t;
-        if let Some(ws) = self.windows.get(host) {
-            for &(from, until) in ws {
-                if start >= until {
-                    continue;
-                }
-                if start + limit_secs <= from {
-                    break;
-                }
-                start = until;
-                if !start.is_finite() {
-                    return f64::INFINITY;
-                }
+        for &(from, until) in &self.windows[h] {
+            if start >= until {
+                continue;
+            }
+            if start + limit_secs <= from {
+                break;
+            }
+            start = until;
+            if !start.is_finite() {
+                return f64::INFINITY;
             }
         }
         start
     }
 
-    /// Schedule a `Wake` for `host` at `at` unless an earlier one is
-    /// already pending (keeps long queues from piling up wake events).
-    fn schedule_wake(&mut self, host: &str, at: f64) {
+    /// Schedule a `Wake` for host index `h` at `at` unless an earlier one
+    /// is already pending (keeps long queues from piling up wake events).
+    fn schedule_wake(&mut self, h: usize, at: f64) {
         if !at.is_finite() {
             return;
         }
-        if let Some(&t) = self.pending_wake.get(host) {
+        if let Some(t) = self.pending_wake[h] {
             if t > self.clock && t <= at {
                 return;
             }
         }
-        let Ok(idx) = self.hosts.binary_search_by(|h| h.as_str().cmp(host)) else {
-            return;
-        };
-        self.pending_wake.insert(host.to_string(), at);
-        self.push_event(at, EventKind::Wake(idx));
+        self.pending_wake[h] = Some(at);
+        self.push_event(at, EventKind::Wake(h));
     }
 
     fn bump_seq(&mut self) -> u64 {
@@ -465,42 +548,70 @@ impl SimScheduler {
     fn push_event(&mut self, time: f64, kind: EventKind) {
         let seq = self.bump_seq();
         self.queue.push(Reverse(Event { time, seq, kind }));
+        if self.queue.len() > self.peak_queue {
+            self.peak_queue = self.queue.len();
+        }
     }
 
     /// Queue a job. Errors if the nodelist names an unknown host (sbatch
     /// would reject it). The job arrives at the current simulated time and
     /// starts when a slot on its node frees up and the dispatcher picks it.
     pub fn submit(&mut self, spec: SubmitSpec, payload: Payload) -> Result<u64, String> {
-        if !self.nodes.contains_key(&spec.nodelist) {
+        let now = self.clock;
+        self.submit_at(spec, payload, now)
+    }
+
+    /// Queue a job whose **arrival** is deferred to simulated time `at`
+    /// (clamped to the current clock): the open-loop submission model
+    /// fleet-scale workloads use — a whole day of push events goes onto
+    /// the event queue up front and the clock sweeps through them,
+    /// instead of every job arriving at t=0 and flooding one dispatch.
+    /// `submit_time` records the arrival instant.
+    pub fn submit_at(&mut self, spec: SubmitSpec, payload: Payload, at: f64) -> Result<u64, String> {
+        let Some(node_idx) = self.host_idx(&spec.nodelist) else {
             return Err(format!(
                 "sbatch: invalid nodelist `{}` (unknown host)",
                 spec.nodelist
             ));
-        }
+        };
+        let at = at.max(self.clock);
+        let owner_id = match self.owner_ids.get(spec.owner.as_str()) {
+            Some(&id) => id,
+            None => {
+                let id = self.usage.len() as u32;
+                self.owner_ids.insert(spec.owner.clone(), id);
+                self.usage.push(0.0);
+                id
+            }
+        };
         let id = self.next_id;
         self.next_id += 1;
         let idx = self.jobs.len();
         let seq = self.bump_seq();
-        self.timeline.push(format!(
-            "t={:>12.3} submit {} `{}` -> {} owner={} prio={} batch={}",
-            self.clock, id, spec.name, spec.nodelist, spec.owner, spec.priority, spec.batch
-        ));
+        if self.timeline_on {
+            self.timeline.push(format!(
+                "t={:>12.3} submit {} `{}` -> {} owner={} prio={} batch={}",
+                at, id, spec.name, spec.nodelist, spec.owner, spec.priority, spec.batch
+            ));
+        }
         self.jobs.push(SimJob {
             id,
             spec,
             state: JobState::Pending,
-            submit_time: self.clock,
+            submit_time: at,
             start_time: None,
             end_time: None,
             log: String::new(),
             backfilled: false,
             seq,
+            node_idx,
+            owner_id,
             payload: Some(payload),
             planned_end: 0.0,
             planned_state: JobState::Completed,
             stdout: String::new(),
         });
-        self.push_event(self.clock, EventKind::Arrival(idx));
+        self.push_event(at, EventKind::Arrival(idx));
         Ok(id)
     }
 
@@ -510,8 +621,10 @@ impl SimScheduler {
             if self.jobs[i].state == JobState::Pending {
                 self.jobs[i].state = JobState::Cancelled;
                 self.jobs[i].payload = None;
-                self.timeline
-                    .push(format!("t={:>12.3} cancel {}", self.clock, id));
+                if self.timeline_on {
+                    self.timeline
+                        .push(format!("t={:>12.3} cancel {}", self.clock, id));
+                }
                 return true;
             }
         }
@@ -529,20 +642,18 @@ impl SimScheduler {
             EventKind::Arrival(i) => {
                 // cancelled before arrival: drop silently
                 if self.jobs[i].state == JobState::Pending {
-                    let host = self.jobs[i].spec.nodelist.clone();
-                    self.waiting.entry(host.clone()).or_default().push(i);
-                    self.dispatch(&host);
+                    let h = self.jobs[i].node_idx;
+                    self.waiting[h].push(i);
+                    self.dispatch(h);
                 }
             }
             EventKind::Finish(i) => {
                 self.finish_job(i);
-                let host = self.jobs[i].spec.nodelist.clone();
-                self.dispatch(&host);
+                self.dispatch(self.jobs[i].node_idx);
             }
             EventKind::Wake(h) => {
-                let host = self.hosts[h].clone();
-                self.pending_wake.remove(&host);
-                self.dispatch(&host);
+                self.pending_wake[h] = None;
+                self.dispatch(h);
             }
         }
         Some(ev.time)
@@ -593,9 +704,9 @@ impl SimScheduler {
 
     /// Start job `i` on its (free-slot-checked) node at the current clock.
     fn start_job(&mut self, i: usize, backfilled: bool) {
-        let host = self.jobs[i].spec.nodelist.clone();
-        *self.free_slots.get_mut(&host).expect("known host") -= 1;
-        let node = self.nodes[&host].clone();
+        let h = self.jobs[i].node_idx;
+        self.free_slots[h] -= 1;
+        let node = self.models[h].clone();
         let start = self.clock;
         let payload = self.jobs[i].payload.take().expect("pending job has payload");
         let outcome = payload(&node, start);
@@ -616,13 +727,15 @@ impl SimScheduler {
             j.planned_state = state;
             j.stdout = outcome.stdout;
         }
-        self.timeline.push(format!(
-            "t={:>12.3} {} {} on {}",
-            start,
-            if backfilled { "bkfill" } else { "start " },
-            self.jobs[i].id,
-            host
-        ));
+        if self.timeline_on {
+            self.timeline.push(format!(
+                "t={:>12.3} {} {} on {}",
+                start,
+                if backfilled { "bkfill" } else { "start " },
+                self.jobs[i].id,
+                self.hosts[h]
+            ));
+        }
         self.push_event(start + dur, EventKind::Finish(i));
     }
 
@@ -631,7 +744,8 @@ impl SimScheduler {
         let end = self.jobs[i].planned_end;
         let state = self.jobs[i].planned_state;
         let start = self.jobs[i].start_time.unwrap_or(end);
-        let host = self.jobs[i].spec.nodelist.clone();
+        let h = self.jobs[i].node_idx;
+        let owner_id = self.jobs[i].owner_id;
         let owner = self.jobs[i].spec.owner.clone();
         let stdout = std::mem::take(&mut self.jobs[i].stdout);
         let backfilled = self.jobs[i].backfilled;
@@ -662,18 +776,20 @@ impl SimScheduler {
                 }
             );
         }
-        *self.usage.entry(owner.clone()).or_insert(0.0) += end - start;
-        *self.free_slots.get_mut(&host).expect("known host") += 1;
-        self.timeline.push(format!(
-            "t={:>12.3} finish {} state={:?}",
-            end, id, state
-        ));
+        self.usage[owner_id as usize] += end - start;
+        self.free_slots[h] += 1;
+        if self.timeline_on {
+            self.timeline.push(format!(
+                "t={:>12.3} finish {} state={:?}",
+                end, id, state
+            ));
+        }
         self.completions.push(Completion {
             job_id: id,
             batch,
             owner,
             name,
-            node: host,
+            node: self.hosts[h].clone(),
             state,
             start,
             end,
@@ -681,12 +797,11 @@ impl SimScheduler {
         });
     }
 
-    /// Drop `idx` from `host`'s waiting list (it is about to start).
-    fn remove_waiting(&mut self, host: &str, idx: usize) {
-        if let Some(list) = self.waiting.get_mut(host) {
-            if let Some(pos) = list.iter().position(|&i| i == idx) {
-                list.remove(pos);
-            }
+    /// Drop `idx` from host `h`'s waiting list (it is about to start).
+    fn remove_waiting(&mut self, h: usize, idx: usize) {
+        let list = &mut self.waiting[h];
+        if let Some(pos) = list.iter().position(|&i| i == idx) {
+            list.remove(pos);
         }
     }
 
@@ -703,7 +818,7 @@ impl SimScheduler {
     /// slotted into the gap. The conservative end-by-limit rule means a
     /// backfilled job can never delay the shadow job, even if it runs all
     /// the way into its timeout.
-    fn dispatch(&mut self, host: &str) {
+    fn dispatch(&mut self, h: usize) {
         // prune + order the waiting queue once: priority desc, fair-share
         // usage asc, submission order asc (the PR-2 comparator). All three
         // keys are invariant within one dispatch call — the clock does not
@@ -712,9 +827,7 @@ impl SimScheduler {
         let mut order: Vec<usize> = {
             let jobs = &self.jobs;
             let usage = &self.usage;
-            let Some(list) = self.waiting.get_mut(host) else {
-                return;
-            };
+            let list = &mut self.waiting[h];
             list.retain(|&i| jobs[i].state == JobState::Pending);
             if list.is_empty() {
                 return;
@@ -726,8 +839,10 @@ impl SimScheduler {
                     .priority
                     .cmp(&ja.spec.priority)
                     .then_with(|| {
-                        let ua = usage.get(&ja.spec.owner).copied().unwrap_or(0.0);
-                        let ub = usage.get(&jb.spec.owner).copied().unwrap_or(0.0);
+                        // interned owners: a dense-vector read per key,
+                        // not a String-keyed map probe per comparison
+                        let ua = usage[ja.owner_id as usize];
+                        let ub = usage[jb.owner_id as usize];
                         ua.total_cmp(&ub)
                     })
                     .then(ja.seq.cmp(&jb.seq))
@@ -736,15 +851,15 @@ impl SimScheduler {
         };
         let mut wake_scheduled = false;
         while !order.is_empty() {
-            if self.free_slots.get(host).copied().unwrap_or(0) == 0 {
+            if self.free_slots[h] == 0 {
                 return;
             }
             let now = self.clock;
             let head = order[0];
             let head_limit = self.jobs[head].spec.timelimit_min * 60.0;
-            let shadow = self.earliest_start(host, now, head_limit);
+            let shadow = self.earliest_start_at(h, now, head_limit);
             if shadow <= now {
-                self.remove_waiting(host, head);
+                self.remove_waiting(h, head);
                 self.start_job(head, false);
                 order.remove(0);
                 continue;
@@ -754,7 +869,7 @@ impl SimScheduler {
             // edge re-arms dispatch instead). Only the final, blocked head
             // ever reaches this point, so one wake per call suffices.
             if !wake_scheduled {
-                self.schedule_wake(host, shadow);
+                self.schedule_wake(h, shadow);
                 wake_scheduled = true;
             }
             if !self.backfill {
@@ -765,12 +880,12 @@ impl SimScheduler {
             // window may use the gap
             let started = order.iter().skip(1).position(|&cand| {
                 let limit = self.jobs[cand].spec.timelimit_min * 60.0;
-                now + limit <= shadow && self.earliest_start(host, now, limit) <= now
+                now + limit <= shadow && self.earliest_start_at(h, now, limit) <= now
             });
             match started {
                 Some(pos) => {
                     let cand = order.remove(pos + 1);
-                    self.remove_waiting(host, cand);
+                    self.remove_waiting(h, cand);
                     self.start_job(cand, true);
                 }
                 None => return,
@@ -1142,6 +1257,89 @@ mod tests {
         assert!(t1.contains("drain"));
         assert!(t1.contains("bkfill"), "gap-heavy roster must backfill");
         assert_eq!(t1, t2, "windows + backfill must replay byte-identically");
+    }
+
+    #[test]
+    fn submit_at_defers_arrival_open_loop() {
+        let mut s = sched();
+        // arrivals at t=0, 100, 200 — the event queue sweeps through
+        // them; nothing runs before its arrival instant
+        let a = s.submit_at(SubmitSpec::new("a", "icx36"), job(10.0), 0.0).unwrap();
+        let b = s.submit_at(SubmitSpec::new("b", "icx36"), job(10.0), 100.0).unwrap();
+        let c = s.submit_at(SubmitSpec::new("c", "icx36"), job(10.0), 200.0).unwrap();
+        s.run_until_idle();
+        assert_eq!(s.job(a).unwrap().submit_time, 0.0);
+        assert_eq!(s.job(b).unwrap().submit_time, 100.0);
+        assert_eq!(s.job(b).unwrap().start_time, Some(100.0));
+        assert_eq!(s.job(c).unwrap().start_time, Some(200.0));
+        assert_eq!(s.now(), 210.0);
+        // a past arrival clamps to the clock instead of rewinding it
+        let d = s.submit_at(SubmitSpec::new("d", "icx36"), job(1.0), 5.0).unwrap();
+        s.run_until_idle();
+        assert_eq!(s.job(d).unwrap().submit_time, 210.0);
+    }
+
+    #[test]
+    fn submit_at_now_matches_submit_byte_for_byte() {
+        let build = |deferred: bool| {
+            let mut s = sched();
+            for i in 0..10 {
+                let spec = SubmitSpec::new(&format!("j{i}"), "icx36")
+                    .owner(if i % 2 == 0 { "a" } else { "b" });
+                if deferred {
+                    s.submit_at(spec, job(2.0 + i as f64), 0.0).unwrap();
+                } else {
+                    s.submit(spec, job(2.0 + i as f64)).unwrap();
+                }
+            }
+            s.run_until_idle();
+            s.timeline()
+        };
+        assert_eq!(build(true), build(false));
+    }
+
+    #[test]
+    fn timeline_off_keeps_dispatch_identical() {
+        let build = |tl: bool| {
+            let mut s = sched();
+            s.set_timeline(tl);
+            s.maintenance("icx36", 40.0, 400.0).unwrap();
+            for i in 0..16 {
+                let host = if i % 3 == 0 { "icx36" } else { "rome1" };
+                s.submit(
+                    SubmitSpec::new(&format!("j{i}"), host)
+                        .owner(if i % 2 == 0 { "a" } else { "b" })
+                        .priority((i % 4) as i64)
+                        .timelimit(0.5 + (i % 3) as f64),
+                    job(3.0 + (i % 5) as f64),
+                )
+                .unwrap();
+            }
+            s.run_until_idle();
+            let mut ends: Vec<(u64, Option<f64>)> =
+                s.jobs().map(|j| (j.id, j.end_time)).collect();
+            ends.sort_by(|a, b| a.0.cmp(&b.0));
+            (ends, s.timeline().len())
+        };
+        let (on, tl_on) = build(true);
+        let (off, tl_off) = build(false);
+        assert_eq!(on, off, "timeline gating must not change the schedule");
+        assert!(tl_on > 0 && tl_off == 0);
+    }
+
+    #[test]
+    fn owner_interning_and_peak_queue_are_visible() {
+        let mut s = sched();
+        assert_eq!(s.owner_count(), 0);
+        s.submit(SubmitSpec::new("a", "icx36").owner("x"), job(1.0)).unwrap();
+        s.submit(SubmitSpec::new("b", "icx36").owner("y"), job(1.0)).unwrap();
+        s.submit(SubmitSpec::new("c", "rome1").owner("x"), job(1.0)).unwrap();
+        assert_eq!(s.owner_count(), 2, "owners deduplicate at submit");
+        s.run_until_idle();
+        assert!(s.peak_queue_depth() >= 3, "three arrivals were queued at once");
+        assert_eq!(s.owner_usage("x"), 2.0);
+        assert_eq!(s.owner_usage("y"), 1.0);
+        assert_eq!(s.owner_usage("nobody"), 0.0);
     }
 
     #[test]

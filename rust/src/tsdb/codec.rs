@@ -1,0 +1,278 @@
+//! # tsdb::codec — fast float/int codecs for the line-protocol layer
+//!
+//! Every stored point crosses the wire format twice: once formatted
+//! (save/export) and once parsed (load/ingest). The generic stdlib
+//! paths (`format!("{}")`, `str::parse`) are correct but carry the full
+//! Grisu/Dragon rendering and arbitrary-precision parsing machinery on
+//! every call. This module supplies the hot-path codecs with a hard
+//! compatibility contract:
+//!
+//! > **Byte-identical to the stdlib paths on every input.** The fast
+//! > paths only fire where the result is *provably* the one the stdlib
+//! > would produce; everything else falls through to the stdlib. The
+//! > `codec_prop` suite fuzzes the equivalence.
+//!
+//! Why this shape (instead of a full Grisu/Eisel-Lemire port):
+//!
+//! * **Formatting** ([`fmt_f64`]): benchmark fields are overwhelmingly
+//!   "integral-valued doubles" (counts, byte totals, round durations).
+//!   For finite integral `|v| < 2^53` the shortest round-trip decimal
+//!   *is* the exact integer (any shorter positional decimal would be a
+//!   multiple of 10 at distance ≥ 1 > ulp/2, and Rust's `Display`
+//!   renders shortest-digits positionally), so an itoa-style digit loop
+//!   is exact. Non-integral values use `Display` itself — identical by
+//!   definition, and rarer.
+//! * **Parsing** ([`parse_f64`]): the Clinger fast path. A mantissa
+//!   that fits `f64` exactly (`< 2^53`) scaled by an exactly
+//!   representable power of ten (`|exp10| ≤ 22`) takes a *single*
+//!   correctly-rounded multiply/divide — which is the correctly rounded
+//!   decimal value, i.e. exactly what the stdlib's correctly rounded
+//!   parser returns. Longer mantissas, exponent syntax, `inf`/`NaN`
+//!   spellings and malformed input all delegate, so error *values*
+//!   (and acceptance) match the stdlib bit for bit.
+//!
+//! Integer codecs ([`fmt_i64`], [`parse_i64`]) follow the same pattern
+//! (≤ 18-digit fast path; overflow and odd spellings delegate).
+
+/// Append the decimal digits of `v` (itoa-style, no allocation beyond
+/// what `out` may grow by).
+#[inline]
+pub fn fmt_u64(mut v: u64, out: &mut String) {
+    let mut buf = [0u8; 20];
+    let mut i = buf.len();
+    loop {
+        i -= 1;
+        buf[i] = b'0' + (v % 10) as u8;
+        v /= 10;
+        if v == 0 {
+            break;
+        }
+    }
+    // digits are ASCII by construction
+    out.push_str(std::str::from_utf8(&buf[i..]).expect("ascii digits"));
+}
+
+/// Append `v` formatted exactly as `i64`'s `Display` would.
+#[inline]
+pub fn fmt_i64(v: i64, out: &mut String) {
+    if v < 0 {
+        out.push('-');
+        fmt_u64(v.unsigned_abs(), out);
+    } else {
+        fmt_u64(v as u64, out);
+    }
+}
+
+/// Largest double below which every integral value is exactly
+/// representable (2^53): the integral fast-path bound.
+const MAX_EXACT_INT: f64 = 9_007_199_254_740_992.0;
+
+/// Append `v` formatted **byte-identically** to `format!("{v}")`.
+///
+/// Fast path: finite integral `|v| < 2^53` renders through the integer
+/// digit loop (see the module docs for why that is exactly `Display`'s
+/// output). Everything else — fractional values, huge magnitudes,
+/// subnormals, `NaN`, infinities — delegates to `Display` itself.
+pub fn fmt_f64(v: f64, out: &mut String) {
+    if v.is_nan() {
+        out.push_str("NaN");
+        return;
+    }
+    if v.is_infinite() {
+        out.push_str(if v.is_sign_negative() { "-inf" } else { "inf" });
+        return;
+    }
+    // `-0.0 < 0.0` is false: split on the sign bit so "-0" survives
+    let a = if v.is_sign_negative() {
+        out.push('-');
+        -v
+    } else {
+        v
+    };
+    if a < MAX_EXACT_INT && a == a.trunc() {
+        fmt_u64(a as u64, out);
+    } else {
+        use std::fmt::Write as _;
+        let _ = write!(out, "{a}");
+    }
+}
+
+/// Exact powers of ten: every entry is exactly representable in `f64`
+/// (10^22 = 2^22 · 5^22, and 5^22 < 2^53), which is what makes the
+/// Clinger one-operation scaling correctly rounded.
+const POW10: [f64; 23] = [
+    1e0, 1e1, 1e2, 1e3, 1e4, 1e5, 1e6, 1e7, 1e8, 1e9, 1e10, 1e11, 1e12, 1e13, 1e14, 1e15, 1e16,
+    1e17, 1e18, 1e19, 1e20, 1e21, 1e22,
+];
+
+/// Mantissas below 2^53 convert to `f64` without rounding.
+const MAX_EXACT_MANTISSA: u64 = 1 << 53;
+
+/// Parse `s` with results (including rejections) **identical to
+/// `s.parse::<f64>()`**. Plain `[-]ddd[.ddd]` decimals within the
+/// Clinger window parse in one pass; anything else — exponents, inf/nan
+/// spellings, a leading `+`, too many digits — delegates to the stdlib,
+/// so acceptance and error values cannot diverge.
+pub fn parse_f64(s: &str) -> Result<f64, std::num::ParseFloatError> {
+    let b = s.as_bytes();
+    let mut i = 0usize;
+    let neg = match b.first() {
+        Some(b'-') => {
+            i = 1;
+            true
+        }
+        _ => false,
+    };
+    let mut mant: u64 = 0;
+    let mut digits = 0usize;
+    let mut exp10: i32 = 0;
+    let mut seen_digit = false;
+    while i < b.len() && b[i].is_ascii_digit() {
+        if digits == 19 {
+            return s.parse(); // could overflow the u64 accumulator
+        }
+        mant = mant * 10 + (b[i] - b'0') as u64;
+        digits += 1;
+        seen_digit = true;
+        i += 1;
+    }
+    if i < b.len() && b[i] == b'.' {
+        i += 1;
+        while i < b.len() && b[i].is_ascii_digit() {
+            if digits == 19 {
+                return s.parse();
+            }
+            mant = mant * 10 + (b[i] - b'0') as u64;
+            digits += 1;
+            exp10 -= 1;
+            seen_digit = true;
+            i += 1;
+        }
+    }
+    if !seen_digit || i != b.len() {
+        // exponent syntax, inf/NaN, stray characters, empty input:
+        // let the stdlib decide (and produce its exact error)
+        return s.parse();
+    }
+    if mant >= MAX_EXACT_MANTISSA || !(-22..=22).contains(&exp10) {
+        return s.parse();
+    }
+    // `mant` is exact; one multiply/divide by an exact power of ten is
+    // one correctly-rounded operation on the exact decimal value
+    let mut x = mant as f64;
+    if exp10 > 0 {
+        x *= POW10[exp10 as usize];
+    } else if exp10 < 0 {
+        x /= POW10[(-exp10) as usize];
+    }
+    Ok(if neg { -x } else { x })
+}
+
+/// Parse `s` with results identical to `s.parse::<i64>()`. Up to 18
+/// digits cannot overflow; longer inputs (and `+`-prefixed or malformed
+/// ones) delegate to the stdlib for exact acceptance/error parity.
+pub fn parse_i64(s: &str) -> Result<i64, std::num::ParseIntError> {
+    let b = s.as_bytes();
+    let (neg, rest) = match b.first() {
+        Some(b'-') => (true, &b[1..]),
+        _ => (false, b),
+    };
+    if rest.is_empty() || rest.len() > 18 {
+        return s.parse();
+    }
+    let mut v: i64 = 0;
+    for &c in rest {
+        if !c.is_ascii_digit() {
+            return s.parse();
+        }
+        v = v * 10 + (c - b'0') as i64;
+    }
+    Ok(if neg { -v } else { v })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fmt(v: f64) -> String {
+        let mut s = String::new();
+        fmt_f64(v, &mut s);
+        s
+    }
+
+    #[test]
+    fn fmt_matches_display_on_fixtures() {
+        for v in [
+            0.0,
+            -0.0,
+            1.0,
+            -1.0,
+            42.0,
+            1e15,
+            9_007_199_254_740_991.0, // 2^53 - 1: last exact integer
+            9_007_199_254_740_992.0, // 2^53: falls through to Display
+            0.1,
+            -0.30000000000000004,
+            1.7976931348623157e308,
+            5e-324,
+            -1234567890.123456,
+            f64::NAN,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            2.5e-10,
+        ] {
+            assert_eq!(fmt(v), format!("{v}"), "value {v:e}");
+        }
+    }
+
+    #[test]
+    fn parse_matches_stdlib_on_fixtures() {
+        for s in [
+            "0", "-0", "1", "-1", "42", "0.5", "-0.5", "1.", ".5", "123.456",
+            "9007199254740991", "9007199254740992", "1e3", "-2.5E-4", "inf", "-inf", "NaN",
+            "nan", "+1", "", "abc", "1.2.3", "0.000000000000000000000001", "5e-324",
+            "1797693134862315700000", "--1", "1-",
+        ] {
+            match (parse_f64(s), s.parse::<f64>()) {
+                (Ok(a), Ok(b)) => {
+                    assert_eq!(a.to_bits(), b.to_bits(), "input {s:?}");
+                }
+                (Err(_), Err(_)) => {}
+                (a, b) => panic!("input {s:?}: fast {a:?} vs stdlib {b:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn parse_i64_matches_stdlib_on_fixtures() {
+        for s in [
+            "0", "-0", "1", "-1", "123456789", "-987654321", "999999999999999999",
+            "9223372036854775807", "-9223372036854775808", "9223372036854775808", "+5", "",
+            "12a", "-", "007",
+        ] {
+            match (parse_i64(s), s.parse::<i64>()) {
+                (Ok(a), Ok(b)) => assert_eq!(a, b, "input {s:?}"),
+                (Err(_), Err(_)) => {}
+                (a, b) => panic!("input {s:?}: fast {a:?} vs stdlib {b:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn fmt_i64_matches_display() {
+        for v in [0i64, 1, -1, 42, -42, i64::MAX, i64::MIN, 1_000_000_000] {
+            let mut s = String::new();
+            fmt_i64(v, &mut s);
+            assert_eq!(s, v.to_string());
+        }
+    }
+
+    #[test]
+    fn roundtrip_through_the_codec_is_lossless() {
+        for v in [0.1, -0.30000000000000004, 1.7976931348623157e308, 5e-324, 123456.0, -0.0] {
+            let s = fmt(v);
+            let back = parse_f64(&s).unwrap();
+            assert_eq!(back.to_bits(), v.to_bits(), "value {v:e} via {s:?}");
+        }
+    }
+}

@@ -1,0 +1,490 @@
+//! # tsdb::col — the interned, columnar shard body
+//!
+//! The storage rewrite behind "raw speed, round 2". A shard used to hold
+//! `Vec<Point>`: every ingested point carried an owned `String`
+//! measurement plus two `BTreeMap`s of owned `String` keys/values —
+//! ~10 allocations per point before any query ran, and the same strings
+//! ("node", "icx36", "mlups", …) re-allocated for every single point of
+//! a 200k-line upload. This module replaces that body with:
+//!
+//! * [`Interner`] — one per [`super::Db`], mapping tag keys/values,
+//!   field names and measurement names to `u32` symbols (and whole
+//!   key-sorted tag sets to a single `u32` tag-set id). Read-mostly:
+//!   a hit costs one `RwLock` read acquisition and a hash lookup, no
+//!   allocation. Symbol *ids* are assignment-ordered and therefore not
+//!   stable across runs — nothing persistent or ordered may depend on
+//!   them; every rendering/sorting decision goes through the resolved
+//!   strings.
+//! * [`Columns`] — a structure-of-arrays shard body: `ts` column,
+//!   tag-set id column, and a flat field plane (`field_syms` /
+//!   `field_vals` sliced by per-row end offsets). Per-point field *sets*
+//!   vary across series, so fields are row-grouped rather than stored as
+//!   per-field dense columns; within a row they are kept sorted by field
+//!   name string — the `BTreeMap` iteration order the wire format and
+//!   every downstream consumer already assume.
+//!
+//! The compatibility boundary is the **line-protocol codec**: parsing
+//! interns straight into `Columns` ([`parse_chunk`]), rendering walks
+//! `Columns` straight into escaped lp text ([`Columns::render_row`],
+//! byte-identical to [`super::Point::to_line`]), and the owned
+//! [`super::Point`] form is materialized lazily only where the public
+//! API hands out `&Point` ([`Columns::to_points`], cached per shard).
+
+use super::lp;
+use super::Point;
+use crate::obs::metrics as om;
+use crate::tsdb::codec;
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::sync::{Arc, RwLock};
+
+/// Per-database string/tag-set interner. Thread-safe (`RwLock`): the
+/// parallel parse workers intern concurrently; the double-checked write
+/// path keeps every distinct string allocated exactly once.
+#[derive(Debug, Default)]
+pub struct Interner {
+    inner: RwLock<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    syms: HashMap<Arc<str>, u32>,
+    pool: Vec<Arc<str>>,
+    tagsets: HashMap<Arc<[(u32, u32)]>, u32>,
+    tagset_pool: Vec<Arc<[(u32, u32)]>>,
+}
+
+/// Interner size summary (MEMORY_JSON in the bench report).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct InternerStats {
+    /// Distinct interned strings.
+    pub strings: usize,
+    /// Distinct interned tag sets.
+    pub tagsets: usize,
+    /// Approximate resident bytes (string bytes + table overhead).
+    pub approx_bytes: usize,
+}
+
+impl Interner {
+    /// Symbol of `s`, interning it on first sight.
+    pub fn intern(&self, s: &str) -> u32 {
+        if let Some(&id) = self.inner.read().unwrap().syms.get(s) {
+            om::add(om::Counter::InternHits, 1);
+            return id;
+        }
+        let mut w = self.inner.write().unwrap();
+        if let Some(&id) = w.syms.get(s) {
+            // raced another interning thread — it won
+            om::add(om::Counter::InternHits, 1);
+            return id;
+        }
+        om::add(om::Counter::InternMisses, 1);
+        let a: Arc<str> = Arc::from(s);
+        let id = w.pool.len() as u32;
+        w.pool.push(a.clone());
+        w.syms.insert(a, id);
+        id
+    }
+
+    /// Symbol of `s` if it was ever interned — never inserts (the
+    /// read-only probe for marker tags like `rollup`).
+    pub fn lookup(&self, s: &str) -> Option<u32> {
+        self.inner.read().unwrap().syms.get(s).copied()
+    }
+
+    /// The pooled string behind `sym` (shared, not copied).
+    pub fn get(&self, sym: u32) -> Arc<str> {
+        self.inner.read().unwrap().pool[sym as usize].clone()
+    }
+
+    /// Intern `s` and hand back the pooled `Arc<str>` — the shard
+    /// `meas` handle shares the interner's single allocation.
+    pub fn intern_arc(&self, s: &str) -> Arc<str> {
+        let id = self.intern(s);
+        self.get(id)
+    }
+
+    /// Tag-set id of `pairs`, which MUST be sorted by key *string*
+    /// (the `BTreeMap` order every producer in this module maintains) —
+    /// equal tag sets then share one id by construction.
+    pub fn tagset_of(&self, pairs: &[(u32, u32)]) -> u32 {
+        if let Some(&id) = self.inner.read().unwrap().tagsets.get(pairs) {
+            om::add(om::Counter::InternHits, 1);
+            return id;
+        }
+        let mut w = self.inner.write().unwrap();
+        if let Some(&id) = w.tagsets.get(pairs) {
+            om::add(om::Counter::InternHits, 1);
+            return id;
+        }
+        om::add(om::Counter::InternMisses, 1);
+        let a: Arc<[(u32, u32)]> = Arc::from(pairs);
+        let id = w.tagset_pool.len() as u32;
+        w.tagset_pool.push(a.clone());
+        w.tagsets.insert(a, id);
+        id
+    }
+
+    /// A read view for bulk resolution: one lock acquisition for a whole
+    /// shard render/materialization. Do not intern while a view is held
+    /// (single-thread read→write upgrade deadlocks an `RwLock`).
+    pub fn view(&self) -> View<'_> {
+        View(self.inner.read().unwrap())
+    }
+
+    pub fn stats(&self) -> InternerStats {
+        let g = self.inner.read().unwrap();
+        let string_bytes: usize = g.pool.iter().map(|s| s.len()).sum();
+        let tagset_entries: usize = g.tagset_pool.iter().map(|t| t.len()).sum();
+        let arc_overhead = std::mem::size_of::<usize>() * 4;
+        InternerStats {
+            strings: g.pool.len(),
+            tagsets: g.tagset_pool.len(),
+            approx_bytes: string_bytes
+                + g.pool.len() * (arc_overhead + std::mem::size_of::<Arc<str>>() * 2 + 4)
+                + tagset_entries * std::mem::size_of::<(u32, u32)>()
+                + g.tagset_pool.len() * (arc_overhead + std::mem::size_of::<Arc<[(u32, u32)]>>() * 2 + 4),
+        }
+    }
+}
+
+/// Read-locked resolver handle (see [`Interner::view`]).
+pub struct View<'a>(std::sync::RwLockReadGuard<'a, Inner>);
+
+impl View<'_> {
+    pub fn string(&self, sym: u32) -> &str {
+        &self.0.pool[sym as usize]
+    }
+    pub fn pairs(&self, tagset: u32) -> &[(u32, u32)] {
+        &self.0.tagset_pool[tagset as usize]
+    }
+}
+
+/// Structure-of-arrays shard body. Row `i` is
+/// `(ts[i], tagset[i], field_syms/vals[start(i)..field_ends[i]])`;
+/// rows are kept time-sorted exactly like the old `Vec<Point>` body,
+/// and within a row the field plane is sorted by field-name string.
+#[derive(Debug, Clone, Default)]
+pub struct Columns {
+    pub ts: Vec<i64>,
+    pub tagset: Vec<u32>,
+    /// End offset of row `i`'s slice of the field plane (`len == rows`;
+    /// row `i` starts where row `i-1` ends).
+    field_ends: Vec<u32>,
+    pub field_syms: Vec<u32>,
+    pub field_vals: Vec<f64>,
+}
+
+impl Columns {
+    pub fn len(&self) -> usize {
+        self.ts.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.ts.is_empty()
+    }
+
+    fn start(&self, i: usize) -> usize {
+        if i == 0 {
+            0
+        } else {
+            self.field_ends[i - 1] as usize
+        }
+    }
+
+    /// Row `i`'s `(field symbols, field values)` slices (name-sorted).
+    pub fn row_fields(&self, i: usize) -> (&[u32], &[f64]) {
+        let a = self.start(i);
+        let b = self.field_ends[i] as usize;
+        (&self.field_syms[a..b], &self.field_vals[a..b])
+    }
+
+    /// Append a row (the streaming-upload fast path).
+    pub fn push_row(&mut self, ts: i64, tagset: u32, syms: &[u32], vals: &[f64]) {
+        debug_assert_eq!(syms.len(), vals.len());
+        self.ts.push(ts);
+        self.tagset.push(tagset);
+        self.field_syms.extend_from_slice(syms);
+        self.field_vals.extend_from_slice(vals);
+        self.field_ends.push(self.field_syms.len() as u32);
+    }
+
+    /// Insert a row at `idx`, splicing the field plane (the out-of-order
+    /// late-import path; `idx == len` degenerates to a push).
+    pub fn insert_row(&mut self, idx: usize, ts: i64, tagset: u32, syms: &[u32], vals: &[f64]) {
+        if idx == self.len() {
+            self.push_row(ts, tagset, syms, vals);
+            return;
+        }
+        debug_assert_eq!(syms.len(), vals.len());
+        let at = self.start(idx);
+        self.ts.insert(idx, ts);
+        self.tagset.insert(idx, tagset);
+        self.field_syms.splice(at..at, syms.iter().copied());
+        self.field_vals.splice(at..at, vals.iter().copied());
+        let n = syms.len() as u32;
+        self.field_ends.insert(idx, at as u32 + n);
+        for e in &mut self.field_ends[idx + 1..] {
+            *e += n;
+        }
+    }
+
+    /// Bulk-append another column set (rows must belong after ours).
+    pub fn append_all(&mut self, other: &Columns) {
+        let base = self.field_syms.len() as u32;
+        self.ts.extend_from_slice(&other.ts);
+        self.tagset.extend_from_slice(&other.tagset);
+        self.field_syms.extend_from_slice(&other.field_syms);
+        self.field_vals.extend_from_slice(&other.field_vals);
+        self.field_ends.extend(other.field_ends.iter().map(|&e| e + base));
+    }
+
+    /// True when the rows are time-sorted (groups built from an in-order
+    /// upload usually are — the wholesale-append fast path).
+    pub fn is_time_sorted(&self) -> bool {
+        self.ts.windows(2).all(|w| w[0] <= w[1])
+    }
+
+    /// Render row `i` as one line-protocol line, byte-identical to
+    /// [`Point::to_line`] of the materialized row: same escaping, same
+    /// (string-sorted) tag and field order, same float formatting.
+    pub fn render_row(&self, i: usize, measurement: &str, view: &View<'_>, out: &mut String) {
+        lp::escape_into(measurement, out);
+        for &(k, v) in view.pairs(self.tagset[i]) {
+            out.push(',');
+            lp::escape_into(view.string(k), out);
+            out.push('=');
+            lp::escape_into(view.string(v), out);
+        }
+        out.push(' ');
+        let (syms, vals) = self.row_fields(i);
+        for (j, (s, v)) in syms.iter().zip(vals).enumerate() {
+            if j > 0 {
+                out.push(',');
+            }
+            lp::escape_into(view.string(*s), out);
+            out.push('=');
+            codec::fmt_f64(*v, out);
+        }
+        out.push(' ');
+        codec::fmt_i64(self.ts[i], out);
+    }
+
+    /// Materialize every row as an owned [`Point`] (the public-API
+    /// boundary; shards cache the result until mutated).
+    pub fn to_points(&self, measurement: &str, it: &Interner) -> Vec<Point> {
+        let view = it.view();
+        (0..self.len())
+            .map(|i| {
+                let mut tags = BTreeMap::new();
+                for &(k, v) in view.pairs(self.tagset[i]) {
+                    tags.insert(view.string(k).to_string(), view.string(v).to_string());
+                }
+                let (syms, vals) = self.row_fields(i);
+                let mut fields = BTreeMap::new();
+                for (s, v) in syms.iter().zip(vals) {
+                    fields.insert(view.string(*s).to_string(), *v);
+                }
+                Point {
+                    measurement: measurement.to_string(),
+                    tags,
+                    fields,
+                    ts: self.ts[i],
+                }
+            })
+            .collect()
+    }
+
+    /// Row-convert owned points (compaction summaries, point inserts).
+    pub fn from_points(pts: &[Point], it: &Interner) -> Columns {
+        let mut c = Columns::default();
+        for p in pts {
+            let (tagset, syms, vals) = intern_point(it, p);
+            c.push_row(p.ts, tagset, &syms, &vals);
+        }
+        c
+    }
+}
+
+/// Intern one owned point's tag set and fields. `BTreeMap` iteration is
+/// key-sorted, which is exactly the pair order [`Interner::tagset_of`]
+/// and the field plane require.
+pub fn intern_point(it: &Interner, p: &Point) -> (u32, Vec<u32>, Vec<f64>) {
+    let mut pairs = Vec::with_capacity(p.tags.len());
+    for (k, v) in &p.tags {
+        pairs.push((it.intern(k), it.intern(v)));
+    }
+    let tagset = it.tagset_of(&pairs);
+    let mut syms = Vec::with_capacity(p.fields.len());
+    let mut vals = Vec::with_capacity(p.fields.len());
+    for (k, v) in &p.fields {
+        syms.push(it.intern(k));
+        vals.push(*v);
+    }
+    (tagset, syms, vals)
+}
+
+/// One parsed-and-interned parse chunk.
+pub(crate) struct Chunk {
+    /// Rows grouped by `(measurement sym, shard key)`, each group in
+    /// input order. Group order within a chunk is sym-ordered and NOT
+    /// deterministic across runs — the merge re-keys by measurement
+    /// string before touching the store.
+    pub groups: Vec<((u32, i64), Columns)>,
+    /// Distinct `(measurement sym, tagset id)` combos seen — the
+    /// per-repo detection scopes are resolved from these.
+    pub seen: Vec<(u32, u32)>,
+}
+
+/// Parse a chunk of line-protocol lines straight into interned columnar
+/// groups — the serial worker body of the batched columnar ingest. Same
+/// grammar, same error strings, same first-error-in-input-order
+/// semantics as [`lp::parse_line`]; one reused scratch [`lp::RawLine`]
+/// instead of a fresh `Point` per line.
+pub(crate) fn parse_chunk(lines: &[&str], it: &Interner, span_ns: i64) -> Result<Chunk, String> {
+    let mut groups: BTreeMap<(u32, i64), Columns> = BTreeMap::new();
+    let mut seen: BTreeSet<(u32, u32)> = BTreeSet::new();
+    let mut raw = lp::RawLine::default();
+    let mut pairs: Vec<(u32, u32)> = Vec::new();
+    let mut syms: Vec<u32> = Vec::new();
+    let mut vals: Vec<f64> = Vec::new();
+    for line in lines {
+        lp::parse_line_into(line, &mut raw)?;
+        let msym = it.intern(&raw.measurement);
+        pairs.clear();
+        for (k, v) in &raw.tags {
+            pairs.push((it.intern(k), it.intern(v)));
+        }
+        let tagset = it.tagset_of(&pairs);
+        syms.clear();
+        vals.clear();
+        for (k, v) in &raw.fields {
+            syms.push(it.intern(k));
+            vals.push(*v);
+        }
+        seen.insert((msym, tagset));
+        let key = raw.ts.div_euclid(span_ns);
+        groups
+            .entry((msym, key))
+            .or_default()
+            .push_row(raw.ts, tagset, &syms, &vals);
+    }
+    Ok(Chunk {
+        groups: groups.into_iter().collect(),
+        seen: seen.into_iter().collect(),
+    })
+}
+
+/// Parse lines into one [`Columns`] in input order (shard-file loads —
+/// a shard file is a single measurement's rows, already grouped).
+pub(crate) fn parse_lines_to_cols(lines: &[&str], it: &Interner) -> Result<Columns, String> {
+    let mut c = Columns::default();
+    let mut raw = lp::RawLine::default();
+    let mut pairs: Vec<(u32, u32)> = Vec::new();
+    let mut syms: Vec<u32> = Vec::new();
+    let mut vals: Vec<f64> = Vec::new();
+    for line in lines {
+        lp::parse_line_into(line, &mut raw)?;
+        pairs.clear();
+        for (k, v) in &raw.tags {
+            pairs.push((it.intern(k), it.intern(v)));
+        }
+        let tagset = it.tagset_of(&pairs);
+        syms.clear();
+        vals.clear();
+        for (k, v) in &raw.fields {
+            syms.push(it.intern(k));
+            vals.push(*v);
+        }
+        c.push_row(raw.ts, tagset, &syms, &vals);
+    }
+    Ok(c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interner_dedups_and_roundtrips() {
+        let it = Interner::default();
+        let a = it.intern("node");
+        let b = it.intern("icx36");
+        assert_ne!(a, b);
+        assert_eq!(it.intern("node"), a, "re-interning is a hit");
+        assert_eq!(&*it.get(a), "node");
+        assert_eq!(it.lookup("node"), Some(a));
+        assert_eq!(it.lookup("never-seen"), None);
+        let ts1 = it.tagset_of(&[(a, b)]);
+        let ts2 = it.tagset_of(&[(a, b)]);
+        assert_eq!(ts1, ts2, "equal tag sets share one id");
+        assert_ne!(it.tagset_of(&[]), ts1);
+        let stats = it.stats();
+        assert_eq!(stats.strings, 2);
+        assert_eq!(stats.tagsets, 2);
+        assert!(stats.approx_bytes > 0);
+    }
+
+    #[test]
+    fn columns_insert_matches_push_order() {
+        let it = Interner::default();
+        let t = it.tagset_of(&[]);
+        let f = it.intern("v");
+        let mut a = Columns::default();
+        for ts in [1i64, 3, 5] {
+            a.push_row(ts, t, &[f], &[ts as f64]);
+        }
+        // out-of-order insert lands between its neighbours
+        let idx = a.ts.partition_point(|&q| q <= 2);
+        a.insert_row(idx, 2, t, &[f], &[2.0]);
+        a.insert_row(a.len(), 9, t, &[f], &[9.0]);
+        assert_eq!(a.ts, vec![1, 2, 3, 5, 9]);
+        assert!(a.is_time_sorted());
+        for i in 0..a.len() {
+            let (syms, vals) = a.row_fields(i);
+            assert_eq!(syms, &[f]);
+            assert_eq!(vals, &[a.ts[i] as f64]);
+        }
+    }
+
+    #[test]
+    fn render_row_matches_point_to_line() {
+        let it = Interner::default();
+        let pts = vec![
+            Point::new("mea,su re=ment", 7)
+                .tag("tag,key with=all", "va,l ue=x")
+                .tag("plain", "v")
+                .field("fie,ld key=f", -2.5)
+                .field("g", 1e-7),
+            Point::new("m\\", -1_500_000_000).tag("k\\\\", "v\\").field("f\\", 3.0),
+            Point::new("m", 9).field("v", 0.1).field("w", 5e-324),
+        ];
+        let cols = Columns::from_points(&pts, &it);
+        let view = it.view();
+        for (i, p) in pts.iter().enumerate() {
+            let mut line = String::new();
+            cols.render_row(i, &p.measurement, &view, &mut line);
+            assert_eq!(line, p.to_line(), "row {i}");
+        }
+    }
+
+    #[test]
+    fn to_points_roundtrips_through_from_points() {
+        let it = Interner::default();
+        let pts = vec![
+            Point::new("m", 1).tag("s", "a").field("v", 1.5),
+            Point::new("m", 2).tag("s", "b").field("v", 2.5).field("w", 0.25),
+        ];
+        let cols = Columns::from_points(&pts, &it);
+        assert_eq!(cols.to_points("m", &it), pts);
+    }
+
+    #[test]
+    fn parse_chunk_groups_by_shard_key_and_records_scopes() {
+        let it = Interner::default();
+        let lines = ["m,repo=r1 v=1 5", "m,repo=r1 v=2 15", "n v=3 5"];
+        let chunk = parse_chunk(&lines, &it, 10).unwrap();
+        assert_eq!(chunk.groups.len(), 3, "two m-shards + one n-shard");
+        let total: usize = chunk.groups.iter().map(|(_, c)| c.len()).sum();
+        assert_eq!(total, 3);
+        assert_eq!(chunk.seen.len(), 2, "(m, repo=r1) and (n, {{}})");
+    }
+}

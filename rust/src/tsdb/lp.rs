@@ -27,13 +27,14 @@
 //! extreme-value fixtures run against this implementation through the
 //! unchanged `Point::parse_line` entry point.
 
+use super::codec;
 use super::Point;
 use crate::par;
 use std::borrow::Cow;
 
 /// Below this many lines a batch parse stays serial — spawning workers
 /// costs more than the parse.
-const PAR_MIN_LINES: usize = 512;
+pub(crate) const PAR_MIN_LINES: usize = 512;
 
 /// Remove line-protocol escapes. Borrowed when there is nothing to do;
 /// a lone trailing backslash is dropped (as the old parser did).
@@ -79,10 +80,67 @@ fn split_unescaped(s: &str, sep: u8) -> Vec<&str> {
     parts
 }
 
-/// Parse one line-protocol line
-/// (`measurement,tag=v,... field=v,... ts`) into an owned [`Point`].
-/// The workhorse behind [`Point::parse_line`].
-pub fn parse_line(line: &str) -> Result<Point, String> {
+/// Escape line-protocol specials into `out` — byte-identical to the
+/// chained `str::replace` escaping the original `Point::to_line` used,
+/// without its four intermediate `String`s per token.
+pub(crate) fn escape_into(s: &str, out: &mut String) {
+    for c in s.chars() {
+        if matches!(c, '\\' | ',' | ' ' | '=') {
+            out.push('\\');
+        }
+        out.push(c);
+    }
+}
+
+/// One parsed line in raw (pre-`Point`) form: unescaped tokens borrowed
+/// from the input wherever possible, tag and field pairs **key-sorted
+/// with duplicate keys last-wins** (the `BTreeMap` insert semantics the
+/// old parser had implicitly). The vectors are scratch: reuse one
+/// `RawLine` across a whole batch and the steady-state parse allocates
+/// nothing per line.
+pub(crate) struct RawLine<'t> {
+    pub measurement: Cow<'t, str>,
+    pub tags: Vec<(Cow<'t, str>, Cow<'t, str>)>,
+    pub fields: Vec<(Cow<'t, str>, f64)>,
+    pub ts: i64,
+}
+
+impl Default for RawLine<'_> {
+    fn default() -> Self {
+        RawLine {
+            measurement: Cow::Borrowed(""),
+            tags: Vec::new(),
+            fields: Vec::new(),
+            ts: 0,
+        }
+    }
+}
+
+/// Key-sort `v` (stable) and keep only the last entry of each equal-key
+/// run — exactly what inserting the pairs into a `BTreeMap` in input
+/// order produces. The strictly-sorted common case is a single scan.
+fn sort_dedup_pairs<'t, T>(v: &mut Vec<(Cow<'t, str>, T)>) {
+    if v.len() < 2 || v.windows(2).all(|w| w[0].0 < w[1].0) {
+        return;
+    }
+    v.sort_by(|a, b| a.0.cmp(&b.0));
+    let mut i = 0;
+    while i + 1 < v.len() {
+        if v[i].0 == v[i + 1].0 {
+            v.remove(i); // stable sort kept input order: drop the earlier
+        } else {
+            i += 1;
+        }
+    }
+}
+
+/// Parse one line-protocol line into a reusable [`RawLine`]. The single
+/// grammar implementation: [`parse_line`] (owned `Point`s) and the
+/// columnar ingest in [`super::col`] are both built on it, so accepted
+/// inputs and error strings cannot diverge between the two paths.
+pub(crate) fn parse_line_into<'t>(line: &'t str, out: &mut RawLine<'t>) -> Result<(), String> {
+    out.tags.clear();
+    out.fields.clear();
     // split into 3 sections on the first two unescaped spaces
     let bytes = line.as_bytes();
     let mut sections: [&str; 3] = ["", "", ""];
@@ -109,13 +167,13 @@ pub fn parse_line(line: &str) -> Result<Point, String> {
 
     // measurement + tags: split on unescaped commas
     let head = split_unescaped(sections[0], b',');
-    let mut p = Point::new(&unescape(head[0]), 0);
+    out.measurement = unescape(head[0]);
     for t in &head[1..] {
         let kv = split_unescaped(t, b'=');
         if kv.len() != 2 {
             return Err(format!("bad tag `{t}`"));
         }
-        p.tags.insert(unescape(kv[0]).into_owned(), unescape(kv[1]).into_owned());
+        out.tags.push((unescape(kv[0]), unescape(kv[1])));
     }
     for f in split_unescaped(sections[1], b',') {
         let kv = split_unescaped(f, b'=');
@@ -123,16 +181,33 @@ pub fn parse_line(line: &str) -> Result<Point, String> {
             return Err(format!("bad field `{f}`"));
         }
         // field values are parsed raw (floats never carry escapes) —
-        // old-parser semantics, kept bit-for-bit
-        let v: f64 = kv[1].parse().map_err(|_| format!("bad field value `{}`", kv[1]))?;
-        p.fields.insert(unescape(kv[0]).into_owned(), v);
+        // old-parser semantics, kept bit-for-bit by the codec contract
+        let v: f64 =
+            codec::parse_f64(kv[1]).map_err(|_| format!("bad field value `{}`", kv[1]))?;
+        out.fields.push((unescape(kv[0]), v));
     }
-    p.ts = sections[2]
-        .trim()
-        .parse()
+    out.ts = codec::parse_i64(sections[2].trim())
         .map_err(|_| format!("bad timestamp `{}`", sections[2]))?;
-    if p.fields.is_empty() {
+    if out.fields.is_empty() {
         return Err("point has no fields".into());
+    }
+    sort_dedup_pairs(&mut out.tags);
+    sort_dedup_pairs(&mut out.fields);
+    Ok(())
+}
+
+/// Parse one line-protocol line
+/// (`measurement,tag=v,... field=v,... ts`) into an owned [`Point`].
+/// The workhorse behind [`Point::parse_line`].
+pub fn parse_line(line: &str) -> Result<Point, String> {
+    let mut raw = RawLine::default();
+    parse_line_into(line, &mut raw)?;
+    let mut p = Point::new(&raw.measurement, raw.ts);
+    for (k, v) in raw.tags.drain(..) {
+        p.tags.insert(k.into_owned(), v.into_owned());
+    }
+    for (k, v) in raw.fields.drain(..) {
+        p.fields.insert(k.into_owned(), v);
     }
     Ok(p)
 }
@@ -201,5 +276,28 @@ mod tests {
         let text = "m v=1 1\nm v=x 2\nnot_a_point\n";
         let err = parse_lines(text).unwrap_err();
         assert_eq!(err, "bad field value `x`");
+    }
+
+    #[test]
+    fn duplicate_keys_last_wins_like_btreemap() {
+        let p = parse_line("m,t=a,t=b,s=x v=1,v=2,w=3 5").unwrap();
+        assert_eq!(p.tags["t"], "b");
+        assert_eq!(p.tags["s"], "x");
+        assert_eq!(p.fields["v"], 2.0);
+        assert_eq!(p.fields["w"], 3.0);
+    }
+
+    #[test]
+    fn escape_into_matches_chained_replace() {
+        for s in ["plain", "a,b c=d\\e", "tail\\", " ", "=,\\ ", ""] {
+            let mut out = String::new();
+            escape_into(s, &mut out);
+            let legacy = s
+                .replace('\\', "\\\\")
+                .replace(',', "\\,")
+                .replace(' ', "\\ ")
+                .replace('=', "\\=");
+            assert_eq!(out, legacy, "token {s:?}");
+        }
     }
 }

@@ -110,9 +110,28 @@
 //! writes the legacy single-file format back out (stable dump order —
 //! CI uses it to assert byte-identical reloads).
 
+//! # Memory layout (the "raw speed, round 2" rewrite)
+//!
+//! Since the interned-columnar work a shard body is **not** a
+//! `Vec<Point>`: it is a [`col::Columns`] structure-of-arrays (ts
+//! column, interned tag-set id column, flat field plane) resolved
+//! against the database's single [`col::Interner`]. Ingest parses
+//! line protocol straight into interned columns
+//! ([`Db::ingest_lines`]), saves/exports render columns straight back
+//! to lp text through the byte-identical [`codec`] fast paths, and the
+//! owned [`Point`] form is materialized lazily — once per shard, cached
+//! until the shard is mutated — only where the public API hands out
+//! `&Point`. The wire format, every error string, and the manifest
+//! layout are unchanged: the lp codec is the compatibility boundary,
+//! and the whole test envelope (round-trips, byte-identical
+//! export/reload, replay equivalence) runs against it unchanged.
+
+pub mod codec;
+pub mod col;
 pub mod lp;
 pub mod query;
 
+pub use col::{Columns, Interner, InternerStats};
 pub use query::{Aggregate, GroupedSeries, Query, TAIL_SCAN_SLACK};
 
 use crate::obs::metrics as om;
@@ -122,7 +141,7 @@ use std::collections::{BTreeMap, BTreeSet};
 use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::OnceLock;
+use std::sync::{Arc, OnceLock};
 
 /// Process-global monotone stamp for shard-body touch order (the LRU key
 /// behind [`Db::evict_cold_bodies`]). Global rather than per-`Db` because
@@ -172,25 +191,32 @@ impl Point {
     }
 
     /// Influx line protocol: `measurement,tag=v,... field=v,... ts`.
-    /// Spaces/commas in tag values are escaped with `\`.
+    /// Spaces/commas in tag values are escaped with `\`. Rendering goes
+    /// through [`lp::escape_into`] and the [`codec`] float/int fast
+    /// paths — byte-identical to the original `replace`+`format!`
+    /// implementation, without its per-token allocations.
     pub fn to_line(&self) -> String {
-        let esc = |s: &str| s.replace('\\', "\\\\").replace(',', "\\,").replace(' ', "\\ ").replace('=', "\\=");
-        let mut line = esc(&self.measurement);
+        let mut line = String::with_capacity(64);
+        lp::escape_into(&self.measurement, &mut line);
         for (k, v) in &self.tags {
             line.push(',');
-            line.push_str(&esc(k));
+            lp::escape_into(k, &mut line);
             line.push('=');
-            line.push_str(&esc(v));
+            lp::escape_into(v, &mut line);
         }
         line.push(' ');
-        let fields: Vec<String> = self
-            .fields
-            .iter()
-            .map(|(k, v)| format!("{}={v}", esc(k)))
-            .collect();
-        line.push_str(&fields.join(","));
+        let mut first = true;
+        for (k, v) in &self.fields {
+            if !first {
+                line.push(',');
+            }
+            first = false;
+            lp::escape_into(k, &mut line);
+            line.push('=');
+            codec::fmt_f64(*v, &mut line);
+        }
         line.push(' ');
-        line.push_str(&self.ts.to_string());
+        codec::fmt_i64(self.ts, &mut line);
         line
     }
 
@@ -228,14 +254,29 @@ pub struct Shard {
     max_ts: i64,
     /// Backing file in the manifest layout; `None` for in-memory shards.
     file: Option<PathBuf>,
-    /// Lazily materialized body. Pre-set for in-memory shards, parsed
-    /// from `file` on first access for manifest-loaded ones.
-    body: OnceLock<Vec<Point>>,
+    /// Measurement name, shared with the database interner's pool —
+    /// column materialization and rendering never re-allocate it.
+    meas: Arc<str>,
+    /// The owning database's interner (shards resolve their columns
+    /// through it; clones share it, keeping symbols self-consistent).
+    intern: Arc<Interner>,
+    /// Lazily materialized columnar body. Pre-set for in-memory shards,
+    /// parsed from `file` on first access for manifest-loaded ones.
+    body: OnceLock<ShardBody>,
     /// Touch stamp of the last body access (LRU recency; see [`TOUCH`]).
     touch: AtomicU64,
     /// Body was evicted at least once — the next materialization counts
     /// as a re-materialization in the self-metrics.
     evicted: AtomicBool,
+}
+
+/// A materialized shard body: the columnar rows plus the lazily built
+/// (and cached) owned-`Point` view the `&[Point]` APIs hand out. The
+/// cache is kept coherent by point inserts and dropped by bulk merges.
+#[derive(Debug, Clone)]
+struct ShardBody {
+    cols: Columns,
+    rows: OnceLock<Vec<Point>>,
 }
 
 impl Clone for Shard {
@@ -248,6 +289,8 @@ impl Clone for Shard {
             min_ts: self.min_ts,
             max_ts: self.max_ts,
             file: self.file.clone(),
+            meas: self.meas.clone(),
+            intern: self.intern.clone(),
             body: self.body.clone(),
             touch: AtomicU64::new(self.touch.load(Ordering::Relaxed)),
             evicted: AtomicBool::new(self.evicted.load(Ordering::Relaxed)),
@@ -256,10 +299,14 @@ impl Clone for Shard {
 }
 
 impl Shard {
-    /// A fresh, mutable, unbacked shard (the insert path).
-    fn in_memory(key: i64) -> Shard {
+    /// A fresh, mutable, unbacked shard (the insert path). The row cache
+    /// starts present (and empty): per-point inserts keep it coherent,
+    /// so pure point-insert workloads never pay a materialization.
+    fn in_memory(key: i64, meas: Arc<str>, intern: Arc<Interner>) -> Shard {
         let body = OnceLock::new();
-        let _ = body.set(Vec::new());
+        let rows = OnceLock::new();
+        let _ = rows.set(Vec::new());
+        let _ = body.set(ShardBody { cols: Columns::default(), rows });
         Shard {
             key,
             compacted: false,
@@ -268,6 +315,8 @@ impl Shard {
             min_ts: 0,
             max_ts: 0,
             file: None,
+            meas,
+            intern,
             body,
             touch: AtomicU64::new(TOUCH.fetch_add(1, Ordering::Relaxed)),
             evicted: AtomicBool::new(false),
@@ -332,26 +381,41 @@ impl Shard {
     /// an `Err` naming the shard key and file path instead of a panic
     /// deep inside a query. `tsdb info` and [`Db::verify_bodies`] use
     /// this to flag unreadable shards without tearing the process down.
+    /// The owned-`Point` view is built from the columns on first demand
+    /// and cached until the shard is mutated.
     pub fn try_points(&self) -> Result<&[Point], String> {
+        let body = self.try_body()?;
+        Ok(body
+            .rows
+            .get_or_init(|| {
+                om::add(om::Counter::ColMaterializations, 1);
+                body.cols.to_points(&self.meas, &self.intern)
+            })
+            .as_slice())
+    }
+
+    /// Columnar body access, loading from the backing file on first
+    /// touch (columns only — no `Point` materialization).
+    fn try_body(&self) -> Result<&ShardBody, String> {
         if self.body.get().is_none() {
             let t = om::Timer::start();
             let path = self
                 .file
                 .as_deref()
                 .expect("unloaded shard always has a backing file");
-            let pts = read_shard_file(path, self.key, self.n)?;
+            let cols = read_shard_cols(path, self.key, self.n, &self.intern)?;
             om::add(om::Counter::ShardLoads, 1);
-            om::add(om::Counter::ShardLoadPoints, pts.len() as u64);
+            om::add(om::Counter::ShardLoadPoints, cols.len() as u64);
             if self.evicted.load(Ordering::Relaxed) {
                 om::add(om::Counter::ShardRemats, 1);
             }
             t.stop(om::TimedOp::ShardLoad);
             // a concurrent materializer may have won the race — its body
             // is identical (the file is the source of truth); ours drops
-            let _ = self.body.set(pts);
+            let _ = self.body.set(ShardBody { cols, rows: OnceLock::new() });
         }
         self.touch.store(TOUCH.fetch_add(1, Ordering::Relaxed), Ordering::Relaxed);
-        Ok(self.body.get().expect("body just materialized").as_slice())
+        Ok(self.body.get().expect("body just materialized"))
     }
 
     /// Validate that this shard's body is readable without retaining it:
@@ -365,23 +429,30 @@ impl Shard {
             .file
             .as_deref()
             .expect("unloaded shard always has a backing file");
-        read_shard_file(path, self.key, self.n).map(|_| ())
+        read_shard_cols(path, self.key, self.n, &self.intern).map(|_| ())
     }
 
-    /// Mutable body access (materializes first).
-    fn body_mut(&mut self) -> &mut Vec<Point> {
-        self.points();
+    /// Mutable body access (materializes the columns first).
+    fn body_mut(&mut self) -> &mut ShardBody {
+        if let Err(e) = self.try_body() {
+            panic!("{e}");
+        }
         self.body.get_mut().expect("body just materialized")
     }
 
     /// Replace the body wholesale (compaction), refreshing the meta index
-    /// and marking the shard for rewrite.
+    /// and marking the shard for rewrite. The given points pre-fill the
+    /// row cache — they are exactly what materializing the fresh columns
+    /// would rebuild.
     fn set_points(&mut self, pts: Vec<Point>) {
         self.n = pts.len();
         self.min_ts = pts.first().map(|p| p.ts).unwrap_or(0);
         self.max_ts = pts.last().map(|p| p.ts).unwrap_or(0);
+        let cols = Columns::from_points(&pts, &self.intern);
+        let rows = OnceLock::new();
+        let _ = rows.set(pts);
         let _ = self.body.take();
-        let _ = self.body.set(pts);
+        let _ = self.body.set(ShardBody { cols, rows });
         self.dirty = true;
     }
 }
@@ -421,13 +492,22 @@ fn insert_point_into(s: &mut Shard, p: Point) {
         s.compacted = false;
     }
     {
+        let (tagset, syms, vals) = col::intern_point(&s.intern, &p);
         // a late insert into a cold shard materializes just that shard
-        let v = s.body_mut();
-        if v.last().map(|l| l.ts <= ts).unwrap_or(true) {
-            v.push(p);
+        let body = s.body_mut();
+        let c = &mut body.cols;
+        let idx = if c.ts.last().map(|&l| l <= ts).unwrap_or(true) {
+            c.len()
         } else {
-            let idx = v.partition_point(|q| q.ts <= ts);
-            v.insert(idx, p);
+            c.ts.partition_point(|&q| q <= ts)
+        };
+        c.insert_row(idx, ts, tagset, &syms, &vals);
+        // a live row cache stays coherent instead of being tossed — the
+        // campaign upload path interleaves inserts with detector reads,
+        // and re-materializing the whole shard per insert would be a
+        // step backwards from the old Vec<Point> body
+        if let Some(rows) = body.rows.get_mut() {
+            rows.insert(idx, p);
         }
     }
     s.n += 1;
@@ -443,8 +523,71 @@ fn insert_point_into(s: &mut Shard, p: Point) {
     timer.stop(om::TimedOp::Insert);
 }
 
-/// Parse one shard file, enforcing the manifest's point count.
-fn read_shard_file(path: &Path, key: i64, expect: usize) -> Result<Vec<Point>, String> {
+/// Merge one in-order columnar group into a shard — the batch-ingest
+/// equivalent of replaying [`insert_point_into`] per row: identical
+/// sorted-insert placement, meta-index refresh, dirty + compaction-
+/// reopen bookkeeping. A time-sorted group landing at/after the shard's
+/// max timestamp (the streaming-upload common case) appends wholesale.
+fn merge_columns_into(s: &mut Shard, cols: &Columns, rollup_sym: Option<u32>) {
+    if cols.is_empty() {
+        return;
+    }
+    if s.compacted {
+        // any raw (non-rollup) row reopens the shard for re-compaction
+        let has_raw = match rollup_sym {
+            None => true,
+            Some(rsym) => {
+                let view = s.intern.view();
+                (0..cols.len())
+                    .any(|i| !view.pairs(cols.tagset[i]).iter().any(|&(k, _)| k == rsym))
+            }
+        };
+        if has_raw {
+            s.compacted = false;
+        }
+    }
+    let lo = cols.ts.iter().copied().min().expect("non-empty");
+    let hi = cols.ts.iter().copied().max().expect("non-empty");
+    {
+        let body = s.body_mut();
+        if cols.is_time_sorted() && body.cols.ts.last().map(|&l| l <= cols.ts[0]).unwrap_or(true) {
+            body.cols.append_all(cols);
+        } else {
+            for i in 0..cols.len() {
+                let ts = cols.ts[i];
+                let (syms, vals) = cols.row_fields(i);
+                let c = &mut body.cols;
+                let idx = if c.ts.last().map(|&l| l <= ts).unwrap_or(true) {
+                    c.len()
+                } else {
+                    c.ts.partition_point(|&q| q <= ts)
+                };
+                c.insert_row(idx, ts, cols.tagset[i], syms, vals);
+            }
+        }
+        // bulk merges have no owned Points to mirror — drop the cache
+        body.rows = OnceLock::new();
+    }
+    if s.n == 0 {
+        s.min_ts = lo;
+        s.max_ts = hi;
+    } else {
+        s.min_ts = s.min_ts.min(lo);
+        s.max_ts = s.max_ts.max(hi);
+    }
+    s.n += cols.len();
+    s.dirty = true;
+}
+
+/// Parse one shard file straight into columns, enforcing the manifest's
+/// point count. Large bodies parse in chunks across the [`crate::par`]
+/// pool (order-preserving appends), like the old `lp::parse_lines` path.
+fn read_shard_cols(
+    path: &Path,
+    key: i64,
+    expect: usize,
+    intern: &Interner,
+) -> Result<Columns, String> {
     let text = std::fs::read_to_string(path).map_err(|e| {
         format!(
             "tsdb: cannot materialize shard key={key} from {}: {e} \
@@ -452,17 +595,34 @@ fn read_shard_file(path: &Path, key: i64, expect: usize) -> Result<Vec<Point>, S
             path.display()
         )
     })?;
-    let pts = lp::parse_lines(&text)
-        .map_err(|e| format!("tsdb: corrupt shard key={key} at {}: {e}", path.display()))?;
-    if pts.len() != expect {
+    let corrupt = |e: String| format!("tsdb: corrupt shard key={key} at {}: {e}", path.display());
+    let lines: Vec<&str> = text
+        .lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .collect();
+    let cols = if lines.len() < lp::PAR_MIN_LINES || par::threads() <= 1 || par::in_worker() {
+        col::parse_lines_to_cols(&lines, intern).map_err(corrupt)?
+    } else {
+        let chunk = (lines.len() / (par::threads() * 4)).max(lp::PAR_MIN_LINES / 4);
+        let slices: Vec<&[&str]> = lines.chunks(chunk).collect();
+        let parts = par::try_map(slices, |c| col::parse_lines_to_cols(c, intern))
+            .map_err(corrupt)?;
+        let mut all = Columns::default();
+        for p in &parts {
+            all.append_all(p);
+        }
+        all
+    };
+    if cols.len() != expect {
         return Err(format!(
             "tsdb: shard key={key} at {} holds {} points but the manifest says {expect} — \
              the store was modified behind the manifest",
             path.display(),
-            pts.len()
+            cols.len()
         ));
     }
-    Ok(pts)
+    Ok(cols)
 }
 
 /// Outcome of one [`Db::compact`] pass.
@@ -499,6 +659,10 @@ pub struct Db {
     /// Cap on concurrently materialized shard bodies (LRU eviction of
     /// clean, cold bodies; `None` = unbounded). See [`Db::set_body_cap`].
     body_cap: Option<usize>,
+    /// Store-wide symbol table: every shard of this `Db` resolves its
+    /// column symbols here. Shared (`Arc`) so shards stay independently
+    /// materializable and parse workers can intern concurrently.
+    intern: Arc<Interner>,
 }
 
 impl Default for Db {
@@ -521,11 +685,18 @@ impl Db {
             shard_span_ns: span_ns.max(1),
             home: None,
             body_cap: None,
+            intern: Arc::new(Interner::default()),
         }
     }
 
     pub fn shard_span(&self) -> i64 {
         self.shard_span_ns
+    }
+
+    /// Size of the store-wide symbol table (strings, tag sets, approx
+    /// retained bytes) — surfaced by `bench_regress`'s MEMORY_JSON.
+    pub fn interner_stats(&self) -> InternerStats {
+        self.intern.stats()
     }
 
     /// The shard list of `measurement`, in partition (= time) order.
@@ -544,11 +715,13 @@ impl Db {
     /// raw points and existing rollups weight-correctly.
     pub fn insert(&mut self, p: Point) {
         let key = p.ts.div_euclid(self.shard_span_ns);
+        let meas = self.intern.intern_arc(&p.measurement);
+        let intern = self.intern.clone();
         let shards = self.measurements.entry(p.measurement.clone()).or_default();
         let si = match shards.binary_search_by(|s| s.key.cmp(&key)) {
             Ok(i) => i,
             Err(i) => {
-                shards.insert(i, Shard::in_memory(key));
+                shards.insert(i, Shard::in_memory(key, meas, intern));
                 i
             }
         };
@@ -583,9 +756,11 @@ impl Db {
         }
         // pass A (serial): create every missing destination shard
         for (m, key) in groups.keys() {
+            let meas = self.intern.intern_arc(m);
+            let intern = self.intern.clone();
             let shards = self.measurements.entry(m.clone()).or_default();
             if let Err(i) = shards.binary_search_by(|s| s.key.cmp(key)) {
-                shards.insert(i, Shard::in_memory(*key));
+                shards.insert(i, Shard::in_memory(*key, meas, intern));
             }
         }
         // pass B: one job per target shard — each worker gets exclusive
@@ -610,20 +785,118 @@ impl Db {
         }
     }
 
-    /// Ingest a batch of line-protocol text (the pipeline's upload step):
-    /// zero-copy batched parse ([`lp::parse_lines`] — parallel for large
-    /// batches) followed by [`Db::insert_batch`]. Atomic: a malformed
-    /// line fails the whole batch and nothing is ingested. The `LpParse`
-    /// timer covers the parse only; inserts carry their own `Insert`
-    /// timers as before.
+    /// Ingest a batch of line-protocol text (the pipeline's upload step).
+    /// Lines parse straight into interned columns ([`col::parse_chunk`] —
+    /// parallel for large batches) and merge into their destination
+    /// shards columnar, without ever materializing an owned [`Point`].
+    /// Atomic: a malformed line fails the whole batch and nothing is
+    /// ingested (symbols interned before the error are harmless — they
+    /// change no stored rows). The resulting store is byte-identical to
+    /// parsing every line into a `Point` and replaying [`Db::insert`] in
+    /// input order, for any thread count. The `LpParse` timer covers the
+    /// parse, one batch-wide `Insert` timer covers the merge.
     pub fn ingest_lines(&mut self, text: &str) -> Result<usize, String> {
+        self.ingest_cols(text).map(|(n, _)| n)
+    }
+
+    /// [`Db::ingest_lines`] plus the distinct `(measurement, scope-tag
+    /// value)` combinations the batch touched, resolved to owned strings
+    /// in sorted order — what a scoped post-ingest detection pass needs,
+    /// computed from the interned tag sets instead of a second walk over
+    /// owned `Point`s.
+    pub fn ingest_lines_scoped(
+        &mut self,
+        text: &str,
+        scope_tag: &str,
+    ) -> Result<(usize, BTreeSet<(String, Option<String>)>), String> {
+        let (n, seen) = self.ingest_cols(text)?;
+        // resolve before taking the view: interning under a held view
+        // would deadlock (read -> write upgrade)
+        let tag_sym = self.intern.lookup(scope_tag);
+        let view = self.intern.view();
+        let mut scopes = BTreeSet::new();
+        for (msym, tagset) in seen {
+            let repo = tag_sym.and_then(|t| {
+                view.pairs(tagset)
+                    .iter()
+                    .find(|&&(k, _)| k == t)
+                    .map(|&(_, v)| view.string(v).to_string())
+            });
+            scopes.insert((view.string(msym).to_string(), repo));
+        }
+        Ok((n, scopes))
+    }
+
+    /// Shared columnar-ingest body: parse (serial or chunked across the
+    /// [`crate::par`] pool), re-key the chunk groups by measurement
+    /// *string* (symbol ids are assigned in parse order and therefore
+    /// nondeterministic across runs/thread counts — shard creation order
+    /// must not depend on them), create missing shards serially, then fan
+    /// disjoint per-shard merges across the pool.
+    fn ingest_cols(&mut self, text: &str) -> Result<(usize, Vec<(u32, u32)>), String> {
         let timer = om::Timer::start();
-        let pts = lp::parse_lines(text)?;
-        let n = pts.len();
+        let lines: Vec<&str> = text
+            .lines()
+            .map(str::trim)
+            .filter(|l| !l.is_empty() && !l.starts_with('#'))
+            .collect();
+        let span = self.shard_span_ns;
+        let it = &self.intern;
+        let chunks: Vec<col::Chunk> =
+            if lines.len() < lp::PAR_MIN_LINES || par::threads() <= 1 || par::in_worker() {
+                vec![col::parse_chunk(&lines, it, span)?]
+            } else {
+                let chunk = (lines.len() / (par::threads() * 4)).max(lp::PAR_MIN_LINES / 4);
+                let slices: Vec<&[&str]> = lines.chunks(chunk).collect();
+                par::try_map(slices, |c| col::parse_chunk(c, it, span))?
+            };
+        let n = lines.len();
         om::add(om::Counter::LpLines, n as u64);
         timer.stop(om::TimedOp::LpParse);
-        self.insert_batch(pts);
-        Ok(n)
+
+        let mut merged: BTreeMap<(Arc<str>, i64), Vec<Columns>> = BTreeMap::new();
+        let mut seen: BTreeSet<(u32, u32)> = BTreeSet::new();
+        for ch in chunks {
+            for ((msym, key), cols) in ch.groups {
+                merged.entry((self.intern.get(msym), key)).or_default().push(cols);
+            }
+            seen.extend(ch.seen);
+        }
+
+        let timer = om::Timer::start();
+        // pass A (serial): create every missing destination shard, in
+        // (measurement, key) order — the same creation/touch order the
+        // old per-point insert replay produced
+        for (m, key) in merged.keys() {
+            let meas = self.intern.intern_arc(m);
+            let intern = self.intern.clone();
+            let shards = self.measurements.entry(m.to_string()).or_default();
+            if let Err(i) = shards.binary_search_by(|s| s.key.cmp(key)) {
+                shards.insert(i, Shard::in_memory(*key, meas, intern));
+            }
+        }
+        let rollup_sym = self.intern.lookup(ROLLUP_TAG);
+        // pass B: one job per target shard — disjoint `&mut` access, so
+        // the fan-out is data-race-free by construction
+        let mut jobs: Vec<(&mut Shard, Vec<Columns>)> = Vec::new();
+        for shards in self.measurements.values_mut() {
+            for s in shards.iter_mut() {
+                if let Some(groups) = merged.remove(&(s.meas.clone(), s.key)) {
+                    jobs.push((s, groups));
+                }
+            }
+        }
+        par::map(jobs, |(s, groups)| {
+            for cols in &groups {
+                merge_columns_into(s, cols, rollup_sym);
+            }
+        });
+        om::add(om::Counter::InsertPoints, n as u64);
+        timer.stop(om::TimedOp::Insert);
+        if self.body_cap.is_some() {
+            self.maybe_evict();
+        }
+        Ok((n, seen.into_iter().collect()))
     }
 
     /// Cap the number of concurrently materialized shard bodies. The
@@ -1025,7 +1298,7 @@ impl Db {
                     (path.join(name), &shards[i])
                 })
                 .collect();
-            par::try_map(jobs, |(p, s)| write_shard_file(&p, s.points()))?;
+            par::try_map(jobs, |(p, s)| write_shard_file(&p, s))?;
         }
         let tmp = path.join(format!("{MANIFEST_FILE}.tmp"));
         std::fs::write(&tmp, self.manifest_json(&names).to_string_pretty())?;
@@ -1144,10 +1417,25 @@ impl Db {
         db.ingest_lines(&text)
             .map_err(|e| invalid_data(e))?;
         // compaction state survives the legacy format via the marker tag
-        for shards in db.measurements.values_mut() {
-            for s in shards.iter_mut() {
-                if s.n > 0 && s.points().iter().all(|p| p.tags.contains_key(ROLLUP_TAG)) {
-                    s.compacted = true;
+        // (probed on the tag-set ids — no Point materialization; lookup,
+        // not intern, so a rollup-free store leaves the symbol unmade)
+        if let Some(rsym) = db.intern.lookup(ROLLUP_TAG) {
+            let intern = db.intern.clone();
+            for shards in db.measurements.values_mut() {
+                for s in shards.iter_mut() {
+                    if s.n == 0 {
+                        continue;
+                    }
+                    let all_rollup = {
+                        let body = s.try_body().map_err(invalid_data)?;
+                        let view = intern.view();
+                        (0..body.cols.len()).all(|i| {
+                            view.pairs(body.cols.tagset[i]).iter().any(|&(k, _)| k == rsym)
+                        })
+                    };
+                    if all_rollup {
+                        s.compacted = true;
+                    }
                 }
             }
         }
@@ -1201,6 +1489,8 @@ impl Db {
                         min_ts,
                         max_ts,
                         file: Some(path),
+                        meas: db.intern.intern_arc(m),
+                        intern: db.intern.clone(),
                         body: OnceLock::new(),
                         touch: AtomicU64::new(0),
                         evicted: AtomicBool::new(false),
@@ -1243,10 +1533,18 @@ impl Db {
     /// dump CI diffs to assert byte-identical reloads.
     pub fn export_lp(&self, path: &Path) -> std::io::Result<()> {
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        let mut line = String::with_capacity(128);
         for shards in self.measurements.values() {
             for s in shards {
-                for p in s.points() {
-                    writeln!(f, "{}", p.to_line())?;
+                // materialize the body before taking the view (loading
+                // interns; rendering only resolves)
+                let body = s.try_body().map_err(invalid_data)?;
+                let view = self.intern.view();
+                for i in 0..body.cols.len() {
+                    line.clear();
+                    body.cols.render_row(i, &s.meas, &view, &mut line);
+                    line.push('\n');
+                    f.write_all(line.as_bytes())?;
                 }
             }
         }
@@ -1301,15 +1599,26 @@ fn alloc_shard_name(measurement: &str, key: i64, used: &BTreeSet<String>) -> Str
     }
 }
 
-/// Atomic shard write: `.tmp` sibling + rename.
-fn write_shard_file(path: &Path, points: &[Point]) -> std::io::Result<()> {
+/// Atomic shard write: `.tmp` sibling + rename. Rows render straight
+/// from the columnar body ([`Columns::render_row`] — byte-identical to
+/// `Point::to_line`) through one reused line buffer; no `Point` is ever
+/// materialized on the save path.
+fn write_shard_file(path: &Path, s: &Shard) -> std::io::Result<()> {
+    let body = s.try_body().map_err(invalid_data)?;
     let mut os = path.as_os_str().to_os_string();
     os.push(".tmp");
     let tmp = PathBuf::from(os);
     {
         let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
-        for p in points {
-            writeln!(f, "{}", p.to_line())?;
+        // the body is materialized above; rendering only resolves
+        // symbols, so holding the view across the write is safe
+        let view = s.intern.view();
+        let mut line = String::with_capacity(128);
+        for i in 0..body.cols.len() {
+            line.clear();
+            body.cols.render_row(i, &s.meas, &view, &mut line);
+            line.push('\n');
+            f.write_all(line.as_bytes())?;
         }
         f.into_inner().map_err(|e| e.into_error())?;
     }

@@ -1,0 +1,105 @@
+//! Allocation budget of the interned columnar ingest path (ISSUE 10).
+//!
+//! The per-point path (`Point::parse_line` + `Db::insert` per line)
+//! builds every point as two `BTreeMap`s of owned `String`s; the
+//! columnar path (`Db::ingest_lines`) interns measurement/tag/field
+//! strings once per distinct value and appends rows to
+//! structure-of-arrays columns. This test pins the economy as an
+//! **in-run A/B ratio** — portable across allocators and libstd
+//! versions, unlike absolute counts — plus loose absolute pins that
+//! keep both paths in their expected regimes.
+//!
+//! Own test binary on purpose: integration test binaries run their
+//! `#[test]`s in parallel threads sharing one global allocator, so any
+//! sibling test's allocations would race the counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// `series` series reporting at `triggers` trigger timestamps — the
+/// upload shape `coordinator::collect_pipeline` produces.
+fn lp_batch(series: usize, triggers: usize) -> String {
+    let mut out = String::new();
+    for t in 0..triggers {
+        for s in 0..series {
+            out.push_str(&format!(
+                "lbm,case=uniformgridcpu,collision_op=op{},node=node{:02} mlups={}.5 {}\n",
+                s % 4,
+                s / 4,
+                400 + s,
+                t as i64 * 1_000_000_000
+            ));
+        }
+    }
+    out
+}
+
+#[test]
+fn columnar_ingest_allocates_at_most_a_quarter_of_the_per_point_path() {
+    use cbench::tsdb::{Db, Point};
+
+    // single-threaded: worker threads would interleave their own
+    // allocations into the measured windows
+    cbench::par::set_threads(1);
+    let text = lp_batch(100, 100);
+    let n = text.lines().count();
+    assert_eq!(n, 10_000);
+
+    // warm up lazy statics and allocator internals outside the windows
+    {
+        let mut db = Db::new();
+        assert_eq!(db.ingest_lines(&text).unwrap(), n);
+    }
+
+    let legacy_allocs = {
+        let mut db = Db::new();
+        let a0 = ALLOCS.load(Ordering::Relaxed);
+        for line in text.lines() {
+            db.insert(Point::parse_line(line).unwrap());
+        }
+        let d = ALLOCS.load(Ordering::Relaxed) - a0;
+        assert_eq!(db.len(), n);
+        d
+    };
+    let columnar_allocs = {
+        let mut db = Db::new();
+        let a0 = ALLOCS.load(Ordering::Relaxed);
+        assert_eq!(db.ingest_lines(&text).unwrap(), n);
+        ALLOCS.load(Ordering::Relaxed) - a0
+    };
+    cbench::par::set_threads(0);
+
+    let l = legacy_allocs as f64 / n as f64;
+    let c = columnar_allocs as f64 / n as f64;
+    assert!(
+        c <= 0.25 * l,
+        "columnar ingest allocates {c:.2}/point vs {l:.2}/point per-point — \
+         ratio {:.3} above the 0.25 budget",
+        c / l
+    );
+    // regime pins: the baseline really is the owned-Point shape, and the
+    // columnar path really is amortized-append + interner hits
+    assert!(l >= 8.0, "per-point baseline unexpectedly cheap: {l:.2} allocs/point");
+    assert!(c <= 6.0, "columnar path left its regime: {c:.2} allocs/point");
+}

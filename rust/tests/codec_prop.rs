@@ -1,0 +1,328 @@
+//! Property suites for the PR-10 byte-compatibility contracts:
+//!
+//! 1. `tsdb::codec` formats/parses **byte-identically** to the stdlib
+//!    (`format!("{}")` / `str::parse`) — fuzzed over random bit
+//!    patterns, structured values, and adversarial decimal strings.
+//! 2. The columnar ingest path produces the same on-disk shards and
+//!    the same `export_lp` bytes as the legacy per-point path.
+//! 3. Overlapped campaign collects are byte-identical to serial for
+//!    any worker-thread count (the ISSUE 10 acceptance sweep, 1..8).
+//!
+//! Own integration binary: the equivalence tests set the global
+//! `par::set_threads` count, which must not race the library's unit
+//! tests (integration binaries are separate processes). Within this
+//! binary the thread-touching tests serialize on a local lock.
+
+use cbench::tsdb::codec::{fmt_f64, fmt_i64, parse_f64, parse_i64};
+use cbench::util::rng::Rng;
+use std::sync::Mutex;
+
+/// Guards the global worker-thread count against sibling tests in this
+/// binary (cargo runs `#[test]`s on parallel threads).
+static THREADS_LOCK: Mutex<()> = Mutex::new(());
+
+fn fmt(v: f64) -> String {
+    let mut s = String::new();
+    fmt_f64(v, &mut s);
+    s
+}
+
+// --- layer 1: codec vs stdlib -------------------------------------
+
+#[test]
+fn fmt_f64_matches_display_on_random_bit_patterns() {
+    // raw bit patterns cover every regime at once: normals across the
+    // full exponent range, subnormals, both zeros, infinities, and NaN
+    // payloads (Display renders every NaN as "NaN")
+    let mut rng = Rng::new(0xC0DE_C0DE);
+    for i in 0..200_000u64 {
+        let v = f64::from_bits(rng.next_u64());
+        assert_eq!(fmt(v), format!("{v}"), "iteration {i}, bits {:#x}", v.to_bits());
+    }
+}
+
+#[test]
+fn fmt_f64_matches_display_on_structured_values() {
+    let mut rng = Rng::new(0xF0F0_0001);
+    for _ in 0..100_000 {
+        // integral doubles around and across the 2^53 fast-path bound,
+        // scaled by powers of ten into fractional territory
+        let mant = rng.next_u64() % (1u64 << 54); // deliberately crosses 2^53
+        let exp = (rng.below(13) as i32) - 6; // 10^-6 .. 10^6
+        let mut v = mant as f64 * 10f64.powi(exp);
+        if rng.below(2) == 0 {
+            v = -v;
+        }
+        assert_eq!(fmt(v), format!("{v}"), "mant {mant} exp {exp}");
+    }
+    for v in [0.0, -0.0, f64::MIN_POSITIVE, f64::EPSILON, f64::MAX, f64::MIN] {
+        assert_eq!(fmt(v), format!("{v}"));
+    }
+}
+
+#[test]
+fn fmt_i64_matches_display_on_random_values() {
+    let mut rng = Rng::new(0x1111_2222);
+    for _ in 0..100_000 {
+        let v = rng.next_u64() as i64;
+        let mut s = String::new();
+        fmt_i64(v, &mut s);
+        assert_eq!(s, v.to_string());
+    }
+}
+
+#[test]
+fn parse_f64_round_trips_every_rendered_double() {
+    // format -> parse must return the exact same bits (shortest-digits
+    // rendering is defined to round-trip); this exercises the parser on
+    // precisely the strings the formatter writes into shard files
+    let mut rng = Rng::new(0x0A0B_0C0D);
+    for _ in 0..100_000 {
+        let v = f64::from_bits(rng.next_u64());
+        if v.is_nan() {
+            continue; // NaN never compares equal; rejected at ingest anyway
+        }
+        let s = fmt(v);
+        let back = parse_f64(&s).unwrap_or_else(|e| panic!("{s:?}: {e}"));
+        assert_eq!(back.to_bits(), v.to_bits(), "via {s:?}");
+    }
+}
+
+/// A decimal-ish string built to straddle every fast-path boundary:
+/// digit counts around the 19-digit delegation cutoff, exponents around
+/// the Clinger |exp10| <= 22 window, and occasional malformed bytes.
+fn fuzz_decimal(rng: &mut Rng) -> String {
+    let mut s = String::new();
+    match rng.below(8) {
+        0 => s.push('-'),
+        1 => s.push('+'), // always delegates; acceptance must still match
+        _ => {}
+    }
+    let int_digits = rng.below(22);
+    for _ in 0..int_digits {
+        s.push((b'0' + rng.below(10) as u8) as char);
+    }
+    if rng.below(2) == 0 {
+        s.push('.');
+        for _ in 0..rng.below(22) {
+            s.push((b'0' + rng.below(10) as u8) as char);
+        }
+    }
+    if rng.below(4) == 0 {
+        s.push(if rng.below(2) == 0 { 'e' } else { 'E' });
+        if rng.below(2) == 0 {
+            s.push('-');
+        }
+        for _ in 0..1 + rng.below(3) {
+            s.push((b'0' + rng.below(10) as u8) as char);
+        }
+    }
+    if rng.below(16) == 0 {
+        // stray byte somewhere: both parsers must reject
+        let pos = rng.below(s.len() + 1);
+        s.insert(pos, ['x', ' ', '.', '-', '_'][rng.below(5)]);
+    }
+    s
+}
+
+#[test]
+fn parse_f64_matches_stdlib_on_fuzzed_decimal_strings() {
+    let mut rng = Rng::new(0xDEAD_10CC);
+    for i in 0..200_000 {
+        let s = fuzz_decimal(&mut rng);
+        match (parse_f64(&s), s.parse::<f64>()) {
+            (Ok(a), Ok(b)) => {
+                assert_eq!(a.to_bits(), b.to_bits(), "iteration {i}, input {s:?}")
+            }
+            (Err(_), Err(_)) => {}
+            (a, b) => panic!("iteration {i}, input {s:?}: fast {a:?} vs stdlib {b:?}"),
+        }
+    }
+}
+
+#[test]
+fn parse_i64_matches_stdlib_on_fuzzed_digit_strings() {
+    let mut rng = Rng::new(0x5151_5151);
+    for i in 0..200_000 {
+        let mut s = String::new();
+        match rng.below(6) {
+            0 => s.push('-'),
+            1 => s.push('+'),
+            _ => {}
+        }
+        // 0..22 digits: crosses both the 18-digit fast path and i64::MAX
+        for _ in 0..rng.below(23) {
+            s.push((b'0' + rng.below(10) as u8) as char);
+        }
+        if rng.below(16) == 0 {
+            let pos = rng.below(s.len() + 1);
+            s.insert(pos, ['x', ' ', '.', '-'][rng.below(4)]);
+        }
+        match (parse_i64(&s), s.parse::<i64>()) {
+            (Ok(a), Ok(b)) => assert_eq!(a, b, "iteration {i}, input {s:?}"),
+            (Err(_), Err(_)) => {}
+            (a, b) => panic!("iteration {i}, input {s:?}: fast {a:?} vs stdlib {b:?}"),
+        }
+    }
+}
+
+// --- layer 2: columnar vs per-point persistence --------------------
+
+/// Line-protocol batch whose field values sweep the codec regimes:
+/// integral, fractional, negative, extreme-magnitude, and "-0".
+fn mixed_lp(lines: usize) -> String {
+    let awkward = [
+        0.1,
+        -0.30000000000000004,
+        1e15,
+        5e-324,
+        123456.0,
+        -0.0,
+        2.5,
+        1.7976931348623157e308,
+        9_007_199_254_740_991.0, // 2^53 - 1: last integral fast-path value
+        9_007_199_254_740_994.0, // 2^53 + 2: Display fallback territory
+        -42.0,
+        0.000244140625, // exact binary fraction
+    ];
+    let mut out = String::new();
+    for i in 0..lines {
+        let v = awkward[i % awkward.len()];
+        out.push_str(&format!(
+            "lbm,case=c{},node=node{:02},repo=r{} mlups={v} {}\n",
+            i % 3,
+            i % 7,
+            i % 2,
+            i as i64 * 7_000_000_000 // ~7 s apart: many shards at a 64 s span
+        ));
+    }
+    out
+}
+
+/// Recursively collect `(relative path, bytes)` sorted by path.
+fn dir_contents(root: &std::path::Path) -> Vec<(String, Vec<u8>)> {
+    fn walk(dir: &std::path::Path, root: &std::path::Path, out: &mut Vec<(String, Vec<u8>)>) {
+        for e in std::fs::read_dir(dir).unwrap() {
+            let p = e.unwrap().path();
+            if p.is_dir() {
+                walk(&p, root, out);
+            } else {
+                let rel = p.strip_prefix(root).unwrap().to_string_lossy().into_owned();
+                out.push((rel, std::fs::read(&p).unwrap()));
+            }
+        }
+    }
+    let mut out = Vec::new();
+    walk(root, root, &mut out);
+    out.sort();
+    out
+}
+
+#[test]
+fn columnar_ingest_is_byte_identical_to_per_point_on_disk_and_export() {
+    use cbench::tsdb::{Db, Point};
+    let _g = THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+
+    let span = 64_000_000_000; // 64 s shards over a ~6 h batch
+    let text = mixed_lp(3000); // > PAR_MIN_LINES: the chunked path fires
+    let tmp = std::env::temp_dir().join(format!("cbench_codec_prop_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&tmp);
+    std::fs::create_dir_all(&tmp).unwrap();
+
+    let export = |db: &Db, name: &str| -> String {
+        let p = tmp.join(name);
+        db.export_lp(&p).unwrap();
+        std::fs::read_to_string(&p).unwrap()
+    };
+
+    // reference: the legacy owned-Point path, one insert per line
+    let mut legacy = Db::with_shard_span(span);
+    for line in text.lines() {
+        legacy.insert(Point::parse_line(line).unwrap());
+    }
+    let legacy_export = export(&legacy, "legacy.lp");
+    let legacy_dir = tmp.join("legacy");
+    legacy.save(&legacy_dir).unwrap();
+
+    // columnar path at 1 and 3 worker threads: same bytes either way
+    for threads in [1usize, 3] {
+        cbench::par::set_threads(threads);
+        let mut col = Db::with_shard_span(span);
+        assert_eq!(col.ingest_lines(&text).unwrap(), 3000);
+        assert_eq!(
+            export(&col, &format!("col{threads}.lp")),
+            legacy_export,
+            "export_lp diverged at {threads} ingest threads"
+        );
+        let col_dir = tmp.join(format!("col{threads}"));
+        col.save(&col_dir).unwrap();
+        assert_eq!(
+            dir_contents(&col_dir),
+            dir_contents(&legacy_dir),
+            "on-disk store diverged at {threads} ingest threads"
+        );
+        // and the store round-trips back to the same export
+        let back = Db::load_with_shard_span(&col_dir, span).unwrap();
+        assert_eq!(back.len(), legacy.len());
+        assert_eq!(export(&back, "back.lp"), legacy_export);
+    }
+
+    cbench::par::set_threads(0);
+    let _ = std::fs::remove_dir_all(&tmp);
+}
+
+// --- layer 3: overlapped vs serial campaign collects ----------------
+
+#[test]
+fn overlapped_collects_are_byte_identical_to_serial_for_threads_1_to_8() {
+    use cbench::coordinator::campaign::{default_projects, run_campaign, CampaignConfig};
+    use cbench::coordinator::CbSystem;
+    let _g = THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+
+    // 2 repos x 2 pushes with an injected regression: exercises
+    // submission, collection, detection, and alert opening
+    let run = |threads: usize| {
+        cbench::par::set_threads(threads);
+        let mut cb = CbSystem::new();
+        let mut projects = default_projects(2);
+        let out = run_campaign(
+            &mut cb,
+            &mut projects,
+            &CampaignConfig {
+                pushes: 2,
+                inject_at: 2,
+                penalty: 25.0,
+                seed: 1,
+                ..CampaignConfig::default()
+            },
+        )
+        .unwrap();
+        let lp = std::env::temp_dir().join(format!(
+            "cbench_codec_prop_campaign_{threads}_{}.lp",
+            std::process::id()
+        ));
+        cb.db.export_lp(&lp).unwrap();
+        let export = std::fs::read_to_string(&lp).unwrap();
+        let _ = std::fs::remove_file(&lp);
+        (
+            cb.scheduler.timeline(),
+            export,
+            cb.alerts.to_json().to_string_pretty(),
+            out.reports.iter().map(|r| r.pipeline_id).collect::<Vec<_>>(),
+            out.makespan,
+        )
+    };
+
+    // threads=1 is the serial collect path (overlap gates off); every
+    // other count takes the gather/background-parse/FIFO-commit path
+    let serial = run(1);
+    assert!(!serial.1.is_empty(), "campaign produced no points");
+    for threads in 2..=8 {
+        let overlapped = run(threads);
+        assert_eq!(
+            overlapped, serial,
+            "overlapped campaign diverged from serial at {threads} threads"
+        );
+    }
+    cbench::par::set_threads(0);
+}
